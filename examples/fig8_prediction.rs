@@ -1,0 +1,79 @@
+//! Fig. 8 reproduction: PMSE boxplots under k-fold cross-validation
+//! (k = 10) for DP, mixed-precision, and DST variants at the three
+//! correlation levels.
+//!
+//! The paper's claim: mixed-precision prediction accuracy matches DP even
+//! at DP(10%)-SP(90%), while DST only performs once 90% of tiles are DP.
+//!
+//! ```bash
+//! cargo run --release --example fig8_prediction -- [replicates] [n] [nb]
+//! # n must be a multiple of k*nb = 10*nb
+//! ```
+
+use mpcholesky::bench::{BoxStats, Table};
+use mpcholesky::prelude::*;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let reps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let nb: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let n: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(10 * nb);
+    let k = 10; // paper's k-fold setting
+    let p = n / nb;
+
+    let levels = [("weak", 0.03), ("medium", 0.10), ("strong", 0.30)];
+    let variants: Vec<(String, Variant)> = vec![
+        ("DP(100%)".into(), Variant::FullDp),
+        mk(p, 10.0, false),
+        mk(p, 40.0, false),
+        mk(p, 90.0, false),
+        mk(p, 70.0, true),
+        mk(p, 90.0, true),
+    ];
+
+    for (lname, range) in levels {
+        let theta0 = MaternParams::new(1.0, range, 0.5);
+        println!("\n=== Fig 8 ({lname}, theta2 = {range}) — PMSE over {reps} replicates x {k}-fold ===");
+        let mut table = Table::new(&["variant", "PMSE boxplot (min [q1|med|q3] max)", "mean"]);
+        for (vlabel, variant) in &variants {
+            let mut pmses = Vec::new();
+            let mut failures = 0usize;
+            for r in 0..reps {
+                let field = SyntheticField::generate(&FieldConfig {
+                    n,
+                    theta: theta0,
+                    seed: 9000 + r as u64,
+                    gen_nb: nb,
+                    ..Default::default()
+                })?;
+                let cfg = MleConfig { nb, variant: *variant, ..Default::default() };
+                // predict at the *true* parameters (isolates the
+                // factorization variant's effect, as Fig. 8 does by using
+                // each method's own fit; truth keeps the harness fast)
+                match kfold_pmse(&field.locations, &field.values, theta0, k, &cfg, 77 + r as u64)
+                {
+                    Ok(rep) => pmses.extend(rep.fold_pmse),
+                    Err(_) => failures += 1,
+                }
+            }
+            if pmses.is_empty() {
+                table.row(&[vlabel.clone(), format!("all failed (non-PD) x{failures}"), "-".into()]);
+            } else {
+                let mean = pmses.iter().sum::<f64>() / pmses.len() as f64;
+                let mut row = BoxStats::from(&pmses).render();
+                if failures > 0 {
+                    row.push_str(&format!("  ({failures} replicate(s) non-PD)"));
+                }
+                table.row(&[vlabel.clone(), row, format!("{mean:.4}")]);
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+fn mk(p: usize, dp_pct: f64, dst: bool) -> (String, Variant) {
+    let t = Variant::thick_for_dp_fraction(p, dp_pct);
+    let v = if dst { Variant::Dst { diag_thick: t } } else { Variant::MixedPrecision { diag_thick: t } };
+    (v.label(p), v)
+}

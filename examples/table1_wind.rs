@@ -1,0 +1,108 @@
+//! Table I reproduction: per-region Matern parameter estimation and
+//! k-fold PMSE on the (simulated) Middle-East wind-speed dataset.
+//!
+//! The paper's WRF-generated wind data is proprietary-scale (~1M sites);
+//! per DESIGN.md SS3 we substitute four synthetic subregions whose
+//! generating parameters mirror Table I's fits.  The claims under test:
+//! every mixed-precision variant estimates parameters at (or very near)
+//! the DP values, while DST only succeeds at DP(90%)-Zero(10%).
+//!
+//! ```bash
+//! cargo run --release --example table1_wind -- [n_per_region] [nb]
+//! ```
+
+use mpcholesky::bench::Table;
+use mpcholesky::datagen::{generate_wind_regions, wind_region_params, WindFieldConfig};
+use mpcholesky::prelude::*;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let nb: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10 * nb);
+    let p = n / nb;
+
+    println!("=== Table I (wind-like data, {n} sites/region, nb = {nb}) ===");
+    let regions = generate_wind_regions(&WindFieldConfig {
+        n_per_region: n,
+        gen_nb: nb,
+        ..Default::default()
+    })?;
+
+    let variants: Vec<(String, Variant)> = vec![
+        ("DP".into(), Variant::FullDp),
+        mk(p, 10.0, false),
+        mk(p, 40.0, false),
+        mk(p, 90.0, false),
+        mk(p, 70.0, true),
+        mk(p, 90.0, true),
+    ];
+
+    let mut table = Table::new(&[
+        "R", "variant", "theta1", "theta2", "theta3", "PMSE(k=10)", "iters",
+    ]);
+    for w in &regions {
+        let truth = wind_region_params(w.region);
+        println!(
+            "region {}: true theta = ({:.2}, {:.2}, {:.2})",
+            w.region, truth.variance, truth.range, truth.smoothness
+        );
+        for (vlabel, variant) in &variants {
+            let cfg = MleConfig {
+                nb,
+                variant: *variant,
+                start: Some([truth.variance * 0.5, truth.range * 0.5, 1.0]),
+                optimizer: OptimizerConfig { max_evals: 80, ftol: 1e-3, ..Default::default() },
+                upper: [50.0, 3.0, 3.0],
+                ..Default::default()
+            };
+            let fitted = MleProblem::new(&w.field.locations, &w.field.values, cfg.clone())
+                .and_then(|prob| prob.fit());
+            match fitted {
+                Ok(fit) => {
+                    let rep = kfold_pmse(
+                        &w.field.locations,
+                        &w.field.values,
+                        fit.theta,
+                        10,
+                        &cfg,
+                        555 + w.region as u64,
+                    );
+                    let pmse_s = rep
+                        .map(|r| format!("{:.4}", r.mean_pmse))
+                        .unwrap_or_else(|_| "non-PD".into());
+                    table.row(&[
+                        format!("R{}", w.region),
+                        vlabel.clone(),
+                        format!("{:.3}", fit.theta.variance),
+                        format!("{:.3}", fit.theta.range),
+                        format!("{:.3}", fit.theta.smoothness),
+                        pmse_s,
+                        format!("{}", fit.iterations),
+                    ]);
+                }
+                Err(_) => table.row(&[
+                    format!("R{}", w.region),
+                    vlabel.clone(),
+                    "non-PD".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn mk(p: usize, dp_pct: f64, dst: bool) -> (String, Variant) {
+    let t = Variant::thick_for_dp_fraction(p, dp_pct);
+    let v = if dst {
+        Variant::Dst { diag_thick: t }
+    } else {
+        Variant::MixedPrecision { diag_thick: t }
+    };
+    let tag = if dst { "DST " } else { "MP " };
+    (format!("{tag}{}", v.label(p)), v)
+}

@@ -1,0 +1,160 @@
+"""AOT lowering: JAX/Pallas kernels -> HLO *text* artifacts for the Rust
+PJRT runtime (`rust/src/runtime/`).
+
+Run once by `make artifacts`; Python never executes on the request path.
+
+Interchange is HLO text, NOT `lowered.compile().serialize()` — jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Every artifact is listed in `artifacts/manifest.txt` as
+    name <TAB> arg0_shape:dtype, arg1_shape:dtype, ... <TAB> out_shape:dtype
+which the Rust executable registry parses at startup instead of trusting
+hard-coded shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import gemm, matern, potrf, syrk, trsm  # noqa: E402
+
+# Build-time tile size for per-kernel artifacts.  The Rust native backend
+# supports any nb; the PJRT backend is fixed to this at build time (one
+# compiled executable per kernel), mirroring how ExaGeoStat fixes nb per run.
+NB = int(os.environ.get("MPCHOL_NB", "64"))
+
+# Fused-demo sizes (small: the demo certifies composition, not scale).
+DEMO_N = 256
+DEMO_NB = 64
+DEMO_THICK = 2
+DEMO_NU = 0.5
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt(s: jax.ShapeDtypeStruct) -> str:
+    return f"{'x'.join(map(str, s.shape))}:{jnp.dtype(s.dtype).name}"
+
+
+def artifact_table():
+    """name -> (fn, [arg specs], out spec).  One entry per HLO module."""
+    f64, f32 = jnp.float64, jnp.float32
+    t64 = _spec((NB, NB), f64)
+    t32 = _spec((NB, NB), f32)
+    tb = {}
+
+    def add(name, fn, args, out):
+        tb[name] = (fn, args, out)
+
+    # Tile BLAS, both precisions (paper's d*/s* codelets)
+    add("gemm_f64", lambda c, a, b: gemm(c, a, b), [t64, t64, t64], t64)
+    add("gemm_f32", lambda c, a, b: gemm(c, a, b), [t32, t32, t32], t32)
+    add("syrk_f64", lambda c, a: syrk(c, a), [t64, t64], t64)
+    add("syrk_f32", lambda c, a: syrk(c, a), [t32, t32], t32)
+    add("trsm_f64", lambda l, b: trsm(l, b), [t64, t64], t64)
+    add("trsm_f32", lambda l, b: trsm(l, b), [t32, t32], t32)
+    add("potrf_f64", potrf, [t64], t64)
+    add("potrf_f32", potrf, [t32], t32)
+    # Precision conversions (dlag2s / slag2d)
+    add("lag2s", lambda a: a.astype(f32), [t64], t32)
+    add("lag2d", lambda a: a.astype(f64), [t32], t64)
+    # bf16 third-precision extension (paper SSIX future work)
+    tb16 = _spec((NB, NB), jnp.bfloat16)
+    add("gemm_bf16", lambda c, a, b: gemm(c, a, b), [tb16, tb16, tb16], tb16)
+    # Matern covariance tile generation, one artifact per half-integer nu
+    c64 = _spec((NB, 2), f64)
+    th = _spec((3,), f64)
+    for nu, tag in ((0.5, "nu05"), (1.5, "nu15"), (2.5, "nu25")):
+        add(
+            f"matern_{tag}",
+            (lambda nu_: lambda x1, x2, t: matern(x1, x2, t, nu=nu_))(nu),
+            [c64, c64, th],
+            t64,
+        )
+    # Fused demos: the whole Algorithm 1 (and a full MLE iteration) as ONE
+    # HLO program — L1+L2 composition proof, also used by rust tests as a
+    # cross-check of the tiled runtime path.
+    a_demo = _spec((DEMO_N, DEMO_N), f64)
+    add(
+        "mp_cholesky_demo",
+        lambda a: model.mp_cholesky(a, nb=DEMO_NB, diag_thick=DEMO_THICK),
+        [a_demo],
+        a_demo,
+    )
+    locs = _spec((DEMO_N, 2), f64)
+    z = _spec((DEMO_N,), f64)
+    add(
+        "mp_loglik_demo",
+        lambda L, Z, T: model.mp_loglik(
+            L, Z, T, nu=DEMO_NU, nb=DEMO_NB, diag_thick=DEMO_THICK
+        ),
+        [locs, z, th],
+        _spec((), f64),
+    )
+    add("loglik_dense", model.loglik, [a_demo, z], _spec((), f64))
+    return tb
+
+
+def lower_one(name, fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="sentinel path; artifacts land in its directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (default: all)")
+    ns = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(ns.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    table = artifact_table()
+    names = ns.only.split(",") if ns.only else list(table)
+    manifest = []
+    for name in names:
+        fn, args, out = table[name]
+        text = lower_one(name, fn, args)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name}\t{','.join(_fmt(a) for a in args)}\t{_fmt(out)}"
+        )
+        print(f"  {name}: {len(text)} chars")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write(f"# nb={NB} demo_n={DEMO_N} demo_nb={DEMO_NB} "
+                f"demo_thick={DEMO_THICK} demo_nu={DEMO_NU}\n")
+        f.write("\n".join(manifest) + "\n")
+    # sentinel for the Makefile dependency
+    with open(os.path.join(outdir, "model.hlo.txt"), "w") as f:
+        f.write("\n".join(names) + "\n")
+    print(f"wrote {len(names)} artifacts + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

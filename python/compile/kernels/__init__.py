@@ -1,0 +1,20 @@
+"""Layer-1 Pallas tile kernels for the mixed-precision tile Cholesky.
+
+All kernels run under interpret=True (CPU-PJRT-loadable HLO); see each
+module's docstring for the TPU/MXU mapping and DESIGN.md SS2 for the
+hardware-adaptation rationale.
+"""
+
+from .gemm import gemm, gemm_bf16, gemm_f32, gemm_f64
+from .matern import HALF_INT_NUS, matern, matern_nu05, matern_nu15, matern_nu25
+from .potrf import potrf, potrf_f32, potrf_f64
+from .syrk import syrk, syrk_f32, syrk_f64
+from .trsm import trsm, trsm_f32, trsm_f64
+
+__all__ = [
+    "gemm", "gemm_f64", "gemm_f32", "gemm_bf16",
+    "syrk", "syrk_f64", "syrk_f32",
+    "trsm", "trsm_f64", "trsm_f32",
+    "potrf", "potrf_f64", "potrf_f32",
+    "matern", "matern_nu05", "matern_nu15", "matern_nu25", "HALF_INT_NUS",
+]

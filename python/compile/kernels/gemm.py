@@ -1,0 +1,98 @@
+"""Pallas tile GEMM: C <- C - A @ B^T.
+
+This is the paper's dominant kernel — the trailing-matrix update of the
+right-looking tile Cholesky (Algorithm 1 lines 23-29, `dgemm`/`sgemm`) is
+where the O(n^3) flops live.  The mixed-precision contribution is expressed
+here as a *dtype-parametric* kernel: the f64 instantiation is the paper's
+`dgemm`, the f32 instantiation its `sgemm`, and a bf16-input/f32-accumulate
+instantiation covers the paper's SIX.future-work third precision level on
+MXU-style hardware.
+
+TPU mapping (DESIGN.md SS2): the (bm, bn) output block lives in VMEM, the
+full-k panels of A and B are streamed per grid step by BlockSpec, and the
+inner `dot_general` is the MXU contraction with `preferred_element_type`
+pinning the accumulator precision — the Pallas analog of WMMA/tensor-core
+accumulate the paper's GPU runs got from cuBLAS.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the AOT artifact is
+loadable from Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Default VMEM block edge.  16 MiB VMEM / (3 tiles * 8 B) supports well
+# beyond 128; 64 keeps the interpret-mode test matrix cheap while exercising
+# a multi-block grid for every tile size >= 128.
+DEFAULT_BLOCK = 64
+
+
+def pick_block(dim: int, block: int) -> int:
+    """Largest divisor of `dim` that is <= `block` (BlockSpec grids must
+    tile the array exactly; tile sizes are caller-chosen so uneven shapes
+    are legal inputs)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, o_ref, *, acc_dtype):
+    """One (bm, bn) output block: o = c - a @ b^T with acc in acc_dtype."""
+    acc = jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    o_ref[...] = c_ref[...] - acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gemm(c, a, b, *, block: int = DEFAULT_BLOCK):
+    """C - A @ B^T over (nb, nb) tiles.
+
+    c: (m, n), a: (m, k), b: (n, k).  All three share a dtype; bf16 inputs
+    accumulate in f32, f32/f64 accumulate natively (matching what MKL's
+    sgemm/dgemm — the paper's codelets — do).
+    """
+    m, n = c.shape
+    k = a.shape[1]
+    bm, bn = pick_block(m, block), pick_block(n, block)
+    acc_dtype = jnp.float32 if c.dtype == jnp.bfloat16 else c.dtype
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),  # C block
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # A panel (full k)
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),  # B panel (full k)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def gemm_f64(c, a, b):
+    """Paper's `dgemm` codelet."""
+    return gemm(c, a, b)
+
+
+def gemm_f32(c, a, b):
+    """Paper's `sgemm` codelet."""
+    return gemm(c, a, b)
+
+
+def gemm_bf16(c, a, b):
+    """Third precision level (paper SSIX future work): bf16 in, f32 acc."""
+    return gemm(c, a, b)

@@ -1,0 +1,89 @@
+"""Pallas Matern covariance tile generation (paper Eq. 1 / SSIV-B).
+
+Builds one (bm, bn) tile of the covariance matrix Sigma(theta) from two
+coordinate blocks.  Matrix generation is ExaGeoStat's second hot spot (it
+re-runs at every MLE iteration with a fresh theta), and it is embarrassingly
+tile-parallel, so the grid maps directly onto output blocks with the two
+coordinate panels streamed into VMEM.
+
+Smoothness is a *static* kernel parameter restricted to the half-integer
+closed forms {0.5, 1.5, 2.5} — these lower to exp/mul only, which both the
+TPU VPU and the CPU backend execute natively.  The continuous-nu Matern
+(needed by the MLE optimizer, which searches over theta_3) lives in the
+Rust substrate (`matern/bessel.rs`), where the Temme-series Bessel K_nu is
+cheap scalar code; cutting HLO artifacts per-nu would otherwise require
+re-lowering inside the optimization loop, putting Python back on the
+request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import DEFAULT_BLOCK, pick_block
+
+jax.config.update("jax_enable_x64", True)
+
+HALF_INT_NUS = (0.5, 1.5, 2.5)
+
+
+def _matern_kernel(x1_ref, x2_ref, theta_ref, o_ref, *, nu):
+    x1 = x1_ref[...]  # (bm, 2)
+    x2 = x2_ref[...]  # (bn, 2)
+    var = theta_ref[0]
+    rng = theta_ref[1]
+    diff = x1[:, None, :] - x2[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    r = jnp.sqrt(r2)
+    d = r / rng
+    if nu == 0.5:
+        poly = jnp.ones_like(d)
+    elif nu == 1.5:
+        poly = 1.0 + d
+    elif nu == 2.5:
+        poly = 1.0 + d + d * d / 3.0
+    else:  # pragma: no cover
+        raise ValueError(f"static nu must be in {HALF_INT_NUS}, got {nu}")
+    cov = var * poly * jnp.exp(-d)
+    # exact-zero distance (tile on the diagonal) -> C(0) = variance
+    o_ref[...] = jnp.where(r2 == 0.0, var, cov)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "block"))
+def matern(x1, x2, theta, *, nu: float, block: int = DEFAULT_BLOCK):
+    """Covariance tile C(||x1_i - x2_j||; theta) for nu in {0.5, 1.5, 2.5}.
+
+    x1: (m, 2), x2: (n, 2), theta: (3,) = (variance, range, smoothness);
+    theta[2] is carried for calling-convention parity with the Rust side
+    but the smoothness actually applied is the static `nu`.
+    """
+    m, n = x1.shape[0], x2.shape[0]
+    bm, bn = pick_block(m, block), pick_block(n, block)
+    return pl.pallas_call(
+        functools.partial(_matern_kernel, nu=nu),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x1.dtype),
+        interpret=True,
+    )(x1, x2, theta)
+
+
+def matern_nu05(x1, x2, theta):
+    return matern(x1, x2, theta, nu=0.5)
+
+
+def matern_nu15(x1, x2, theta):
+    return matern(x1, x2, theta, nu=1.5)
+
+
+def matern_nu25(x1, x2, theta):
+    return matern(x1, x2, theta, nu=2.5)

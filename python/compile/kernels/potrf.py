@@ -1,0 +1,65 @@
+"""Pallas tile POTRF: lower Cholesky of one SPD tile (Algorithm 1 line 8).
+
+The diagonal-tile factorization is inherently sequential in its column
+dependence, so there is nothing for a Pallas *grid* to parallelize at
+nb <= 256 — the kernel is a single instance holding the tile in VMEM and
+running a vectorized left-looking column sweep (each column update is a
+rank-(j) masked mat-vec that the VPU/MXU executes densely).
+
+The paper always runs this tile in double precision (a single-precision
+diagonal can lose positive-definiteness and abort the MLE — SSVIII.D.1);
+the f32 instantiation exists for the DST/ablation paths and tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _potrf_kernel(a_ref, o_ref):
+    """Left-looking column Cholesky over the whole tile.
+
+    For column j (with already-factored columns 0..j-1 of L stored in x):
+        c    = a[:, j] - sum_{k<j} x[:, k] * x[j, k]
+        L[j:, j] = c[j:] / sqrt(c[j]),  L[:j, j] = 0
+    The masked row extraction keeps the update branch-free.
+    """
+    a = a_ref[...]
+    nb = a.shape[0]
+    cols = jnp.arange(nb)
+
+    def body(j, x):
+        aj = jax.lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0]  # (nb,)
+        xrow = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)[0]  # (nb,)
+        xrow = jnp.where(cols < j, xrow, 0).astype(x.dtype)
+        c = aj - x @ xrow
+        d = jnp.sqrt(jax.lax.dynamic_index_in_dim(c, j, keepdims=False))
+        col = jnp.where(cols >= j, c / d, 0).astype(x.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(x, col[:, None], j, axis=1)
+
+    o_ref[...] = jax.lax.fori_loop(0, nb, body, jnp.zeros_like(a))
+
+
+@jax.jit
+def potrf(a):
+    """Lower Cholesky factor of an SPD (nb, nb) tile; strict upper = 0."""
+    nb = a.shape[0]
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct((nb, nb), a.dtype),
+        interpret=True,
+    )(a)
+
+
+def potrf_f64(a):
+    """Paper's `dpotrf` codelet."""
+    return potrf(a)
+
+
+def potrf_f32(a):
+    """Single-precision instantiation (ablations / SP(100%) failure demo)."""
+    return potrf(a)

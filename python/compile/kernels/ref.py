@@ -1,0 +1,108 @@
+"""Pure-jnp correctness oracles for the Pallas tile kernels.
+
+Every Layer-1 kernel in this package has an oracle here with the *same
+calling convention*; `python/tests/` asserts allclose between the two over
+hypothesis-driven shape/dtype/seed sweeps.  The oracles are deliberately
+written with the most obvious jnp expression available (no Pallas, no
+manual blocking) so a disagreement always indicts the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def gemm_ref(c, a, b):
+    """C - A @ B^T, accumulation in the output dtype's precision."""
+    return c - a @ b.T
+
+
+def syrk_ref(c, a):
+    """C - A @ A^T (full tile; symmetric rank-k update of a diagonal tile)."""
+    return c - a @ a.T
+
+
+def trsm_ref(l, b):
+    """B @ L^{-T}: the right-looking panel solve A_ik <- A_ik * L_kk^{-T}.
+
+    Solving X L^T = B for X is equivalent to L X^T = B^T (forward
+    substitution on the transpose).
+    """
+    xt = jax.scipy.linalg.solve_triangular(l, b.T, lower=True)
+    return xt.T
+
+
+def potrf_ref(a):
+    """Lower Cholesky factor of an SPD tile."""
+    return jnp.linalg.cholesky(a)
+
+
+def lag2s_ref(a):
+    """dlag2s: demote an f64 tile to f32 (the paper stores the demoted copy
+    transposed in the upper triangle; the transpose is a storage detail
+    handled by the Rust tile layer, not the numeric kernel)."""
+    return a.astype(jnp.float32)
+
+
+def lag2d_ref(a):
+    """slag2d: promote an f32 tile back to f64."""
+    return a.astype(jnp.float64)
+
+
+def _matern_halfint(r, variance, rng, nu):
+    """Matern closed forms for half-integer smoothness (Eq. 1 of the paper).
+
+    nu = 0.5:  sigma^2 exp(-d)
+    nu = 1.5:  sigma^2 (1 + d) exp(-d)
+    nu = 2.5:  sigma^2 (1 + d + d^2/3) exp(-d)
+    with d = r / rng (the paper's r/theta2 parameterisation).
+    """
+    d = r / rng
+    if nu == 0.5:
+        poly = 1.0
+    elif nu == 1.5:
+        poly = 1.0 + d
+    elif nu == 2.5:
+        poly = 1.0 + d + d * d / 3.0
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"half-integer form only for nu in {{0.5,1.5,2.5}}, got {nu}")
+    return variance * poly * jnp.exp(-d)
+
+
+def matern_ref(x1, x2, theta, nu):
+    """Covariance tile Sigma_ij = C(||x1_i - x2_j||; theta) (Eq. 1).
+
+    x1: (m, 2) coordinates, x2: (n, 2) coordinates, theta = (variance,
+    range, _), nu in {0.5, 1.5, 2.5}.  The zero-distance limit is the
+    variance (C(0) = theta_1).
+    """
+    diff = x1[:, None, :] - x2[None, :, :]
+    r = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    cov = _matern_halfint(r, theta[0], theta[1], nu)
+    return jnp.where(r == 0.0, theta[0], cov)
+
+
+def matern_general_ref(x1, x2, theta):
+    """General-smoothness Matern oracle via scipy's Bessel K_nu.
+
+    Used only as a *test oracle* (for the Pallas matern kernel at
+    half-integer nu, and to cut golden files for the Rust bessel/matern
+    substrate); never shipped as an artifact.  theta = (variance, range,
+    smoothness).
+    """
+    import numpy as np
+    from scipy.special import gamma, kv
+
+    x1 = np.asarray(x1)
+    x2 = np.asarray(x2)
+    var, rng, nu = float(theta[0]), float(theta[1]), float(theta[2])
+    diff = x1[:, None, :] - x2[None, :, :]
+    r = np.sqrt(np.sum(diff * diff, axis=-1))
+    d = r / rng
+    scale = var / (2.0 ** (nu - 1.0) * gamma(nu))
+    with np.errstate(invalid="ignore", divide="ignore"):
+        cov = scale * d**nu * kv(nu, d)
+    return np.where(r == 0.0, var, cov)

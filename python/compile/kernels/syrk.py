@@ -1,0 +1,72 @@
+"""Pallas tile SYRK: C <- C - A @ A^T (Algorithm 1 line 19, `dsyrk`).
+
+Updates a diagonal tile of the trailing matrix.  In the paper's algorithm
+the diagonal tiles are *always* double precision, but the panel tile A that
+feeds the update may have been computed in single precision (then promoted
+by `sconv2d`, line 15) — so the kernel itself is dtype-parametric like
+`gemm`, and the precision policy lives in Layer 2 / the Rust coordinator.
+
+Only the lower triangle of C is meaningful to the factorization; we update
+the full tile (the rank-k update of a symmetric C stays symmetric, and a
+full (bm, bn) block update keeps the MXU contraction dense instead of
+masking half the systolic array).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import DEFAULT_BLOCK, pick_block
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _syrk_kernel(c_ref, al_ref, ar_ref, o_ref, *, acc_dtype):
+    acc = jax.lax.dot_general(
+        al_ref[...],
+        ar_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+    o_ref[...] = c_ref[...] - acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def syrk(c, a, *, block: int = DEFAULT_BLOCK):
+    """C - A @ A^T for an (n, n) diagonal tile C and (n, k) panel A.
+
+    A is passed twice with different BlockSpecs (row-panel i and row-panel
+    j) — in VMEM terms both panels are resident, which is the same
+    footprint a masked triangular update would need.
+    """
+    n = c.shape[0]
+    k = a.shape[1]
+    bn = pick_block(n, block)
+    acc_dtype = jnp.float32 if c.dtype == jnp.bfloat16 else c.dtype
+    grid = (n // bn, n // bn)
+    return pl.pallas_call(
+        functools.partial(_syrk_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),  # C block
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),  # A row-panel i
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),  # A row-panel j
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), c.dtype),
+        interpret=True,
+    )(c, a, a)
+
+
+def syrk_f64(c, a):
+    """Paper's `dsyrk` codelet."""
+    return syrk(c, a)
+
+
+def syrk_f32(c, a):
+    """Single-precision instantiation (used by the bf16/f32/f64 extension)."""
+    return syrk(c, a)

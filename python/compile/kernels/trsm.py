@@ -1,0 +1,77 @@
+"""Pallas tile TRSM: B <- B @ L^{-T} (Algorithm 1 lines 12/14, `dtrsm`/`strsm`).
+
+The panel solve of the right-looking tile Cholesky: after `potrf` factors
+the diagonal tile L = chol(A_kk), every tile below it in column k is
+replaced by A_ik L^{-T}.
+
+Row independence is the parallel structure: in X L^T = B every *row* of B
+is an independent triangular solve, so the Pallas grid splits B into row
+blocks (each an independent kernel instance — the threadblock analog) and
+each instance runs a vectorized forward substitution over the nb columns
+with the full L tile resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import DEFAULT_BLOCK, pick_block
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _trsm_kernel(l_ref, b_ref, o_ref):
+    """Solve X L^T = B for one (bm, nb) row block of B.
+
+    Forward substitution, one column at a time:
+        x_j = (b_j - sum_{k<j} x_k * L[j,k]) / L[j,j]
+    Unsolved columns of the accumulator are kept at zero so the masked
+    dot with row j of L only picks up already-solved columns.
+    """
+    l = l_ref[...]
+    b = b_ref[...]
+    nb = l.shape[0]
+    cols = jnp.arange(nb)
+
+    def body(j, x):
+        lrow = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=0)[0]  # (nb,)
+        partial = x @ jnp.where(cols < j, lrow, 0).astype(x.dtype)  # (bm,)
+        bj = jax.lax.dynamic_slice_in_dim(b, j, 1, axis=1)[:, 0]
+        diag = jax.lax.dynamic_index_in_dim(lrow, j, keepdims=False)
+        xj = (bj - partial) / diag
+        return jax.lax.dynamic_update_slice_in_dim(x, xj[:, None], j, axis=1)
+
+    x = jax.lax.fori_loop(0, nb, body, jnp.zeros_like(b))
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def trsm(l, b, *, block: int = DEFAULT_BLOCK):
+    """B @ L^{-T} for a lower-triangular (nb, nb) L and an (m, nb) B."""
+    m, nb = b.shape
+    bm = pick_block(m, block)
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((nb, nb), lambda i: (0, 0)),  # full L in VMEM
+            pl.BlockSpec((bm, nb), lambda i: (i, 0)),  # row block of B
+        ],
+        out_specs=pl.BlockSpec((bm, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb), b.dtype),
+        interpret=True,
+    )(l, b)
+
+
+def trsm_f64(l, b):
+    """Paper's `dtrsm` codelet."""
+    return trsm(l, b)
+
+
+def trsm_f32(l, b):
+    """Paper's `strsm` codelet (operates on the demoted diagonal copy)."""
+    return trsm(l, b)

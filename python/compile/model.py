@@ -1,0 +1,194 @@
+"""Layer-2 JAX model: Algorithm 1 (mixed-precision tile Cholesky) and the
+Gaussian log-likelihood it drives (paper Eqs. 2-3), composed from the
+Layer-1 Pallas tile kernels.
+
+This module is the build-time *numerical specification* of what the Rust
+coordinator executes at runtime: the same tile-level kernel sequence, the
+same precision policy, expressed over a statically-unrolled p x p tile
+grid so the whole factorization lowers to one fused HLO program
+(`mp_cholesky_full` artifact — the proof that L1 kernels and L2
+composition AOT together).
+
+Precision policy (Algorithm 1): tile (i, j) of the lower triangle is
+DOUBLE iff |i - j| < diag_thick, SINGLE otherwise.  Concretely per kernel:
+  - potrf(k,k): always f64 (line 8).
+  - trsm(i,k):  f64 if DP tile (line 12); else the f32 demoted copies of
+    L_kk and A_ik (line 14) with the result promoted back (line 15).
+  - syrk(j,j):  always f64 (line 19) — uses the promoted panel tiles.
+  - gemm(i,j):  f64 if DP tile (line 25); else f32 on demoted copies
+    (line 27).
+The f32 round-trip (demote -> compute -> promote) is exactly how the paper
+realizes single-precision tiles while keeping a full-precision storage slot
+(upper triangle) — so emulating it by casts is bit-faithful, not an
+approximation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm, matern, potrf, syrk, trsm
+
+jax.config.update("jax_enable_x64", True)
+
+F32 = jnp.float32
+F64 = jnp.float64
+
+
+def _is_dp(i: int, j: int, diag_thick: int) -> bool:
+    """Algorithm 1's precision predicate for tile (i, j)."""
+    return abs(i - j) < diag_thick
+
+
+def _split_tiles(a, nb: int):
+    """View an (n, n) array as a dict {(i, j): (nb, nb) tile}, lower part."""
+    p = a.shape[0] // nb
+    return {
+        (i, j): a[i * nb : (i + 1) * nb, j * nb : (j + 1) * nb]
+        for i in range(p)
+        for j in range(i + 1)
+    }, p
+
+
+def _join_tiles(tiles, p: int, nb: int, dtype=F64):
+    """Reassemble the lower-triangular tile dict into a dense (n, n) array."""
+    rows = []
+    for i in range(p):
+        row = [
+            tiles[(i, j)].astype(dtype)
+            if j <= i
+            else jnp.zeros((nb, nb), dtype)
+            for j in range(p)
+        ]
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def mp_cholesky(a, *, nb: int, diag_thick: int):
+    """Mixed-precision tile Cholesky (Algorithm 1), lower triangular.
+
+    a: (n, n) SPD, n divisible by nb.  Returns the (n, n) lower factor in
+    f64 storage; tiles outside the diag_thick band carry f32-accurate
+    values (they were computed by strsm/sgemm on demoted data).
+    """
+    tiles, p = _split_tiles(a, nb)
+    # Upper-triangle storage of the paper = a shadow dict of f32 copies.
+    sp = {
+        (i, j): tiles[(i, j)].astype(F32)
+        for i in range(p)
+        for j in range(i + 1)
+        if not _is_dp(i, j, diag_thick)
+    }
+
+    for k in range(p):
+        # line 8: diagonal factorization, always DP
+        lkk = potrf(tiles[(k, k)])
+        tiles[(k, k)] = lkk
+        # line 9: demoted copy of the factored diagonal tile (tmp vector)
+        lkk_s = lkk.astype(F32)
+
+        # lines 10-17: panel solve
+        for i in range(k + 1, p):
+            if _is_dp(i, k, diag_thick):
+                tiles[(i, k)] = trsm(lkk, tiles[(i, k)])  # line 12 dtrsm
+            else:
+                s = trsm(lkk_s, sp[(i, k)])  # line 14 strsm
+                sp[(i, k)] = s
+                tiles[(i, k)] = s.astype(F64)  # line 15 sconv2d
+
+        # lines 18-30: trailing update
+        for j in range(k + 1, p):
+            # line 19: diagonal tile update, always DP (panel was promoted)
+            tiles[(j, j)] = syrk(tiles[(j, j)], tiles[(j, k)])
+            for i in range(j + 1, p):
+                if _is_dp(i, j, diag_thick):
+                    tiles[(i, j)] = gemm(
+                        tiles[(i, j)], tiles[(i, k)], tiles[(j, k)]
+                    )  # line 25 dgemm
+                else:
+                    aik_s = (
+                        sp[(i, k)]
+                        if (i, k) in sp
+                        else tiles[(i, k)].astype(F32)  # lines 20-21 dconv2s
+                    )
+                    ajk_s = (
+                        sp[(j, k)]
+                        if (j, k) in sp
+                        else tiles[(j, k)].astype(F32)
+                    )
+                    sp[(i, j)] = gemm(sp[(i, j)], aik_s, ajk_s)  # line 27
+                    tiles[(i, j)] = sp[(i, j)].astype(F64)
+
+    # zero the strict upper part of each diagonal tile (potrf kernel already
+    # does this; keep the invariant explicit for _join_tiles)
+    return _join_tiles(tiles, p, nb)
+
+
+def dp_cholesky(a, *, nb: int):
+    """Full double-precision tile Cholesky (the paper's DP(100%) baseline),
+    same kernel sequence with the precision predicate always true."""
+    return mp_cholesky(a, nb=nb, diag_thick=a.shape[0] // nb + 1)
+
+
+def dst_cholesky(a, *, nb: int, diag_thick: int):
+    """Diagonal-Super-Tile / independent-blocks baseline (paper SSV-B):
+    tiles outside the band are *zeroed* before a DP factorization, which
+    decouples the matrix into independent diagonal super-blocks."""
+    n = a.shape[0]
+    p = n // nb
+    ti = jnp.arange(n) // nb
+    band = jnp.abs(ti[:, None] - ti[None, :]) < diag_thick
+    return dp_cholesky(jnp.where(band, a, 0.0), nb=nb)
+
+
+def loglik(sigma, z):
+    """Gaussian log-likelihood (Eq. 2) given a dense covariance and data.
+
+    l(theta) = -n/2 log(2 pi) - 1/2 log|Sigma| - 1/2 z^T Sigma^{-1} z,
+    evaluated through the Cholesky factor: log|Sigma| = 2 sum log diag L,
+    and the quadratic form via one forward solve.
+    """
+    n = z.shape[0]
+    l = jnp.linalg.cholesky(sigma)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(l)))
+    u = jax.scipy.linalg.solve_triangular(l, z, lower=True)
+    quad = jnp.sum(u * u)
+    return -0.5 * n * jnp.log(2.0 * jnp.pi) - 0.5 * logdet - 0.5 * quad
+
+
+def mp_loglik(locs, z, theta, *, nu: float, nb: int, diag_thick: int):
+    """One full MLE iteration as a single fused graph: Matern covariance
+    generation (L1 matern kernel, tile by tile) -> mixed-precision
+    factorization -> log-determinant + quadratic form.
+
+    This is the `mp_loglik_demo` artifact: it certifies that *everything*
+    the Rust coordinator schedules at runtime also composes into one AOT
+    HLO program (the L2 deliverable), even though Rust drives the tiled
+    version for scalability.
+    """
+    n = locs.shape[0]
+    p = n // nb
+    rows = []
+    for i in range(p):
+        row = [
+            matern(
+                locs[i * nb : (i + 1) * nb],
+                locs[j * nb : (j + 1) * nb],
+                theta,
+                nu=nu,
+            )
+            for j in range(p)
+        ]
+        rows.append(jnp.concatenate(row, axis=1))
+    sigma = jnp.concatenate(rows, axis=0)
+
+    l = mp_cholesky(sigma, nb=nb, diag_thick=diag_thick)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(l)))
+    # forward solve against the mixed-precision factor, tile-free (the
+    # solve is O(n^2); the paper keeps it DP)
+    u = jax.scipy.linalg.solve_triangular(l, z, lower=True)
+    quad = jnp.sum(u * u)
+    return -0.5 * n * jnp.log(2.0 * jnp.pi) - 0.5 * logdet - 0.5 * quad

@@ -1,0 +1,215 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/seeds (the sizes stay small — interpret
+mode is numpy-backed); exact tolerances scale with dtype epsilon.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gemm, matern, potrf, syrk, trsm
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+DTYPES = [jnp.float32, jnp.float64]
+SIZES = [8, 16, 64]
+
+
+def rng_tile(seed, shape, dtype):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal(shape), dtype=dtype)
+
+
+def spd_tile(seed, n, dtype, jitter=None):
+    a = np.random.default_rng(seed).standard_normal((n, n))
+    s = a @ a.T + (jitter if jitter is not None else n) * np.eye(n)
+    return jnp.asarray(s, dtype=dtype)
+
+
+def tol(dtype):
+    return {"float32": 2e-4, "float64": 1e-11}[jnp.dtype(dtype).name]
+
+
+# ---------------------------------------------------------------- gemm
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from(SIZES),
+    n=st.sampled_from(SIZES),
+    k=st.sampled_from(SIZES),
+    dt=st.sampled_from([0, 1]),
+    block=st.sampled_from([8, 32, 64]),
+)
+def test_gemm_matches_ref(seed, m, n, k, dt, block):
+    dtype = DTYPES[dt]
+    c = rng_tile(seed, (m, n), dtype)
+    a = rng_tile(seed + 1, (m, k), dtype)
+    b = rng_tile(seed + 2, (n, k), dtype)
+    got = gemm(c, a, b, block=block)
+    np.testing.assert_allclose(
+        got, ref.gemm_ref(c, a, b), rtol=tol(dtype) * k, atol=tol(dtype) * k
+    )
+
+
+def test_gemm_bf16_accumulates_f32():
+    c = rng_tile(0, (32, 32), jnp.bfloat16)
+    a = rng_tile(1, (32, 32), jnp.bfloat16)
+    b = rng_tile(2, (32, 32), jnp.bfloat16)
+    got = gemm(c, a, b)
+    want = (
+        c.astype(jnp.float32)
+        - a.astype(jnp.float32) @ b.astype(jnp.float32).T
+    ).astype(jnp.bfloat16)
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=0.05, atol=0.5
+    )
+
+
+def test_gemm_zero_update_is_identity():
+    c = rng_tile(3, (16, 16), jnp.float64)
+    z = jnp.zeros((16, 8), jnp.float64)
+    np.testing.assert_array_equal(gemm(c, z, rng_tile(4, (16, 8), jnp.float64)), c)
+
+
+# ---------------------------------------------------------------- syrk
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from(SIZES),
+    k=st.sampled_from(SIZES),
+    dt=st.sampled_from([0, 1]),
+)
+def test_syrk_matches_ref(seed, n, k, dt):
+    dtype = DTYPES[dt]
+    c = rng_tile(seed, (n, n), dtype)
+    a = rng_tile(seed + 1, (n, k), dtype)
+    got = syrk(c, a)
+    np.testing.assert_allclose(
+        got, ref.syrk_ref(c, a), rtol=tol(dtype) * k, atol=tol(dtype) * k
+    )
+
+
+def test_syrk_preserves_symmetry():
+    c0 = rng_tile(7, (32, 32), jnp.float64)
+    c = c0 + c0.T
+    a = rng_tile(8, (32, 16), jnp.float64)
+    out = syrk(c, a)
+    np.testing.assert_allclose(out, out.T, atol=1e-12)
+
+
+# ---------------------------------------------------------------- trsm
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from(SIZES),
+    nb=st.sampled_from([8, 16, 32]),
+    dt=st.sampled_from([0, 1]),
+)
+def test_trsm_matches_ref(seed, m, nb, dt):
+    dtype = DTYPES[dt]
+    l = jnp.asarray(np.linalg.cholesky(np.asarray(spd_tile(seed, nb, jnp.float64))), dtype)
+    b = rng_tile(seed + 1, (m, nb), dtype)
+    got = trsm(l, b)
+    np.testing.assert_allclose(
+        got, ref.trsm_ref(l, b), rtol=tol(dtype) * nb, atol=tol(dtype) * nb
+    )
+
+
+def test_trsm_inverts_gemm():
+    """(B L^{-T}) L^T == B — solve then multiply round-trips."""
+    l = jnp.asarray(np.linalg.cholesky(np.asarray(spd_tile(5, 16, jnp.float64))))
+    b = rng_tile(6, (32, 16), jnp.float64)
+    x = trsm(l, b)
+    np.testing.assert_allclose(x @ l.T, b, rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------- potrf
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([4, 8, 16, 32, 64]))
+def test_potrf_matches_ref(seed, n):
+    a = spd_tile(seed, n, jnp.float64)
+    got = potrf(a)
+    np.testing.assert_allclose(got, ref.potrf_ref(a), rtol=1e-10, atol=1e-10)
+
+
+def test_potrf_f32():
+    a = spd_tile(11, 16, jnp.float32)
+    got = potrf(a)
+    np.testing.assert_allclose(got, ref.potrf_ref(a), rtol=1e-3, atol=1e-3)
+
+
+def test_potrf_strict_upper_zero():
+    a = spd_tile(12, 24, jnp.float64)
+    got = np.asarray(potrf(a))
+    assert np.all(got[np.triu_indices(24, k=1)] == 0.0)
+
+
+def test_potrf_reconstructs():
+    a = spd_tile(13, 32, jnp.float64)
+    l = potrf(a)
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------- matern
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([8, 16, 64]),
+    n=st.sampled_from([8, 16, 64]),
+    nu=st.sampled_from([0.5, 1.5, 2.5]),
+    var=st.floats(0.1, 10.0),
+    rng_=st.floats(0.02, 0.4),
+)
+def test_matern_matches_ref(seed, m, n, nu, var, rng_):
+    r = np.random.default_rng(seed)
+    x1 = jnp.asarray(r.random((m, 2)))
+    x2 = jnp.asarray(r.random((n, 2)))
+    theta = jnp.asarray([var, rng_, nu])
+    got = matern(x1, x2, theta, nu=nu)
+    np.testing.assert_allclose(
+        got, ref.matern_ref(x1, x2, theta, nu), rtol=1e-12, atol=1e-12
+    )
+
+
+@pytest.mark.parametrize("nu", [0.5, 1.5, 2.5])
+def test_matern_halfint_agrees_with_general_bessel(nu):
+    """The closed forms must equal the general Bessel-K Matern at
+    half-integer nu — this pins the Pallas kernel to Eq. 1 itself."""
+    r = np.random.default_rng(42)
+    x1 = jnp.asarray(r.random((16, 2)))
+    theta = jnp.asarray([1.5, 0.1, nu])
+    got = matern(x1, x1, theta, nu=nu)
+    want = ref.matern_general_ref(x1, x1, theta)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-9, atol=1e-9)
+
+
+def test_matern_diagonal_is_variance():
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.random((32, 2)))
+    got = np.asarray(matern(x, x, jnp.asarray([2.5, 0.1, 0.5]), nu=0.5))
+    np.testing.assert_allclose(np.diag(got), 2.5)
+
+
+def test_matern_spd_after_nugget():
+    """Sigma from distinct sites is SPD (up to fp) — the property the
+    whole pipeline rests on."""
+    r = np.random.default_rng(4)
+    x = jnp.asarray(r.random((64, 2)))
+    s = np.asarray(matern(x, x, jnp.asarray([1.0, 0.1, 1.5]), nu=1.5))
+    w = np.linalg.eigvalsh(s)
+    assert w.min() > -1e-8 * w.max()

@@ -1,0 +1,126 @@
+"""L2 model correctness: Algorithm 1 composition vs dense references, and
+the accuracy-vs-diag_thick behaviour the paper's SSVIII.D relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import matern
+
+jax.config.update("jax_enable_x64", True)
+
+
+def spd(seed, n, decay=0.5):
+    """SPD matrix with geometrically decaying off-diagonal mass — the
+    covariance-like structure (post-ordering) Algorithm 1 assumes."""
+    r = np.random.default_rng(seed)
+    idx = np.arange(n)
+    base = decay ** (np.abs(idx[:, None] - idx[None, :]) / 8.0)
+    noise = 0.01 * r.standard_normal((n, n))
+    a = base + noise @ noise.T
+    return jnp.asarray(a + n * 0.01 * np.eye(n))
+
+
+def matern_cov(seed, n, theta=(1.0, 0.1, 0.5), nu=0.5):
+    r = np.random.default_rng(seed)
+    x = np.sort(r.random((n, 2)), axis=0)  # crude locality ordering
+    return np.asarray(
+        matern(jnp.asarray(x), jnp.asarray(x), jnp.asarray(theta), nu=nu)
+    ) + 1e-6 * np.eye(n)
+
+
+def test_dp_cholesky_matches_lapack():
+    a = spd(0, 128)
+    l = model.dp_cholesky(a, nb=32)
+    np.testing.assert_allclose(l, jnp.linalg.cholesky(a), rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("nb", [16, 32, 64])
+@pytest.mark.parametrize("diag_thick", [1, 2, 3])
+def test_mp_cholesky_reconstructs(nb, diag_thick):
+    """||L L^T - A|| stays at f32-level for any band width."""
+    a = jnp.asarray(matern_cov(1, 128))
+    l = model.mp_cholesky(a, nb=nb, diag_thick=diag_thick)
+    err = np.abs(np.asarray(l @ l.T - a)).max()
+    assert err < 5e-5, f"nb={nb} t={diag_thick}: err={err}"
+
+
+def test_mp_cholesky_full_band_equals_dp():
+    """diag_thick >= p degenerates to the DP algorithm exactly."""
+    a = spd(2, 96)
+    mp = model.mp_cholesky(a, nb=32, diag_thick=5)
+    dp = model.dp_cholesky(a, nb=32)
+    np.testing.assert_array_equal(np.asarray(mp), np.asarray(dp))
+
+
+def test_mp_band_tiles_are_dp_accurate():
+    """Tiles inside the band must carry f64-accurate values even when the
+    rest of the matrix runs in f32 (the paper's central accuracy claim)."""
+    a = jnp.asarray(matern_cov(3, 128))
+    dp = np.asarray(model.dp_cholesky(a, nb=32, ))
+    mp = np.asarray(model.mp_cholesky(a, nb=32, diag_thick=2))
+    # diagonal tiles: always DP in Algorithm 1 (potrf/syrk chains are f64,
+    # but their panel inputs crossed f32 — allow f32-scale, expect better)
+    for k in range(4):
+        dtile = np.abs(dp[k*32:(k+1)*32, k*32:(k+1)*32] - mp[k*32:(k+1)*32, k*32:(k+1)*32]).max()
+        assert dtile < 1e-5, f"diag tile {k} err {dtile}"
+
+
+def test_mp_error_decreases_with_band():
+    """Wider DP band -> closer to the full-DP factor (monotone trend)."""
+    a = jnp.asarray(matern_cov(4, 160))
+    dp = np.asarray(model.dp_cholesky(a, nb=32))
+    errs = []
+    for t in (1, 2, 4, 5):
+        mp = np.asarray(model.mp_cholesky(a, nb=32, diag_thick=t))
+        errs.append(np.abs(mp - dp).max())
+    assert errs[-1] == 0.0
+    assert errs[0] >= errs[-2] >= errs[-1]
+
+
+def test_dst_cholesky_is_banded():
+    a = jnp.asarray(matern_cov(5, 128))
+    l = np.asarray(model.dst_cholesky(a, nb=32, diag_thick=2))
+    # tiles at |i-j| >= 2 must be exactly zero (the IND/DST structure)
+    assert np.all(l[64:128, 0:32] == 0.0)
+    assert np.all(l[96:128, 0:64:][:, 0:32] == 0.0)
+
+
+def test_loglik_matches_direct_inverse():
+    n = 96
+    a = jnp.asarray(matern_cov(6, n))
+    z = jnp.asarray(np.random.default_rng(7).standard_normal(n))
+    got = float(model.loglik(a, z))
+    an = np.asarray(a)
+    want = (
+        -0.5 * n * np.log(2 * np.pi)
+        - 0.5 * np.linalg.slogdet(an)[1]
+        - 0.5 * float(z @ np.linalg.solve(an, np.asarray(z)))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_mp_loglik_close_to_dense_loglik():
+    """The fused demo graph (matern -> Algorithm 1 -> loglik) agrees with
+    the dense-f64 likelihood to f32-resolution — the end-to-end accuracy
+    statement of the paper at build time."""
+    n, nb = 128, 32
+    r = np.random.default_rng(8)
+    locs = np.sort(r.random((n, 2)), axis=0)
+    theta = jnp.asarray([1.0, 0.1, 0.5])
+    sigma = np.asarray(
+        matern(jnp.asarray(locs), jnp.asarray(locs), theta, nu=0.5)
+    ) + 1e-4 * np.eye(n)
+    z = np.linalg.cholesky(sigma) @ r.standard_normal(n)
+
+    dense = float(model.loglik(jnp.asarray(sigma), jnp.asarray(z)))
+
+    # tiled mixed-precision version of the same quantity
+    lmp = model.mp_cholesky(jnp.asarray(sigma), nb=nb, diag_thick=2)
+    logdet = 2.0 * float(jnp.sum(jnp.log(jnp.diag(lmp))))
+    u = jax.scipy.linalg.solve_triangular(lmp, jnp.asarray(z), lower=True)
+    mp = -0.5 * n * np.log(2 * np.pi) - 0.5 * logdet - 0.5 * float(u @ u)
+
+    assert abs(mp - dense) / abs(dense) < 1e-4, (mp, dense)

@@ -1,0 +1,197 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Site ordering** (Morton vs random): Algorithm 1's premise is that
+//!    an "appropriate ordering" concentrates covariance mass near the
+//!    diagonal; random ordering should destroy the mixed-precision
+//!    accuracy but *not* DP accuracy.
+//! 2. **Tile size nb**: the paper notes nb must be tuned per machine
+//!    (they use 960); sweep nb at fixed n.
+//! 3. **Scheduler policy**: Fifo vs Lifo vs CriticalPath on the same
+//!    factorization (wall time; identical numerics is covered by tests).
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use mpcholesky::bench::{Stats, Table};
+use mpcholesky::cholesky::{factorize_dense, solve_lower, Variant};
+use mpcholesky::matern::{matern_matrix, Location, MaternParams, Metric};
+use mpcholesky::prelude::*;
+use mpcholesky::scheduler::{Scheduler, SchedulerConfig, SchedulingPolicy};
+use mpcholesky::tile::DenseMatrix;
+
+fn main() {
+    ordering_ablation();
+    nb_ablation();
+    policy_ablation();
+}
+
+/// 1. Morton vs random ordering: factor error of the mixed variant.
+fn ordering_ablation() {
+    println!("# ablation 1: site ordering (n = 1024, nb = 64, thick = 2)");
+    let n = 1024;
+    let nb = 64;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(rng.uniform_open(0.0, 1.0), rng.uniform_open(0.0, 1.0)))
+        .collect();
+
+    let mut table = Table::new(&["ordering", "||L_mp - L_dp||_max", "offband covariance mass"]);
+    for (name, morton) in [("random", false), ("morton", true)] {
+        let mut ordered = locs.clone();
+        if morton {
+            mpcholesky::datagen::morton_sort(&mut ordered);
+        }
+        let a = DenseMatrix::from_vec(
+            n,
+            matern_matrix(&ordered, &theta, Metric::Euclidean, 1e-8),
+        )
+        .unwrap();
+        // off-band mass: fraction of |Sigma| outside diag_thick band
+        let p = n / nb;
+        let (mut inband, mut total) = (0.0f64, 0.0f64);
+        for bj in 0..p {
+            for bi in bj..p {
+                let mut s = 0.0;
+                for c in 0..nb {
+                    for r in 0..nb {
+                        s += a.get(bi * nb + r, bj * nb + c).abs();
+                    }
+                }
+                total += s;
+                if bi - bj < 2 {
+                    inband += s;
+                }
+            }
+        }
+        let sched = Scheduler::with_workers(1);
+        let dp = factorize_dense(&a, nb, Variant::FullDp, &NativeBackend, &sched)
+            .unwrap()
+            .to_dense(true);
+        let mp = factorize_dense(
+            &a,
+            nb,
+            Variant::MixedPrecision { diag_thick: 2 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap()
+        .to_dense(true);
+        table.row(&[
+            name.into(),
+            format!("{:.3e}", mp.max_abs_diff(&dp)),
+            format!("{:.1}% off-band", (1.0 - inband / total) * 100.0),
+        ]);
+    }
+    table.print();
+    let _ = &mut locs;
+}
+
+/// 2. nb sweep at fixed n: time of one DP factorization per tile size.
+fn nb_ablation() {
+    println!("\n# ablation 2: tile size (n = 2048, DP(100%), 1 worker)");
+    let n = 2048;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta,
+        seed: 6,
+        gen_nb: 128,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut table = Table::new(&["nb", "p", "tasks", "median s"]);
+    for nb in [64usize, 128, 256, 512] {
+        let sched = Scheduler::with_workers(1);
+        let times = mpcholesky::bench::time_reps(
+            || {
+                let mut tiles = mpcholesky::tile::TileMatrix::zeros(n, nb).unwrap();
+                mpcholesky::cholesky::generate_and_factorize(
+                    &mut tiles,
+                    &field.locations,
+                    theta,
+                    Metric::Euclidean,
+                    1e-8,
+                    Variant::FullDp,
+                    &NativeBackend,
+                    &sched,
+                )
+                .unwrap();
+                std::hint::black_box(&tiles);
+            },
+            1,
+            3,
+        );
+        let p = n / nb;
+        let plan = mpcholesky::cholesky::CholeskyPlan::build(p, nb, Variant::FullDp, true);
+        table.row(&[
+            format!("{nb}"),
+            format!("{p}"),
+            format!("{}", plan.graph.len()),
+            format!("{:.4}", Stats::from(&times).median),
+        ]);
+    }
+    table.print();
+}
+
+/// 3. Scheduling-policy wall time (single worker: measures queue overhead
+/// only; multi-core hosts will show CriticalPath's pipelining advantage).
+fn policy_ablation() {
+    println!("\n# ablation 3: scheduler policy (n = 2048, nb = 128, MP thick = 2)");
+    let n = 2048;
+    let nb = 128;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta,
+        seed: 7,
+        gen_nb: nb,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = DenseMatrix::from_vec(
+        n,
+        matern_matrix(&field.locations, &theta, Metric::Euclidean, 1e-8),
+    )
+    .unwrap();
+    let mut table = Table::new(&["policy", "median s", "utilization"]);
+    for policy in [
+        SchedulingPolicy::Fifo,
+        SchedulingPolicy::Lifo,
+        SchedulingPolicy::CriticalPath,
+    ] {
+        let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true });
+        let mut util = 0.0;
+        let times = mpcholesky::bench::time_reps(
+            || {
+                let mut tiles = mpcholesky::tile::TileMatrix::from_dense(&a, nb).unwrap();
+                let mut plan = mpcholesky::cholesky::CholeskyPlan::build(
+                    n / nb,
+                    nb,
+                    Variant::MixedPrecision { diag_thick: 2 },
+                    false,
+                );
+                tiles.demote_offband(|i, j| (i as isize - j as isize).unsigned_abs() < 2);
+                let accesses: Vec<_> =
+                    plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+                let exec = mpcholesky::cholesky::TileExecutor::new(&tiles, &NativeBackend);
+                let trace = sched
+                    .run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))
+                    .unwrap();
+                util = trace.utilization(workers);
+                let u = solve_lower(&tiles, &field.values).unwrap();
+                std::hint::black_box(u);
+            },
+            1,
+            3,
+        );
+        table.row(&[
+            format!("{policy:?}"),
+            format!("{:.4}", Stats::from(&times).median),
+            format!("{util:.2}"),
+        ]);
+    }
+    table.print();
+}

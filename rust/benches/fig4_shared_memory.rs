@@ -1,0 +1,108 @@
+//! Fig. 4 reproduction: execution time per likelihood iteration on
+//! shared-memory CPUs, DP(100%) vs mixed-precision variants, sweeping n.
+//!
+//! The paper measured a 36-core Haswell (Fig. 4a) and 56-core Skylake
+//! (Fig. 4b) at n up to ~134K; this harness runs the same sweep on the
+//! host CPU at laptop scale.  The number under test is the *ratio*:
+//! DP(10%)-SP(90%) averaged 1.71-1.84x over DP(100%) in the paper.
+//!
+//! ```bash
+//! cargo bench --bench fig4_shared_memory [-- n1,n2,...] [--reps R]
+//! ```
+
+use mpcholesky::bench::{Stats, Table};
+use mpcholesky::prelude::*;
+use mpcholesky::scheduler::Scheduler;
+use mpcholesky::tile::TileMatrix;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ns: Vec<usize> = args
+        .iter()
+        .skip(1)
+        .find(|a| !a.starts_with("--") && a.contains(|c: char| c.is_ascii_digit()))
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        // default sweep stays CI-sized; pass e.g. `-- 4096,8192` to
+        // reproduce the larger points from EXPERIMENTS.md
+        .unwrap_or_else(|| vec![1024, 2048]);
+    let reps: usize = args
+        .windows(2)
+        .find(|w| w[0] == "--reps")
+        .and_then(|w| w[1].parse().ok())
+        .unwrap_or(3);
+    let nb = 128usize;
+    let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+
+    println!("# Fig 4: time per likelihood iteration (native backend, {workers} workers, nb={nb})");
+    let mut table = Table::new(&["n", "variant", "mean s", "median s", "std", "speedup vs DP"]);
+    for &n in &ns {
+        let p = n / nb;
+        let field = SyntheticField::generate(&FieldConfig {
+            n,
+            theta,
+            seed: 4242,
+            gen_nb: nb,
+            ..Default::default()
+        })
+        .expect("field generation");
+        let variants = vec![
+            Variant::FullDp,
+            Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, 10.0) },
+            Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, 20.0) },
+            Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, 40.0) },
+            Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, 70.0) },
+            Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, 90.0) },
+        ];
+        // Interleave reps round-robin across variants so clock-frequency
+        // drift over the run cannot bias one variant (sequential blocks
+        // showed exactly that artifact on thermally-limited hosts).
+        let sched = Scheduler::with_workers(workers);
+        let one_iter = |v: Variant| {
+            // one likelihood iteration = generate + factor + solve
+            let mut tiles = TileMatrix::zeros(n, nb).unwrap();
+            generate_and_factorize(
+                &mut tiles,
+                &field.locations,
+                theta,
+                Metric::Euclidean,
+                1e-8,
+                v,
+                &NativeBackend,
+                &sched,
+            )
+            .unwrap();
+            let _ld = mpcholesky::cholesky::log_determinant(&tiles);
+            let u = mpcholesky::cholesky::solve_lower(&tiles, &field.values).unwrap();
+            std::hint::black_box(u);
+        };
+        for &v in &variants {
+            one_iter(v); // warm-up pass per variant
+        }
+        let mut times: Vec<Vec<f64>> = vec![Vec::new(); variants.len()];
+        for _ in 0..reps {
+            for (vi, &v) in variants.iter().enumerate() {
+                let t0 = std::time::Instant::now();
+                one_iter(v);
+                times[vi].push(t0.elapsed().as_secs_f64());
+            }
+        }
+        let mut dp_mean = 0.0f64;
+        for (vi, &v) in variants.iter().enumerate() {
+            let s = Stats::from(&times[vi]);
+            if v == Variant::FullDp {
+                dp_mean = s.mean;
+            }
+            table.row(&[
+                format!("{n}"),
+                v.label(p),
+                format!("{:.4}", s.mean),
+                format!("{:.4}", s.median),
+                format!("{:.4}", s.std),
+                format!("{:.2}x", dp_mean / s.mean),
+            ]);
+        }
+    }
+    table.print();
+    println!("# paper reference: DP(10%)-SP(90%) speedup 1.71x (Haswell) / 1.84x (Skylake)");
+}

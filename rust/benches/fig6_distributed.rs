@@ -1,0 +1,66 @@
+//! Fig. 6 reproduction: distributed-memory execution time and strong
+//! scaling on a Shaheen-II-like Cray XC40 (64-512 nodes), DP(100%) vs
+//! mixed variants.
+//!
+//! The cluster is simulated per DESIGN.md SS3: the real task DAG is
+//! replayed under a 2D block-cyclic ownership + alpha-beta communication
+//! model.  Claims under test: near-linear scaling, and a mixed-precision
+//! speedup that *shrinks* with node count (1.61x @ 64 -> 1.27x @ 512)
+//! as communication takes over.
+//!
+//! ```bash
+//! cargo bench --bench fig6_distributed [-- n]
+//! ```
+
+use mpcholesky::bench::Table;
+use mpcholesky::cholesky::{CholeskyPlan, Variant};
+use mpcholesky::scheduler::distributed::{simulate, ClusterModel};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args
+        .iter()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(131_072); // paper-scale problem for the model
+    let nb = 1024usize; // distributed tile size
+    let p = n / nb;
+
+    println!("# Fig 6: Shaheen-II-like model, n = {n}, nb = {nb}, p = {p}");
+    let mut table = Table::new(&[
+        "nodes", "variant", "model time s", "comm GB", "speedup vs DP", "scaling vs 64",
+    ]);
+    let mut dp_at: Vec<(usize, f64)> = Vec::new();
+    for nodes in [64usize, 128, 256, 512] {
+        let cluster = ClusterModel::shaheen(nodes);
+        let mut dp_time = 0.0f64;
+        for dp_pct in [100.0, 10.0, 40.0, 90.0] {
+            let variant = if dp_pct >= 100.0 {
+                Variant::FullDp
+            } else {
+                Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, dp_pct) }
+            };
+            let plan = CholeskyPlan::build(p, nb, variant, false);
+            let rep = simulate(&plan.graph, &cluster, nb);
+            if variant == Variant::FullDp {
+                dp_time = rep.time_s;
+                dp_at.push((nodes, rep.time_s));
+            }
+            let base64 = dp_at.first().map(|&(_, t)| t).unwrap_or(rep.time_s);
+            table.row(&[
+                format!("{nodes}"),
+                variant.label(p),
+                format!("{:.3}", rep.time_s),
+                format!("{:.1}", rep.total_comm_bytes / 1e9),
+                format!("{:.2}x", dp_time / rep.time_s),
+                if variant == Variant::FullDp {
+                    format!("{:.2}x", base64 / rep.time_s)
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    table.print();
+    println!("# paper reference: speedups 1.61x @64, 1.45x @128, 1.48x @256, 1.27x @512");
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmarks of the native tile codelets (GFLOP/s per kernel per
+//! precision per tile size) — the SSPerf baseline and regression harness.
+//!
+//! What must hold for the paper's result to transfer: f32 codelets run
+//! close to 2x the f64 rate (half the memory traffic, double the SIMD
+//! lanes).  This is the hardware property Algorithm 1 converts into its
+//! end-to-end speedup.
+//!
+//! ```bash
+//! cargo bench --bench kernels_micro
+//! ```
+
+use mpcholesky::bench::{Stats, Table};
+use mpcholesky::kernels::{blas, flops};
+use mpcholesky::rng::Xoshiro256pp;
+
+fn rand_vec<T: Copy>(n: usize, seed: u64, f: impl Fn(f64) -> T) -> Vec<T> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| f(r.standard_normal())).collect()
+}
+
+fn spd64(nb: usize, seed: u64) -> Vec<f64> {
+    let b = rand_vec::<f64>(nb * nb, seed, |x| x);
+    let mut a = vec![0.0; nb * nb];
+    for j in 0..nb {
+        for i in 0..nb {
+            let mut s = 0.0;
+            for k in 0..nb {
+                s += b[i + k * nb] * b[j + k * nb];
+            }
+            a[i + j * nb] = s + if i == j { nb as f64 } else { 0.0 };
+        }
+    }
+    a
+}
+
+fn gflops(fl: f64, secs: f64) -> f64 {
+    fl / secs / 1e9
+}
+
+fn main() {
+    let reps = 7;
+    let mut table = Table::new(&["kernel", "nb", "f64 GF/s", "f32 GF/s", "f32/f64"]);
+    for &nb in &[64usize, 128, 192, 256] {
+        // gemm
+        let a64 = rand_vec::<f64>(nb * nb, 1, |x| x);
+        let b64 = rand_vec::<f64>(nb * nb, 2, |x| x);
+        let mut c64 = rand_vec::<f64>(nb * nb, 3, |x| x);
+        let a32: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+        let mut c32: Vec<f32> = c64.iter().map(|&x| x as f32).collect();
+        let t64 = Stats::from(&mpcholesky::bench::time_reps(
+            || blas::gemm(std::hint::black_box(&mut c64), &a64, &b64, nb),
+            2,
+            reps,
+        ))
+        .median;
+        let t32 = Stats::from(&mpcholesky::bench::time_reps(
+            || blas::gemm(std::hint::black_box(&mut c32), &a32, &b32, nb),
+            2,
+            reps,
+        ))
+        .median;
+        let (g64, g32) = (gflops(flops::gemm(nb), t64), gflops(flops::gemm(nb), t32));
+        table.row(&[
+            "gemm".into(),
+            format!("{nb}"),
+            format!("{g64:.2}"),
+            format!("{g32:.2}"),
+            format!("{:.2}x", g32 / g64),
+        ]);
+
+        // syrk
+        let mut s64 = rand_vec::<f64>(nb * nb, 4, |x| x);
+        let mut s32: Vec<f32> = s64.iter().map(|&x| x as f32).collect();
+        let t64 = Stats::from(&mpcholesky::bench::time_reps(
+            || blas::syrk(std::hint::black_box(&mut s64), &a64, nb),
+            2,
+            reps,
+        ))
+        .median;
+        let t32 = Stats::from(&mpcholesky::bench::time_reps(
+            || blas::syrk(std::hint::black_box(&mut s32), &a32, nb),
+            2,
+            reps,
+        ))
+        .median;
+        let (g64, g32) = (gflops(flops::syrk(nb), t64), gflops(flops::syrk(nb), t32));
+        table.row(&[
+            "syrk".into(),
+            format!("{nb}"),
+            format!("{g64:.2}"),
+            format!("{g32:.2}"),
+            format!("{:.2}x", g32 / g64),
+        ]);
+
+        // trsm
+        let mut l = spd64(nb, 5);
+        blas::potrf(&mut l, nb, 0).unwrap();
+        let l32: Vec<f32> = l.iter().map(|&x| x as f32).collect();
+        let mut x64 = rand_vec::<f64>(nb * nb, 6, |x| x);
+        let mut x32: Vec<f32> = x64.iter().map(|&x| x as f32).collect();
+        let t64 = Stats::from(&mpcholesky::bench::time_reps(
+            || blas::trsm(&l, std::hint::black_box(&mut x64), nb),
+            2,
+            reps,
+        ))
+        .median;
+        let t32 = Stats::from(&mpcholesky::bench::time_reps(
+            || blas::trsm(&l32, std::hint::black_box(&mut x32), nb),
+            2,
+            reps,
+        ))
+        .median;
+        let (g64, g32) = (gflops(flops::trsm(nb), t64), gflops(flops::trsm(nb), t32));
+        table.row(&[
+            "trsm".into(),
+            format!("{nb}"),
+            format!("{g64:.2}"),
+            format!("{g32:.2}"),
+            format!("{:.2}x", g32 / g64),
+        ]);
+
+        // potrf
+        let base = spd64(nb, 7);
+        let base32: Vec<f32> = base.iter().map(|&x| x as f32).collect();
+        let t64 = Stats::from(&mpcholesky::bench::time_reps(
+            || {
+                let mut w = base.clone();
+                blas::potrf(std::hint::black_box(&mut w), nb, 0).unwrap();
+            },
+            2,
+            reps,
+        ))
+        .median;
+        let t32 = Stats::from(&mpcholesky::bench::time_reps(
+            || {
+                let mut w = base32.clone();
+                blas::potrf(std::hint::black_box(&mut w), nb, 0).unwrap();
+            },
+            2,
+            reps,
+        ))
+        .median;
+        let (g64, g32) = (gflops(flops::potrf(nb), t64), gflops(flops::potrf(nb), t32));
+        table.row(&[
+            "potrf".into(),
+            format!("{nb}"),
+            format!("{g64:.2}"),
+            format!("{g32:.2}"),
+            format!("{:.2}x", g32 / g64),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,169 @@
+//! Benchmark harness utilities: timing, robust statistics and the
+//! fixed-width table printers the `benches/` targets share.  (The
+//! criterion crate is unavailable offline, so `cargo bench` runs
+//! hand-rolled harnesses with `harness = false`.)
+
+use std::time::Instant;
+
+/// Run `f` `reps` times (after `warmup` unmeasured runs) and collect
+/// per-run seconds.
+pub fn time_reps<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+impl Stats {
+    pub fn from(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty());
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 { s[n / 2] } else { 0.5 * (s[n / 2 - 1] + s[n / 2]) };
+        let var = s.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Self { mean, median, min: s[0], max: s[n - 1], std: var.sqrt() }
+    }
+}
+
+/// Five-number summary for boxplot-style reports (Figs. 7-8).
+#[derive(Clone, Copy, Debug)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+}
+
+impl BoxStats {
+    pub fn from(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty());
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let pos = p * (s.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                s[lo]
+            } else {
+                s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+            }
+        };
+        Self { min: s[0], q1: q(0.25), median: q(0.5), q3: q(0.75), max: s[s.len() - 1] }
+    }
+
+    /// One-line rendering: `min [q1 | med | q3] max`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:>9.4} [{:>9.4} |{:>9.4} |{:>9.4} ]{:>9.4}",
+            self.min, self.q1, self.median, self.q3, self.max
+        )
+    }
+}
+
+/// Minimal fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for c in 0..ncol {
+            w[c] = self.headers[c].len();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str(&format!("| {:>width$} ", cell, width = w[c]));
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers);
+        out.push_str(&format!(
+            "|{}|\n",
+            w.iter().map(|&x| "-".repeat(x + 2)).collect::<Vec<_>>().join("|")
+        ));
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_sample() {
+        let s = Stats::from(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn box_stats_quartiles() {
+        let b = BoxStats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(b.median, 3.0);
+        assert_eq!(b.q1, 2.0);
+        assert_eq!(b.q3, 4.0);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 5.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "time"]);
+        t.row(&["1024".into(), "0.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| 1024 |"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let mut n = 0;
+        let xs = time_reps(|| n += 1, 2, 5);
+        assert_eq!(n, 7);
+        assert_eq!(xs.len(), 5);
+    }
+}

@@ -1,0 +1,185 @@
+//! Executor binding [`KernelCall`]s to a [`TileBackend`] over a
+//! [`TileMatrix`] — the worker-side codelet dispatch (StarPU's codelet
+//! function table).
+//!
+//! Safety protocol: tile buffers are reached through
+//! [`TileMatrix::tile_ptr`]; the scheduler's DAG ordering guarantees
+//! exclusivity, and debug builds double-check it with the per-tile
+//! reader/writer guards.
+
+use crate::error::Result;
+use crate::kernels::TileBackend;
+use crate::matern::{Location, MaternParams, Metric};
+use crate::scheduler::graph::Access;
+use crate::tile::{convert, quantize_bf16_slice, Precision, TileId, TileMatrix};
+
+use super::kernelcall::{KernelCall, SizedCall};
+
+/// Covariance-generation context for `KernelCall::Generate` tasks.
+pub struct GenContext<'a> {
+    pub locations: &'a [Location],
+    pub theta: MaternParams,
+    pub metric: Metric,
+    /// Additive diagonal nugget applied to global diagonal entries.
+    pub nugget: f64,
+    /// Storage precision per tile: non-F64 tiles get their f32 shadow
+    /// refreshed right after generation (Algorithm 1 lines 2-6 fused into
+    /// generation); Bf16 tiles additionally re-quantize the shadow.
+    pub precision_of: Box<dyn Fn(usize, usize) -> Precision + Send + Sync + 'a>,
+}
+
+/// Stateless executor: all mutability lives in the tile matrix.
+pub struct TileExecutor<'a, B: TileBackend + ?Sized> {
+    pub tiles: &'a TileMatrix,
+    pub backend: &'a B,
+    pub gen: Option<GenContext<'a>>,
+}
+
+impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
+    pub fn new(tiles: &'a TileMatrix, backend: &'a B) -> Self {
+        Self { tiles, backend, gen: None }
+    }
+
+    pub fn with_generation(mut self, gen: GenContext<'a>) -> Self {
+        self.gen = Some(gen);
+        self
+    }
+
+    /// Execute one call.  `accesses` is the task's declared access list —
+    /// used purely for the debug-mode guard protocol.
+    pub fn execute(&self, sc: &SizedCall, accesses: &[(TileId, Access)]) -> Result<()> {
+        for &(t, m) in accesses {
+            self.tiles.guard_acquire(t, m == Access::Write);
+        }
+        let r = self.execute_inner(sc);
+        for &(t, m) in accesses {
+            self.tiles.guard_release(t, m == Access::Write);
+        }
+        r
+    }
+
+    fn execute_inner(&self, sc: &SizedCall) -> Result<()> {
+        let nb = sc.nb;
+        let tm = self.tiles;
+        // SAFETY: scheduler-ordered exclusive access (see module docs).
+        unsafe {
+            match sc.call {
+                KernelCall::Generate { i, j } => {
+                    let g = self
+                        .gen
+                        .as_ref()
+                        .expect("Generate task scheduled without GenContext");
+                    let slot = tm.tile_ptr(TileId::new(i, j));
+                    let x1 = &g.locations[i * nb..(i + 1) * nb];
+                    let x2 = &g.locations[j * nb..(j + 1) * nb];
+                    self.backend.matern_f64(&mut slot.dp, x1, x2, &g.theta, g.metric);
+                    if i == j && g.nugget != 0.0 {
+                        for d in 0..nb {
+                            slot.dp[d + d * nb] += g.nugget;
+                        }
+                    }
+                    match (g.precision_of)(i, j) {
+                        Precision::F64 => slot.sp = None,
+                        Precision::F32 => {
+                            let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
+                            convert::demote(&slot.dp, sp);
+                        }
+                        Precision::Bf16 => {
+                            let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
+                            convert::demote(&slot.dp, sp);
+                            quantize_bf16_slice(sp);
+                            convert::promote(sp, &mut slot.dp);
+                        }
+                    }
+                    Ok(())
+                }
+                KernelCall::PotrfDp { k } => {
+                    let slot = tm.tile_ptr(TileId::new(k, k));
+                    self.backend.potrf_f64(&mut slot.dp, nb, k * nb)
+                }
+                KernelCall::DemoteDiag { k } => {
+                    let slot = tm.tile_ptr(TileId::new(k, k));
+                    let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
+                    convert::demote(&slot.dp, sp);
+                    Ok(())
+                }
+                KernelCall::TrsmDp { i, k } => {
+                    let l = tm.tile_ptr(TileId::new(k, k));
+                    let b = tm.tile_ptr(TileId::new(i, k));
+                    self.backend.trsm_f64(&l.dp, &mut b.dp, nb);
+                    Ok(())
+                }
+                KernelCall::TrsmSp { i, k } => {
+                    let l = tm.tile_ptr(TileId::new(k, k));
+                    let b = tm.tile_ptr(TileId::new(i, k));
+                    let lsp = l
+                        .sp
+                        .as_ref()
+                        .expect("TrsmSp before DemoteDiag: plan ordering bug");
+                    let bsp = b
+                        .sp
+                        .as_mut()
+                        .expect("TrsmSp on tile without f32 shadow");
+                    self.backend.trsm_f32(lsp, bsp, nb);
+                    // line 15 sconv2d: promote the SP result into the
+                    // canonical f64 buffer for the DP syrk consumers
+                    convert::promote(bsp, &mut b.dp);
+                    Ok(())
+                }
+                KernelCall::DemoteTile { i, k } => {
+                    let slot = tm.tile_ptr(TileId::new(i, k));
+                    let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
+                    convert::demote(&slot.dp, sp);
+                    Ok(())
+                }
+                KernelCall::SyrkDp { j, k } => {
+                    let a = tm.tile_ptr(TileId::new(j, k));
+                    let c = tm.tile_ptr(TileId::new(j, j));
+                    self.backend.syrk_f64(&mut c.dp, &a.dp, nb);
+                    Ok(())
+                }
+                KernelCall::GemmDp { i, j, k } => {
+                    let a = tm.tile_ptr(TileId::new(i, k));
+                    let b = tm.tile_ptr(TileId::new(j, k));
+                    let c = tm.tile_ptr(TileId::new(i, j));
+                    self.backend.gemm_f64(&mut c.dp, &a.dp, &b.dp, nb);
+                    Ok(())
+                }
+                KernelCall::GemmSp { i, j, k } => {
+                    let a = tm.tile_ptr(TileId::new(i, k));
+                    let b = tm.tile_ptr(TileId::new(j, k));
+                    let c = tm.tile_ptr(TileId::new(i, j));
+                    let asp = a.sp.as_ref().expect("GemmSp: panel (i,k) lacks shadow");
+                    let bsp = b.sp.as_ref().expect("GemmSp: panel (j,k) lacks shadow");
+                    let csp = c.sp.as_mut().expect("GemmSp: target lacks shadow");
+                    self.backend.gemm_f32(csp, asp, bsp, nb);
+                    convert::promote(csp, &mut c.dp);
+                    Ok(())
+                }
+                KernelCall::TrsmHp { i, k } => {
+                    // SSIX third level: f32 compute, bf16 storage rounding
+                    let l = tm.tile_ptr(TileId::new(k, k));
+                    let b = tm.tile_ptr(TileId::new(i, k));
+                    let lsp = l.sp.as_ref().expect("TrsmHp before DemoteDiag");
+                    let bsp = b.sp.as_mut().expect("TrsmHp on tile without shadow");
+                    self.backend.trsm_f32(lsp, bsp, nb);
+                    quantize_bf16_slice(bsp);
+                    convert::promote(bsp, &mut b.dp);
+                    Ok(())
+                }
+                KernelCall::GemmHp { i, j, k } => {
+                    let a = tm.tile_ptr(TileId::new(i, k));
+                    let b = tm.tile_ptr(TileId::new(j, k));
+                    let c = tm.tile_ptr(TileId::new(i, j));
+                    let asp = a.sp.as_ref().expect("GemmHp: panel (i,k) lacks shadow");
+                    let bsp = b.sp.as_ref().expect("GemmHp: panel (j,k) lacks shadow");
+                    let csp = c.sp.as_mut().expect("GemmHp: target lacks shadow");
+                    self.backend.gemm_f32(csp, asp, bsp, nb);
+                    quantize_bf16_slice(csp);
+                    convert::promote(csp, &mut c.dp);
+                    Ok(())
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Task payloads for the tile Cholesky graphs: one variant per codelet of
+//! Algorithm 1 (plus covariance generation), with the cost metadata the
+//! Fig. 5/6 device models consume.
+
+use crate::kernels::flops;
+use crate::scheduler::TaskCost;
+use crate::tile::Precision;
+
+/// One tile-level operation in a factorization plan.
+///
+/// Indices follow Algorithm 1: `k` is the panel step, `(i, j)` the target
+/// tile.  `Dp`/`Sp` mirror the paper's `d*`/`s*` codelet names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelCall {
+    /// Generate covariance tile (i, j) from the location set (`matern`).
+    Generate { i: usize, j: usize },
+    /// Line 8: `dpotrf` on diagonal tile k.
+    PotrfDp { k: usize },
+    /// Line 9: `dlag2s` of the factored diagonal tile into its f32 shadow
+    /// (the paper's `tmp` vector slot).
+    DemoteDiag { k: usize },
+    /// Line 12: `dtrsm` on in-band panel tile (i, k).
+    TrsmDp { i: usize, k: usize },
+    /// Lines 14-15: `strsm` on the f32 shadows + `sconv2d` promotion.
+    TrsmSp { i: usize, k: usize },
+    /// Lines 20-21: `dconv2s` of an in-band panel tile whose f32 shadow is
+    /// needed by an off-band `sgemm`.
+    DemoteTile { i: usize, k: usize },
+    /// Line 19: `dsyrk` on diagonal tile j with panel (j, k).
+    SyrkDp { j: usize, k: usize },
+    /// Line 25: `dgemm` on in-band target (i, j).
+    GemmDp { i: usize, j: usize, k: usize },
+    /// Line 27: `sgemm` on off-band target (i, j) via f32 shadows, then
+    /// promotion of the result into the canonical f64 buffer.
+    GemmSp { i: usize, j: usize, k: usize },
+    /// Paper SSIX third level: `strsm` on a far-band tile with the
+    /// result re-quantized through bf16 storage.
+    TrsmHp { i: usize, k: usize },
+    /// Paper SSIX third level: `sgemm` with bf16-stored operands
+    /// (f32 accumulate — MXU semantics), target re-quantized.
+    GemmHp { i: usize, j: usize, k: usize },
+}
+
+impl KernelCall {
+    /// Flop count at tile size `nb` (conversion/generation tasks are
+    /// byte-bound; they report the element count as a proxy).
+    pub fn flops_at(&self, nb: usize) -> f64 {
+        match self {
+            KernelCall::Generate { .. } => (nb * nb) as f64,
+            KernelCall::PotrfDp { .. } => flops::potrf(nb),
+            KernelCall::DemoteDiag { .. } | KernelCall::DemoteTile { .. } => (nb * nb) as f64,
+            KernelCall::TrsmDp { .. }
+            | KernelCall::TrsmSp { .. }
+            | KernelCall::TrsmHp { .. } => flops::trsm(nb),
+            KernelCall::SyrkDp { .. } => flops::syrk(nb),
+            KernelCall::GemmDp { .. }
+            | KernelCall::GemmSp { .. }
+            | KernelCall::GemmHp { .. } => flops::gemm(nb),
+        }
+    }
+
+    /// Precision of the tile this task *stores* (arithmetic for Bf16
+    /// runs in f32 — see `tile::bf16`).
+    pub fn precision(&self) -> Precision {
+        match self {
+            KernelCall::TrsmSp { .. } | KernelCall::GemmSp { .. } => Precision::F32,
+            KernelCall::TrsmHp { .. } | KernelCall::GemmHp { .. } => Precision::Bf16,
+            _ => Precision::F64,
+        }
+    }
+
+    /// Short codelet name (bench tables / traces).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelCall::Generate { .. } => "matern",
+            KernelCall::PotrfDp { .. } => "dpotrf",
+            KernelCall::DemoteDiag { .. } => "dlag2s",
+            KernelCall::TrsmDp { .. } => "dtrsm",
+            KernelCall::TrsmSp { .. } => "strsm",
+            KernelCall::DemoteTile { .. } => "dconv2s",
+            KernelCall::SyrkDp { .. } => "dsyrk",
+            KernelCall::GemmDp { .. } => "dgemm",
+            KernelCall::GemmSp { .. } => "sgemm",
+            KernelCall::TrsmHp { .. } => "htrsm",
+            KernelCall::GemmHp { .. } => "hgemm",
+        }
+    }
+}
+
+/// Wrapper binding a call to its tile size so the scheduler cost models
+/// can price it without extra context.
+#[derive(Clone, Copy, Debug)]
+pub struct SizedCall {
+    pub call: KernelCall,
+    pub nb: usize,
+}
+
+impl TaskCost for SizedCall {
+    fn flops(&self) -> f64 {
+        self.call.flops_at(self.nb)
+    }
+    fn precision(&self) -> Precision {
+        self.call.precision()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sp_calls_report_f32() {
+        assert_eq!(KernelCall::GemmSp { i: 2, j: 1, k: 0 }.precision(), Precision::F32);
+        assert_eq!(KernelCall::GemmDp { i: 2, j: 1, k: 0 }.precision(), Precision::F64);
+        assert_eq!(KernelCall::PotrfDp { k: 0 }.precision(), Precision::F64);
+    }
+
+    #[test]
+    fn gemm_dominates_flops() {
+        let nb = 128;
+        let g = KernelCall::GemmDp { i: 2, j: 1, k: 0 }.flops_at(nb);
+        let p = KernelCall::PotrfDp { k: 0 }.flops_at(nb);
+        let c = KernelCall::DemoteDiag { k: 0 }.flops_at(nb);
+        assert!(g > p && p > c);
+        assert_eq!(g, 2.0 * 128f64.powi(3));
+    }
+
+    #[test]
+    fn sized_call_implements_taskcost() {
+        use crate::scheduler::TaskCost;
+        let s = SizedCall { call: KernelCall::TrsmSp { i: 3, k: 1 }, nb: 64 };
+        assert_eq!(s.flops(), 64f64.powi(3));
+        assert_eq!(s.precision(), Precision::F32);
+    }
+}

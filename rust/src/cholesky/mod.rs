@@ -1,0 +1,565 @@
+//! Tile Cholesky factorizations — the paper's contribution (SSVI-VII) and
+//! its two baselines:
+//!
+//! * [`Variant::FullDp`] — the DP(100%) reference (SSV-A).
+//! * [`Variant::MixedPrecision`] — **Algorithm 1**: DP within `diag_thick`
+//!   tiles of the diagonal, SP beyond, with the demote/promote protocol
+//!   of lines 2-27 (SSVI).
+//! * [`Variant::Dst`] — Diagonal Super-Tile / independent blocks: off-band
+//!   tiles zeroed, DP factorization of the remaining block band (SSV-B).
+//!
+//! The factorization lowers to an STF task graph ([`plan`]), executes on
+//! the scheduler through a pluggable [`TileBackend`] ([`exec`]), and the
+//! epilogue solves/log-det live in [`solve`].
+
+pub mod exec;
+pub mod kernelcall;
+pub mod plan;
+pub mod solve;
+
+pub use exec::{GenContext, TileExecutor};
+pub use kernelcall::{KernelCall, SizedCall};
+pub use plan::CholeskyPlan;
+pub use solve::{log_determinant, solve_lower, solve_lower_transposed};
+
+use crate::error::Result;
+use crate::kernels::TileBackend;
+use crate::matern::{Location, MaternParams, Metric};
+use crate::scheduler::Scheduler;
+use crate::tile::{DenseMatrix, TileId, TileMatrix};
+
+/// Factorization variant (the paper's computation methods plus the SSIX
+/// three-precision extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Full double precision — DP(100%).
+    FullDp,
+    /// Algorithm 1 — DP(x%)-SP(y%) with `diag_thick` DP diagonals.
+    MixedPrecision { diag_thick: usize },
+    /// Independent blocks / Diagonal Super-Tile — DP(x%)-Zero(y%).
+    Dst { diag_thick: usize },
+    /// Paper SSIX future work: f64 within `dp_thick`, f32 within
+    /// `sp_thick`, bf16 storage beyond (`dp_thick <= sp_thick`).
+    ThreePrecision { dp_thick: usize, sp_thick: usize },
+}
+
+impl Variant {
+    /// Storage precision of tile (i, j) under this variant.
+    pub fn tile_precision(&self, i: usize, j: usize) -> crate::tile::Precision {
+        use crate::tile::Precision::*;
+        let d = i.abs_diff(j);
+        match *self {
+            Variant::FullDp => F64,
+            Variant::MixedPrecision { diag_thick } | Variant::Dst { diag_thick } => {
+                if d < diag_thick {
+                    F64
+                } else {
+                    F32
+                }
+            }
+            Variant::ThreePrecision { dp_thick, sp_thick } => {
+                if d < dp_thick {
+                    F64
+                } else if d < sp_thick {
+                    F32
+                } else {
+                    Bf16
+                }
+            }
+        }
+    }
+
+    /// Is tile (i, j) inside the double-precision band?
+    /// (Algorithm 1's `|i - j| < diag_thick` predicate.)
+    pub fn is_dp_tile(&self, i: usize, j: usize, _p: usize) -> bool {
+        self.tile_precision(i, j) == crate::tile::Precision::F64
+    }
+
+    /// The paper's label for the variant, e.g. `DP(40%)-SP(60%)`.
+    pub fn label(&self, p: usize) -> String {
+        let frac = |t: usize| {
+            let total = (p * (p + 1) / 2) as f64;
+            let dp = (0..p)
+                .flat_map(|j| (j..p).map(move |i| (i, j)))
+                .filter(|&(i, j)| i.abs_diff(j) < t)
+                .count() as f64;
+            (dp / total * 100.0).round() as usize
+        };
+        match *self {
+            Variant::FullDp => "DP(100%)".to_string(),
+            Variant::MixedPrecision { diag_thick } => {
+                let d = frac(diag_thick);
+                format!("DP({d}%)-SP({}%)", 100 - d)
+            }
+            Variant::Dst { diag_thick } => {
+                let d = frac(diag_thick);
+                format!("DP({d}%)-Zero({}%)", 100 - d)
+            }
+            Variant::ThreePrecision { dp_thick, sp_thick } => {
+                let d = frac(dp_thick);
+                let s = frac(sp_thick) - d;
+                format!("DP({d}%)-SP({s}%)-HP({}%)", 100 - d - s)
+            }
+        }
+    }
+
+    /// Smallest `diag_thick` whose DP-tile share reaches `dp_percent` of
+    /// the lower triangle (inverse of the paper's DP(x%) label).
+    pub fn thick_for_dp_fraction(p: usize, dp_percent: f64) -> usize {
+        let total = (p * (p + 1) / 2) as f64;
+        for t in 1..=p {
+            let dp = (0..p)
+                .flat_map(|j| (j..p).map(move |i| (i, j)))
+                .filter(|&(i, j)| i.abs_diff(j) < t)
+                .count() as f64;
+            if dp / total * 100.0 >= dp_percent {
+                return t;
+            }
+        }
+        p
+    }
+}
+
+/// Prepare tile storage for a variant: demote off-band tiles into f32
+/// shadows (Mixed / ThreePrecision — Algorithm 1 lines 2-6, with bf16
+/// re-quantization for the far band) or zero them (DST).
+fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant) {
+    use crate::tile::{quantize_bf16_slice, Precision};
+    let p = tiles.p();
+    let nb = tiles.nb();
+    match variant {
+        Variant::MixedPrecision { .. } | Variant::ThreePrecision { .. } => {
+            for j in 0..p {
+                for i in j..p {
+                    match variant.tile_precision(i, j) {
+                        Precision::F64 => {}
+                        Precision::F32 => {
+                            let slot = tiles.tile_mut(TileId::new(i, j));
+                            let mut sp = vec![0.0f32; nb * nb];
+                            crate::tile::convert::demote(&slot.dp, &mut sp);
+                            slot.sp = Some(sp);
+                        }
+                        Precision::Bf16 => {
+                            let slot = tiles.tile_mut(TileId::new(i, j));
+                            let mut sp = vec![0.0f32; nb * nb];
+                            crate::tile::convert::demote(&slot.dp, &mut sp);
+                            quantize_bf16_slice(&mut sp);
+                            crate::tile::convert::promote(&sp, &mut slot.dp);
+                            slot.sp = Some(sp);
+                        }
+                    }
+                }
+            }
+        }
+        Variant::Dst { .. } => {
+            for j in 0..p {
+                for i in j..p {
+                    if !variant.is_dp_tile(i, j, p) {
+                        let slot = tiles.tile_mut(TileId::new(i, j));
+                        slot.dp.iter_mut().for_each(|x| *x = 0.0);
+                    }
+                }
+            }
+        }
+        Variant::FullDp => {}
+    }
+}
+
+/// Factor an already-populated tile matrix in place: on success the DP
+/// buffers hold the lower factor L.  Returns the executed plan (flop and
+/// task statistics for bench reports).
+pub fn factorize_tiles(
+    tiles: &mut TileMatrix,
+    variant: Variant,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<CholeskyPlan> {
+    prepare_tiles(tiles, variant);
+    let mut plan = CholeskyPlan::build(tiles.p(), tiles.nb(), variant, false);
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let executor = TileExecutor::new(tiles, backend);
+    sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
+    Ok(plan)
+}
+
+/// Generate the Matern covariance tiles and factor them inside one task
+/// graph — the per-iteration MLE path (Sigma(theta) -> L in one dataflow
+/// run, generation tasks overlapping factorization tasks).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_and_factorize(
+    tiles: &mut TileMatrix,
+    locations: &[Location],
+    theta: MaternParams,
+    metric: Metric,
+    nugget: f64,
+    variant: Variant,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<CholeskyPlan> {
+    let p = tiles.p();
+    if locations.len() != tiles.n() {
+        crate::invalid_arg!("location count {} != matrix order {}", locations.len(), tiles.n());
+    }
+    theta.validate()?;
+    let mut plan = CholeskyPlan::build(p, tiles.nb(), variant, true);
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let is_dst = matches!(variant, Variant::Dst { .. });
+    let gen = GenContext {
+        locations,
+        theta,
+        metric,
+        nugget,
+        // DST's plan never touches off-band tiles, so it needs no shadow
+        // refresh after generation; Mixed/ThreePrecision do.
+        precision_of: Box::new(move |i, j| {
+            if is_dst {
+                crate::tile::Precision::F64
+            } else {
+                variant.tile_precision(i, j)
+            }
+        }),
+    };
+    let _ = p;
+    let executor = TileExecutor::new(tiles, backend).with_generation(gen);
+    sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
+    Ok(plan)
+}
+
+/// Convenience wrapper: load a dense SPD matrix into tiles and factor it.
+pub fn factorize_dense(
+    a: &DenseMatrix,
+    nb: usize,
+    variant: Variant,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<TileMatrix> {
+    let mut tiles = TileMatrix::from_dense(a, nb)?;
+    factorize_tiles(&mut tiles, variant, backend, sched)?;
+    Ok(tiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::NativeBackend;
+    use crate::matern::{matern_matrix, MaternParams};
+    use crate::rng::Xoshiro256pp;
+    use crate::scheduler::{SchedulerConfig, SchedulingPolicy};
+
+    fn matern_locs(n: usize, seed: u64) -> Vec<Location> {
+        // locality-preserving ordering keeps covariance mass near the
+        // diagonal, which Algorithm 1 assumes ("appropriate ordering")
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut locs: Vec<Location> = (0..n)
+            .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+            .collect();
+        locs.sort_by(|a, b| (a.x + a.y).partial_cmp(&(b.x + b.y)).unwrap());
+        locs
+    }
+
+    fn matern_dense(n: usize, seed: u64, theta: &MaternParams) -> DenseMatrix {
+        let locs = matern_locs(n, seed);
+        DenseMatrix::from_vec(n, matern_matrix(&locs, theta, Metric::Euclidean, 1e-8)).unwrap()
+    }
+
+    #[test]
+    fn full_dp_matches_dense_reference() {
+        let n = 128;
+        let a = matern_dense(n, 1, &MaternParams::medium());
+        let sched = Scheduler::with_workers(4);
+        let tiles = factorize_dense(&a, 32, Variant::FullDp, &NativeBackend, &sched).unwrap();
+        let mut want = a.clone();
+        want.cholesky_in_place().unwrap();
+        let got = tiles.to_dense(true);
+        assert!(got.max_abs_diff(&want) < 1e-11, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn mixed_reconstructs_to_f32_accuracy() {
+        let n = 160;
+        let a = matern_dense(n, 2, &MaternParams::medium());
+        for thick in [1, 2, 3] {
+            let sched = Scheduler::with_workers(4);
+            let tiles = factorize_dense(
+                &a,
+                32,
+                Variant::MixedPrecision { diag_thick: thick },
+                &NativeBackend,
+                &sched,
+            )
+            .unwrap();
+            let l = tiles.to_dense(true);
+            let llt = l.matmul_nt(&l);
+            let mut err = 0.0f64;
+            for j in 0..n {
+                for i in j..n {
+                    err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+                }
+            }
+            assert!(err < 5e-5, "thick={thick}: reconstruction err {err}");
+        }
+    }
+
+    #[test]
+    fn mixed_error_shrinks_as_band_widens() {
+        let n = 160;
+        let a = matern_dense(n, 7, &MaternParams::strong());
+        let sched = Scheduler::with_workers(4);
+        let dp = factorize_dense(&a, 32, Variant::FullDp, &NativeBackend, &sched)
+            .unwrap()
+            .to_dense(true);
+        let mut errs = Vec::new();
+        for thick in [1, 3, 5] {
+            let t = factorize_dense(
+                &a,
+                32,
+                Variant::MixedPrecision { diag_thick: thick },
+                &NativeBackend,
+                &sched,
+            )
+            .unwrap()
+            .to_dense(true);
+            errs.push(t.max_abs_diff(&dp));
+        }
+        assert_eq!(errs[2], 0.0, "thick = p degenerates to DP");
+        assert!(errs[0] >= errs[1], "{errs:?}");
+    }
+
+    #[test]
+    fn mixed_full_band_bitwise_equals_full_dp() {
+        let n = 96;
+        let a = matern_dense(n, 3, &MaternParams::strong());
+        let s1 = Scheduler::with_workers(3);
+        let t1 = factorize_dense(&a, 32, Variant::FullDp, &NativeBackend, &s1).unwrap();
+        let t2 = factorize_dense(
+            &a,
+            32,
+            Variant::MixedPrecision { diag_thick: 3 },
+            &NativeBackend,
+            &s1,
+        )
+        .unwrap();
+        assert_eq!(t1.to_dense(true).max_abs_diff(&t2.to_dense(true)), 0.0);
+    }
+
+    #[test]
+    fn dst_factor_is_block_banded_and_valid() {
+        let n = 160;
+        let nb = 32;
+        let thick = 2;
+        let a = matern_dense(n, 4, &MaternParams::weak());
+        let sched = Scheduler::with_workers(4);
+        let tiles =
+            factorize_dense(&a, nb, Variant::Dst { diag_thick: thick }, &NativeBackend, &sched)
+                .unwrap();
+        let l = tiles.to_dense(true);
+        for bj in 0..(n / nb) {
+            for bi in (bj + thick)..(n / nb) {
+                for c in 0..nb {
+                    for r in 0..nb {
+                        assert_eq!(l.get(bi * nb + r, bj * nb + c), 0.0);
+                    }
+                }
+            }
+        }
+        // L L^T equals the *banded* A
+        let mut banded = a.clone();
+        for bj in 0..(n / nb) {
+            for bi in (bj + thick)..(n / nb) {
+                for c in 0..nb {
+                    for r in 0..nb {
+                        banded.set(bi * nb + r, bj * nb + c, 0.0);
+                        banded.set(bj * nb + c, bi * nb + r, 0.0);
+                    }
+                }
+            }
+        }
+        let llt = l.matmul_nt(&l);
+        let mut err = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt.get(i, j) - banded.get(i, j)).abs());
+            }
+        }
+        assert!(err < 1e-10, "DST reconstruction err {err}");
+    }
+
+    #[test]
+    fn generate_and_factorize_matches_two_step() {
+        let n = 128;
+        let nb = 32;
+        let locs = matern_locs(n, 5);
+        let theta = MaternParams::medium();
+        let sched = Scheduler::with_workers(4);
+
+        let mut tiles = TileMatrix::zeros(n, nb).unwrap();
+        generate_and_factorize(
+            &mut tiles,
+            &locs,
+            theta,
+            Metric::Euclidean,
+            1e-8,
+            Variant::MixedPrecision { diag_thick: 2 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
+
+        let a =
+            DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8))
+                .unwrap();
+        let tiles2 = factorize_dense(
+            &a,
+            nb,
+            Variant::MixedPrecision { diag_thick: 2 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
+        assert_eq!(
+            tiles.to_dense(true).max_abs_diff(&tiles2.to_dense(true)),
+            0.0,
+            "fused generation must be bit-identical to two-step"
+        );
+    }
+
+    #[test]
+    fn all_policies_produce_identical_factors() {
+        let n = 128;
+        let a = matern_dense(n, 6, &MaternParams::medium());
+        let mut results = Vec::new();
+        for policy in [
+            SchedulingPolicy::Fifo,
+            SchedulingPolicy::Lifo,
+            SchedulingPolicy::CriticalPath,
+        ] {
+            let sched =
+                Scheduler::new(SchedulerConfig { num_workers: 4, policy, trace: false });
+            let tiles = factorize_dense(
+                &a,
+                32,
+                Variant::MixedPrecision { diag_thick: 2 },
+                &NativeBackend,
+                &sched,
+            )
+            .unwrap();
+            results.push(tiles.to_dense(true));
+        }
+        assert_eq!(results[0].max_abs_diff(&results[1]), 0.0);
+        assert_eq!(results[0].max_abs_diff(&results[2]), 0.0);
+    }
+
+    #[test]
+    fn indefinite_matrix_fails_cleanly() {
+        let mut a = DenseMatrix::zeros(64);
+        for i in 0..64 {
+            a.set(i, i, if i == 40 { -1.0 } else { 2.0 });
+        }
+        let sched = Scheduler::with_workers(2);
+        match factorize_dense(&a, 16, Variant::FullDp, &NativeBackend, &sched) {
+            Err(crate::error::Error::NotPositiveDefinite { index, .. }) => assert_eq!(index, 40),
+            Err(other) => panic!("expected NotPositiveDefinite, got {other:?}"),
+            Ok(_) => panic!("expected NotPositiveDefinite, factorization succeeded"),
+        }
+    }
+
+    #[test]
+    fn three_precision_reconstructs_with_graded_error() {
+        // SSIX extension: error(DP) = 0 <= error(mixed) <= error(3-prec),
+        // and the 3-precision factor still reconstructs A to bf16-level.
+        let n = 160;
+        let a = matern_dense(n, 21, &MaternParams::medium());
+        let sched = Scheduler::with_workers(2);
+        let dp = factorize_dense(&a, 32, Variant::FullDp, &NativeBackend, &sched)
+            .unwrap()
+            .to_dense(true);
+        let mp = factorize_dense(
+            &a,
+            32,
+            Variant::MixedPrecision { diag_thick: 2 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap()
+        .to_dense(true);
+        let tp = factorize_dense(
+            &a,
+            32,
+            Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap()
+        .to_dense(true);
+        let e_mp = mp.max_abs_diff(&dp);
+        let e_tp = tp.max_abs_diff(&dp);
+        assert!(e_mp > 0.0 && e_tp >= e_mp, "mp={e_mp}, tp={e_tp}");
+        // reconstruction bounded by bf16 eps (2^-8) scale
+        let llt = tp.matmul_nt(&tp);
+        let mut err = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+            }
+        }
+        assert!(err < 0.1, "3-precision reconstruction err {err}");
+    }
+
+    #[test]
+    fn three_precision_with_wide_sp_band_equals_mixed() {
+        // sp_thick >= p: no bf16 tiles -> identical to MixedPrecision
+        let n = 128;
+        let a = matern_dense(n, 22, &MaternParams::medium());
+        let sched = Scheduler::with_workers(2);
+        let tp = factorize_dense(
+            &a,
+            32,
+            Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap()
+        .to_dense(true);
+        let mp = factorize_dense(
+            &a,
+            32,
+            Variant::MixedPrecision { diag_thick: 2 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap()
+        .to_dense(true);
+        // p = 4 and sp_thick = 4 -> all off-band tiles are F32, no Bf16
+        assert_eq!(tp.max_abs_diff(&mp), 0.0);
+    }
+
+    #[test]
+    fn three_precision_label_and_bands() {
+        let v = Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 };
+        use crate::tile::Precision::*;
+        assert_eq!(v.tile_precision(0, 0), F64);
+        assert_eq!(v.tile_precision(2, 0), F32);
+        assert_eq!(v.tile_precision(5, 0), Bf16);
+        let lbl = v.label(8);
+        assert!(lbl.contains("HP("), "{lbl}");
+    }
+
+    #[test]
+    fn variant_labels() {
+        assert_eq!(Variant::FullDp.label(20), "DP(100%)");
+        let t = Variant::thick_for_dp_fraction(20, 10.0);
+        let lbl = Variant::MixedPrecision { diag_thick: t }.label(20);
+        assert!(lbl.starts_with("DP(1"), "{lbl}");
+        assert_eq!(Variant::Dst { diag_thick: 20 }.label(20), "DP(100%)-Zero(0%)");
+    }
+
+    #[test]
+    fn thick_for_dp_fraction_monotone() {
+        let p = 16;
+        let t10 = Variant::thick_for_dp_fraction(p, 10.0);
+        let t40 = Variant::thick_for_dp_fraction(p, 40.0);
+        let t90 = Variant::thick_for_dp_fraction(p, 90.0);
+        assert!(t10 <= t40 && t40 <= t90);
+        assert!(t10 >= 1 && t90 <= p);
+    }
+}

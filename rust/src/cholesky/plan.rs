@@ -1,0 +1,382 @@
+//! Factorization planners: lower Algorithm 1 (and its DP / DST siblings)
+//! into an STF task graph.
+//!
+//! Tasks are submitted in the paper's program order; the graph module
+//! infers every RAW/WAR/WAW edge from the declared tile accesses, exactly
+//! like ExaGeoStat's `starpu_insert_task` calls.
+
+use crate::scheduler::{Access, TaskGraph};
+use crate::tile::TileId;
+
+use super::kernelcall::{KernelCall, SizedCall};
+use super::Variant;
+
+/// A lowered factorization: the task graph plus summary counters.
+#[derive(Debug)]
+pub struct CholeskyPlan {
+    pub graph: TaskGraph<SizedCall>,
+    pub p: usize,
+    pub nb: usize,
+    pub variant: Variant,
+    /// Tasks per codelet kind, for bench tables.
+    pub dp_flops: f64,
+    pub sp_flops: f64,
+}
+
+impl CholeskyPlan {
+    /// Build the plan for a `p x p` tile matrix.
+    ///
+    /// `generate = true` prepends per-tile covariance-generation tasks
+    /// (the MLE path regenerates Sigma(theta) each iteration, so
+    /// generation belongs in the same dataflow graph).
+    pub fn build(p: usize, nb: usize, variant: Variant, generate: bool) -> Self {
+        let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
+        let mut dp_flops = 0.0;
+        let mut sp_flops = 0.0;
+        let mut submit = |g: &mut TaskGraph<SizedCall>,
+                          call: KernelCall,
+                          acc: Vec<(TileId, Access)>| {
+            let sc = SizedCall { call, nb };
+            match call.precision() {
+                crate::tile::Precision::F64 => dp_flops += call.flops_at(nb),
+                // bf16 tasks *compute* in f32 (storage is what differs)
+                crate::tile::Precision::F32 | crate::tile::Precision::Bf16 => {
+                    sp_flops += call.flops_at(nb)
+                }
+            }
+            g.submit(sc, acc)
+        };
+
+        let in_band = |i: usize, j: usize| variant.is_dp_tile(i, j, p);
+        let prec = |i: usize, j: usize| variant.tile_precision(i, j);
+        let is_dst = matches!(variant, Variant::Dst { .. });
+        // in DST, off-band tiles are zero and never touched
+        let live = |i: usize, j: usize| !is_dst || in_band(i, j);
+
+        if generate {
+            for j in 0..p {
+                for i in j..p {
+                    if live(i, j) {
+                        submit(
+                            &mut graph,
+                            KernelCall::Generate { i, j },
+                            vec![(TileId::new(i, j), Access::Write)],
+                        );
+                    }
+                }
+            }
+        }
+
+        for k in 0..p {
+            submit(
+                &mut graph,
+                KernelCall::PotrfDp { k },
+                vec![(TileId::new(k, k), Access::Write)],
+            );
+
+            // line 9: demote the factored diagonal tile if any panel tile
+            // below it runs its trsm in single precision
+            let any_sp_panel = !is_dst && (k + 1..p).any(|i| !in_band(i, k));
+            if any_sp_panel {
+                submit(
+                    &mut graph,
+                    KernelCall::DemoteDiag { k },
+                    vec![(TileId::new(k, k), Access::Write)],
+                );
+            }
+
+            // which in-band panel tiles (x, k) must also exist in f32 for
+            // off-band sgemm consumers at this step (lines 20-21)
+            let mut needs_shadow = vec![false; p];
+            if !is_dst {
+                for j in (k + 1)..p {
+                    for i in (j + 1)..p {
+                        if !in_band(i, j) {
+                            if in_band(i, k) {
+                                needs_shadow[i] = true;
+                            }
+                            if in_band(j, k) {
+                                needs_shadow[j] = true;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // lines 10-17: panel solve
+            for i in (k + 1)..p {
+                if !live(i, k) {
+                    continue;
+                }
+                if in_band(i, k) {
+                    submit(
+                        &mut graph,
+                        KernelCall::TrsmDp { i, k },
+                        vec![
+                            (TileId::new(k, k), Access::Read),
+                            (TileId::new(i, k), Access::Write),
+                        ],
+                    );
+                    if needs_shadow[i] {
+                        submit(
+                            &mut graph,
+                            KernelCall::DemoteTile { i, k },
+                            vec![(TileId::new(i, k), Access::Write)],
+                        );
+                    }
+                } else {
+                    let call = if prec(i, k) == crate::tile::Precision::Bf16 {
+                        KernelCall::TrsmHp { i, k }
+                    } else {
+                        KernelCall::TrsmSp { i, k }
+                    };
+                    submit(
+                        &mut graph,
+                        call,
+                        vec![
+                            (TileId::new(k, k), Access::Read),
+                            (TileId::new(i, k), Access::Write),
+                        ],
+                    );
+                }
+            }
+
+            // lines 18-30: trailing update
+            for j in (k + 1)..p {
+                if live(j, k) {
+                    submit(
+                        &mut graph,
+                        KernelCall::SyrkDp { j, k },
+                        vec![
+                            (TileId::new(j, k), Access::Read),
+                            (TileId::new(j, j), Access::Write),
+                        ],
+                    );
+                }
+                for i in (j + 1)..p {
+                    if !live(i, j) || !live(i, k) || !live(j, k) {
+                        continue;
+                    }
+                    let call = match prec(i, j) {
+                        crate::tile::Precision::F64 => KernelCall::GemmDp { i, j, k },
+                        crate::tile::Precision::F32 => KernelCall::GemmSp { i, j, k },
+                        crate::tile::Precision::Bf16 => KernelCall::GemmHp { i, j, k },
+                    };
+                    submit(
+                        &mut graph,
+                        call,
+                        vec![
+                            (TileId::new(i, k), Access::Read),
+                            (TileId::new(j, k), Access::Read),
+                            (TileId::new(i, j), Access::Write),
+                        ],
+                    );
+                }
+            }
+        }
+
+        Self { graph, p, nb, variant, dp_flops, sp_flops }
+    }
+
+    /// Total useful flops in the plan.
+    pub fn total_flops(&self) -> f64 {
+        self.dp_flops + self.sp_flops
+    }
+
+    /// Fraction of flops running in single precision — the paper's
+    /// DP(x%)-SP(y%) label computes from the *tile* fractions; this is
+    /// the flop-weighted analog used in bench reports.
+    pub fn sp_flop_fraction(&self) -> f64 {
+        if self.total_flops() == 0.0 {
+            0.0
+        } else {
+            self.sp_flops / self.total_flops()
+        }
+    }
+
+    /// Tile fractions (dp_tiles, sp_tiles) of the lower triangle — the
+    /// paper's DP(x%)-SP(y%) percentages.
+    pub fn tile_fractions(&self) -> (f64, f64) {
+        let p = self.p;
+        let total = (p * (p + 1) / 2) as f64;
+        let dp = (0..p)
+            .flat_map(|j| (j..p).map(move |i| (i, j)))
+            .filter(|&(i, j)| self.variant.is_dp_tile(i, j, p))
+            .count() as f64;
+        (dp / total, (total - dp) / total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_kind(plan: &CholeskyPlan, pred: impl Fn(&KernelCall) -> bool) -> usize {
+        plan.graph.tasks().iter().filter(|t| pred(&t.payload.call)).count()
+    }
+
+    #[test]
+    fn full_dp_task_counts_match_formula() {
+        // p potrf, p(p-1)/2 trsm, p(p-1)/2 syrk, p(p-1)(p-2)/6 gemm
+        let p = 6;
+        let plan = CholeskyPlan::build(p, 32, Variant::FullDp, false);
+        assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::PotrfDp { .. })), p);
+        assert_eq!(
+            count_kind(&plan, |c| matches!(c, KernelCall::TrsmDp { .. })),
+            p * (p - 1) / 2
+        );
+        assert_eq!(
+            count_kind(&plan, |c| matches!(c, KernelCall::SyrkDp { .. })),
+            p * (p - 1) / 2
+        );
+        assert_eq!(
+            count_kind(&plan, |c| matches!(c, KernelCall::GemmDp { .. })),
+            p * (p - 1) * (p - 2) / 6
+        );
+        assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::TrsmSp { .. })), 0);
+        assert_eq!(plan.sp_flops, 0.0);
+    }
+
+    #[test]
+    fn mixed_moves_offband_work_to_sp() {
+        let plan = CholeskyPlan::build(8, 32, Variant::MixedPrecision { diag_thick: 2 }, false);
+        let sp_gemm = count_kind(&plan, |c| matches!(c, KernelCall::GemmSp { .. }));
+        let dp_gemm = count_kind(&plan, |c| matches!(c, KernelCall::GemmDp { .. }));
+        assert!(sp_gemm > dp_gemm, "off-band gemms dominate at thick=2: {sp_gemm} vs {dp_gemm}");
+        assert!(plan.sp_flop_fraction() > 0.4);
+        // diagonal band fractions: p=8, t=2 -> dp tiles = 8 + 7 = 15 of 36
+        let (dpf, spf) = plan.tile_fractions();
+        assert!((dpf - 15.0 / 36.0).abs() < 1e-12);
+        assert!((spf - 21.0 / 36.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_with_full_band_equals_full_dp() {
+        let a = CholeskyPlan::build(5, 16, Variant::MixedPrecision { diag_thick: 5 }, false);
+        let b = CholeskyPlan::build(5, 16, Variant::FullDp, false);
+        assert_eq!(a.graph.len(), b.graph.len());
+        assert_eq!(a.sp_flops, 0.0);
+    }
+
+    #[test]
+    fn dst_prunes_offband_tasks() {
+        let full = CholeskyPlan::build(8, 32, Variant::FullDp, false);
+        let dst = CholeskyPlan::build(8, 32, Variant::Dst { diag_thick: 2 }, false);
+        assert!(dst.graph.len() < full.graph.len() / 2);
+        // no sp work in DST
+        assert_eq!(dst.sp_flops, 0.0);
+        // no task touches an off-band tile
+        for t in dst.graph.tasks() {
+            for (tile, _) in &t.accesses {
+                assert!(tile.i - tile.j < 2, "off-band tile {tile:?} in DST plan");
+            }
+        }
+    }
+
+    #[test]
+    fn generation_tasks_precede_factorization() {
+        let plan = CholeskyPlan::build(4, 16, Variant::FullDp, true);
+        let n_gen = count_kind(&plan, |c| matches!(c, KernelCall::Generate { .. }));
+        assert_eq!(n_gen, 10);
+        // the potrf on (0,0) must depend on its generation task
+        let gen00 = plan
+            .graph
+            .tasks()
+            .iter()
+            .position(|t| t.payload.call == KernelCall::Generate { i: 0, j: 0 })
+            .unwrap();
+        let potrf0 = plan
+            .graph
+            .tasks()
+            .iter()
+            .position(|t| t.payload.call == KernelCall::PotrfDp { k: 0 })
+            .unwrap();
+        assert!(plan.graph.task(gen00).successors.contains(&potrf0));
+    }
+
+    #[test]
+    fn demote_tasks_emitted_only_when_needed() {
+        // thick = p: everything in band, no demotes at all
+        let plan = CholeskyPlan::build(6, 16, Variant::MixedPrecision { diag_thick: 6 }, false);
+        assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::DemoteDiag { .. })), 0);
+        assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::DemoteTile { .. })), 0);
+        // thick = 1: every off-diagonal tile is SP; diag demotes appear
+        // wherever a panel has SP tiles
+        let plan1 = CholeskyPlan::build(6, 16, Variant::MixedPrecision { diag_thick: 1 }, false);
+        assert_eq!(count_kind(&plan1, |c| matches!(c, KernelCall::DemoteDiag { .. })), 5);
+    }
+
+    #[test]
+    fn fig2_first_iteration_kernel_sequence() {
+        // Paper Fig. 2: 5x5 tile matrix, diag_thick = 2, first outer
+        // iteration (k = 0).  The exact codelet order must be:
+        //   dpotrf(0,0); dlag2s(0,0);                       [Fig 2b, 2c]
+        //   dtrsm(1,0);  strsm(2,0); strsm(3,0); strsm(4,0) [Fig 2d, 2e]
+        //   dsyrk(1,1) ... then dgemm on band targets / sgemm off band
+        //   with dconv2s demotes of band panels feeding sgemms  [2f-2i]
+        let plan = CholeskyPlan::build(5, 16, Variant::MixedPrecision { diag_thick: 2 }, false);
+        let calls: Vec<KernelCall> = plan.graph.tasks().iter().map(|t| t.payload.call).collect();
+        // prefix of step k = 0
+        assert_eq!(calls[0], KernelCall::PotrfDp { k: 0 });
+        assert_eq!(calls[1], KernelCall::DemoteDiag { k: 0 });
+        assert_eq!(calls[2], KernelCall::TrsmDp { i: 1, k: 0 });
+        // tile (1,0) is in band but feeds sgemm targets (2,1)? |2-1|=1 <2
+        // -> dgemm; (3,1): |3-1|=2 -> sgemm reads (3,0) sp and (1,0) sp!
+        // so a DemoteTile(1,0) must follow the dtrsm before step k ends.
+        let k0_end = calls
+            .iter()
+            .position(|c| matches!(c, KernelCall::PotrfDp { k: 1 }))
+            .unwrap();
+        let k0 = &calls[..k0_end];
+        assert!(k0.contains(&KernelCall::DemoteTile { i: 1, k: 0 }));
+        for i in 2..5 {
+            assert!(k0.contains(&KernelCall::TrsmSp { i, k: 0 }), "strsm({i},0)");
+        }
+        for j in 1..5 {
+            assert!(k0.contains(&KernelCall::SyrkDp { j, k: 0 }), "dsyrk({j},{j})");
+        }
+        // gemm targets at k=0: (i,j) with 0 < j < i: band iff |i-j| < 2
+        assert!(k0.contains(&KernelCall::GemmDp { i: 2, j: 1, k: 0 }));
+        assert!(k0.contains(&KernelCall::GemmSp { i: 3, j: 1, k: 0 }));
+        assert!(k0.contains(&KernelCall::GemmSp { i: 4, j: 2, k: 0 }));
+        assert!(k0.contains(&KernelCall::GemmDp { i: 4, j: 3, k: 0 }));
+        // nothing in k0 touches a tile column > 0 as a panel
+        for c in k0 {
+            if let KernelCall::GemmDp { k, .. } | KernelCall::GemmSp { k, .. } = c {
+                assert_eq!(*k, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn three_precision_plan_emits_hp_calls() {
+        let plan = CholeskyPlan::build(
+            8,
+            16,
+            Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 },
+            false,
+        );
+        let hp_gemm = count_kind(&plan, |c| matches!(c, KernelCall::GemmHp { .. }));
+        let sp_gemm = count_kind(&plan, |c| matches!(c, KernelCall::GemmSp { .. }));
+        let hp_trsm = count_kind(&plan, |c| matches!(c, KernelCall::TrsmHp { .. }));
+        assert!(hp_gemm > 0 && sp_gemm > 0 && hp_trsm > 0);
+        // far tiles (|i-j| >= 3) are the HP ones
+        for t in plan.graph.tasks() {
+            if let KernelCall::GemmHp { i, j, .. } = t.payload.call {
+                assert!(i - j >= 3, "HP gemm on near tile ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_dags_with_forward_edges() {
+        for variant in [
+            Variant::FullDp,
+            Variant::MixedPrecision { diag_thick: 2 },
+            Variant::Dst { diag_thick: 3 },
+        ] {
+            let plan = CholeskyPlan::build(10, 8, variant, true);
+            plan.graph.assert_forward_edges();
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Run configuration: a small key = value config format plus CLI-flag
+//! overrides, so experiments are reproducible from checked-in files
+//! (`configs/*.conf`) instead of shell history.  (No serde/toml in the
+//! offline crate set — the format is a deliberately minimal subset:
+//! comments with `#`, one `key = value` per line.)
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::cholesky::Variant;
+use crate::error::{Error, Result};
+use crate::matern::Metric;
+
+/// Everything a `mpchol` run needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Number of sites.
+    pub n: usize,
+    /// Tile size.
+    pub nb: usize,
+    /// Factorization variant.
+    pub variant: Variant,
+    /// RNG seed for data generation.
+    pub seed: u64,
+    /// Generating Matern parameters (variance, range, smoothness).
+    pub theta: [f64; 3],
+    /// Distance metric.
+    pub metric: Metric,
+    /// Diagonal nugget.
+    pub nugget: f64,
+    /// Worker threads (0 = all).
+    pub workers: usize,
+    /// Backend: "native" or "pjrt".
+    pub backend: String,
+    /// Optimizer evaluation budget.
+    pub max_evals: usize,
+    /// Optimizer tolerance (paper SSVIII.D.2 uses 1e-3).
+    pub ftol: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            n: 1024,
+            nb: 64,
+            variant: Variant::MixedPrecision { diag_thick: 2 },
+            seed: 42,
+            theta: [1.0, 0.1, 0.5],
+            metric: Metric::Euclidean,
+            nugget: 1e-8,
+            workers: 0,
+            backend: "native".into(),
+            max_evals: 500,
+            ftol: 1e-3,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse the `key = value` format; unknown keys are errors (typos in
+    /// experiment configs must not silently fall back to defaults).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: HashMap<String, String> = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::InvalidArgument(format!("config line {}: expected key = value, got {raw:?}", lineno + 1))
+            })?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Self::from_map(&kv)
+    }
+
+    /// Build from a string map (shared by the file parser and the CLI
+    /// flag layer).  Starts from `Default` and applies every key.
+    pub fn from_map(kv: &HashMap<String, String>) -> Result<Self> {
+        let mut c = Self::default();
+        c.apply(kv)?;
+        Ok(c)
+    }
+
+    /// Apply overrides on top of the current values.
+    pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<()> {
+        // variant assembly needs thick values seen in the same map
+        let mut variant_name: Option<String> = None;
+        let mut diag_thick: Option<usize> = None;
+        let mut sp_thick: Option<usize> = None;
+
+        fn parse<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
+            v.parse().map_err(|_| {
+                Error::InvalidArgument(format!("config key {k}: cannot parse {v:?}"))
+            })
+        }
+
+        for (k, v) in kv {
+            match k.as_str() {
+                "n" => self.n = parse(k, v)?,
+                "nb" => self.nb = parse(k, v)?,
+                "seed" => self.seed = parse(k, v)?,
+                "variance" => self.theta[0] = parse(k, v)?,
+                "range" => self.theta[1] = parse(k, v)?,
+                "smoothness" => self.theta[2] = parse(k, v)?,
+                "nugget" => self.nugget = parse(k, v)?,
+                "workers" => self.workers = parse(k, v)?,
+                "max_evals" => self.max_evals = parse(k, v)?,
+                "ftol" => self.ftol = parse(k, v)?,
+                "backend" => match v.as_str() {
+                    "native" | "pjrt" => self.backend = v.clone(),
+                    other => {
+                        return Err(Error::InvalidArgument(format!(
+                            "backend must be native|pjrt, got {other:?}"
+                        )))
+                    }
+                },
+                "metric" => {
+                    self.metric = match v.as_str() {
+                        "euclidean" => Metric::Euclidean,
+                        "haversine" => Metric::Haversine,
+                        other => {
+                            return Err(Error::InvalidArgument(format!(
+                                "metric must be euclidean|haversine, got {other:?}"
+                            )))
+                        }
+                    }
+                }
+                "variant" => variant_name = Some(v.clone()),
+                "diag_thick" | "dp_thick" => diag_thick = Some(parse(k, v)?),
+                "sp_thick" => sp_thick = Some(parse(k, v)?),
+                other => {
+                    return Err(Error::InvalidArgument(format!(
+                        "unknown config key {other:?}"
+                    )))
+                }
+            }
+        }
+
+        if variant_name.is_some() || diag_thick.is_some() || sp_thick.is_some() {
+            let name = variant_name.unwrap_or_else(|| {
+                match self.variant {
+                    Variant::FullDp => "dp",
+                    Variant::MixedPrecision { .. } => "mp",
+                    Variant::Dst { .. } => "dst",
+                    Variant::ThreePrecision { .. } => "3p",
+                }
+                .to_string()
+            });
+            let t = diag_thick.unwrap_or(2);
+            self.variant = match name.as_str() {
+                "dp" => Variant::FullDp,
+                "mp" => Variant::MixedPrecision { diag_thick: t },
+                "dst" => Variant::Dst { diag_thick: t },
+                "3p" => Variant::ThreePrecision {
+                    dp_thick: t,
+                    sp_thick: sp_thick.unwrap_or(t * 2),
+                },
+                other => {
+                    return Err(Error::InvalidArgument(format!(
+                        "variant must be dp|mp|dst|3p, got {other:?}"
+                    )))
+                }
+            };
+        }
+        self.validate()
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.nb == 0 || self.n % self.nb != 0 {
+            crate::invalid_arg!("n = {} must be a positive multiple of nb = {}", self.n, self.nb);
+        }
+        if let Variant::ThreePrecision { dp_thick, sp_thick } = self.variant {
+            if dp_thick > sp_thick {
+                crate::invalid_arg!("3p requires dp_thick <= sp_thick ({dp_thick} > {sp_thick})");
+            }
+        }
+        if !(self.theta.iter().all(|&x| x > 0.0)) {
+            crate::invalid_arg!("theta components must be positive: {:?}", self.theta);
+        }
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = RunConfig::parse(
+            "# experiment: fig4-style run\n\
+             n = 4096\n\
+             nb = 128   # tuned per machine\n\
+             variant = mp\n\
+             diag_thick = 3\n\
+             range = 0.3\n\
+             backend = pjrt\n",
+        )
+        .unwrap();
+        assert_eq!(c.n, 4096);
+        assert_eq!(c.nb, 128);
+        assert_eq!(c.variant, Variant::MixedPrecision { diag_thick: 3 });
+        assert_eq!(c.theta[1], 0.3);
+        assert_eq!(c.backend, "pjrt");
+        // untouched keys keep defaults
+        assert_eq!(c.seed, 42);
+    }
+
+    #[test]
+    fn three_precision_roundtrip() {
+        let c = RunConfig::parse("variant = 3p\ndp_thick = 1\nsp_thick = 4\n").unwrap();
+        assert_eq!(c.variant, Variant::ThreePrecision { dp_thick: 1, sp_thick: 4 });
+        assert!(RunConfig::parse("variant = 3p\ndp_thick = 5\nsp_thick = 2\n").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(RunConfig::parse("tile_size = 64\n").is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::parse("n = many\n").is_err());
+        assert!(RunConfig::parse("variant = quadruple\n").is_err());
+        assert!(RunConfig::parse("backend = cuda\n").is_err());
+        assert!(RunConfig::parse("n = 100\nnb = 64\n").is_err());
+        assert!(RunConfig::parse("range = -0.1\n").is_err());
+    }
+
+    #[test]
+    fn overrides_layer_on_top() {
+        let mut c = RunConfig::parse("n = 2048\nvariant = dst\ndiag_thick = 4\n").unwrap();
+        let mut over = HashMap::new();
+        over.insert("nb".to_string(), "256".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(c.n, 2048);
+        assert_eq!(c.nb, 256);
+        assert_eq!(c.variant, Variant::Dst { diag_thick: 4 });
+    }
+
+    #[test]
+    fn missing_equals_is_an_error() {
+        assert!(RunConfig::parse("n 2048\n").is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Synthetic data generation — the ExaGeoStat data-generator substrate
+//! (paper SSVIII.B.1) plus the WRF wind-dataset stand-in (SSVIII.B.2).
+//!
+//! A Gaussian random field sample at sites `s_1..s_n` is `Z = L eps`
+//! where `Sigma(theta_0) = L L^T` and `eps ~ N(0, I)`.  Sites are drawn
+//! uniformly in the *open* unit square (the paper's ]0,1[^2) and sorted
+//! in **Morton (Z-curve) order** — the "appropriate ordering" Algorithm 1
+//! requires so that nearby tiles hold nearby sites and covariance mass
+//! concentrates around the diagonal.
+
+pub mod morton;
+
+pub use morton::{morton_key, morton_sort};
+
+use crate::cholesky::{self, Variant};
+use crate::error::Result;
+use crate::kernels::NativeBackend;
+use crate::matern::{Location, MaternParams, Metric};
+use crate::rng::Xoshiro256pp;
+use crate::scheduler::Scheduler;
+use crate::tile::TileMatrix;
+
+/// Synthetic-field configuration.
+#[derive(Clone, Debug)]
+pub struct FieldConfig {
+    /// Number of sites (must be a multiple of `gen_nb`).
+    pub n: usize,
+    /// True parameter vector theta_0.
+    pub theta: MaternParams,
+    pub seed: u64,
+    /// Diagonal nugget for the sampling factorization.
+    pub nugget: f64,
+    /// Tile size used by the sampling factorization.
+    pub gen_nb: usize,
+    /// Worker threads for the sampling factorization (0 = all).
+    pub num_workers: usize,
+}
+
+impl Default for FieldConfig {
+    fn default() -> Self {
+        Self {
+            n: 1024,
+            theta: MaternParams::medium(),
+            seed: 0,
+            nugget: 1e-8,
+            gen_nb: 64,
+            num_workers: 0,
+        }
+    }
+}
+
+/// A simulated Gaussian random field: Morton-ordered sites + measurements.
+#[derive(Clone, Debug)]
+pub struct SyntheticField {
+    pub locations: Vec<Location>,
+    pub values: Vec<f64>,
+    /// The generating parameters (ground truth for estimation studies).
+    pub theta: MaternParams,
+}
+
+impl SyntheticField {
+    /// Sample a field: uniform sites, Morton ordering, exact simulation
+    /// through the full-DP tile factorization of Sigma(theta_0).
+    pub fn generate(cfg: &FieldConfig) -> Result<Self> {
+        if cfg.n == 0 || cfg.n % cfg.gen_nb != 0 {
+            crate::invalid_arg!(
+                "n={} must be a positive multiple of gen_nb={}",
+                cfg.n,
+                cfg.gen_nb
+            );
+        }
+        cfg.theta.validate()?;
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let mut locations: Vec<Location> = (0..cfg.n)
+            .map(|_| Location::new(rng.uniform_open(0.0, 1.0), rng.uniform_open(0.0, 1.0)))
+            .collect();
+        morton_sort(&mut locations);
+        let values =
+            sample_at(&locations, &cfg.theta, cfg.nugget, cfg.gen_nb, cfg.num_workers, &mut rng)?;
+        Ok(Self { locations, values, theta: cfg.theta })
+    }
+}
+
+/// Sample one GRF realization at fixed (already ordered) locations.
+pub fn sample_at(
+    locations: &[Location],
+    theta: &MaternParams,
+    nugget: f64,
+    nb: usize,
+    num_workers: usize,
+    rng: &mut Xoshiro256pp,
+) -> Result<Vec<f64>> {
+    let n = locations.len();
+    let workers = if num_workers == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        num_workers
+    };
+    let sched = Scheduler::with_workers(workers);
+    let mut tiles = TileMatrix::zeros(n, nb)?;
+    cholesky::generate_and_factorize(
+        &mut tiles,
+        locations,
+        *theta,
+        Metric::Euclidean,
+        nugget,
+        Variant::FullDp,
+        &NativeBackend,
+        &sched,
+    )?;
+    let mut eps = vec![0.0; n];
+    rng.fill_standard_normal(&mut eps);
+    cholesky::solve::lower_matvec(&tiles, &eps)
+}
+
+/// Wind-dataset stand-in configuration (paper Table I substitution — see
+/// DESIGN.md SS3): four geographic subregions, each a stationary Matern
+/// field with its own parameters (values chosen to mirror Table I's
+/// fitted smoothness/variance ordering, with ranges rescaled to the unit
+/// square).
+#[derive(Clone, Debug)]
+pub struct WindFieldConfig {
+    /// Sites per region (multiple of `gen_nb`).
+    pub n_per_region: usize,
+    pub seed: u64,
+    pub gen_nb: usize,
+    pub num_workers: usize,
+}
+
+impl Default for WindFieldConfig {
+    fn default() -> Self {
+        Self { n_per_region: 1024, seed: 2017_09_01, gen_nb: 64, num_workers: 0 }
+    }
+}
+
+/// One simulated subregion of the wind dataset.
+#[derive(Clone, Debug)]
+pub struct WindRegion {
+    pub region: usize,
+    pub field: SyntheticField,
+}
+
+/// Per-region Matern parameters (variance, range, smoothness).  The
+/// variance/smoothness levels follow Table I's fits (R2 most correlated,
+/// R3 smoothest); ranges are unit-square rescaled.
+pub fn wind_region_params(region: usize) -> MaternParams {
+    match region {
+        1 => MaternParams::new(9.0, 0.25, 1.0),
+        2 => MaternParams::new(12.5, 0.28, 1.27),
+        3 => MaternParams::new(10.8, 0.19, 1.42),
+        4 => MaternParams::new(12.4, 0.20, 1.12),
+        _ => panic!("wind regions are 1..=4"),
+    }
+}
+
+/// Simulate all four regions.
+pub fn generate_wind_regions(cfg: &WindFieldConfig) -> Result<Vec<WindRegion>> {
+    (1..=4)
+        .map(|region| {
+            let field = SyntheticField::generate(&FieldConfig {
+                n: cfg.n_per_region,
+                theta: wind_region_params(region),
+                seed: cfg.seed.wrapping_add(region as u64 * 7919),
+                nugget: 1e-6,
+                gen_nb: cfg.gen_nb,
+                num_workers: cfg.num_workers,
+            })?;
+            Ok(WindRegion { region, field })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_has_requested_size_and_unit_square_sites() {
+        let f = SyntheticField::generate(&FieldConfig { n: 256, ..Default::default() }).unwrap();
+        assert_eq!(f.locations.len(), 256);
+        assert_eq!(f.values.len(), 256);
+        assert!(f
+            .locations
+            .iter()
+            .all(|l| l.x > 0.0 && l.x < 1.0 && l.y > 0.0 && l.y < 1.0));
+    }
+
+    #[test]
+    fn field_is_deterministic_in_seed() {
+        let cfg = FieldConfig { n: 128, seed: 9, ..Default::default() };
+        let a = SyntheticField::generate(&cfg).unwrap();
+        let b = SyntheticField::generate(&cfg).unwrap();
+        assert_eq!(a.values, b.values);
+        let c = SyntheticField::generate(&FieldConfig { seed: 10, ..cfg }).unwrap();
+        assert_ne!(a.values, c.values);
+    }
+
+    #[test]
+    fn sample_variance_matches_theta1() {
+        // marginal variance of the field is theta_1; with n = 1024 weakly
+        // correlated sites the sample variance is a serviceable check
+        let f = SyntheticField::generate(&FieldConfig {
+            n: 1024,
+            theta: MaternParams::new(2.0, 0.03, 0.5),
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
+        let mean = f.values.iter().sum::<f64>() / 1024.0;
+        let var = f.values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / 1024.0;
+        assert!((var - 2.0).abs() < 0.6, "sample var {var}");
+    }
+
+    #[test]
+    fn stronger_correlation_smooths_the_field() {
+        // mean squared increment between Morton-consecutive (spatially
+        // adjacent) sites is smaller for strongly correlated fields
+        let mk = |range| {
+            SyntheticField::generate(&FieldConfig {
+                n: 512,
+                theta: MaternParams::new(1.0, range, 0.5),
+                seed: 11,
+                ..Default::default()
+            })
+            .unwrap()
+        };
+        let rough = mk(0.03);
+        let smooth = mk(0.30);
+        let msi = |f: &SyntheticField| {
+            f.values.windows(2).map(|w| (w[1] - w[0]).powi(2)).sum::<f64>() / 511.0
+        };
+        assert!(msi(&smooth) < msi(&rough), "{} !< {}", msi(&smooth), msi(&rough));
+    }
+
+    #[test]
+    fn wind_regions_have_distinct_parameters() {
+        let regions =
+            generate_wind_regions(&WindFieldConfig { n_per_region: 128, ..Default::default() })
+                .unwrap();
+        assert_eq!(regions.len(), 4);
+        for w in &regions {
+            assert_eq!(w.field.locations.len(), 128);
+        }
+        assert_ne!(regions[0].field.theta, regions[1].field.theta);
+    }
+
+    #[test]
+    fn rejects_bad_n() {
+        assert!(SyntheticField::generate(&FieldConfig {
+            n: 100,
+            gen_nb: 64,
+            ..Default::default()
+        })
+        .is_err());
+    }
+}

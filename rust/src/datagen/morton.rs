@@ -1,0 +1,82 @@
+//! Morton (Z-order) curve ordering of 2-D sites.
+//!
+//! The covariance matrix only has its "most valuable information around
+//! the diagonal" (paper SSVI) if consecutive indices are spatial
+//! neighbours.  ExaGeoStat orders sites along a Z-curve before building
+//! Sigma; we do the same: quantize each coordinate to 16 bits, interleave
+//! the bits, sort by the resulting 32-bit key.
+
+use crate::matern::Location;
+
+/// Spread the low 16 bits of `v` into even bit positions.
+#[inline]
+fn part1by1(v: u32) -> u32 {
+    let mut x = v & 0x0000_ffff;
+    x = (x | (x << 8)) & 0x00ff_00ff;
+    x = (x | (x << 4)) & 0x0f0f_0f0f;
+    x = (x | (x << 2)) & 0x3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555;
+    x
+}
+
+/// Morton key of a point assumed in the unit square (clamped otherwise).
+pub fn morton_key(l: Location) -> u32 {
+    let q = |v: f64| ((v.clamp(0.0, 1.0) * 65535.0) as u32).min(65535);
+    part1by1(q(l.x)) | (part1by1(q(l.y)) << 1)
+}
+
+/// Sort sites in Morton order (stable, so equal keys keep their order).
+pub fn morton_sort(locs: &mut [Location]) {
+    locs.sort_by_key(|&l| morton_key(l));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matern::Metric;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn key_interleaves_bits() {
+        // (1, 0) in quantized space -> x bits in even positions
+        assert_eq!(part1by1(0b11), 0b0101);
+        let k = morton_key(Location::new(0.0, 0.0));
+        assert_eq!(k, 0);
+        let kx = morton_key(Location::new(1.0, 0.0));
+        let ky = morton_key(Location::new(0.0, 1.0));
+        assert_eq!(ky, kx << 1);
+    }
+
+    #[test]
+    fn sorting_improves_neighbour_locality() {
+        // average distance between consecutive sites must drop a lot
+        // after Morton sorting — that is the entire point of the order.
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        let mut locs: Vec<Location> = (0..2048)
+            .map(|_| Location::new(r.uniform(), r.uniform()))
+            .collect();
+        let avg_step = |ls: &[Location]| {
+            ls.windows(2)
+                .map(|w| Metric::Euclidean.distance(w[0], w[1]))
+                .sum::<f64>()
+                / (ls.len() - 1) as f64
+        };
+        let before = avg_step(&locs);
+        morton_sort(&mut locs);
+        let after = avg_step(&locs);
+        assert!(after < before / 5.0, "before={before}, after={after}");
+    }
+
+    #[test]
+    fn sort_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(2);
+        let locs: Vec<Location> =
+            (0..100).map(|_| Location::new(r.uniform(), r.uniform())).collect();
+        let mut sorted = locs.clone();
+        morton_sort(&mut sorted);
+        assert_eq!(sorted.len(), locs.len());
+        let sum_before: f64 = locs.iter().map(|l| l.x + l.y).sum();
+        let sum_after: f64 = sorted.iter().map(|l| l.x + l.y).sum();
+        assert!((sum_before - sum_after).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,77 @@
+//! Crate-wide error type.
+//!
+//! Everything user-facing returns [`Result`]; internal invariants that can
+//! only break through a bug in this crate use `debug_assert!`/`panic!`.
+
+use thiserror::Error;
+
+/// Unified error for the mpcholesky crate.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Input shapes/sizes are inconsistent (e.g. `n` not divisible by `nb`).
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// A diagonal tile lost positive definiteness during factorization —
+    /// the failure mode the paper's SSVIII.D.1 describes for too-aggressive
+    /// precision reduction (e.g. the excluded SP(100%) variant).
+    #[error("matrix is not positive definite (pivot {pivot} at global index {index})")]
+    NotPositiveDefinite {
+        /// Value of the offending pivot (<= 0 or NaN).
+        pivot: f64,
+        /// Global row/column index of the pivot.
+        index: usize,
+    },
+
+    /// The MLE optimizer failed to make progress.
+    #[error("optimization failed: {0}")]
+    Optimization(String),
+
+    /// Artifact manifest / HLO loading problems (PJRT backend).
+    #[error("runtime artifact error: {0}")]
+    Artifact(String),
+
+    /// Underlying XLA/PJRT failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Filesystem-level failure (artifact files, trace dumps, CSV output).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Helper: bail with [`Error::InvalidArgument`].
+#[macro_export]
+macro_rules! invalid_arg {
+    ($($t:tt)*) => {
+        return Err($crate::error::Error::InvalidArgument(format!($($t)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = Error::NotPositiveDefinite { pivot: -1.5, index: 42 };
+        let s = e.to_string();
+        assert!(s.contains("-1.5") && s.contains("42"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,491 @@
+//! Native tile BLAS: the four Level-3 codelets Algorithm 1 schedules
+//! (`potrf`, `trsm`, `syrk`, `gemm`), generic over f32/f64.
+//!
+//! These replace MKL/cuBLAS from the paper's testbed.  Layout is
+//! column-major `nb x nb` tiles.  The GEMM/SYRK inner loops are written as
+//! stride-1 axpy sweeps so LLVM auto-vectorizes them; the perf pass
+//! (EXPERIMENTS.md SSPerf) iterates on register blocking from this
+//! baseline.  What matters for reproducing the paper is that the f32
+//! instantiation genuinely runs ~2x the f64 throughput (half the memory
+//! traffic, twice the SIMD lanes) — that hardware property is what the
+//! mixed-precision algorithm converts into its 1.6x speedup.
+
+use crate::error::{Error, Result};
+
+/// Scalar types the tile kernels are instantiated at.
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialOrd
+    + Send
+    + Sync
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + 'static
+{
+    const ZERO: Self;
+    fn sqrt(self) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    #[inline]
+    fn sqrt(self) -> f64 {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    #[inline]
+    fn sqrt(self) -> f32 {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// `C -= A * B^T` on column-major `nb x nb` tiles
+/// (`dgemm`/`sgemm` with alpha = -1, beta = 1, transB = T).
+///
+/// Dispatches to the register-blocked microkernel when the tile size
+/// permits (nb % 8 == 0), else falls back to the stride-1 axpy form.
+pub fn gemm<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    debug_assert!(c.len() == nb * nb && a.len() == nb * nb && b.len() == nb * nb);
+    if nb % MR == 0 && nb % NR == 0 {
+        gemm_blocked(c, a, b, nb);
+    } else {
+        gemm_simple(c, a, b, nb);
+    }
+}
+
+/// Reference loop-order k-j-i form (any nb; also the test oracle for the
+/// blocked kernel).
+pub fn gemm_simple<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    for k in 0..nb {
+        let acol = &a[k * nb..(k + 1) * nb];
+        for j in 0..nb {
+            // B^T(k, j) = B(j, k)
+            let bjk = b[j + k * nb];
+            if bjk.to_f64() != 0.0 {
+                let ccol = &mut c[j * nb..(j + 1) * nb];
+                for i in 0..nb {
+                    ccol[i] = ccol[i] - acol[i] * bjk;
+                }
+            }
+        }
+    }
+}
+
+/// Microkernel rows (vector dimension) and columns (register reuse).
+const MR: usize = 8;
+const NR: usize = 4;
+
+/// k-block depth: bounds the live A/B slab at MR x KC + KC x NR per
+/// microkernel sweep so large tiles stay cache-resident (SSPerf iter 2).
+const KC: usize = 64;
+
+/// Register-blocked GEMM: each MR x NR block of C is accumulated in
+/// registers across a KC-deep k sweep, so C traffic drops to
+/// O(nb^2 * nb/KC) and each A load is reused NR times.  The i-dimension
+/// is contiguous, which LLVM vectorizes.  (SSPerf iterations 1-2 — see
+/// EXPERIMENTS.md.)
+fn gemm_blocked<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    for kb in (0..nb).step_by(KC) {
+        let kend = (kb + KC).min(nb);
+        for jb in (0..nb).step_by(NR) {
+            for ib in (0..nb).step_by(MR) {
+                // acc[jj][ii] = sum_{k in block} A(ib+ii, k) * B(jb+jj, k)
+                let mut acc = [[T::ZERO; MR]; NR];
+                for k in kb..kend {
+                    // SAFETY: ib+MR <= nb, jb+NR <= nb, k < nb by bounds.
+                    unsafe {
+                        let apan = a.get_unchecked(k * nb + ib..k * nb + ib + MR);
+                        for jj in 0..NR {
+                            let bjk = *b.get_unchecked(jb + jj + k * nb);
+                            let row = acc.get_unchecked_mut(jj);
+                            for ii in 0..MR {
+                                row[ii] = row[ii] + *apan.get_unchecked(ii) * bjk;
+                            }
+                        }
+                    }
+                }
+                for jj in 0..NR {
+                    let ccol = &mut c[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
+                    for ii in 0..MR {
+                        ccol[ii] = ccol[ii] - acc[jj][ii];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C -= A * A^T` on a diagonal tile (`dsyrk`/`ssyrk`, lower).
+///
+/// Only the lower triangle (including diagonal) is updated — the strict
+/// upper part of a diagonal tile is never read by the factorization.
+/// Strictly-sub-diagonal MR x NR blocks go through the same register
+/// microkernel as GEMM; diagonal-crossing blocks use the scalar loop.
+pub fn syrk<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
+    debug_assert!(c.len() == nb * nb && a.len() == nb * nb);
+    if nb % MR == 0 && nb % NR == 0 {
+        syrk_blocked(c, a, nb);
+    } else {
+        syrk_simple(c, a, nb, 0, nb, 0, nb);
+    }
+}
+
+/// Scalar triangular update restricted to the block
+/// rows [i0, i1) x cols [j0, j1), still clipped to the lower triangle.
+fn syrk_simple<T: Scalar>(
+    c: &mut [T],
+    a: &[T],
+    nb: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    for k in 0..nb {
+        let acol = &a[k * nb..(k + 1) * nb];
+        for j in j0..j1 {
+            let ajk = acol[j];
+            if ajk.to_f64() != 0.0 {
+                let ccol = &mut c[j * nb..(j + 1) * nb];
+                for i in i0.max(j)..i1 {
+                    ccol[i] = ccol[i] - acol[i] * ajk;
+                }
+            }
+        }
+    }
+}
+
+fn syrk_blocked<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
+    for jb in (0..nb).step_by(NR) {
+        for ib in (jb / MR * MR..nb).step_by(MR) {
+            if ib >= jb + NR {
+                // strictly below the diagonal band: dense microkernel
+                for kb in (0..nb).step_by(KC) {
+                    let kend = (kb + KC).min(nb);
+                    let mut acc = [[T::ZERO; MR]; NR];
+                    for k in kb..kend {
+                        // SAFETY: block bounds divide nb.
+                        unsafe {
+                            let apan = a.get_unchecked(k * nb + ib..k * nb + ib + MR);
+                            for jj in 0..NR {
+                                let ajk = *a.get_unchecked(jb + jj + k * nb);
+                                let row = acc.get_unchecked_mut(jj);
+                                for ii in 0..MR {
+                                    row[ii] = row[ii] + *apan.get_unchecked(ii) * ajk;
+                                }
+                            }
+                        }
+                    }
+                    for jj in 0..NR {
+                        let ccol = &mut c[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
+                        for ii in 0..MR {
+                            ccol[ii] = ccol[ii] - acc[jj][ii];
+                        }
+                    }
+                }
+            } else {
+                // block straddles the diagonal: scalar triangular path
+                syrk_simple(c, a, nb, ib, ib + MR, jb, jb + NR);
+            }
+        }
+    }
+}
+
+/// `B <- B * L^{-T}` for lower-triangular `L` (`dtrsm`/`strsm`:
+/// side = right, uplo = lower, trans = T, diag = non-unit).
+///
+/// Column j of the result depends on columns 0..j (forward substitution
+/// across columns); each column update is a stride-1 axpy.
+pub fn trsm<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
+    debug_assert!(l.len() == nb * nb && b.len() == nb * nb);
+    for j in 0..nb {
+        // b[:, j] -= sum_{k < j} b[:, k] * L(j, k)
+        for k in 0..j {
+            let ljk = l[j + k * nb];
+            if ljk.to_f64() != 0.0 {
+                let (done, rest) = b.split_at_mut(j * nb);
+                let bk = &done[k * nb..(k + 1) * nb];
+                let bj = &mut rest[..nb];
+                for i in 0..nb {
+                    bj[i] = bj[i] - bk[i] * ljk;
+                }
+            }
+        }
+        let d = l[j + j * nb];
+        let bj = &mut b[j * nb..(j + 1) * nb];
+        for x in bj.iter_mut() {
+            *x = *x / d;
+        }
+    }
+}
+
+/// In-place lower Cholesky of a diagonal tile (`dpotrf`/`spotrf`).
+/// Zeroes the strict upper triangle.  `tile_row0` is the tile's global
+/// first row index, used to report the *global* pivot position on failure
+/// (the paper's SP(100%) failure mode surfaces here).
+pub fn potrf<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
+    debug_assert_eq!(a.len(), nb * nb);
+    for k in 0..nb {
+        let pivot = a[k + k * nb].to_f64();
+        if !(pivot > 0.0) {
+            return Err(Error::NotPositiveDefinite { pivot, index: tile_row0 + k });
+        }
+        let d = a[k + k * nb].sqrt();
+        for i in k..nb {
+            a[i + k * nb] = a[i + k * nb] / d;
+        }
+        for j in (k + 1)..nb {
+            let ljk = a[j + k * nb];
+            if ljk.to_f64() != 0.0 {
+                let (colk, colj) = {
+                    let (lo, hi) = a.split_at_mut(j * nb);
+                    (&lo[k * nb..(k + 1) * nb], &mut hi[..nb])
+                };
+                for i in j..nb {
+                    colj[i] = colj[i] - colk[i] * ljk;
+                }
+            }
+        }
+    }
+    for j in 1..nb {
+        for i in 0..j {
+            a[i + j * nb] = T::ZERO;
+        }
+    }
+    Ok(())
+}
+
+/// Flop counts per codelet at tile size `nb` (used by the Fig. 5/6 device
+/// and communication models, and by the bench reports).
+pub mod flops {
+    /// `potrf`: n^3/3 + n^2/2 + n/6, keep the leading term.
+    pub fn potrf(nb: usize) -> f64 {
+        (nb as f64).powi(3) / 3.0
+    }
+    /// `trsm` (right, triangular): n^3.
+    pub fn trsm(nb: usize) -> f64 {
+        (nb as f64).powi(3)
+    }
+    /// `syrk` (lower half): n^3.
+    pub fn syrk(nb: usize) -> f64 {
+        (nb as f64).powi(3)
+    }
+    /// `gemm`: 2 n^3.
+    pub fn gemm(nb: usize) -> f64 {
+        2.0 * (nb as f64).powi(3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn rand_tile<T: Scalar>(nb: usize, seed: u64, f: impl Fn(f64) -> T) -> Vec<T> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        (0..nb * nb).map(|_| f(r.standard_normal())).collect()
+    }
+
+    fn spd_tile(nb: usize, seed: u64) -> Vec<f64> {
+        let b = rand_tile::<f64>(nb, seed, |x| x);
+        let mut a = vec![0.0; nb * nb];
+        // A = B B^T + nb I
+        for j in 0..nb {
+            for i in 0..nb {
+                let mut s = 0.0;
+                for k in 0..nb {
+                    s += b[i + k * nb] * b[j + k * nb];
+                }
+                a[i + j * nb] = s + if i == j { nb as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    fn gemm_naive(c: &mut [f64], a: &[f64], b: &[f64], nb: usize) {
+        for j in 0..nb {
+            for i in 0..nb {
+                let mut s = 0.0;
+                for k in 0..nb {
+                    s += a[i + k * nb] * b[j + k * nb];
+                }
+                c[i + j * nb] -= s;
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_f64() {
+        for &nb in &[1, 4, 17, 32] {
+            let a = rand_tile::<f64>(nb, 1, |x| x);
+            let b = rand_tile::<f64>(nb, 2, |x| x);
+            let mut c1 = rand_tile::<f64>(nb, 3, |x| x);
+            let mut c2 = c1.clone();
+            gemm(&mut c1, &a, &b, nb);
+            gemm_naive(&mut c2, &a, &b, nb);
+            for (x, y) in c1.iter().zip(c2.iter()) {
+                assert!((x - y).abs() < 1e-11 * nb as f64, "nb={nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_f32_matches_f64_within_eps() {
+        let nb = 24;
+        let a = rand_tile::<f64>(nb, 4, |x| x);
+        let b = rand_tile::<f64>(nb, 5, |x| x);
+        let mut c = rand_tile::<f64>(nb, 6, |x| x);
+        let a32: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+        let mut c32: Vec<f32> = c.iter().map(|&x| x as f32).collect();
+        gemm(&mut c, &a, &b, nb);
+        gemm(&mut c32, &a32, &b32, nb);
+        for (x, y) in c.iter().zip(c32.iter()) {
+            assert!((x - *y as f64).abs() < 1e-4 * nb as f64);
+        }
+    }
+
+    #[test]
+    fn syrk_matches_gemm_on_lower() {
+        let nb = 20;
+        let a = rand_tile::<f64>(nb, 7, |x| x);
+        let mut c1 = rand_tile::<f64>(nb, 8, |x| x);
+        let mut c2 = c1.clone();
+        syrk(&mut c1, &a, nb);
+        gemm(&mut c2, &a, &a.clone(), nb);
+        for j in 0..nb {
+            for i in j..nb {
+                assert!((c1[i + j * nb] - c2[i + j * nb]).abs() < 1e-12 * nb as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_leaves_strict_upper_untouched() {
+        let nb = 12;
+        let a = rand_tile::<f64>(nb, 9, |x| x);
+        let c0 = rand_tile::<f64>(nb, 10, |x| x);
+        let mut c = c0.clone();
+        syrk(&mut c, &a, nb);
+        for j in 1..nb {
+            for i in 0..j {
+                assert_eq!(c[i + j * nb], c0[i + j * nb]);
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_reconstructs() {
+        let nb = 28;
+        let a0 = spd_tile(nb, 11);
+        let mut l = a0.clone();
+        potrf(&mut l, nb, 0).unwrap();
+        // L L^T == A (lower part)
+        for j in 0..nb {
+            for i in j..nb {
+                let mut s = 0.0;
+                for k in 0..nb {
+                    s += l[i + k * nb] * l[j + k * nb];
+                }
+                assert!((s - a0[i + j * nb]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+        // strict upper zeroed
+        for j in 1..nb {
+            for i in 0..j {
+                assert_eq!(l[i + j * nb], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_reports_global_pivot_index() {
+        let nb = 8;
+        let mut a = vec![0.0; nb * nb];
+        for i in 0..nb {
+            a[i + i * nb] = 1.0;
+        }
+        a[3 + 3 * nb] = -2.0;
+        match potrf(&mut a, nb, 40) {
+            Err(Error::NotPositiveDefinite { index, pivot }) => {
+                assert_eq!(index, 43);
+                assert_eq!(pivot, -2.0);
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trsm_inverts_multiplication() {
+        let nb = 16;
+        let mut l = spd_tile(nb, 12);
+        potrf(&mut l, nb, 0).unwrap();
+        let x0 = rand_tile::<f64>(nb, 13, |x| x);
+        // B = X0 * L^T
+        let mut b = vec![0.0; nb * nb];
+        for j in 0..nb {
+            for i in 0..nb {
+                let mut s = 0.0;
+                // B = X0 L^T => B(i, j) = sum_k X0(i, k) L(j, k),
+                // nonzero only for k <= j (L lower triangular)
+                for k in 0..=j {
+                    s += x0[i + k * nb] * l[j + k * nb];
+                }
+                b[i + j * nb] = s;
+            }
+        }
+        trsm(&l, &mut b, nb);
+        for (x, y) in b.iter().zip(x0.iter()) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn trsm_then_syrk_factors_two_tile_matrix() {
+        // The 2x2-tile identity: after potrf(A00), trsm(A10), the Schur
+        // complement syrk(A11) must equal A11 - L10 L10^T.
+        let nb = 12;
+        let a00 = spd_tile(nb, 14);
+        let a10 = rand_tile::<f64>(nb, 15, |x| x * 0.1);
+        let a11 = spd_tile(nb, 16);
+        let mut l00 = a00.clone();
+        potrf(&mut l00, nb, 0).unwrap();
+        let mut l10 = a10.clone();
+        trsm(&l00, &mut l10, nb);
+        let mut s = a11.clone();
+        syrk(&mut s, &l10, nb);
+        // verify against naive: s_lower == a11 - l10 l10^T
+        for j in 0..nb {
+            for i in j..nb {
+                let mut acc = a11[i + j * nb];
+                for k in 0..nb {
+                    acc -= l10[i + k * nb] * l10[j + k * nb];
+                }
+                assert!((s[i + j * nb] - acc).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn flop_counts() {
+        assert_eq!(flops::gemm(10), 2000.0);
+        assert_eq!(flops::trsm(10), 1000.0);
+        assert!(flops::potrf(10) < flops::trsm(10));
+    }
+}

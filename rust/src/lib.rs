@@ -1,0 +1,79 @@
+//! # mpcholesky — Mixed-Precision Tile Cholesky for Geostatistics
+//!
+//! A from-scratch reproduction of *"Geostatistical Modeling and Prediction
+//! Using Mixed-Precision Tile Cholesky Factorization"* (Abdulah, Ltaief,
+//! Sun, Genton, Keyes — KAUST, 2020): the ExaGeoStat-style maximum
+//! likelihood pipeline for Gaussian random fields, the StarPU-style
+//! dynamic task runtime it runs on, and the paper's contribution —
+//! **Algorithm 1**, the tile Cholesky factorization that keeps
+//! double-precision arithmetic within `diag_thick` tiles of the diagonal
+//! and drops to single precision beyond it.
+//!
+//! ## Layering (see `DESIGN.md`)
+//!
+//! * Layer 3 (this crate): coordinator — task scheduler, tile storage,
+//!   native tile BLAS, MLE/prediction drivers, CLI, metrics.
+//! * Layer 2/1 (build-time Python, `python/compile/`): the same algorithm
+//!   as a fused JAX graph over Pallas tile kernels, AOT-lowered to HLO
+//!   text in `artifacts/`, loaded at runtime by [`runtime`] through PJRT.
+//!   Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use mpcholesky::prelude::*;
+//!
+//! // 1. simulate a Gaussian random field at 1024 Morton-ordered sites
+//! let field = SyntheticField::generate(&FieldConfig {
+//!     n: 1024,
+//!     theta: MaternParams { variance: 1.0, range: 0.1, smoothness: 0.5 },
+//!     seed: 42,
+//!     ..Default::default()
+//! }).unwrap();
+//!
+//! // 2. fit the Matern model by maximum likelihood with the
+//! //    mixed-precision factorization (Algorithm 1)
+//! let cfg = MleConfig {
+//!     nb: 128,
+//!     variant: Variant::MixedPrecision { diag_thick: 2 },
+//!     ..Default::default()
+//! };
+//! let fit = MleProblem::new(&field.locations, &field.values, cfg)
+//!     .unwrap()
+//!     .fit()
+//!     .unwrap();
+//! println!("theta_hat = {:?}", fit.theta);
+//! ```
+
+pub mod bench;
+pub mod cholesky;
+pub mod config;
+pub mod datagen;
+pub mod error;
+pub mod kernels;
+pub mod matern;
+pub mod mle;
+pub mod predict;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod tile;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and benches.
+pub mod prelude {
+    pub use crate::cholesky::{
+        factorize_dense, factorize_tiles, generate_and_factorize, CholeskyPlan, Variant,
+    };
+    pub use crate::config::RunConfig;
+    pub use crate::datagen::{FieldConfig, SyntheticField, WindFieldConfig};
+    pub use crate::error::{Error, Result};
+    pub use crate::kernels::{NativeBackend, TileBackend};
+    pub use crate::matern::{Location, MaternParams, Metric};
+    pub use crate::mle::{MleConfig, MleFit, MleProblem, OptimizerConfig};
+    pub use crate::predict::{kfold_pmse, pmse, KrigingModel};
+    pub use crate::rng::Xoshiro256pp;
+    pub use crate::runtime::PjrtBackend;
+    pub use crate::scheduler::{Scheduler, SchedulerConfig, SchedulingPolicy};
+    pub use crate::tile::{Precision, TileMatrix};
+}

@@ -1,0 +1,236 @@
+//! `mpchol` — CLI for the mixed-precision tile Cholesky geostatistics
+//! stack (leader entrypoint).
+//!
+//! Subcommands:
+//!   demo                         quick end-to-end pipeline
+//!   fit      [opts]              MLE on a synthetic field
+//!   loglik   [opts]              one likelihood evaluation (timing)
+//!   artifacts-info               dump the AOT artifact manifest
+//!
+//! Common options (flags override `--config FILE`, which overrides
+//! defaults — see `rust/src/config.rs` and `configs/*.conf`):
+//!   --config FILE    key = value run configuration
+//!   --n N            sites (default 1024)         --nb NB   tile (64)
+//!   --variant V      dp | mp | dst | 3p (mp)      --thick T band (2)
+//!   --sp-thick T     3p single-precision band     --workers W (all)
+//!   --backend B      native | pjrt (native)
+//!   --range R        theta2 of the generator (0.1) --seed S  (42)
+//!
+//! (Hand-rolled parsing: clap is unavailable in the offline crate set.)
+
+use mpcholesky::prelude::*;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                m.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+            }
+        }
+        i += 1;
+    }
+    m
+}
+
+/// Resolve the run configuration: defaults <- --config file <- CLI flags.
+fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    // translate CLI flag names to config keys
+    let mut over = HashMap::new();
+    for (flag, key) in [
+        ("n", "n"),
+        ("nb", "nb"),
+        ("seed", "seed"),
+        ("range", "range"),
+        ("variance", "variance"),
+        ("smoothness", "smoothness"),
+        ("workers", "workers"),
+        ("backend", "backend"),
+        ("variant", "variant"),
+        ("thick", "diag_thick"),
+        ("sp-thick", "sp_thick"),
+        ("max-evals", "max_evals"),
+    ] {
+        if let Some(v) = flags.get(flag) {
+            over.insert(key.to_string(), v.clone());
+        }
+    }
+    cfg.apply(&over)?;
+    Ok(cfg)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("demo");
+    let flags = parse_flags(&argv);
+    if let Err(e) = run(cmd, &flags) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
+    match cmd {
+        "demo" | "fit" | "loglik" => {}
+        "artifacts-info" => return artifacts_info(),
+        other => {
+            eprintln!("unknown command {other:?}; see `mpchol` source header for usage");
+            std::process::exit(2);
+        }
+    }
+
+    let rc = resolve_config(flags)?;
+    let (n, nb, seed, workers, variant) = (rc.n, rc.nb, rc.seed, rc.workers, rc.variant);
+    let range = rc.theta[1];
+    let theta0 = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
+
+    eprintln!("generating field: n={n} nb={nb} seed={seed} theta0=({},{},{})",
+        theta0.variance, theta0.range, theta0.smoothness);
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta: theta0,
+        seed,
+        gen_nb: nb,
+        num_workers: workers,
+        ..Default::default()
+    })?;
+
+    let cfg = MleConfig {
+        nb,
+        variant,
+        num_workers: workers,
+        metric: rc.metric,
+        nugget: rc.nugget,
+        optimizer: mpcholesky::mle::OptimizerConfig {
+            max_evals: rc.max_evals,
+            ftol: rc.ftol,
+            ..Default::default()
+        },
+        start: Some([0.5, (range * 0.7).max(0.01), 0.8]),
+        ..Default::default()
+    };
+
+    let pjrt;
+    let problem = if rc.backend == "pjrt" {
+        pjrt = PjrtBackend::load_default()?;
+        eprintln!("backend: pjrt (artifacts from {})", pjrt.dir().display());
+        MleProblem::with_backend(&field.locations, &field.values, cfg.clone(), &pjrt)?
+    } else {
+        eprintln!("backend: native");
+        MleProblem::new(&field.locations, &field.values, cfg.clone())?
+    };
+
+    match cmd {
+        "loglik" => {
+            let t0 = std::time::Instant::now();
+            let ll = problem.loglik(&theta0)?;
+            println!(
+                "loglik(theta0) = {ll:.4}   [{} in {:.1} ms]",
+                variant.label(n / nb),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            if let Some(path) = flags.get("trace") {
+                dump_trace(&field, &rc, path)?;
+                eprintln!("execution trace written to {path}");
+            }
+        }
+        _ => {
+            let fit = problem.fit()?;
+            println!(
+                "theta-hat = ({:.4}, {:.4}, {:.4})  loglik = {:.3}",
+                fit.theta.variance, fit.theta.range, fit.theta.smoothness, fit.loglik
+            );
+            println!(
+                "iterations = {}  mean time/iter = {:.1} ms  converged = {}",
+                fit.iterations,
+                fit.mean_eval_seconds() * 1e3,
+                fit.converged
+            );
+            if cmd == "demo" {
+                let rep = kfold_pmse(&field.locations, &field.values, fit.theta, 4, &cfg, 7)?;
+                println!("4-fold PMSE at theta-hat = {:.5}", rep.mean_pmse);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Re-run one factorization with tracing enabled and dump the per-task
+/// spans as CSV (`task,worker,start_ns,end_ns` — gantt-plottable).
+fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> {
+    use mpcholesky::cholesky::{CholeskyPlan, TileExecutor};
+    use mpcholesky::scheduler::SchedulerConfig;
+    use mpcholesky::tile::TileMatrix;
+
+    let workers = if rc.workers == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        rc.workers
+    };
+    let sched = Scheduler::new(SchedulerConfig {
+        num_workers: workers,
+        trace: true,
+        ..Default::default()
+    });
+    let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
+    let tiles = TileMatrix::zeros(rc.n, rc.nb)?;
+    let mut plan = CholeskyPlan::build(rc.n / rc.nb, rc.nb, rc.variant, true);
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let gen = mpcholesky::cholesky::GenContext {
+        locations: &field.locations,
+        theta,
+        metric: rc.metric,
+        nugget: rc.nugget,
+        precision_of: {
+            let variant = rc.variant;
+            Box::new(move |i, j| variant.tile_precision(i, j))
+        },
+    };
+    let exec = TileExecutor::new(&tiles, &NativeBackend).with_generation(gen);
+    let trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
+    // annotate spans with codelet names for the gantt
+    let mut csv = String::from("task,codelet,worker,start_ns,end_ns\n");
+    for sp in &trace.spans {
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            sp.task,
+            plan.graph.task(sp.task).payload.call.name(),
+            sp.worker,
+            sp.start_ns,
+            sp.end_ns
+        ));
+    }
+    std::fs::write(path, csv)?;
+    Ok(())
+}
+
+fn artifacts_info() -> Result<()> {
+    let dir = std::env::var("MPCHOL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = mpcholesky::runtime::Manifest::load(std::path::Path::new(&dir))?;
+    println!("artifact dir: {dir}");
+    println!("tile size nb = {}", manifest.nb);
+    println!("fused demo: n={} nb={} thick={}", manifest.demo_n, manifest.demo_nb, manifest.demo_thick);
+    let mut names: Vec<_> = manifest.entries.keys().collect();
+    names.sort();
+    for name in names {
+        let e = &manifest.entries[name];
+        println!(
+            "  {name}: {} arg(s) -> {:?}:{:?}",
+            e.args.len(),
+            e.out.shape,
+            e.out.dtype
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Distance metrics between spatial locations.
+//!
+//! The synthetic experiments use plain Euclidean distance on the unit
+//! square (paper SSVIII.B.1); the real-data pipeline uses great-circle
+//! distance (haversine, paper ref [31]) on lon/lat coordinates.
+
+/// A 2-D spatial location.  `x`/`y` are either unit-square coordinates
+/// (synthetic) or degrees lon/lat (geographic).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Location {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Location {
+    pub fn new(x: f64, y: f64) -> Self {
+        Self { x, y }
+    }
+}
+
+/// Distance metric selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Metric {
+    /// Euclidean distance in the coordinate plane.
+    #[default]
+    Euclidean,
+    /// Great-circle distance on a unit sphere via the haversine formula
+    /// (coordinates in degrees: x = longitude, y = latitude).  Returned in
+    /// *radians* so the Matern range parameter stays dimensionless; scale
+    /// by the sphere radius for physical units.
+    Haversine,
+}
+
+impl Metric {
+    /// Distance between two locations under this metric.
+    #[inline]
+    pub fn distance(self, a: Location, b: Location) -> f64 {
+        match self {
+            Metric::Euclidean => {
+                let dx = a.x - b.x;
+                let dy = a.y - b.y;
+                (dx * dx + dy * dy).sqrt()
+            }
+            Metric::Haversine => haversine(a, b),
+        }
+    }
+}
+
+/// Haversine great-circle distance on the unit sphere (radians).
+///
+/// `hav(theta) = sin^2(dlat/2) + cos(lat1) cos(lat2) sin^2(dlon/2)`,
+/// `d = 2 asin(sqrt(hav))` — numerically stable for small separations,
+/// which is exactly the regime covariance kernels care about.
+pub fn haversine(a: Location, b: Location) -> f64 {
+    let (lon1, lat1) = (a.x.to_radians(), a.y.to_radians());
+    let (lon2, lat2) = (b.x.to_radians(), b.y.to_radians());
+    let dlat = lat2 - lat1;
+    let dlon = lon2 - lon1;
+    let h = (dlat / 2.0).sin().powi(2)
+        + lat1.cos() * lat2.cos() * (dlon / 2.0).sin().powi(2);
+    2.0 * h.sqrt().min(1.0).asin()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn euclidean_basics() {
+        let m = Metric::Euclidean;
+        assert_eq!(m.distance(Location::new(0.0, 0.0), Location::new(3.0, 4.0)), 5.0);
+        assert_eq!(m.distance(Location::new(1.0, 1.0), Location::new(1.0, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn euclidean_symmetric() {
+        let m = Metric::Euclidean;
+        let a = Location::new(0.2, 0.7);
+        let b = Location::new(0.9, 0.1);
+        assert_eq!(m.distance(a, b), m.distance(b, a));
+    }
+
+    #[test]
+    fn haversine_quarter_circle() {
+        // pole to equator = pi/2 radians
+        let pole = Location::new(0.0, 90.0);
+        let eq = Location::new(0.0, 0.0);
+        let d = haversine(pole, eq);
+        assert!((d - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn haversine_zero_and_antipodal() {
+        let a = Location::new(46.0, 24.0); // Arabian peninsula-ish
+        assert_eq!(haversine(a, a), 0.0);
+        let b = Location::new(46.0 - 180.0, -24.0);
+        // asin near 1 amplifies rounding to ~sqrt(eps); 1e-6 rad is exact
+        // enough for an antipodal sanity check
+        assert!((haversine(a, b) - std::f64::consts::PI).abs() < 1e-6);
+    }
+
+    #[test]
+    fn haversine_small_separation_matches_euclidean_scaled() {
+        // near the equator, 1e-3 degrees apart: great-circle ~ planar
+        let a = Location::new(10.0, 0.0);
+        let b = Location::new(10.001, 0.0);
+        let d = haversine(a, b);
+        assert!((d - 0.001f64.to_radians()).abs() < 1e-12);
+    }
+}

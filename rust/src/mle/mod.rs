@@ -1,0 +1,320 @@
+//! Maximum likelihood estimation (paper SSIV-C) — the application driver
+//! the whole stack exists to serve.
+//!
+//! Each objective evaluation is one pass of the paper's pipeline:
+//! regenerate the Matern covariance at the candidate theta (tile tasks),
+//! factor it with the selected [`Variant`] (Algorithm 1 / DP / DST),
+//! then one forward solve + log-det for Eq. 2:
+//!
+//! `l(theta) = -n/2 log(2 pi) - 1/2 log|Sigma(theta)| - 1/2 z' Sigma^-1 z`
+//!
+//! The optimizer is derivative-free ([`optimizer`]); evaluations that
+//! lose positive definiteness are rejected with an infinite objective —
+//! the paper's SP(100%) discussion in SSVIII.D.1 is exactly this failure
+//! mode.
+
+pub mod optimizer;
+
+pub use optimizer::{minimize_positive, OptimResult, OptimizerConfig};
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use crate::cholesky::{self, Variant};
+use crate::error::{Error, Result};
+use crate::kernels::{NativeBackend, TileBackend};
+use crate::matern::{Location, MaternParams, Metric};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::tile::TileMatrix;
+
+/// Configuration for an MLE run.
+#[derive(Clone, Debug)]
+pub struct MleConfig {
+    /// Tile size.
+    pub nb: usize,
+    /// Factorization variant (the paper's computation methods).
+    pub variant: Variant,
+    /// Distance metric.
+    pub metric: Metric,
+    /// Diagonal nugget added to Sigma for numerical stability.
+    pub nugget: f64,
+    /// Worker threads (0 = available parallelism).
+    pub num_workers: usize,
+    /// Optimizer settings.
+    pub optimizer: OptimizerConfig,
+    /// Box bounds on (variance, range, smoothness).
+    pub lower: [f64; 3],
+    pub upper: [f64; 3],
+    /// Starting point (None = geometric midpoint of the bounds).
+    pub start: Option<[f64; 3]>,
+}
+
+impl Default for MleConfig {
+    fn default() -> Self {
+        Self {
+            nb: 128,
+            variant: Variant::FullDp,
+            metric: Metric::Euclidean,
+            nugget: 1e-8,
+            num_workers: 0,
+            optimizer: OptimizerConfig::default(),
+            lower: [0.01, 0.005, 0.1],
+            upper: [50.0, 3.0, 3.0],
+            start: None,
+        }
+    }
+}
+
+/// One likelihood evaluation's bookkeeping.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub theta: MaternParams,
+    pub loglik: f64,
+    pub seconds: f64,
+}
+
+/// Result of [`MleProblem::fit`].
+#[derive(Clone, Debug)]
+pub struct MleFit {
+    /// Estimated parameter vector theta-hat.
+    pub theta: MaternParams,
+    /// Log-likelihood at the estimate.
+    pub loglik: f64,
+    /// Objective evaluations (the paper's "iterations to convergence").
+    pub iterations: usize,
+    pub converged: bool,
+    /// Per-evaluation records (Fig. 4 reports the mean of `seconds`).
+    pub evals: Vec<EvalRecord>,
+}
+
+impl MleFit {
+    /// Mean seconds per likelihood evaluation — the y-axis of Figs. 4-6.
+    pub fn mean_eval_seconds(&self) -> f64 {
+        if self.evals.is_empty() {
+            return 0.0;
+        }
+        self.evals.iter().map(|e| e.seconds).sum::<f64>() / self.evals.len() as f64
+    }
+}
+
+/// An MLE problem instance: data + configuration + backend.
+pub struct MleProblem<'a> {
+    locations: &'a [Location],
+    z: &'a [f64],
+    cfg: MleConfig,
+    backend: &'a dyn TileBackend,
+    scheduler: Scheduler,
+}
+
+static NATIVE: NativeBackend = NativeBackend;
+
+impl<'a> MleProblem<'a> {
+    /// Create a problem on the native backend.
+    pub fn new(locations: &'a [Location], z: &'a [f64], cfg: MleConfig) -> Result<Self> {
+        Self::with_backend(locations, z, cfg, &NATIVE)
+    }
+
+    /// Create a problem on an explicit backend (e.g. the PJRT runtime).
+    pub fn with_backend(
+        locations: &'a [Location],
+        z: &'a [f64],
+        cfg: MleConfig,
+        backend: &'a dyn TileBackend,
+    ) -> Result<Self> {
+        if locations.len() != z.len() {
+            crate::invalid_arg!("{} locations but {} observations", locations.len(), z.len());
+        }
+        if locations.is_empty() || locations.len() % cfg.nb != 0 {
+            crate::invalid_arg!(
+                "n = {} must be a positive multiple of nb = {}",
+                locations.len(),
+                cfg.nb
+            );
+        }
+        let workers = if cfg.num_workers == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            cfg.num_workers
+        };
+        let scheduler =
+            Scheduler::new(SchedulerConfig { num_workers: workers, ..Default::default() });
+        Ok(Self { locations, z, cfg, backend, scheduler })
+    }
+
+    pub fn n(&self) -> usize {
+        self.locations.len()
+    }
+
+    pub fn config(&self) -> &MleConfig {
+        &self.cfg
+    }
+
+    /// Factor Sigma(theta) with the configured variant; returns the tile
+    /// factor (shared by the likelihood and the kriging predictor).
+    pub fn factorize(&self, theta: &MaternParams) -> Result<TileMatrix> {
+        let mut tiles = TileMatrix::zeros(self.n(), self.cfg.nb)?;
+        cholesky::generate_and_factorize(
+            &mut tiles,
+            self.locations,
+            *theta,
+            self.cfg.metric,
+            self.cfg.nugget,
+            self.cfg.variant,
+            self.backend,
+            &self.scheduler,
+        )?;
+        Ok(tiles)
+    }
+
+    /// Evaluate the Gaussian log-likelihood (Eq. 2) at `theta`.
+    pub fn loglik(&self, theta: &MaternParams) -> Result<f64> {
+        let n = self.n();
+        let tiles = self.factorize(theta)?;
+        let logdet = cholesky::log_determinant(&tiles);
+        let u = cholesky::solve_lower(&tiles, self.z)?;
+        let quad: f64 = u.iter().map(|x| x * x).sum();
+        Ok(-0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln() - 0.5 * logdet - 0.5 * quad)
+    }
+
+    /// Run the optimizer; returns the fitted parameters and the
+    /// per-evaluation log (timing, objective path).
+    pub fn fit(&self) -> Result<MleFit> {
+        let evals: RefCell<Vec<EvalRecord>> = RefCell::new(Vec::new());
+        let objective = |x: &[f64]| -> f64 {
+            let theta = MaternParams::new(x[0], x[1], x[2]);
+            let t0 = Instant::now();
+            match self.loglik(&theta) {
+                Ok(v) => {
+                    evals.borrow_mut().push(EvalRecord {
+                        theta,
+                        loglik: v,
+                        seconds: t0.elapsed().as_secs_f64(),
+                    });
+                    -v
+                }
+                // non-PD covariance (or any numeric failure): reject the
+                // point and let the simplex move on
+                Err(_) => f64::INFINITY,
+            }
+        };
+        let start = self.cfg.start.unwrap_or_else(|| {
+            let mid = |lo: f64, hi: f64| ((lo.ln() + hi.ln()) / 2.0).exp();
+            [
+                mid(self.cfg.lower[0], self.cfg.upper[0]),
+                mid(self.cfg.lower[1], self.cfg.upper[1]),
+                mid(self.cfg.lower[2], self.cfg.upper[2]),
+            ]
+        });
+        let r = minimize_positive(
+            objective,
+            &start,
+            &self.cfg.lower,
+            &self.cfg.upper,
+            &self.cfg.optimizer,
+        );
+        if !r.fx.is_finite() {
+            return Err(Error::Optimization(
+                "no positive-definite covariance found within bounds".into(),
+            ));
+        }
+        Ok(MleFit {
+            theta: MaternParams::new(r.x[0], r.x[1], r.x[2]),
+            loglik: -r.fx,
+            iterations: r.evals,
+            converged: r.converged,
+            evals: evals.into_inner(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{FieldConfig, SyntheticField};
+
+    fn small_field(theta: MaternParams, seed: u64) -> SyntheticField {
+        SyntheticField::generate(&FieldConfig {
+            n: 256,
+            theta,
+            seed,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn loglik_peaks_near_true_theta() {
+        let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+        let f = small_field(theta0, 42);
+        let cfg = MleConfig { nb: 64, ..Default::default() };
+        let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+        let at_truth = prob.loglik(&theta0).unwrap();
+        // clearly-wrong parameters must score worse
+        for bad in [
+            MaternParams::new(5.0, 0.1, 0.5),
+            MaternParams::new(1.0, 0.9, 0.5),
+            MaternParams::new(1.0, 0.1, 2.5),
+        ] {
+            let ll = prob.loglik(&bad).unwrap();
+            assert!(ll < at_truth, "{bad:?}: {ll} !< {at_truth}");
+        }
+    }
+
+    #[test]
+    fn mixed_loglik_close_to_dp_loglik() {
+        let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+        let f = small_field(theta0, 7);
+        let mk = |variant| MleConfig { nb: 64, variant, ..Default::default() };
+        let dp = MleProblem::new(&f.locations, &f.values, mk(Variant::FullDp))
+            .unwrap()
+            .loglik(&theta0)
+            .unwrap();
+        let mp = MleProblem::new(
+            &f.locations,
+            &f.values,
+            mk(Variant::MixedPrecision { diag_thick: 2 }),
+        )
+        .unwrap()
+        .loglik(&theta0)
+        .unwrap();
+        assert!(
+            (dp - mp).abs() / dp.abs() < 1e-3,
+            "relative loglik gap too large: {dp} vs {mp}"
+        );
+    }
+
+    #[test]
+    fn fit_recovers_range_roughly() {
+        // cheap smoke fit: n = 256, loose tolerances, medium correlation
+        let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+        let f = small_field(theta0, 3);
+        let cfg = MleConfig {
+            nb: 64,
+            variant: Variant::MixedPrecision { diag_thick: 2 },
+            optimizer: OptimizerConfig { max_evals: 120, ftol: 1e-4, ..Default::default() },
+            lower: [0.05, 0.01, 0.25],
+            upper: [10.0, 1.0, 1.5],
+            start: Some([0.5, 0.05, 0.8]),
+            ..Default::default()
+        };
+        let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+        let fit = prob.fit().unwrap();
+        assert!(fit.iterations > 10);
+        assert!(!fit.evals.is_empty());
+        assert!(fit.mean_eval_seconds() > 0.0);
+        // loose sanity: the estimate is the right order of magnitude
+        assert!(fit.theta.range > 0.02 && fit.theta.range < 0.5, "{:?}", fit.theta);
+        assert!(fit.theta.variance > 0.2 && fit.theta.variance < 5.0, "{:?}", fit.theta);
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs() {
+        let locs = vec![crate::matern::Location::new(0.1, 0.1); 64];
+        let z = vec![0.0; 63];
+        assert!(MleProblem::new(&locs, &z, MleConfig { nb: 64, ..Default::default() }).is_err());
+        let z64 = vec![0.0; 64];
+        assert!(
+            MleProblem::new(&locs, &z64, MleConfig { nb: 48, ..Default::default() }).is_err()
+        );
+    }
+}

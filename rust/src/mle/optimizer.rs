@@ -1,0 +1,265 @@
+//! Derivative-free optimizer — the NLopt stand-in.
+//!
+//! ExaGeoStat drives the likelihood with NLopt's BOBYQA; offline we
+//! implement Nelder–Mead with box constraints via a log-parameterisation
+//! (Matern parameters are positive, and their natural scale is
+//! multiplicative).  The MLE driver records evaluation counts so the
+//! paper's convergence-iteration observations (SSVIII.D.2) can be
+//! reproduced.
+
+/// Termination settings.
+#[derive(Clone, Copy, Debug)]
+pub struct OptimizerConfig {
+    /// Maximum objective evaluations.
+    pub max_evals: usize,
+    /// Stop when the simplex's objective spread falls below this
+    /// (the paper uses 1e-3 optimization tolerance in SSVIII.D.2).
+    pub ftol: f64,
+    /// Stop when the simplex collapses below this edge length
+    /// (log-parameter space).
+    pub xtol: f64,
+    /// Initial simplex step (log-space).
+    pub initial_step: f64,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        Self { max_evals: 500, ftol: 1e-3, xtol: 1e-6, initial_step: 0.35 }
+    }
+}
+
+/// Optimization outcome.
+#[derive(Clone, Debug)]
+pub struct OptimResult {
+    /// Minimizer in the *original* (positive) parameter space.
+    pub x: Vec<f64>,
+    /// Objective value at `x`.
+    pub fx: f64,
+    /// Objective evaluations spent.
+    pub evals: usize,
+    /// True if a tolerance was met (false = eval budget exhausted).
+    pub converged: bool,
+}
+
+/// Minimize `f` over the positive orthant with box bounds
+/// `lo[i] <= x[i] <= hi[i]` (all positive), starting at `x0`.
+///
+/// `f` may return `f64::INFINITY` to reject a point (e.g. a covariance
+/// that lost positive definiteness — the paper's SP(100%) failure mode).
+pub fn minimize_positive<F: FnMut(&[f64]) -> f64>(
+    mut f: F,
+    x0: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    cfg: &OptimizerConfig,
+) -> OptimResult {
+    let dim = x0.len();
+    assert!(dim > 0 && lo.len() == dim && hi.len() == dim);
+    let clamp_log = |v: f64, i: usize| v.clamp(lo[i].ln(), hi[i].ln());
+    let to_x = |y: &[f64]| -> Vec<f64> { y.iter().map(|v| v.exp()).collect() };
+
+    let mut evals = 0usize;
+    let eval = |y: &[f64], f: &mut F, evals: &mut usize| -> f64 {
+        *evals += 1;
+        let v = f(&to_x(y));
+        if v.is_nan() {
+            f64::INFINITY
+        } else {
+            v
+        }
+    };
+
+    // initial simplex in log-space
+    let y0: Vec<f64> = x0
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| clamp_log(v.max(1e-300).ln(), i))
+        .collect();
+    let mut simplex: Vec<Vec<f64>> = vec![y0.clone()];
+    for i in 0..dim {
+        let mut y = y0.clone();
+        y[i] = clamp_log(y[i] + cfg.initial_step, i);
+        if (y[i] - y0[i]).abs() < 1e-12 {
+            y[i] = clamp_log(y0[i] - cfg.initial_step, i);
+        }
+        simplex.push(y);
+    }
+    let mut fv: Vec<f64> = simplex.iter().map(|y| eval(y, &mut f, &mut evals)).collect();
+
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+    let mut converged = false;
+
+    while evals < cfg.max_evals {
+        // sort ascending by objective
+        let mut order: Vec<usize> = (0..=dim).collect();
+        order.sort_by(|&a, &b| fv[a].partial_cmp(&fv[b]).unwrap());
+        simplex = order.iter().map(|&i| simplex[i].clone()).collect();
+        fv = order.iter().map(|&i| fv[i]).collect();
+
+        // convergence tests
+        let fspread = (fv[dim] - fv[0]).abs();
+        let xspread = (0..dim)
+            .map(|i| {
+                simplex
+                    .iter()
+                    .map(|y| y[i])
+                    .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), v| {
+                        (lo.min(v), hi.max(v))
+                    })
+            })
+            .map(|(lo, hi)| hi - lo)
+            .fold(0.0f64, f64::max);
+        if fspread < cfg.ftol && fv[0].is_finite() || xspread < cfg.xtol {
+            converged = true;
+            break;
+        }
+
+        // centroid of all but worst
+        let mut c = vec![0.0; dim];
+        for y in simplex.iter().take(dim) {
+            for i in 0..dim {
+                c[i] += y[i] / dim as f64;
+            }
+        }
+        let worst = simplex[dim].clone();
+        let mk = |t: f64| -> Vec<f64> {
+            (0..dim)
+                .map(|i| clamp_log(c[i] + t * (c[i] - worst[i]), i))
+                .collect()
+        };
+
+        // reflection
+        let yr = mk(alpha);
+        let fr = eval(&yr, &mut f, &mut evals);
+        if fr < fv[0] {
+            // expansion
+            let ye = mk(gamma);
+            let fe = eval(&ye, &mut f, &mut evals);
+            if fe < fr {
+                simplex[dim] = ye;
+                fv[dim] = fe;
+            } else {
+                simplex[dim] = yr;
+                fv[dim] = fr;
+            }
+        } else if fr < fv[dim - 1] {
+            simplex[dim] = yr;
+            fv[dim] = fr;
+        } else {
+            // contraction (outside if fr < worst, inside otherwise)
+            let yc = if fr < fv[dim] { mk(rho) } else { mk(-rho) };
+            let fc = eval(&yc, &mut f, &mut evals);
+            if fc < fv[dim].min(fr) {
+                simplex[dim] = yc;
+                fv[dim] = fc;
+            } else {
+                // shrink toward best
+                for k in 1..=dim {
+                    let base = simplex[0].clone();
+                    for i in 0..dim {
+                        simplex[k][i] =
+                            clamp_log(base[i] + sigma * (simplex[k][i] - base[i]), i);
+                    }
+                    fv[k] = eval(&simplex[k].clone(), &mut f, &mut evals);
+                }
+            }
+        }
+    }
+
+    let best = fv
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    OptimResult { x: to_x(&simplex[best]), fx: fv[best], evals, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic_in_log_space() {
+        // f(x) = (ln x - ln 2)^2, minimum at x = 2
+        let r = minimize_positive(
+            |x| (x[0].ln() - 2.0f64.ln()).powi(2),
+            &[0.5],
+            &[1e-3],
+            &[1e3],
+            &OptimizerConfig { ftol: 1e-12, xtol: 1e-10, ..Default::default() },
+        );
+        assert!((r.x[0] - 2.0).abs() < 1e-3, "{:?}", r);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn recovers_multidim_minimum() {
+        // rosenbrock-ish in 3 positive dims, min at (1, 2, 0.5)
+        let target = [1.0f64, 2.0, 0.5];
+        let r = minimize_positive(
+            |x| {
+                x.iter()
+                    .zip(target.iter())
+                    .map(|(a, b)| (a.ln() - b.ln()).powi(2))
+                    .sum::<f64>()
+            },
+            &[0.3, 0.3, 0.3],
+            &[1e-3, 1e-3, 1e-3],
+            &[1e3, 1e3, 1e3],
+            &OptimizerConfig {
+                max_evals: 2000,
+                ftol: 1e-14,
+                xtol: 1e-10,
+                ..Default::default()
+            },
+        );
+        for (a, b) in r.x.iter().zip(target.iter()) {
+            assert!((a - b).abs() / b < 0.01, "{:?}", r.x);
+        }
+    }
+
+    #[test]
+    fn respects_bounds() {
+        // unbounded minimum at x -> 0, but lo = 0.1
+        let r = minimize_positive(
+            |x| x[0],
+            &[5.0],
+            &[0.1],
+            &[10.0],
+            &OptimizerConfig::default(),
+        );
+        assert!(r.x[0] >= 0.1 - 1e-12);
+        assert!((r.x[0] - 0.1).abs() < 0.05, "{:?}", r);
+    }
+
+    #[test]
+    fn survives_infinite_regions() {
+        // f = inf for x > 1 (mimics PD failure), min at boundary-ish 1
+        let r = minimize_positive(
+            |x| if x[0] > 1.0 { f64::INFINITY } else { (x[0] - 1.0).powi(2) },
+            &[0.2],
+            &[1e-3],
+            &[1e3],
+            &OptimizerConfig { max_evals: 400, ..Default::default() },
+        );
+        assert!(r.fx.is_finite());
+        assert!((r.x[0] - 1.0).abs() < 0.1, "{:?}", r);
+    }
+
+    #[test]
+    fn eval_budget_respected() {
+        let mut count = 0;
+        let _ = minimize_positive(
+            |x| {
+                count += 1;
+                x[0]
+            },
+            &[1.0],
+            &[0.5],
+            &[2.0],
+            &OptimizerConfig { max_evals: 30, ftol: 0.0, xtol: 0.0, ..Default::default() },
+        );
+        assert!(count <= 33, "count={count}"); // simplex init + loop slack
+    }
+}

@@ -1,0 +1,265 @@
+//! Kriging prediction and cross-validated PMSE (paper SSVIII.D).
+//!
+//! With the Gaussian model fitted, the conditional mean at unobserved
+//! sites s* is the simple-kriging predictor
+//! `mu* = Sigma_{*,o} Sigma_{o,o}^{-1} z`, computed through the tile
+//! factor: two triangular solves give `w = Sigma^{-1} z`, then one
+//! cross-covariance product per prediction block.  Prediction quality is
+//! summarized by the paper's PMSE under k-fold cross-validation (k = 10).
+
+use crate::cholesky;
+use crate::error::Result;
+use crate::kernels::{NativeBackend, TileBackend};
+use crate::matern::{matern_block, Location, MaternParams, Metric};
+use crate::mle::MleConfig;
+use crate::rng::Xoshiro256pp;
+use crate::scheduler::Scheduler;
+use crate::tile::TileMatrix;
+
+/// A fitted kriging predictor.
+pub struct KrigingModel {
+    train_locs: Vec<Location>,
+    /// `w = Sigma(theta)^{-1} z` (kriging weights against covariances).
+    weights: Vec<f64>,
+    theta: MaternParams,
+    metric: Metric,
+}
+
+impl KrigingModel {
+    /// Factor Sigma over the training sites with `variant` and
+    /// precompute the kriging weights.
+    pub fn fit(
+        locations: &[Location],
+        z: &[f64],
+        theta: MaternParams,
+        cfg: &MleConfig,
+    ) -> Result<Self> {
+        Self::fit_with_backend(locations, z, theta, cfg, &NativeBackend)
+    }
+
+    /// Same as [`Self::fit`] with an explicit backend.
+    pub fn fit_with_backend(
+        locations: &[Location],
+        z: &[f64],
+        theta: MaternParams,
+        cfg: &MleConfig,
+        backend: &dyn TileBackend,
+    ) -> Result<Self> {
+        if locations.len() != z.len() {
+            crate::invalid_arg!("{} locations vs {} values", locations.len(), z.len());
+        }
+        if locations.is_empty() || locations.len() % cfg.nb != 0 {
+            crate::invalid_arg!(
+                "training n = {} must be a multiple of nb = {}",
+                locations.len(),
+                cfg.nb
+            );
+        }
+        let workers = if cfg.num_workers == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            cfg.num_workers
+        };
+        let sched = Scheduler::with_workers(workers);
+        let mut tiles = TileMatrix::zeros(locations.len(), cfg.nb)?;
+        cholesky::generate_and_factorize(
+            &mut tiles,
+            locations,
+            theta,
+            cfg.metric,
+            cfg.nugget,
+            cfg.variant,
+            backend,
+            &sched,
+        )?;
+        let y = cholesky::solve_lower(&tiles, z)?;
+        let weights = cholesky::solve_lower_transposed(&tiles, &y)?;
+        Ok(Self { train_locs: locations.to_vec(), weights, theta, metric: cfg.metric })
+    }
+
+    /// Predict the conditional mean at new sites.
+    pub fn predict(&self, sites: &[Location]) -> Vec<f64> {
+        let m = sites.len();
+        let n = self.train_locs.len();
+        // block the cross-covariance so memory stays at blk*n
+        const BLK: usize = 256;
+        let mut out = vec![0.0; m];
+        let mut buf = vec![0.0; BLK.min(m).max(1) * n];
+        let mut s = 0;
+        while s < m {
+            let e = (s + BLK).min(m);
+            let rows = e - s;
+            let block = &mut buf[..rows * n];
+            // column-major (rows x n): block[r + c*rows] = C(site_r, train_c)
+            matern_block(block, &sites[s..e], &self.train_locs, &self.theta, self.metric);
+            for r in 0..rows {
+                let mut acc = 0.0;
+                for c in 0..n {
+                    acc += block[r + c * rows] * self.weights[c];
+                }
+                out[s + r] = acc;
+            }
+            s = e;
+        }
+        out
+    }
+
+    pub fn theta(&self) -> &MaternParams {
+        &self.theta
+    }
+}
+
+/// Prediction mean squared error.
+pub fn pmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth.iter()).map(|(p, t)| (p - t).powi(2)).sum::<f64>()
+        / pred.len() as f64
+}
+
+/// k-fold cross-validation report.
+#[derive(Clone, Debug)]
+pub struct KfoldReport {
+    pub fold_pmse: Vec<f64>,
+    pub mean_pmse: f64,
+}
+
+/// k-fold cross-validated PMSE (paper uses k = 10): shuffle sites,
+/// hold out each fold, krige it from the rest, average the MSEs.
+///
+/// Requires `n % (k * cfg.nb) == 0` so every training set stays
+/// tile-aligned.
+pub fn kfold_pmse(
+    locations: &[Location],
+    z: &[f64],
+    theta: MaternParams,
+    k: usize,
+    cfg: &MleConfig,
+    seed: u64,
+) -> Result<KfoldReport> {
+    let n = locations.len();
+    if k < 2 || n % (k * cfg.nb) != 0 {
+        crate::invalid_arg!("k-fold needs n % (k * nb) == 0 (n={n}, k={k}, nb={})", cfg.nb);
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let fold_len = n / k;
+    let mut fold_pmse = Vec::with_capacity(k);
+    for f in 0..k {
+        let test: Vec<usize> = idx[f * fold_len..(f + 1) * fold_len].to_vec();
+        let mut mask = vec![false; n];
+        for &t in &test {
+            mask[t] = true;
+        }
+        let (mut tr_locs, mut tr_z, mut te_locs, mut te_z) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for i in 0..n {
+            if mask[i] {
+                te_locs.push(locations[i]);
+                te_z.push(z[i]);
+            } else {
+                tr_locs.push(locations[i]);
+                tr_z.push(z[i]);
+            }
+        }
+        let model = KrigingModel::fit(&tr_locs, &tr_z, theta, cfg)?;
+        let pred = model.predict(&te_locs);
+        fold_pmse.push(pmse(&pred, &te_z));
+    }
+    let mean_pmse = fold_pmse.iter().sum::<f64>() / k as f64;
+    Ok(KfoldReport { fold_pmse, mean_pmse })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cholesky::Variant;
+    use crate::datagen::{FieldConfig, SyntheticField};
+
+    fn field(n: usize, theta: MaternParams, seed: u64) -> SyntheticField {
+        SyntheticField::generate(&FieldConfig { n, theta, seed, ..Default::default() }).unwrap()
+    }
+
+    fn cfg(nb: usize, variant: Variant) -> MleConfig {
+        MleConfig { nb, variant, ..Default::default() }
+    }
+
+    #[test]
+    fn kriging_interpolates_training_points_with_tiny_nugget() {
+        // at observed sites the predictor must reproduce the data
+        let f = field(256, MaternParams::new(1.0, 0.1, 0.5), 1);
+        let model = KrigingModel::fit(
+            &f.locations,
+            &f.values,
+            f.theta,
+            &cfg(64, Variant::FullDp),
+        )
+        .unwrap();
+        let back = model.predict(&f.locations[..32]);
+        for (p, t) in back.iter().zip(f.values[..32].iter()) {
+            assert!((p - t).abs() < 1e-4, "{p} vs {t}");
+        }
+    }
+
+    #[test]
+    fn prediction_beats_mean_baseline_on_correlated_field() {
+        let f = field(512, MaternParams::new(1.0, 0.3, 0.5), 2);
+        // hold out the last 64 (Morton order => spatially scattered is
+        // better, so shuffle indices)
+        let mut idx: Vec<usize> = (0..512).collect();
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        r.shuffle(&mut idx);
+        let test_idx = &idx[..64];
+        let train_idx: Vec<usize> = idx[64..].to_vec();
+        // train size 448 = 7 * 64
+        let tr_locs: Vec<_> = train_idx.iter().map(|&i| f.locations[i]).collect();
+        let tr_z: Vec<_> = train_idx.iter().map(|&i| f.values[i]).collect();
+        let te_locs: Vec<_> = test_idx.iter().map(|&i| f.locations[i]).collect();
+        let te_z: Vec<_> = test_idx.iter().map(|&i| f.values[i]).collect();
+        let model =
+            KrigingModel::fit(&tr_locs, &tr_z, f.theta, &cfg(64, Variant::FullDp)).unwrap();
+        let pred = model.predict(&te_locs);
+        let err = pmse(&pred, &te_z);
+        let mean = te_z.iter().sum::<f64>() / te_z.len() as f64;
+        let base = te_z.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / te_z.len() as f64;
+        assert!(err < base * 0.5, "kriging PMSE {err} not << variance {base}");
+    }
+
+    #[test]
+    fn mixed_precision_pmse_close_to_dp() {
+        let f = field(512, MaternParams::new(1.0, 0.1, 0.5), 4);
+        let dp = kfold_pmse(&f.locations, &f.values, f.theta, 4, &cfg(64, Variant::FullDp), 9)
+            .unwrap();
+        let mp = kfold_pmse(
+            &f.locations,
+            &f.values,
+            f.theta,
+            4,
+            &cfg(64, Variant::MixedPrecision { diag_thick: 2 }),
+            9,
+        )
+        .unwrap();
+        let rel = (dp.mean_pmse - mp.mean_pmse).abs() / dp.mean_pmse;
+        assert!(rel < 0.02, "PMSE gap {rel}: {} vs {}", dp.mean_pmse, mp.mean_pmse);
+    }
+
+    #[test]
+    fn kfold_validates_arguments() {
+        let f = field(256, MaternParams::medium(), 5);
+        // 256 % (10 * 64) != 0
+        assert!(kfold_pmse(&f.locations, &f.values, f.theta, 10, &cfg(64, Variant::FullDp), 0)
+            .is_err());
+        // k = 4, nb = 64: 256 % 256 == 0
+        assert!(kfold_pmse(&f.locations, &f.values, f.theta, 4, &cfg(64, Variant::FullDp), 0)
+            .is_ok());
+    }
+
+    #[test]
+    fn pmse_basics() {
+        assert_eq!(pmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(pmse(&[1.0, 3.0], &[1.0, 1.0]), 2.0);
+    }
+}

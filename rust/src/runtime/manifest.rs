@@ -1,0 +1,209 @@
+//! Parser for `artifacts/manifest.txt`, written by `python/compile/aot.py`.
+//!
+//! Format:
+//! ```text
+//! # nb=64 demo_n=256 demo_nb=64 demo_thick=2 demo_nu=0.5
+//! gemm_f64<TAB>64x64:float64,64x64:float64,64x64:float64<TAB>64x64:float64
+//! ...
+//! ```
+//! The Rust runtime trusts the manifest (not hard-coded shapes) so the
+//! Python and Rust halves cannot drift silently.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Element type of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    F32,
+    Bf16,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float64" => Ok(DType::F64),
+            "float32" => Ok(DType::F32),
+            "bfloat16" => Ok(DType::Bf16),
+            other => Err(Error::Artifact(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one argument or result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    fn parse(s: &str) -> Result<Self> {
+        let (shape_s, dtype_s) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Artifact(format!("bad arg spec {s:?}")))?;
+        let shape = if shape_s.is_empty() {
+            Vec::new() // scalar
+        } else {
+            shape_s
+                .split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::Artifact(format!("bad dim {d:?} in {s:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { shape, dtype: DType::parse(dtype_s)? })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    pub out: ArgSpec,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Build-time tile size of the per-kernel artifacts.
+    pub nb: usize,
+    /// Fused-demo metadata.
+    pub demo_n: usize,
+    pub demo_nb: usize,
+    pub demo_thick: usize,
+    pub entries: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` content.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut nb = 0usize;
+        let mut demo_n = 0usize;
+        let mut demo_nb = 0usize;
+        let mut demo_thick = 0usize;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(hdr) = line.strip_prefix('#') {
+                for kv in hdr.split_whitespace() {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        let parsed = v.parse::<f64>().unwrap_or(0.0);
+                        match k {
+                            "nb" => nb = parsed as usize,
+                            "demo_n" => demo_n = parsed as usize,
+                            "demo_nb" => demo_nb = parsed as usize,
+                            "demo_thick" => demo_thick = parsed as usize,
+                            _ => {}
+                        }
+                    }
+                }
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let name = parts
+                .next()
+                .ok_or_else(|| Error::Artifact(format!("bad manifest line {line:?}")))?
+                .to_string();
+            let args_s = parts
+                .next()
+                .ok_or_else(|| Error::Artifact(format!("missing args in {line:?}")))?;
+            let out_s = parts
+                .next()
+                .ok_or_else(|| Error::Artifact(format!("missing out in {line:?}")))?;
+            let args = args_s
+                .split(',')
+                .map(ArgSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let out = ArgSpec::parse(out_s)?;
+            entries.insert(name.clone(), ArtifactSpec { name, args, out });
+        }
+        if nb == 0 {
+            return Err(Error::Artifact("manifest missing nb header".into()));
+        }
+        Ok(Self { nb, demo_n, demo_nb, demo_thick, entries })
+    }
+
+    /// Load from `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("artifact {name:?} not in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# nb=64 demo_n=256 demo_nb=64 demo_thick=2 demo_nu=0.5
+gemm_f64\t64x64:float64,64x64:float64,64x64:float64\t64x64:float64
+lag2s\t64x64:float64\t64x64:float32
+matern_nu05\t64x2:float64,64x2:float64,3:float64\t64x64:float64
+loglik_dense\t256x256:float64,256:float64\t:float64
+";
+
+    #[test]
+    fn parses_header_and_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.nb, 64);
+        assert_eq!(m.demo_n, 256);
+        assert_eq!(m.demo_thick, 2);
+        assert_eq!(m.entries.len(), 4);
+        let g = m.get("gemm_f64").unwrap();
+        assert_eq!(g.args.len(), 3);
+        assert_eq!(g.args[0].shape, vec![64, 64]);
+        assert_eq!(g.args[0].dtype, DType::F64);
+        let l = m.get("lag2s").unwrap();
+        assert_eq!(l.out.dtype, DType::F32);
+    }
+
+    #[test]
+    fn scalar_output_parses_as_empty_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let ll = m.get("loglik_dense").unwrap();
+        assert!(ll.out.shape.is_empty());
+        assert_eq!(ll.out.elements(), 1);
+        assert_eq!(ll.args[1].shape, vec![256]);
+    }
+
+    #[test]
+    fn missing_nb_is_an_error() {
+        assert!(Manifest::parse("gemm_f64\t64x64:float64\t64x64:float64").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_lookup_fails() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        assert!(Manifest::parse("# nb=64\nx\t64x64:float16\t64x64:float64").is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! Distributed-memory execution model — the Fig. 6 substrate.
+//!
+//! Shaheen-II ran Chameleon's tile Cholesky over MPI with a 2D
+//! block-cyclic tile distribution.  Fig. 6's claims are shape claims:
+//! near-linear strong scaling from 64 to 512 nodes, with the
+//! mixed-precision speedup shrinking as node count grows (communication,
+//! which mixed precision only halves for off-band tiles, takes over from
+//! compute).  Both follow from the computation/communication volume
+//! ratio, so the model replays the real task DAG under:
+//!
+//! * ownership: tile (i, j) lives on node `(i mod pr) * pc + (j mod pc)`;
+//! * compute: each node runs its tasks at `node_gflops` (DP) or
+//!   `node_gflops * sp_speedup` (SP), perfectly overlapped across nodes;
+//! * communication: a task executing on the owner of its output tile
+//!   receives every remote input tile once per (producing task), at
+//!   alpha-beta cost `alpha + bytes/beta`.
+//!
+//! Makespan = max(max-node compute+recv time, critical-path time): the
+//! standard list-scheduling lower-bound pair.
+
+use std::collections::HashMap;
+
+use super::graph::{Access, TaskGraph};
+use super::TaskCost;
+use crate::tile::{Precision, TileId};
+
+/// Cluster description (defaults match a Shaheen-II-like Cray XC40).
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    pub nodes: usize,
+    /// Per-node sustained DP rate, GFLOP/s (dual-socket Haswell ~ 1000).
+    pub node_gflops: f64,
+    /// SP speedup factor over DP on the node (2.0 for CPU SIMD).
+    pub sp_speedup: f64,
+    /// Network latency per message, seconds.
+    pub alpha_s: f64,
+    /// Network bandwidth per node, bytes/second.
+    pub beta_bytes_per_s: f64,
+}
+
+impl ClusterModel {
+    /// Shaheen-II-like defaults at a given node count.
+    pub fn shaheen(nodes: usize) -> Self {
+        Self {
+            nodes,
+            node_gflops: 1_000.0,
+            sp_speedup: 2.0,
+            alpha_s: 3e-6,
+            beta_bytes_per_s: 7e9, // Cray Aries ~ 7 GB/s injection
+        }
+    }
+
+    /// Process grid `pr x pc` as square as possible.
+    pub fn grid(&self) -> (usize, usize) {
+        let mut pr = (self.nodes as f64).sqrt() as usize;
+        while self.nodes % pr != 0 {
+            pr -= 1;
+        }
+        (pr, self.nodes / pr)
+    }
+
+    fn owner(&self, t: TileId) -> usize {
+        let (pr, pc) = self.grid();
+        (t.i % pr) * pc + (t.j % pc)
+    }
+}
+
+/// Modelled distributed execution outcome.
+#[derive(Clone, Debug, Default)]
+pub struct DistributedReport {
+    /// Modelled makespan, seconds.
+    pub time_s: f64,
+    /// Max per-node compute time, seconds.
+    pub max_compute_s: f64,
+    /// Max per-node receive time, seconds.
+    pub max_comm_s: f64,
+    /// Total inter-node traffic, bytes.
+    pub total_comm_bytes: f64,
+    /// Total messages.
+    pub messages: usize,
+    /// Critical-path time, seconds.
+    pub critical_path_s: f64,
+}
+
+/// Replay `graph` on `cluster`.  `nb` is the tile edge.
+pub fn simulate<P: TaskCost>(
+    graph: &TaskGraph<P>,
+    cluster: &ClusterModel,
+    nb: usize,
+) -> DistributedReport {
+    let mut compute = vec![0.0f64; cluster.nodes];
+    let mut comm = vec![0.0f64; cluster.nodes];
+    let mut rep = DistributedReport::default();
+    // last writer of each tile, to attribute producer->consumer transfers
+    let mut producer_node: HashMap<TileId, usize> = HashMap::new();
+    // critical path: completion time per task under infinite parallelism
+    let mut finish = vec![0.0f64; graph.len()];
+    // predecessor lists, inverted from the forward successor edges
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); graph.len()];
+    for (i, t) in graph.tasks().iter().enumerate() {
+        for &s in &t.successors {
+            preds[s].push(i);
+        }
+    }
+
+    for (idx, t) in graph.tasks().iter().enumerate() {
+        let prec = t.payload.precision();
+        let rate = cluster.node_gflops
+            * if prec == Precision::F64 { 1.0 } else { cluster.sp_speedup };
+        let exec_s = t.payload.flops() / (rate * 1e9);
+        let tile_bytes = (nb * nb * prec.bytes()) as f64;
+
+        // node that runs the task = owner of its first written tile
+        let out_tile = t
+            .accesses
+            .iter()
+            .find(|(_, m)| *m == Access::Write)
+            .map(|(tl, _)| *tl)
+            .unwrap_or(t.accesses[0].0);
+        let node = cluster.owner(out_tile);
+
+        let mut ready = 0.0f64;
+        for &(tile, mode) in &t.accesses {
+            if mode == Access::Read {
+                let src = *producer_node.get(&tile).unwrap_or(&cluster.owner(tile));
+                if src != node {
+                    let msg = cluster.alpha_s + tile_bytes / cluster.beta_bytes_per_s;
+                    comm[node] += msg;
+                    rep.total_comm_bytes += tile_bytes;
+                    rep.messages += 1;
+                    ready = ready.max(msg);
+                }
+            }
+        }
+        compute[node] += exec_s;
+
+        // forward critical-path pass (edges point forward, so every
+        // predecessor's finish time is already known)
+        let pred_max = preds[idx].iter().map(|&p| finish[p]).fold(0.0, f64::max);
+        finish[idx] = pred_max + ready + exec_s;
+
+        // record who produced each written tile (for later consumers)
+        for &(tile, mode) in &t.accesses {
+            if mode == Access::Write {
+                producer_node.insert(tile, node);
+            }
+        }
+    }
+
+    rep.max_compute_s = compute.iter().cloned().fold(0.0, f64::max);
+    rep.max_comm_s = comm.iter().cloned().fold(0.0, f64::max);
+    rep.critical_path_s = finish.iter().cloned().fold(0.0, f64::max);
+    let per_node = compute
+        .iter()
+        .zip(comm.iter())
+        .map(|(a, b)| a + b)
+        .fold(0.0, f64::max);
+    rep.time_s = per_node.max(rep.critical_path_s);
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::graph::Access;
+
+    struct Toy {
+        flops: f64,
+        prec: Precision,
+    }
+    impl TaskCost for Toy {
+        fn flops(&self) -> f64 {
+            self.flops
+        }
+        fn precision(&self) -> Precision {
+            self.prec
+        }
+    }
+
+    fn tid(i: usize, j: usize) -> TileId {
+        TileId::new(i, j)
+    }
+
+    fn wide_graph(k: usize) -> TaskGraph<Toy> {
+        let mut g = TaskGraph::new();
+        for i in 0..k {
+            g.submit(
+                Toy { flops: 1e9, prec: Precision::F64 },
+                vec![(tid(i, 0), Access::Write)],
+            );
+        }
+        g
+    }
+
+    #[test]
+    fn grid_is_a_factorization() {
+        for n in [1, 2, 4, 64, 128, 256, 512] {
+            let (pr, pc) = ClusterModel::shaheen(n).grid();
+            assert_eq!(pr * pc, n);
+        }
+    }
+
+    #[test]
+    fn more_nodes_reduce_time_on_wide_graphs() {
+        let g = wide_graph(512);
+        let t64 = simulate(&g, &ClusterModel::shaheen(64), 256).time_s;
+        let t256 = simulate(&g, &ClusterModel::shaheen(256), 256).time_s;
+        assert!(t256 < t64, "{t256} !< {t64}");
+    }
+
+    #[test]
+    fn remote_reads_generate_traffic_local_reads_do_not() {
+        let c = ClusterModel::shaheen(4); // 2x2 grid
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        // producer on owner(1,1); consumer writes (0,0) reading (1,1):
+        // owner(0,0)=node 0, owner(1,1)=node 3 -> remote
+        g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 1), Access::Write)]);
+        g.submit(
+            Toy { flops: 1e6, prec: Precision::F64 },
+            vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
+        );
+        let rep = simulate(&g, &c, 128);
+        assert_eq!(rep.messages, 1);
+        assert_eq!(rep.total_comm_bytes, 128.0 * 128.0 * 8.0);
+
+        // same-owner read: task writes (1,1) and reads (1,1)'s neighbor
+        // owned by the same node -> no traffic
+        let mut g2: TaskGraph<Toy> = TaskGraph::new();
+        g2.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 1), Access::Write)]);
+        g2.submit(
+            Toy { flops: 1e6, prec: Precision::F64 },
+            vec![(tid(1, 1), Access::Read), (tid(3, 3), Access::Write)],
+        );
+        let rep2 = simulate(&g2, &c, 128);
+        assert_eq!(rep2.messages, 0, "owner(3,3) == owner(1,1) on a 2x2 grid");
+    }
+
+    #[test]
+    fn sp_precision_moves_half_the_bytes() {
+        let c = ClusterModel::shaheen(4);
+        let mk = |prec| {
+            let mut g: TaskGraph<Toy> = TaskGraph::new();
+            g.submit(Toy { flops: 1e6, prec }, vec![(tid(1, 1), Access::Write)]);
+            g.submit(
+                Toy { flops: 1e6, prec },
+                vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
+            );
+            g
+        };
+        let dp = simulate(&mk(Precision::F64), &c, 128);
+        let sp = simulate(&mk(Precision::F32), &c, 128);
+        assert_eq!(sp.total_comm_bytes * 2.0, dp.total_comm_bytes);
+    }
+
+    #[test]
+    fn serial_chain_is_critical_path_bound() {
+        let c = ClusterModel::shaheen(16);
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        for _ in 0..10 {
+            g.submit(Toy { flops: 1e9, prec: Precision::F64 }, vec![(tid(0, 0), Access::Write)]);
+        }
+        let rep = simulate(&g, &c, 256);
+        // 10 GFLOP chain at 1000 GFLOP/s = 10 ms regardless of node count
+        assert!((rep.time_s - 0.01).abs() < 1e-6, "{}", rep.time_s);
+        assert_eq!(rep.critical_path_s, rep.time_s);
+    }
+}

@@ -1,0 +1,232 @@
+//! Sequential-task-flow (STF) dependency graph — the StarPU core idea:
+//! the algorithm *inserts* tasks in program order declaring which tiles it
+//! reads/writes, and the graph infers RAW/WAR/WAW edges automatically.
+//!
+//! The graph is payload-generic: the Cholesky planner attaches a
+//! [`crate::cholesky::KernelCall`] to each node, the tests attach toy
+//! payloads, and the Fig. 5/6 simulators replay the same graphs under
+//! analytic device/network models.
+
+use std::collections::HashMap;
+
+use crate::tile::TileId;
+
+/// Access mode a task declares on a tile (StarPU's R / RW).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+/// Node index within a [`TaskGraph`].
+pub type TaskIdx = usize;
+
+/// One task: payload + declared tile accesses + inferred structure.
+#[derive(Debug)]
+pub struct TaskNode<P> {
+    pub payload: P,
+    pub accesses: Vec<(TileId, Access)>,
+    /// Tasks that must run after this one.
+    pub successors: Vec<TaskIdx>,
+    /// Number of unfinished predecessors (filled by [`TaskGraph::indegrees`]).
+    pub num_predecessors: usize,
+    /// Critical-path height (longest path to a sink), for priority
+    /// scheduling.  Filled by [`TaskGraph::compute_heights`].
+    pub height: usize,
+}
+
+#[derive(Debug, Default)]
+struct TileState {
+    last_writer: Option<TaskIdx>,
+    readers_since_write: Vec<TaskIdx>,
+}
+
+/// STF task graph over tiles.
+#[derive(Debug)]
+pub struct TaskGraph<P> {
+    tasks: Vec<TaskNode<P>>,
+    tiles: HashMap<TileId, TileState>,
+}
+
+impl<P> Default for TaskGraph<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> TaskGraph<P> {
+    pub fn new() -> Self {
+        Self { tasks: Vec::new(), tiles: HashMap::new() }
+    }
+
+    /// Insert a task in program order; dependencies on earlier tasks are
+    /// inferred from overlapping tile accesses:
+    /// * Read  -> RAW edge from the tile's last writer.
+    /// * Write -> WAW edge from the last writer plus WAR edges from every
+    ///   reader since (then this task becomes the last writer).
+    pub fn submit(&mut self, payload: P, accesses: Vec<(TileId, Access)>) -> TaskIdx {
+        let idx = self.tasks.len();
+        let mut preds: Vec<TaskIdx> = Vec::new();
+        for &(tile, mode) in &accesses {
+            let st = self.tiles.entry(tile).or_default();
+            match mode {
+                Access::Read => {
+                    if let Some(w) = st.last_writer {
+                        preds.push(w);
+                    }
+                    st.readers_since_write.push(idx);
+                }
+                Access::Write => {
+                    if let Some(w) = st.last_writer {
+                        preds.push(w);
+                    }
+                    preds.append(&mut st.readers_since_write);
+                    st.last_writer = Some(idx);
+                }
+            }
+        }
+        preds.sort_unstable();
+        preds.dedup();
+        preds.retain(|&p| p != idx);
+        let num_predecessors = preds.len();
+        for &p in &preds {
+            self.tasks[p].successors.push(idx);
+        }
+        self.tasks.push(TaskNode {
+            payload,
+            accesses,
+            successors: Vec::new(),
+            num_predecessors,
+            height: 0,
+        });
+        idx
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+    pub fn task(&self, i: TaskIdx) -> &TaskNode<P> {
+        &self.tasks[i]
+    }
+    pub fn tasks(&self) -> &[TaskNode<P>] {
+        &self.tasks
+    }
+
+    /// Indices of tasks with no predecessors.
+    pub fn roots(&self) -> Vec<TaskIdx> {
+        (0..self.tasks.len())
+            .filter(|&i| self.tasks[i].num_predecessors == 0)
+            .collect()
+    }
+
+    /// Fill `height` = longest successor path (0 at sinks).  Tasks were
+    /// inserted in program order, so every edge points forward and a
+    /// single reverse sweep suffices.
+    pub fn compute_heights(&mut self) {
+        for i in (0..self.tasks.len()).rev() {
+            let h = self.tasks[i]
+                .successors
+                .iter()
+                .map(|&s| self.tasks[s].height + 1)
+                .max()
+                .unwrap_or(0);
+            self.tasks[i].height = h;
+        }
+    }
+
+    /// Critical-path length in tasks (max height + 1), after
+    /// [`Self::compute_heights`].
+    pub fn critical_path_len(&self) -> usize {
+        self.tasks.iter().map(|t| t.height + 1).max().unwrap_or(0)
+    }
+
+    /// Validate the DAG invariant: every edge points to a later index.
+    pub fn assert_forward_edges(&self) {
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &s in &t.successors {
+                assert!(s > i, "edge {i} -> {s} is not forward");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(i: usize, j: usize) -> TileId {
+        TileId::new(i, j)
+    }
+
+    #[test]
+    fn raw_dependency() {
+        let mut g: TaskGraph<&str> = TaskGraph::new();
+        let w = g.submit("write", vec![(t(0, 0), Access::Write)]);
+        let r = g.submit("read", vec![(t(0, 0), Access::Read)]);
+        assert_eq!(g.task(r).num_predecessors, 1);
+        assert_eq!(g.task(w).successors, vec![r]);
+    }
+
+    #[test]
+    fn war_dependency() {
+        let mut g: TaskGraph<&str> = TaskGraph::new();
+        let _w = g.submit("w0", vec![(t(0, 0), Access::Write)]);
+        let r1 = g.submit("r1", vec![(t(0, 0), Access::Read)]);
+        let r2 = g.submit("r2", vec![(t(0, 0), Access::Read)]);
+        let w2 = g.submit("w2", vec![(t(0, 0), Access::Write)]);
+        // w2 depends on both readers (WAR) and the original writer (WAW,
+        // subsumed transitively but still recorded)
+        assert!(g.task(r1).successors.contains(&w2));
+        assert!(g.task(r2).successors.contains(&w2));
+        assert_eq!(g.task(w2).num_predecessors, 3);
+    }
+
+    #[test]
+    fn independent_tiles_no_edges() {
+        let mut g: TaskGraph<&str> = TaskGraph::new();
+        g.submit("a", vec![(t(0, 0), Access::Write)]);
+        g.submit("b", vec![(t(1, 1), Access::Write)]);
+        assert_eq!(g.roots().len(), 2);
+    }
+
+    #[test]
+    fn readers_run_concurrently() {
+        let mut g: TaskGraph<&str> = TaskGraph::new();
+        g.submit("w", vec![(t(0, 0), Access::Write)]);
+        let r1 = g.submit("r1", vec![(t(0, 0), Access::Read)]);
+        let r2 = g.submit("r2", vec![(t(0, 0), Access::Read)]);
+        // no edge between the two readers
+        assert!(!g.task(r1).successors.contains(&r2));
+        assert_eq!(g.task(r2).num_predecessors, 1);
+    }
+
+    #[test]
+    fn duplicate_access_tiles_dedup_edges() {
+        let mut g: TaskGraph<&str> = TaskGraph::new();
+        let w = g.submit("w", vec![(t(1, 0), Access::Write), (t(1, 1), Access::Write)]);
+        let u = g.submit(
+            "u",
+            vec![(t(1, 0), Access::Read), (t(1, 1), Access::Write)],
+        );
+        assert_eq!(g.task(u).num_predecessors, 1, "one edge despite two overlaps");
+        assert_eq!(g.task(w).successors, vec![u]);
+    }
+
+    #[test]
+    fn heights_reflect_chain_length() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        for k in 0..5 {
+            g.submit(k, vec![(t(0, 0), Access::Write)]);
+        }
+        g.submit(99, vec![(t(3, 3), Access::Write)]);
+        g.compute_heights();
+        assert_eq!(g.task(0).height, 4);
+        assert_eq!(g.task(4).height, 0);
+        assert_eq!(g.task(5).height, 0);
+        assert_eq!(g.critical_path_len(), 5);
+        g.assert_forward_edges();
+    }
+}

@@ -1,0 +1,31 @@
+//! Dynamic task runtime — the StarPU analog (paper SSI/SSVII).
+//!
+//! * [`graph`] — sequential-task-flow DAG inference over tile accesses.
+//! * [`worker`] — thread-pool dataflow executor with Fifo/Lifo/
+//!   critical-path ready-queue policies and per-task tracing.
+//! * [`datamove`] — CPU+GPU transfer-volume model replaying real DAGs
+//!   (Fig. 5 substrate).
+//! * [`distributed`] — 2D block-cyclic multi-node model (Fig. 6
+//!   substrate).
+//! * [`trace`] — execution spans and utilization metrics.
+
+pub mod datamove;
+pub mod distributed;
+pub mod graph;
+pub mod trace;
+pub mod worker;
+
+pub use graph::{Access, TaskGraph, TaskIdx, TaskNode};
+pub use trace::{ExecutionTrace, TaskSpan};
+pub use worker::{Scheduler, SchedulerConfig, SchedulingPolicy};
+
+use crate::tile::Precision;
+
+/// Cost metadata the analytic device/network models need from a task
+/// payload.  Implemented by [`crate::cholesky::KernelCall`].
+pub trait TaskCost {
+    /// Floating-point operations this task performs.
+    fn flops(&self) -> f64;
+    /// Arithmetic precision the task runs at.
+    fn precision(&self) -> Precision;
+}

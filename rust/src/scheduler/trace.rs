@@ -1,0 +1,95 @@
+//! Execution traces — per-task spans (worker, start, end) recorded by the
+//! scheduler, plus derived utilization metrics.  The paper's analysis of
+//! StarPU behaviour ("StarPU moves data around much more than expected")
+//! is the kind of observation these traces exist to support.
+
+/// One executed task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSpan {
+    pub task: usize,
+    pub worker: usize,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl TaskSpan {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+/// Trace of one scheduler run.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutionTrace {
+    pub spans: Vec<TaskSpan>,
+    /// Wall-clock of the whole run.
+    pub wall_ns: u64,
+}
+
+impl ExecutionTrace {
+    /// Sum of task durations (total busy time).
+    pub fn busy_ns(&self) -> u64 {
+        self.spans.iter().map(TaskSpan::duration_ns).sum()
+    }
+
+    /// Busy time / (workers x wall): 1.0 = perfectly packed schedule.
+    pub fn utilization(&self, num_workers: usize) -> f64 {
+        if self.wall_ns == 0 || num_workers == 0 {
+            return 0.0;
+        }
+        self.busy_ns() as f64 / (self.wall_ns as f64 * num_workers as f64)
+    }
+
+    /// Number of distinct workers that executed at least one task.
+    pub fn workers_used(&self) -> usize {
+        let mut ws: Vec<usize> = self.spans.iter().map(|s| s.worker).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws.len()
+    }
+
+    /// CSV dump (`task,worker,start_ns,end_ns`) for offline gantt plots.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("task,worker,start_ns,end_ns\n");
+        for sp in &self.spans {
+            s.push_str(&format!("{},{},{},{}\n", sp.task, sp.worker, sp.start_ns, sp.end_ns));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> ExecutionTrace {
+        ExecutionTrace {
+            spans: vec![
+                TaskSpan { task: 0, worker: 0, start_ns: 0, end_ns: 100 },
+                TaskSpan { task: 1, worker: 1, start_ns: 0, end_ns: 50 },
+            ],
+            wall_ns: 100,
+        }
+    }
+
+    #[test]
+    fn busy_and_utilization() {
+        let t = mk();
+        assert_eq!(t.busy_ns(), 150);
+        assert!((t.utilization(2) - 0.75).abs() < 1e-12);
+        assert_eq!(t.workers_used(), 2);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = mk().to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("task,worker"));
+    }
+
+    #[test]
+    fn empty_trace_zero_utilization() {
+        let t = ExecutionTrace::default();
+        assert_eq!(t.utilization(4), 0.0);
+    }
+}

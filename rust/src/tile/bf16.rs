@@ -1,0 +1,97 @@
+//! Software bfloat16 — the third precision level of the paper's SSIX
+//! future work ("half-precision, single-precision, and double-precision
+//! ... ignoring the accuracy in the very far off-diagonal tiles").
+//!
+//! We model MXU/tensor-core semantics: values are *stored* in bf16 (2
+//! bytes, 7-bit stored mantissa) while arithmetic runs in f32 with the inputs
+//! rounded through bf16 — exactly what `preferred_element_type=f32` gives
+//! the `gemm_bf16` AOT artifact on the Python side.  The Rust in-memory
+//! representation keeps the f32 working buffer and re-quantizes after
+//! every write, which is bit-equivalent to bf16 storage and lets all
+//! f32 kernels be reused.
+
+/// Round an f32 to the nearest bfloat16 (round-to-nearest-even), returned
+/// as the bf16 bit pattern.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even on the truncated 16 bits
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x0000_7FFF + lsb) >> 16) as u16
+}
+
+/// Expand a bf16 bit pattern to f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Quantize an f32 value through bf16 (the storage round-trip).
+#[inline]
+pub fn quantize_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Quantize a whole buffer in place.
+pub fn quantize_bf16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_bf16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        // powers of two and small integers are exactly representable
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 256.0, -0.25] {
+            assert_eq!(quantize_bf16(v), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_by_bf16_eps() {
+        // bf16 has 7 stored mantissa bits -> ulp = 2^-7, so
+        // round-to-nearest error <= 2^-8 relative
+        let eps = 1.0 / 256.0;
+        let mut x = 0.1f32;
+        for _ in 0..200 {
+            x = x * 1.07 + 0.013;
+            let q = quantize_bf16(x);
+            assert!(((q - x) / x).abs() <= eps, "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // bf16 ulp near 1.0 is 2^-7; 1.0 + 2^-8 is exactly halfway
+        // between 1.0 and 1.0 + 2^-7 — round-to-even picks 1.0
+        let halfway = 1.0f32 + 1.0 / 256.0;
+        assert_eq!(quantize_bf16(halfway), 1.0);
+        // just above halfway rounds up
+        let above = 1.0f32 + 1.0 / 256.0 + 1.0 / 2048.0;
+        assert_eq!(quantize_bf16(above), 1.0 + 1.0 / 128.0);
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(quantize_bf16(f32::NAN).is_nan());
+        assert_eq!(quantize_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn slice_quantize() {
+        let mut xs = vec![0.1f32, 0.2, 0.3];
+        quantize_bf16_slice(&mut xs);
+        for x in &xs {
+            assert_eq!(quantize_bf16(*x), *x, "idempotent after one pass");
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Precision conversion kernels — the paper's `dconv2s` / `sconv2d`
+//! (a.k.a. LAPACK `dlag2s`/`slag2d`) applied tile-wise.
+//!
+//! These are the native analogs of the `lag2s`/`lag2d` HLO artifacts.  The
+//! paper's transpose-into-the-upper-triangle trick is a storage-packing
+//! detail; our [`super::TileSlot`] keeps the shadow alongside the tile, so
+//! conversion is a straight cast loop (which LLVM vectorizes).
+
+/// Demote f64 -> f32 (`dlag2s`).  Values beyond f32 range become ±inf —
+/// same contract as LAPACK (callers on covariance data never hit it).
+#[inline]
+pub fn demote(src: &[f64], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = *s as f32;
+    }
+}
+
+/// Promote f32 -> f64 (`slag2d`), exact.
+#[inline]
+pub fn promote(src: &[f32], dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = *s as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demote_then_promote_loses_at_most_f32_eps() {
+        let src: Vec<f64> = (0..256).map(|i| (i as f64 * 0.731).sin() * 3.7).collect();
+        let mut sp = vec![0.0f32; 256];
+        let mut back = vec![0.0f64; 256];
+        demote(&src, &mut sp);
+        promote(&sp, &mut back);
+        for (a, b) in src.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= a.abs() * f32::EPSILON as f64);
+        }
+    }
+
+    #[test]
+    fn promote_is_exact() {
+        let sp: Vec<f32> = (0..64).map(|i| i as f32 * 0.1).collect();
+        let mut dp = vec![0.0f64; 64];
+        promote(&sp, &mut dp);
+        for (s, d) in sp.iter().zip(dp.iter()) {
+            assert_eq!(*s as f64, *d);
+        }
+    }
+}

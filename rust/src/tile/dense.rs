@@ -1,0 +1,227 @@
+//! Small dense column-major matrix used at the edges of the system:
+//! test oracles, kriging cross-covariance blocks, and the data generator.
+//! The O(n^3) tile machinery in [`crate::cholesky`] is the scalable path;
+//! this type deliberately stays simple.
+
+use crate::error::{Error, Result};
+
+/// Dense square column-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix of order `n`.
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_vec(n: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != n * n {
+            crate::invalid_arg!("dense buffer length {} != {n}^2", data.len());
+        }
+        Ok(Self { n, data })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i + j * self.n]
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i + j * self.n] = v;
+    }
+
+    /// In-place lower Cholesky (unblocked reference implementation, used
+    /// as the test oracle and by the data generator at moderate n).
+    /// Strict upper triangle is zeroed.
+    pub fn cholesky_in_place(&mut self) -> Result<()> {
+        let n = self.n;
+        for k in 0..n {
+            let pivot = self.get(k, k);
+            if !(pivot > 0.0) {
+                return Err(Error::NotPositiveDefinite { pivot, index: k });
+            }
+            let d = pivot.sqrt();
+            for i in k..n {
+                self.data[i + k * n] /= d;
+            }
+            for j in (k + 1)..n {
+                let ljk = self.data[j + k * n];
+                if ljk != 0.0 {
+                    // axpy on column j, rows j..n
+                    let (colk, colj) = {
+                        let (a, b) = self.data.split_at_mut(j * n);
+                        (&a[k * n..k * n + n], &mut b[..n])
+                    };
+                    for i in j..n {
+                        colj[i] -= colk[i] * ljk;
+                    }
+                }
+            }
+        }
+        // zero strict upper
+        for j in 1..n {
+            for i in 0..j {
+                self.data[i + j * n] = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward substitution `L x = b` (self must be lower triangular).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        debug_assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for j in 0..n {
+            x[j] /= self.get(j, j);
+            let xj = x[j];
+            for i in (j + 1)..n {
+                x[i] -= self.get(i, j) * xj;
+            }
+        }
+        x
+    }
+
+    /// Backward substitution `L^T x = b`.
+    pub fn solve_lower_transposed(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = b.to_vec();
+        for j in (0..n).rev() {
+            x[j] /= self.get(j, j);
+            let xj = x[j];
+            for i in 0..j {
+                x[i] -= self.get(j, i) * xj;
+            }
+        }
+        x
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for j in 0..n {
+            let xj = x[j];
+            if xj != 0.0 {
+                let col = &self.data[j * n..(j + 1) * n];
+                for i in 0..n {
+                    y[i] += col[i] * xj;
+                }
+            }
+        }
+        y
+    }
+
+    /// `C = A B^T` (naive; oracle-only).
+    pub fn matmul_nt(&self, other: &DenseMatrix) -> DenseMatrix {
+        let n = self.n;
+        let mut c = DenseMatrix::zeros(n);
+        for j in 0..n {
+            for k in 0..n {
+                let b = other.get(j, k);
+                if b != 0.0 {
+                    for i in 0..n {
+                        c.data[i + j * n] += self.data[i + k * n] * b;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Max absolute entrywise difference.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> DenseMatrix {
+        use crate::rng::Xoshiro256pp;
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut b = DenseMatrix::zeros(n);
+        for j in 0..n {
+            for i in 0..n {
+                b.set(i, j, r.standard_normal());
+            }
+        }
+        let mut a = b.matmul_nt(&b);
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(24, 1);
+        let mut l = a.clone();
+        l.cholesky_in_place().unwrap();
+        let llt = l.matmul_nt(&l);
+        assert!(llt.max_abs_diff(&a) < 1e-10 * a.fro_norm());
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = DenseMatrix::zeros(3);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, -2.0);
+        a.set(2, 2, 1.0);
+        match a.cholesky_in_place() {
+            Err(Error::NotPositiveDefinite { index, .. }) => assert_eq!(index, 1),
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let a = spd(16, 2);
+        let mut l = a.clone();
+        l.cholesky_in_place().unwrap();
+        let b: Vec<f64> = (0..16).map(|i| (i as f64 * 0.3).cos()).collect();
+        // A x = b  via  L (L^T x) = b
+        let y = l.solve_lower(&b);
+        let x = l.solve_lower_transposed(&y);
+        let back = a.matvec(&x);
+        for (u, v) in back.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let mut eye = DenseMatrix::zeros(8);
+        for i in 0..8 {
+            eye.set(i, i, 1.0);
+        }
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert_eq!(eye.matvec(&x), x);
+    }
+}

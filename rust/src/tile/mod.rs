@@ -1,0 +1,388 @@
+//! Tile-matrix storage with per-tile precision — the Chameleon-descriptor
+//! analog that Algorithm 1 operates on.
+//!
+//! The paper's storage scheme: the lower triangle holds the
+//! double-precision tiles being factored; the *other* half of the matrix
+//! (plus one tile-row vector for the diagonal) is reused to hold the
+//! single-precision copies of off-band tiles.  We model the same dual
+//! storage explicitly: each lower tile slot owns its canonical f64 buffer
+//! and, if the precision policy marks it single, an f32 shadow buffer.
+//! [`TileMatrix::sp_bytes`]/[`dp_bytes`] expose the footprint accounting
+//! that feeds the Fig. 5 data-movement model.
+//!
+//! Concurrency contract: the scheduler guarantees conflicting accesses are
+//! ordered by DAG edges, so tiles are handed to workers through
+//! [`TileMatrix::tile_ptr`] (an `UnsafeCell` projection).  Debug builds
+//! carry a per-tile reader/writer guard that turns a scheduling bug into a
+//! deterministic panic instead of silent data corruption (exercised by the
+//! failure-injection tests in `scheduler`).
+
+pub mod bf16;
+pub mod convert;
+pub mod dense;
+
+pub use bf16::{quantize_bf16, quantize_bf16_slice};
+pub use convert::{demote, promote};
+pub use dense::DenseMatrix;
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicI32, Ordering};
+
+use crate::error::Result;
+
+/// Floating-point precision of a tile's *active* representation.
+///
+/// `Bf16` is the paper's SSIX third level: bf16 *storage* with f32
+/// arithmetic (MXU semantics) — see [`bf16`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Bf16,
+    F32,
+    F64,
+}
+
+impl Precision {
+    /// Bytes per element in storage/transfer.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+}
+
+/// One lower-triangle tile slot: canonical f64 storage plus the optional
+/// f32 shadow the paper keeps in the matrix's unused half.
+#[derive(Debug)]
+pub struct TileSlot {
+    /// Column-major `nb x nb` double-precision buffer (always present —
+    /// Algorithm 1 promotes SP results back so the DP view is total).
+    pub dp: Vec<f64>,
+    /// Column-major f32 shadow; `Some` iff the precision policy marks the
+    /// tile single-precision.
+    pub sp: Option<Vec<f32>>,
+}
+
+/// Per-tile access guard state (debug builds): 0 = free, >0 = reader
+/// count, -1 = writer.
+#[derive(Debug)]
+struct Guard(AtomicI32);
+
+/// Symmetric lower-triangular tile matrix of order `n` with tile size `nb`.
+///
+/// Tiles are indexed `(i, j)` with `0 <= j <= i < p`, `p = n / nb`.
+pub struct TileMatrix {
+    n: usize,
+    nb: usize,
+    p: usize,
+    /// Lower-triangle slots, row-major over the triangle:
+    /// index = i*(i+1)/2 + j.
+    slots: Vec<UnsafeCell<TileSlot>>,
+    guards: Vec<Guard>,
+}
+
+// SAFETY: concurrent access to slots is mediated by the scheduler's
+// dependency DAG (plus the debug guards). See module docs.
+unsafe impl Sync for TileMatrix {}
+unsafe impl Send for TileMatrix {}
+
+/// Identifier of a tile within a [`TileMatrix`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileId {
+    pub i: usize,
+    pub j: usize,
+}
+
+impl TileId {
+    pub fn new(i: usize, j: usize) -> Self {
+        debug_assert!(j <= i, "lower-triangle tile ids require j <= i");
+        Self { i, j }
+    }
+    pub fn is_diagonal(self) -> bool {
+        self.i == self.j
+    }
+}
+
+impl TileMatrix {
+    /// Allocate a zeroed tile matrix.  `n` must be divisible by `nb`.
+    pub fn zeros(n: usize, nb: usize) -> Result<Self> {
+        if n == 0 || nb == 0 || n % nb != 0 {
+            crate::invalid_arg!("n={n} must be a positive multiple of nb={nb}");
+        }
+        let p = n / nb;
+        let count = p * (p + 1) / 2;
+        let slots = (0..count)
+            .map(|_| UnsafeCell::new(TileSlot { dp: vec![0.0; nb * nb], sp: None }))
+            .collect();
+        let guards = (0..count).map(|_| Guard(AtomicI32::new(0))).collect();
+        Ok(Self { n, nb, p, slots, guards })
+    }
+
+    /// Matrix order.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    /// Tile edge.
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+    /// Tiles per side.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    fn idx(&self, t: TileId) -> usize {
+        debug_assert!(t.j <= t.i && t.i < self.p, "tile {t:?} out of range p={}", self.p);
+        t.i * (t.i + 1) / 2 + t.j
+    }
+
+    /// All lower-triangle tile ids, diagonal included, in column-major
+    /// factorization order.
+    pub fn tile_ids(&self) -> impl Iterator<Item = TileId> + '_ {
+        let p = self.p;
+        (0..p).flat_map(move |j| (j..p).map(move |i| TileId::new(i, j)))
+    }
+
+    /// Raw slot pointer for the scheduler/executor path.
+    ///
+    /// # Safety
+    /// Caller must guarantee (via DAG ordering) that no conflicting access
+    /// to the same tile is live.  Use [`Self::guard_acquire`]/`release` in
+    /// the executor so debug builds verify the guarantee.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn tile_ptr(&self, t: TileId) -> &mut TileSlot {
+        &mut *self.slots[self.idx(t)].get()
+    }
+
+    /// Shared reference for single-threaded (post-scheduler) inspection.
+    pub fn tile(&self, t: TileId) -> &TileSlot {
+        // SAFETY: &self prevents scheduler-mediated mutation only if no
+        // run is in flight; callers use this after `Scheduler::run` joins.
+        unsafe { &*self.slots[self.idx(t)].get() }
+    }
+
+    /// Exclusive reference for single-threaded setup.
+    pub fn tile_mut(&mut self, t: TileId) -> &mut TileSlot {
+        let idx = self.idx(t);
+        self.slots[idx].get_mut()
+    }
+
+    /// Debug-mode access guard: acquire read (write=false) or write access.
+    /// Panics on conflict — a scheduler-discipline violation.
+    pub fn guard_acquire(&self, t: TileId, write: bool) {
+        if cfg!(debug_assertions) {
+            let g = &self.guards[self.idx(t)].0;
+            if write {
+                let prev = g.compare_exchange(0, -1, Ordering::AcqRel, Ordering::Acquire);
+                assert!(prev.is_ok(), "write-access race on tile {t:?}");
+            } else {
+                let prev = g.fetch_add(1, Ordering::AcqRel);
+                assert!(prev >= 0, "read-while-write race on tile {t:?}");
+            }
+        }
+    }
+
+    /// Release a previously acquired guard.
+    pub fn guard_release(&self, t: TileId, write: bool) {
+        if cfg!(debug_assertions) {
+            let g = &self.guards[self.idx(t)].0;
+            if write {
+                let prev = g.swap(0, Ordering::AcqRel);
+                debug_assert_eq!(prev, -1);
+            } else {
+                let prev = g.fetch_sub(1, Ordering::AcqRel);
+                debug_assert!(prev > 0);
+            }
+        }
+    }
+
+    /// Load the lower triangle of a dense column-major `n x n` matrix.
+    pub fn from_dense(a: &DenseMatrix, nb: usize) -> Result<Self> {
+        let n = a.n();
+        let mut tm = Self::zeros(n, nb)?;
+        for j in 0..tm.p {
+            for i in j..tm.p {
+                let t = TileId::new(i, j);
+                let slot = tm.tile_mut(t);
+                for c in 0..nb {
+                    for r in 0..nb {
+                        slot.dp[r + c * nb] = a.get(i * nb + r, j * nb + c);
+                    }
+                }
+            }
+        }
+        Ok(tm)
+    }
+
+    /// Reassemble into a dense column-major matrix.  `lower_only = true`
+    /// zeroes the strict upper triangle (the factor view); otherwise the
+    /// symmetric completion is returned (the covariance view).
+    pub fn to_dense(&self, lower_only: bool) -> DenseMatrix {
+        let n = self.n;
+        let nb = self.nb;
+        let mut out = DenseMatrix::zeros(n);
+        for j in 0..self.p {
+            for i in j..self.p {
+                let slot = self.tile(TileId::new(i, j));
+                for c in 0..nb {
+                    for r in 0..nb {
+                        let (gr, gc) = (i * nb + r, j * nb + c);
+                        let v = slot.dp[r + c * nb];
+                        if gr >= gc {
+                            out.set(gr, gc, v);
+                            if !lower_only && gr != gc {
+                                out.set(gc, gr, v);
+                            }
+                        } else if !lower_only || i > j {
+                            // off-diagonal tile upper part (i > j): still
+                            // below the global diagonal? no — r < c within
+                            // a diagonal tile only. For i > j, gr >= gc
+                            // always fails only in diagonal tiles.
+                            out.set(gr, gc, v);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Allocate the f32 shadow for every tile the policy marks single
+    /// (Algorithm 1 lines 2-6: the initial `dconv2s` sweep) and demote the
+    /// current contents into it.
+    pub fn demote_offband(&mut self, is_dp: impl Fn(usize, usize) -> bool) {
+        let nb = self.nb;
+        for j in 0..self.p {
+            for i in j..self.p {
+                if !is_dp(i, j) {
+                    let slot = self.tile_mut(TileId::new(i, j));
+                    let mut sp = vec![0.0f32; nb * nb];
+                    demote(&slot.dp, &mut sp);
+                    slot.sp = Some(sp);
+                }
+            }
+        }
+    }
+
+    /// Bytes of live DP storage.
+    pub fn dp_bytes(&self) -> usize {
+        self.slots.len() * self.nb * self.nb * 8
+    }
+
+    /// Bytes of live SP shadow storage.
+    pub fn sp_bytes(&self) -> usize {
+        let per = self.nb * self.nb * 4;
+        (0..self.slots.len())
+            .filter(|&k| unsafe { (*self.slots[k].get()).sp.is_some() })
+            .count()
+            * per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_dense(n: usize) -> DenseMatrix {
+        let mut a = DenseMatrix::zeros(n);
+        for j in 0..n {
+            for i in 0..n {
+                a.set(i, j, (i * n + j) as f64 * 0.01 - 0.3);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn zeros_rejects_bad_shapes() {
+        assert!(TileMatrix::zeros(100, 32).is_err());
+        assert!(TileMatrix::zeros(0, 32).is_err());
+        assert!(TileMatrix::zeros(128, 0).is_err());
+        assert!(TileMatrix::zeros(128, 32).is_ok());
+    }
+
+    #[test]
+    fn tile_count_is_triangular() {
+        let tm = TileMatrix::zeros(128, 32).unwrap();
+        assert_eq!(tm.p(), 4);
+        assert_eq!(tm.tile_ids().count(), 10);
+    }
+
+    #[test]
+    fn dense_roundtrip_symmetric() {
+        let n = 96;
+        let mut a = sample_dense(n);
+        // symmetrize
+        for j in 0..n {
+            for i in 0..j {
+                let v = a.get(j, i);
+                a.set(i, j, v);
+            }
+        }
+        let tm = TileMatrix::from_dense(&a, 32).unwrap();
+        let back = tm.to_dense(false);
+        for j in 0..n {
+            for i in 0..n {
+                assert_eq!(back.get(i, j), a.get(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_only_zeroes_strict_upper() {
+        let n = 64;
+        let mut a = sample_dense(n);
+        for j in 0..n {
+            for i in 0..j {
+                let v = a.get(j, i);
+                a.set(i, j, v);
+            }
+        }
+        let tm = TileMatrix::from_dense(&a, 32).unwrap();
+        let l = tm.to_dense(true);
+        for j in 0..n {
+            for i in 0..j {
+                assert_eq!(l.get(i, j), 0.0);
+            }
+        }
+        assert_eq!(l.get(5, 3), a.get(5, 3));
+    }
+
+    #[test]
+    fn demote_offband_allocates_shadows() {
+        let mut tm = TileMatrix::zeros(160, 32).unwrap();
+        tm.demote_offband(|i, j| (i as isize - j as isize).unsigned_abs() < 2);
+        // p = 5; band tiles |i-j| < 2 have no shadow
+        assert!(tm.tile(TileId::new(0, 0)).sp.is_none());
+        assert!(tm.tile(TileId::new(1, 0)).sp.is_none());
+        assert!(tm.tile(TileId::new(2, 0)).sp.is_some());
+        assert!(tm.tile(TileId::new(4, 2)).sp.is_some());
+        assert!(tm.sp_bytes() > 0);
+        assert_eq!(tm.sp_bytes(), 6 * 32 * 32 * 4); // tiles (2,0),(3,0),(4,0),(3,1),(4,1),(4,2)
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // guards compile out of release builds
+    fn guards_catch_write_write_race() {
+        let tm = TileMatrix::zeros(64, 32).unwrap();
+        let t = TileId::new(1, 0);
+        tm.guard_acquire(t, true);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            tm.guard_acquire(t, true);
+        }));
+        assert!(r.is_err(), "second writer must panic in debug builds");
+        tm.guard_release(t, true);
+    }
+
+    #[test]
+    fn guards_allow_concurrent_readers() {
+        let tm = TileMatrix::zeros(64, 32).unwrap();
+        let t = TileId::new(0, 0);
+        tm.guard_acquire(t, false);
+        tm.guard_acquire(t, false);
+        tm.guard_release(t, false);
+        tm.guard_release(t, false);
+    }
+}

@@ -1,0 +1,138 @@
+//! End-to-end integration: generate -> fit -> predict across variants.
+//! These tests assert the paper's *accuracy* claims at laptop scale:
+//!
+//! * mixed-precision likelihood/estimates/PMSE track full DP closely;
+//! * DST loses positive definiteness or accuracy on correlated data;
+//! * the headline pipeline runs start-to-finish on every variant.
+
+use mpcholesky::prelude::*;
+
+fn field(n: usize, range: f64, seed: u64) -> SyntheticField {
+    SyntheticField::generate(&FieldConfig {
+        n,
+        theta: MaternParams::new(1.0, range, 0.5),
+        seed,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn likelihood_agreement_across_variants() {
+    let f = field(512, 0.1, 1);
+    let theta = f.theta;
+    let mk = |variant| MleConfig { nb: 64, variant, ..Default::default() };
+    let ll = |variant| {
+        MleProblem::new(&f.locations, &f.values, mk(variant))
+            .unwrap()
+            .loglik(&theta)
+            .unwrap()
+    };
+    let dp = ll(Variant::FullDp);
+    for thick in [1, 2, 4] {
+        let mp = ll(Variant::MixedPrecision { diag_thick: thick });
+        let gap = (dp - mp).abs() / dp.abs();
+        assert!(gap < 1e-3, "thick={thick}: relative loglik gap {gap}");
+    }
+}
+
+#[test]
+fn dst_breaks_on_strong_correlation_with_thin_band() {
+    // zeroing off-band blocks of a strongly correlated covariance loses
+    // positive definiteness — the paper's DST failure mode
+    let f = field(512, 0.3, 2);
+    let cfg = MleConfig { nb: 64, variant: Variant::Dst { diag_thick: 1 }, ..Default::default() };
+    let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+    let r = prob.loglik(&f.theta);
+    match r {
+        Err(Error::NotPositiveDefinite { .. }) => {} // expected
+        Ok(ll) => {
+            // if it happens to stay PD, the likelihood must be visibly
+            // degraded relative to DP
+            let dp = MleProblem::new(
+                &f.locations,
+                &f.values,
+                MleConfig { nb: 64, variant: Variant::FullDp, ..Default::default() },
+            )
+            .unwrap()
+            .loglik(&f.theta)
+            .unwrap();
+            assert!(
+                (dp - ll).abs() / dp.abs() > 1e-3,
+                "DST should not match DP on strong correlation: {dp} vs {ll}"
+            );
+        }
+        Err(e) => panic!("unexpected error {e}"),
+    }
+}
+
+#[test]
+fn dst_works_on_weak_correlation() {
+    let f = field(512, 0.03, 3);
+    let cfg = MleConfig { nb: 64, variant: Variant::Dst { diag_thick: 4 }, ..Default::default() };
+    let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+    assert!(prob.loglik(&f.theta).is_ok());
+}
+
+#[test]
+fn full_pipeline_all_variants() {
+    let f = field(512, 0.1, 4);
+    for variant in [
+        Variant::FullDp,
+        Variant::MixedPrecision { diag_thick: 2 },
+        Variant::MixedPrecision { diag_thick: 4 },
+    ] {
+        let cfg = MleConfig {
+            nb: 64,
+            variant,
+            start: Some([0.8, 0.08, 0.6]),
+            optimizer: OptimizerConfig { max_evals: 40, ftol: 1e-2, ..Default::default() },
+            ..Default::default()
+        };
+        let prob = MleProblem::new(&f.locations, &f.values, cfg.clone()).unwrap();
+        let fit = prob.fit().unwrap();
+        assert!(fit.loglik.is_finite());
+        // prediction at the fitted parameters must beat the variance
+        // baseline on correlated data
+        let rep = kfold_pmse(&f.locations, &f.values, fit.theta, 4, &cfg, 5).unwrap();
+        assert!(rep.mean_pmse < 1.0, "{variant:?}: PMSE {}", rep.mean_pmse);
+    }
+}
+
+#[test]
+fn estimates_agree_between_dp_and_mixed() {
+    let f = field(512, 0.1, 6);
+    let fit = |variant| {
+        let cfg = MleConfig {
+            nb: 64,
+            variant,
+            start: Some([0.8, 0.08, 0.6]),
+            optimizer: OptimizerConfig { max_evals: 80, ftol: 1e-4, ..Default::default() },
+            ..Default::default()
+        };
+        MleProblem::new(&f.locations, &f.values, cfg).unwrap().fit().unwrap()
+    };
+    let dp = fit(Variant::FullDp);
+    let mp = fit(Variant::MixedPrecision { diag_thick: 2 });
+    // the two optimizers see nearly identical surfaces; estimates must be
+    // close in relative terms (the paper's Fig. 7/Table I claim)
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-9);
+    assert!(rel(dp.theta.variance, mp.theta.variance) < 0.15, "{:?} vs {:?}", dp.theta, mp.theta);
+    assert!(rel(dp.theta.range, mp.theta.range) < 0.15, "{:?} vs {:?}", dp.theta, mp.theta);
+    assert!(rel(dp.theta.smoothness, mp.theta.smoothness) < 0.15, "{:?} vs {:?}", dp.theta, mp.theta);
+}
+
+#[test]
+fn mixed_saves_flops_proportionally() {
+    // the plan's SP flop share at DP(10%)-SP(90%) must be large enough to
+    // explain the paper's 1.6-1.8x speedups given 2x SP throughput
+    use mpcholesky::cholesky::CholeskyPlan;
+    let p = 20;
+    let t = Variant::thick_for_dp_fraction(p, 10.0);
+    let plan = CholeskyPlan::build(p, 128, Variant::MixedPrecision { diag_thick: t }, false);
+    let sp_frac = plan.sp_flop_fraction();
+    assert!(sp_frac > 0.6, "sp flop share {sp_frac}");
+    // ideal speedup with 2x SP rate: 1 / (dp + sp/2)
+    let ideal = 1.0 / ((1.0 - sp_frac) + sp_frac / 2.0);
+    assert!(ideal > 1.4, "ideal speedup {ideal}");
+}

@@ -1,0 +1,219 @@
+//! Integration: the PJRT backend (AOT JAX/Pallas HLO artifacts through
+//! the xla crate) must agree tile-for-tile with the native Rust backend,
+//! and full factorizations through PJRT must match.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! artifacts first).
+
+use mpcholesky::cholesky::{factorize_dense, Variant};
+use mpcholesky::kernels::{NativeBackend, TileBackend};
+use mpcholesky::matern::{Location, MaternParams, Metric};
+use mpcholesky::rng::Xoshiro256pp;
+use mpcholesky::runtime::PjrtBackend;
+use mpcholesky::scheduler::Scheduler;
+use mpcholesky::tile::DenseMatrix;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("MPCHOL_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if std::path::Path::new(&dir).join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT tests: {dir}/manifest.txt missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn backend() -> Option<PjrtBackend> {
+    artifacts_dir().map(|d| PjrtBackend::load(d).expect("artifact load failed"))
+}
+
+fn rand_tile(nb: usize, seed: u64, scale: f64) -> Vec<f64> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    (0..nb * nb).map(|_| r.standard_normal() * scale).collect()
+}
+
+fn spd_tile(nb: usize, seed: u64) -> Vec<f64> {
+    let b = rand_tile(nb, seed, 1.0);
+    let mut a = vec![0.0; nb * nb];
+    for j in 0..nb {
+        for i in 0..nb {
+            let mut s = 0.0;
+            for k in 0..nb {
+                s += b[i + k * nb] * b[j + k * nb];
+            }
+            a[i + j * nb] = s + if i == j { nb as f64 } else { 0.0 };
+        }
+    }
+    a
+}
+
+#[test]
+fn gemm_parity_f64() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let a = rand_tile(nb, 1, 1.0);
+    let b = rand_tile(nb, 2, 1.0);
+    let mut c1 = rand_tile(nb, 3, 1.0);
+    let mut c2 = c1.clone();
+    be.gemm_f64(&mut c1, &a, &b, nb);
+    NativeBackend.gemm_f64(&mut c2, &a, &b, nb);
+    for (x, y) in c1.iter().zip(c2.iter()) {
+        assert!((x - y).abs() < 1e-10, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn gemm_parity_f32() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let a: Vec<f32> = rand_tile(nb, 4, 1.0).iter().map(|&x| x as f32).collect();
+    let b: Vec<f32> = rand_tile(nb, 5, 1.0).iter().map(|&x| x as f32).collect();
+    let mut c1: Vec<f32> = rand_tile(nb, 6, 1.0).iter().map(|&x| x as f32).collect();
+    let mut c2 = c1.clone();
+    be.gemm_f32(&mut c1, &a, &b, nb);
+    NativeBackend.gemm_f32(&mut c2, &a, &b, nb);
+    for (x, y) in c1.iter().zip(c2.iter()) {
+        assert!(
+            (x - y).abs() < 1e-3 * nb as f32,
+            "f32 accumulation-order tolerance exceeded: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn syrk_parity() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let a = rand_tile(nb, 7, 1.0);
+    let mut c1 = rand_tile(nb, 8, 1.0);
+    let mut c2 = c1.clone();
+    be.syrk_f64(&mut c1, &a, nb);
+    NativeBackend.syrk_f64(&mut c2, &a, nb);
+    // native syrk only touches the lower triangle; compare there
+    for j in 0..nb {
+        for i in j..nb {
+            let (x, y) = (c1[i + j * nb], c2[i + j * nb]);
+            assert!((x - y).abs() < 1e-10, "({i},{j}): {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn trsm_parity() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let mut l = spd_tile(nb, 9);
+    NativeBackend.potrf_f64(&mut l, nb, 0).unwrap();
+    let mut b1 = rand_tile(nb, 10, 1.0);
+    let mut b2 = b1.clone();
+    be.trsm_f64(&l, &mut b1, nb);
+    NativeBackend.trsm_f64(&l, &mut b2, nb);
+    for (x, y) in b1.iter().zip(b2.iter()) {
+        assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn potrf_parity() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let a = spd_tile(nb, 11);
+    let mut l1 = a.clone();
+    let mut l2 = a.clone();
+    be.potrf_f64(&mut l1, nb, 0).unwrap();
+    NativeBackend.potrf_f64(&mut l2, nb, 0).unwrap();
+    for (x, y) in l1.iter().zip(l2.iter()) {
+        assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn potrf_detects_indefinite() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let mut a = vec![0.0; nb * nb];
+    for i in 0..nb {
+        a[i + i * nb] = 1.0;
+    }
+    a[2 + 2 * nb] = -5.0;
+    assert!(be.potrf_f64(&mut a, nb, 0).is_err());
+}
+
+#[test]
+fn matern_parity_halfint() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let mut r = Xoshiro256pp::seed_from_u64(12);
+    let locs: Vec<Location> =
+        (0..nb).map(|_| Location::new(r.uniform(), r.uniform())).collect();
+    for nu in [0.5, 1.5, 2.5] {
+        let th = MaternParams::new(1.3, 0.12, nu);
+        let mut o1 = vec![0.0; nb * nb];
+        let mut o2 = vec![0.0; nb * nb];
+        be.matern_f64(&mut o1, &locs, &locs, &th, Metric::Euclidean);
+        NativeBackend.matern_f64(&mut o2, &locs, &locs, &th, Metric::Euclidean);
+        for (x, y) in o1.iter().zip(o2.iter()) {
+            assert!((x - y).abs() < 1e-11, "nu={nu}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn matern_general_nu_falls_back_to_native() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let locs: Vec<Location> = (0..nb)
+        .map(|i| Location::new(i as f64 / nb as f64, 0.5))
+        .collect();
+    let th = MaternParams::new(1.0, 0.1, 1.27); // non-half-integer
+    let mut o1 = vec![0.0; nb * nb];
+    let mut o2 = vec![0.0; nb * nb];
+    be.matern_f64(&mut o1, &locs, &locs, &th, Metric::Euclidean);
+    NativeBackend.matern_f64(&mut o2, &locs, &locs, &th, Metric::Euclidean);
+    assert_eq!(o1, o2);
+}
+
+/// The headline integration check: a full mixed-precision factorization
+/// executed entirely through the PJRT artifacts matches the native one.
+#[test]
+fn full_factorization_through_pjrt_matches_native() {
+    let Some(be) = backend() else { return };
+    let nb = be.nb();
+    let p = 4;
+    let n = nb * p;
+    // matern covariance over a locality-ordered site set
+    let mut r = Xoshiro256pp::seed_from_u64(13);
+    let mut locs: Vec<Location> =
+        (0..n).map(|_| Location::new(r.uniform(), r.uniform())).collect();
+    mpcholesky::datagen::morton_sort(&mut locs);
+    let th = MaternParams::new(1.0, 0.1, 0.5);
+    let buf = mpcholesky::matern::matern_matrix(&locs, &th, Metric::Euclidean, 1e-6);
+    let a = DenseMatrix::from_vec(n, buf).unwrap();
+    // DST needs weakly-correlated data: zeroing off-band blocks of a
+    // strongly-correlated covariance loses positive definiteness (the
+    // paper's own DST failure mode, SSVIII.D.1)
+    let th_weak = MaternParams::new(1.0, 0.02, 0.5);
+    let buf_w = mpcholesky::matern::matern_matrix(&locs, &th_weak, Metric::Euclidean, 1e-6);
+    let a_weak = DenseMatrix::from_vec(n, buf_w).unwrap();
+
+    let sched = Scheduler::with_workers(2);
+    for variant in [
+        Variant::FullDp,
+        Variant::MixedPrecision { diag_thick: 2 },
+        Variant::Dst { diag_thick: 2 },
+    ] {
+        let m = if matches!(variant, Variant::Dst { .. }) { &a_weak } else { &a };
+        let tp = factorize_dense(m, nb, variant, &be, &sched).unwrap();
+        let tn = factorize_dense(m, nb, variant, &NativeBackend, &sched).unwrap();
+        let (dp, dn) = (tp.to_dense(true), tn.to_dense(true));
+        let diff = dp.max_abs_diff(&dn);
+        let tol = match variant {
+            // SP work reorders accumulation between backends
+            Variant::MixedPrecision { .. } => 1e-4,
+            _ => 1e-8,
+        };
+        assert!(diff < tol, "{variant:?}: backend divergence {diff}");
+    }
+}

@@ -1,0 +1,213 @@
+//! Property-based tests (hand-rolled generators on xoshiro — `proptest`
+//! is unavailable offline).  Each property runs across a randomized
+//! parameter sweep; failures print the seed for reproduction.
+
+use mpcholesky::cholesky::{factorize_dense, solve_lower, solve_lower_transposed, Variant};
+use mpcholesky::datagen::morton_sort;
+use mpcholesky::kernels::NativeBackend;
+use mpcholesky::matern::{matern_matrix, Location, MaternParams, Metric};
+use mpcholesky::prelude::*;
+use mpcholesky::scheduler::{Access, Scheduler, SchedulerConfig, SchedulingPolicy, TaskGraph};
+use mpcholesky::tile::{DenseMatrix, TileId};
+
+struct Sweep {
+    rng: Xoshiro256pp,
+}
+
+impl Sweep {
+    fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256pp::seed_from_u64(seed) }
+    }
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.rng.next_u64_raw() % (hi - lo + 1) as u64) as usize
+    }
+    fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+}
+
+fn matern_dense(n: usize, seed: u64, theta: &MaternParams) -> DenseMatrix {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    morton_sort(&mut locs);
+    DenseMatrix::from_vec(n, matern_matrix(&locs, theta, Metric::Euclidean, 1e-8)).unwrap()
+}
+
+/// Property: for every (nb, diag_thick, theta) the mixed factor
+/// reconstructs A to f32-level accuracy: ||L L^T - A||_max bounded.
+#[test]
+fn prop_mixed_reconstruction_bounded() {
+    let mut sweep = Sweep::new(101);
+    for case in 0..8 {
+        let nb = [16, 32][sweep.usize_in(0, 1)];
+        let p = sweep.usize_in(3, 6);
+        let n = nb * p;
+        let thick = sweep.usize_in(1, p);
+        let range = sweep.f64_in(0.02, 0.25);
+        let theta = MaternParams::new(sweep.f64_in(0.5, 3.0), range, 0.5);
+        let a = matern_dense(n, 200 + case, &theta);
+        let sched = Scheduler::with_workers(4);
+        let l = factorize_dense(&a, nb, Variant::MixedPrecision { diag_thick: thick },
+            &NativeBackend, &sched)
+            .unwrap()
+            .to_dense(true);
+        let llt = l.matmul_nt(&l);
+        let mut err = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+            }
+        }
+        let bound = 64.0 * f32::EPSILON as f64 * theta.variance * n as f64;
+        assert!(err < bound, "case {case}: nb={nb} p={p} t={thick}: err {err} > {bound}");
+    }
+}
+
+/// Property: solve(chol(A), A x) == x for arbitrary x (round trip through
+/// the tile solves).
+#[test]
+fn prop_solve_inverts_matvec() {
+    let mut sweep = Sweep::new(55);
+    for case in 0..6 {
+        let nb = 32;
+        let p = sweep.usize_in(2, 5);
+        let n = nb * p;
+        let theta = MaternParams::new(1.0, sweep.f64_in(0.03, 0.15), 0.5);
+        let a = matern_dense(n, 300 + case, &theta);
+        let sched = Scheduler::with_workers(2);
+        let l = factorize_dense(&a, nb, Variant::FullDp, &NativeBackend, &sched).unwrap();
+        let mut r = Xoshiro256pp::seed_from_u64(400 + case);
+        let x: Vec<f64> = (0..n).map(|_| r.standard_normal()).collect();
+        let b = a.matvec(&x);
+        let y = solve_lower(&l, &b).unwrap();
+        let got = solve_lower_transposed(&l, &y).unwrap();
+        for (u, v) in got.iter().zip(x.iter()) {
+            assert!((u - v).abs() < 1e-6, "case {case}: {u} vs {v}");
+        }
+    }
+}
+
+/// Property: the scheduler never executes a task before its
+/// dependencies, under randomized graphs, worker counts, and policies.
+#[test]
+fn prop_scheduler_respects_random_dags() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let mut sweep = Sweep::new(77);
+    for case in 0..10 {
+        let tiles = sweep.usize_in(2, 6);
+        let ntasks = sweep.usize_in(5, 60);
+        let workers = sweep.usize_in(1, 8);
+        let policy = [
+            SchedulingPolicy::Fifo,
+            SchedulingPolicy::Lifo,
+            SchedulingPolicy::CriticalPath,
+        ][sweep.usize_in(0, 2)];
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for t in 0..ntasks {
+            let na = sweep.usize_in(1, 3);
+            let mut acc = Vec::new();
+            for _ in 0..na {
+                let i = sweep.usize_in(0, tiles - 1);
+                let j = sweep.usize_in(0, i);
+                let write = sweep.usize_in(0, 1) == 1;
+                acc.push((
+                    TileId::new(i, j),
+                    if write { Access::Write } else { Access::Read },
+                ));
+            }
+            let before = g.len();
+            g.submit(t, acc);
+            // record inferred predecessor edges for post-hoc checking
+            for (pi, pt) in g.tasks().iter().enumerate().take(before) {
+                if pt.successors.contains(&before) {
+                    edges.push((pi, before));
+                }
+            }
+        }
+        let stamps: Vec<AtomicU64> = (0..ntasks).map(|_| AtomicU64::new(0)).collect();
+        let ctr = AtomicU64::new(1);
+        let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: false });
+        sched
+            .run(&mut g, |idx, _| {
+                stamps[idx].store(ctr.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        for &(a, b) in &edges {
+            let (sa, sb) = (
+                stamps[a].load(Ordering::SeqCst),
+                stamps[b].load(Ordering::SeqCst),
+            );
+            assert!(
+                sa < sb,
+                "case {case} (policy {policy:?}, workers {workers}): edge {a}->{b} violated"
+            );
+        }
+    }
+}
+
+/// Property: DST's factor reproduces the banded covariance exactly and
+/// never touches off-band tiles (structure preservation).
+#[test]
+fn prop_dst_structure_preserved() {
+    let mut sweep = Sweep::new(91);
+    for case in 0..5 {
+        let nb = 32;
+        let p = sweep.usize_in(3, 6);
+        let n = nb * p;
+        let thick = sweep.usize_in(2, p); // thick >= 2 keeps weak fields PD
+        let theta = MaternParams::new(1.0, 0.02, 0.5);
+        let a = matern_dense(n, 500 + case, &theta);
+        let sched = Scheduler::with_workers(3);
+        let Ok(tiles) =
+            factorize_dense(&a, nb, Variant::Dst { diag_thick: thick }, &NativeBackend, &sched)
+        else {
+            continue; // genuinely lost PD; allowed for thin bands
+        };
+        let l = tiles.to_dense(true);
+        for bj in 0..p {
+            for bi in (bj + thick)..p {
+                for c in 0..nb {
+                    for r in 0..nb {
+                        assert_eq!(
+                            l.get(bi * nb + r, bj * nb + c),
+                            0.0,
+                            "case {case}: fill-in outside band"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: kriging at observed sites reproduces observations (exact
+/// interpolation, tiny nugget) for random fields and variants.
+#[test]
+fn prop_kriging_interpolates() {
+    let mut sweep = Sweep::new(33);
+    for case in 0..4 {
+        let range = sweep.f64_in(0.05, 0.3);
+        let f = SyntheticField::generate(&FieldConfig {
+            n: 256,
+            theta: MaternParams::new(1.0, range, 0.5),
+            seed: 600 + case,
+            ..Default::default()
+        })
+        .unwrap();
+        let variant = if case % 2 == 0 {
+            Variant::FullDp
+        } else {
+            Variant::MixedPrecision { diag_thick: 2 }
+        };
+        let cfg = MleConfig { nb: 64, variant, ..Default::default() };
+        let model = KrigingModel::fit(&f.locations, &f.values, f.theta, &cfg).unwrap();
+        let back = model.predict(&f.locations[..16]);
+        for (p, t) in back.iter().zip(f.values[..16].iter()) {
+            assert!((p - t).abs() < 2e-3, "case {case} ({variant:?}): {p} vs {t}");
+        }
+    }
+}
