@@ -8,6 +8,9 @@
 //!    (they use 960); sweep nb at fixed n.
 //! 3. **Scheduler policy**: Fifo vs Lifo vs CriticalPath on the same
 //!    factorization (wall time; identical numerics is covered by tests).
+//! 4. **Adaptive tolerance**: sweep `Variant::Adaptive`'s tolerance and
+//!    report the realized dp/sp/bf16 tile census, the flop split, and the
+//!    factor error against full DP.
 //!
 //! ```bash
 //! cargo bench --bench ablations
@@ -24,6 +27,7 @@ fn main() {
     ordering_ablation();
     nb_ablation();
     policy_ablation();
+    tolerance_ablation();
 }
 
 /// 1. Morton vs random ordering: factor error of the mixed variant.
@@ -192,6 +196,63 @@ fn policy_ablation() {
             format!("{:.4}", Stats::from(&times).median),
             format!("{util:.2}"),
         ]);
+    }
+    table.print();
+}
+
+/// 4. Adaptive tolerance sweep: per-tolerance tile census, flop split,
+/// and factor error vs full DP.
+fn tolerance_ablation() {
+    println!("\n# ablation 4: adaptive tolerance (n = 1024, nb = 128, Morton order)");
+    let n = 1024;
+    let nb = 128;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta,
+        seed: 8,
+        gen_nb: nb,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = DenseMatrix::from_vec(
+        n,
+        matern_matrix(&field.locations, &theta, Metric::Euclidean, 1e-8),
+    )
+    .unwrap();
+    let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let sched = Scheduler::with_workers(workers);
+    let dp = factorize_dense(&a, nb, Variant::FullDp, &NativeBackend, &sched)
+        .unwrap()
+        .to_dense(true);
+    let mut table =
+        Table::new(&["tolerance", "realized split", "census + flops", "||L - L_dp||_max"]);
+    for tol in [1e-12, 1e-8, 1e-4, 1e-2] {
+        let mut tiles = mpcholesky::tile::TileMatrix::from_dense(&a, nb).unwrap();
+        match mpcholesky::cholesky::factorize_tiles(
+            &mut tiles,
+            Variant::Adaptive { tolerance: tol },
+            &NativeBackend,
+            &sched,
+        ) {
+            Ok(plan) => {
+                let l = tiles.to_dense(true);
+                table.row(&[
+                    format!("{tol:.0e}"),
+                    plan.map.label(),
+                    mpcholesky::bench::precision_summary(&plan),
+                    format!("{:.3e}", l.max_abs_diff(&dp)),
+                ]);
+            }
+            // very loose tolerances can lose positive definiteness —
+            // that is a result, not a harness failure
+            Err(e) => table.row(&[
+                format!("{tol:.0e}"),
+                "-".into(),
+                format!("failed: {e}"),
+                "-".into(),
+            ]),
+        }
     }
     table.print();
 }

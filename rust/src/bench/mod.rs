@@ -5,6 +5,22 @@
 
 use std::time::Instant;
 
+use crate::cholesky::CholeskyPlan;
+
+/// One-line precision report for bench tables: the dp/sp/bf16 tile
+/// census plus the flop split of a lowered plan.
+pub fn precision_summary(plan: &CholeskyPlan) -> String {
+    let c = plan.census();
+    format!(
+        "dp={} sp={} bf16={} tiles | dp_flops={:.1}% sp_flops={:.1}%",
+        c.dp,
+        c.sp,
+        c.hp,
+        plan.dp_flop_fraction() * 100.0,
+        plan.sp_flop_fraction() * 100.0
+    )
+}
+
 /// Run `f` `reps` times (after `warmup` unmeasured runs) and collect
 /// per-run seconds.
 pub fn time_reps<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Vec<f64> {
@@ -165,5 +181,16 @@ mod tests {
         let xs = time_reps(|| n += 1, 2, 5);
         assert_eq!(n, 7);
         assert_eq!(xs.len(), 5);
+    }
+
+    #[test]
+    fn precision_summary_reports_census_and_split() {
+        use crate::cholesky::Variant;
+        let plan = CholeskyPlan::build(6, 16, Variant::MixedPrecision { diag_thick: 2 }, false);
+        let s = precision_summary(&plan);
+        assert!(s.contains("dp=11"), "{s}"); // p=6, t=2: 6 + 5 dp tiles
+        assert!(s.contains("sp=10"), "{s}");
+        assert!(s.contains("bf16=0"), "{s}");
+        assert!(s.contains("dp_flops="), "{s}");
     }
 }

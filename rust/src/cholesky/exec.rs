@@ -22,9 +22,12 @@ pub struct GenContext<'a> {
     pub metric: Metric,
     /// Additive diagonal nugget applied to global diagonal entries.
     pub nugget: f64,
-    /// Storage precision per tile: non-F64 tiles get their f32 shadow
-    /// refreshed right after generation (Algorithm 1 lines 2-6 fused into
-    /// generation); Bf16 tiles additionally re-quantize the shadow.
+    /// Storage precision per tile, resolved from the run's
+    /// [`PrecisionMap`](crate::tile::PrecisionMap): non-F64 tiles get
+    /// their f32 shadow refreshed right after generation (Algorithm 1
+    /// lines 2-6 fused into generation); Bf16 tiles additionally
+    /// re-quantize the shadow.  The adaptive path generates with a
+    /// constant-F64 rule first, since its map needs the norms.
     pub precision_of: Box<dyn Fn(usize, usize) -> Precision + Send + Sync + 'a>,
 }
 

@@ -7,10 +7,16 @@
 //!   of lines 2-27 (SSVI).
 //! * [`Variant::Dst`] — Diagonal Super-Tile / independent blocks: off-band
 //!   tiles zeroed, DP factorization of the remaining block band (SSV-B).
+//! * [`Variant::Adaptive`] — ExaGeoStat-style norm-based tile selection:
+//!   per-tile precision chosen from the generated covariance's tile
+//!   Frobenius norms against a user tolerance instead of a fixed band.
 //!
-//! The factorization lowers to an STF task graph ([`plan`]), executes on
-//! the scheduler through a pluggable [`TileBackend`] ([`exec`]), and the
-//! epilogue solves/log-det live in [`solve`].
+//! Every variant lowers its precision decisions into one
+//! [`PrecisionMap`](crate::tile::PrecisionMap); the planner, the tile
+//! storage and the executor consult the map, never the band predicate
+//! directly.  The factorization lowers to an STF task graph ([`plan`]),
+//! executes on the scheduler through a pluggable [`TileBackend`]
+//! ([`exec`]), and the epilogue solves/log-det live in [`solve`].
 
 pub mod exec;
 pub mod kernelcall;
@@ -25,12 +31,12 @@ pub use solve::{log_determinant, solve_lower, solve_lower_transposed};
 use crate::error::Result;
 use crate::kernels::TileBackend;
 use crate::matern::{Location, MaternParams, Metric};
-use crate::scheduler::Scheduler;
-use crate::tile::{DenseMatrix, TileId, TileMatrix};
+use crate::scheduler::{Access, Scheduler, TaskGraph};
+use crate::tile::{DenseMatrix, PrecisionMap, TileId, TileMatrix};
 
-/// Factorization variant (the paper's computation methods plus the SSIX
-/// three-precision extension).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Factorization variant (the paper's computation methods, the SSIX
+/// three-precision extension, and the norm-adaptive tile selection).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Variant {
     /// Full double precision — DP(100%).
     FullDp,
@@ -41,10 +47,21 @@ pub enum Variant {
     /// Paper SSIX future work: f64 within `dp_thick`, f32 within
     /// `sp_thick`, bf16 storage beyond (`dp_thick <= sp_thick`).
     ThreePrecision { dp_thick: usize, sp_thick: usize },
+    /// Norm-based adaptive selection (ExaGeoStat line of work): each
+    /// off-diagonal tile takes the cheapest of f64/f32/bf16-storage whose
+    /// roundoff keeps `||A_ij||_F * p / ||A||_F` under
+    /// `tolerance / eps(prec)`; diagonal tiles stay f64.  The assignment
+    /// is computed from the *generated* covariance, so planning happens
+    /// after generation (see [`generate_and_factorize`]).
+    Adaptive { tolerance: f64 },
 }
 
 impl Variant {
-    /// Storage precision of tile (i, j) under this variant.
+    /// Storage precision of tile (i, j) under a *band* variant.
+    ///
+    /// # Panics
+    /// For [`Variant::Adaptive`], which has no data-free per-tile answer —
+    /// resolve a [`PrecisionMap`] via [`Variant::precision_map`] instead.
     pub fn tile_precision(&self, i: usize, j: usize) -> crate::tile::Precision {
         use crate::tile::Precision::*;
         let d = i.abs_diff(j);
@@ -66,6 +83,38 @@ impl Variant {
                     Bf16
                 }
             }
+            Variant::Adaptive { .. } => panic!(
+                "Variant::Adaptive has no static tile precision; compute a \
+                 PrecisionMap from the generated tiles (Variant::precision_map)"
+            ),
+        }
+    }
+
+    /// Resolve the variant's precision decisions into one queryable
+    /// [`PrecisionMap`].  Band variants need no data (`tiles` is
+    /// ignored); [`Variant::Adaptive`] computes per-tile Frobenius norms
+    /// from the populated covariance tiles and errors without them.
+    pub fn precision_map(&self, p: usize, tiles: Option<&TileMatrix>) -> Result<PrecisionMap> {
+        match *self {
+            Variant::Adaptive { tolerance } => {
+                if !(tolerance.is_finite() && tolerance >= 0.0) {
+                    crate::invalid_arg!(
+                        "adaptive tolerance must be finite and >= 0, got {tolerance}"
+                    );
+                }
+                let t = tiles.ok_or_else(|| {
+                    crate::error::Error::InvalidArgument(
+                        "Variant::Adaptive needs generated covariance tiles to compute \
+                         its precision map"
+                            .into(),
+                    )
+                })?;
+                if t.p() != p {
+                    crate::invalid_arg!("precision_map: p={p} but tile matrix has p={}", t.p());
+                }
+                Ok(PrecisionMap::adaptive(t, tolerance))
+            }
+            _ => Ok(PrecisionMap::from_fn(p, |i, j| self.tile_precision(i, j))),
         }
     }
 
@@ -100,6 +149,9 @@ impl Variant {
                 let s = frac(sp_thick) - d;
                 format!("DP({d}%)-SP({s}%)-HP({}%)", 100 - d - s)
             }
+            // the realized split depends on the data; report the knob
+            // (PrecisionMap::label gives the realized percentages)
+            Variant::Adaptive { tolerance } => format!("Adaptive(tol={tolerance:.0e})"),
         }
     }
 
@@ -120,71 +172,103 @@ impl Variant {
     }
 }
 
-/// Prepare tile storage for a variant: demote off-band tiles into f32
-/// shadows (Mixed / ThreePrecision — Algorithm 1 lines 2-6, with bf16
-/// re-quantization for the far band) or zero them (DST).
-fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant) {
-    use crate::tile::{quantize_bf16_slice, Precision};
-    let p = tiles.p();
-    let nb = tiles.nb();
+/// Prepare tile storage for a variant's precision map: demote non-DP
+/// tiles into f32 shadows (Algorithm 1 lines 2-6, with bf16
+/// re-quantization for Bf16 tiles) or zero them (DST).
+fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
     match variant {
-        Variant::MixedPrecision { .. } | Variant::ThreePrecision { .. } => {
-            for j in 0..p {
-                for i in j..p {
-                    match variant.tile_precision(i, j) {
-                        Precision::F64 => {}
-                        Precision::F32 => {
-                            let slot = tiles.tile_mut(TileId::new(i, j));
-                            let mut sp = vec![0.0f32; nb * nb];
-                            crate::tile::convert::demote(&slot.dp, &mut sp);
-                            slot.sp = Some(sp);
-                        }
-                        Precision::Bf16 => {
-                            let slot = tiles.tile_mut(TileId::new(i, j));
-                            let mut sp = vec![0.0f32; nb * nb];
-                            crate::tile::convert::demote(&slot.dp, &mut sp);
-                            quantize_bf16_slice(&mut sp);
-                            crate::tile::convert::promote(&sp, &mut slot.dp);
-                            slot.sp = Some(sp);
-                        }
-                    }
-                }
-            }
-        }
+        Variant::FullDp => {}
         Variant::Dst { .. } => {
+            let p = tiles.p();
             for j in 0..p {
                 for i in j..p {
-                    if !variant.is_dp_tile(i, j, p) {
+                    if !map.is_dp(i, j) {
                         let slot = tiles.tile_mut(TileId::new(i, j));
                         slot.dp.iter_mut().for_each(|x| *x = 0.0);
                     }
                 }
             }
         }
-        Variant::FullDp => {}
+        Variant::MixedPrecision { .. }
+        | Variant::ThreePrecision { .. }
+        | Variant::Adaptive { .. } => tiles.apply_precision_map(map),
     }
 }
 
 /// Factor an already-populated tile matrix in place: on success the DP
 /// buffers hold the lower factor L.  Returns the executed plan (flop and
-/// task statistics for bench reports).
+/// task statistics plus the resolved [`PrecisionMap`]).
+///
+/// [`Variant::Adaptive`] computes its map from the tile norms of the
+/// current contents, so this entry point supports every variant.
 pub fn factorize_tiles(
     tiles: &mut TileMatrix,
     variant: Variant,
     backend: &dyn TileBackend,
     sched: &Scheduler,
 ) -> Result<CholeskyPlan> {
-    prepare_tiles(tiles, variant);
-    let mut plan = CholeskyPlan::build(tiles.p(), tiles.nb(), variant, false);
+    let map = variant.precision_map(tiles.p(), Some(tiles))?;
+    prepare_tiles(tiles, variant, &map);
+    let mut plan = CholeskyPlan::build_with_map(tiles.p(), tiles.nb(), variant, map, false);
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let executor = TileExecutor::new(tiles, backend);
     sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
     Ok(plan)
 }
 
+/// Generate the Matern covariance tiles in parallel without factoring —
+/// phase 1 of the adaptive path (the norms must exist before the
+/// precision map can), also used by the trace tool.
+pub fn generate_covariance(
+    tiles: &mut TileMatrix,
+    locations: &[Location],
+    theta: MaternParams,
+    metric: Metric,
+    nugget: f64,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<()> {
+    if locations.len() != tiles.n() {
+        crate::invalid_arg!("location count {} != matrix order {}", locations.len(), tiles.n());
+    }
+    theta.validate()?;
+    let p = tiles.p();
+    let nb = tiles.nb();
+    let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
+    for j in 0..p {
+        for i in j..p {
+            graph.submit(
+                SizedCall { call: KernelCall::Generate { i, j }, nb },
+                vec![(TileId::new(i, j), Access::Write)],
+            );
+        }
+    }
+    let accesses: Vec<_> = graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let gen = GenContext {
+        locations,
+        theta,
+        metric,
+        nugget,
+        // precision decisions happen after the norms exist: canonical
+        // f64 only, no shadows yet
+        precision_of: Box::new(|_, _| crate::tile::Precision::F64),
+    };
+    let executor = TileExecutor::new(tiles, backend).with_generation(gen);
+    sched.run(&mut graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
+    Ok(())
+}
+
 /// Generate the Matern covariance tiles and factor them inside one task
 /// graph — the per-iteration MLE path (Sigma(theta) -> L in one dataflow
 /// run, generation tasks overlapping factorization tasks).
+///
+/// [`Variant::Adaptive`] cannot fuse the two stages: its precision map
+/// needs the generated tile norms.  It runs generation as one parallel
+/// graph, resolves the map, then factors — same result, one extra
+/// synchronization point.  Note the returned plan then covers the
+/// *factorization* stage only: unlike the band variants' fused plans it
+/// contains no `Generate` tasks, so task counts and flop counters are
+/// not directly comparable across that divide.
 #[allow(clippy::too_many_arguments)]
 pub fn generate_and_factorize(
     tiles: &mut TileMatrix,
@@ -201,9 +285,17 @@ pub fn generate_and_factorize(
         crate::invalid_arg!("location count {} != matrix order {}", locations.len(), tiles.n());
     }
     theta.validate()?;
-    let mut plan = CholeskyPlan::build(p, tiles.nb(), variant, true);
+
+    if matches!(variant, Variant::Adaptive { .. }) {
+        generate_covariance(tiles, locations, theta, metric, nugget, backend, sched)?;
+        return factorize_tiles(tiles, variant, backend, sched);
+    }
+
+    let map = variant.precision_map(p, None)?;
+    let mut plan = CholeskyPlan::build_with_map(p, tiles.nb(), variant, map, true);
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let is_dst = matches!(variant, Variant::Dst { .. });
+    let genmap = plan.map.clone();
     let gen = GenContext {
         locations,
         theta,
@@ -215,11 +307,10 @@ pub fn generate_and_factorize(
             if is_dst {
                 crate::tile::Precision::F64
             } else {
-                variant.tile_precision(i, j)
+                genmap.get(i, j)
             }
         }),
     };
-    let _ = p;
     let executor = TileExecutor::new(tiles, backend).with_generation(gen);
     sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
     Ok(plan)
@@ -561,5 +652,106 @@ mod tests {
         let t90 = Variant::thick_for_dp_fraction(p, 90.0);
         assert!(t10 <= t40 && t40 <= t90);
         assert!(t10 >= 1 && t90 <= p);
+    }
+
+    #[test]
+    fn adaptive_zero_tolerance_bitwise_equals_full_dp() {
+        let n = 128;
+        let a = matern_dense(n, 31, &MaternParams::medium());
+        let sched = Scheduler::with_workers(3);
+        let dp = factorize_dense(&a, 32, Variant::FullDp, &NativeBackend, &sched).unwrap();
+        let ad = factorize_dense(&a, 32, Variant::Adaptive { tolerance: 0.0 }, &NativeBackend, &sched)
+            .unwrap();
+        assert_eq!(dp.to_dense(true).max_abs_diff(&ad.to_dense(true)), 0.0);
+    }
+
+    #[test]
+    fn adaptive_demotes_and_reconstructs_to_f32_accuracy() {
+        let n = 160;
+        let nb = 32;
+        let a = matern_dense(n, 32, &MaternParams::medium());
+        let sched = Scheduler::with_workers(4);
+        let mut tiles = TileMatrix::from_dense(&a, nb).unwrap();
+        let plan =
+            factorize_tiles(&mut tiles, Variant::Adaptive { tolerance: 1e-8 }, &NativeBackend, &sched)
+                .unwrap();
+        let census = plan.census();
+        let total = (n / nb) * (n / nb + 1) / 2;
+        assert_eq!(census.total(), total);
+        assert!(census.dp < total, "nothing demoted: {census:?}");
+        // diagonal tiles never demote
+        let p = n / nb;
+        for k in 0..p {
+            assert_eq!(plan.map.get(k, k), crate::tile::Precision::F64);
+        }
+        let l = tiles.to_dense(true);
+        let llt = l.matmul_nt(&l);
+        let mut err = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+            }
+        }
+        assert!(err < 5e-5, "adaptive reconstruction err {err}");
+    }
+
+    #[test]
+    fn adaptive_fused_generation_matches_two_step() {
+        let n = 128;
+        let nb = 32;
+        let locs = matern_locs(n, 33);
+        let theta = MaternParams::medium();
+        let variant = Variant::Adaptive { tolerance: 1e-8 };
+        let sched = Scheduler::with_workers(4);
+
+        let mut fused = TileMatrix::zeros(n, nb).unwrap();
+        generate_and_factorize(
+            &mut fused,
+            &locs,
+            theta,
+            Metric::Euclidean,
+            1e-8,
+            variant,
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
+
+        let a = DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8))
+            .unwrap();
+        let two_step = factorize_dense(&a, nb, variant, &NativeBackend, &sched).unwrap();
+        assert_eq!(
+            fused.to_dense(true).max_abs_diff(&two_step.to_dense(true)),
+            0.0,
+            "generation path must be bit-identical to the dense load path"
+        );
+    }
+
+    #[test]
+    fn generate_covariance_matches_dense_assembly() {
+        let n = 96;
+        let nb = 32;
+        let locs = matern_locs(n, 34);
+        let theta = MaternParams::medium();
+        let sched = Scheduler::with_workers(2);
+        let mut tiles = TileMatrix::zeros(n, nb).unwrap();
+        generate_covariance(&mut tiles, &locs, theta, Metric::Euclidean, 1e-8, &NativeBackend, &sched)
+            .unwrap();
+        let a = DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8))
+            .unwrap();
+        let got = tiles.to_dense(false);
+        assert_eq!(got.max_abs_diff(&a), 0.0);
+        // no shadows allocated by the generation-only pass
+        assert_eq!(tiles.sp_bytes(), 0);
+    }
+
+    #[test]
+    fn adaptive_rejects_bad_tolerance_and_missing_tiles() {
+        assert!(Variant::Adaptive { tolerance: -1.0 }.precision_map(4, None).is_err());
+        assert!(Variant::Adaptive { tolerance: f64::NAN }.precision_map(4, None).is_err());
+        assert!(Variant::Adaptive { tolerance: 1e-8 }.precision_map(4, None).is_err());
+        let tiles = TileMatrix::zeros(128, 32).unwrap();
+        assert!(Variant::Adaptive { tolerance: 1e-8 }.precision_map(4, Some(&tiles)).is_ok());
+        assert!(Variant::Adaptive { tolerance: 1e-8 }.precision_map(5, Some(&tiles)).is_err());
     }
 }

@@ -6,30 +6,55 @@
 //! like ExaGeoStat's `starpu_insert_task` calls.
 
 use crate::scheduler::{Access, TaskGraph};
-use crate::tile::TileId;
+use crate::tile::{PrecisionCensus, PrecisionMap, TileId};
 
 use super::kernelcall::{KernelCall, SizedCall};
 use super::Variant;
 
-/// A lowered factorization: the task graph plus summary counters.
+/// A lowered factorization: the task graph, the resolved per-tile
+/// precision assignment, and summary counters.
 #[derive(Debug)]
 pub struct CholeskyPlan {
     pub graph: TaskGraph<SizedCall>,
     pub p: usize,
     pub nb: usize,
     pub variant: Variant,
+    /// The per-tile precision assignment every codelet choice came from.
+    pub map: PrecisionMap,
     /// Tasks per codelet kind, for bench tables.
     pub dp_flops: f64,
     pub sp_flops: f64,
 }
 
 impl CholeskyPlan {
-    /// Build the plan for a `p x p` tile matrix.
+    /// Build the plan for a `p x p` tile matrix from a data-free (band)
+    /// variant.
     ///
     /// `generate = true` prepends per-tile covariance-generation tasks
     /// (the MLE path regenerates Sigma(theta) each iteration, so
     /// generation belongs in the same dataflow graph).
+    ///
+    /// # Panics
+    /// For [`Variant::Adaptive`], whose map needs generated tile data —
+    /// resolve it first and call [`CholeskyPlan::build_with_map`].
     pub fn build(p: usize, nb: usize, variant: Variant, generate: bool) -> Self {
+        let map = variant.precision_map(p, None).expect(
+            "CholeskyPlan::build needs a data-free variant; resolve the adaptive \
+             map from generated tiles and use build_with_map",
+        );
+        Self::build_with_map(p, nb, variant, map, generate)
+    }
+
+    /// Build the plan from an explicit [`PrecisionMap`] — the one entry
+    /// point every precision decision flows through.
+    pub fn build_with_map(
+        p: usize,
+        nb: usize,
+        variant: Variant,
+        map: PrecisionMap,
+        generate: bool,
+    ) -> Self {
+        assert_eq!(map.p(), p, "precision map order {} != plan order {p}", map.p());
         let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
         let mut dp_flops = 0.0;
         let mut sp_flops = 0.0;
@@ -47,8 +72,8 @@ impl CholeskyPlan {
             g.submit(sc, acc)
         };
 
-        let in_band = |i: usize, j: usize| variant.is_dp_tile(i, j, p);
-        let prec = |i: usize, j: usize| variant.tile_precision(i, j);
+        let in_band = |i: usize, j: usize| map.is_dp(i, j);
+        let prec = |i: usize, j: usize| map.get(i, j);
         let is_dst = matches!(variant, Variant::Dst { .. });
         // in DST, off-band tiles are zero and never touched
         let live = |i: usize, j: usize| !is_dst || in_band(i, j);
@@ -175,7 +200,7 @@ impl CholeskyPlan {
             }
         }
 
-        Self { graph, p, nb, variant, dp_flops, sp_flops }
+        Self { graph, p, nb, variant, map, dp_flops, sp_flops }
     }
 
     /// Total useful flops in the plan.
@@ -194,16 +219,27 @@ impl CholeskyPlan {
         }
     }
 
-    /// Tile fractions (dp_tiles, sp_tiles) of the lower triangle — the
-    /// paper's DP(x%)-SP(y%) percentages.
+    /// Fraction of flops running in double precision.
+    pub fn dp_flop_fraction(&self) -> f64 {
+        if self.total_flops() == 0.0 {
+            0.0
+        } else {
+            self.dp_flops / self.total_flops()
+        }
+    }
+
+    /// Tile census of the plan's precision map (dp/sp/bf16 counts).
+    pub fn census(&self) -> PrecisionCensus {
+        self.map.census()
+    }
+
+    /// Tile fractions (dp_tiles, reduced_tiles) of the lower triangle —
+    /// the paper's DP(x%)-SP(y%) percentages, read off the map (bf16
+    /// tiles count with the reduced share, as in the band formula).
     pub fn tile_fractions(&self) -> (f64, f64) {
-        let p = self.p;
-        let total = (p * (p + 1) / 2) as f64;
-        let dp = (0..p)
-            .flat_map(|j| (j..p).map(move |i| (i, j)))
-            .filter(|&(i, j)| self.variant.is_dp_tile(i, j, p))
-            .count() as f64;
-        (dp / total, (total - dp) / total)
+        let c = self.map.census();
+        let total = c.total() as f64;
+        (c.dp as f64 / total, (c.sp + c.hp) as f64 / total)
     }
 }
 
@@ -364,6 +400,48 @@ mod tests {
         for t in plan.graph.tasks() {
             if let KernelCall::GemmHp { i, j, .. } = t.payload.call {
                 assert!(i - j >= 3, "HP gemm on near tile ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn arbitrary_map_plans_are_wellformed() {
+        use crate::tile::{Precision, PrecisionMap};
+        let p = 6;
+        // deliberately non-band map: exercises the planner's generality
+        // beyond |i - j| rules
+        let map = PrecisionMap::from_fn(p, |i, j| {
+            if i == j {
+                Precision::F64
+            } else if (i + j) % 2 == 0 {
+                Precision::F32
+            } else if i - j > 3 {
+                Precision::Bf16
+            } else {
+                Precision::F64
+            }
+        });
+        let plan = CholeskyPlan::build_with_map(
+            p,
+            16,
+            Variant::Adaptive { tolerance: 1e-8 },
+            map.clone(),
+            false,
+        );
+        plan.graph.assert_forward_edges();
+        assert_eq!(plan.census(), map.census());
+        assert!(plan.dp_flop_fraction() < 1.0);
+        assert!((plan.dp_flop_fraction() + plan.sp_flop_fraction() - 1.0).abs() < 1e-12);
+        // codelet precision always matches the map's target-tile precision
+        for t in plan.graph.tasks() {
+            match t.payload.call {
+                KernelCall::GemmSp { i, j, .. } => assert_eq!(map.get(i, j), Precision::F32),
+                KernelCall::GemmHp { i, j, .. } => assert_eq!(map.get(i, j), Precision::Bf16),
+                KernelCall::GemmDp { i, j, .. } => assert_eq!(map.get(i, j), Precision::F64),
+                KernelCall::TrsmSp { i, k } => assert_eq!(map.get(i, k), Precision::F32),
+                KernelCall::TrsmHp { i, k } => assert_eq!(map.get(i, k), Precision::Bf16),
+                KernelCall::TrsmDp { i, k } => assert_eq!(map.get(i, k), Precision::F64),
+                _ => {}
             }
         }
     }

@@ -2,9 +2,11 @@
 //! O(n^2) epilogue of each likelihood evaluation (paper Eq. 2/3: one
 //! forward solve for the quadratic form, the diagonal of L for log|Sigma|).
 //!
-//! These stay in double precision regardless of the factorization variant
-//! (the paper keeps everything but the factorization DP) and run serially:
-//! at O(n^2) they are <1% of an iteration.
+//! These stay in double precision regardless of the factorization's
+//! [`PrecisionMap`](crate::tile::PrecisionMap) — every codelet promotes
+//! its result back into the canonical f64 buffers, so the solves read a
+//! total DP view (the paper keeps everything but the factorization DP) —
+//! and run serially: at O(n^2) they are <1% of an iteration.
 
 use crate::error::Result;
 use crate::tile::{TileId, TileMatrix};

@@ -84,10 +84,11 @@ impl RunConfig {
 
     /// Apply overrides on top of the current values.
     pub fn apply(&mut self, kv: &HashMap<String, String>) -> Result<()> {
-        // variant assembly needs thick values seen in the same map
+        // variant assembly needs thick/tolerance values seen in the same map
         let mut variant_name: Option<String> = None;
         let mut diag_thick: Option<usize> = None;
         let mut sp_thick: Option<usize> = None;
+        let mut tolerance: Option<f64> = None;
 
         fn parse<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
             v.parse().map_err(|_| {
@@ -129,6 +130,7 @@ impl RunConfig {
                 "variant" => variant_name = Some(v.clone()),
                 "diag_thick" | "dp_thick" => diag_thick = Some(parse(k, v)?),
                 "sp_thick" => sp_thick = Some(parse(k, v)?),
+                "tolerance" => tolerance = Some(parse(k, v)?),
                 other => {
                     return Err(Error::InvalidArgument(format!(
                         "unknown config key {other:?}"
@@ -137,28 +139,51 @@ impl RunConfig {
             }
         }
 
-        if variant_name.is_some() || diag_thick.is_some() || sp_thick.is_some() {
+        if variant_name.is_some()
+            || diag_thick.is_some()
+            || sp_thick.is_some()
+            || tolerance.is_some()
+        {
             let name = variant_name.unwrap_or_else(|| {
                 match self.variant {
                     Variant::FullDp => "dp",
                     Variant::MixedPrecision { .. } => "mp",
                     Variant::Dst { .. } => "dst",
                     Variant::ThreePrecision { .. } => "3p",
+                    Variant::Adaptive { .. } => "adaptive",
                 }
                 .to_string()
             });
-            let t = diag_thick.unwrap_or(2);
+            // re-assembly keeps previously configured knobs when they are
+            // not overridden in this map (a lone `tolerance` or `nb`
+            // override must not reset an mp/dst/3p band to the default)
+            let t = diag_thick.unwrap_or(match self.variant {
+                Variant::MixedPrecision { diag_thick } | Variant::Dst { diag_thick } => diag_thick,
+                Variant::ThreePrecision { dp_thick, .. } => dp_thick,
+                _ => 2,
+            });
             self.variant = match name.as_str() {
                 "dp" => Variant::FullDp,
                 "mp" => Variant::MixedPrecision { diag_thick: t },
                 "dst" => Variant::Dst { diag_thick: t },
                 "3p" => Variant::ThreePrecision {
                     dp_thick: t,
-                    sp_thick: sp_thick.unwrap_or(t * 2),
+                    sp_thick: sp_thick.unwrap_or(match self.variant {
+                        Variant::ThreePrecision { sp_thick, .. } => sp_thick,
+                        _ => t * 2,
+                    }),
+                },
+                "adaptive" => Variant::Adaptive {
+                    // keep a previously configured tolerance when only
+                    // other keys are overridden
+                    tolerance: tolerance.unwrap_or(match self.variant {
+                        Variant::Adaptive { tolerance } => tolerance,
+                        _ => 1e-8,
+                    }),
                 },
                 other => {
                     return Err(Error::InvalidArgument(format!(
-                        "variant must be dp|mp|dst|3p, got {other:?}"
+                        "variant must be dp|mp|dst|3p|adaptive, got {other:?}"
                     )))
                 }
             };
@@ -174,6 +199,11 @@ impl RunConfig {
         if let Variant::ThreePrecision { dp_thick, sp_thick } = self.variant {
             if dp_thick > sp_thick {
                 crate::invalid_arg!("3p requires dp_thick <= sp_thick ({dp_thick} > {sp_thick})");
+            }
+        }
+        if let Variant::Adaptive { tolerance } = self.variant {
+            if !(tolerance.is_finite() && tolerance >= 0.0) {
+                crate::invalid_arg!("adaptive tolerance must be finite and >= 0, got {tolerance}");
             }
         }
         if !(self.theta.iter().all(|&x| x > 0.0)) {
@@ -224,6 +254,48 @@ mod tests {
         let c = RunConfig::parse("variant = 3p\ndp_thick = 1\nsp_thick = 4\n").unwrap();
         assert_eq!(c.variant, Variant::ThreePrecision { dp_thick: 1, sp_thick: 4 });
         assert!(RunConfig::parse("variant = 3p\ndp_thick = 5\nsp_thick = 2\n").is_err());
+    }
+
+    #[test]
+    fn adaptive_variant_parses_with_and_without_tolerance() {
+        let c = RunConfig::parse("variant = adaptive\ntolerance = 1e-6\n").unwrap();
+        assert_eq!(c.variant, Variant::Adaptive { tolerance: 1e-6 });
+        // default tolerance
+        let d = RunConfig::parse("variant = adaptive\n").unwrap();
+        assert_eq!(d.variant, Variant::Adaptive { tolerance: 1e-8 });
+        // overriding an unrelated key keeps the configured tolerance
+        let mut c = c;
+        let mut over = HashMap::new();
+        over.insert("nb".to_string(), "128".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(c.variant, Variant::Adaptive { tolerance: 1e-6 });
+        // a lone tolerance override re-assembles the adaptive variant
+        let mut over = HashMap::new();
+        over.insert("tolerance".to_string(), "1e-4".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(c.variant, Variant::Adaptive { tolerance: 1e-4 });
+    }
+
+    #[test]
+    fn reassembly_preserves_configured_band_knobs() {
+        // a lone tolerance override must not reset an mp band to defaults
+        let mut c = RunConfig::parse("variant = mp\ndiag_thick = 5\n").unwrap();
+        let mut over = HashMap::new();
+        over.insert("tolerance".to_string(), "1e-4".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(c.variant, Variant::MixedPrecision { diag_thick: 5 });
+        // partial 3p override keeps the other thickness
+        let mut c = RunConfig::parse("variant = 3p\ndp_thick = 1\nsp_thick = 4\n").unwrap();
+        let mut over = HashMap::new();
+        over.insert("dp_thick".to_string(), "2".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(c.variant, Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 });
+    }
+
+    #[test]
+    fn adaptive_rejects_bad_tolerance() {
+        assert!(RunConfig::parse("variant = adaptive\ntolerance = -1e-8\n").is_err());
+        assert!(RunConfig::parse("variant = adaptive\ntolerance = nonsense\n").is_err());
     }
 
     #[test]

@@ -3,19 +3,20 @@
 //! Everything user-facing returns [`Result`]; internal invariants that can
 //! only break through a bug in this crate use `debug_assert!`/`panic!`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the mpcholesky crate.
-#[derive(Debug, Error)]
+///
+/// (Display/Error are hand-implemented: the crate builds with zero
+/// external dependencies, so no `thiserror` derive.)
+#[derive(Debug)]
 pub enum Error {
     /// Input shapes/sizes are inconsistent (e.g. `n` not divisible by `nb`).
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// A diagonal tile lost positive definiteness during factorization —
     /// the failure mode the paper's SSVIII.D.1 describes for too-aggressive
     /// precision reduction (e.g. the excluded SP(100%) variant).
-    #[error("matrix is not positive definite (pivot {pivot} at global index {index})")]
     NotPositiveDefinite {
         /// Value of the offending pivot (<= 0 or NaN).
         pivot: f64,
@@ -24,22 +25,50 @@ pub enum Error {
     },
 
     /// The MLE optimizer failed to make progress.
-    #[error("optimization failed: {0}")]
     Optimization(String),
 
     /// Artifact manifest / HLO loading problems (PJRT backend).
-    #[error("runtime artifact error: {0}")]
     Artifact(String),
 
     /// Underlying XLA/PJRT failure.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Filesystem-level failure (artifact files, trace dumps, CSV output).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidArgument(s) => write!(f, "invalid argument: {s}"),
+            Error::NotPositiveDefinite { pivot, index } => write!(
+                f,
+                "matrix is not positive definite (pivot {pivot} at global index {index})"
+            ),
+            Error::Optimization(s) => write!(f, "optimization failed: {s}"),
+            Error::Artifact(s) => write!(f, "runtime artifact error: {s}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

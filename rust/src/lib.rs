@@ -44,6 +44,42 @@
 //!     .unwrap();
 //! println!("theta_hat = {:?}", fit.theta);
 //! ```
+//!
+//! ## Adaptive per-tile precision
+//!
+//! Instead of a fixed band, [`cholesky::Variant::Adaptive`] picks each
+//! tile's storage precision (f64 / f32 / bf16) from the generated
+//! covariance's per-tile Frobenius norms against a user tolerance — the
+//! ExaGeoStat-style rule.  Every precision decision flows through one
+//! queryable [`tile::PrecisionMap`]:
+//!
+//! ```no_run
+//! use mpcholesky::prelude::*;
+//!
+//! let field = SyntheticField::generate(&FieldConfig {
+//!     n: 1024,
+//!     ..Default::default()
+//! }).unwrap();
+//!
+//! // factor Sigma with norm-adaptive tile precisions
+//! let cfg = MleConfig {
+//!     nb: 128,
+//!     variant: Variant::Adaptive { tolerance: 1e-8 },
+//!     ..Default::default()
+//! };
+//! let prob = MleProblem::new(&field.locations, &field.values, cfg).unwrap();
+//! let ll = prob.loglik(&field.theta).unwrap();
+//!
+//! // inspect the realized assignment directly
+//! let mut tiles = TileMatrix::zeros(1024, 128).unwrap();
+//! let sched = Scheduler::with_workers(4);
+//! generate_covariance(
+//!     &mut tiles, &field.locations, field.theta,
+//!     Metric::Euclidean, 1e-8, &NativeBackend, &sched,
+//! ).unwrap();
+//! let map = PrecisionMap::adaptive(&tiles, 1e-8);
+//! println!("loglik = {ll:.2}, split = {} ({:?})", map.label(), map.census());
+//! ```
 
 pub mod bench;
 pub mod cholesky;
@@ -63,7 +99,8 @@ pub mod tile;
 /// examples and benches.
 pub mod prelude {
     pub use crate::cholesky::{
-        factorize_dense, factorize_tiles, generate_and_factorize, CholeskyPlan, Variant,
+        factorize_dense, factorize_tiles, generate_and_factorize, generate_covariance,
+        CholeskyPlan, Variant,
     };
     pub use crate::config::RunConfig;
     pub use crate::datagen::{FieldConfig, SyntheticField, WindFieldConfig};
@@ -75,5 +112,5 @@ pub mod prelude {
     pub use crate::rng::Xoshiro256pp;
     pub use crate::runtime::PjrtBackend;
     pub use crate::scheduler::{Scheduler, SchedulerConfig, SchedulingPolicy};
-    pub use crate::tile::{Precision, TileMatrix};
+    pub use crate::tile::{Precision, PrecisionCensus, PrecisionMap, TileMatrix};
 }

@@ -11,9 +11,10 @@
 //! defaults — see `rust/src/config.rs` and `configs/*.conf`):
 //!   --config FILE    key = value run configuration
 //!   --n N            sites (default 1024)         --nb NB   tile (64)
-//!   --variant V      dp | mp | dst | 3p (mp)      --thick T band (2)
-//!   --sp-thick T     3p single-precision band     --workers W (all)
-//!   --backend B      native | pjrt (native)
+//!   --variant V      dp | mp | dst | 3p | adaptive (mp)
+//!   --thick T        band thickness (2)           --sp-thick T  3p band
+//!   --tolerance T    adaptive precision tolerance (1e-8)
+//!   --backend B      native | pjrt (native)       --workers W (all)
 //!   --range R        theta2 of the generator (0.1) --seed S  (42)
 //!
 //! (Hand-rolled parsing: clap is unavailable in the offline crate set.)
@@ -60,6 +61,7 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("variant", "variant"),
         ("thick", "diag_thick"),
         ("sp-thick", "sp_thick"),
+        ("tolerance", "tolerance"),
         ("max-evals", "max_evals"),
     ] {
         if let Some(v) = flags.get(flag) {
@@ -169,7 +171,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
 /// Re-run one factorization with tracing enabled and dump the per-task
 /// spans as CSV (`task,worker,start_ns,end_ns` — gantt-plottable).
 fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> {
-    use mpcholesky::cholesky::{CholeskyPlan, TileExecutor};
+    use mpcholesky::cholesky::{self, CholeskyPlan, TileExecutor};
     use mpcholesky::scheduler::SchedulerConfig;
     use mpcholesky::tile::TileMatrix;
 
@@ -184,20 +186,39 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
         ..Default::default()
     });
     let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
-    let tiles = TileMatrix::zeros(rc.n, rc.nb)?;
-    let mut plan = CholeskyPlan::build(rc.n / rc.nb, rc.nb, rc.variant, true);
-    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
-    let gen = mpcholesky::cholesky::GenContext {
-        locations: &field.locations,
-        theta,
-        metric: rc.metric,
-        nugget: rc.nugget,
-        precision_of: {
-            let variant = rc.variant;
-            Box::new(move |i, j| variant.tile_precision(i, j))
-        },
+    let p = rc.n / rc.nb;
+    let mut tiles = TileMatrix::zeros(rc.n, rc.nb)?;
+    let adaptive = matches!(rc.variant, Variant::Adaptive { .. });
+    let mut plan = if adaptive {
+        // adaptive plans need the generated tile norms: generate first,
+        // resolve the map, then trace the factorization phase
+        cholesky::generate_covariance(
+            &mut tiles,
+            &field.locations,
+            theta,
+            rc.metric,
+            rc.nugget,
+            &NativeBackend,
+            &sched,
+        )?;
+        let map = rc.variant.precision_map(p, Some(&tiles))?;
+        tiles.apply_precision_map(&map);
+        CholeskyPlan::build_with_map(p, rc.nb, rc.variant, map, false)
+    } else {
+        CholeskyPlan::build(p, rc.nb, rc.variant, true)
     };
-    let exec = TileExecutor::new(&tiles, &NativeBackend).with_generation(gen);
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let mut exec = TileExecutor::new(&tiles, &NativeBackend);
+    if !adaptive {
+        let map = rc.variant.precision_map(p, None)?;
+        exec = exec.with_generation(mpcholesky::cholesky::GenContext {
+            locations: &field.locations,
+            theta,
+            metric: rc.metric,
+            nugget: rc.nugget,
+            precision_of: Box::new(move |i, j| map.get(i, j)),
+        });
+    }
     let trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
     // annotate spans with codelet names for the gantt
     let mut csv = String::from("task,codelet,worker,start_ns,end_ns\n");

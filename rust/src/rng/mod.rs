@@ -1,12 +1,10 @@
 //! Pseudo-random number generation.
 //!
 //! Substrate for the ExaGeoStat data generator (the paper's SSVIII.B.1):
-//! the offline crate set has `rand_core` but not `rand`, so the generator
+//! the crate builds with zero external dependencies, so the generator
 //! (xoshiro256++), the seeding scheme (SplitMix64) and the normal sampler
 //! (Marsaglia polar) are implemented here from their reference
 //! descriptions and validated statistically in the tests.
-
-use rand_core::{impls, Error as RandError, RngCore, SeedableRng};
 
 /// SplitMix64 — used to expand a `u64` seed into xoshiro state, per the
 /// xoshiro authors' recommendation (never feed xoshiro an all-zero state).
@@ -107,27 +105,24 @@ impl Xoshiro256pp {
             xs.swap(i, j);
         }
     }
-}
 
-impl RngCore for Xoshiro256pp {
-    fn next_u32(&mut self) -> u32 {
-        (self.next_u64_raw() >> 32) as u32
+    /// Fill a byte buffer from the stream (the `rand_core` `fill_bytes`
+    /// contract without the external trait).
+    pub fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut chunks = dest.chunks_exact_mut(8);
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&self.next_u64_raw().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let bytes = self.next_u64_raw().to_le_bytes();
+            rem.copy_from_slice(&bytes[..rem.len()]);
+        }
     }
-    fn next_u64(&mut self) -> u64 {
-        self.next_u64_raw()
-    }
-    fn fill_bytes(&mut self, dest: &mut [u8]) {
-        impls::fill_bytes_via_next(self, dest)
-    }
-    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> std::result::Result<(), RandError> {
-        self.fill_bytes(dest);
-        Ok(())
-    }
-}
 
-impl SeedableRng for Xoshiro256pp {
-    type Seed = [u8; 32];
-    fn from_seed(seed: [u8; 32]) -> Self {
+    /// Reconstruct from a full 256-bit state dump (an all-zero seed falls
+    /// back to SplitMix64 expansion — xoshiro must never be zero-seeded).
+    pub fn from_seed_bytes(seed: [u8; 32]) -> Self {
         let mut s = [0u64; 4];
         for (i, chunk) in seed.chunks_exact(8).enumerate() {
             s[i] = u64::from_le_bytes(chunk.try_into().unwrap());
@@ -217,10 +212,25 @@ mod tests {
     }
 
     #[test]
-    fn rngcore_fill_bytes_works() {
+    fn fill_bytes_works() {
         let mut r = Xoshiro256pp::seed_from_u64(9);
         let mut buf = [0u8; 17];
         r.fill_bytes(&mut buf);
         assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn from_seed_bytes_roundtrips_state() {
+        let mut a = Xoshiro256pp::seed_from_u64(4);
+        let _ = a.next_u64_raw();
+        let mut bytes = [0u8; 32];
+        for (i, w) in a.s.iter().enumerate() {
+            bytes[i * 8..(i + 1) * 8].copy_from_slice(&w.to_le_bytes());
+        }
+        let mut b = Xoshiro256pp::from_seed_bytes(bytes);
+        assert_eq!(a.next_u64_raw(), b.next_u64_raw());
+        // the zero state is remapped, not used verbatim
+        let mut z = Xoshiro256pp::from_seed_bytes([0u8; 32]);
+        assert_ne!(z.next_u64_raw(), 0);
     }
 }

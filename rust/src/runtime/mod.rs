@@ -1,320 +1,26 @@
 //! PJRT runtime — loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and exposes them as a [`TileBackend`], putting
-//! the JAX/Pallas kernels on the Rust request path with Python long gone.
+//! `python/compile/aot.py` and exposes them as a
+//! [`TileBackend`](crate::kernels::TileBackend), putting the JAX/Pallas
+//! kernels on the Rust request path with Python long gone.
 //!
-//! Pipeline per artifact (see /opt/xla-example/load_hlo and DESIGN.md):
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `PjRtClient::compile` (once, at startup) -> `execute` per tile task.
-//!
-//! Layout note: JAX lowers row-major arrays; the coordinator's tiles are
-//! column-major.  Rather than baking transposes into the HLO, the
-//! boundary transposes each nb x nb tile on the way in and out — an
-//! O(nb^2) cost against the kernels' O(nb^3) work, and the exact analog
-//! of the transpose the paper's `dconv2s` performs when packing tiles
-//! into the opposite triangle.
+//! The actual PJRT client lives behind the `pjrt` cargo feature (it
+//! needs the `xla` crate, which is not part of the hermetic default
+//! build).  Without the feature, [`PjrtBackend`] is an uninhabited
+//! stand-in whose constructors return a descriptive error, so callers
+//! (`mpchol --backend pjrt`, the MLE driver) type-check identically in
+//! both configurations.  The artifact [`manifest`] parser is pure Rust
+//! and always available.
 
 pub mod manifest;
 
 pub use manifest::{ArgSpec, ArtifactSpec, DType, Manifest};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 
-use crate::error::{Error, Result};
-use crate::kernels::TileBackend;
-use crate::matern::{Location, MaternParams, Metric};
-
-/// A compiled artifact plus its manifest entry.
-struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
-}
-
-/// PJRT-backed implementation of the Algorithm 1 codelets.
-///
-/// Thread-safety: the PJRT CPU client is thread-safe for execution, but
-/// the `xla` crate's wrapper types are raw-pointer newtypes without
-/// `Send`/`Sync`; executions are serialized through a [`Mutex`] per
-/// backend (the PJRT path certifies composition; the native backend is
-/// the scalability path — see DESIGN.md SS1).
-pub struct PjrtBackend {
-    inner: Mutex<PjrtInner>,
-    nb: usize,
-    dir: PathBuf,
-}
-
-struct PjrtInner {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    execs: HashMap<String, LoadedExec>,
-}
-
-// SAFETY: all access to the non-Send XLA wrappers goes through the Mutex;
-// the PJRT CPU plugin itself is thread-safe.
-unsafe impl Send for PjrtBackend {}
-unsafe impl Sync for PjrtBackend {}
-
-/// The tile codelets the backend preloads at startup.
-const TILE_ARTIFACTS: &[&str] = &[
-    "potrf_f64", "potrf_f32", "trsm_f64", "trsm_f32", "syrk_f64", "syrk_f32",
-    "gemm_f64", "gemm_f32", "lag2s", "lag2d",
-    "matern_nu05", "matern_nu15", "matern_nu25",
-];
-
-impl PjrtBackend {
-    /// Load + compile every tile artifact in `dir` (default:
-    /// `$MPCHOL_ARTIFACTS` or `artifacts/`).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut execs = HashMap::new();
-        for &name in TILE_ARTIFACTS {
-            let spec = manifest.get(name)?.clone();
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| Error::Artifact(format!("bad path {path:?}")))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            execs.insert(name.to_string(), LoadedExec { exe, spec });
-        }
-        Ok(Self { inner: Mutex::new(PjrtInner { client, execs }), nb: manifest.nb, dir })
-    }
-
-    /// Load from the conventional location.
-    pub fn load_default() -> Result<Self> {
-        let dir = std::env::var("MPCHOL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::load(dir)
-    }
-
-    /// Tile size the artifacts were compiled for.
-    pub fn nb(&self) -> usize {
-        self.nb
-    }
-
-    /// Artifact directory.
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    fn check_nb(&self, nb: usize, what: &str) {
-        assert_eq!(
-            nb, self.nb,
-            "{what}: PJRT backend compiled for nb={}, got nb={nb} \
-             (rebuild artifacts with MPCHOL_NB={nb})",
-            self.nb
-        );
-    }
-
-    /// Execute artifact `name` on row-major literals, returning the
-    /// single (tuple-wrapped) output literal.
-    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let inner = self.inner.lock().unwrap();
-        let le = inner
-            .execs
-            .get(name)
-            .ok_or_else(|| Error::Artifact(format!("artifact {name} not loaded")))?;
-        if args.len() != le.spec.args.len() {
-            return Err(Error::Artifact(format!(
-                "{name}: arity {} != manifest {}",
-                args.len(),
-                le.spec.args.len()
-            )));
-        }
-        let out = le.exe.execute::<xla::Literal>(args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple1()?)
-    }
-}
-
-// ---- layout helpers ----------------------------------------------------
-
-fn transpose_to_rowmajor<T: Copy + Default>(col: &[T], nb: usize) -> Vec<T> {
-    let mut out = vec![T::default(); nb * nb];
-    for c in 0..nb {
-        for r in 0..nb {
-            out[r * nb + c] = col[r + c * nb];
-        }
-    }
-    out
-}
-
-fn transpose_from_rowmajor<T: Copy>(row: &[T], col: &mut [T], nb: usize) {
-    for c in 0..nb {
-        for r in 0..nb {
-            col[r + c * nb] = row[r * nb + c];
-        }
-    }
-}
-
-fn lit2d_f64(data_rowmajor: &[f64], nb: usize) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data_rowmajor).reshape(&[nb as i64, nb as i64])?)
-}
-
-fn lit2d_f32(data_rowmajor: &[f32], nb: usize) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data_rowmajor).reshape(&[nb as i64, nb as i64])?)
-}
-
-impl TileBackend for PjrtBackend {
-    fn potrf_f64(&self, a: &mut [f64], nb: usize, row0: usize) -> Result<()> {
-        self.check_nb(nb, "potrf_f64");
-        let rm = transpose_to_rowmajor(a, nb);
-        let out = self.run("potrf_f64", &[lit2d_f64(&rm, nb)?])?;
-        let v = out.to_vec::<f64>()?;
-        // XLA's cholesky does not signal indefiniteness; NaNs do.
-        if v.iter().any(|x| x.is_nan()) {
-            return Err(Error::NotPositiveDefinite { pivot: f64::NAN, index: row0 });
-        }
-        transpose_from_rowmajor(&v, a, nb);
-        Ok(())
-    }
-
-    fn potrf_f32(&self, a: &mut [f32], nb: usize, row0: usize) -> Result<()> {
-        self.check_nb(nb, "potrf_f32");
-        let rm = transpose_to_rowmajor(a, nb);
-        let out = self.run("potrf_f32", &[lit2d_f32(&rm, nb)?])?;
-        let v = out.to_vec::<f32>()?;
-        if v.iter().any(|x| x.is_nan()) {
-            return Err(Error::NotPositiveDefinite { pivot: f64::NAN, index: row0 });
-        }
-        transpose_from_rowmajor(&v, a, nb);
-        Ok(())
-    }
-
-    fn trsm_f64(&self, l: &[f64], b: &mut [f64], nb: usize) {
-        self.check_nb(nb, "trsm_f64");
-        let lr = transpose_to_rowmajor(l, nb);
-        let br = transpose_to_rowmajor(b, nb);
-        let out = self
-            .run("trsm_f64", &[lit2d_f64(&lr, nb).unwrap(), lit2d_f64(&br, nb).unwrap()])
-            .expect("trsm_f64 artifact failed");
-        transpose_from_rowmajor(&out.to_vec::<f64>().unwrap(), b, nb);
-    }
-
-    fn trsm_f32(&self, l: &[f32], b: &mut [f32], nb: usize) {
-        self.check_nb(nb, "trsm_f32");
-        let lr = transpose_to_rowmajor(l, nb);
-        let br = transpose_to_rowmajor(b, nb);
-        let out = self
-            .run("trsm_f32", &[lit2d_f32(&lr, nb).unwrap(), lit2d_f32(&br, nb).unwrap()])
-            .expect("trsm_f32 artifact failed");
-        transpose_from_rowmajor(&out.to_vec::<f32>().unwrap(), b, nb);
-    }
-
-    fn syrk_f64(&self, c: &mut [f64], a: &[f64], nb: usize) {
-        self.check_nb(nb, "syrk_f64");
-        let cr = transpose_to_rowmajor(c, nb);
-        let ar = transpose_to_rowmajor(a, nb);
-        let out = self
-            .run("syrk_f64", &[lit2d_f64(&cr, nb).unwrap(), lit2d_f64(&ar, nb).unwrap()])
-            .expect("syrk_f64 artifact failed");
-        transpose_from_rowmajor(&out.to_vec::<f64>().unwrap(), c, nb);
-    }
-
-    fn syrk_f32(&self, c: &mut [f32], a: &[f32], nb: usize) {
-        self.check_nb(nb, "syrk_f32");
-        let cr = transpose_to_rowmajor(c, nb);
-        let ar = transpose_to_rowmajor(a, nb);
-        let out = self
-            .run("syrk_f32", &[lit2d_f32(&cr, nb).unwrap(), lit2d_f32(&ar, nb).unwrap()])
-            .expect("syrk_f32 artifact failed");
-        transpose_from_rowmajor(&out.to_vec::<f32>().unwrap(), c, nb);
-    }
-
-    fn gemm_f64(&self, c: &mut [f64], a: &[f64], b: &[f64], nb: usize) {
-        self.check_nb(nb, "gemm_f64");
-        let cr = transpose_to_rowmajor(c, nb);
-        let ar = transpose_to_rowmajor(a, nb);
-        let br = transpose_to_rowmajor(b, nb);
-        let out = self
-            .run(
-                "gemm_f64",
-                &[
-                    lit2d_f64(&cr, nb).unwrap(),
-                    lit2d_f64(&ar, nb).unwrap(),
-                    lit2d_f64(&br, nb).unwrap(),
-                ],
-            )
-            .expect("gemm_f64 artifact failed");
-        transpose_from_rowmajor(&out.to_vec::<f64>().unwrap(), c, nb);
-    }
-
-    fn gemm_f32(&self, c: &mut [f32], a: &[f32], b: &[f32], nb: usize) {
-        self.check_nb(nb, "gemm_f32");
-        let cr = transpose_to_rowmajor(c, nb);
-        let ar = transpose_to_rowmajor(a, nb);
-        let br = transpose_to_rowmajor(b, nb);
-        let out = self
-            .run(
-                "gemm_f32",
-                &[
-                    lit2d_f32(&cr, nb).unwrap(),
-                    lit2d_f32(&ar, nb).unwrap(),
-                    lit2d_f32(&br, nb).unwrap(),
-                ],
-            )
-            .expect("gemm_f32 artifact failed");
-        transpose_from_rowmajor(&out.to_vec::<f32>().unwrap(), c, nb);
-    }
-
-    fn matern_f64(
-        &self,
-        out: &mut [f64],
-        x1: &[Location],
-        x2: &[Location],
-        theta: &MaternParams,
-        metric: Metric,
-    ) {
-        let nb = self.nb;
-        // the AOT matern kernels cover half-integer smoothness on
-        // euclidean distance; everything else falls back to the native
-        // Bessel path (same policy as the L1 kernel: see matern.py)
-        let name = match theta.smoothness {
-            v if v == 0.5 => "matern_nu05",
-            v if v == 1.5 => "matern_nu15",
-            v if v == 2.5 => "matern_nu25",
-            _ => "",
-        };
-        if name.is_empty()
-            || metric != Metric::Euclidean
-            || x1.len() != nb
-            || x2.len() != nb
-        {
-            crate::matern::matern_block(out, x1, x2, theta, metric);
-            return;
-        }
-        let coords = |xs: &[Location]| -> Vec<f64> {
-            xs.iter().flat_map(|l| [l.x, l.y]).collect()
-        };
-        let x1l = xla::Literal::vec1(&coords(x1)).reshape(&[nb as i64, 2]).unwrap();
-        let x2l = xla::Literal::vec1(&coords(x2)).reshape(&[nb as i64, 2]).unwrap();
-        let th = xla::Literal::vec1(&theta.as_array());
-        let lit = self
-            .run(name, &[x1l, x2l, th])
-            .expect("matern artifact failed");
-        transpose_from_rowmajor(&lit.to_vec::<f64>().unwrap(), out, nb);
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn transpose_roundtrip() {
-        let nb = 4;
-        let col: Vec<f64> = (0..16).map(|i| i as f64).collect();
-        let row = transpose_to_rowmajor(&col, nb);
-        assert_eq!(row[0 * nb + 1], col[0 + 1 * nb]); // (0,1) element
-        let mut back = vec![0.0; 16];
-        transpose_from_rowmajor(&row, &mut back, nb);
-        assert_eq!(back, col);
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtBackend;

@@ -1,0 +1,101 @@
+//! Stand-in for [`PjrtBackend`] when the crate is built without the
+//! `pjrt` feature: an uninhabited type whose constructors fail with a
+//! descriptive error.  Every consumer of the real backend keeps
+//! type-checking (the methods are statically unreachable), and the
+//! default build stays free of the `xla` dependency.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::kernels::TileBackend;
+
+use super::Manifest;
+
+/// Uninhabited placeholder for the PJRT backend (`--features pjrt`
+/// compiles the real one in its place).
+pub enum PjrtBackend {}
+
+impl PjrtBackend {
+    fn unavailable() -> Error {
+        Error::Artifact(
+            "PJRT backend not compiled in: rebuild with `--features pjrt` \
+             (requires the xla crate — see rust/Cargo.toml)"
+                .into(),
+        )
+    }
+
+    /// Always fails in this configuration — but surfaces artifact-dir
+    /// problems (missing/corrupt manifest) exactly like the real backend
+    /// would, so error-handling paths behave identically.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Manifest::load(dir.as_ref())?;
+        Err(Self::unavailable())
+    }
+
+    /// Always fails in this configuration.
+    pub fn load_default() -> Result<Self> {
+        Err(Self::unavailable())
+    }
+
+    /// Unreachable (no value of this type exists).
+    pub fn nb(&self) -> usize {
+        match *self {}
+    }
+
+    /// Unreachable (no value of this type exists).
+    pub fn dir(&self) -> &Path {
+        match *self {}
+    }
+}
+
+impl TileBackend for PjrtBackend {
+    fn potrf_f64(&self, _a: &mut [f64], _nb: usize, _row0: usize) -> Result<()> {
+        match *self {}
+    }
+    fn potrf_f32(&self, _a: &mut [f32], _nb: usize, _row0: usize) -> Result<()> {
+        match *self {}
+    }
+    fn trsm_f64(&self, _l: &[f64], _b: &mut [f64], _nb: usize) {
+        match *self {}
+    }
+    fn trsm_f32(&self, _l: &[f32], _b: &mut [f32], _nb: usize) {
+        match *self {}
+    }
+    fn syrk_f64(&self, _c: &mut [f64], _a: &[f64], _nb: usize) {
+        match *self {}
+    }
+    fn syrk_f32(&self, _c: &mut [f32], _a: &[f32], _nb: usize) {
+        match *self {}
+    }
+    fn gemm_f64(&self, _c: &mut [f64], _a: &[f64], _b: &[f64], _nb: usize) {
+        match *self {}
+    }
+    fn gemm_f32(&self, _c: &mut [f32], _a: &[f32], _b: &[f32], _nb: usize) {
+        match *self {}
+    }
+    fn name(&self) -> &'static str {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_manifest_errors_like_the_real_backend() {
+        let err = PjrtBackend::load("/definitely/missing").err().expect("must not load");
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn stub_reports_missing_feature_on_valid_artifact_dir() {
+        let dir = std::env::temp_dir().join("mpchol_stub_ok_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "# nb=64 demo_n=256 demo_nb=64 demo_thick=2\n")
+            .unwrap();
+        let err = PjrtBackend::load(&dir).err().expect("stub must never construct");
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

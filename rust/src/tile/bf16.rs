@@ -10,6 +10,11 @@
 //! every write, which is bit-equivalent to bf16 storage and lets all
 //! f32 kernels be reused.
 
+/// Machine epsilon of bf16 storage: 7 stored mantissa bits put the next
+/// representable value after 1.0 at `1 + 2^-7`.  Used by the adaptive
+/// precision rule ([`crate::tile::PrecisionMap::adaptive`]).
+pub const BF16_EPS: f64 = 1.0 / 128.0;
+
 /// Round an f32 to the nearest bfloat16 (round-to-nearest-even), returned
 /// as the bf16 bit pattern.
 #[inline]

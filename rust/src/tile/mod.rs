@@ -21,7 +21,7 @@ pub mod bf16;
 pub mod convert;
 pub mod dense;
 
-pub use bf16::{quantize_bf16, quantize_bf16_slice};
+pub use bf16::{quantize_bf16, quantize_bf16_slice, BF16_EPS};
 pub use convert::{demote, promote};
 pub use dense::DenseMatrix;
 
@@ -49,6 +49,158 @@ impl Precision {
             Precision::F32 => 4,
             Precision::Bf16 => 2,
         }
+    }
+
+    /// Unit roundoff of the storage format (the `eps(prec)` the adaptive
+    /// tile-selection rule divides the tolerance by).
+    pub fn eps(self) -> f64 {
+        match self {
+            Precision::F64 => f64::EPSILON,
+            Precision::F32 => f32::EPSILON as f64,
+            Precision::Bf16 => BF16_EPS,
+        }
+    }
+}
+
+/// Per-tile storage-precision assignment over the lower triangle of a
+/// `p x p` tile matrix — the single queryable authority for every
+/// precision decision in the factorization pipeline.
+///
+/// Two sources produce maps: the band rules of the paper's variants
+/// (`|i - j| < diag_thick`, via [`crate::cholesky::Variant::precision_map`])
+/// and the norm-based adaptive rule of [`PrecisionMap::adaptive`]
+/// (ExaGeoStat-style: demote a tile when its share of the global
+/// Frobenius norm is small enough that the cheaper format's roundoff
+/// stays under a user tolerance).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrecisionMap {
+    p: usize,
+    /// Lower-triangle precisions, index = i*(i+1)/2 + j.
+    prec: Vec<Precision>,
+}
+
+impl PrecisionMap {
+    /// Build from a per-tile rule evaluated on the lower triangle.
+    pub fn from_fn(p: usize, mut f: impl FnMut(usize, usize) -> Precision) -> Self {
+        let mut prec = Vec::with_capacity(p * (p + 1) / 2);
+        for i in 0..p {
+            for j in 0..=i {
+                prec.push(f(i, j));
+            }
+        }
+        Self { p, prec }
+    }
+
+    /// Every tile at one precision (FullDp is `uniform(p, F64)`).
+    pub fn uniform(p: usize, prec: Precision) -> Self {
+        Self { p, prec: vec![prec; p * (p + 1) / 2] }
+    }
+
+    /// Norm-based adaptive assignment over populated covariance tiles.
+    ///
+    /// For each off-diagonal tile the decision quantity is
+    /// `cal = ||A_ij||_F * p / ||A||_F` and the tile takes the cheapest
+    /// precision with `cal < tolerance / eps(prec)` (bf16 before f32
+    /// before f64) — so a demoted tile's storage roundoff contributes at
+    /// most ~`tolerance/p` of the global norm.  Diagonal tiles always
+    /// stay `F64`: the potrf pivots live there.  `tolerance = 0` demotes
+    /// nothing and reproduces the full-DP map.
+    pub fn adaptive(tiles: &TileMatrix, tolerance: f64) -> Self {
+        // a NaN/negative tolerance would silently disable every demotion
+        // comparison; fail loudly at the decision authority itself (the
+        // user-facing paths validate earlier and return typed errors)
+        assert!(
+            tolerance.is_finite() && tolerance >= 0.0,
+            "adaptive tolerance must be finite and >= 0, got {tolerance}"
+        );
+        let p = tiles.p();
+        // Frobenius norm of the full symmetric matrix: strictly-lower
+        // tiles appear twice.
+        let mut total_sq = 0.0;
+        let mut norms = vec![0.0; p * (p + 1) / 2];
+        for t in tiles.tile_ids() {
+            let norm = tiles.tile_frobenius(t);
+            let sq = norm * norm;
+            norms[t.i * (t.i + 1) / 2 + t.j] = norm;
+            total_sq += if t.is_diagonal() { sq } else { 2.0 * sq };
+        }
+        let global = total_sq.sqrt();
+        let scalar = p as f64;
+        Self::from_fn(p, |i, j| {
+            if i == j || global == 0.0 {
+                return Precision::F64;
+            }
+            let cal = norms[i * (i + 1) / 2 + j] * scalar / global;
+            if cal < tolerance / Precision::Bf16.eps() {
+                Precision::Bf16
+            } else if cal < tolerance / Precision::F32.eps() {
+                Precision::F32
+            } else {
+                Precision::F64
+            }
+        })
+    }
+
+    /// Tiles per side.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Precision of tile (i, j).  Symmetric-consistent: indices may come
+    /// in either order and resolve to the stored lower-triangle entry.
+    pub fn get(&self, i: usize, j: usize) -> Precision {
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        assert!(i < self.p, "tile ({i},{j}) out of range for p={}", self.p);
+        self.prec[i * (i + 1) / 2 + j]
+    }
+
+    /// Algorithm 1's "is this a double-precision tile" predicate.
+    pub fn is_dp(&self, i: usize, j: usize) -> bool {
+        self.get(i, j) == Precision::F64
+    }
+
+    /// Tile counts per precision (the dp/sp/bf16 census bench reports).
+    pub fn census(&self) -> PrecisionCensus {
+        let mut c = PrecisionCensus::default();
+        for &pr in &self.prec {
+            match pr {
+                Precision::F64 => c.dp += 1,
+                Precision::F32 => c.sp += 1,
+                Precision::Bf16 => c.hp += 1,
+            }
+        }
+        c
+    }
+
+    /// The paper's DP(x%)-SP(y%)[-HP(z%)] label computed from the actual
+    /// assignment (rather than from a band formula).
+    pub fn label(&self) -> String {
+        let c = self.census();
+        let total = c.total() as f64;
+        let pct = |k: usize| (k as f64 / total * 100.0).round() as usize;
+        if c.hp > 0 {
+            format!("DP({}%)-SP({}%)-HP({}%)", pct(c.dp), pct(c.sp), pct(c.hp))
+        } else {
+            format!("DP({}%)-SP({}%)", pct(c.dp), pct(c.sp))
+        }
+    }
+}
+
+/// Tile counts per storage precision over the lower triangle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrecisionCensus {
+    /// F64 tiles.
+    pub dp: usize,
+    /// F32 tiles.
+    pub sp: usize,
+    /// Bf16-storage tiles.
+    pub hp: usize,
+}
+
+impl PrecisionCensus {
+    /// Total tiles in the lower triangle.
+    pub fn total(&self) -> usize {
+        self.dp + self.sp + self.hp
     }
 }
 
@@ -249,21 +401,61 @@ impl TileMatrix {
         out
     }
 
-    /// Allocate the f32 shadow for every tile the policy marks single
-    /// (Algorithm 1 lines 2-6: the initial `dconv2s` sweep) and demote the
-    /// current contents into it.
-    pub fn demote_offband(&mut self, is_dp: impl Fn(usize, usize) -> bool) {
+    /// Frobenius norm of one tile's canonical f64 buffer.
+    pub fn tile_frobenius(&self, t: TileId) -> f64 {
+        self.tile(t).dp.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Allocate/refresh shadow storage per the precision map (Algorithm 1
+    /// lines 2-6 generalized to arbitrary assignments): `F32` tiles get a
+    /// demoted f32 shadow, `Bf16` tiles additionally round their storage
+    /// through bf16 (shadow and canonical buffer), `F64` tiles drop any
+    /// stale shadow.
+    pub fn apply_precision_map(&mut self, map: &PrecisionMap) {
+        assert_eq!(
+            map.p(),
+            self.p,
+            "precision map order {} != tile matrix order {}",
+            map.p(),
+            self.p
+        );
         let nb = self.nb;
         for j in 0..self.p {
             for i in j..self.p {
-                if !is_dp(i, j) {
-                    let slot = self.tile_mut(TileId::new(i, j));
-                    let mut sp = vec![0.0f32; nb * nb];
-                    demote(&slot.dp, &mut sp);
-                    slot.sp = Some(sp);
+                let prec = map.get(i, j);
+                let slot = self.tile_mut(TileId::new(i, j));
+                match prec {
+                    Precision::F64 => slot.sp = None,
+                    Precision::F32 => {
+                        let mut sp = vec![0.0f32; nb * nb];
+                        demote(&slot.dp, &mut sp);
+                        slot.sp = Some(sp);
+                    }
+                    Precision::Bf16 => {
+                        let mut sp = vec![0.0f32; nb * nb];
+                        demote(&slot.dp, &mut sp);
+                        quantize_bf16_slice(&mut sp);
+                        promote(&sp, &mut slot.dp);
+                        slot.sp = Some(sp);
+                    }
                 }
             }
         }
+    }
+
+    /// Allocate the f32 shadow for every tile the policy marks single
+    /// (Algorithm 1 lines 2-6: the initial `dconv2s` sweep) and demote the
+    /// current contents into it.  Convenience wrapper over
+    /// [`Self::apply_precision_map`] for two-level band predicates.
+    pub fn demote_offband(&mut self, is_dp: impl Fn(usize, usize) -> bool) {
+        let map = PrecisionMap::from_fn(self.p, |i, j| {
+            if is_dp(i, j) {
+                Precision::F64
+            } else {
+                Precision::F32
+            }
+        });
+        self.apply_precision_map(&map);
     }
 
     /// Bytes of live DP storage.
@@ -374,6 +566,118 @@ mod tests {
         }));
         assert!(r.is_err(), "second writer must panic in debug builds");
         tm.guard_release(t, true);
+    }
+
+    #[test]
+    fn precision_map_from_fn_get_and_symmetry() {
+        let p = 5;
+        let map = PrecisionMap::from_fn(p, |i, j| {
+            if i == j {
+                Precision::F64
+            } else if i - j == 1 {
+                Precision::F32
+            } else {
+                Precision::Bf16
+            }
+        });
+        assert_eq!(map.p(), p);
+        assert_eq!(map.get(0, 0), Precision::F64);
+        assert_eq!(map.get(2, 1), Precision::F32);
+        assert_eq!(map.get(4, 0), Precision::Bf16);
+        // symmetric-consistent lookups
+        for i in 0..p {
+            for j in 0..p {
+                assert_eq!(map.get(i, j), map.get(j, i), "({i},{j})");
+            }
+        }
+        let c = map.census();
+        assert_eq!(c.total(), p * (p + 1) / 2);
+        assert_eq!(c.dp, 5);
+        assert_eq!(c.sp, 4);
+        assert_eq!(c.hp, 6);
+        assert!(map.label().contains("HP("), "{}", map.label());
+    }
+
+    #[test]
+    fn precision_map_uniform_and_eps() {
+        let m = PrecisionMap::uniform(3, Precision::F64);
+        assert_eq!(m.census(), PrecisionCensus { dp: 6, sp: 0, hp: 0 });
+        assert!(m.is_dp(2, 0));
+        assert_eq!(m.label(), "DP(100%)-SP(0%)");
+        assert!(Precision::F64.eps() < Precision::F32.eps());
+        assert!(Precision::F32.eps() < Precision::Bf16.eps());
+        assert_eq!(Precision::Bf16.eps(), BF16_EPS);
+    }
+
+    #[test]
+    fn adaptive_map_demotes_small_tiles_only() {
+        // diag tiles large, far tiles tiny: the norm rule must keep the
+        // diagonal in F64 and demote the small tiles
+        let nb = 8;
+        let p = 4;
+        let mut tm = TileMatrix::zeros(nb * p, nb).unwrap();
+        for t in (0..p).flat_map(|j| (j..p).map(move |i| TileId::new(i, j))) {
+            let scale = if t.i == t.j {
+                1.0
+            } else {
+                1e-9f64.powf((t.i - t.j) as f64 / (p - 1) as f64)
+            };
+            for x in tm.tile_mut(t).dp.iter_mut() {
+                *x = scale;
+            }
+        }
+        let map = PrecisionMap::adaptive(&tm, 1e-8);
+        for k in 0..p {
+            assert_eq!(map.get(k, k), Precision::F64, "diagonal must stay DP");
+        }
+        assert!(map.census().dp < p * (p + 1) / 2, "nothing demoted: {:?}", map.census());
+        // zero tolerance demotes nothing
+        assert_eq!(PrecisionMap::adaptive(&tm, 0.0), PrecisionMap::uniform(p, Precision::F64));
+    }
+
+    #[test]
+    fn apply_precision_map_allocates_and_quantizes() {
+        let nb = 4;
+        let p = 3;
+        let mut tm = TileMatrix::zeros(nb * p, nb).unwrap();
+        for t in (0..p).flat_map(|j| (j..p).map(move |i| TileId::new(i, j))) {
+            for x in tm.tile_mut(t).dp.iter_mut() {
+                *x = 0.1234567890123;
+            }
+        }
+        let map = PrecisionMap::from_fn(p, |i, j| match i - j {
+            0 => Precision::F64,
+            1 => Precision::F32,
+            _ => Precision::Bf16,
+        });
+        tm.apply_precision_map(&map);
+        assert!(tm.tile(TileId::new(0, 0)).sp.is_none());
+        assert!(tm.tile(TileId::new(1, 0)).sp.is_some());
+        let hp = tm.tile(TileId::new(2, 0));
+        assert!(hp.sp.is_some());
+        // bf16 tiles carry the storage rounding in the canonical buffer too
+        assert_eq!(hp.dp[0], quantize_bf16(0.1234567890123f64 as f32) as f64);
+        // re-applying an all-F64 map drops the shadows again
+        tm.apply_precision_map(&PrecisionMap::uniform(p, Precision::F64));
+        assert!(tm.tile(TileId::new(1, 0)).sp.is_none());
+        assert_eq!(tm.sp_bytes(), 0);
+    }
+
+    #[test]
+    fn tile_frobenius_matches_manual_sum() {
+        let mut tm = TileMatrix::zeros(64, 32).unwrap();
+        for (k, x) in tm.tile_mut(TileId::new(1, 0)).dp.iter_mut().enumerate() {
+            *x = (k % 3) as f64;
+        }
+        let want: f64 = tm
+            .tile(TileId::new(1, 0))
+            .dp
+            .iter()
+            .map(|x| x * x)
+            .sum::<f64>()
+            .sqrt();
+        assert_eq!(tm.tile_frobenius(TileId::new(1, 0)), want);
+        assert_eq!(tm.tile_frobenius(TileId::new(0, 0)), 0.0);
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Acceptance test for `Variant::Adaptive` at the issue's reference
+//! setup: a 1024-site Morton-ordered synthetic field, nb = 128 (p = 8).
+//!
+//! Asserts the three acceptance criteria:
+//! 1. adaptive at tolerance 1e-8 assigns strictly fewer F64 tiles than
+//!    full DP;
+//! 2. its planner reports a lower dp-flop share than
+//!    `MixedPrecision { diag_thick: p }` (the all-DP band);
+//! 3. the factorization's forward error — measured end to end, as the
+//!    held-out prediction error of the kriging pipeline built on the
+//!    factor — stays within 10x of the full-DP result.  The raw backward
+//!    error of the factor is additionally checked to track the requested
+//!    tolerance.
+
+use mpcholesky::matern::matern_matrix;
+use mpcholesky::prelude::*;
+use mpcholesky::tile::DenseMatrix;
+
+#[test]
+fn adaptive_1024_census_flops_and_forward_error() {
+    let n = 1024;
+    let nb = 128;
+    let p = n / nb;
+    let tol = 1e-8;
+
+    // Morton-ordered synthetic field (SyntheticField sorts internally)
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 42,
+        gen_nb: nb,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = DenseMatrix::from_vec(
+        n,
+        matern_matrix(&field.locations, &field.theta, Metric::Euclidean, 1e-8),
+    )
+    .unwrap();
+    let sched = Scheduler::with_workers(4);
+
+    let mut t_dp = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan_dp = factorize_tiles(&mut t_dp, Variant::FullDp, &NativeBackend, &sched).unwrap();
+
+    let mut t_ad = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan_ad = factorize_tiles(
+        &mut t_ad,
+        Variant::Adaptive { tolerance: tol },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+
+    // 1. strictly fewer F64 tiles than full DP
+    let total = p * (p + 1) / 2;
+    assert_eq!(plan_dp.census().dp, total);
+    let census = plan_ad.census();
+    assert_eq!(census.total(), total);
+    assert!(
+        census.dp < total,
+        "adaptive tol={tol} demoted nothing: {census:?} ({})",
+        plan_ad.map.label()
+    );
+
+    // 2. lower dp-flop share than the all-DP band MixedPrecision{p}
+    let band = CholeskyPlan::build(p, nb, Variant::MixedPrecision { diag_thick: p }, false);
+    assert!(
+        plan_ad.dp_flop_fraction() < band.dp_flop_fraction(),
+        "adaptive dp-flop share {} !< band share {}",
+        plan_ad.dp_flop_fraction(),
+        band.dp_flop_fraction()
+    );
+
+    // 3a. the factor's backward error tracks the tolerance
+    let l = t_ad.to_dense(true);
+    let llt = l.matmul_nt(&l);
+    let mut err = 0.0f64;
+    for j in 0..n {
+        for i in j..n {
+            err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+        }
+    }
+    assert!(err < 1e-6, "||LL^T - A||_max = {err} does not track tolerance {tol}");
+
+    // 3b. end-to-end forward error: krige 256 held-out sites from the 768
+    // others (768 = 6 tiles) with each variant's factorization
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    rng.shuffle(&mut idx);
+    let (test_idx, train_idx) = idx.split_at(256);
+    let pick = |ids: &[usize]| -> (Vec<Location>, Vec<f64>) {
+        (
+            ids.iter().map(|&i| field.locations[i]).collect(),
+            ids.iter().map(|&i| field.values[i]).collect(),
+        )
+    };
+    let (te_locs, te_z) = pick(test_idx);
+    let (tr_locs, tr_z) = pick(train_idx);
+    let forward_err = |variant: Variant| -> f64 {
+        let cfg = MleConfig { nb, variant, ..Default::default() };
+        let model = KrigingModel::fit(&tr_locs, &tr_z, field.theta, &cfg).unwrap();
+        pmse(&model.predict(&te_locs), &te_z)
+    };
+    let e_dp = forward_err(Variant::FullDp);
+    let e_ad = forward_err(Variant::Adaptive { tolerance: tol });
+    assert!(
+        e_ad <= 10.0 * e_dp,
+        "adaptive forward (prediction) error {e_ad} not within 10x of full DP {e_dp}"
+    );
+}

@@ -5,6 +5,10 @@
 //! Requires `make artifacts` (skips with a message otherwise — CI runs
 //! artifacts first).
 
+// The whole suite needs the real PJRT client, which only exists behind
+// the `pjrt` cargo feature (the hermetic default build ships a stub).
+#![cfg(feature = "pjrt")]
+
 use mpcholesky::cholesky::{factorize_dense, Variant};
 use mpcholesky::kernels::{NativeBackend, TileBackend};
 use mpcholesky::matern::{Location, MaternParams, Metric};

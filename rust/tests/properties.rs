@@ -184,6 +184,83 @@ fn prop_dst_structure_preserved() {
     }
 }
 
+/// Property: the band variants' PrecisionMap agrees exactly with the
+/// legacy per-tile band predicates for every (i, j) — the refactor moved
+/// the decision behind the map without changing it.
+#[test]
+fn prop_band_map_matches_band_predicates() {
+    for p in [1usize, 2, 5, 9] {
+        for variant in [
+            Variant::FullDp,
+            Variant::MixedPrecision { diag_thick: 2 },
+            Variant::Dst { diag_thick: 3 },
+            Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 },
+        ] {
+            let map = variant.precision_map(p, None).unwrap();
+            for j in 0..p {
+                for i in j..p {
+                    assert_eq!(
+                        map.get(i, j),
+                        variant.tile_precision(i, j),
+                        "{variant:?} tile ({i},{j})"
+                    );
+                    assert_eq!(map.is_dp(i, j), variant.is_dp_tile(i, j, p));
+                }
+            }
+        }
+    }
+}
+
+/// Properties of the adaptive map on real covariance tiles:
+/// * tolerance 0 demotes nothing (equals the full-DP band);
+/// * every diagonal tile stays F64 at every tolerance;
+/// * lookups are symmetric-consistent;
+/// * monotone in tolerance — loosening never *promotes* a tile.
+#[test]
+fn prop_adaptive_map_invariants() {
+    use mpcholesky::tile::{Precision, PrecisionMap, TileMatrix};
+    let mut sweep = Sweep::new(123);
+    for case in 0..5 {
+        let nb = 16;
+        let p = sweep.usize_in(3, 8);
+        let n = nb * p;
+        let theta = MaternParams::new(sweep.f64_in(0.5, 2.0), sweep.f64_in(0.03, 0.2), 0.5);
+        let a = matern_dense(n, 700 + case, &theta);
+        let tiles = TileMatrix::from_dense(&a, nb).unwrap();
+
+        let zero = PrecisionMap::adaptive(&tiles, 0.0);
+        let dp_band = Variant::FullDp.precision_map(p, None).unwrap();
+        assert_eq!(zero, dp_band, "case {case}: tolerance 0 must equal the DP band");
+
+        let tols = [1e-14, 1e-10, 1e-8, 1e-6, 1e-3, 1e-1];
+        let maps: Vec<PrecisionMap> =
+            tols.iter().map(|&t| PrecisionMap::adaptive(&tiles, t)).collect();
+        for (m, &tol) in maps.iter().zip(&tols) {
+            for k in 0..p {
+                assert_eq!(m.get(k, k), Precision::F64, "case {case} tol {tol}: diag demoted");
+            }
+            for j in 0..p {
+                for i in 0..p {
+                    assert_eq!(m.get(i, j), m.get(j, i), "case {case}: asymmetric lookup");
+                }
+            }
+        }
+        // Precision orders Bf16 < F32 < F64; looser tolerance must never
+        // increase a tile's precision
+        for w in maps.windows(2) {
+            let (tight, loose) = (&w[0], &w[1]);
+            for j in 0..p {
+                for i in j..p {
+                    assert!(
+                        loose.get(i, j) <= tight.get(i, j),
+                        "case {case}: loosening promoted tile ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Property: kriging at observed sites reproduces observations (exact
 /// interpolation, tiny nugget) for random fields and variants.
 #[test]
