@@ -33,7 +33,9 @@ fn main() -> Result<()> {
 
     for (lname, range) in levels {
         let theta0 = MaternParams::new(1.0, range, 0.5);
-        println!("\n=== Fig 7 ({lname} correlation, theta2 = {range}) — {reps} replicates, n = {n} ===");
+        println!(
+            "\n=== Fig 7 ({lname} correlation, theta2 = {range}) — {reps} replicates, n = {n} ==="
+        );
         let mut table = Table::new(&["variant", "param", "boxplot (min [q1|med|q3] max)", "true"]);
         for (vlabel, variant) in &variants {
             let mut est = [Vec::new(), Vec::new(), Vec::new()];

@@ -33,7 +33,9 @@ fn main() -> Result<()> {
 
     for (lname, range) in levels {
         let theta0 = MaternParams::new(1.0, range, 0.5);
-        println!("\n=== Fig 8 ({lname}, theta2 = {range}) — PMSE over {reps} replicates x {k}-fold ===");
+        println!(
+            "\n=== Fig 8 ({lname}, theta2 = {range}) — PMSE over {reps} replicates x {k}-fold ==="
+        );
         let mut table = Table::new(&["variant", "PMSE boxplot (min [q1|med|q3] max)", "mean"]);
         for (vlabel, variant) in &variants {
             let mut pmses = Vec::new();
@@ -57,7 +59,11 @@ fn main() -> Result<()> {
                 }
             }
             if pmses.is_empty() {
-                table.row(&[vlabel.clone(), format!("all failed (non-PD) x{failures}"), "-".into()]);
+                table.row(&[
+                    vlabel.clone(),
+                    format!("all failed (non-PD) x{failures}"),
+                    "-".into(),
+                ]);
             } else {
                 let mean = pmses.iter().sum::<f64>() / pmses.len() as f64;
                 let mut row = BoxStats::from(&pmses).render();
@@ -74,6 +80,10 @@ fn main() -> Result<()> {
 
 fn mk(p: usize, dp_pct: f64, dst: bool) -> (String, Variant) {
     let t = Variant::thick_for_dp_fraction(p, dp_pct);
-    let v = if dst { Variant::Dst { diag_thick: t } } else { Variant::MixedPrecision { diag_thick: t } };
+    let v = if dst {
+        Variant::Dst { diag_thick: t }
+    } else {
+        Variant::MixedPrecision { diag_thick: t }
+    };
     (v.label(p), v)
 }

@@ -8,9 +8,19 @@ fn main() {
     let dp_pct: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(74.0);
     let nb = 128;
     let p = n / nb;
-    let f = SyntheticField::generate(&FieldConfig { n, theta: MaternParams::new(1.0,0.1,0.5), seed: 1, gen_nb: nb, ..Default::default() }).unwrap();
-    let variant = if dp_pct >= 100.0 { Variant::FullDp } else {
-        Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, dp_pct) } };
+    let f = SyntheticField::generate(&FieldConfig {
+        n,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 1,
+        gen_nb: nb,
+        ..Default::default()
+    })
+    .unwrap();
+    let variant = if dp_pct >= 100.0 {
+        Variant::FullDp
+    } else {
+        Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, dp_pct) }
+    };
     let sched = Scheduler::with_workers(1);
     let theta = MaternParams::new(1.0, 0.1, 0.5);
     for _ in 0..8 {

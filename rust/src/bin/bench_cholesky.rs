@@ -1,0 +1,281 @@
+//! `bench_cholesky` — machine-readable factorization benchmark.
+//!
+//! Runs the fused generate+factorize pipeline per precision variant and
+//! tile size, reporting GFLOP/s, precision-native resident bytes and
+//! scheduler idle time, and (with `--json`) writes the results to
+//! `BENCH_cholesky.json` so CI can track the perf trajectory.
+//!
+//! ```bash
+//! cargo run --release --bin bench_cholesky -- --json
+//! cargo run --release --bin bench_cholesky -- --n 512 --nb 64,128 --reps 1 --json
+//! ```
+//!
+//! Flags: `--n N` (default 1024), `--nb LIST` (comma-separated, default
+//! `128`), `--reps R` (default 3), `--workers W` (default: all cores),
+//! `--json [PATH]` (default path `BENCH_cholesky.json`).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use mpcholesky::bench::Table;
+use mpcholesky::cholesky::{generate_covariance, CholeskyPlan, GenContext, TileExecutor};
+use mpcholesky::prelude::*;
+use mpcholesky::scheduler::ExecutionTrace;
+
+struct CaseResult {
+    key: String,
+    label: String,
+    nb: usize,
+    tasks: usize,
+    total_flops: f64,
+    median_s: f64,
+    gflops: f64,
+    resident_bytes: usize,
+    full_dp_bytes: usize,
+    idle_s: f64,
+    utilization: f64,
+    /// False for the adaptive variant, whose trace (and task/flop
+    /// counts) cover the factorization graph only — its generation
+    /// phase runs as a separate untraced graph inside the same timer.
+    gen_fused: bool,
+}
+
+/// One traced generate+factorize run; returns wall seconds, the lowered
+/// plan, the execution trace and the post-run resident bytes.
+fn traced_run(
+    variant: Variant,
+    locs: &[Location],
+    theta: MaternParams,
+    n: usize,
+    nb: usize,
+    sched: &Scheduler,
+) -> Result<(f64, CholeskyPlan, ExecutionTrace, usize)> {
+    let p = n / nb;
+    let mut tiles = TileMatrix::zeros(n, nb)?;
+    let t0 = Instant::now();
+    let adaptive = matches!(variant, Variant::Adaptive { .. });
+    let (mut plan, fused_gen) = if adaptive {
+        // the adaptive map needs the generated tile norms: generation is
+        // its own parallel phase, inside the same timer
+        generate_covariance(
+            &mut tiles,
+            locs,
+            theta,
+            Metric::Euclidean,
+            1e-8,
+            &NativeBackend,
+            sched,
+        )?;
+        let map = variant.precision_map(p, Some(&tiles))?;
+        tiles.apply_precision_map(&map);
+        (CholeskyPlan::build_with_map(p, nb, variant, map, false), false)
+    } else {
+        let map = variant.precision_map(p, None)?;
+        if !matches!(variant, Variant::Dst { .. }) {
+            // precision-native storage: tiles take their assigned format
+            // up front, generation writes it directly
+            tiles.apply_precision_map(&map);
+        }
+        (CholeskyPlan::build_with_map(p, nb, variant, map, true), true)
+    };
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let mut exec = TileExecutor::new(&tiles, &NativeBackend);
+    if fused_gen {
+        exec = exec.with_generation(GenContext {
+            locations: locs,
+            theta,
+            metric: Metric::Euclidean,
+            nugget: 1e-8,
+        });
+    }
+    let trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let resident = tiles.resident_bytes();
+    Ok((wall, plan, trace, resident))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_case(
+    key: &str,
+    variant: Variant,
+    locs: &[Location],
+    theta: MaternParams,
+    n: usize,
+    nb: usize,
+    workers: usize,
+    reps: usize,
+) -> Result<CaseResult> {
+    let sched = Scheduler::new(SchedulerConfig {
+        num_workers: workers,
+        policy: SchedulingPolicy::CriticalPath,
+        trace: true,
+    });
+    // keep every rep and report ALL metrics from the median-wall rep, so
+    // wall, idle and utilization describe the same run
+    let mut runs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        runs.push(traced_run(variant, locs, theta, n, nb, &sched)?);
+    }
+    runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (median_s, plan, trace, resident) = runs.swap_remove(runs.len() / 2);
+    let total_flops = plan.total_flops();
+    Ok(CaseResult {
+        key: key.to_string(),
+        label: plan.map.label(),
+        nb,
+        tasks: plan.graph.len(),
+        total_flops,
+        median_s,
+        gflops: total_flops / median_s / 1e9,
+        resident_bytes: resident,
+        full_dp_bytes: (n / nb) * ((n / nb) + 1) / 2 * nb * nb * 8,
+        idle_s: trace.idle_ns(workers) as f64 / 1e9,
+        utilization: trace.utilization(workers),
+        gen_fused: !matches!(variant, Variant::Adaptive { .. }),
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn to_json(n: usize, workers: usize, reps: usize, rows: &[CaseResult]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"cholesky\",");
+    let _ = writeln!(out, "  \"n\": {n},");
+    let _ = writeln!(out, "  \"workers\": {workers},");
+    let _ = writeln!(out, "  \"reps\": {reps},");
+    out.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"variant\": \"{}\", \"label\": \"{}\", \"nb\": {}, \"tasks\": {}, \
+             \"total_flops\": {:.1}, \"median_s\": {:.6}, \"gflops\": {:.3}, \
+             \"resident_bytes\": {}, \"full_dp_bytes\": {}, \"idle_s\": {:.6}, \
+             \"utilization\": {:.4}, \"gen_fused\": {}}}",
+            json_escape(&r.key),
+            json_escape(&r.label),
+            r.nb,
+            r.tasks,
+            r.total_flops,
+            r.median_s,
+            r.gflops,
+            r.resident_bytes,
+            r.full_dp_bytes,
+            r.idle_s,
+            r.utilization,
+            r.gen_fused
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                m.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+            }
+        }
+        i += 1;
+    }
+    m
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&argv);
+    let n: usize = flags.get("n").map_or(Ok(1024), |v| v.parse()).map_err(|_| {
+        Error::InvalidArgument("--n expects an integer".into())
+    })?;
+    let reps: usize = flags.get("reps").map_or(Ok(3), |v| v.parse()).map_err(|_| {
+        Error::InvalidArgument("--reps expects an integer".into())
+    })?;
+    let workers: usize = match flags.get("workers") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::InvalidArgument("--workers expects an integer".into()))?,
+        None => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+    };
+    let nb_list: Vec<usize> = flags
+        .get("nb")
+        .map(String::as_str)
+        .unwrap_or("128")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| Error::InvalidArgument(format!("bad tile size {s:?}")))
+        })
+        .collect::<Result<_>>()?;
+
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(rng.uniform_open(0.0, 1.0), rng.uniform_open(0.0, 1.0)))
+        .collect();
+    mpcholesky::datagen::morton_sort(&mut locs);
+
+    let variants: [(&str, Variant); 4] = [
+        ("dp", Variant::FullDp),
+        ("mp_t2", Variant::MixedPrecision { diag_thick: 2 }),
+        ("3p_t2_4", Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 }),
+        ("adaptive_1e-8", Variant::Adaptive { tolerance: 1e-8 }),
+    ];
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(&[
+        "variant", "nb", "label", "tasks", "median s", "GFLOP/s", "resident MiB", "idle s", "util",
+    ]);
+    for &nb in &nb_list {
+        if n % nb != 0 {
+            eprintln!("skipping nb={nb}: does not divide n={n}");
+            continue;
+        }
+        for (key, variant) in &variants {
+            let r = bench_case(key, *variant, &locs, theta, n, nb, workers, reps)?;
+            table.row(&[
+                r.key.clone(),
+                format!("{nb}"),
+                r.label.clone(),
+                format!("{}", r.tasks),
+                format!("{:.4}", r.median_s),
+                format!("{:.2}", r.gflops),
+                format!("{:.2}", r.resident_bytes as f64 / (1024.0 * 1024.0)),
+                format!("{:.4}", r.idle_s),
+                format!("{:.2}", r.utilization),
+            ]);
+            rows.push(r);
+        }
+    }
+    println!("# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}");
+    table.print();
+
+    if flags.contains_key("json") {
+        let path = match flags.get("json").map(String::as_str) {
+            Some("true") | None => "BENCH_cholesky.json",
+            Some(p) => p,
+        };
+        std::fs::write(path, to_json(n, workers, reps, &rows))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

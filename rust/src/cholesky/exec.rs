@@ -2,33 +2,111 @@
 //! [`TileMatrix`] — the worker-side codelet dispatch (StarPU's codelet
 //! function table).
 //!
+//! Every codelet runs at its tile's *native* storage precision: an f32
+//! tile is solved and accumulated in its resident f32 buffer, a packed
+//! bf16 tile is unpacked into per-worker scratch, computed in f32 and
+//! repacked (MXU semantics).  Cross-precision operands are read through
+//! the conversion views the plan materialized (`dconv2s`/`sconv2d`
+//! tasks) — there is no per-task promotion back to f64 anywhere on the
+//! compute path.
+//!
 //! Safety protocol: tile buffers are reached through
 //! [`TileMatrix::tile_ptr`]; the scheduler's DAG ordering guarantees
 //! exclusivity, and debug builds double-check it with the per-tile
 //! reader/writer guards.
 
+use std::cell::RefCell;
+
 use crate::error::Result;
 use crate::kernels::TileBackend;
 use crate::matern::{Location, MaternParams, Metric};
 use crate::scheduler::graph::Access;
-use crate::tile::{convert, quantize_bf16_slice, Precision, TileId, TileMatrix};
+use crate::tile::{convert, TileBuf, TileId, TileMatrix, TileSlot};
 
 use super::kernelcall::{KernelCall, SizedCall};
 
 /// Covariance-generation context for `KernelCall::Generate` tasks.
+/// Each tile is generated straight into its native storage precision
+/// (Algorithm 1 lines 2-6 fused into generation): f64 evaluation, then a
+/// demote/pack for reduced tiles.
 pub struct GenContext<'a> {
     pub locations: &'a [Location],
     pub theta: MaternParams,
     pub metric: Metric,
     /// Additive diagonal nugget applied to global diagonal entries.
     pub nugget: f64,
-    /// Storage precision per tile, resolved from the run's
-    /// [`PrecisionMap`](crate::tile::PrecisionMap): non-F64 tiles get
-    /// their f32 shadow refreshed right after generation (Algorithm 1
-    /// lines 2-6 fused into generation); Bf16 tiles additionally
-    /// re-quantize the shadow.  The adaptive path generates with a
-    /// constant-F64 rule first, since its map needs the norms.
-    pub precision_of: Box<dyn Fn(usize, usize) -> Precision + Send + Sync + 'a>,
+}
+
+/// Per-worker conversion scratch: unpack targets for packed-bf16
+/// operands and the f64 staging buffer for reduced-precision generation.
+/// Thread-local so the hot path never allocates.
+#[derive(Default)]
+struct Scratch {
+    a32: Vec<f32>,
+    b32: Vec<f32>,
+    c32: Vec<f32>,
+    gen64: Vec<f64>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Grow-and-slice helper for scratch buffers.
+fn resized<T: Copy + Default>(buf: &mut Vec<T>, n: usize) -> &mut [T] {
+    if buf.len() < n {
+        buf.resize(n, T::default());
+    }
+    &mut buf[..n]
+}
+
+/// f32 view of an operand tile for reduced-precision compute: the native
+/// f32 buffer, an unpack of packed bf16 into `scratch`, or the plan's
+/// `dconv2s` view of an f64 tile.
+fn f32_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f32>, what: &str) -> &'a [f32] {
+    match &slot.buf {
+        TileBuf::F32(v) => v,
+        TileBuf::Bf16(bits) => {
+            let out = resized(scratch, bits.len());
+            convert::unpack_bf16(bits, &mut *out);
+            out
+        }
+        TileBuf::F64(_) => slot
+            .f32_scratch
+            .as_deref()
+            .unwrap_or_else(|| panic!("{what}: f64 tile lacks its dconv2s view (plan bug)")),
+    }
+}
+
+/// f64 view of an operand tile for DP compute: the native f64 buffer or
+/// the plan's `sconv2d` view of a reduced tile.
+fn f64_view<'a>(slot: &'a TileSlot, what: &str) -> &'a [f64] {
+    match &slot.buf {
+        TileBuf::F64(v) => v,
+        _ => slot
+            .f64_scratch
+            .as_deref()
+            .unwrap_or_else(|| panic!("{what}: reduced tile lacks its sconv2d view (plan bug)")),
+    }
+}
+
+/// `dconv2s`: refresh the f32 conversion view of an f64 tile.
+fn demote_view(slot: &mut TileSlot, nn: usize) {
+    let TileSlot { buf, f32_scratch, .. } = slot;
+    let src = buf.as_f64();
+    let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
+    convert::demote(src, dst);
+}
+
+/// `sconv2d`: refresh the f64 conversion view of a reduced tile.
+fn promote_view(slot: &mut TileSlot, nn: usize) {
+    let TileSlot { buf, f64_scratch, .. } = slot;
+    let dst = f64_scratch.get_or_insert_with(|| vec![0.0; nn]);
+    match buf {
+        TileBuf::F32(v) => convert::promote(v, dst),
+        TileBuf::Bf16(bits) => convert::unpack_bf16_to_f64(bits, dst),
+        TileBuf::F64(_) => unreachable!("sconv2d scheduled on an f64 tile (plan bug)"),
+    }
 }
 
 /// Stateless executor: all mutability lives in the tile matrix.
@@ -63,126 +141,173 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
 
     fn execute_inner(&self, sc: &SizedCall) -> Result<()> {
         let nb = sc.nb;
+        let nn = nb * nb;
         let tm = self.tiles;
-        // SAFETY: scheduler-ordered exclusive access (see module docs).
-        unsafe {
-            match sc.call {
-                KernelCall::Generate { i, j } => {
-                    let g = self
-                        .gen
-                        .as_ref()
-                        .expect("Generate task scheduled without GenContext");
-                    let slot = tm.tile_ptr(TileId::new(i, j));
-                    let x1 = &g.locations[i * nb..(i + 1) * nb];
-                    let x2 = &g.locations[j * nb..(j + 1) * nb];
-                    self.backend.matern_f64(&mut slot.dp, x1, x2, &g.theta, g.metric);
-                    if i == j && g.nugget != 0.0 {
-                        for d in 0..nb {
-                            slot.dp[d + d * nb] += g.nugget;
+        SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            // split the RefMut once so disjoint scratch fields can be
+            // borrowed independently below
+            let scr = &mut *guard;
+            // SAFETY: scheduler-ordered exclusive access (see module docs).
+            unsafe {
+                match sc.call {
+                    KernelCall::Generate { i, j } => {
+                        let g = self
+                            .gen
+                            .as_ref()
+                            .expect("Generate task scheduled without GenContext");
+                        let slot = tm.tile_ptr(TileId::new(i, j));
+                        let x1 = &g.locations[i * nb..(i + 1) * nb];
+                        let x2 = &g.locations[j * nb..(j + 1) * nb];
+                        match &mut slot.buf {
+                            TileBuf::F64(buf) => {
+                                self.backend.matern_f64(buf, x1, x2, &g.theta, g.metric);
+                                if i == j && g.nugget != 0.0 {
+                                    for d in 0..nb {
+                                        buf[d + d * nb] += g.nugget;
+                                    }
+                                }
+                            }
+                            TileBuf::F32(buf) => {
+                                let tmp = resized(&mut scr.gen64, nn);
+                                self.backend.matern_f64(tmp, x1, x2, &g.theta, g.metric);
+                                if i == j && g.nugget != 0.0 {
+                                    for d in 0..nb {
+                                        tmp[d + d * nb] += g.nugget;
+                                    }
+                                }
+                                convert::demote(tmp, buf);
+                            }
+                            TileBuf::Bf16(bits) => {
+                                let tmp = resized(&mut scr.gen64, nn);
+                                self.backend.matern_f64(tmp, x1, x2, &g.theta, g.metric);
+                                if i == j && g.nugget != 0.0 {
+                                    for d in 0..nb {
+                                        tmp[d + d * nb] += g.nugget;
+                                    }
+                                }
+                                let sp = resized(&mut scr.a32, nn);
+                                convert::demote(tmp, sp);
+                                convert::pack_bf16(sp, bits);
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::PotrfDp { k } => {
+                        let slot = tm.tile_ptr(TileId::new(k, k));
+                        match &mut slot.buf {
+                            TileBuf::F64(a) => self.backend.potrf_f64(a, nb, k * nb),
+                            TileBuf::F32(a) => self.backend.potrf_f32(a, nb, k * nb),
+                            TileBuf::Bf16(bits) => {
+                                let a = resized(&mut scr.a32, nn);
+                                convert::unpack_bf16(bits, &mut *a);
+                                let r = self.backend.potrf_f32(a, nb, k * nb);
+                                convert::pack_bf16(&*a, bits);
+                                r
+                            }
                         }
                     }
-                    match (g.precision_of)(i, j) {
-                        Precision::F64 => slot.sp = None,
-                        Precision::F32 => {
-                            let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
-                            convert::demote(&slot.dp, sp);
-                        }
-                        Precision::Bf16 => {
-                            let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
-                            convert::demote(&slot.dp, sp);
-                            quantize_bf16_slice(sp);
-                            convert::promote(sp, &mut slot.dp);
-                        }
+                    KernelCall::DemoteDiag { k } => {
+                        demote_view(tm.tile_ptr(TileId::new(k, k)), nn);
+                        Ok(())
                     }
-                    Ok(())
-                }
-                KernelCall::PotrfDp { k } => {
-                    let slot = tm.tile_ptr(TileId::new(k, k));
-                    self.backend.potrf_f64(&mut slot.dp, nb, k * nb)
-                }
-                KernelCall::DemoteDiag { k } => {
-                    let slot = tm.tile_ptr(TileId::new(k, k));
-                    let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
-                    convert::demote(&slot.dp, sp);
-                    Ok(())
-                }
-                KernelCall::TrsmDp { i, k } => {
-                    let l = tm.tile_ptr(TileId::new(k, k));
-                    let b = tm.tile_ptr(TileId::new(i, k));
-                    self.backend.trsm_f64(&l.dp, &mut b.dp, nb);
-                    Ok(())
-                }
-                KernelCall::TrsmSp { i, k } => {
-                    let l = tm.tile_ptr(TileId::new(k, k));
-                    let b = tm.tile_ptr(TileId::new(i, k));
-                    let lsp = l
-                        .sp
-                        .as_ref()
-                        .expect("TrsmSp before DemoteDiag: plan ordering bug");
-                    let bsp = b
-                        .sp
-                        .as_mut()
-                        .expect("TrsmSp on tile without f32 shadow");
-                    self.backend.trsm_f32(lsp, bsp, nb);
-                    // line 15 sconv2d: promote the SP result into the
-                    // canonical f64 buffer for the DP syrk consumers
-                    convert::promote(bsp, &mut b.dp);
-                    Ok(())
-                }
-                KernelCall::DemoteTile { i, k } => {
-                    let slot = tm.tile_ptr(TileId::new(i, k));
-                    let sp = slot.sp.get_or_insert_with(|| vec![0.0; nb * nb]);
-                    convert::demote(&slot.dp, sp);
-                    Ok(())
-                }
-                KernelCall::SyrkDp { j, k } => {
-                    let a = tm.tile_ptr(TileId::new(j, k));
-                    let c = tm.tile_ptr(TileId::new(j, j));
-                    self.backend.syrk_f64(&mut c.dp, &a.dp, nb);
-                    Ok(())
-                }
-                KernelCall::GemmDp { i, j, k } => {
-                    let a = tm.tile_ptr(TileId::new(i, k));
-                    let b = tm.tile_ptr(TileId::new(j, k));
-                    let c = tm.tile_ptr(TileId::new(i, j));
-                    self.backend.gemm_f64(&mut c.dp, &a.dp, &b.dp, nb);
-                    Ok(())
-                }
-                KernelCall::GemmSp { i, j, k } => {
-                    let a = tm.tile_ptr(TileId::new(i, k));
-                    let b = tm.tile_ptr(TileId::new(j, k));
-                    let c = tm.tile_ptr(TileId::new(i, j));
-                    let asp = a.sp.as_ref().expect("GemmSp: panel (i,k) lacks shadow");
-                    let bsp = b.sp.as_ref().expect("GemmSp: panel (j,k) lacks shadow");
-                    let csp = c.sp.as_mut().expect("GemmSp: target lacks shadow");
-                    self.backend.gemm_f32(csp, asp, bsp, nb);
-                    convert::promote(csp, &mut c.dp);
-                    Ok(())
-                }
-                KernelCall::TrsmHp { i, k } => {
-                    // SSIX third level: f32 compute, bf16 storage rounding
-                    let l = tm.tile_ptr(TileId::new(k, k));
-                    let b = tm.tile_ptr(TileId::new(i, k));
-                    let lsp = l.sp.as_ref().expect("TrsmHp before DemoteDiag");
-                    let bsp = b.sp.as_mut().expect("TrsmHp on tile without shadow");
-                    self.backend.trsm_f32(lsp, bsp, nb);
-                    quantize_bf16_slice(bsp);
-                    convert::promote(bsp, &mut b.dp);
-                    Ok(())
-                }
-                KernelCall::GemmHp { i, j, k } => {
-                    let a = tm.tile_ptr(TileId::new(i, k));
-                    let b = tm.tile_ptr(TileId::new(j, k));
-                    let c = tm.tile_ptr(TileId::new(i, j));
-                    let asp = a.sp.as_ref().expect("GemmHp: panel (i,k) lacks shadow");
-                    let bsp = b.sp.as_ref().expect("GemmHp: panel (j,k) lacks shadow");
-                    let csp = c.sp.as_mut().expect("GemmHp: target lacks shadow");
-                    self.backend.gemm_f32(csp, asp, bsp, nb);
-                    quantize_bf16_slice(csp);
-                    convert::promote(csp, &mut c.dp);
-                    Ok(())
+                    KernelCall::DemoteTile { i, k } => {
+                        demote_view(tm.tile_ptr(TileId::new(i, k)), nn);
+                        Ok(())
+                    }
+                    KernelCall::PromoteTile { i, k } => {
+                        promote_view(tm.tile_ptr(TileId::new(i, k)), nn);
+                        Ok(())
+                    }
+                    KernelCall::DropScratch { i, k } => {
+                        tm.tile_ptr(TileId::new(i, k)).drop_scratch();
+                        Ok(())
+                    }
+                    KernelCall::TrsmDp { i, k } => {
+                        let l = tm.tile_ptr(TileId::new(k, k));
+                        let b = tm.tile_ptr(TileId::new(i, k));
+                        self.backend.trsm_f64(f64_view(l, "dtrsm"), b.buf.as_f64_mut(), nb);
+                        Ok(())
+                    }
+                    KernelCall::TrsmSp { i, k } => {
+                        let l = tm.tile_ptr(TileId::new(k, k));
+                        let b = tm.tile_ptr(TileId::new(i, k));
+                        let lv = f32_view(l, &mut scr.a32, "strsm");
+                        // the result stays resident in f32 — no promotion
+                        self.backend.trsm_f32(lv, b.buf.as_f32_mut(), nb);
+                        Ok(())
+                    }
+                    KernelCall::TrsmHp { i, k } => {
+                        // SSIX third level: f32 compute, bf16 storage
+                        let l = tm.tile_ptr(TileId::new(k, k));
+                        let b = tm.tile_ptr(TileId::new(i, k));
+                        let lv = f32_view(l, &mut scr.a32, "htrsm");
+                        let bits = b.buf.as_bf16_mut();
+                        let bv = resized(&mut scr.b32, nn);
+                        convert::unpack_bf16(bits, &mut *bv);
+                        self.backend.trsm_f32(lv, bv, nb);
+                        convert::pack_bf16(&*bv, bits);
+                        Ok(())
+                    }
+                    KernelCall::SyrkDp { j, k } => {
+                        let a = tm.tile_ptr(TileId::new(j, k));
+                        let c = tm.tile_ptr(TileId::new(j, j));
+                        match &mut c.buf {
+                            TileBuf::F64(cb) => {
+                                self.backend.syrk_f64(cb, f64_view(a, "dsyrk"), nb);
+                            }
+                            TileBuf::F32(cb) => {
+                                let av = f32_view(a, &mut scr.a32, "ssyrk");
+                                self.backend.syrk_f32(cb, av, nb);
+                            }
+                            TileBuf::Bf16(bits) => {
+                                let av = f32_view(a, &mut scr.a32, "hsyrk");
+                                let cv = resized(&mut scr.c32, nn);
+                                convert::unpack_bf16(bits, &mut *cv);
+                                self.backend.syrk_f32(cv, av, nb);
+                                convert::pack_bf16(&*cv, bits);
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::GemmDp { i, j, k } => {
+                        let a = tm.tile_ptr(TileId::new(i, k));
+                        let b = tm.tile_ptr(TileId::new(j, k));
+                        let c = tm.tile_ptr(TileId::new(i, j));
+                        self.backend.gemm_f64(
+                            c.buf.as_f64_mut(),
+                            f64_view(a, "dgemm"),
+                            f64_view(b, "dgemm"),
+                            nb,
+                        );
+                        Ok(())
+                    }
+                    KernelCall::GemmSp { i, j, k } => {
+                        let a = tm.tile_ptr(TileId::new(i, k));
+                        let b = tm.tile_ptr(TileId::new(j, k));
+                        let c = tm.tile_ptr(TileId::new(i, j));
+                        let av = f32_view(a, &mut scr.a32, "sgemm");
+                        let bv = f32_view(b, &mut scr.b32, "sgemm");
+                        // accumulate in the resident f32 buffer — no
+                        // per-task promotion back to f64
+                        self.backend.gemm_f32(c.buf.as_f32_mut(), av, bv, nb);
+                        Ok(())
+                    }
+                    KernelCall::GemmHp { i, j, k } => {
+                        let a = tm.tile_ptr(TileId::new(i, k));
+                        let b = tm.tile_ptr(TileId::new(j, k));
+                        let c = tm.tile_ptr(TileId::new(i, j));
+                        let av = f32_view(a, &mut scr.a32, "hgemm");
+                        let bv = f32_view(b, &mut scr.b32, "hgemm");
+                        let bits = c.buf.as_bf16_mut();
+                        let cv = resized(&mut scr.c32, nn);
+                        convert::unpack_bf16(bits, &mut *cv);
+                        self.backend.gemm_f32(cv, av, bv, nb);
+                        convert::pack_bf16(&*cv, bits);
+                        Ok(())
+                    }
                 }
             }
-        }
+        })
     }
 }

@@ -1,6 +1,7 @@
 //! Task payloads for the tile Cholesky graphs: one variant per codelet of
-//! Algorithm 1 (plus covariance generation), with the cost metadata the
-//! Fig. 5/6 device models consume.
+//! Algorithm 1 (plus covariance generation and the explicit
+//! precision-boundary conversions), with the cost metadata the Fig. 5/6
+//! device models consume.
 
 use crate::kernels::flops;
 use crate::scheduler::TaskCost;
@@ -9,35 +10,49 @@ use crate::tile::Precision;
 /// One tile-level operation in a factorization plan.
 ///
 /// Indices follow Algorithm 1: `k` is the panel step, `(i, j)` the target
-/// tile.  `Dp`/`Sp` mirror the paper's `d*`/`s*` codelet names.
+/// tile.  `Dp`/`Sp` mirror the paper's `d*`/`s*` codelet names.  With
+/// precision-native storage, conversions are their own deduplicated
+/// tasks emitted only at precision boundaries: `DemoteDiag`/`DemoteTile`
+/// materialize the f32 view of an f64 tile for reduced consumers,
+/// `PromoteTile` the f64 view of a reduced tile for DP consumers, and
+/// `DropScratch` frees both at the end of the panel step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelCall {
-    /// Generate covariance tile (i, j) from the location set (`matern`).
+    /// Generate covariance tile (i, j) from the location set (`matern`),
+    /// written directly in the tile's native storage precision.
     Generate { i: usize, j: usize },
-    /// Line 8: `dpotrf` on diagonal tile k.
+    /// Line 8: `dpotrf` on diagonal tile k (runs at the tile's native
+    /// precision; the paper keeps the diagonal DP).
     PotrfDp { k: usize },
-    /// Line 9: `dlag2s` of the factored diagonal tile into its f32 shadow
-    /// (the paper's `tmp` vector slot).
+    /// Line 9: `dlag2s` of the factored diagonal tile into its f32
+    /// conversion scratch, for the step's reduced-precision trsms.
     DemoteDiag { k: usize },
-    /// Line 12: `dtrsm` on in-band panel tile (i, k).
+    /// Line 12: `dtrsm` on a native-f64 panel tile (i, k).
     TrsmDp { i: usize, k: usize },
-    /// Lines 14-15: `strsm` on the f32 shadows + `sconv2d` promotion.
+    /// Line 14: `strsm` on a native-f32 panel tile (no promotion — the
+    /// result stays resident in f32).
     TrsmSp { i: usize, k: usize },
-    /// Lines 20-21: `dconv2s` of an in-band panel tile whose f32 shadow is
-    /// needed by an off-band `sgemm`.
+    /// Lines 20-21: `dconv2s` of an f64 panel tile whose f32 view is
+    /// needed by a reduced-precision consumer this step.
     DemoteTile { i: usize, k: usize },
+    /// `sconv2d` at a consumer boundary: materialize the f64 scratch view
+    /// of a reduced panel tile for this step's DP `syrk`/`gemm` readers.
+    PromoteTile { i: usize, k: usize },
+    /// Free tile (i, k)'s conversion scratch at the end of step k (keeps
+    /// the transient footprint O(p) tiles).
+    DropScratch { i: usize, k: usize },
     /// Line 19: `dsyrk` on diagonal tile j with panel (j, k).
     SyrkDp { j: usize, k: usize },
-    /// Line 25: `dgemm` on in-band target (i, j).
+    /// Line 25: `dgemm` on a native-f64 target (i, j).
     GemmDp { i: usize, j: usize, k: usize },
-    /// Line 27: `sgemm` on off-band target (i, j) via f32 shadows, then
-    /// promotion of the result into the canonical f64 buffer.
+    /// Line 27: `sgemm` on a native-f32 target (i, j) — accumulates in
+    /// the resident f32 buffer, no per-task promotion.
     GemmSp { i: usize, j: usize, k: usize },
-    /// Paper SSIX third level: `strsm` on a far-band tile with the
-    /// result re-quantized through bf16 storage.
+    /// Paper SSIX third level: `strsm` on a packed-bf16 panel tile
+    /// (f32 compute, bf16 storage rounding on the repack).
     TrsmHp { i: usize, k: usize },
-    /// Paper SSIX third level: `sgemm` with bf16-stored operands
-    /// (f32 accumulate — MXU semantics), target re-quantized.
+    /// Paper SSIX third level: `sgemm` with a packed-bf16 target
+    /// (f32 accumulate — MXU semantics), repacked through bf16.
     GemmHp { i: usize, j: usize, k: usize },
 }
 
@@ -48,7 +63,10 @@ impl KernelCall {
         match self {
             KernelCall::Generate { .. } => (nb * nb) as f64,
             KernelCall::PotrfDp { .. } => flops::potrf(nb),
-            KernelCall::DemoteDiag { .. } | KernelCall::DemoteTile { .. } => (nb * nb) as f64,
+            KernelCall::DemoteDiag { .. }
+            | KernelCall::DemoteTile { .. }
+            | KernelCall::PromoteTile { .. } => (nb * nb) as f64,
+            KernelCall::DropScratch { .. } => 0.0,
             KernelCall::TrsmDp { .. }
             | KernelCall::TrsmSp { .. }
             | KernelCall::TrsmHp { .. } => flops::trsm(nb),
@@ -78,6 +96,8 @@ impl KernelCall {
             KernelCall::TrsmDp { .. } => "dtrsm",
             KernelCall::TrsmSp { .. } => "strsm",
             KernelCall::DemoteTile { .. } => "dconv2s",
+            KernelCall::PromoteTile { .. } => "sconv2d",
+            KernelCall::DropScratch { .. } => "free",
             KernelCall::SyrkDp { .. } => "dsyrk",
             KernelCall::GemmDp { .. } => "dgemm",
             KernelCall::GemmSp { .. } => "sgemm",
@@ -123,6 +143,15 @@ mod tests {
         let c = KernelCall::DemoteDiag { k: 0 }.flops_at(nb);
         assert!(g > p && p > c);
         assert_eq!(g, 2.0 * 128f64.powi(3));
+    }
+
+    #[test]
+    fn conversion_tasks_are_byte_bound() {
+        let nb = 64;
+        assert_eq!(KernelCall::PromoteTile { i: 2, k: 0 }.flops_at(nb), (nb * nb) as f64);
+        assert_eq!(KernelCall::DropScratch { i: 2, k: 0 }.flops_at(nb), 0.0);
+        assert_eq!(KernelCall::PromoteTile { i: 2, k: 0 }.name(), "sconv2d");
+        assert_eq!(KernelCall::DropScratch { i: 2, k: 0 }.name(), "free");
     }
 
     #[test]

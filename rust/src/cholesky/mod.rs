@@ -32,7 +32,7 @@ use crate::error::Result;
 use crate::kernels::TileBackend;
 use crate::matern::{Location, MaternParams, Metric};
 use crate::scheduler::{Access, Scheduler, TaskGraph};
-use crate::tile::{DenseMatrix, PrecisionMap, TileId, TileMatrix};
+use crate::tile::{DenseMatrix, Precision, PrecisionMap, TileId, TileMatrix};
 
 /// Factorization variant (the paper's computation methods, the SSIX
 /// three-precision extension, and the norm-adaptive tile selection).
@@ -172,9 +172,10 @@ impl Variant {
     }
 }
 
-/// Prepare tile storage for a variant's precision map: demote non-DP
-/// tiles into f32 shadows (Algorithm 1 lines 2-6, with bf16
-/// re-quantization for Bf16 tiles) or zero them (DST).
+/// Prepare tile storage for a variant's precision map: convert non-DP
+/// tiles to their native reduced storage (Algorithm 1 lines 2-6, with
+/// bf16 packing for Bf16 tiles) or zero them (DST, which keeps all live
+/// tiles f64).
 fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
     match variant {
         Variant::FullDp => {}
@@ -184,7 +185,8 @@ fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
                 for i in j..p {
                     if !map.is_dp(i, j) {
                         let slot = tiles.tile_mut(TileId::new(i, j));
-                        slot.dp.iter_mut().for_each(|x| *x = 0.0);
+                        slot.convert_to(Precision::F64);
+                        slot.buf.as_f64_mut().iter_mut().for_each(|x| *x = 0.0);
                     }
                 }
             }
@@ -244,15 +246,9 @@ pub fn generate_covariance(
         }
     }
     let accesses: Vec<_> = graph.tasks().iter().map(|t| t.accesses.clone()).collect();
-    let gen = GenContext {
-        locations,
-        theta,
-        metric,
-        nugget,
-        // precision decisions happen after the norms exist: canonical
-        // f64 only, no shadows yet
-        precision_of: Box::new(|_, _| crate::tile::Precision::F64),
-    };
+    // precision decisions happen after the norms exist: tiles are still
+    // native f64 here, so generation writes f64 directly
+    let gen = GenContext { locations, theta, metric, nugget };
     let executor = TileExecutor::new(tiles, backend).with_generation(gen);
     sched.run(&mut graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
     Ok(())
@@ -292,25 +288,14 @@ pub fn generate_and_factorize(
     }
 
     let map = variant.precision_map(p, None)?;
+    // switch storage to each tile's native precision up front (cheap on
+    // the zeroed matrix) so generation writes the right format directly;
+    // DST instead keeps every live tile f64 and its plan never touches
+    // the off-band zeros
+    prepare_tiles(tiles, variant, &map);
     let mut plan = CholeskyPlan::build_with_map(p, tiles.nb(), variant, map, true);
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
-    let is_dst = matches!(variant, Variant::Dst { .. });
-    let genmap = plan.map.clone();
-    let gen = GenContext {
-        locations,
-        theta,
-        metric,
-        nugget,
-        // DST's plan never touches off-band tiles, so it needs no shadow
-        // refresh after generation; Mixed/ThreePrecision do.
-        precision_of: Box::new(move |i, j| {
-            if is_dst {
-                crate::tile::Precision::F64
-            } else {
-                genmap.get(i, j)
-            }
-        }),
-    };
+    let gen = GenContext { locations, theta, metric, nugget };
     let executor = TileExecutor::new(tiles, backend).with_generation(gen);
     sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
     Ok(plan)
@@ -660,8 +645,14 @@ mod tests {
         let a = matern_dense(n, 31, &MaternParams::medium());
         let sched = Scheduler::with_workers(3);
         let dp = factorize_dense(&a, 32, Variant::FullDp, &NativeBackend, &sched).unwrap();
-        let ad = factorize_dense(&a, 32, Variant::Adaptive { tolerance: 0.0 }, &NativeBackend, &sched)
-            .unwrap();
+        let ad = factorize_dense(
+            &a,
+            32,
+            Variant::Adaptive { tolerance: 0.0 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
         assert_eq!(dp.to_dense(true).max_abs_diff(&ad.to_dense(true)), 0.0);
     }
 
@@ -672,9 +663,13 @@ mod tests {
         let a = matern_dense(n, 32, &MaternParams::medium());
         let sched = Scheduler::with_workers(4);
         let mut tiles = TileMatrix::from_dense(&a, nb).unwrap();
-        let plan =
-            factorize_tiles(&mut tiles, Variant::Adaptive { tolerance: 1e-8 }, &NativeBackend, &sched)
-                .unwrap();
+        let plan = factorize_tiles(
+            &mut tiles,
+            Variant::Adaptive { tolerance: 1e-8 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
         let census = plan.census();
         let total = (n / nb) * (n / nb + 1) / 2;
         assert_eq!(census.total(), total);
@@ -735,8 +730,16 @@ mod tests {
         let theta = MaternParams::medium();
         let sched = Scheduler::with_workers(2);
         let mut tiles = TileMatrix::zeros(n, nb).unwrap();
-        generate_covariance(&mut tiles, &locs, theta, Metric::Euclidean, 1e-8, &NativeBackend, &sched)
-            .unwrap();
+        generate_covariance(
+            &mut tiles,
+            &locs,
+            theta,
+            Metric::Euclidean,
+            1e-8,
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
         let a = DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8))
             .unwrap();
         let got = tiles.to_dense(false);

@@ -4,9 +4,17 @@
 //! Tasks are submitted in the paper's program order; the graph module
 //! infers every RAW/WAR/WAW edge from the declared tile accesses, exactly
 //! like ExaGeoStat's `starpu_insert_task` calls.
+//!
+//! With precision-native storage, the planner is also the single place
+//! conversions are decided: at each panel step it computes which step-k
+//! tiles are read across a precision boundary and emits exactly one
+//! `dlag2s`/`dconv2s` (f64 tile read by a reduced consumer) or `sconv2d`
+//! (reduced tile read by a DP consumer) per such tile, plus one
+//! `DropScratch` at the end of the step to free the view.  Compute
+//! codelets never convert.
 
 use crate::scheduler::{Access, TaskGraph};
-use crate::tile::{PrecisionCensus, PrecisionMap, TileId};
+use crate::tile::{Precision, PrecisionCensus, PrecisionMap, TileId};
 
 use super::kernelcall::{KernelCall, SizedCall};
 use super::Variant;
@@ -24,6 +32,25 @@ pub struct CholeskyPlan {
     /// Tasks per codelet kind, for bench tables.
     pub dp_flops: f64,
     pub sp_flops: f64,
+}
+
+/// Record a cross-precision read of step-k tile `x` (row index; `x == k`
+/// is the diagonal): a DP consumer of a reduced tile needs the f64 view,
+/// a reduced consumer of an f64 tile needs the f32 view.
+fn mark_boundary(
+    op_prec: Precision,
+    f64_compute: bool,
+    x: usize,
+    needs_f32: &mut [bool],
+    needs_f64: &mut [bool],
+) {
+    if f64_compute {
+        if op_prec != Precision::F64 {
+            needs_f64[x] = true;
+        }
+    } else if op_prec == Precision::F64 {
+        needs_f32[x] = true;
+    }
 }
 
 impl CholeskyPlan {
@@ -63,20 +90,17 @@ impl CholeskyPlan {
                           acc: Vec<(TileId, Access)>| {
             let sc = SizedCall { call, nb };
             match call.precision() {
-                crate::tile::Precision::F64 => dp_flops += call.flops_at(nb),
+                Precision::F64 => dp_flops += call.flops_at(nb),
                 // bf16 tasks *compute* in f32 (storage is what differs)
-                crate::tile::Precision::F32 | crate::tile::Precision::Bf16 => {
-                    sp_flops += call.flops_at(nb)
-                }
+                Precision::F32 | Precision::Bf16 => sp_flops += call.flops_at(nb),
             }
             g.submit(sc, acc)
         };
 
-        let in_band = |i: usize, j: usize| map.is_dp(i, j);
         let prec = |i: usize, j: usize| map.get(i, j);
         let is_dst = matches!(variant, Variant::Dst { .. });
         // in DST, off-band tiles are zero and never touched
-        let live = |i: usize, j: usize| !is_dst || in_band(i, j);
+        let live = |i: usize, j: usize| !is_dst || map.is_dp(i, j);
 
         if generate {
             for j in 0..p {
@@ -99,69 +123,83 @@ impl CholeskyPlan {
                 vec![(TileId::new(k, k), Access::Write)],
             );
 
-            // line 9: demote the factored diagonal tile if any panel tile
-            // below it runs its trsm in single precision
-            let any_sp_panel = !is_dst && (k + 1..p).any(|i| !in_band(i, k));
-            if any_sp_panel {
+            // Which step-k tiles (x, k) — x == k being the factored
+            // diagonal — are read across a precision boundary this step?
+            // Consumers: trsm reads the diagonal, syrk reads its panel
+            // tile into a diagonal target, gemm reads two panel tiles
+            // into a trailing target.  Compute precision == the target
+            // tile's storage precision.
+            let mut needs_f32 = vec![false; p];
+            let mut needs_f64 = vec![false; p];
+            for i in (k + 1)..p {
+                if live(i, k) {
+                    let f64c = prec(i, k) == Precision::F64;
+                    mark_boundary(prec(k, k), f64c, k, &mut needs_f32, &mut needs_f64);
+                }
+            }
+            for j in (k + 1)..p {
+                if live(j, k) {
+                    let f64c = prec(j, j) == Precision::F64;
+                    mark_boundary(prec(j, k), f64c, j, &mut needs_f32, &mut needs_f64);
+                }
+                for i in (j + 1)..p {
+                    if !live(i, j) || !live(i, k) || !live(j, k) {
+                        continue;
+                    }
+                    let f64c = prec(i, j) == Precision::F64;
+                    mark_boundary(prec(i, k), f64c, i, &mut needs_f32, &mut needs_f64);
+                    mark_boundary(prec(j, k), f64c, j, &mut needs_f32, &mut needs_f64);
+                }
+            }
+
+            // line 9: one demotion of the factored diagonal for all of
+            // the step's reduced trsms (deduplicated by construction)
+            if needs_f32[k] {
                 submit(
                     &mut graph,
                     KernelCall::DemoteDiag { k },
                     vec![(TileId::new(k, k), Access::Write)],
                 );
             }
-
-            // which in-band panel tiles (x, k) must also exist in f32 for
-            // off-band sgemm consumers at this step (lines 20-21)
-            let mut needs_shadow = vec![false; p];
-            if !is_dst {
-                for j in (k + 1)..p {
-                    for i in (j + 1)..p {
-                        if !in_band(i, j) {
-                            if in_band(i, k) {
-                                needs_shadow[i] = true;
-                            }
-                            if in_band(j, k) {
-                                needs_shadow[j] = true;
-                            }
-                        }
-                    }
-                }
+            if needs_f64[k] {
+                submit(
+                    &mut graph,
+                    KernelCall::PromoteTile { i: k, k },
+                    vec![(TileId::new(k, k), Access::Write)],
+                );
             }
 
-            // lines 10-17: panel solve
+            // lines 10-17: panel solve at each tile's native precision,
+            // followed by that tile's (single) boundary conversion
             for i in (k + 1)..p {
                 if !live(i, k) {
                     continue;
                 }
-                if in_band(i, k) {
+                let call = match prec(i, k) {
+                    Precision::F64 => KernelCall::TrsmDp { i, k },
+                    Precision::F32 => KernelCall::TrsmSp { i, k },
+                    Precision::Bf16 => KernelCall::TrsmHp { i, k },
+                };
+                submit(
+                    &mut graph,
+                    call,
+                    vec![
+                        (TileId::new(k, k), Access::Read),
+                        (TileId::new(i, k), Access::Write),
+                    ],
+                );
+                if needs_f32[i] {
                     submit(
                         &mut graph,
-                        KernelCall::TrsmDp { i, k },
-                        vec![
-                            (TileId::new(k, k), Access::Read),
-                            (TileId::new(i, k), Access::Write),
-                        ],
+                        KernelCall::DemoteTile { i, k },
+                        vec![(TileId::new(i, k), Access::Write)],
                     );
-                    if needs_shadow[i] {
-                        submit(
-                            &mut graph,
-                            KernelCall::DemoteTile { i, k },
-                            vec![(TileId::new(i, k), Access::Write)],
-                        );
-                    }
-                } else {
-                    let call = if prec(i, k) == crate::tile::Precision::Bf16 {
-                        KernelCall::TrsmHp { i, k }
-                    } else {
-                        KernelCall::TrsmSp { i, k }
-                    };
+                }
+                if needs_f64[i] {
                     submit(
                         &mut graph,
-                        call,
-                        vec![
-                            (TileId::new(k, k), Access::Read),
-                            (TileId::new(i, k), Access::Write),
-                        ],
+                        KernelCall::PromoteTile { i, k },
+                        vec![(TileId::new(i, k), Access::Write)],
                     );
                 }
             }
@@ -183,9 +221,9 @@ impl CholeskyPlan {
                         continue;
                     }
                     let call = match prec(i, j) {
-                        crate::tile::Precision::F64 => KernelCall::GemmDp { i, j, k },
-                        crate::tile::Precision::F32 => KernelCall::GemmSp { i, j, k },
-                        crate::tile::Precision::Bf16 => KernelCall::GemmHp { i, j, k },
+                        Precision::F64 => KernelCall::GemmDp { i, j, k },
+                        Precision::F32 => KernelCall::GemmSp { i, j, k },
+                        Precision::Bf16 => KernelCall::GemmHp { i, j, k },
                     };
                     submit(
                         &mut graph,
@@ -195,6 +233,19 @@ impl CholeskyPlan {
                             (TileId::new(j, k), Access::Read),
                             (TileId::new(i, j), Access::Write),
                         ],
+                    );
+                }
+            }
+
+            // end of step k: free every conversion view made this step
+            // (the WAR edges from the step's readers order each drop
+            // after the last consumer of its tile)
+            for x in k..p {
+                if needs_f32[x] || needs_f64[x] {
+                    submit(
+                        &mut graph,
+                        KernelCall::DropScratch { i: x, k },
+                        vec![(TileId::new(x, k), Access::Write)],
                     );
                 }
             }
@@ -270,6 +321,9 @@ mod tests {
             p * (p - 1) * (p - 2) / 6
         );
         assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::TrsmSp { .. })), 0);
+        // no precision boundary anywhere: no conversions, no drops
+        assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::PromoteTile { .. })), 0);
+        assert_eq!(count_kind(&plan, |c| matches!(c, KernelCall::DropScratch { .. })), 0);
         assert_eq!(plan.sp_flops, 0.0);
     }
 
@@ -343,6 +397,41 @@ mod tests {
     }
 
     #[test]
+    fn conversions_deduplicated_one_per_boundary_tile() {
+        // p = 6, thick = 2: every off-band tile is read by exactly one
+        // DP consumer set during its panel step (the dsyrk into its
+        // diagonal, possibly dgemms) -> exactly one sconv2d each
+        let p = 6;
+        let plan = CholeskyPlan::build(p, 16, Variant::MixedPrecision { diag_thick: 2 }, false);
+        let offband = p * (p + 1) / 2 - (p + (p - 1));
+        assert_eq!(
+            count_kind(&plan, |c| matches!(c, KernelCall::PromoteTile { .. })),
+            offband,
+            "one lazy promotion per off-band tile, not one per consumer task"
+        );
+        // every converted tile is freed exactly once
+        let conversions = count_kind(&plan, |c| {
+            matches!(
+                c,
+                KernelCall::DemoteDiag { .. }
+                    | KernelCall::DemoteTile { .. }
+                    | KernelCall::PromoteTile { .. }
+            )
+        });
+        assert_eq!(
+            count_kind(&plan, |c| matches!(c, KernelCall::DropScratch { .. })),
+            conversions
+        );
+        // promotions are unique per tile
+        let mut seen = std::collections::HashSet::new();
+        for t in plan.graph.tasks() {
+            if let KernelCall::PromoteTile { i, k } = t.payload.call {
+                assert!(seen.insert((i, k)), "duplicate sconv2d for tile ({i},{k})");
+            }
+        }
+    }
+
+    #[test]
     fn fig2_first_iteration_kernel_sequence() {
         // Paper Fig. 2: 5x5 tile matrix, diag_thick = 2, first outer
         // iteration (k = 0).  The exact codelet order must be:
@@ -367,6 +456,8 @@ mod tests {
         assert!(k0.contains(&KernelCall::DemoteTile { i: 1, k: 0 }));
         for i in 2..5 {
             assert!(k0.contains(&KernelCall::TrsmSp { i, k: 0 }), "strsm({i},0)");
+            // the off-band result is promoted once for its DP readers
+            assert!(k0.contains(&KernelCall::PromoteTile { i, k: 0 }), "sconv2d({i},0)");
         }
         for j in 1..5 {
             assert!(k0.contains(&KernelCall::SyrkDp { j, k: 0 }), "dsyrk({j},{j})");
@@ -441,6 +532,9 @@ mod tests {
                 KernelCall::TrsmSp { i, k } => assert_eq!(map.get(i, k), Precision::F32),
                 KernelCall::TrsmHp { i, k } => assert_eq!(map.get(i, k), Precision::Bf16),
                 KernelCall::TrsmDp { i, k } => assert_eq!(map.get(i, k), Precision::F64),
+                // demotes only make sense on f64 tiles, promotes on reduced
+                KernelCall::DemoteTile { i, k } => assert_eq!(map.get(i, k), Precision::F64),
+                KernelCall::PromoteTile { i, k } => assert_ne!(map.get(i, k), Precision::F64),
                 _ => {}
             }
         }

@@ -2,11 +2,13 @@
 //! O(n^2) epilogue of each likelihood evaluation (paper Eq. 2/3: one
 //! forward solve for the quadratic form, the diagonal of L for log|Sigma|).
 //!
-//! These stay in double precision regardless of the factorization's
-//! [`PrecisionMap`](crate::tile::PrecisionMap) — every codelet promotes
-//! its result back into the canonical f64 buffers, so the solves read a
-//! total DP view (the paper keeps everything but the factorization DP) —
-//! and run serially: at O(n^2) they are <1% of an iteration.
+//! The factor lives in precision-native storage; the solves run in
+//! double precision (the paper keeps everything but the factorization
+//! DP) by promoting each reduced tile *lazily* at its one read here
+//! ([`TileSlot::f64_values`](crate::tile::TileSlot::f64_values), exact),
+//! reusing a single scratch buffer — O(nb^2) per tile against the
+//! factorization's O(nb^3), and serial: at O(n^2) the epilogue is <1% of
+//! an iteration.
 
 use crate::error::Result;
 use crate::tile::{TileId, TileMatrix};
@@ -19,16 +21,17 @@ pub fn solve_lower(l: &TileMatrix, b: &[f64]) -> Result<Vec<f64>> {
         crate::invalid_arg!("solve_lower: rhs length {} != n {}", b.len(), n);
     }
     let mut y = b.to_vec();
+    let mut scratch = Vec::new();
     for i in 0..l.p() {
         // y_i -= L(i, j) y_j  for j < i
         for j in 0..i {
-            let t = l.tile(TileId::new(i, j));
+            let t = l.tile(TileId::new(i, j)).f64_values(&mut scratch);
             let yj = &y[j * nb..(j + 1) * nb];
             let mut acc = vec![0.0; nb];
             for c in 0..nb {
                 let yc = yj[c];
                 if yc != 0.0 {
-                    let col = &t.dp[c * nb..(c + 1) * nb];
+                    let col = &t[c * nb..(c + 1) * nb];
                     for r in 0..nb {
                         acc[r] += col[r] * yc;
                     }
@@ -39,13 +42,13 @@ pub fn solve_lower(l: &TileMatrix, b: &[f64]) -> Result<Vec<f64>> {
             }
         }
         // in-tile forward solve on the diagonal tile
-        let t = l.tile(TileId::new(i, i));
+        let t = l.tile(TileId::new(i, i)).f64_values(&mut scratch);
         let yi = &mut y[i * nb..(i + 1) * nb];
         for c in 0..nb {
-            yi[c] /= t.dp[c + c * nb];
+            yi[c] /= t[c + c * nb];
             let yc = yi[c];
             for r in (c + 1)..nb {
-                yi[r] -= t.dp[r + c * nb] * yc;
+                yi[r] -= t[r + c * nb] * yc;
             }
         }
     }
@@ -60,15 +63,16 @@ pub fn solve_lower_transposed(l: &TileMatrix, b: &[f64]) -> Result<Vec<f64>> {
         crate::invalid_arg!("solve_lower_transposed: rhs length {} != n {}", b.len(), n);
     }
     let mut x = b.to_vec();
+    let mut scratch = Vec::new();
     for i in (0..l.p()).rev() {
         // x_i -= L(j, i)^T x_j for j > i
         for j in (i + 1)..l.p() {
-            let t = l.tile(TileId::new(j, i));
+            let t = l.tile(TileId::new(j, i)).f64_values(&mut scratch);
             let xj = &x[j * nb..(j + 1) * nb];
             let mut acc = vec![0.0; nb];
             // acc_c = sum_r L(j,i)[r,c] * xj[r]
             for c in 0..nb {
-                let col = &t.dp[c * nb..(c + 1) * nb];
+                let col = &t[c * nb..(c + 1) * nb];
                 let mut s = 0.0;
                 for r in 0..nb {
                     s += col[r] * xj[r];
@@ -79,13 +83,13 @@ pub fn solve_lower_transposed(l: &TileMatrix, b: &[f64]) -> Result<Vec<f64>> {
                 x[i * nb + c] -= acc[c];
             }
         }
-        let t = l.tile(TileId::new(i, i));
+        let t = l.tile(TileId::new(i, i)).f64_values(&mut scratch);
         let xi = &mut x[i * nb..(i + 1) * nb];
         for c in (0..nb).rev() {
-            xi[c] /= t.dp[c + c * nb];
+            xi[c] /= t[c + c * nb];
             let xc = xi[c];
             for r in 0..c {
-                xi[r] -= t.dp[c + r * nb] * xc;
+                xi[r] -= t[c + r * nb] * xc;
             }
         }
     }
@@ -101,15 +105,16 @@ pub fn lower_matvec(l: &TileMatrix, x: &[f64]) -> Result<Vec<f64>> {
         crate::invalid_arg!("lower_matvec: input length {} != n {}", x.len(), n);
     }
     let mut y = vec![0.0; n];
+    let mut scratch = Vec::new();
     for i in 0..l.p() {
         for j in 0..=i {
-            let t = l.tile(TileId::new(i, j));
+            let t = l.tile(TileId::new(i, j)).f64_values(&mut scratch);
             let xj = &x[j * nb..(j + 1) * nb];
             let yi = &mut y[i * nb..(i + 1) * nb];
             for c in 0..nb {
                 let xc = xj[c];
                 if xc != 0.0 {
-                    let col = &t.dp[c * nb..(c + 1) * nb];
+                    let col = &t[c * nb..(c + 1) * nb];
                     if i == j {
                         // diagonal tile: strict upper is zero, but use the
                         // stored lower part only for clarity
@@ -132,10 +137,11 @@ pub fn lower_matvec(l: &TileMatrix, x: &[f64]) -> Result<Vec<f64>> {
 pub fn log_determinant(l: &TileMatrix) -> f64 {
     let nb = l.nb();
     let mut s = 0.0;
+    let mut scratch = Vec::new();
     for k in 0..l.p() {
-        let t = l.tile(TileId::new(k, k));
+        let t = l.tile(TileId::new(k, k)).f64_values(&mut scratch);
         for d in 0..nb {
-            s += t.dp[d + d * nb].ln();
+            s += t[d + d * nb].ln();
         }
     }
     2.0 * s

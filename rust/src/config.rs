@@ -67,7 +67,10 @@ impl RunConfig {
                 continue;
             }
             let (k, v) = line.split_once('=').ok_or_else(|| {
-                Error::InvalidArgument(format!("config line {}: expected key = value, got {raw:?}", lineno + 1))
+                Error::InvalidArgument(format!(
+                    "config line {}: expected key = value, got {raw:?}",
+                    lineno + 1
+                ))
             })?;
             kv.insert(k.trim().to_string(), v.trim().to_string());
         }

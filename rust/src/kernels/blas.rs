@@ -2,13 +2,16 @@
 //! (`potrf`, `trsm`, `syrk`, `gemm`), generic over f32/f64.
 //!
 //! These replace MKL/cuBLAS from the paper's testbed.  Layout is
-//! column-major `nb x nb` tiles.  The GEMM/SYRK inner loops are written as
-//! stride-1 axpy sweeps so LLVM auto-vectorizes them; the perf pass
-//! (EXPERIMENTS.md SSPerf) iterates on register blocking from this
-//! baseline.  What matters for reproducing the paper is that the f32
-//! instantiation genuinely runs ~2x the f64 throughput (half the memory
-//! traffic, twice the SIMD lanes) — that hardware property is what the
-//! mixed-precision algorithm converts into its 1.6x speedup.
+//! column-major `nb x nb` tiles.  All four kernels dispatch to an
+//! MR x NR register-blocked microkernel path when the tile size permits
+//! (`nb % MR == 0 && nb % NR == 0`), with the straightforward stride-1
+//! forms kept as any-size fallbacks *and* as the test oracles the
+//! blocked paths are verified against.  The inner loops are branch-free
+//! on dense data — no per-element zero tests — so LLVM vectorizes them.
+//! What matters for reproducing the paper is that the f32 instantiation
+//! genuinely runs ~2x the f64 throughput (half the memory traffic, twice
+//! the SIMD lanes) — that hardware property is what the mixed-precision
+//! algorithm converts into its 1.6x speedup.
 
 use crate::error::{Error, Result};
 
@@ -55,38 +58,6 @@ impl Scalar for f32 {
     }
 }
 
-/// `C -= A * B^T` on column-major `nb x nb` tiles
-/// (`dgemm`/`sgemm` with alpha = -1, beta = 1, transB = T).
-///
-/// Dispatches to the register-blocked microkernel when the tile size
-/// permits (nb % 8 == 0), else falls back to the stride-1 axpy form.
-pub fn gemm<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
-    debug_assert!(c.len() == nb * nb && a.len() == nb * nb && b.len() == nb * nb);
-    if nb % MR == 0 && nb % NR == 0 {
-        gemm_blocked(c, a, b, nb);
-    } else {
-        gemm_simple(c, a, b, nb);
-    }
-}
-
-/// Reference loop-order k-j-i form (any nb; also the test oracle for the
-/// blocked kernel).
-pub fn gemm_simple<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
-    for k in 0..nb {
-        let acol = &a[k * nb..(k + 1) * nb];
-        for j in 0..nb {
-            // B^T(k, j) = B(j, k)
-            let bjk = b[j + k * nb];
-            if bjk.to_f64() != 0.0 {
-                let ccol = &mut c[j * nb..(j + 1) * nb];
-                for i in 0..nb {
-                    ccol[i] = ccol[i] - acol[i] * bjk;
-                }
-            }
-        }
-    }
-}
-
 /// Microkernel rows (vector dimension) and columns (register reuse).
 const MR: usize = 8;
 const NR: usize = 4;
@@ -94,6 +65,44 @@ const NR: usize = 4;
 /// k-block depth: bounds the live A/B slab at MR x KC + KC x NR per
 /// microkernel sweep so large tiles stay cache-resident (SSPerf iter 2).
 const KC: usize = 64;
+
+/// Does `nb` admit the register-blocked paths?
+#[inline]
+fn blockable(nb: usize) -> bool {
+    nb % MR == 0 && nb % NR == 0
+}
+
+/// `C -= A * B^T` on column-major `nb x nb` tiles
+/// (`dgemm`/`sgemm` with alpha = -1, beta = 1, transB = T).
+///
+/// Dispatches to the register-blocked microkernel when the tile size
+/// permits, else falls back to the stride-1 axpy form.
+pub fn gemm<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    debug_assert!(c.len() == nb * nb && a.len() == nb * nb && b.len() == nb * nb);
+    if blockable(nb) {
+        gemm_blocked(c, a, b, nb);
+    } else {
+        gemm_simple(c, a, b, nb);
+    }
+}
+
+/// Reference loop-order k-j-i form (any nb; also the test oracle for the
+/// blocked kernel).  The inner axpy is unconditional: covariance tiles
+/// are dense, and a per-column `b == 0` test in here costs more in lost
+/// vectorization than it ever saves (see `kernels_micro`).
+pub fn gemm_simple<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    for k in 0..nb {
+        let acol = &a[k * nb..(k + 1) * nb];
+        for j in 0..nb {
+            // B^T(k, j) = B(j, k)
+            let bjk = b[j + k * nb];
+            let ccol = &mut c[j * nb..(j + 1) * nb];
+            for i in 0..nb {
+                ccol[i] = ccol[i] - acol[i] * bjk;
+            }
+        }
+    }
+}
 
 /// Register-blocked GEMM: each MR x NR block of C is accumulated in
 /// registers across a KC-deep k sweep, so C traffic drops to
@@ -139,7 +148,7 @@ fn gemm_blocked<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
 /// microkernel as GEMM; diagonal-crossing blocks use the scalar loop.
 pub fn syrk<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
     debug_assert!(c.len() == nb * nb && a.len() == nb * nb);
-    if nb % MR == 0 && nb % NR == 0 {
+    if blockable(nb) {
         syrk_blocked(c, a, nb);
     } else {
         syrk_simple(c, a, nb, 0, nb, 0, nb);
@@ -148,6 +157,7 @@ pub fn syrk<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
 
 /// Scalar triangular update restricted to the block
 /// rows [i0, i1) x cols [j0, j1), still clipped to the lower triangle.
+/// Branch-free inner axpy (dense tiles — see [`gemm_simple`]).
 fn syrk_simple<T: Scalar>(
     c: &mut [T],
     a: &[T],
@@ -161,11 +171,9 @@ fn syrk_simple<T: Scalar>(
         let acol = &a[k * nb..(k + 1) * nb];
         for j in j0..j1 {
             let ajk = acol[j];
-            if ajk.to_f64() != 0.0 {
-                let ccol = &mut c[j * nb..(j + 1) * nb];
-                for i in i0.max(j)..i1 {
-                    ccol[i] = ccol[i] - acol[i] * ajk;
-                }
+            let ccol = &mut c[j * nb..(j + 1) * nb];
+            for i in i0.max(j)..i1 {
+                ccol[i] = ccol[i] - acol[i] * ajk;
             }
         }
     }
@@ -211,20 +219,29 @@ fn syrk_blocked<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
 /// side = right, uplo = lower, trans = T, diag = non-unit).
 ///
 /// Column j of the result depends on columns 0..j (forward substitution
-/// across columns); each column update is a stride-1 axpy.
+/// across columns).  Dispatches to the register-blocked panel form when
+/// the tile size permits, else the stride-1 axpy form.
 pub fn trsm<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
     debug_assert!(l.len() == nb * nb && b.len() == nb * nb);
+    if blockable(nb) {
+        trsm_blocked(l, b, nb);
+    } else {
+        trsm_simple(l, b, nb);
+    }
+}
+
+/// Reference column-by-column form (any nb; also the test oracle for the
+/// blocked kernel).
+pub fn trsm_simple<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
     for j in 0..nb {
         // b[:, j] -= sum_{k < j} b[:, k] * L(j, k)
         for k in 0..j {
             let ljk = l[j + k * nb];
-            if ljk.to_f64() != 0.0 {
-                let (done, rest) = b.split_at_mut(j * nb);
-                let bk = &done[k * nb..(k + 1) * nb];
-                let bj = &mut rest[..nb];
-                for i in 0..nb {
-                    bj[i] = bj[i] - bk[i] * ljk;
-                }
+            let (done, rest) = b.split_at_mut(j * nb);
+            let bk = &done[k * nb..(k + 1) * nb];
+            let bj = &mut rest[..nb];
+            for i in 0..nb {
+                bj[i] = bj[i] - bk[i] * ljk;
             }
         }
         let d = l[j + j * nb];
@@ -235,12 +252,78 @@ pub fn trsm<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
     }
 }
 
+/// Register-blocked TRSM: columns are solved in NR-wide panels.  The
+/// update of a panel from the already-solved columns 0..jb is a GEMM-
+/// shaped rank-jb sweep and goes through the MR x NR register microkernel
+/// (KC-chunked); only the small in-panel substitution runs in scalar
+/// form.  For nb >> NR virtually all flops land in the microkernel.
+fn trsm_blocked<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
+    for jb in (0..nb).step_by(NR) {
+        // panel update: B[:, jb..jb+NR) -= X[:, 0..jb) * L[jb.., 0..jb)^T
+        for ib in (0..nb).step_by(MR) {
+            for kb in (0..jb).step_by(KC) {
+                let kend = (kb + KC).min(jb);
+                let mut acc = [[T::ZERO; MR]; NR];
+                for k in kb..kend {
+                    // SAFETY: ib+MR <= nb, jb+NR <= nb, k < jb <= nb.
+                    unsafe {
+                        let xpan = b.get_unchecked(k * nb + ib..k * nb + ib + MR);
+                        for jj in 0..NR {
+                            let ljk = *l.get_unchecked(jb + jj + k * nb);
+                            let row = acc.get_unchecked_mut(jj);
+                            for ii in 0..MR {
+                                row[ii] = row[ii] + *xpan.get_unchecked(ii) * ljk;
+                            }
+                        }
+                    }
+                }
+                for jj in 0..NR {
+                    let bcol = &mut b[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
+                    for ii in 0..MR {
+                        bcol[ii] = bcol[ii] - acc[jj][ii];
+                    }
+                }
+            }
+        }
+        // in-panel forward substitution across the NR columns
+        for j in jb..jb + NR {
+            for k in jb..j {
+                let ljk = l[j + k * nb];
+                let (done, rest) = b.split_at_mut(j * nb);
+                let bk = &done[k * nb..(k + 1) * nb];
+                let bj = &mut rest[..nb];
+                for i in 0..nb {
+                    bj[i] = bj[i] - bk[i] * ljk;
+                }
+            }
+            let d = l[j + j * nb];
+            let bj = &mut b[j * nb..(j + 1) * nb];
+            for x in bj.iter_mut() {
+                *x = *x / d;
+            }
+        }
+    }
+}
+
 /// In-place lower Cholesky of a diagonal tile (`dpotrf`/`spotrf`).
 /// Zeroes the strict upper triangle.  `tile_row0` is the tile's global
 /// first row index, used to report the *global* pivot position on failure
 /// (the paper's SP(100%) failure mode surfaces here).
+///
+/// Dispatches to the panel-blocked right-looking form when the tile size
+/// permits, else the unblocked reference form.
 pub fn potrf<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
     debug_assert_eq!(a.len(), nb * nb);
+    if blockable(nb) {
+        potrf_blocked(a, nb, tile_row0)
+    } else {
+        potrf_simple(a, nb, tile_row0)
+    }
+}
+
+/// Reference unblocked form (any nb; also the test oracle for the
+/// blocked kernel).
+pub fn potrf_simple<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
     for k in 0..nb {
         let pivot = a[k + k * nb].to_f64();
         if !(pivot > 0.0) {
@@ -263,12 +346,99 @@ pub fn potrf<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> 
             }
         }
     }
+    zero_strict_upper(a, nb);
+    Ok(())
+}
+
+/// Panel-blocked right-looking Cholesky: factor an MR-wide column panel
+/// unblocked, then apply its rank-MR trailing update through the same
+/// MR x NR register microkernel shape as SYRK (panel columns snapshot to
+/// stack arrays, so the update is safe branch-free code LLVM vectorizes).
+/// For nb >> MR the trailing updates are ~all the flops.
+fn potrf_blocked<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
+    // panel width: reuse the microkernel's MR so the trailing update's
+    // k-depth fits the register accumulators' sweep
+    const PB: usize = MR;
+    for kb in (0..nb).step_by(PB) {
+        let kend = kb + PB;
+        // unblocked factorization of columns [kb, kend), updating only
+        // within the panel
+        for k in kb..kend {
+            let pivot = a[k + k * nb].to_f64();
+            if !(pivot > 0.0) {
+                return Err(Error::NotPositiveDefinite { pivot, index: tile_row0 + k });
+            }
+            let d = a[k + k * nb].sqrt();
+            for i in k..nb {
+                a[i + k * nb] = a[i + k * nb] / d;
+            }
+            for j in (k + 1)..kend {
+                let ljk = a[j + k * nb];
+                let (colk, colj) = {
+                    let (lo, hi) = a.split_at_mut(j * nb);
+                    (&lo[k * nb..(k + 1) * nb], &mut hi[..nb])
+                };
+                for i in j..nb {
+                    colj[i] = colj[i] - colk[i] * ljk;
+                }
+            }
+        }
+        // trailing update: A[kend.., kend..] -= P P^T with P the freshly
+        // factored panel rows kend.., clipped to the lower triangle
+        if kend >= nb {
+            continue;
+        }
+        for jb in (kend..nb).step_by(NR) {
+            for ib in (jb / MR * MR..nb).step_by(MR) {
+                if ib >= jb + NR {
+                    // strictly below the diagonal band: dense microkernel
+                    let mut acc = [[T::ZERO; MR]; NR];
+                    for k in kb..kend {
+                        // snapshot the panel segment: the borrow checker
+                        // cannot see that column k is disjoint from the
+                        // trailing columns being written
+                        let mut ap = [T::ZERO; MR];
+                        for ii in 0..MR {
+                            ap[ii] = a[k * nb + ib + ii];
+                        }
+                        for jj in 0..NR {
+                            let ljk = a[(jb + jj) + k * nb];
+                            for ii in 0..MR {
+                                acc[jj][ii] = acc[jj][ii] + ap[ii] * ljk;
+                            }
+                        }
+                    }
+                    for jj in 0..NR {
+                        let col = &mut a[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
+                        for ii in 0..MR {
+                            col[ii] = col[ii] - acc[jj][ii];
+                        }
+                    }
+                } else {
+                    // block straddles the diagonal: scalar triangular path
+                    for jj in 0..NR {
+                        let j = jb + jj;
+                        for k in kb..kend {
+                            let ljk = a[j + k * nb];
+                            for i in ib.max(j)..ib + MR {
+                                a[i + j * nb] = a[i + j * nb] - a[i + k * nb] * ljk;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    zero_strict_upper(a, nb);
+    Ok(())
+}
+
+fn zero_strict_upper<T: Scalar>(a: &mut [T], nb: usize) {
     for j in 1..nb {
         for i in 0..j {
             a[i + j * nb] = T::ZERO;
         }
     }
-    Ok(())
 }
 
 /// Flop counts per codelet at tile size `nb` (used by the Fig. 5/6 device
@@ -415,19 +585,57 @@ mod tests {
     }
 
     #[test]
-    fn potrf_reports_global_pivot_index() {
-        let nb = 8;
-        let mut a = vec![0.0; nb * nb];
-        for i in 0..nb {
-            a[i + i * nb] = 1.0;
-        }
-        a[3 + 3 * nb] = -2.0;
-        match potrf(&mut a, nb, 40) {
-            Err(Error::NotPositiveDefinite { index, pivot }) => {
-                assert_eq!(index, 43);
-                assert_eq!(pivot, -2.0);
+    fn potrf_blocked_matches_simple_oracle() {
+        // 16 and 64 take the blocked path; verify element-wise against
+        // the unblocked oracle on the same input
+        for &nb in &[16usize, 64] {
+            let a0 = spd_tile(nb, 17);
+            let mut l_blocked = a0.clone();
+            let mut l_simple = a0.clone();
+            potrf(&mut l_blocked, nb, 0).unwrap();
+            potrf_simple(&mut l_simple, nb, 0).unwrap();
+            for j in 0..nb {
+                for i in 0..nb {
+                    let d = (l_blocked[i + j * nb] - l_simple[i + j * nb]).abs();
+                    assert!(d < 1e-9, "nb={nb} ({i},{j}): {d}");
+                }
             }
-            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trsm_blocked_matches_simple_oracle() {
+        for &nb in &[16usize, 64] {
+            let mut l = spd_tile(nb, 18);
+            potrf(&mut l, nb, 0).unwrap();
+            let b0 = rand_tile::<f64>(nb, 19, |x| x);
+            let mut b_blocked = b0.clone();
+            let mut b_simple = b0.clone();
+            trsm(&l, &mut b_blocked, nb);
+            trsm_simple(&l, &mut b_simple, nb);
+            for k in 0..nb * nb {
+                let d = (b_blocked[k] - b_simple[k]).abs();
+                assert!(d < 1e-9, "nb={nb} [{k}]: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_reports_global_pivot_index() {
+        // nb = 8 exercises the blocked path, nb = 7 the fallback
+        for &nb in &[8usize, 7] {
+            let mut a = vec![0.0; nb * nb];
+            for i in 0..nb {
+                a[i + i * nb] = 1.0;
+            }
+            a[3 + 3 * nb] = -2.0;
+            match potrf(&mut a, nb, 40) {
+                Err(Error::NotPositiveDefinite { index, pivot }) => {
+                    assert_eq!(index, 43, "nb={nb}");
+                    assert_eq!(pivot, -2.0, "nb={nb}");
+                }
+                other => panic!("nb={nb}: expected failure, got {other:?}"),
+            }
         }
     }
 
@@ -444,6 +652,29 @@ mod tests {
                 let mut s = 0.0;
                 // B = X0 L^T => B(i, j) = sum_k X0(i, k) L(j, k),
                 // nonzero only for k <= j (L lower triangular)
+                for k in 0..=j {
+                    s += x0[i + k * nb] * l[j + k * nb];
+                }
+                b[i + j * nb] = s;
+            }
+        }
+        trsm(&l, &mut b, nb);
+        for (x, y) in b.iter().zip(x0.iter()) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn trsm_fallback_inverts_multiplication() {
+        // nb = 10 (not divisible by MR) goes through trsm_simple
+        let nb = 10;
+        let mut l = spd_tile(nb, 14);
+        potrf(&mut l, nb, 0).unwrap();
+        let x0 = rand_tile::<f64>(nb, 15, |x| x);
+        let mut b = vec![0.0; nb * nb];
+        for j in 0..nb {
+            for i in 0..nb {
+                let mut s = 0.0;
                 for k in 0..=j {
                     s += x0[i + k * nb] * l[j + k * nb];
                 }

@@ -207,16 +207,20 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
     } else {
         CholeskyPlan::build(p, rc.nb, rc.variant, true)
     };
+    if !adaptive && !matches!(rc.variant, Variant::Dst { .. }) {
+        // precision-native storage: switch tiles to the map's formats up
+        // front so the fused generation tasks write them directly (DST
+        // keeps its live tiles f64 and never touches the off-band zeros)
+        tiles.apply_precision_map(&plan.map);
+    }
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let mut exec = TileExecutor::new(&tiles, &NativeBackend);
     if !adaptive {
-        let map = rc.variant.precision_map(p, None)?;
         exec = exec.with_generation(mpcholesky::cholesky::GenContext {
             locations: &field.locations,
             theta,
             metric: rc.metric,
             nugget: rc.nugget,
-            precision_of: Box::new(move |i, j| map.get(i, j)),
         });
     }
     let trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
@@ -241,7 +245,10 @@ fn artifacts_info() -> Result<()> {
     let manifest = mpcholesky::runtime::Manifest::load(std::path::Path::new(&dir))?;
     println!("artifact dir: {dir}");
     println!("tile size nb = {}", manifest.nb);
-    println!("fused demo: n={} nb={} thick={}", manifest.demo_n, manifest.demo_nb, manifest.demo_thick);
+    println!(
+        "fused demo: n={} nb={} thick={}",
+        manifest.demo_n, manifest.demo_nb, manifest.demo_thick
+    );
     let mut names: Vec<_> = manifest.entries.keys().collect();
     names.sort();
     for name in names {

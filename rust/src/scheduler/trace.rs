@@ -40,6 +40,19 @@ impl ExecutionTrace {
         self.busy_ns() as f64 / (self.wall_ns as f64 * num_workers as f64)
     }
 
+    /// Aggregate worker-idle time: `workers x wall - busy` — what the
+    /// scheduler left on the table (stalls on dependencies, queue
+    /// starvation).  The bench JSON reports this per variant.
+    ///
+    /// Only meaningful on traced runs: with `SchedulerConfig::trace`
+    /// off there are no spans, busy is 0, and the whole `workers x wall`
+    /// budget is (wrongly) reported idle.
+    pub fn idle_ns(&self, num_workers: usize) -> u64 {
+        self.wall_ns
+            .saturating_mul(num_workers as u64)
+            .saturating_sub(self.busy_ns())
+    }
+
     /// Number of distinct workers that executed at least one task.
     pub fn workers_used(&self) -> usize {
         let mut ws: Vec<usize> = self.spans.iter().map(|s| s.worker).collect();
@@ -78,6 +91,8 @@ mod tests {
         assert_eq!(t.busy_ns(), 150);
         assert!((t.utilization(2) - 0.75).abs() < 1e-12);
         assert_eq!(t.workers_used(), 2);
+        assert_eq!(t.idle_ns(2), 50);
+        assert_eq!(ExecutionTrace::default().idle_ns(4), 0);
     }
 
     #[test]

@@ -1,11 +1,21 @@
 //! Worker-pool executor for [`TaskGraph`]s — the StarPU runtime core:
 //! dataflow execution of the inferred DAG over a fixed thread pool, with
 //! pluggable ready-queue policies and per-task tracing.
+//!
+//! The runtime is a **work-stealing** design: each worker owns a
+//! priority queue of ready tasks; a task's successors are enqueued on
+//! the worker that finished their last dependency (locality — the tile
+//! it just wrote is hot), and idle workers steal the best-priority task
+//! from a victim.  Dependency tracking is per-task atomic counters, so
+//! the task hot path takes only the owner's (uncontended) queue lock —
+//! there is no global ready heap or scheduler mutex.  A Condvar is used
+//! solely to park idle workers; enqueues wake them through a sleeper
+//! count, with a short wait timeout as a lost-wakeup backstop.
 
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::graph::{TaskGraph, TaskIdx};
 use super::trace::{ExecutionTrace, TaskSpan};
@@ -22,6 +32,7 @@ pub enum SchedulingPolicy {
     Lifo,
     /// Critical-path height first (StarPU `prio`): the policy the paper's
     /// runs rely on to keep the potrf/trsm spine ahead of gemm noise.
+    /// Heights are computed once at graph build time.
     CriticalPath,
 }
 
@@ -47,7 +58,7 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// Entry in the ready heap; ordering depends on the policy.
+/// Entry in a worker's ready queue; ordering depends on the policy.
 #[derive(PartialEq, Eq)]
 struct ReadyTask {
     key: i64,
@@ -66,14 +77,96 @@ impl PartialOrd for ReadyTask {
     }
 }
 
-struct SchedState {
-    ready: BinaryHeap<ReadyTask>,
-    /// Monotone counter for Fifo/Lifo keys.
-    seq: i64,
-    finished: usize,
-    failed: Option<Error>,
-    /// Set when all tasks finished or a failure drained the queue.
-    done: bool,
+/// Shared state of one `Scheduler::run` invocation.
+struct RunState {
+    /// One ready queue per worker.  Local pushes/pops take only the
+    /// owner's lock; steals take a victim's.
+    queues: Vec<Mutex<BinaryHeap<ReadyTask>>>,
+    /// Ready tasks across all queues (lock-free emptiness check for the
+    /// idle path).
+    ready_count: AtomicUsize,
+    /// Tasks enqueued but not yet fully processed (executed + successors
+    /// handled, or discarded during an abort drain).
+    outstanding: AtomicUsize,
+    /// Executed task count (success termination: == graph len).
+    finished: AtomicUsize,
+    /// Global enqueue counter for Fifo/Lifo keys.
+    seq: AtomicI64,
+    /// Set by the first failure: stop enabling/executing new tasks.
+    abort: AtomicBool,
+    /// Set exactly once when the run can terminate.
+    done: AtomicBool,
+    failed: Mutex<Option<Error>>,
+    /// Idle parking only — never touched on the task hot path.
+    park: Mutex<()>,
+    cv: Condvar,
+    sleepers: AtomicUsize,
+}
+
+impl RunState {
+    fn new(workers: usize) -> Self {
+        Self {
+            queues: (0..workers).map(|_| Mutex::new(BinaryHeap::new())).collect(),
+            ready_count: AtomicUsize::new(0),
+            outstanding: AtomicUsize::new(0),
+            finished: AtomicUsize::new(0),
+            seq: AtomicI64::new(0),
+            abort: AtomicBool::new(false),
+            done: AtomicBool::new(false),
+            failed: Mutex::new(None),
+            park: Mutex::new(()),
+            cv: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enqueue a ready task on `worker`'s queue and wake a sleeper if any.
+    fn push(&self, worker: usize, rt: ReadyTask) {
+        self.queues[worker].lock().unwrap().push(rt);
+        self.ready_count.fetch_add(1, Ordering::Release);
+        if self.sleepers.load(Ordering::Acquire) > 0 {
+            // lock orders the notify after a registering sleeper's
+            // recheck, closing the missed-wakeup window
+            let _g = self.park.lock().unwrap();
+            self.cv.notify_one();
+        }
+    }
+
+    /// Pop the best local task, else steal the best task from the first
+    /// non-empty victim (scanned round-robin from `me + 1`).
+    fn pop(&self, me: usize) -> Option<TaskIdx> {
+        if let Some(rt) = self.queues[me].lock().unwrap().pop() {
+            self.ready_count.fetch_sub(1, Ordering::AcqRel);
+            return Some(rt.idx);
+        }
+        let w = self.queues.len();
+        for d in 1..w {
+            let victim = (me + d) % w;
+            if let Some(rt) = self.queues[victim].lock().unwrap().pop() {
+                self.ready_count.fetch_sub(1, Ordering::AcqRel);
+                return Some(rt.idx);
+            }
+        }
+        None
+    }
+
+    /// Park until work appears or the run completes.  The timeout is a
+    /// backstop: a lost wakeup costs at most one tick, never a hang.
+    fn park_idle(&self) {
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        let guard = self.park.lock().unwrap();
+        if !self.done.load(Ordering::Acquire) && self.ready_count.load(Ordering::Acquire) == 0 {
+            let _wait = self.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Mark the run finished and release every parked worker.
+    fn finish(&self) {
+        self.done.store(true, Ordering::Release);
+        let _g = self.park.lock().unwrap();
+        self.cv.notify_all();
+    }
 }
 
 /// Dataflow executor.  One instance may run many graphs.
@@ -105,9 +198,10 @@ impl Scheduler {
 
     /// Execute every task in `graph` respecting dependencies.
     ///
-    /// `exec(idx, payload)` runs on worker threads; the first error aborts
-    /// scheduling of not-yet-ready tasks (in-flight tasks complete) and is
-    /// returned.  Returns an [`ExecutionTrace`] (empty if tracing is off).
+    /// `exec(idx, payload)` runs on worker threads; the first error stops
+    /// new tasks from being enabled or started (in-flight tasks complete,
+    /// already-queued ones are discarded) and is returned.  Returns an
+    /// [`ExecutionTrace`] (empty if tracing is off).
     pub fn run<P, F>(&self, graph: &mut TaskGraph<P>, exec: F) -> Result<ExecutionTrace>
     where
         P: Send + Sync,
@@ -120,25 +214,21 @@ impl Scheduler {
             graph.compute_heights();
         }
         let n = graph.len();
+        let workers = self.cfg.num_workers.max(1);
         let pending: Vec<AtomicUsize> = (0..n)
             .map(|i| AtomicUsize::new(graph.task(i).num_predecessors))
             .collect();
 
-        let state = Mutex::new(SchedState {
-            ready: BinaryHeap::new(),
-            seq: 0,
-            finished: 0,
-            failed: None,
-            done: false,
-        });
-        let cv = Condvar::new();
+        let st = RunState::new(workers);
         {
-            let mut st = state.lock().unwrap();
-            for idx in graph.roots() {
-                let seq = st.seq;
-                st.seq += 1;
+            // seed roots round-robin so independent work starts spread out
+            let roots = graph.roots();
+            st.outstanding.store(roots.len(), Ordering::Relaxed);
+            for (r, idx) in roots.into_iter().enumerate() {
+                let seq = st.seq.fetch_add(1, Ordering::Relaxed);
                 let key = self.key_for(graph, idx, seq);
-                st.ready.push(ReadyTask { key, idx });
+                st.queues[r % workers].lock().unwrap().push(ReadyTask { key, idx });
+                st.ready_count.fetch_add(1, Ordering::Relaxed);
             }
         }
 
@@ -146,27 +236,29 @@ impl Scheduler {
         let spans: Mutex<Vec<TaskSpan>> = Mutex::new(Vec::new());
         let graph_ref: &TaskGraph<P> = graph;
         let exec_ref = &exec;
-        let state_ref = &state;
-        let cv_ref = &cv;
+        let st_ref = &st;
         let pending_ref = &pending;
         let spans_ref = &spans;
         let trace_on = self.cfg.trace;
 
         std::thread::scope(|scope| {
-            for worker_id in 0..self.cfg.num_workers {
+            for worker_id in 0..workers {
                 scope.spawn(move || loop {
-                    let task = {
-                        let mut st = state_ref.lock().unwrap();
-                        loop {
-                            if st.done {
-                                return;
-                            }
-                            if let Some(rt) = st.ready.pop() {
-                                break rt.idx;
-                            }
-                            st = cv_ref.wait(st).unwrap();
-                        }
+                    if st_ref.done.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let Some(task) = st_ref.pop(worker_id) else {
+                        st_ref.park_idle();
+                        continue;
                     };
+
+                    if st_ref.abort.load(Ordering::Acquire) {
+                        // drain after a failure: discard without running
+                        if st_ref.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            st_ref.finish();
+                        }
+                        continue;
+                    }
 
                     let start = t0.elapsed();
                     let result = exec_ref(task, &graph_ref.task(task).payload);
@@ -180,48 +272,46 @@ impl Scheduler {
                         });
                     }
 
-                    let mut st = state_ref.lock().unwrap();
-                    st.finished += 1;
                     match result {
                         Ok(()) => {
                             for &succ in &graph_ref.task(task).successors {
-                                if pending_ref[succ].fetch_sub(1, Ordering::AcqRel) == 1 {
-                                    // last dependency satisfied
-                                    if st.failed.is_none() {
-                                        let seq = st.seq;
-                                        st.seq += 1;
-                                        let key = self.key_for(graph_ref, succ, seq);
-                                        st.ready.push(ReadyTask { key, idx: succ });
-                                    }
+                                if pending_ref[succ].fetch_sub(1, Ordering::AcqRel) == 1
+                                    && !st_ref.abort.load(Ordering::Acquire)
+                                {
+                                    // last dependency satisfied: enqueue
+                                    // locally (the tile this worker just
+                                    // wrote is hot in its cache)
+                                    st_ref.outstanding.fetch_add(1, Ordering::AcqRel);
+                                    let seq = st_ref.seq.fetch_add(1, Ordering::Relaxed);
+                                    let key = self.key_for(graph_ref, succ, seq);
+                                    st_ref.push(worker_id, ReadyTask { key, idx: succ });
                                 }
                             }
                         }
                         Err(e) => {
-                            if st.failed.is_none() {
-                                st.failed = Some(e);
+                            let mut f = st_ref.failed.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(e);
                             }
-                            // drain: no new tasks become ready
-                            st.ready.clear();
+                            drop(f);
+                            st_ref.abort.store(true, Ordering::Release);
                         }
                     }
-                    let all_done = st.finished == n;
-                    let drained =
-                        st.failed.is_some() && st.ready.is_empty();
-                    if all_done || drained {
-                        st.done = true;
-                        cv_ref.notify_all();
-                    } else {
-                        // wake enough workers for newly readied tasks
-                        cv_ref.notify_all();
+
+                    let fin = st_ref.finished.fetch_add(1, Ordering::AcqRel) + 1;
+                    let out = st_ref.outstanding.fetch_sub(1, Ordering::AcqRel) - 1;
+                    if fin == n || (st_ref.abort.load(Ordering::Acquire) && out == 0) {
+                        st_ref.finish();
                     }
                 });
             }
         });
 
-        let mut st = state.lock().unwrap();
-        if let Some(e) = st.failed.take() {
+        let mut failed = st.failed.lock().unwrap();
+        if let Some(e) = failed.take() {
             return Err(e);
         }
+        drop(failed);
         let mut spans = spans.into_inner().unwrap();
         spans.sort_by_key(|s| s.start_ns);
         Ok(ExecutionTrace { spans, wall_ns: t0.elapsed().as_nanos() as u64 })
@@ -315,6 +405,35 @@ mod tests {
         assert!(a.end_ns > b.start_ns && b.end_ns > a.start_ns, "no overlap: {a:?} {b:?}");
     }
 
+    /// Work actually distributes: a wide bag of independent tasks ends up
+    /// executed by more than one worker.  Tasks 0 and 1 rendezvous on a
+    /// barrier — one worker blocks in the first, so the second *must*
+    /// run on a different thread; no timing assumptions needed.
+    #[test]
+    fn stealing_spreads_independent_work() {
+        use std::sync::Barrier;
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        for k in 0..64 {
+            g.submit(k, vec![(t(k + 1, k + 1), Access::Write)]);
+        }
+        let barrier = Barrier::new(2);
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: 4,
+            policy: SchedulingPolicy::CriticalPath,
+            trace: true,
+        });
+        let trace = sched
+            .run(&mut g, |_, &payload| {
+                if payload < 2 {
+                    barrier.wait();
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(trace.spans.len(), 64);
+        assert!(trace.workers_used() > 1, "only one worker ran 64 independent tasks");
+    }
+
     /// First error aborts remaining tasks and is propagated.
     #[test]
     fn error_aborts_chain() {
@@ -363,6 +482,82 @@ mod tests {
             })
             .unwrap();
         assert_eq!(count.load(Ordering::SeqCst), 202);
+    }
+
+    /// Stress at >= 8 threads: a layered random DAG (seeded LCG) runs
+    /// every task exactly once and never violates an edge, under every
+    /// policy.  This is the work-stealing acceptance test.
+    #[test]
+    fn stress_random_dag_eight_workers_respects_all_edges() {
+        for policy in [
+            SchedulingPolicy::Fifo,
+            SchedulingPolicy::Lifo,
+            SchedulingPolicy::CriticalPath,
+        ] {
+            let mut g: TaskGraph<usize> = TaskGraph::new();
+            // 500 tasks over 23 tiles, pseudo-random access patterns:
+            // plenty of RAW/WAR/WAW edges plus independent islands
+            let mut state = 0x9e3779b97f4a7c15u64;
+            let mut rng = move || {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 33) as usize
+            };
+            for k in 0..500 {
+                let mut acc = Vec::new();
+                let n_acc = 1 + rng() % 3;
+                for _ in 0..n_acc {
+                    let tile = rng() % 23;
+                    let mode = if rng() % 3 == 0 { Access::Write } else { Access::Read };
+                    acc.push((t(tile, tile), mode));
+                }
+                g.submit(k, acc);
+            }
+            let n = g.len();
+            let stamp: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let runs = AtomicU64::new(0);
+            let ctr = AtomicU64::new(1);
+            let sched = Scheduler::new(SchedulerConfig { num_workers: 8, policy, trace: true });
+            let trace = sched
+                .run(&mut g, |idx, _| {
+                    runs.fetch_add(1, Ordering::SeqCst);
+                    stamp[idx].store(ctr.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(runs.load(Ordering::SeqCst), n as u64, "{policy:?}");
+            assert_eq!(trace.spans.len(), n, "{policy:?}: every task traced once");
+            for i in 0..n {
+                let si = stamp[i].load(Ordering::SeqCst);
+                assert!(si > 0, "{policy:?}: task {i} never ran");
+                for &s in &g.task(i).successors {
+                    let ss = stamp[s].load(Ordering::SeqCst);
+                    assert!(si < ss, "{policy:?}: edge {i} -> {s} violated ({si} !< {ss})");
+                }
+            }
+        }
+    }
+
+    /// Error abort under high thread count: the drain must discard
+    /// queued-but-unstarted tasks and terminate quickly.
+    #[test]
+    fn stress_error_abort_eight_workers_drains() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        // a root everything depends on, then a wide bag
+        g.submit(0, vec![(t(0, 0), Access::Write)]);
+        for k in 0..300 {
+            g.submit(k + 1, vec![(t(0, 0), Access::Read), (t(k + 1, k + 1), Access::Write)]);
+        }
+        let sched = Scheduler::with_workers(8);
+        let t0 = Instant::now();
+        let err = sched.run(&mut g, |idx, _| {
+            if idx == 0 {
+                Err(Error::Optimization("root failure".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(err.is_err());
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "drain hung: {:?}", t0.elapsed());
     }
 
     /// Empty graph is a no-op.

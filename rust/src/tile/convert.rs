@@ -1,10 +1,14 @@
 //! Precision conversion kernels — the paper's `dconv2s` / `sconv2d`
-//! (a.k.a. LAPACK `dlag2s`/`slag2d`) applied tile-wise.
+//! (a.k.a. LAPACK `dlag2s`/`slag2d`) applied tile-wise, plus the bf16
+//! pack/unpack pair for the SSIX third storage level.
 //!
-//! These are the native analogs of the `lag2s`/`lag2d` HLO artifacts.  The
-//! paper's transpose-into-the-upper-triangle trick is a storage-packing
-//! detail; our [`super::TileSlot`] keeps the shadow alongside the tile, so
-//! conversion is a straight cast loop (which LLVM vectorizes).
+//! These are the native analogs of the `lag2s`/`lag2d` HLO artifacts.
+//! With precision-native storage a conversion runs only at an explicit
+//! plan boundary (a `dconv2s`/`sconv2d` task or a lazy read in the
+//! solve/predict epilogue), never inside a compute codelet — each
+//! function is a straight cast loop that LLVM vectorizes.
+
+use super::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
 
 /// Demote f64 -> f32 (`dlag2s`).  Values beyond f32 range become ±inf —
 /// same contract as LAPACK (callers on covariance data never hit it).
@@ -25,9 +29,40 @@ pub fn promote(src: &[f32], dst: &mut [f64]) {
     }
 }
 
+/// Pack f32 values into bf16 bit patterns (round-to-nearest-even) — the
+/// storage write of a bf16 tile.
+#[inline]
+pub fn pack_bf16(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = f32_to_bf16_bits(*s);
+    }
+}
+
+/// Unpack bf16 bit patterns to f32 (exact) — the working-precision read
+/// of a bf16 tile.
+#[inline]
+pub fn unpack_bf16(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = bf16_bits_to_f32(*s);
+    }
+}
+
+/// Unpack bf16 bit patterns straight to f64 (exact) — the lazy
+/// promotion the solve/predict epilogue uses.
+#[inline]
+pub fn unpack_bf16_to_f64(src: &[u16], dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = bf16_bits_to_f32(*s) as f64;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tile::bf16::quantize_bf16;
 
     #[test]
     fn demote_then_promote_loses_at_most_f32_eps() {
@@ -48,6 +83,24 @@ mod tests {
         promote(&sp, &mut dp);
         for (s, d) in sp.iter().zip(dp.iter()) {
             assert_eq!(*s as f64, *d);
+        }
+    }
+
+    #[test]
+    fn bf16_pack_unpack_is_quantization() {
+        let src: Vec<f32> = (0..128).map(|i| (i as f32 * 0.173).cos() * 2.1).collect();
+        let mut bits = vec![0u16; 128];
+        let mut back = vec![0.0f32; 128];
+        pack_bf16(&src, &mut bits);
+        unpack_bf16(&bits, &mut back);
+        for (s, b) in src.iter().zip(back.iter()) {
+            assert_eq!(*b, quantize_bf16(*s), "pack+unpack == quantize");
+        }
+        // unpacking to f64 widens the same values exactly
+        let mut wide = vec![0.0f64; 128];
+        unpack_bf16_to_f64(&bits, &mut wide);
+        for (b, w) in back.iter().zip(wide.iter()) {
+            assert_eq!(*b as f64, *w);
         }
     }
 }

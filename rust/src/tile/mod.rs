@@ -1,14 +1,23 @@
 //! Tile-matrix storage with per-tile precision — the Chameleon-descriptor
 //! analog that Algorithm 1 operates on.
 //!
-//! The paper's storage scheme: the lower triangle holds the
-//! double-precision tiles being factored; the *other* half of the matrix
-//! (plus one tile-row vector for the diagonal) is reused to hold the
-//! single-precision copies of off-band tiles.  We model the same dual
-//! storage explicitly: each lower tile slot owns its canonical f64 buffer
-//! and, if the precision policy marks it single, an f32 shadow buffer.
-//! [`TileMatrix::sp_bytes`]/[`dp_bytes`] expose the footprint accounting
-//! that feeds the Fig. 5 data-movement model.
+//! Storage is **precision-native**: each tile owns exactly one buffer in
+//! the precision the [`PrecisionMap`] assigned it ([`TileBuf`]), so an
+//! f32 tile is generated, factored and read as f32 end-to-end — half the
+//! bytes and twice the SIMD lanes of f64, which is the hardware property
+//! the paper's 1.6x speedup comes from.  The earlier shadow scheme (a
+//! canonical f64 buffer plus an optional f32 copy) carried ~1.5x the
+//! DP(100%) footprint and re-promoted every reduced-precision result; it
+//! is gone.
+//!
+//! Cross-precision reads are served by *conversion scratch* views hung
+//! off a slot ([`TileSlot::f32_scratch`] / [`TileSlot::f64_scratch`]):
+//! the planner materializes them with explicit, deduplicated
+//! `dconv2s`/`sconv2d` tasks at precision boundaries and frees them at
+//! the end of each panel step, so their live footprint stays O(p) tiles.
+//! The solve/predict epilogue instead promotes lazily through
+//! [`TileSlot::f64_values`].  [`TileMatrix::resident_bytes`] exposes the
+//! footprint accounting that feeds the Fig. 5 data-movement model.
 //!
 //! Concurrency contract: the scheduler guarantees conflicting accesses are
 //! ordered by DAG edges, so tiles are handed to workers through
@@ -22,7 +31,7 @@ pub mod convert;
 pub mod dense;
 
 pub use bf16::{quantize_bf16, quantize_bf16_slice, BF16_EPS};
-pub use convert::{demote, promote};
+pub use convert::{demote, pack_bf16, promote, unpack_bf16, unpack_bf16_to_f64};
 pub use dense::DenseMatrix;
 
 use std::cell::UnsafeCell;
@@ -159,6 +168,13 @@ impl PrecisionMap {
         self.get(i, j) == Precision::F64
     }
 
+    /// Native storage bytes of the lower triangle under this assignment
+    /// at tile size `nb` — the resident footprint a precision-native
+    /// [`TileMatrix`] holds once conversion scratch is freed.
+    pub fn storage_bytes(&self, nb: usize) -> usize {
+        self.prec.iter().map(|pr| nb * nb * pr.bytes()).sum()
+    }
+
     /// Tile counts per precision (the dp/sp/bf16 census bench reports).
     pub fn census(&self) -> PrecisionCensus {
         let mut c = PrecisionCensus::default();
@@ -204,16 +220,202 @@ impl PrecisionCensus {
     }
 }
 
-/// One lower-triangle tile slot: canonical f64 storage plus the optional
-/// f32 shadow the paper keeps in the matrix's unused half.
+/// A tile's single native buffer: exactly one representation, in the
+/// precision the policy assigned.  Bf16 tiles are *packed* (2 bytes per
+/// element); arithmetic on them runs in f32 with an unpack/repack at the
+/// kernel boundary (MXU semantics — see [`bf16`]).
+#[derive(Clone, Debug)]
+pub enum TileBuf {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
+impl TileBuf {
+    /// Storage precision of this buffer.
+    pub fn precision(&self) -> Precision {
+        match self {
+            TileBuf::F64(_) => Precision::F64,
+            TileBuf::F32(_) => Precision::F32,
+            TileBuf::Bf16(_) => Precision::Bf16,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            TileBuf::F64(v) => v.len(),
+            TileBuf::F32(v) => v.len(),
+            TileBuf::Bf16(v) => v.len(),
+        }
+    }
+
+    /// True when the buffer holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes this buffer occupies.
+    pub fn resident_bytes(&self) -> usize {
+        self.len() * self.precision().bytes()
+    }
+
+    /// Native f64 slice.  Panics unless the tile is F64 — callers that
+    /// can see reduced tiles go through [`TileSlot::f64_values`].
+    pub fn as_f64(&self) -> &[f64] {
+        match self {
+            TileBuf::F64(v) => v,
+            other => panic!("expected F64 tile, found {:?}", other.precision()),
+        }
+    }
+
+    /// Native mutable f64 slice (panics unless F64).
+    pub fn as_f64_mut(&mut self) -> &mut [f64] {
+        match self {
+            TileBuf::F64(v) => v,
+            other => panic!("expected F64 tile, found {:?}", other.precision()),
+        }
+    }
+
+    /// Native f32 slice (panics unless F32).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TileBuf::F32(v) => v,
+            other => panic!("expected F32 tile, found {:?}", other.precision()),
+        }
+    }
+
+    /// Native mutable f32 slice (panics unless F32).
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            TileBuf::F32(v) => v,
+            other => panic!("expected F32 tile, found {:?}", other.precision()),
+        }
+    }
+
+    /// Packed bf16 bits (panics unless Bf16).
+    pub fn as_bf16(&self) -> &[u16] {
+        match self {
+            TileBuf::Bf16(v) => v,
+            other => panic!("expected Bf16 tile, found {:?}", other.precision()),
+        }
+    }
+
+    /// Packed mutable bf16 bits (panics unless Bf16).
+    pub fn as_bf16_mut(&mut self) -> &mut [u16] {
+        match self {
+            TileBuf::Bf16(v) => v,
+            other => panic!("expected Bf16 tile, found {:?}", other.precision()),
+        }
+    }
+}
+
+/// One lower-triangle tile slot: the native buffer plus the transient
+/// conversion views the plan materializes at precision boundaries.
 #[derive(Debug)]
 pub struct TileSlot {
-    /// Column-major `nb x nb` double-precision buffer (always present —
-    /// Algorithm 1 promotes SP results back so the DP view is total).
-    pub dp: Vec<f64>,
-    /// Column-major f32 shadow; `Some` iff the precision policy marks the
-    /// tile single-precision.
-    pub sp: Option<Vec<f32>>,
+    /// The tile's one native representation.
+    pub buf: TileBuf,
+    /// `dconv2s` scratch: f32 copy of an F64 tile, made for its
+    /// reduced-precision consumers within one panel step.
+    pub f32_scratch: Option<Vec<f32>>,
+    /// `sconv2d` scratch: f64 copy of a reduced tile, made for its DP
+    /// consumers within one panel step.
+    pub f64_scratch: Option<Vec<f64>>,
+}
+
+impl TileSlot {
+    /// A zeroed f64 slot of `n` elements.
+    pub fn new_f64(n: usize) -> Self {
+        Self { buf: TileBuf::F64(vec![0.0; n]), f32_scratch: None, f64_scratch: None }
+    }
+
+    /// Native storage precision.
+    pub fn precision(&self) -> Precision {
+        self.buf.precision()
+    }
+
+    /// Bytes this slot holds right now (native buffer + live scratch).
+    pub fn resident_bytes(&self) -> usize {
+        self.buf.resident_bytes()
+            + self.f32_scratch.as_ref().map_or(0, |v| v.len() * 4)
+            + self.f64_scratch.as_ref().map_or(0, |v| v.len() * 8)
+    }
+
+    /// Borrow the tile's values as f64: the native buffer when F64,
+    /// otherwise an exact promotion into `scratch` (resized as needed).
+    /// This is the lazy-promotion read the solve/predict epilogue and
+    /// dense reassembly use.
+    pub fn f64_values<'a>(&'a self, scratch: &'a mut Vec<f64>) -> &'a [f64] {
+        match &self.buf {
+            TileBuf::F64(v) => v,
+            TileBuf::F32(v) => {
+                scratch.resize(v.len(), 0.0);
+                convert::promote(v, scratch);
+                scratch
+            }
+            TileBuf::Bf16(bits) => {
+                scratch.resize(bits.len(), 0.0);
+                convert::unpack_bf16_to_f64(bits, scratch);
+                scratch
+            }
+        }
+    }
+
+    /// Convert the native buffer to `prec` in place, preserving values
+    /// through the format's storage rounding (demotions round, promotions
+    /// are exact).  Stale conversion scratch is dropped.
+    pub fn convert_to(&mut self, prec: Precision) {
+        self.f32_scratch = None;
+        self.f64_scratch = None;
+        if self.precision() == prec {
+            return;
+        }
+        let n = self.buf.len();
+        let new = match (&self.buf, prec) {
+            (TileBuf::F64(v), Precision::F32) => {
+                let mut out = vec![0.0f32; n];
+                convert::demote(v, &mut out);
+                TileBuf::F32(out)
+            }
+            (TileBuf::F64(v), Precision::Bf16) => {
+                let mut sp = vec![0.0f32; n];
+                convert::demote(v, &mut sp);
+                let mut bits = vec![0u16; n];
+                convert::pack_bf16(&sp, &mut bits);
+                TileBuf::Bf16(bits)
+            }
+            (TileBuf::F32(v), Precision::F64) => {
+                let mut out = vec![0.0f64; n];
+                convert::promote(v, &mut out);
+                TileBuf::F64(out)
+            }
+            (TileBuf::F32(v), Precision::Bf16) => {
+                let mut bits = vec![0u16; n];
+                convert::pack_bf16(v, &mut bits);
+                TileBuf::Bf16(bits)
+            }
+            (TileBuf::Bf16(bits), Precision::F32) => {
+                let mut out = vec![0.0f32; n];
+                convert::unpack_bf16(bits, &mut out);
+                TileBuf::F32(out)
+            }
+            (TileBuf::Bf16(bits), Precision::F64) => {
+                let mut out = vec![0.0f64; n];
+                convert::unpack_bf16_to_f64(bits, &mut out);
+                TileBuf::F64(out)
+            }
+            // same-precision pairs returned early above
+            _ => unreachable!("conversion to the current precision"),
+        };
+        self.buf = new;
+    }
+
+    /// Free any conversion scratch (end of a panel step).
+    pub fn drop_scratch(&mut self) {
+        self.f32_scratch = None;
+        self.f64_scratch = None;
+    }
 }
 
 /// Per-tile access guard state (debug builds): 0 = free, >0 = reader
@@ -257,16 +459,16 @@ impl TileId {
 }
 
 impl TileMatrix {
-    /// Allocate a zeroed tile matrix.  `n` must be divisible by `nb`.
+    /// Allocate a zeroed, all-F64 tile matrix.  `n` must be divisible by
+    /// `nb`.  Reduced-precision storage is introduced afterwards by
+    /// [`Self::apply_precision_map`].
     pub fn zeros(n: usize, nb: usize) -> Result<Self> {
         if n == 0 || nb == 0 || n % nb != 0 {
             crate::invalid_arg!("n={n} must be a positive multiple of nb={nb}");
         }
         let p = n / nb;
         let count = p * (p + 1) / 2;
-        let slots = (0..count)
-            .map(|_| UnsafeCell::new(TileSlot { dp: vec![0.0; nb * nb], sp: None }))
-            .collect();
+        let slots = (0..count).map(|_| UnsafeCell::new(TileSlot::new_f64(nb * nb))).collect();
         let guards = (0..count).map(|_| Guard(AtomicI32::new(0))).collect();
         Ok(Self { n, nb, p, slots, guards })
     }
@@ -350,17 +552,18 @@ impl TileMatrix {
         }
     }
 
-    /// Load the lower triangle of a dense column-major `n x n` matrix.
+    /// Load the lower triangle of a dense column-major `n x n` matrix
+    /// (tiles start F64; apply a precision map afterwards to demote).
     pub fn from_dense(a: &DenseMatrix, nb: usize) -> Result<Self> {
         let n = a.n();
         let mut tm = Self::zeros(n, nb)?;
         for j in 0..tm.p {
             for i in j..tm.p {
                 let t = TileId::new(i, j);
-                let slot = tm.tile_mut(t);
+                let buf = tm.tile_mut(t).buf.as_f64_mut();
                 for c in 0..nb {
                     for r in 0..nb {
-                        slot.dp[r + c * nb] = a.get(i * nb + r, j * nb + c);
+                        buf[r + c * nb] = a.get(i * nb + r, j * nb + c);
                     }
                 }
             }
@@ -368,20 +571,22 @@ impl TileMatrix {
         Ok(tm)
     }
 
-    /// Reassemble into a dense column-major matrix.  `lower_only = true`
-    /// zeroes the strict upper triangle (the factor view); otherwise the
-    /// symmetric completion is returned (the covariance view).
+    /// Reassemble into a dense column-major matrix, promoting reduced
+    /// tiles on the fly (exact).  `lower_only = true` zeroes the strict
+    /// upper triangle (the factor view); otherwise the symmetric
+    /// completion is returned (the covariance view).
     pub fn to_dense(&self, lower_only: bool) -> DenseMatrix {
         let n = self.n;
         let nb = self.nb;
         let mut out = DenseMatrix::zeros(n);
+        let mut scratch = Vec::new();
         for j in 0..self.p {
             for i in j..self.p {
-                let slot = self.tile(TileId::new(i, j));
+                let vals = self.tile(TileId::new(i, j)).f64_values(&mut scratch);
                 for c in 0..nb {
                     for r in 0..nb {
                         let (gr, gc) = (i * nb + r, j * nb + c);
-                        let v = slot.dp[r + c * nb];
+                        let v = vals[r + c * nb];
                         if gr >= gc {
                             out.set(gr, gc, v);
                             if !lower_only && gr != gc {
@@ -401,16 +606,32 @@ impl TileMatrix {
         out
     }
 
-    /// Frobenius norm of one tile's canonical f64 buffer.
+    /// Frobenius norm of one tile, read at its native precision.
     pub fn tile_frobenius(&self, t: TileId) -> f64 {
-        self.tile(t).dp.iter().map(|x| x * x).sum::<f64>().sqrt()
+        let sq = match &self.tile(t).buf {
+            TileBuf::F64(v) => v.iter().map(|x| x * x).sum::<f64>(),
+            TileBuf::F32(v) => v
+                .iter()
+                .map(|&x| {
+                    let d = x as f64;
+                    d * d
+                })
+                .sum::<f64>(),
+            TileBuf::Bf16(bits) => bits
+                .iter()
+                .map(|&b| {
+                    let d = bf16::bf16_bits_to_f32(b) as f64;
+                    d * d
+                })
+                .sum::<f64>(),
+        };
+        sq.sqrt()
     }
 
-    /// Allocate/refresh shadow storage per the precision map (Algorithm 1
-    /// lines 2-6 generalized to arbitrary assignments): `F32` tiles get a
-    /// demoted f32 shadow, `Bf16` tiles additionally round their storage
-    /// through bf16 (shadow and canonical buffer), `F64` tiles drop any
-    /// stale shadow.
+    /// Convert every tile's native storage to the map's precision
+    /// (Algorithm 1 lines 2-6 generalized to arbitrary assignments):
+    /// demotions round through the target format, promotions are exact,
+    /// and same-precision tiles are untouched.
     pub fn apply_precision_map(&mut self, map: &PrecisionMap) {
         assert_eq!(
             map.p(),
@@ -419,34 +640,18 @@ impl TileMatrix {
             map.p(),
             self.p
         );
-        let nb = self.nb;
         for j in 0..self.p {
             for i in j..self.p {
                 let prec = map.get(i, j);
-                let slot = self.tile_mut(TileId::new(i, j));
-                match prec {
-                    Precision::F64 => slot.sp = None,
-                    Precision::F32 => {
-                        let mut sp = vec![0.0f32; nb * nb];
-                        demote(&slot.dp, &mut sp);
-                        slot.sp = Some(sp);
-                    }
-                    Precision::Bf16 => {
-                        let mut sp = vec![0.0f32; nb * nb];
-                        demote(&slot.dp, &mut sp);
-                        quantize_bf16_slice(&mut sp);
-                        promote(&sp, &mut slot.dp);
-                        slot.sp = Some(sp);
-                    }
-                }
+                self.tile_mut(TileId::new(i, j)).convert_to(prec);
             }
         }
     }
 
-    /// Allocate the f32 shadow for every tile the policy marks single
-    /// (Algorithm 1 lines 2-6: the initial `dconv2s` sweep) and demote the
-    /// current contents into it.  Convenience wrapper over
-    /// [`Self::apply_precision_map`] for two-level band predicates.
+    /// Demote every tile the policy marks non-DP to native f32 storage
+    /// (Algorithm 1 lines 2-6: the initial `dconv2s` sweep).  Convenience
+    /// wrapper over [`Self::apply_precision_map`] for two-level band
+    /// predicates.
     pub fn demote_offband(&mut self, is_dp: impl Fn(usize, usize) -> bool) {
         let map = PrecisionMap::from_fn(self.p, |i, j| {
             if is_dp(i, j) {
@@ -458,18 +663,58 @@ impl TileMatrix {
         self.apply_precision_map(&map);
     }
 
-    /// Bytes of live DP storage.
-    pub fn dp_bytes(&self) -> usize {
+    /// The realized per-tile storage assignment, read off the slots.
+    pub fn storage_map(&self) -> PrecisionMap {
+        PrecisionMap::from_fn(self.p, |i, j| self.tile(TileId::new(i, j)).precision())
+    }
+
+    /// Total live bytes: native buffers plus any conversion scratch.
+    pub fn resident_bytes(&self) -> usize {
+        self.tile_ids().map(|t| self.tile(t).resident_bytes()).sum()
+    }
+
+    /// Footprint an all-F64 matrix of this shape holds — the DP(100%)
+    /// baseline the resident accounting is compared against.
+    pub fn full_dp_bytes(&self) -> usize {
         self.slots.len() * self.nb * self.nb * 8
     }
 
-    /// Bytes of live SP shadow storage.
+    /// Bytes held in f64 storage (native F64 tiles + `sconv2d` scratch).
+    pub fn dp_bytes(&self) -> usize {
+        self.tile_ids()
+            .map(|t| {
+                let s = self.tile(t);
+                let native = match &s.buf {
+                    TileBuf::F64(v) => v.len() * 8,
+                    _ => 0,
+                };
+                native + s.f64_scratch.as_ref().map_or(0, |v| v.len() * 8)
+            })
+            .sum()
+    }
+
+    /// Bytes held in f32 storage (native F32 tiles + `dconv2s` scratch).
     pub fn sp_bytes(&self) -> usize {
-        let per = self.nb * self.nb * 4;
-        (0..self.slots.len())
-            .filter(|&k| unsafe { (*self.slots[k].get()).sp.is_some() })
-            .count()
-            * per
+        self.tile_ids()
+            .map(|t| {
+                let s = self.tile(t);
+                let native = match &s.buf {
+                    TileBuf::F32(v) => v.len() * 4,
+                    _ => 0,
+                };
+                native + s.f32_scratch.as_ref().map_or(0, |v| v.len() * 4)
+            })
+            .sum()
+    }
+
+    /// Bytes held in packed bf16 storage.
+    pub fn hp_bytes(&self) -> usize {
+        self.tile_ids()
+            .map(|t| match &self.tile(t).buf {
+                TileBuf::Bf16(v) => v.len() * 2,
+                _ => 0,
+            })
+            .sum()
     }
 }
 
@@ -543,16 +788,20 @@ mod tests {
     }
 
     #[test]
-    fn demote_offband_allocates_shadows() {
+    fn demote_offband_converts_storage_natively() {
         let mut tm = TileMatrix::zeros(160, 32).unwrap();
         tm.demote_offband(|i, j| (i as isize - j as isize).unsigned_abs() < 2);
-        // p = 5; band tiles |i-j| < 2 have no shadow
-        assert!(tm.tile(TileId::new(0, 0)).sp.is_none());
-        assert!(tm.tile(TileId::new(1, 0)).sp.is_none());
-        assert!(tm.tile(TileId::new(2, 0)).sp.is_some());
-        assert!(tm.tile(TileId::new(4, 2)).sp.is_some());
-        assert!(tm.sp_bytes() > 0);
-        assert_eq!(tm.sp_bytes(), 6 * 32 * 32 * 4); // tiles (2,0),(3,0),(4,0),(3,1),(4,1),(4,2)
+        // p = 5; band tiles |i-j| < 2 stay F64, the 6 far tiles go F32
+        assert_eq!(tm.tile(TileId::new(0, 0)).precision(), Precision::F64);
+        assert_eq!(tm.tile(TileId::new(1, 0)).precision(), Precision::F64);
+        assert_eq!(tm.tile(TileId::new(2, 0)).precision(), Precision::F32);
+        assert_eq!(tm.tile(TileId::new(4, 2)).precision(), Precision::F32);
+        // tiles (2,0),(3,0),(4,0),(3,1),(4,1),(4,2) hold f32 natively
+        assert_eq!(tm.sp_bytes(), 6 * 32 * 32 * 4);
+        // demoted storage strictly undercuts the all-F64 footprint — the
+        // inequality the old dp+shadow scheme violated
+        assert!(tm.resident_bytes() < tm.full_dp_bytes());
+        assert_eq!(tm.resident_bytes(), 9 * 32 * 32 * 8 + 6 * 32 * 32 * 4);
     }
 
     #[test]
@@ -596,6 +845,8 @@ mod tests {
         assert_eq!(c.sp, 4);
         assert_eq!(c.hp, 6);
         assert!(map.label().contains("HP("), "{}", map.label());
+        // storage accounting follows the census
+        assert_eq!(map.storage_bytes(16), 16 * 16 * (5 * 8 + 4 * 4 + 6 * 2));
     }
 
     #[test]
@@ -622,7 +873,7 @@ mod tests {
             } else {
                 1e-9f64.powf((t.i - t.j) as f64 / (p - 1) as f64)
             };
-            for x in tm.tile_mut(t).dp.iter_mut() {
+            for x in tm.tile_mut(t).buf.as_f64_mut().iter_mut() {
                 *x = scale;
             }
         }
@@ -636,12 +887,12 @@ mod tests {
     }
 
     #[test]
-    fn apply_precision_map_allocates_and_quantizes() {
+    fn apply_precision_map_converts_and_quantizes() {
         let nb = 4;
         let p = 3;
         let mut tm = TileMatrix::zeros(nb * p, nb).unwrap();
         for t in (0..p).flat_map(|j| (j..p).map(move |i| TileId::new(i, j))) {
-            for x in tm.tile_mut(t).dp.iter_mut() {
+            for x in tm.tile_mut(t).buf.as_f64_mut().iter_mut() {
                 *x = 0.1234567890123;
             }
         }
@@ -651,33 +902,65 @@ mod tests {
             _ => Precision::Bf16,
         });
         tm.apply_precision_map(&map);
-        assert!(tm.tile(TileId::new(0, 0)).sp.is_none());
-        assert!(tm.tile(TileId::new(1, 0)).sp.is_some());
+        assert_eq!(tm.tile(TileId::new(0, 0)).precision(), Precision::F64);
+        assert_eq!(tm.tile(TileId::new(1, 0)).precision(), Precision::F32);
         let hp = tm.tile(TileId::new(2, 0));
-        assert!(hp.sp.is_some());
-        // bf16 tiles carry the storage rounding in the canonical buffer too
-        assert_eq!(hp.dp[0], quantize_bf16(0.1234567890123f64 as f32) as f64);
-        // re-applying an all-F64 map drops the shadows again
+        assert_eq!(hp.precision(), Precision::Bf16);
+        // bf16 tiles carry the storage rounding; reads promote the
+        // quantized value exactly
+        let mut scratch = Vec::new();
+        let vals = hp.f64_values(&mut scratch);
+        assert_eq!(vals[0], quantize_bf16(0.1234567890123f64 as f32) as f64);
+        // f32 tiles round-trip through f32 rounding
+        let mut s2 = Vec::new();
+        let sp_vals = tm.tile(TileId::new(1, 0)).f64_values(&mut s2);
+        assert_eq!(sp_vals[0], 0.1234567890123f64 as f32 as f64);
+        // the realized storage map matches the request
+        assert_eq!(tm.storage_map(), map);
+        // re-applying an all-F64 map promotes everything back (values
+        // keep their rounding, storage becomes f64 again)
         tm.apply_precision_map(&PrecisionMap::uniform(p, Precision::F64));
-        assert!(tm.tile(TileId::new(1, 0)).sp.is_none());
+        assert_eq!(tm.tile(TileId::new(1, 0)).precision(), Precision::F64);
         assert_eq!(tm.sp_bytes(), 0);
+        assert_eq!(tm.hp_bytes(), 0);
+        assert_eq!(tm.resident_bytes(), tm.full_dp_bytes());
     }
 
     #[test]
-    fn tile_frobenius_matches_manual_sum() {
-        let mut tm = TileMatrix::zeros(64, 32).unwrap();
-        for (k, x) in tm.tile_mut(TileId::new(1, 0)).dp.iter_mut().enumerate() {
+    fn resident_bytes_counts_scratch_until_dropped() {
+        let nb = 8;
+        let mut tm = TileMatrix::zeros(nb * 2, nb).unwrap();
+        let base = tm.resident_bytes();
+        let t = TileId::new(1, 0);
+        tm.tile_mut(t).f32_scratch = Some(vec![0.0f32; nb * nb]);
+        assert_eq!(tm.resident_bytes(), base + nb * nb * 4);
+        assert_eq!(tm.sp_bytes(), nb * nb * 4);
+        tm.tile_mut(t).drop_scratch();
+        assert_eq!(tm.resident_bytes(), base);
+    }
+
+    #[test]
+    fn tile_frobenius_matches_manual_sum_at_each_precision() {
+        let mut tm = TileMatrix::zeros(96, 32).unwrap();
+        for (k, x) in tm.tile_mut(TileId::new(1, 0)).buf.as_f64_mut().iter_mut().enumerate() {
             *x = (k % 3) as f64;
         }
         let want: f64 = tm
             .tile(TileId::new(1, 0))
-            .dp
+            .buf
+            .as_f64()
             .iter()
             .map(|x| x * x)
             .sum::<f64>()
             .sqrt();
         assert_eq!(tm.tile_frobenius(TileId::new(1, 0)), want);
         assert_eq!(tm.tile_frobenius(TileId::new(0, 0)), 0.0);
+        // small integers survive f32 and bf16 exactly: the native-read
+        // norm must not change under conversion
+        tm.tile_mut(TileId::new(1, 0)).convert_to(Precision::F32);
+        assert_eq!(tm.tile_frobenius(TileId::new(1, 0)), want);
+        tm.tile_mut(TileId::new(1, 0)).convert_to(Precision::Bf16);
+        assert_eq!(tm.tile_frobenius(TileId::new(1, 0)), want);
     }
 
     #[test]

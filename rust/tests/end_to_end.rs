@@ -117,9 +117,10 @@ fn estimates_agree_between_dp_and_mixed() {
     // the two optimizers see nearly identical surfaces; estimates must be
     // close in relative terms (the paper's Fig. 7/Table I claim)
     let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-9);
-    assert!(rel(dp.theta.variance, mp.theta.variance) < 0.15, "{:?} vs {:?}", dp.theta, mp.theta);
-    assert!(rel(dp.theta.range, mp.theta.range) < 0.15, "{:?} vs {:?}", dp.theta, mp.theta);
-    assert!(rel(dp.theta.smoothness, mp.theta.smoothness) < 0.15, "{:?} vs {:?}", dp.theta, mp.theta);
+    let close = |a: f64, b: f64| rel(a, b) < 0.15;
+    assert!(close(dp.theta.variance, mp.theta.variance), "{:?} vs {:?}", dp.theta, mp.theta);
+    assert!(close(dp.theta.range, mp.theta.range), "{:?} vs {:?}", dp.theta, mp.theta);
+    assert!(close(dp.theta.smoothness, mp.theta.smoothness), "{:?} vs {:?}", dp.theta, mp.theta);
 }
 
 #[test]

@@ -1,0 +1,194 @@
+//! Acceptance tests for precision-native tile storage.
+//!
+//! The old scheme kept a canonical f64 buffer per tile plus an f32
+//! shadow for demoted tiles, so "mixed precision" *increased* the
+//! resident footprint to ~1.5x DP(100%).  With native storage the
+//! footprint must satisfy the paper's inequality instead:
+//!
+//! * mixed-precision resident bytes strictly below full-DP bytes;
+//! * post-run resident bytes exactly equal to the precision map's
+//!   native footprint (all conversion scratch freed by the plan's
+//!   `DropScratch` tasks);
+//! * factorization backward error at the storage format's level,
+//!   across tile sizes exercising both the register-blocked
+//!   (`nb % 8 == 0`) and fallback kernel paths.
+
+use mpcholesky::matern::matern_matrix;
+use mpcholesky::prelude::*;
+use mpcholesky::tile::DenseMatrix;
+
+fn matern_dense_with_range(n: usize, seed: u64, range: f64) -> DenseMatrix {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    mpcholesky::datagen::morton_sort(&mut locs);
+    DenseMatrix::from_vec(
+        n,
+        matern_matrix(&locs, &MaternParams::new(1.0, range, 0.5), Metric::Euclidean, 1e-8),
+    )
+    .unwrap()
+}
+
+fn matern_dense(n: usize, seed: u64) -> DenseMatrix {
+    matern_dense_with_range(n, seed, 0.1)
+}
+
+/// `||L L^T - A||_max` over the lower triangle.
+fn backward_error(tiles: &TileMatrix, a: &DenseMatrix) -> f64 {
+    let l = tiles.to_dense(true);
+    let llt = l.matmul_nt(&l);
+    let n = a.n();
+    let mut err = 0.0f64;
+    for j in 0..n {
+        for i in j..n {
+            err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+        }
+    }
+    err
+}
+
+#[test]
+fn resident_bytes_and_backward_error_across_tile_sizes() {
+    // all three tile sizes divide by MR = 8 / NR = 4: the register-
+    // blocked potrf/trsm/gemm/syrk paths carry the whole factorization
+    // (DP backward error itself is covered by the cholesky unit tests
+    // and the fallback test below — here DP provides the byte baseline)
+    for &(n, nb) in &[(768usize, 96usize), (1024, 128), (960, 160)] {
+        let a = matern_dense(n, 11 + nb as u64);
+        let sched = Scheduler::with_workers(4);
+
+        let mut t_dp = TileMatrix::from_dense(&a, nb).unwrap();
+        factorize_tiles(&mut t_dp, Variant::FullDp, &NativeBackend, &sched).unwrap();
+        assert_eq!(t_dp.resident_bytes(), t_dp.full_dp_bytes(), "n={n} nb={nb}");
+
+        let mut t_mp = TileMatrix::from_dense(&a, nb).unwrap();
+        let plan_mp = factorize_tiles(
+            &mut t_mp,
+            Variant::MixedPrecision { diag_thick: 2 },
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
+        assert!(
+            t_mp.resident_bytes() < t_dp.resident_bytes(),
+            "n={n} nb={nb}: mixed resident {} !< full-DP {}",
+            t_mp.resident_bytes(),
+            t_dp.resident_bytes()
+        );
+        assert_eq!(
+            t_mp.resident_bytes(),
+            plan_mp.map.storage_bytes(nb),
+            "n={n} nb={nb}: conversion scratch leaked past the run"
+        );
+        let e_mp = backward_error(&t_mp, &a);
+        assert!(e_mp < 5e-4, "n={n} nb={nb}: mixed backward error {e_mp}");
+    }
+}
+
+#[test]
+fn acceptance_mixed_and_adaptive_resident_bytes_n1024_nb128() {
+    // the issue's reference point: n = 1024, nb = 128 — band *and*
+    // adaptive assignments must strictly undercut the DP footprint
+    let (n, nb) = (1024, 128);
+    let p = n / nb;
+    let a = matern_dense(n, 42);
+    let sched = Scheduler::with_workers(4);
+
+    let mut t_dp = TileMatrix::from_dense(&a, nb).unwrap();
+    factorize_tiles(&mut t_dp, Variant::FullDp, &NativeBackend, &sched).unwrap();
+    let dp_bytes = t_dp.resident_bytes();
+    assert_eq!(dp_bytes, t_dp.full_dp_bytes());
+
+    let mut t_mp = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan_mp = factorize_tiles(
+        &mut t_mp,
+        Variant::MixedPrecision { diag_thick: 2 },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    assert!(
+        t_mp.resident_bytes() < dp_bytes,
+        "band: {} !< {dp_bytes}",
+        t_mp.resident_bytes()
+    );
+    assert_eq!(t_mp.resident_bytes(), plan_mp.map.storage_bytes(nb));
+
+    let mut t_ad = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan_ad = factorize_tiles(
+        &mut t_ad,
+        Variant::Adaptive { tolerance: 1e-8 },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    let census = plan_ad.census();
+    assert!(
+        census.dp < p * (p + 1) / 2,
+        "adaptive demoted nothing: {census:?} ({})",
+        plan_ad.map.label()
+    );
+    assert!(
+        t_ad.resident_bytes() < dp_bytes,
+        "adaptive: {} !< {dp_bytes}",
+        t_ad.resident_bytes()
+    );
+    assert_eq!(t_ad.resident_bytes(), plan_ad.map.storage_bytes(nb));
+    // the realized storage matches the plan's assignment tile-for-tile
+    assert_eq!(t_ad.storage_map(), plan_ad.map);
+}
+
+#[test]
+fn fallback_kernel_path_keeps_accounting_and_accuracy() {
+    // nb = 100 is not divisible by the microkernel MR = 8, so every
+    // codelet runs its simple fallback form — accounting and accuracy
+    // must be path-independent
+    let (n, nb) = (600, 100);
+    let a = matern_dense(n, 7);
+    let sched = Scheduler::with_workers(2);
+
+    let mut t_dp = TileMatrix::from_dense(&a, nb).unwrap();
+    factorize_tiles(&mut t_dp, Variant::FullDp, &NativeBackend, &sched).unwrap();
+    let e_dp = backward_error(&t_dp, &a);
+    assert!(e_dp < 1e-9, "fallback DP backward error {e_dp}");
+
+    let mut t_mp = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan_mp = factorize_tiles(
+        &mut t_mp,
+        Variant::MixedPrecision { diag_thick: 2 },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    assert!(t_mp.resident_bytes() < t_dp.resident_bytes());
+    assert_eq!(t_mp.resident_bytes(), plan_mp.map.storage_bytes(nb));
+    let e_mp = backward_error(&t_mp, &a);
+    assert!(e_mp < 5e-4, "fallback mixed backward error {e_mp}");
+}
+
+#[test]
+fn three_precision_resident_counts_packed_bf16() {
+    // p = 5 with dp_thick = 2, sp_thick = 4: 9 f64 tiles, 5 f32 tiles
+    // and exactly one packed-bf16 tile (4,0) at 2 bytes/element
+    let (n, nb) = (640, 128);
+    // weaker correlation keeps the bf16-rounded far tile safely PD
+    let a = matern_dense_with_range(n, 5, 0.05);
+    let sched = Scheduler::with_workers(2);
+    let mut tiles = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan = factorize_tiles(
+        &mut tiles,
+        Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    let nn = nb * nb;
+    assert_eq!(tiles.hp_bytes(), nn * 2, "one packed bf16 tile");
+    assert_eq!(tiles.sp_bytes(), 5 * nn * 4);
+    assert_eq!(tiles.dp_bytes(), 9 * nn * 8);
+    assert_eq!(tiles.resident_bytes(), plan.map.storage_bytes(nb));
+    assert!(tiles.resident_bytes() < tiles.full_dp_bytes());
+    let err = backward_error(&tiles, &a);
+    assert!(err < 0.1, "three-precision backward error {err}");
+}
