@@ -77,7 +77,7 @@ fn main() -> Result<()> {
             }
             _ => CholeskyPlan::build(p, nb, *v, true),
         };
-        let rep = simulate(&plan.graph, &DeviceModel::v100(), nb);
+        let rep = simulate(&plan.graph, &DeviceModel::v100(), nb, &plan.map);
         if *v == Variant::FullDp {
             ll_dp = ll;
             gb_dp = rep.moved_gb();

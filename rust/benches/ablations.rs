@@ -6,7 +6,8 @@
 //!    accuracy but *not* DP accuracy.
 //! 2. **Tile size nb**: the paper notes nb must be tuned per machine
 //!    (they use 960); sweep nb at fixed n.
-//! 3. **Scheduler policy**: Fifo vs Lifo vs CriticalPath on the same
+//! 3. **Scheduler policy**: Fifo vs Lifo vs CriticalPath vs
+//!    PrecisionFrontier on the same
 //!    factorization (wall time; identical numerics is covered by tests).
 //! 4. **Adaptive tolerance**: sweep `Variant::Adaptive`'s tolerance and
 //!    report the realized dp/sp/bf16 tile census, the flop split, and the
@@ -164,6 +165,7 @@ fn policy_ablation() {
         SchedulingPolicy::Fifo,
         SchedulingPolicy::Lifo,
         SchedulingPolicy::CriticalPath,
+        SchedulingPolicy::PrecisionFrontier,
     ] {
         let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
         let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true });

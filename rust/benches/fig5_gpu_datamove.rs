@@ -50,7 +50,8 @@ fn main() {
                     }
                 };
                 let plan = CholeskyPlan::build(p, nb, variant, true);
-                let rep = simulate(&plan.graph, &dev, nb);
+                // transfers priced per tile at the realized storage map
+                let rep = simulate(&plan.graph, &dev, nb, &plan.map);
                 if variant == Variant::FullDp {
                     dp_time = rep.time_s;
                     dp_gb = rep.moved_gb();

@@ -41,7 +41,8 @@ fn main() {
                 Variant::MixedPrecision { diag_thick: Variant::thick_for_dp_fraction(p, dp_pct) }
             };
             let plan = CholeskyPlan::build(p, nb, variant, false);
-            let rep = simulate(&plan.graph, &cluster, nb);
+            // transfers priced per tile at the realized storage map
+            let rep = simulate(&plan.graph, &cluster, nb, &plan.map);
             if variant == Variant::FullDp {
                 dp_time = rep.time_s;
                 dp_at.push((nodes, rep.time_s));

@@ -12,7 +12,10 @@
 //!
 //! Flags: `--n N` (default 1024), `--nb LIST` (comma-separated, default
 //! `128`), `--reps R` (default 3), `--workers W` (default: all cores),
-//! `--json [PATH]` (default path `BENCH_cholesky.json`).
+//! `--policy fifo|lifo|cp|pf` (default `cp`; `pf` = precision-frontier,
+//! which orders ready tasks by critical-path height then cheapest
+//! storage precision), `--json [PATH]` (default path
+//! `BENCH_cholesky.json`).
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -21,6 +24,7 @@ use std::time::Instant;
 use mpcholesky::bench::Table;
 use mpcholesky::cholesky::{generate_covariance, CholeskyPlan, GenContext, TileExecutor};
 use mpcholesky::prelude::*;
+use mpcholesky::scheduler::datamove::{self, DeviceModel};
 use mpcholesky::scheduler::ExecutionTrace;
 
 struct CaseResult {
@@ -39,6 +43,11 @@ struct CaseResult {
     /// counts) cover the factorization graph only — its generation
     /// phase runs as a separate untraced graph inside the same timer.
     gen_fused: bool,
+    /// Conversion-protocol task counts of the executed plan.
+    conversions: ConversionCounts,
+    /// Demand-miss bytes of replaying the plan on a V100 model with
+    /// per-tile pricing on the realized precision map.
+    modeled_transfer_bytes: f64,
 }
 
 /// One traced generate+factorize run; returns wall seconds, the lowered
@@ -105,12 +114,9 @@ fn bench_case(
     nb: usize,
     workers: usize,
     reps: usize,
+    policy: SchedulingPolicy,
 ) -> Result<CaseResult> {
-    let sched = Scheduler::new(SchedulerConfig {
-        num_workers: workers,
-        policy: SchedulingPolicy::CriticalPath,
-        trace: true,
-    });
+    let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true });
     // keep every rep and report ALL metrics from the median-wall rep, so
     // wall, idle and utilization describe the same run
     let mut runs = Vec::with_capacity(reps);
@@ -120,6 +126,10 @@ fn bench_case(
     runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     let (median_s, plan, trace, resident) = runs.swap_remove(runs.len() / 2);
     let total_flops = plan.total_flops();
+    // analytic transfer volume of this plan on a V100, priced per tile
+    // at the realized map's stored bytes
+    let modeled =
+        datamove::simulate(&plan.graph, &DeviceModel::v100(), nb, &plan.map).demand_bytes;
     Ok(CaseResult {
         key: key.to_string(),
         label: plan.map.label(),
@@ -133,6 +143,8 @@ fn bench_case(
         idle_s: trace.idle_ns(workers) as f64 / 1e9,
         utilization: trace.utilization(workers),
         gen_fused: !matches!(variant, Variant::Adaptive { .. }),
+        conversions: plan.conversion_totals(),
+        modeled_transfer_bytes: modeled,
     })
 }
 
@@ -140,13 +152,20 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn to_json(n: usize, workers: usize, reps: usize, rows: &[CaseResult]) -> String {
+fn to_json(
+    n: usize,
+    workers: usize,
+    reps: usize,
+    policy: SchedulingPolicy,
+    rows: &[CaseResult],
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     let _ = writeln!(out, "  \"bench\": \"cholesky\",");
     let _ = writeln!(out, "  \"n\": {n},");
     let _ = writeln!(out, "  \"workers\": {workers},");
     let _ = writeln!(out, "  \"reps\": {reps},");
+    let _ = writeln!(out, "  \"policy\": \"{}\",", policy.name());
     out.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let _ = write!(
@@ -154,7 +173,8 @@ fn to_json(n: usize, workers: usize, reps: usize, rows: &[CaseResult]) -> String
             "    {{\"variant\": \"{}\", \"label\": \"{}\", \"nb\": {}, \"tasks\": {}, \
              \"total_flops\": {:.1}, \"median_s\": {:.6}, \"gflops\": {:.3}, \
              \"resident_bytes\": {}, \"full_dp_bytes\": {}, \"idle_s\": {:.6}, \
-             \"utilization\": {:.4}, \"gen_fused\": {}}}",
+             \"utilization\": {:.4}, \"gen_fused\": {}, \"conv_demotes\": {}, \
+             \"conv_promotes\": {}, \"conv_drops\": {}, \"modeled_transfer_bytes\": {:.1}}}",
             json_escape(&r.key),
             json_escape(&r.label),
             r.nb,
@@ -166,7 +186,11 @@ fn to_json(n: usize, workers: usize, reps: usize, rows: &[CaseResult]) -> String
             r.full_dp_bytes,
             r.idle_s,
             r.utilization,
-            r.gen_fused
+            r.gen_fused,
+            r.conversions.demotes,
+            r.conversions.promotes,
+            r.conversions.drops,
+            r.modeled_transfer_bytes
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -208,6 +232,15 @@ fn run() -> Result<()> {
             .map_err(|_| Error::InvalidArgument("--workers expects an integer".into()))?,
         None => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
     };
+    let policy = match flags.get("policy") {
+        Some(v) => SchedulingPolicy::parse(v).ok_or_else(|| {
+            Error::InvalidArgument(format!(
+                "--policy expects {}, got {v:?}",
+                SchedulingPolicy::NAMES
+            ))
+        })?,
+        None => SchedulingPolicy::CriticalPath,
+    };
     let nb_list: Vec<usize> = flags
         .get("nb")
         .map(String::as_str)
@@ -236,7 +269,8 @@ fn run() -> Result<()> {
 
     let mut rows = Vec::new();
     let mut table = Table::new(&[
-        "variant", "nb", "label", "tasks", "median s", "GFLOP/s", "resident MiB", "idle s", "util",
+        "variant", "nb", "label", "tasks", "conv", "median s", "GFLOP/s", "resident MiB",
+        "model xfer MiB", "idle s", "util",
     ]);
     for &nb in &nb_list {
         if n % nb != 0 {
@@ -244,22 +278,27 @@ fn run() -> Result<()> {
             continue;
         }
         for (key, variant) in &variants {
-            let r = bench_case(key, *variant, &locs, theta, n, nb, workers, reps)?;
+            let r = bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy)?;
             table.row(&[
                 r.key.clone(),
                 format!("{nb}"),
                 r.label.clone(),
                 format!("{}", r.tasks),
+                format!("{}", r.conversions.total()),
                 format!("{:.4}", r.median_s),
                 format!("{:.2}", r.gflops),
                 format!("{:.2}", r.resident_bytes as f64 / (1024.0 * 1024.0)),
+                format!("{:.2}", r.modeled_transfer_bytes / (1024.0 * 1024.0)),
                 format!("{:.4}", r.idle_s),
                 format!("{:.2}", r.utilization),
             ]);
             rows.push(r);
         }
     }
-    println!("# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}");
+    println!(
+        "# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}, policy = {}",
+        policy.name()
+    );
     table.print();
 
     if flags.contains_key("json") {
@@ -267,7 +306,7 @@ fn run() -> Result<()> {
             Some("true") | None => "BENCH_cholesky.json",
             Some(p) => p,
         };
-        std::fs::write(path, to_json(n, workers, reps, &rows))?;
+        std::fs::write(path, to_json(n, workers, reps, policy, &rows))?;
         eprintln!("wrote {path}");
     }
     Ok(())

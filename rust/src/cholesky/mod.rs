@@ -25,7 +25,7 @@ pub mod solve;
 
 pub use exec::{GenContext, TileExecutor};
 pub use kernelcall::{KernelCall, SizedCall};
-pub use plan::CholeskyPlan;
+pub use plan::{CholeskyPlan, ConversionCounts};
 pub use solve::{log_determinant, solve_lower, solve_lower_transposed};
 
 use crate::error::Result;
@@ -210,6 +210,25 @@ pub fn factorize_tiles(
     sched: &Scheduler,
 ) -> Result<CholeskyPlan> {
     let map = variant.precision_map(tiles.p(), Some(tiles))?;
+    factorize_tiles_with_map(tiles, variant, map, backend, sched)
+}
+
+/// Factor an already-populated tile matrix under an *explicit* realized
+/// [`PrecisionMap`], bypassing the variant's own map resolution — the
+/// entry point the MLE driver uses to reuse a previous iteration's
+/// adaptive map between `remap_every` strides (the map stays valid while
+/// theta moves little, and skipping the per-tile norm sweep keeps the
+/// objective evaluation cheap).
+pub fn factorize_tiles_with_map(
+    tiles: &mut TileMatrix,
+    variant: Variant,
+    map: PrecisionMap,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<CholeskyPlan> {
+    if map.p() != tiles.p() {
+        crate::invalid_arg!("precision map order {} != tile matrix order {}", map.p(), tiles.p());
+    }
     prepare_tiles(tiles, variant, &map);
     let mut plan = CholeskyPlan::build_with_map(tiles.p(), tiles.nb(), variant, map, false);
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
@@ -508,6 +527,7 @@ mod tests {
             SchedulingPolicy::Fifo,
             SchedulingPolicy::Lifo,
             SchedulingPolicy::CriticalPath,
+            SchedulingPolicy::PrecisionFrontier,
         ] {
             let sched =
                 Scheduler::new(SchedulerConfig { num_workers: 4, policy, trace: false });
@@ -523,6 +543,7 @@ mod tests {
         }
         assert_eq!(results[0].max_abs_diff(&results[1]), 0.0);
         assert_eq!(results[0].max_abs_diff(&results[2]), 0.0);
+        assert_eq!(results[0].max_abs_diff(&results[3]), 0.0);
     }
 
     #[test]

@@ -19,6 +19,34 @@ use crate::tile::{Precision, PrecisionCensus, PrecisionMap, TileId};
 use super::kernelcall::{KernelCall, SizedCall};
 use super::Variant;
 
+/// Conversion-task census of one panel step (or a whole plan): how many
+/// cross-precision boundary views the step materializes and frees.  The
+/// analytic device/network models and the bench JSON consume these to
+/// attribute data-movement overhead to the demote/promote protocol
+/// rather than to the compute codelets.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConversionCounts {
+    /// `dlag2s`/`dconv2s` tasks (f32 view of an f64 tile).
+    pub demotes: usize,
+    /// `sconv2d` tasks (f64 view of a reduced tile).
+    pub promotes: usize,
+    /// `DropScratch` frees (one per converted tile per step).
+    pub drops: usize,
+}
+
+impl ConversionCounts {
+    /// All conversion-protocol tasks (demotes + promotes + drops).
+    pub fn total(&self) -> usize {
+        self.demotes + self.promotes + self.drops
+    }
+
+    fn add(&mut self, other: &ConversionCounts) {
+        self.demotes += other.demotes;
+        self.promotes += other.promotes;
+        self.drops += other.drops;
+    }
+}
+
 /// A lowered factorization: the task graph, the resolved per-tile
 /// precision assignment, and summary counters.
 #[derive(Debug)]
@@ -32,6 +60,8 @@ pub struct CholeskyPlan {
     /// Tasks per codelet kind, for bench tables.
     pub dp_flops: f64,
     pub sp_flops: f64,
+    /// Conversion-task census per panel step `k` (length `p`).
+    pub step_conversions: Vec<ConversionCounts>,
 }
 
 /// Record a cross-precision read of step-k tile `x` (row index; `x == k`
@@ -85,6 +115,7 @@ impl CholeskyPlan {
         let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
         let mut dp_flops = 0.0;
         let mut sp_flops = 0.0;
+        let mut step_conversions: Vec<ConversionCounts> = Vec::with_capacity(p);
         let mut submit = |g: &mut TaskGraph<SizedCall>,
                           call: KernelCall,
                           acc: Vec<(TileId, Access)>| {
@@ -117,6 +148,7 @@ impl CholeskyPlan {
         }
 
         for k in 0..p {
+            let mut conv = ConversionCounts::default();
             submit(
                 &mut graph,
                 KernelCall::PotrfDp { k },
@@ -155,6 +187,7 @@ impl CholeskyPlan {
             // line 9: one demotion of the factored diagonal for all of
             // the step's reduced trsms (deduplicated by construction)
             if needs_f32[k] {
+                conv.demotes += 1;
                 submit(
                     &mut graph,
                     KernelCall::DemoteDiag { k },
@@ -162,6 +195,7 @@ impl CholeskyPlan {
                 );
             }
             if needs_f64[k] {
+                conv.promotes += 1;
                 submit(
                     &mut graph,
                     KernelCall::PromoteTile { i: k, k },
@@ -189,6 +223,7 @@ impl CholeskyPlan {
                     ],
                 );
                 if needs_f32[i] {
+                    conv.demotes += 1;
                     submit(
                         &mut graph,
                         KernelCall::DemoteTile { i, k },
@@ -196,6 +231,7 @@ impl CholeskyPlan {
                     );
                 }
                 if needs_f64[i] {
+                    conv.promotes += 1;
                     submit(
                         &mut graph,
                         KernelCall::PromoteTile { i, k },
@@ -242,6 +278,7 @@ impl CholeskyPlan {
             // after the last consumer of its tile)
             for x in k..p {
                 if needs_f32[x] || needs_f64[x] {
+                    conv.drops += 1;
                     submit(
                         &mut graph,
                         KernelCall::DropScratch { i: x, k },
@@ -249,9 +286,19 @@ impl CholeskyPlan {
                     );
                 }
             }
+            step_conversions.push(conv);
         }
 
-        Self { graph, p, nb, variant, map, dp_flops, sp_flops }
+        // rank storage cheapness for the PrecisionFrontier policy:
+        // f64 < f32 < packed bf16 (bf16 tasks compute in f32 but store
+        // half again fewer bytes)
+        graph.compute_cheapness(|sc| match sc.call.precision() {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+            Precision::Bf16 => 2,
+        });
+
+        Self { graph, p, nb, variant, map, dp_flops, sp_flops, step_conversions }
     }
 
     /// Total useful flops in the plan.
@@ -282,6 +329,15 @@ impl CholeskyPlan {
     /// Tile census of the plan's precision map (dp/sp/bf16 counts).
     pub fn census(&self) -> PrecisionCensus {
         self.map.census()
+    }
+
+    /// Whole-plan conversion-task census (sum of [`Self::step_conversions`]).
+    pub fn conversion_totals(&self) -> ConversionCounts {
+        let mut total = ConversionCounts::default();
+        for c in &self.step_conversions {
+            total.add(c);
+        }
+        total
     }
 
     /// Tile fractions (dp_tiles, reduced_tiles) of the lower triangle —
@@ -428,6 +484,75 @@ mod tests {
             if let KernelCall::PromoteTile { i, k } = t.payload.call {
                 assert!(seen.insert((i, k)), "duplicate sconv2d for tile ({i},{k})");
             }
+        }
+    }
+
+    #[test]
+    fn step_conversions_match_graph_census() {
+        // per-step counters must agree with the tasks actually submitted,
+        // for band and non-band maps alike
+        use crate::tile::{Precision, PrecisionMap};
+        let p = 7;
+        let odd_map = PrecisionMap::from_fn(p, |i, j| {
+            if i == j {
+                Precision::F64
+            } else if (i * 3 + j) % 4 == 0 {
+                Precision::Bf16
+            } else if (i + j) % 2 == 1 {
+                Precision::F32
+            } else {
+                Precision::F64
+            }
+        });
+        let plans = [
+            CholeskyPlan::build(p, 16, Variant::FullDp, false),
+            CholeskyPlan::build(p, 16, Variant::MixedPrecision { diag_thick: 2 }, true),
+            CholeskyPlan::build(p, 16, Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 }, false),
+            CholeskyPlan::build_with_map(
+                p,
+                16,
+                Variant::Adaptive { tolerance: 1e-8 },
+                odd_map,
+                false,
+            ),
+        ];
+        for plan in &plans {
+            assert_eq!(plan.step_conversions.len(), p);
+            let t = plan.conversion_totals();
+            let demotes = count_kind(plan, |c| {
+                matches!(c, KernelCall::DemoteDiag { .. } | KernelCall::DemoteTile { .. })
+            });
+            assert_eq!(t.demotes, demotes);
+            assert_eq!(
+                t.promotes,
+                count_kind(plan, |c| matches!(c, KernelCall::PromoteTile { .. }))
+            );
+            assert_eq!(t.drops, count_kind(plan, |c| matches!(c, KernelCall::DropScratch { .. })));
+            // every conversion view is freed exactly once within its step
+            assert_eq!(t.drops, t.demotes + t.promotes);
+        }
+        // full DP has no boundaries at all
+        assert_eq!(plans[0].conversion_totals(), ConversionCounts::default());
+        // the last panel step has a single (diagonal) tile: nothing to
+        // convert for a band map
+        assert_eq!(plans[1].step_conversions[p - 1], ConversionCounts::default());
+    }
+
+    #[test]
+    fn planner_ranks_cheapness_for_precision_frontier() {
+        let plan = CholeskyPlan::build(
+            6,
+            16,
+            Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 },
+            false,
+        );
+        for t in plan.graph.tasks() {
+            let want = match t.payload.call.precision() {
+                Precision::F64 => 0,
+                Precision::F32 => 1,
+                Precision::Bf16 => 2,
+            };
+            assert_eq!(t.cheapness, want, "{:?}", t.payload.call);
         }
     }
 

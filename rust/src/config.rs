@@ -10,6 +10,7 @@ use std::path::Path;
 use crate::cholesky::Variant;
 use crate::error::{Error, Result};
 use crate::matern::Metric;
+use crate::scheduler::SchedulingPolicy;
 
 /// Everything a `mpchol` run needs.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +31,8 @@ pub struct RunConfig {
     pub nugget: f64,
     /// Worker threads (0 = all).
     pub workers: usize,
+    /// Ready-queue policy: fifo | lifo | cp | pf.
+    pub policy: SchedulingPolicy,
     /// Backend: "native" or "pjrt".
     pub backend: String,
     /// Optimizer evaluation budget.
@@ -49,6 +52,7 @@ impl Default for RunConfig {
             metric: Metric::Euclidean,
             nugget: 1e-8,
             workers: 0,
+            policy: SchedulingPolicy::default(),
             backend: "native".into(),
             max_evals: 500,
             ftol: 1e-3,
@@ -109,6 +113,14 @@ impl RunConfig {
                 "smoothness" => self.theta[2] = parse(k, v)?,
                 "nugget" => self.nugget = parse(k, v)?,
                 "workers" => self.workers = parse(k, v)?,
+                "policy" => {
+                    self.policy = SchedulingPolicy::parse(v).ok_or_else(|| {
+                        Error::InvalidArgument(format!(
+                            "policy must be {}, got {v:?}",
+                            SchedulingPolicy::NAMES
+                        ))
+                    })?
+                }
                 "max_evals" => self.max_evals = parse(k, v)?,
                 "ftol" => self.ftol = parse(k, v)?,
                 "backend" => match v.as_str() {
@@ -304,6 +316,22 @@ mod tests {
     #[test]
     fn unknown_keys_rejected() {
         assert!(RunConfig::parse("tile_size = 64\n").is_err());
+    }
+
+    #[test]
+    fn policy_key_parses_all_names() {
+        for (name, want) in [
+            ("fifo", SchedulingPolicy::Fifo),
+            ("lifo", SchedulingPolicy::Lifo),
+            ("cp", SchedulingPolicy::CriticalPath),
+            ("critical-path", SchedulingPolicy::CriticalPath),
+            ("pf", SchedulingPolicy::PrecisionFrontier),
+            ("precision-frontier", SchedulingPolicy::PrecisionFrontier),
+        ] {
+            let c = RunConfig::parse(&format!("policy = {name}\n")).unwrap();
+            assert_eq!(c.policy, want, "{name}");
+        }
+        assert!(RunConfig::parse("policy = random\n").is_err());
     }
 
     #[test]

@@ -99,15 +99,15 @@ pub mod tile;
 /// examples and benches.
 pub mod prelude {
     pub use crate::cholesky::{
-        factorize_dense, factorize_tiles, generate_and_factorize, generate_covariance,
-        CholeskyPlan, Variant,
+        factorize_dense, factorize_tiles, factorize_tiles_with_map, generate_and_factorize,
+        generate_covariance, CholeskyPlan, ConversionCounts, Variant,
     };
     pub use crate::config::RunConfig;
     pub use crate::datagen::{FieldConfig, SyntheticField, WindFieldConfig};
     pub use crate::error::{Error, Result};
     pub use crate::kernels::{NativeBackend, TileBackend};
     pub use crate::matern::{Location, MaternParams, Metric};
-    pub use crate::mle::{MleConfig, MleFit, MleProblem, OptimizerConfig};
+    pub use crate::mle::{MleConfig, MleFit, MleIterStat, MleProblem, MleTrace, OptimizerConfig};
     pub use crate::predict::{kfold_pmse, pmse, KrigingModel};
     pub use crate::rng::Xoshiro256pp;
     pub use crate::runtime::PjrtBackend;

@@ -15,6 +15,7 @@
 //!   --thick T        band thickness (2)           --sp-thick T  3p band
 //!   --tolerance T    adaptive precision tolerance (1e-8)
 //!   --backend B      native | pjrt (native)       --workers W (all)
+//!   --policy P       fifo | lifo | cp | pf scheduler ready-queue policy
 //!   --range R        theta2 of the generator (0.1) --seed S  (42)
 //!
 //! (Hand-rolled parsing: clap is unavailable in the offline crate set.)
@@ -58,6 +59,7 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("smoothness", "smoothness"),
         ("workers", "workers"),
         ("backend", "backend"),
+        ("policy", "policy"),
         ("variant", "variant"),
         ("thick", "diag_thick"),
         ("sp-thick", "sp_thick"),
@@ -112,6 +114,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
         nb,
         variant,
         num_workers: workers,
+        policy: rc.policy,
         metric: rc.metric,
         nugget: rc.nugget,
         optimizer: mpcholesky::mle::OptimizerConfig {
@@ -182,8 +185,8 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
     };
     let sched = Scheduler::new(SchedulerConfig {
         num_workers: workers,
+        policy: rc.policy,
         trace: true,
-        ..Default::default()
     });
     let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
     let p = rc.n / rc.nb;

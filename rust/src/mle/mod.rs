@@ -20,12 +20,13 @@ pub use optimizer::{minimize_positive, OptimResult, OptimizerConfig};
 use std::cell::RefCell;
 use std::time::Instant;
 
-use crate::cholesky::{self, Variant};
+use crate::cholesky::{self, CholeskyPlan, Variant};
 use crate::error::{Error, Result};
 use crate::kernels::{NativeBackend, TileBackend};
 use crate::matern::{Location, MaternParams, Metric};
-use crate::scheduler::{Scheduler, SchedulerConfig};
-use crate::tile::TileMatrix;
+use crate::scheduler::datamove::{self, DeviceModel};
+use crate::scheduler::{Scheduler, SchedulerConfig, SchedulingPolicy};
+use crate::tile::{PrecisionCensus, PrecisionMap, TileMatrix};
 
 /// Configuration for an MLE run.
 #[derive(Clone, Debug)]
@@ -40,6 +41,21 @@ pub struct MleConfig {
     pub nugget: f64,
     /// Worker threads (0 = available parallelism).
     pub num_workers: usize,
+    /// Ready-queue policy of the worker pool (PrecisionFrontier makes
+    /// the scheduler consult the realized per-tile precisions).
+    pub policy: SchedulingPolicy,
+    /// For [`Variant::Adaptive`]: recompute the norm-based precision map
+    /// every `remap_every`-th successful objective evaluation; between
+    /// strides the previous realized map is reused (theta moves little
+    /// per simplex step, so the map stays valid while the per-tile norm
+    /// sweep is skipped).  `1` (default) re-evaluates at every theta, as
+    /// the covariance-structure re-evaluation of arXiv:1804.09137 does;
+    /// `0` is treated as `1`.  Band variants ignore this (their maps are
+    /// data-free and never change).
+    pub remap_every: usize,
+    /// Device model used to price each evaluation's factorization graph
+    /// in [`MleTrace`] (modeled transfer bytes on the realized map).
+    pub model_device: DeviceModel,
     /// Optimizer settings.
     pub optimizer: OptimizerConfig,
     /// Box bounds on (variance, range, smoothness).
@@ -57,6 +73,9 @@ impl Default for MleConfig {
             metric: Metric::Euclidean,
             nugget: 1e-8,
             num_workers: 0,
+            policy: SchedulingPolicy::default(),
+            remap_every: 1,
+            model_device: DeviceModel::v100(),
             optimizer: OptimizerConfig::default(),
             lower: [0.01, 0.005, 0.1],
             upper: [50.0, 3.0, 3.0],
@@ -73,6 +92,65 @@ pub struct EvalRecord {
     pub seconds: f64,
 }
 
+/// Precision/data-movement bookkeeping of one objective evaluation —
+/// what the realized [`PrecisionMap`] looked like at this theta and what
+/// moving it would cost on the configured device model.
+#[derive(Clone, Copy, Debug)]
+pub struct MleIterStat {
+    /// Tile census of the evaluation's realized precision map.
+    pub census: PrecisionCensus,
+    /// Tiles whose storage precision changed vs the previous successful
+    /// evaluation's map (0 on the first evaluation, and whenever the map
+    /// was reused between `remap_every` strides).
+    pub map_churn: usize,
+    /// True when the map was recomputed from this theta's covariance
+    /// norms; false when a cached map was reused (band variants always
+    /// report false after the first evaluation resolves their static map).
+    pub remapped: bool,
+    /// True when every diagonal tile stayed F64.
+    pub diagonal_dp: bool,
+    /// Demand-miss transfer bytes from replaying this evaluation's
+    /// factorization graph on [`MleConfig::model_device`] with per-tile
+    /// pricing on the realized map.  (Adaptive evaluations replay the
+    /// factorization-only graph; band variants include generation tasks
+    /// — comparable within a variant across iterations.)
+    pub modeled_transfer_bytes: f64,
+}
+
+/// Per-evaluation precision trace of an MLE run (one entry per
+/// *successful* factorization, in evaluation order).
+#[derive(Clone, Debug, Default)]
+pub struct MleTrace {
+    pub iterations: Vec<MleIterStat>,
+}
+
+impl MleTrace {
+    /// Total tiles that changed precision across the run.
+    pub fn total_churn(&self) -> usize {
+        self.iterations.iter().map(|i| i.map_churn).sum()
+    }
+
+    /// Total modeled transfer bytes across the run.
+    pub fn total_modeled_bytes(&self) -> f64 {
+        self.iterations.iter().map(|i| i.modeled_transfer_bytes).sum()
+    }
+
+    /// How many evaluations recomputed the map.
+    pub fn remap_count(&self) -> usize {
+        self.iterations.iter().filter(|i| i.remapped).count()
+    }
+}
+
+/// Cached realized map + evaluation counter behind the `remap_every`
+/// stride.
+#[derive(Debug, Default)]
+struct RemapState {
+    /// Successful factorizations so far.
+    evals: usize,
+    /// The previous evaluation's realized map.
+    map: Option<PrecisionMap>,
+}
+
 /// Result of [`MleProblem::fit`].
 #[derive(Clone, Debug)]
 pub struct MleFit {
@@ -85,6 +163,8 @@ pub struct MleFit {
     pub converged: bool,
     /// Per-evaluation records (Fig. 4 reports the mean of `seconds`).
     pub evals: Vec<EvalRecord>,
+    /// Per-evaluation precision map churn + modeled transfer bytes.
+    pub trace: MleTrace,
 }
 
 impl MleFit {
@@ -104,6 +184,10 @@ pub struct MleProblem<'a> {
     cfg: MleConfig,
     backend: &'a dyn TileBackend,
     scheduler: Scheduler,
+    /// Adaptive-remap cache (previous realized map + eval counter).
+    remap: RefCell<RemapState>,
+    /// Per-evaluation precision bookkeeping, reset by [`Self::fit`].
+    trace: RefCell<MleTrace>,
 }
 
 static NATIVE: NativeBackend = NativeBackend;
@@ -136,9 +220,20 @@ impl<'a> MleProblem<'a> {
         } else {
             cfg.num_workers
         };
-        let scheduler =
-            Scheduler::new(SchedulerConfig { num_workers: workers, ..Default::default() });
-        Ok(Self { locations, z, cfg, backend, scheduler })
+        let scheduler = Scheduler::new(SchedulerConfig {
+            num_workers: workers,
+            policy: cfg.policy,
+            ..Default::default()
+        });
+        Ok(Self {
+            locations,
+            z,
+            cfg,
+            backend,
+            scheduler,
+            remap: RefCell::new(RemapState::default()),
+            trace: RefCell::new(MleTrace::default()),
+        })
     }
 
     pub fn n(&self) -> usize {
@@ -152,18 +247,88 @@ impl<'a> MleProblem<'a> {
     /// Factor Sigma(theta) with the configured variant; returns the tile
     /// factor (shared by the likelihood and the kriging predictor).
     pub fn factorize(&self, theta: &MaternParams) -> Result<TileMatrix> {
+        Ok(self.factorize_traced(theta)?.0)
+    }
+
+    /// The per-evaluation precision trace recorded so far (map census,
+    /// churn, modeled transfer bytes).  [`Self::fit`] resets it at the
+    /// start of each run and also returns it in [`MleFit::trace`];
+    /// standalone [`Self::loglik`]/[`Self::factorize`] calls append to it.
+    pub fn trace(&self) -> MleTrace {
+        self.trace.borrow().clone()
+    }
+
+    /// One factorization pass with remap-stride and trace bookkeeping.
+    ///
+    /// For [`Variant::Adaptive`] the covariance is generated first, then
+    /// the precision map is either recomputed from this theta's tile
+    /// norms (every `remap_every`-th successful evaluation) or the
+    /// previous realized map is reused; band variants keep their fused
+    /// generate+factorize path and static map.
+    fn factorize_traced(&self, theta: &MaternParams) -> Result<(TileMatrix, CholeskyPlan)> {
         let mut tiles = TileMatrix::zeros(self.n(), self.cfg.nb)?;
-        cholesky::generate_and_factorize(
-            &mut tiles,
-            self.locations,
-            *theta,
-            self.cfg.metric,
-            self.cfg.nugget,
-            self.cfg.variant,
-            self.backend,
-            &self.scheduler,
-        )?;
-        Ok(tiles)
+        let (plan, remapped) = if matches!(self.cfg.variant, Variant::Adaptive { .. }) {
+            cholesky::generate_covariance(
+                &mut tiles,
+                self.locations,
+                *theta,
+                self.cfg.metric,
+                self.cfg.nugget,
+                self.backend,
+                &self.scheduler,
+            )?;
+            let stride = self.cfg.remap_every.max(1);
+            let (cached, evals) = {
+                let st = self.remap.borrow();
+                (st.map.clone(), st.evals)
+            };
+            let (map, remapped) = match cached {
+                Some(prev) if evals % stride != 0 && prev.p() == tiles.p() => (prev, false),
+                _ => (self.cfg.variant.precision_map(tiles.p(), Some(&tiles))?, true),
+            };
+            let plan = cholesky::factorize_tiles_with_map(
+                &mut tiles,
+                self.cfg.variant,
+                map,
+                self.backend,
+                &self.scheduler,
+            )?;
+            (plan, remapped)
+        } else {
+            let first = self.remap.borrow().evals == 0;
+            let plan = cholesky::generate_and_factorize(
+                &mut tiles,
+                self.locations,
+                *theta,
+                self.cfg.metric,
+                self.cfg.nugget,
+                self.cfg.variant,
+                self.backend,
+                &self.scheduler,
+            )?;
+            (plan, first)
+        };
+
+        // per-iteration bookkeeping on the *realized* map: churn vs the
+        // previous successful evaluation, and the modeled transfer volume
+        // of replaying this evaluation's graph with per-tile pricing
+        let churn = {
+            let mut st = self.remap.borrow_mut();
+            let churn = st.map.as_ref().map_or(0, |prev| prev.churn(&plan.map));
+            st.map = Some(plan.map.clone());
+            st.evals += 1;
+            churn
+        };
+        let rep =
+            datamove::simulate(&plan.graph, &self.cfg.model_device, self.cfg.nb, &plan.map);
+        self.trace.borrow_mut().iterations.push(MleIterStat {
+            census: plan.map.census(),
+            map_churn: churn,
+            remapped,
+            diagonal_dp: plan.map.diagonal_is_dp(),
+            modeled_transfer_bytes: rep.demand_bytes,
+        });
+        Ok((tiles, plan))
     }
 
     /// Evaluate the Gaussian log-likelihood (Eq. 2) at `theta`.
@@ -177,8 +342,11 @@ impl<'a> MleProblem<'a> {
     }
 
     /// Run the optimizer; returns the fitted parameters and the
-    /// per-evaluation log (timing, objective path).
+    /// per-evaluation log (timing, objective path, precision trace).
     pub fn fit(&self) -> Result<MleFit> {
+        // each fit is a fresh run: restart the remap stride and trace
+        *self.remap.borrow_mut() = RemapState::default();
+        *self.trace.borrow_mut() = MleTrace::default();
         let evals: RefCell<Vec<EvalRecord>> = RefCell::new(Vec::new());
         let objective = |x: &[f64]| -> f64 {
             let theta = MaternParams::new(x[0], x[1], x[2]);
@@ -223,6 +391,7 @@ impl<'a> MleProblem<'a> {
             iterations: r.evals,
             converged: r.converged,
             evals: evals.into_inner(),
+            trace: self.trace.borrow().clone(),
         })
     }
 }
@@ -305,6 +474,62 @@ mod tests {
         // loose sanity: the estimate is the right order of magnitude
         assert!(fit.theta.range > 0.02 && fit.theta.range < 0.5, "{:?}", fit.theta);
         assert!(fit.theta.variance > 0.2 && fit.theta.variance < 5.0, "{:?}", fit.theta);
+    }
+
+    #[test]
+    fn adaptive_remap_stride_reuses_previous_map() {
+        let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+        let f = small_field(theta0, 11);
+        let cfg = MleConfig {
+            nb: 64,
+            variant: Variant::Adaptive { tolerance: 1e-6 },
+            remap_every: 2,
+            ..Default::default()
+        };
+        let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+        let thetas = [
+            theta0,
+            MaternParams::new(1.2, 0.12, 0.5),
+            MaternParams::new(0.8, 0.08, 0.5),
+        ];
+        for t in &thetas {
+            prob.loglik(t).unwrap();
+        }
+        let trace = prob.trace();
+        assert_eq!(trace.iterations.len(), 3);
+        // stride 2: evals 0 and 2 recompute, eval 1 reuses
+        assert!(trace.iterations[0].remapped);
+        assert!(!trace.iterations[1].remapped, "eval 1 must reuse the cached map");
+        assert!(trace.iterations[2].remapped);
+        // a reused map cannot churn
+        assert_eq!(trace.iterations[1].map_churn, 0);
+        assert_eq!(trace.remap_count(), 2);
+        for it in &trace.iterations {
+            assert!(it.diagonal_dp, "adaptive remap demoted a diagonal tile");
+            assert!(it.modeled_transfer_bytes > 0.0);
+            assert_eq!(it.census.total(), 4 * 5 / 2); // p = 4
+        }
+        assert!(trace.total_modeled_bytes() > 0.0);
+    }
+
+    #[test]
+    fn band_variant_trace_reports_static_map() {
+        let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+        let f = small_field(theta0, 12);
+        let cfg = MleConfig {
+            nb: 64,
+            variant: Variant::MixedPrecision { diag_thick: 2 },
+            ..Default::default()
+        };
+        let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+        prob.loglik(&theta0).unwrap();
+        prob.loglik(&MaternParams::new(1.1, 0.11, 0.5)).unwrap();
+        let trace = prob.trace();
+        assert_eq!(trace.iterations.len(), 2);
+        // the band map is data-free: resolved once, zero churn forever
+        assert!(trace.iterations[0].remapped);
+        assert!(!trace.iterations[1].remapped);
+        assert_eq!(trace.total_churn(), 0);
     }
 
     #[test]

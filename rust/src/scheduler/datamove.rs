@@ -17,7 +17,7 @@ use std::collections::HashMap;
 
 use super::graph::{Access, TaskGraph};
 use super::TaskCost;
-use crate::tile::{Precision, TileId};
+use crate::tile::{Precision, PrecisionMap, TileId};
 
 /// Accelerator + interconnect description.
 #[derive(Clone, Debug)]
@@ -106,11 +106,12 @@ impl DataMoveReport {
 
 /// LRU tile cache of the device memory.
 ///
-/// Keyed by [`TileId`] alone: in the paper's storage scheme a tile's SP
-/// shadow lives in the matrix's unused half and is derived on-device, so
-/// a tile resident in either precision satisfies accesses in both — the
-/// transfer saving of mixed precision comes from *first-touch* loads of
-/// SP tiles costing half the bytes.
+/// Keyed by [`TileId`] alone: storage is precision-native, so a tile has
+/// exactly one resident representation (its map precision) and a tile
+/// resident on-device satisfies every access — cross-precision views are
+/// derived on-device by the plan's conversion tasks.  The transfer saving
+/// of mixed precision comes from loads of reduced tiles costing their
+/// stored bytes, not f64 bytes.
 struct GpuCache {
     capacity: usize,
     used: usize,
@@ -153,29 +154,26 @@ impl GpuCache {
 }
 
 /// Replay `graph` under `dev`: compute runs at each task's precision
-/// rate; transfers charge each tile's *storage* precision — a tile is
-/// stored (and moved) in SP iff any SP task touches it, which is exactly
-/// the paper's storage scheme for off-band tiles.  `nb` is the tile edge.
+/// rate; transfers charge each tile at its *realized storage* bytes as
+/// recorded in `map` — the per-tile assignment the planner and the
+/// precision-native [`crate::tile::TileMatrix`] actually use, so an f32
+/// tile moves half the bytes of f64 and a packed-bf16 tile a quarter.
+/// (Earlier revisions inferred storage as the min precision over task
+/// payloads touching the tile; the realized map is authoritative and
+/// also prices tiles no compute task happens to touch at their true
+/// width.)  `nb` is the tile edge.
 pub fn simulate<P: TaskCost>(
     graph: &TaskGraph<P>,
     dev: &DeviceModel,
     nb: usize,
+    map: &PrecisionMap,
 ) -> DataMoveReport {
-    // storage precision per tile
-    let mut storage: HashMap<TileId, Precision> = HashMap::new();
-    for t in graph.tasks() {
-        let prec = t.payload.precision();
-        for &(tile, _) in &t.accesses {
-            let e = storage.entry(tile).or_insert(Precision::F64);
-            *e = (*e).min(prec); // lowest precision any task uses = storage
-        }
-    }
     let mut cache = GpuCache::new(dev.gpu_mem_bytes);
     let mut rep = DataMoveReport::default();
     for t in graph.tasks() {
         let prec = t.payload.precision();
         for &(tile, mode) in &t.accesses {
-            let tile_bytes = nb * nb * storage[&tile].bytes();
+            let tile_bytes = nb * nb * map.get(tile.i, tile.j).bytes();
             let (h2d, d2h) = cache.touch(tile, tile_bytes, mode == Access::Write);
             if h2d > 0 {
                 rep.transfers += 1;
@@ -225,11 +223,32 @@ mod tests {
             g
         };
         let dev = DeviceModel::v100();
-        let dp = simulate(&mk(Precision::F64), &dev, 512);
-        let sp = simulate(&mk(Precision::F32), &dev, 512);
+        let dp_map = PrecisionMap::uniform(8, Precision::F64);
+        let sp_map = PrecisionMap::uniform(8, Precision::F32);
+        let dp = simulate(&mk(Precision::F64), &dev, 512, &dp_map);
+        let sp = simulate(&mk(Precision::F32), &dev, 512, &sp_map);
         assert!(sp.compute_s < dp.compute_s);
         assert!((dp.compute_s / sp.compute_s - 2.0).abs() < 1e-9);
         assert_eq!(sp.demand_bytes * 2.0, dp.demand_bytes);
+    }
+
+    #[test]
+    fn transfer_bytes_follow_the_map_not_the_tasks() {
+        // an f64-compute task touching a tile the map stores reduced must
+        // be priced at the *stored* bytes: pricing is a map property
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 0), Access::Read)]);
+        let mut dev = DeviceModel::v100();
+        dev.prefetch_overfetch = 1.0;
+        let nb = 128;
+        let dp_map = PrecisionMap::uniform(2, Precision::F64);
+        let hp_map = PrecisionMap::uniform(2, Precision::Bf16);
+        let dp = simulate(&g, &dev, nb, &dp_map);
+        let hp = simulate(&g, &dev, nb, &hp_map);
+        assert_eq!(dp.demand_bytes, (nb * nb * 8) as f64);
+        assert_eq!(hp.demand_bytes, (nb * nb * 2) as f64);
+        // compute time is unchanged: the task still runs at its own rate
+        assert_eq!(dp.compute_s, hp.compute_s);
     }
 
     #[test]
@@ -241,7 +260,8 @@ mod tests {
                 vec![(tid(0, 0), Access::Read)],
             );
         }
-        let rep = simulate(&g, &DeviceModel::p100(), 256);
+        let map = PrecisionMap::uniform(1, Precision::F64);
+        let rep = simulate(&g, &DeviceModel::p100(), 256, &map);
         assert_eq!(rep.transfers, 1, "only the first touch misses");
     }
 
@@ -258,7 +278,7 @@ mod tests {
                 vec![(tid(k % 2, 0), Access::Write)],
             );
         }
-        let rep = simulate(&g, &small, 512);
+        let rep = simulate(&g, &small, 512, &PrecisionMap::uniform(2, Precision::F64));
         assert_eq!(rep.transfers, 6);
         // dirty evictions add D2H volume on top of the 6 H2D loads
         assert!(rep.demand_bytes > 6.0 * 512.0 * 512.0 * 8.0);
@@ -270,7 +290,11 @@ mod tests {
         g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(0, 0), Access::Write)]);
         let mut dev = DeviceModel::k80();
         dev.prefetch_overfetch = 2.0;
-        let rep = simulate(&g, &dev, 128);
+        let rep = simulate(&g, &dev, 128, &PrecisionMap::uniform(1, Precision::F64));
         assert_eq!(rep.moved_bytes, rep.demand_bytes * 2.0);
+        // and 1.0 charges demand misses only
+        dev.prefetch_overfetch = 1.0;
+        let rep1 = simulate(&g, &dev, 128, &PrecisionMap::uniform(1, Precision::F64));
+        assert_eq!(rep1.moved_bytes, rep1.demand_bytes);
     }
 }

@@ -22,7 +22,7 @@ use std::collections::HashMap;
 
 use super::graph::{Access, TaskGraph};
 use super::TaskCost;
-use crate::tile::{Precision, TileId};
+use crate::tile::{Precision, PrecisionMap, TileId};
 
 /// Cluster description (defaults match a Shaheen-II-like Cray XC40).
 #[derive(Clone, Debug)]
@@ -78,15 +78,24 @@ pub struct DistributedReport {
     pub total_comm_bytes: f64,
     /// Total messages.
     pub messages: usize,
+    /// Inter-node messages per tile — the per-tile communication census
+    /// the byte-savings accounting needs (message *counts* depend only on
+    /// ownership and the DAG, never on the precision map, so replays of
+    /// one plan under different maps differ only in priced bytes).
+    pub per_tile_messages: HashMap<TileId, usize>,
     /// Critical-path time, seconds.
     pub critical_path_s: f64,
 }
 
-/// Replay `graph` on `cluster`.  `nb` is the tile edge.
+/// Replay `graph` on `cluster`, pricing every transferred tile at its
+/// *stored* bytes under the realized `map` (f64/f32/packed-bf16 — the
+/// same authority the planner and tile storage use).  `nb` is the tile
+/// edge.
 pub fn simulate<P: TaskCost>(
     graph: &TaskGraph<P>,
     cluster: &ClusterModel,
     nb: usize,
+    map: &PrecisionMap,
 ) -> DistributedReport {
     let mut compute = vec![0.0f64; cluster.nodes];
     let mut comm = vec![0.0f64; cluster.nodes];
@@ -108,7 +117,6 @@ pub fn simulate<P: TaskCost>(
         let rate = cluster.node_gflops
             * if prec == Precision::F64 { 1.0 } else { cluster.sp_speedup };
         let exec_s = t.payload.flops() / (rate * 1e9);
-        let tile_bytes = (nb * nb * prec.bytes()) as f64;
 
         // node that runs the task = owner of its first written tile
         let out_tile = t
@@ -124,10 +132,13 @@ pub fn simulate<P: TaskCost>(
             if mode == Access::Read {
                 let src = *producer_node.get(&tile).unwrap_or(&cluster.owner(tile));
                 if src != node {
+                    // the wire carries the tile's stored representation
+                    let tile_bytes = (nb * nb * map.get(tile.i, tile.j).bytes()) as f64;
                     let msg = cluster.alpha_s + tile_bytes / cluster.beta_bytes_per_s;
                     comm[node] += msg;
                     rep.total_comm_bytes += tile_bytes;
                     rep.messages += 1;
+                    *rep.per_tile_messages.entry(tile).or_insert(0) += 1;
                     ready = ready.max(msg);
                 }
             }
@@ -203,8 +214,9 @@ mod tests {
     #[test]
     fn more_nodes_reduce_time_on_wide_graphs() {
         let g = wide_graph(512);
-        let t64 = simulate(&g, &ClusterModel::shaheen(64), 256).time_s;
-        let t256 = simulate(&g, &ClusterModel::shaheen(256), 256).time_s;
+        let map = PrecisionMap::uniform(512, Precision::F64);
+        let t64 = simulate(&g, &ClusterModel::shaheen(64), 256, &map).time_s;
+        let t256 = simulate(&g, &ClusterModel::shaheen(256), 256, &map).time_s;
         assert!(t256 < t64, "{t256} !< {t64}");
     }
 
@@ -219,9 +231,11 @@ mod tests {
             Toy { flops: 1e6, prec: Precision::F64 },
             vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
         );
-        let rep = simulate(&g, &c, 128);
+        let map = PrecisionMap::uniform(4, Precision::F64);
+        let rep = simulate(&g, &c, 128, &map);
         assert_eq!(rep.messages, 1);
         assert_eq!(rep.total_comm_bytes, 128.0 * 128.0 * 8.0);
+        assert_eq!(rep.per_tile_messages.get(&tid(1, 1)), Some(&1));
 
         // same-owner read: task writes (1,1) and reads (1,1)'s neighbor
         // owned by the same node -> no traffic
@@ -231,8 +245,9 @@ mod tests {
             Toy { flops: 1e6, prec: Precision::F64 },
             vec![(tid(1, 1), Access::Read), (tid(3, 3), Access::Write)],
         );
-        let rep2 = simulate(&g2, &c, 128);
+        let rep2 = simulate(&g2, &c, 128, &map);
         assert_eq!(rep2.messages, 0, "owner(3,3) == owner(1,1) on a 2x2 grid");
+        assert!(rep2.per_tile_messages.is_empty());
     }
 
     #[test]
@@ -247,9 +262,11 @@ mod tests {
             );
             g
         };
-        let dp = simulate(&mk(Precision::F64), &c, 128);
-        let sp = simulate(&mk(Precision::F32), &c, 128);
+        let dp = simulate(&mk(Precision::F64), &c, 128, &PrecisionMap::uniform(2, Precision::F64));
+        let sp = simulate(&mk(Precision::F32), &c, 128, &PrecisionMap::uniform(2, Precision::F32));
         assert_eq!(sp.total_comm_bytes * 2.0, dp.total_comm_bytes);
+        // message counts are a pure ownership/DAG property
+        assert_eq!(dp.per_tile_messages, sp.per_tile_messages);
     }
 
     #[test]
@@ -259,7 +276,7 @@ mod tests {
         for _ in 0..10 {
             g.submit(Toy { flops: 1e9, prec: Precision::F64 }, vec![(tid(0, 0), Access::Write)]);
         }
-        let rep = simulate(&g, &c, 256);
+        let rep = simulate(&g, &c, 256, &PrecisionMap::uniform(1, Precision::F64));
         // 10 GFLOP chain at 1000 GFLOP/s = 10 ms regardless of node count
         assert!((rep.time_s - 0.01).abs() < 1e-6, "{}", rep.time_s);
         assert_eq!(rep.critical_path_s, rep.time_s);

@@ -33,6 +33,11 @@ pub struct TaskNode<P> {
     /// Critical-path height (longest path to a sink), for priority
     /// scheduling.  Filled by [`TaskGraph::compute_heights`].
     pub height: usize,
+    /// Storage-cheapness rank of the task's target (0 = f64, higher =
+    /// cheaper formats), the tie-break the PrecisionFrontier policy
+    /// prefers at equal critical-path height.  Filled by
+    /// [`TaskGraph::compute_cheapness`]; defaults to 0 (every task ties).
+    pub cheapness: u8,
 }
 
 #[derive(Debug, Default)]
@@ -98,6 +103,7 @@ impl<P> TaskGraph<P> {
             successors: Vec::new(),
             num_predecessors,
             height: 0,
+            cheapness: 0,
         });
         idx
     }
@@ -141,6 +147,18 @@ impl<P> TaskGraph<P> {
     /// [`Self::compute_heights`].
     pub fn critical_path_len(&self) -> usize {
         self.tasks.iter().map(|t| t.height + 1).max().unwrap_or(0)
+    }
+
+    /// Rank every task's storage cheapness from its payload (0 = most
+    /// expensive format; the PrecisionFrontier policy prefers higher
+    /// ranks at equal critical-path height).  Meaningful ranks are
+    /// 0..=3: the policy clamps anything above 3, so larger ranks tie.
+    /// Graph builders that know their payload call this once after
+    /// submission — the Cholesky planner ranks f64=0 < f32=1 < bf16=2.
+    pub fn compute_cheapness(&mut self, f: impl Fn(&P) -> u8) {
+        for t in &mut self.tasks {
+            t.cheapness = f(&t.payload);
+        }
     }
 
     /// Validate the DAG invariant: every edge points to a later index.

@@ -34,6 +34,43 @@ pub enum SchedulingPolicy {
     /// runs rely on to keep the potrf/trsm spine ahead of gemm noise.
     /// Heights are computed once at graph build time.
     CriticalPath,
+    /// Precision-aware critical path: order ready tasks by
+    /// (critical-path height, cheapest storage precision first).  Height
+    /// still dominates — the potrf/trsm spine cannot starve — but among
+    /// equal-height ready tasks the reduced-precision ones (half/quarter
+    /// the bytes, twice the SIMD lanes) run first, finishing the wide
+    /// cheap frontier early so their DP successors enable sooner.  Uses
+    /// [`super::graph::TaskNode::cheapness`], which the Cholesky planner
+    /// fills from the realized `PrecisionMap`; graphs that never call
+    /// `compute_cheapness` degenerate to [`Self::CriticalPath`].
+    PrecisionFrontier,
+}
+
+impl SchedulingPolicy {
+    /// Accepted [`Self::parse`] spellings, for CLI/config error messages.
+    pub const NAMES: &'static str = "fifo|lifo|cp|critical-path|pf|precision-frontier";
+
+    /// Parse a CLI/config name.  Accepted: `fifo`, `lifo`,
+    /// `cp`/`critical-path`, `pf`/`precision-frontier`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(Self::Fifo),
+            "lifo" => Some(Self::Lifo),
+            "cp" | "critical-path" => Some(Self::CriticalPath),
+            "pf" | "precision-frontier" => Some(Self::PrecisionFrontier),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (inverse of [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Fifo => "fifo",
+            Self::Lifo => "lifo",
+            Self::CriticalPath => "critical-path",
+            Self::PrecisionFrontier => "precision-frontier",
+        }
+    }
 }
 
 /// Scheduler configuration.
@@ -193,6 +230,12 @@ impl Scheduler {
             SchedulingPolicy::Fifo => -seq,
             SchedulingPolicy::Lifo => seq,
             SchedulingPolicy::CriticalPath => g.task(idx).height as i64,
+            // lexicographic (height, cheapness): cheapness < 4 always,
+            // so height strictly dominates
+            SchedulingPolicy::PrecisionFrontier => {
+                let t = g.task(idx);
+                (t.height as i64) * 4 + (t.cheapness.min(3)) as i64
+            }
         }
     }
 
@@ -210,7 +253,10 @@ impl Scheduler {
         if graph.is_empty() {
             return Ok(ExecutionTrace::default());
         }
-        if self.cfg.policy == SchedulingPolicy::CriticalPath {
+        if matches!(
+            self.cfg.policy,
+            SchedulingPolicy::CriticalPath | SchedulingPolicy::PrecisionFrontier
+        ) {
             graph.compute_heights();
         }
         let n = graph.len();
@@ -355,6 +401,7 @@ mod tests {
             SchedulingPolicy::Fifo,
             SchedulingPolicy::Lifo,
             SchedulingPolicy::CriticalPath,
+            SchedulingPolicy::PrecisionFrontier,
         ] {
             let mut g: TaskGraph<usize> = TaskGraph::new();
             // diamond: w -> (r1, r2) -> w2
@@ -493,6 +540,7 @@ mod tests {
             SchedulingPolicy::Fifo,
             SchedulingPolicy::Lifo,
             SchedulingPolicy::CriticalPath,
+            SchedulingPolicy::PrecisionFrontier,
         ] {
             let mut g: TaskGraph<usize> = TaskGraph::new();
             // 500 tasks over 23 tiles, pseudo-random access patterns:
@@ -558,6 +606,65 @@ mod tests {
         });
         assert!(err.is_err());
         assert!(t0.elapsed().as_secs_f64() < 5.0, "drain hung: {:?}", t0.elapsed());
+    }
+
+    /// PrecisionFrontier keys: height dominates; cheapness breaks ties.
+    /// On one worker the pop order is exactly the key order, so a
+    /// two-level fork (root -> {dp, sp, hp} -> sink) must run the cheap
+    /// branches first.
+    #[test]
+    fn precision_frontier_orders_cheap_first_at_equal_height() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        g.submit(0, vec![(t(0, 0), Access::Write)]); // root
+        // three independent equal-height branches off the root
+        g.submit(1, vec![(t(0, 0), Access::Read), (t(1, 1), Access::Write)]); // "dp"
+        g.submit(2, vec![(t(0, 0), Access::Read), (t(2, 2), Access::Write)]); // "sp"
+        g.submit(3, vec![(t(0, 0), Access::Read), (t(3, 3), Access::Write)]); // "hp"
+        g.submit(
+            4,
+            vec![
+                (t(1, 1), Access::Read),
+                (t(2, 2), Access::Read),
+                (t(3, 3), Access::Read),
+                (t(4, 4), Access::Write),
+            ],
+        );
+        // cheapness from the payload: task 1 = f64 rank, 2 = f32, 3 = bf16
+        g.compute_cheapness(|&p| match p {
+            1 => 0,
+            2 => 1,
+            3 => 2,
+            _ => 0,
+        });
+        let log = Mutex::new(Vec::new());
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: 1,
+            policy: SchedulingPolicy::PrecisionFrontier,
+            trace: false,
+        });
+        sched
+            .run(&mut g, |_, &p| {
+                log.lock().unwrap().push(p);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![0, 3, 2, 1, 4], "cheapest branch first");
+    }
+
+    /// Policy names round-trip through the CLI parser.
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            SchedulingPolicy::Fifo,
+            SchedulingPolicy::Lifo,
+            SchedulingPolicy::CriticalPath,
+            SchedulingPolicy::PrecisionFrontier,
+        ] {
+            assert_eq!(SchedulingPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedulingPolicy::parse("pf"), Some(SchedulingPolicy::PrecisionFrontier));
+        assert_eq!(SchedulingPolicy::parse("cp"), Some(SchedulingPolicy::CriticalPath));
+        assert_eq!(SchedulingPolicy::parse("bogus"), None);
     }
 
     /// Empty graph is a no-op.

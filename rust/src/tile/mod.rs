@@ -168,6 +168,28 @@ impl PrecisionMap {
         self.get(i, j) == Precision::F64
     }
 
+    /// Number of tiles whose assignment differs from `other` — the
+    /// "map churn" the MLE driver reports per optimizer iteration as
+    /// theta moves the covariance structure.
+    ///
+    /// # Panics
+    /// If the two maps cover different tile orders.
+    pub fn churn(&self, other: &PrecisionMap) -> usize {
+        assert_eq!(
+            self.p, other.p,
+            "churn between maps of different order ({} vs {})",
+            self.p, other.p
+        );
+        self.prec.iter().zip(&other.prec).filter(|(a, b)| a != b).count()
+    }
+
+    /// True when every diagonal tile is stored F64 — the invariant the
+    /// adaptive rule maintains (potrf pivots live on the diagonal) and
+    /// the MLE remap regression asserts each iteration.
+    pub fn diagonal_is_dp(&self) -> bool {
+        (0..self.p).all(|k| self.get(k, k) == Precision::F64)
+    }
+
     /// Native storage bytes of the lower triangle under this assignment
     /// at tile size `nb` — the resident footprint a precision-native
     /// [`TileMatrix`] holds once conversion scratch is freed.
@@ -847,6 +869,27 @@ mod tests {
         assert!(map.label().contains("HP("), "{}", map.label());
         // storage accounting follows the census
         assert_eq!(map.storage_bytes(16), 16 * 16 * (5 * 8 + 4 * 4 + 6 * 2));
+    }
+
+    #[test]
+    fn precision_map_churn_and_diagonal_predicate() {
+        let p = 4;
+        let dp = PrecisionMap::uniform(p, Precision::F64);
+        assert_eq!(dp.churn(&dp), 0);
+        assert!(dp.diagonal_is_dp());
+        let banded = PrecisionMap::from_fn(p, |i, j| {
+            if i.abs_diff(j) < 2 {
+                Precision::F64
+            } else {
+                Precision::F32
+            }
+        });
+        // p=4, band thick 2: demoted tiles are (2,0),(3,0),(3,1) -> 3
+        assert_eq!(dp.churn(&banded), 3);
+        assert_eq!(banded.churn(&dp), 3, "churn is symmetric");
+        assert!(banded.diagonal_is_dp());
+        let hp_diag = PrecisionMap::uniform(p, Precision::Bf16);
+        assert!(!hp_diag.diagonal_is_dp());
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! MLE Adaptive-remap regression: as the optimizer moves theta, the
+//! recomputed norm-based precision map must never demote a diagonal
+//! tile (the potrf pivots), the remap stride must be honored, and the
+//! adaptive fit's log-likelihood must match the full-DP variant within
+//! the relative tolerance the adaptive acceptance path already uses
+//! (1e-3, as in `mixed_loglik_close_to_dp_loglik`).
+
+use mpcholesky::prelude::*;
+
+fn field() -> SyntheticField {
+    SyntheticField::generate(&FieldConfig {
+        n: 256,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 9,
+        gen_nb: 64,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn cfg(variant: Variant, remap_every: usize) -> MleConfig {
+    MleConfig {
+        nb: 64,
+        variant,
+        remap_every,
+        optimizer: OptimizerConfig { max_evals: 60, ftol: 1e-4, ..Default::default() },
+        lower: [0.05, 0.01, 0.25],
+        upper: [10.0, 1.0, 1.5],
+        start: Some([0.5, 0.05, 0.8]),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adaptive_remap_never_demotes_diagonal_and_matches_dp_loglik() {
+    let f = field();
+    let adaptive = Variant::Adaptive { tolerance: 1e-6 };
+
+    let dp_prob = MleProblem::new(&f.locations, &f.values, cfg(Variant::FullDp, 1)).unwrap();
+    let ad_prob = MleProblem::new(&f.locations, &f.values, cfg(adaptive, 3)).unwrap();
+
+    let ad_fit = ad_prob.fit().unwrap();
+    let trace = &ad_fit.trace;
+    assert!(!trace.iterations.is_empty());
+
+    // 1. the recomputed map never demotes a diagonal tile, at any theta
+    //    the optimizer visits
+    for (i, it) in trace.iterations.iter().enumerate() {
+        assert!(it.diagonal_dp, "iteration {i} demoted a diagonal tile");
+        assert_eq!(it.census.total(), 4 * 5 / 2, "p = 4 triangle");
+    }
+
+    // 2. remap stride 3 is honored over successful evaluations: maps are
+    //    recomputed exactly at evals 0, 3, 6, ... and reused in between
+    //    (a reused map cannot churn)
+    for (i, it) in trace.iterations.iter().enumerate() {
+        assert_eq!(it.remapped, i % 3 == 0, "eval {i} remap cadence");
+        if !it.remapped {
+            assert_eq!(it.map_churn, 0, "eval {i}: reused map reported churn");
+        }
+    }
+
+    // 3. per-eval modeled transfer volume is populated on the realized map
+    assert!(trace.iterations.iter().all(|it| it.modeled_transfer_bytes > 0.0));
+
+    // 4. the adaptive fit's likelihood matches full DP at the same theta
+    //    within the established 1e-3 relative tolerance
+    let dp_at_ad_theta = dp_prob.loglik(&ad_fit.theta).unwrap();
+    assert!(
+        (dp_at_ad_theta - ad_fit.loglik).abs() < 1e-3 * dp_at_ad_theta.abs().max(1.0),
+        "adaptive loglik {} vs DP {} at theta-hat",
+        ad_fit.loglik,
+        dp_at_ad_theta
+    );
+
+    // 5. and the two fits land on likelihoods of the same height
+    let dp_fit = dp_prob.fit().unwrap();
+    assert!(
+        (dp_fit.loglik - ad_fit.loglik).abs() < 1e-2 * dp_fit.loglik.abs().max(1.0),
+        "fitted logliks diverge: dp {} vs adaptive {}",
+        dp_fit.loglik,
+        ad_fit.loglik
+    );
+}
+
+#[test]
+fn remap_every_one_recomputes_at_every_theta() {
+    let f = field();
+    let every_eval = cfg(Variant::Adaptive { tolerance: 1e-6 }, 1);
+    let prob = MleProblem::new(&f.locations, &f.values, every_eval).unwrap();
+    // three distinct thetas: every successful evaluation recomputes
+    for theta in [
+        MaternParams::new(1.0, 0.1, 0.5),
+        MaternParams::new(0.7, 0.07, 0.6),
+        MaternParams::new(1.4, 0.13, 0.45),
+    ] {
+        prob.loglik(&theta).unwrap();
+    }
+    let trace = prob.trace();
+    assert_eq!(trace.iterations.len(), 3);
+    assert_eq!(trace.remap_count(), 3, "remap_every = 1 must remap each eval");
+    assert!(trace.iterations.iter().all(|it| it.diagonal_dp));
+}

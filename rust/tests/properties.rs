@@ -103,7 +103,8 @@ fn prop_scheduler_respects_random_dags() {
             SchedulingPolicy::Fifo,
             SchedulingPolicy::Lifo,
             SchedulingPolicy::CriticalPath,
-        ][sweep.usize_in(0, 2)];
+            SchedulingPolicy::PrecisionFrontier,
+        ][sweep.usize_in(0, 3)];
         let mut g: TaskGraph<usize> = TaskGraph::new();
         let mut edges: Vec<(usize, usize)> = Vec::new();
         for t in 0..ntasks {

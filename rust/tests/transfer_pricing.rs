@@ -1,0 +1,185 @@
+//! Per-tile transfer pricing on the realized `PrecisionMap` — the
+//! acceptance tests for threading the map through the Fig. 5 (device)
+//! and Fig. 6 (network) models.
+//!
+//! The load-bearing claim: replaying the *same* plan graph under an
+//! adaptive map prices strictly fewer transferred bytes than under an
+//! all-f64 map, and the delta is exactly the map's per-tile byte
+//! savings — the volume effect the paper's speedups come from.  Plus
+//! property tests for the LRU device model: monotone transfer volume in
+//! device memory, `prefetch_overfetch = 1.0` charging demand misses
+//! only, and an all-f64 map reproducing the DP(100%) volume exactly.
+
+use mpcholesky::matern::matern_matrix;
+use mpcholesky::prelude::*;
+use mpcholesky::scheduler::datamove::{self, DeviceModel};
+use mpcholesky::scheduler::distributed::{self, ClusterModel};
+use mpcholesky::scheduler::{Access, TaskCost, TaskGraph};
+use mpcholesky::tile::{DenseMatrix, TileId};
+
+/// The adaptive.rs reference setup: 1024 Morton-ordered sites, nb = 128
+/// (p = 8), tolerance 1e-8 — a map known to demote off-diagonal tiles.
+fn adaptive_setup() -> (usize, usize, PrecisionMap, CholeskyPlan) {
+    let n = 1024;
+    let nb = 128;
+    let p = n / nb;
+    let tol = 1e-8;
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 42,
+        gen_nb: nb,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = DenseMatrix::from_vec(
+        n,
+        matern_matrix(&field.locations, &field.theta, Metric::Euclidean, 1e-8),
+    )
+    .unwrap();
+    let tiles = TileMatrix::from_dense(&a, nb).unwrap();
+    let map = PrecisionMap::adaptive(&tiles, tol);
+    assert!(
+        map.census().dp < p * (p + 1) / 2,
+        "setup must demote something: {}",
+        map.label()
+    );
+    let variant = Variant::Adaptive { tolerance: tol };
+    let plan = CholeskyPlan::build_with_map(p, nb, variant, map.clone(), true);
+    (p, nb, map, plan)
+}
+
+/// Device with memory far beyond the working set and no overfetch: every
+/// distinct tile is loaded exactly once and nothing is ever evicted, so
+/// the demand volume is exactly the sum of stored tile bytes.
+fn ample_device() -> DeviceModel {
+    let mut dev = DeviceModel::v100();
+    dev.prefetch_overfetch = 1.0;
+    dev
+}
+
+#[test]
+fn datamove_adaptive_map_saves_exactly_the_per_tile_bytes() {
+    let (p, nb, map, plan) = adaptive_setup();
+    let dev = ample_device();
+    let dp_map = PrecisionMap::uniform(p, Precision::F64);
+
+    let rep_ad = datamove::simulate(&plan.graph, &dev, nb, &map);
+    let rep_dp = datamove::simulate(&plan.graph, &dev, nb, &dp_map);
+
+    // same plan, same misses — only the priced bytes differ
+    assert_eq!(rep_ad.transfers, rep_dp.transfers);
+    assert!(
+        rep_ad.demand_bytes < rep_dp.demand_bytes,
+        "adaptive map must move strictly fewer bytes: {} !< {}",
+        rep_ad.demand_bytes,
+        rep_dp.demand_bytes
+    );
+    // the delta is exactly the map's storage saving over the triangle
+    let expected = (dp_map.storage_bytes(nb) - map.storage_bytes(nb)) as f64;
+    assert!(expected > 0.0);
+    assert_eq!(rep_dp.demand_bytes - rep_ad.demand_bytes, expected);
+}
+
+#[test]
+fn distributed_adaptive_map_saves_exactly_the_per_message_bytes() {
+    let (p, nb, map, plan) = adaptive_setup();
+    let cluster = ClusterModel::shaheen(4);
+    let dp_map = PrecisionMap::uniform(p, Precision::F64);
+
+    let rep_ad = distributed::simulate(&plan.graph, &cluster, nb, &map);
+    let rep_dp = distributed::simulate(&plan.graph, &cluster, nb, &dp_map);
+
+    // message counts are an ownership/DAG property, independent of the map
+    assert_eq!(rep_ad.messages, rep_dp.messages);
+    assert_eq!(rep_ad.per_tile_messages, rep_dp.per_tile_messages);
+    assert!(rep_ad.messages > 0, "a p=8 plan on 4 nodes must communicate");
+
+    let mut expected = 0.0f64;
+    for (t, &m) in &rep_dp.per_tile_messages {
+        let saved = 8 - map.get(t.i, t.j).bytes();
+        expected += (m * saved * nb * nb) as f64;
+    }
+    assert!(
+        expected > 0.0,
+        "at least one demoted tile must cross the network ({})",
+        map.label()
+    );
+    assert_eq!(rep_dp.total_comm_bytes - rep_ad.total_comm_bytes, expected);
+    assert!(rep_ad.total_comm_bytes < rep_dp.total_comm_bytes);
+}
+
+#[test]
+fn datamove_all_f64_map_reproduces_dp100_volume_exactly() {
+    let nb = 128;
+    let p = 8;
+    let plan = CholeskyPlan::build(p, nb, Variant::FullDp, true);
+    let dev = ample_device();
+    let rep = datamove::simulate(&plan.graph, &dev, nb, &PrecisionMap::uniform(p, Precision::F64));
+    let tiles = p * (p + 1) / 2;
+    // each tile loads once, nothing evicts, nothing writes back
+    assert_eq!(rep.transfers, tiles);
+    assert_eq!(rep.demand_bytes, (tiles * nb * nb * 8) as f64);
+    assert_eq!(rep.moved_bytes, rep.demand_bytes, "overfetch 1.0 = demand misses only");
+}
+
+struct ReadTask;
+impl TaskCost for ReadTask {
+    fn flops(&self) -> f64 {
+        1.0
+    }
+    fn precision(&self) -> Precision {
+        Precision::F64
+    }
+}
+
+#[test]
+fn datamove_transfer_bytes_monotone_in_device_memory() {
+    // read-only pseudo-random reuse pattern over 12 tiles: LRU is a
+    // stack algorithm, so misses (and with them transfer bytes) must be
+    // non-increasing as device memory grows
+    let nb = 64usize;
+    let tile_bytes = nb * nb * 8;
+    let mut g: TaskGraph<ReadTask> = TaskGraph::new();
+    let mut state = 0xabcdef12345u64;
+    for _ in 0..300 {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let t = ((state >> 33) as usize) % 12;
+        g.submit(ReadTask, vec![(TileId::new(t, t), Access::Read)]);
+    }
+    let map = PrecisionMap::uniform(12, Precision::F64);
+    let mut prev = f64::INFINITY;
+    for tiles_cap in 1..=13usize {
+        let mut dev = DeviceModel::v100();
+        dev.prefetch_overfetch = 1.0;
+        dev.gpu_mem_bytes = tiles_cap * tile_bytes;
+        let rep = datamove::simulate(&g, &dev, nb, &map);
+        assert!(
+            rep.demand_bytes <= prev,
+            "demand grew with memory: cap={tiles_cap} tiles, {} > {prev}",
+            rep.demand_bytes
+        );
+        prev = rep.demand_bytes;
+    }
+}
+
+#[test]
+fn datamove_plan_replay_monotone_between_extreme_capacities() {
+    // on a real mixed plan: ample memory is a lower bound (each tile
+    // once), one-tile memory an upper bound (every touch misses)
+    let nb = 64;
+    let p = 8;
+    let plan = CholeskyPlan::build(p, nb, Variant::MixedPrecision { diag_thick: 2 }, true);
+    let ample = ample_device();
+    let mut tiny = ample_device();
+    tiny.gpu_mem_bytes = nb * nb * 8; // exactly one DP tile
+    let big = datamove::simulate(&plan.graph, &ample, nb, &plan.map);
+    let small = datamove::simulate(&plan.graph, &tiny, nb, &plan.map);
+    assert!(
+        big.demand_bytes <= small.demand_bytes,
+        "{} !<= {}",
+        big.demand_bytes,
+        small.demand_bytes
+    );
+    assert!(big.transfers <= small.transfers);
+}
