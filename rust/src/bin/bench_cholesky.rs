@@ -12,17 +12,20 @@
 //!
 //! Flags: `--n N` (default 1024), `--nb LIST` (comma-separated, default
 //! `128`), `--reps R` (default 3), `--workers W` (default: all cores),
-//! `--policy fifo|lifo|cp|pf` (default `cp`; `pf` = precision-frontier,
-//! which orders ready tasks by critical-path height then cheapest
-//! storage precision), `--json [PATH]` (default path
-//! `BENCH_cholesky.json`).
+//! `--policy fifo|lifo|cp|pf` (default `pf` = precision-frontier, the
+//! promoted default policy, which orders ready tasks by critical-path
+//! height then cheapest storage precision), `--fused` (lower trailing
+//! updates as left-looking `GemmBatch` tasks instead of per-step
+//! gemms), `--json [PATH]` (default path `BENCH_cholesky.json`).
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::time::Instant;
 
 use mpcholesky::bench::Table;
-use mpcholesky::cholesky::{generate_covariance, CholeskyPlan, GenContext, TileExecutor};
+use mpcholesky::cholesky::{
+    generate_covariance, CholeskyPlan, GenContext, PlanOptions, TileExecutor,
+};
 use mpcholesky::prelude::*;
 use mpcholesky::scheduler::datamove::{self, DeviceModel};
 use mpcholesky::scheduler::ExecutionTrace;
@@ -43,15 +46,26 @@ struct CaseResult {
     /// counts) cover the factorization graph only — its generation
     /// phase runs as a separate untraced graph inside the same timer.
     gen_fused: bool,
+    /// Whether the plan's trailing updates ran as fused GemmBatch tasks.
+    fused_gemm: bool,
     /// Conversion-protocol task counts of the executed plan.
     conversions: ConversionCounts,
+    /// Nanoseconds the run spent unpacking packed-bf16 tiles (decode
+    /// cache fills + fallback unpacks) — distinguishes decode work from
+    /// the scheduler idle time reported next to it.
+    decode_ns: u64,
+    /// Number of packed-bf16 tile unpacks the run performed.
+    bf16_unpacks: u64,
     /// Demand-miss bytes of replaying the plan on a V100 model with
-    /// per-tile pricing on the realized precision map.
+    /// per-tile pricing on the realized precision map, conversion-task
+    /// bytes priced inside the same stream.
     modeled_transfer_bytes: f64,
 }
 
 /// One traced generate+factorize run; returns wall seconds, the lowered
-/// plan, the execution trace and the post-run resident bytes.
+/// plan, the execution trace (decode counters folded in), the post-run
+/// resident bytes, and the run's bf16 unpack count.
+#[allow(clippy::type_complexity)]
 fn traced_run(
     variant: Variant,
     locs: &[Location],
@@ -59,7 +73,8 @@ fn traced_run(
     n: usize,
     nb: usize,
     sched: &Scheduler,
-) -> Result<(f64, CholeskyPlan, ExecutionTrace, usize)> {
+    opts: PlanOptions,
+) -> Result<(f64, CholeskyPlan, ExecutionTrace, usize, u64)> {
     let p = n / nb;
     let mut tiles = TileMatrix::zeros(n, nb)?;
     let t0 = Instant::now();
@@ -78,7 +93,7 @@ fn traced_run(
         )?;
         let map = variant.precision_map(p, Some(&tiles))?;
         tiles.apply_precision_map(&map);
-        (CholeskyPlan::build_with_map(p, nb, variant, map, false), false)
+        (CholeskyPlan::build_with_opts(p, nb, variant, map, false, opts), false)
     } else {
         let map = variant.precision_map(p, None)?;
         if !matches!(variant, Variant::Dst { .. }) {
@@ -86,7 +101,7 @@ fn traced_run(
             // up front, generation writes it directly
             tiles.apply_precision_map(&map);
         }
-        (CholeskyPlan::build_with_map(p, nb, variant, map, true), true)
+        (CholeskyPlan::build_with_opts(p, nb, variant, map, true, opts), true)
     };
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let mut exec = TileExecutor::new(&tiles, &NativeBackend);
@@ -98,10 +113,12 @@ fn traced_run(
             nugget: 1e-8,
         });
     }
-    let trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
+    let mut trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
     let wall = t0.elapsed().as_secs_f64();
+    trace.decode_ns = exec.stats.decode_ns();
+    let unpacks = exec.stats.bf16_unpacks();
     let resident = tiles.resident_bytes();
-    Ok((wall, plan, trace, resident))
+    Ok((wall, plan, trace, resident, unpacks))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -115,21 +132,29 @@ fn bench_case(
     workers: usize,
     reps: usize,
     policy: SchedulingPolicy,
+    opts: PlanOptions,
 ) -> Result<CaseResult> {
     let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true });
     // keep every rep and report ALL metrics from the median-wall rep, so
-    // wall, idle and utilization describe the same run
+    // wall, idle, utilization and decode time describe the same run
     let mut runs = Vec::with_capacity(reps);
     for _ in 0..reps {
-        runs.push(traced_run(variant, locs, theta, n, nb, &sched)?);
+        runs.push(traced_run(variant, locs, theta, n, nb, &sched, opts)?);
     }
     runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let (median_s, plan, trace, resident) = runs.swap_remove(runs.len() / 2);
+    let (median_s, plan, trace, resident, unpacks) = runs.swap_remove(runs.len() / 2);
     let total_flops = plan.total_flops();
-    // analytic transfer volume of this plan on a V100, priced per tile
-    // at the realized map's stored bytes
-    let modeled =
-        datamove::simulate(&plan.graph, &DeviceModel::v100(), nb, &plan.map).demand_bytes;
+    // analytic transfer volume of this plan on a V100: per-tile pricing
+    // at the realized map's stored bytes, conversion-task bytes priced
+    // inside the same stream
+    let modeled = datamove::simulate_with_conversions(
+        &plan.graph,
+        &DeviceModel::v100(),
+        nb,
+        &plan.map,
+        &plan.conversion_totals(),
+    )
+    .demand_bytes;
     Ok(CaseResult {
         key: key.to_string(),
         label: plan.map.label(),
@@ -143,7 +168,10 @@ fn bench_case(
         idle_s: trace.idle_ns(workers) as f64 / 1e9,
         utilization: trace.utilization(workers),
         gen_fused: !matches!(variant, Variant::Adaptive { .. }),
+        fused_gemm: plan.options.fuse_gemm,
         conversions: plan.conversion_totals(),
+        decode_ns: trace.decode_ns,
+        bf16_unpacks: unpacks,
         modeled_transfer_bytes: modeled,
     })
 }
@@ -173,8 +201,10 @@ fn to_json(
             "    {{\"variant\": \"{}\", \"label\": \"{}\", \"nb\": {}, \"tasks\": {}, \
              \"total_flops\": {:.1}, \"median_s\": {:.6}, \"gflops\": {:.3}, \
              \"resident_bytes\": {}, \"full_dp_bytes\": {}, \"idle_s\": {:.6}, \
-             \"utilization\": {:.4}, \"gen_fused\": {}, \"conv_demotes\": {}, \
-             \"conv_promotes\": {}, \"conv_drops\": {}, \"modeled_transfer_bytes\": {:.1}}}",
+             \"utilization\": {:.4}, \"gen_fused\": {}, \"fused_gemm\": {}, \
+             \"conv_demotes\": {}, \"conv_promotes\": {}, \"conv_decodes\": {}, \
+             \"conv_drops\": {}, \"decode_ns\": {}, \"bf16_unpacks\": {}, \
+             \"modeled_transfer_bytes\": {:.1}}}",
             json_escape(&r.key),
             json_escape(&r.label),
             r.nb,
@@ -187,9 +217,13 @@ fn to_json(
             r.idle_s,
             r.utilization,
             r.gen_fused,
+            r.fused_gemm,
             r.conversions.demotes,
             r.conversions.promotes,
+            r.conversions.decodes,
             r.conversions.drops,
+            r.decode_ns,
+            r.bf16_unpacks,
             r.modeled_transfer_bytes
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
@@ -239,8 +273,9 @@ fn run() -> Result<()> {
                 SchedulingPolicy::NAMES
             ))
         })?,
-        None => SchedulingPolicy::CriticalPath,
+        None => SchedulingPolicy::default(),
     };
+    let opts = PlanOptions { fuse_gemm: flags.contains_key("fused") };
     let nb_list: Vec<usize> = flags
         .get("nb")
         .map(String::as_str)
@@ -270,7 +305,7 @@ fn run() -> Result<()> {
     let mut rows = Vec::new();
     let mut table = Table::new(&[
         "variant", "nb", "label", "tasks", "conv", "median s", "GFLOP/s", "resident MiB",
-        "model xfer MiB", "idle s", "util",
+        "model xfer MiB", "idle s", "decode ms", "util",
     ]);
     for &nb in &nb_list {
         if n % nb != 0 {
@@ -278,7 +313,7 @@ fn run() -> Result<()> {
             continue;
         }
         for (key, variant) in &variants {
-            let r = bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy)?;
+            let r = bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy, opts)?;
             table.row(&[
                 r.key.clone(),
                 format!("{nb}"),
@@ -290,14 +325,16 @@ fn run() -> Result<()> {
                 format!("{:.2}", r.resident_bytes as f64 / (1024.0 * 1024.0)),
                 format!("{:.2}", r.modeled_transfer_bytes / (1024.0 * 1024.0)),
                 format!("{:.4}", r.idle_s),
+                format!("{:.3}", r.decode_ns as f64 / 1e6),
                 format!("{:.2}", r.utilization),
             ]);
             rows.push(r);
         }
     }
     println!(
-        "# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}, policy = {}",
-        policy.name()
+        "# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}, policy = {}, fused = {}",
+        policy.name(),
+        opts.fuse_gemm
     );
     table.print();
 

@@ -4,11 +4,23 @@
 //!
 //! Every codelet runs at its tile's *native* storage precision: an f32
 //! tile is solved and accumulated in its resident f32 buffer, a packed
-//! bf16 tile is unpacked into per-worker scratch, computed in f32 and
-//! repacked (MXU semantics).  Cross-precision operands are read through
+//! bf16 tile is computed in f32 with an unpack/repack at the kernel
+//! boundary (MXU semantics).  Cross-precision operands are read through
 //! the conversion views the plan materialized (`dconv2s`/`sconv2d`
-//! tasks) — there is no per-task promotion back to f64 anywhere on the
-//! compute path.
+//! tasks), and bf16 operands through the plan's per-step **decode
+//! cache** (`hconv2s` tasks fill [`TileSlot::f32_scratch`] once per
+//! step; every reduced-precision reader shares that one unpack, with
+//! thread-local scratch only as the fallback for views the plan did not
+//! materialize).  There is no per-task promotion back to f64 anywhere
+//! on the compute path.  [`KernelCall::GemmBatch`] tasks apply a whole
+//! left-looking update run against one target: the target is unpacked
+//! (bf16) at most once per batch and cross-precision operands are
+//! converted inline, since the step-scoped views of old panel columns
+//! are freed long before a batch runs.
+//!
+//! The executor keeps run-wide [`ExecStats`] (bf16 unpack count and
+//! nanoseconds) so decode work is distinguishable from scheduler idle
+//! time in the bench reports.
 //!
 //! Safety protocol: tile buffers are reached through
 //! [`TileMatrix::tile_ptr`]; the scheduler's DAG ordering guarantees
@@ -16,6 +28,8 @@
 //! reader/writer guards.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use crate::error::Result;
 use crate::kernels::TileBackend;
@@ -37,19 +51,54 @@ pub struct GenContext<'a> {
     pub nugget: f64,
 }
 
-/// Per-worker conversion scratch: unpack targets for packed-bf16
-/// operands and the f64 staging buffer for reduced-precision generation.
-/// Thread-local so the hot path never allocates.
+/// Per-worker conversion scratch: unpack/convert targets for
+/// cross-precision operands and the f64 staging buffer for
+/// reduced-precision generation.  Thread-local so the hot path never
+/// allocates.
 #[derive(Default)]
 struct Scratch {
     a32: Vec<f32>,
     b32: Vec<f32>,
     c32: Vec<f32>,
+    a64: Vec<f64>,
+    b64: Vec<f64>,
     gen64: Vec<f64>,
 }
 
 thread_local! {
     static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Run-wide decode counters, shared by every worker through the
+/// executor: how many packed-bf16 tile unpacks ran and how long they
+/// took.  The bench JSON surfaces both (`decode_ns`, `bf16_unpacks`) so
+/// decode-cache fills are distinguishable from scheduler idle time —
+/// and so the per-step decode cache's amortization (one unpack per tile
+/// per step instead of one per consumer task) is measurable.
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    decode_ns: AtomicU64,
+    bf16_unpacks: AtomicU64,
+}
+
+impl ExecStats {
+    /// Nanoseconds spent unpacking packed-bf16 tiles.
+    pub fn decode_ns(&self) -> u64 {
+        self.decode_ns.load(Ordering::Relaxed)
+    }
+
+    /// Number of packed-bf16 tile unpacks (to f32 or f64).
+    pub fn bf16_unpacks(&self) -> u64 {
+        self.bf16_unpacks.load(Ordering::Relaxed)
+    }
+}
+
+/// Time one bf16 unpack into the run-wide counters.
+fn decode_timed<F: FnOnce()>(stats: &ExecStats, f: F) {
+    let t0 = Instant::now();
+    f();
+    stats.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    stats.bf16_unpacks.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Grow-and-slice helper for scratch buffers.
@@ -61,20 +110,68 @@ fn resized<T: Copy + Default>(buf: &mut Vec<T>, n: usize) -> &mut [T] {
 }
 
 /// f32 view of an operand tile for reduced-precision compute: the native
-/// f32 buffer, an unpack of packed bf16 into `scratch`, or the plan's
-/// `dconv2s` view of an f64 tile.
-fn f32_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f32>, what: &str) -> &'a [f32] {
+/// f32 buffer, the plan's per-step decode cache (`hconv2s` view) of a
+/// packed-bf16 tile — falling back to a counted unpack into thread
+/// scratch when the plan materialized no view — or the plan's `dconv2s`
+/// view of an f64 tile.
+fn f32_view<'a>(
+    slot: &'a TileSlot,
+    scratch: &'a mut Vec<f32>,
+    stats: &ExecStats,
+    what: &str,
+) -> &'a [f32] {
     match &slot.buf {
         TileBuf::F32(v) => v,
         TileBuf::Bf16(bits) => {
+            if let Some(cached) = slot.f32_scratch.as_deref() {
+                return cached;
+            }
             let out = resized(scratch, bits.len());
-            convert::unpack_bf16(bits, &mut *out);
+            decode_timed(stats, || convert::unpack_bf16(bits, &mut *out));
             out
         }
         TileBuf::F64(_) => slot
             .f32_scratch
             .as_deref()
             .unwrap_or_else(|| panic!("{what}: f64 tile lacks its dconv2s view (plan bug)")),
+    }
+}
+
+/// f64 view of a batch operand, converted inline (batches outlive the
+/// per-step conversion views, so they never rely on plan scratch):
+/// native f64 directly, f32 promoted exactly, packed bf16 unpacked —
+/// the same conversions the plan's `sconv2d` views apply, so fused and
+/// unfused plans see bit-identical operand values.
+fn f64_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f64>, stats: &ExecStats) -> &'a [f64] {
+    match &slot.buf {
+        TileBuf::F64(v) => v,
+        TileBuf::F32(v) => {
+            scratch.resize(v.len(), 0.0);
+            convert::promote(v, scratch);
+            scratch
+        }
+        TileBuf::Bf16(bits) => {
+            scratch.resize(bits.len(), 0.0);
+            decode_timed(stats, || convert::unpack_bf16_to_f64(bits, &mut scratch[..]));
+            scratch
+        }
+    }
+}
+
+/// f32 view of a batch operand, converted inline (see [`f64_op_view`]).
+fn f32_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f32>, stats: &ExecStats) -> &'a [f32] {
+    match &slot.buf {
+        TileBuf::F32(v) => v,
+        TileBuf::F64(v) => {
+            scratch.resize(v.len(), 0.0);
+            convert::demote(v, scratch);
+            scratch
+        }
+        TileBuf::Bf16(bits) => {
+            scratch.resize(bits.len(), 0.0);
+            decode_timed(stats, || convert::unpack_bf16(bits, &mut scratch[..]));
+            scratch
+        }
     }
 }
 
@@ -99,26 +196,31 @@ fn demote_view(slot: &mut TileSlot, nn: usize) {
 }
 
 /// `sconv2d`: refresh the f64 conversion view of a reduced tile.
-fn promote_view(slot: &mut TileSlot, nn: usize) {
+fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) {
     let TileSlot { buf, f64_scratch, .. } = slot;
     let dst = f64_scratch.get_or_insert_with(|| vec![0.0; nn]);
     match buf {
         TileBuf::F32(v) => convert::promote(v, dst),
-        TileBuf::Bf16(bits) => convert::unpack_bf16_to_f64(bits, dst),
+        TileBuf::Bf16(bits) => {
+            decode_timed(stats, || convert::unpack_bf16_to_f64(bits, &mut dst[..]))
+        }
         TileBuf::F64(_) => unreachable!("sconv2d scheduled on an f64 tile (plan bug)"),
     }
 }
 
-/// Stateless executor: all mutability lives in the tile matrix.
+/// Executor: all tile mutability lives in the tile matrix; the executor
+/// itself carries only the run-wide (atomic) decode counters.
 pub struct TileExecutor<'a, B: TileBackend + ?Sized> {
     pub tiles: &'a TileMatrix,
     pub backend: &'a B,
     pub gen: Option<GenContext<'a>>,
+    /// bf16 decode counters accumulated across the run (all workers).
+    pub stats: ExecStats,
 }
 
 impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
     pub fn new(tiles: &'a TileMatrix, backend: &'a B) -> Self {
-        Self { tiles, backend, gen: None }
+        Self { tiles, backend, gen: None, stats: ExecStats::default() }
     }
 
     pub fn with_generation(mut self, gen: GenContext<'a>) -> Self {
@@ -200,7 +302,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                             TileBuf::F32(a) => self.backend.potrf_f32(a, nb, k * nb),
                             TileBuf::Bf16(bits) => {
                                 let a = resized(&mut scr.a32, nn);
-                                convert::unpack_bf16(bits, &mut *a);
+                                decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *a));
                                 let r = self.backend.potrf_f32(a, nb, k * nb);
                                 convert::pack_bf16(&*a, bits);
                                 r
@@ -216,7 +318,18 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         Ok(())
                     }
                     KernelCall::PromoteTile { i, k } => {
-                        promote_view(tm.tile_ptr(TileId::new(i, k)), nn);
+                        promote_view(tm.tile_ptr(TileId::new(i, k)), nn, &self.stats);
+                        Ok(())
+                    }
+                    KernelCall::DecodeBf16 { i, k } => {
+                        // per-step decode cache fill: one unpack serves
+                        // every reduced-precision reader of the tile
+                        // this step (freed by the step's DropScratch)
+                        let slot = tm.tile_ptr(TileId::new(i, k));
+                        let TileSlot { buf, f32_scratch, .. } = slot;
+                        let bits = buf.as_bf16();
+                        let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
+                        decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut dst[..]));
                         Ok(())
                     }
                     KernelCall::DropScratch { i, k } => {
@@ -232,7 +345,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                     KernelCall::TrsmSp { i, k } => {
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        let lv = f32_view(l, &mut scr.a32, "strsm");
+                        let lv = f32_view(l, &mut scr.a32, &self.stats, "strsm");
                         // the result stays resident in f32 — no promotion
                         self.backend.trsm_f32(lv, b.buf.as_f32_mut(), nb);
                         Ok(())
@@ -241,10 +354,10 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // SSIX third level: f32 compute, bf16 storage
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        let lv = f32_view(l, &mut scr.a32, "htrsm");
+                        let lv = f32_view(l, &mut scr.a32, &self.stats, "htrsm");
                         let bits = b.buf.as_bf16_mut();
                         let bv = resized(&mut scr.b32, nn);
-                        convert::unpack_bf16(bits, &mut *bv);
+                        decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *bv));
                         self.backend.trsm_f32(lv, bv, nb);
                         convert::pack_bf16(&*bv, bits);
                         Ok(())
@@ -257,13 +370,13 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 self.backend.syrk_f64(cb, f64_view(a, "dsyrk"), nb);
                             }
                             TileBuf::F32(cb) => {
-                                let av = f32_view(a, &mut scr.a32, "ssyrk");
+                                let av = f32_view(a, &mut scr.a32, &self.stats, "ssyrk");
                                 self.backend.syrk_f32(cb, av, nb);
                             }
                             TileBuf::Bf16(bits) => {
-                                let av = f32_view(a, &mut scr.a32, "hsyrk");
+                                let av = f32_view(a, &mut scr.a32, &self.stats, "hsyrk");
                                 let cv = resized(&mut scr.c32, nn);
-                                convert::unpack_bf16(bits, &mut *cv);
+                                decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
                                 self.backend.syrk_f32(cv, av, nb);
                                 convert::pack_bf16(&*cv, bits);
                             }
@@ -286,8 +399,8 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let a = tm.tile_ptr(TileId::new(i, k));
                         let b = tm.tile_ptr(TileId::new(j, k));
                         let c = tm.tile_ptr(TileId::new(i, j));
-                        let av = f32_view(a, &mut scr.a32, "sgemm");
-                        let bv = f32_view(b, &mut scr.b32, "sgemm");
+                        let av = f32_view(a, &mut scr.a32, &self.stats, "sgemm");
+                        let bv = f32_view(b, &mut scr.b32, &self.stats, "sgemm");
                         // accumulate in the resident f32 buffer — no
                         // per-task promotion back to f64
                         self.backend.gemm_f32(c.buf.as_f32_mut(), av, bv, nb);
@@ -297,13 +410,57 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let a = tm.tile_ptr(TileId::new(i, k));
                         let b = tm.tile_ptr(TileId::new(j, k));
                         let c = tm.tile_ptr(TileId::new(i, j));
-                        let av = f32_view(a, &mut scr.a32, "hgemm");
-                        let bv = f32_view(b, &mut scr.b32, "hgemm");
+                        let av = f32_view(a, &mut scr.a32, &self.stats, "hgemm");
+                        let bv = f32_view(b, &mut scr.b32, &self.stats, "hgemm");
                         let bits = c.buf.as_bf16_mut();
                         let cv = resized(&mut scr.c32, nn);
-                        convert::unpack_bf16(bits, &mut *cv);
+                        decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
                         self.backend.gemm_f32(cv, av, bv, nb);
                         convert::pack_bf16(&*cv, bits);
+                        Ok(())
+                    }
+                    KernelCall::GemmBatch { i, j, k0, k1, .. } => {
+                        // fused left-looking run: every rank-nb update of
+                        // panel steps k0..k1 lands on target (i, j) in
+                        // ascending-k order (the unfused order, so DP and
+                        // f32 targets are bit-identical to unfused
+                        // plans); bf16 targets unpack/repack once per
+                        // batch instead of once per step.  Operands are
+                        // converted inline — their step-scoped views are
+                        // long freed by the time a batch runs.
+                        let c = tm.tile_ptr(TileId::new(i, j));
+                        match &mut c.buf {
+                            TileBuf::F64(cb) => {
+                                for k in k0..k1 {
+                                    let a = tm.tile_ptr(TileId::new(i, k));
+                                    let b = tm.tile_ptr(TileId::new(j, k));
+                                    let av = f64_op_view(a, &mut scr.a64, &self.stats);
+                                    let bv = f64_op_view(b, &mut scr.b64, &self.stats);
+                                    self.backend.gemm_f64(cb, av, bv, nb);
+                                }
+                            }
+                            TileBuf::F32(cb) => {
+                                for k in k0..k1 {
+                                    let a = tm.tile_ptr(TileId::new(i, k));
+                                    let b = tm.tile_ptr(TileId::new(j, k));
+                                    let av = f32_op_view(a, &mut scr.a32, &self.stats);
+                                    let bv = f32_op_view(b, &mut scr.b32, &self.stats);
+                                    self.backend.gemm_f32(cb, av, bv, nb);
+                                }
+                            }
+                            TileBuf::Bf16(bits) => {
+                                let cv = resized(&mut scr.c32, nn);
+                                decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
+                                for k in k0..k1 {
+                                    let a = tm.tile_ptr(TileId::new(i, k));
+                                    let b = tm.tile_ptr(TileId::new(j, k));
+                                    let av = f32_op_view(a, &mut scr.a32, &self.stats);
+                                    let bv = f32_op_view(b, &mut scr.b32, &self.stats);
+                                    self.backend.gemm_f32(cv, av, bv, nb);
+                                }
+                                convert::pack_bf16(&*cv, bits);
+                            }
+                        }
                         Ok(())
                     }
                 }

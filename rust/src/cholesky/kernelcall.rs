@@ -38,6 +38,11 @@ pub enum KernelCall {
     /// `sconv2d` at a consumer boundary: materialize the f64 scratch view
     /// of a reduced panel tile for this step's DP `syrk`/`gemm` readers.
     PromoteTile { i: usize, k: usize },
+    /// Per-step bf16 decode cache fill: unpack packed-bf16 tile (i, k)
+    /// into its f32 conversion scratch once, for *all* of the step's
+    /// reduced-precision readers (replaces one thread-local unpack per
+    /// consumer task).  Freed by the step's `DropScratch`.
+    DecodeBf16 { i: usize, k: usize },
     /// Free tile (i, k)'s conversion scratch at the end of step k (keeps
     /// the transient footprint O(p) tiles).
     DropScratch { i: usize, k: usize },
@@ -54,6 +59,16 @@ pub enum KernelCall {
     /// Paper SSIX third level: `sgemm` with a packed-bf16 target
     /// (f32 accumulate — MXU semantics), repacked through bf16.
     GemmHp { i: usize, j: usize, k: usize },
+    /// Fused (left-looking) trailing update: apply the rank-nb GEMM
+    /// updates of every panel step in `k0..k1` to target tile (i, j) in
+    /// one task, in ascending-k order — the same floating-point sequence
+    /// as the unfused per-step codelets, so DP/F32 targets are
+    /// bit-identical to unfused plans (bf16 targets round through
+    /// storage once per batch instead of once per step, strictly fewer
+    /// roundings).  `prec` is the target tile's storage precision.
+    /// Emitted by `CholeskyPlan::build_fused` so dependency-counter and
+    /// ready-queue traffic scale with tiles, not rank-nb updates.
+    GemmBatch { i: usize, j: usize, k0: usize, k1: usize, prec: Precision },
 }
 
 impl KernelCall {
@@ -65,7 +80,8 @@ impl KernelCall {
             KernelCall::PotrfDp { .. } => flops::potrf(nb),
             KernelCall::DemoteDiag { .. }
             | KernelCall::DemoteTile { .. }
-            | KernelCall::PromoteTile { .. } => (nb * nb) as f64,
+            | KernelCall::PromoteTile { .. }
+            | KernelCall::DecodeBf16 { .. } => (nb * nb) as f64,
             KernelCall::DropScratch { .. } => 0.0,
             KernelCall::TrsmDp { .. }
             | KernelCall::TrsmSp { .. }
@@ -74,6 +90,7 @@ impl KernelCall {
             KernelCall::GemmDp { .. }
             | KernelCall::GemmSp { .. }
             | KernelCall::GemmHp { .. } => flops::gemm(nb),
+            KernelCall::GemmBatch { k0, k1, .. } => (k1 - k0) as f64 * flops::gemm(nb),
         }
     }
 
@@ -83,6 +100,7 @@ impl KernelCall {
         match self {
             KernelCall::TrsmSp { .. } | KernelCall::GemmSp { .. } => Precision::F32,
             KernelCall::TrsmHp { .. } | KernelCall::GemmHp { .. } => Precision::Bf16,
+            KernelCall::GemmBatch { prec, .. } => *prec,
             _ => Precision::F64,
         }
     }
@@ -97,12 +115,16 @@ impl KernelCall {
             KernelCall::TrsmSp { .. } => "strsm",
             KernelCall::DemoteTile { .. } => "dconv2s",
             KernelCall::PromoteTile { .. } => "sconv2d",
+            KernelCall::DecodeBf16 { .. } => "hconv2s",
             KernelCall::DropScratch { .. } => "free",
             KernelCall::SyrkDp { .. } => "dsyrk",
             KernelCall::GemmDp { .. } => "dgemm",
             KernelCall::GemmSp { .. } => "sgemm",
             KernelCall::TrsmHp { .. } => "htrsm",
             KernelCall::GemmHp { .. } => "hgemm",
+            KernelCall::GemmBatch { prec: Precision::F64, .. } => "dgemmb",
+            KernelCall::GemmBatch { prec: Precision::F32, .. } => "sgemmb",
+            KernelCall::GemmBatch { prec: Precision::Bf16, .. } => "hgemmb",
         }
     }
 }
@@ -152,6 +174,24 @@ mod tests {
         assert_eq!(KernelCall::DropScratch { i: 2, k: 0 }.flops_at(nb), 0.0);
         assert_eq!(KernelCall::PromoteTile { i: 2, k: 0 }.name(), "sconv2d");
         assert_eq!(KernelCall::DropScratch { i: 2, k: 0 }.name(), "free");
+    }
+
+    #[test]
+    fn batch_and_decode_calls_report_cost_and_names() {
+        let nb = 64;
+        let b = KernelCall::GemmBatch { i: 5, j: 3, k0: 0, k1: 3, prec: Precision::F32 };
+        assert_eq!(b.flops_at(nb), 3.0 * 2.0 * 64f64.powi(3));
+        assert_eq!(b.precision(), Precision::F32);
+        assert_eq!(b.name(), "sgemmb");
+        assert_eq!(
+            KernelCall::GemmBatch { i: 5, j: 3, k0: 1, k1: 3, prec: Precision::F64 }.name(),
+            "dgemmb"
+        );
+        let d = KernelCall::DecodeBf16 { i: 2, k: 1 };
+        assert_eq!(d.flops_at(nb), (nb * nb) as f64);
+        // conversion tasks rank as f64 for the PrecisionFrontier tie-break
+        assert_eq!(d.precision(), Precision::F64);
+        assert_eq!(d.name(), "hconv2s");
     }
 
     #[test]

@@ -23,9 +23,9 @@ pub mod kernelcall;
 pub mod plan;
 pub mod solve;
 
-pub use exec::{GenContext, TileExecutor};
+pub use exec::{ExecStats, GenContext, TileExecutor};
 pub use kernelcall::{KernelCall, SizedCall};
-pub use plan::{CholeskyPlan, ConversionCounts};
+pub use plan::{CholeskyPlan, ConversionCounts, PlanOptions};
 pub use solve::{log_determinant, solve_lower, solve_lower_transposed};
 
 use crate::error::Result;
@@ -226,11 +226,27 @@ pub fn factorize_tiles_with_map(
     backend: &dyn TileBackend,
     sched: &Scheduler,
 ) -> Result<CholeskyPlan> {
+    factorize_tiles_with_opts(tiles, variant, map, PlanOptions::default(), backend, sched)
+}
+
+/// [`factorize_tiles_with_map`] with explicit [`PlanOptions`] — e.g.
+/// `PlanOptions { fuse_gemm: true }` lowers the trailing updates as
+/// left-looking `GemmBatch` tasks (task count O(p^2) instead of O(p^3);
+/// bit-identical factors for f64/f32 targets, one storage rounding per
+/// batch instead of per step for bf16 targets).
+pub fn factorize_tiles_with_opts(
+    tiles: &mut TileMatrix,
+    variant: Variant,
+    map: PrecisionMap,
+    opts: PlanOptions,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<CholeskyPlan> {
     if map.p() != tiles.p() {
         crate::invalid_arg!("precision map order {} != tile matrix order {}", map.p(), tiles.p());
     }
     prepare_tiles(tiles, variant, &map);
-    let mut plan = CholeskyPlan::build_with_map(tiles.p(), tiles.nb(), variant, map, false);
+    let mut plan = CholeskyPlan::build_with_opts(tiles.p(), tiles.nb(), variant, map, false, opts);
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let executor = TileExecutor::new(tiles, backend);
     sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;

@@ -8,10 +8,20 @@
 //! With precision-native storage, the planner is also the single place
 //! conversions are decided: at each panel step it computes which step-k
 //! tiles are read across a precision boundary and emits exactly one
-//! `dlag2s`/`dconv2s` (f64 tile read by a reduced consumer) or `sconv2d`
-//! (reduced tile read by a DP consumer) per such tile, plus one
+//! `dlag2s`/`dconv2s` (f64 tile read by a reduced consumer), `sconv2d`
+//! (reduced tile read by a DP consumer) or `hconv2s` (packed-bf16 tile
+//! read by a reduced consumer — the per-step **decode cache**, unpacked
+//! once instead of once per consumer task) per such tile, plus one
 //! `DropScratch` at the end of the step to free the view.  Compute
 //! codelets never convert.
+//!
+//! [`CholeskyPlan::build_fused`] additionally replaces the per-step
+//! rank-nb `Gemm*` updates with one left-looking [`KernelCall::GemmBatch`]
+//! per output tile (per contiguous run of live panel steps), so task
+//! count — and with it dependency-counter and ready-queue traffic —
+//! scales with tiles instead of updates.  Batch tasks convert their
+//! cross-precision operands inline (the step-scoped conversion views a
+//! batch's early panels used are freed long before the batch runs).
 
 use crate::scheduler::{Access, TaskGraph};
 use crate::tile::{Precision, PrecisionCensus, PrecisionMap, TileId};
@@ -30,21 +40,37 @@ pub struct ConversionCounts {
     pub demotes: usize,
     /// `sconv2d` tasks (f64 view of a reduced tile).
     pub promotes: usize,
+    /// `hconv2s` tasks (per-step f32 decode of a packed-bf16 tile).
+    pub decodes: usize,
     /// `DropScratch` frees (one per converted tile per step).
     pub drops: usize,
 }
 
 impl ConversionCounts {
-    /// All conversion-protocol tasks (demotes + promotes + drops).
+    /// All conversion-protocol tasks (demotes + promotes + decodes +
+    /// drops).
     pub fn total(&self) -> usize {
-        self.demotes + self.promotes + self.drops
+        self.demotes + self.promotes + self.decodes + self.drops
     }
 
     fn add(&mut self, other: &ConversionCounts) {
         self.demotes += other.demotes;
         self.promotes += other.promotes;
+        self.decodes += other.decodes;
         self.drops += other.drops;
     }
+}
+
+/// Planner knobs for [`CholeskyPlan::build_with_opts`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanOptions {
+    /// Emit one left-looking [`KernelCall::GemmBatch`] per output tile
+    /// (per contiguous live panel-step run) instead of one right-looking
+    /// `Gemm*` task per (tile, step) — task count O(p^2) instead of
+    /// O(p^3).  DP/F32 targets produce bit-identical factors either way
+    /// (same ascending-k update order); bf16 targets round through
+    /// storage once per batch instead of once per step.
+    pub fuse_gemm: bool,
 }
 
 /// A lowered factorization: the task graph, the resolved per-tile
@@ -57,6 +83,8 @@ pub struct CholeskyPlan {
     pub variant: Variant,
     /// The per-tile precision assignment every codelet choice came from.
     pub map: PrecisionMap,
+    /// The planner knobs this plan was lowered with.
+    pub options: PlanOptions,
     /// Tasks per codelet kind, for bench tables.
     pub dp_flops: f64,
     pub sp_flops: f64,
@@ -66,13 +94,17 @@ pub struct CholeskyPlan {
 
 /// Record a cross-precision read of step-k tile `x` (row index; `x == k`
 /// is the diagonal): a DP consumer of a reduced tile needs the f64 view,
-/// a reduced consumer of an f64 tile needs the f32 view.
+/// a reduced consumer of an f64 tile needs the f32 view, and a reduced
+/// consumer of a packed-bf16 tile needs the decoded f32 view (the
+/// per-step decode cache — one `hconv2s` unpack shared by every reduced
+/// reader instead of one thread-local unpack per task).
 fn mark_boundary(
     op_prec: Precision,
     f64_compute: bool,
     x: usize,
     needs_f32: &mut [bool],
     needs_f64: &mut [bool],
+    needs_decode: &mut [bool],
 ) {
     if f64_compute {
         if op_prec != Precision::F64 {
@@ -80,6 +112,8 @@ fn mark_boundary(
         }
     } else if op_prec == Precision::F64 {
         needs_f32[x] = true;
+    } else if op_prec == Precision::Bf16 {
+        needs_decode[x] = true;
     }
 }
 
@@ -102,14 +136,41 @@ impl CholeskyPlan {
         Self::build_with_map(p, nb, variant, map, generate)
     }
 
-    /// Build the plan from an explicit [`PrecisionMap`] — the one entry
-    /// point every precision decision flows through.
+    /// Build the plan from an explicit [`PrecisionMap`] with the default
+    /// per-step (right-looking, unfused) trailing update.
     pub fn build_with_map(
         p: usize,
         nb: usize,
         variant: Variant,
         map: PrecisionMap,
         generate: bool,
+    ) -> Self {
+        Self::build_with_opts(p, nb, variant, map, generate, PlanOptions::default())
+    }
+
+    /// Build the plan with fused left-looking [`KernelCall::GemmBatch`]
+    /// trailing updates (one task per output tile per contiguous live
+    /// panel run) — see [`PlanOptions::fuse_gemm`].
+    pub fn build_fused(
+        p: usize,
+        nb: usize,
+        variant: Variant,
+        map: PrecisionMap,
+        generate: bool,
+    ) -> Self {
+        Self::build_with_opts(p, nb, variant, map, generate, PlanOptions { fuse_gemm: true })
+    }
+
+    /// Build the plan from an explicit [`PrecisionMap`] and
+    /// [`PlanOptions`] — the one entry point every precision decision
+    /// flows through.
+    pub fn build_with_opts(
+        p: usize,
+        nb: usize,
+        variant: Variant,
+        map: PrecisionMap,
+        generate: bool,
+        opts: PlanOptions,
     ) -> Self {
         assert_eq!(map.p(), p, "precision map order {} != plan order {p}", map.p());
         let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
@@ -149,6 +210,45 @@ impl CholeskyPlan {
 
         for k in 0..p {
             let mut conv = ConversionCounts::default();
+
+            // Fused trailing updates land at the *head* of the step that
+            // finalizes their target column: one left-looking GemmBatch
+            // per target tile (i, k) per contiguous run of live panel
+            // steps, applying the rank-nb updates in ascending-k order
+            // before this step's trsm overwrites the tile.  Batches
+            // convert cross-precision operands inline, so they take no
+            // part in the step's conversion-view analysis below.
+            if opts.fuse_gemm {
+                for i in (k + 1)..p {
+                    if !live(i, k) {
+                        continue;
+                    }
+                    let tprec = prec(i, k);
+                    let mut run_start: Option<usize> = None;
+                    for kk in 0..=k {
+                        let in_run = kk < k && live(i, kk) && live(k, kk);
+                        match (in_run, run_start) {
+                            (true, None) => run_start = Some(kk),
+                            (false, Some(s)) => {
+                                let mut acc = Vec::with_capacity(2 * (kk - s) + 1);
+                                for t in s..kk {
+                                    acc.push((TileId::new(i, t), Access::Read));
+                                    acc.push((TileId::new(k, t), Access::Read));
+                                }
+                                acc.push((TileId::new(i, k), Access::Write));
+                                submit(
+                                    &mut graph,
+                                    KernelCall::GemmBatch { i, j: k, k0: s, k1: kk, prec: tprec },
+                                    acc,
+                                );
+                                run_start = None;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+
             submit(
                 &mut graph,
                 KernelCall::PotrfDp { k },
@@ -158,29 +258,61 @@ impl CholeskyPlan {
             // Which step-k tiles (x, k) — x == k being the factored
             // diagonal — are read across a precision boundary this step?
             // Consumers: trsm reads the diagonal, syrk reads its panel
-            // tile into a diagonal target, gemm reads two panel tiles
-            // into a trailing target.  Compute precision == the target
-            // tile's storage precision.
+            // tile into a diagonal target, gemm (unfused plans only)
+            // reads two panel tiles into a trailing target.  Compute
+            // precision == the target tile's storage precision.
             let mut needs_f32 = vec![false; p];
             let mut needs_f64 = vec![false; p];
+            let mut needs_decode = vec![false; p];
             for i in (k + 1)..p {
                 if live(i, k) {
                     let f64c = prec(i, k) == Precision::F64;
-                    mark_boundary(prec(k, k), f64c, k, &mut needs_f32, &mut needs_f64);
+                    mark_boundary(
+                        prec(k, k),
+                        f64c,
+                        k,
+                        &mut needs_f32,
+                        &mut needs_f64,
+                        &mut needs_decode,
+                    );
                 }
             }
             for j in (k + 1)..p {
                 if live(j, k) {
                     let f64c = prec(j, j) == Precision::F64;
-                    mark_boundary(prec(j, k), f64c, j, &mut needs_f32, &mut needs_f64);
+                    mark_boundary(
+                        prec(j, k),
+                        f64c,
+                        j,
+                        &mut needs_f32,
+                        &mut needs_f64,
+                        &mut needs_decode,
+                    );
+                }
+                if opts.fuse_gemm {
+                    continue;
                 }
                 for i in (j + 1)..p {
                     if !live(i, j) || !live(i, k) || !live(j, k) {
                         continue;
                     }
                     let f64c = prec(i, j) == Precision::F64;
-                    mark_boundary(prec(i, k), f64c, i, &mut needs_f32, &mut needs_f64);
-                    mark_boundary(prec(j, k), f64c, j, &mut needs_f32, &mut needs_f64);
+                    mark_boundary(
+                        prec(i, k),
+                        f64c,
+                        i,
+                        &mut needs_f32,
+                        &mut needs_f64,
+                        &mut needs_decode,
+                    );
+                    mark_boundary(
+                        prec(j, k),
+                        f64c,
+                        j,
+                        &mut needs_f32,
+                        &mut needs_f64,
+                        &mut needs_decode,
+                    );
                 }
             }
 
@@ -199,6 +331,14 @@ impl CholeskyPlan {
                 submit(
                     &mut graph,
                     KernelCall::PromoteTile { i: k, k },
+                    vec![(TileId::new(k, k), Access::Write)],
+                );
+            }
+            if needs_decode[k] {
+                conv.decodes += 1;
+                submit(
+                    &mut graph,
+                    KernelCall::DecodeBf16 { i: k, k },
                     vec![(TileId::new(k, k), Access::Write)],
                 );
             }
@@ -238,6 +378,14 @@ impl CholeskyPlan {
                         vec![(TileId::new(i, k), Access::Write)],
                     );
                 }
+                if needs_decode[i] {
+                    conv.decodes += 1;
+                    submit(
+                        &mut graph,
+                        KernelCall::DecodeBf16 { i, k },
+                        vec![(TileId::new(i, k), Access::Write)],
+                    );
+                }
             }
 
             // lines 18-30: trailing update
@@ -251,6 +399,11 @@ impl CholeskyPlan {
                             (TileId::new(j, j), Access::Write),
                         ],
                     );
+                }
+                if opts.fuse_gemm {
+                    // trailing updates were emitted as GemmBatch tasks
+                    // at the head of each target's finalizing step
+                    continue;
                 }
                 for i in (j + 1)..p {
                     if !live(i, j) || !live(i, k) || !live(j, k) {
@@ -277,7 +430,7 @@ impl CholeskyPlan {
             // (the WAR edges from the step's readers order each drop
             // after the last consumer of its tile)
             for x in k..p {
-                if needs_f32[x] || needs_f64[x] {
+                if needs_f32[x] || needs_f64[x] || needs_decode[x] {
                     conv.drops += 1;
                     submit(
                         &mut graph,
@@ -298,7 +451,7 @@ impl CholeskyPlan {
             Precision::Bf16 => 2,
         });
 
-        Self { graph, p, nb, variant, map, dp_flops, sp_flops, step_conversions }
+        Self { graph, p, nb, variant, map, options: opts, dp_flops, sp_flops, step_conversions }
     }
 
     /// Total useful flops in the plan.
@@ -527,9 +680,31 @@ mod tests {
                 t.promotes,
                 count_kind(plan, |c| matches!(c, KernelCall::PromoteTile { .. }))
             );
+            assert_eq!(
+                t.decodes,
+                count_kind(plan, |c| matches!(c, KernelCall::DecodeBf16 { .. }))
+            );
             assert_eq!(t.drops, count_kind(plan, |c| matches!(c, KernelCall::DropScratch { .. })));
-            // every conversion view is freed exactly once within its step
-            assert_eq!(t.drops, t.demotes + t.promotes);
+            // every converted tile is freed exactly once within its step:
+            // drops == distinct (tile, step) pairs across the view tasks
+            // (a bf16 tile read by both DP and reduced consumers carries
+            // two views — sconv2d + hconv2s — under one drop)
+            let mut viewed = std::collections::HashSet::new();
+            for task in plan.graph.tasks() {
+                match task.payload.call {
+                    KernelCall::DemoteDiag { k } => {
+                        viewed.insert((k, k));
+                    }
+                    KernelCall::DemoteTile { i, k }
+                    | KernelCall::PromoteTile { i, k }
+                    | KernelCall::DecodeBf16 { i, k } => {
+                        viewed.insert((i, k));
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(t.drops, viewed.len());
+            assert!(t.drops <= t.demotes + t.promotes + t.decodes);
         }
         // full DP has no boundaries at all
         assert_eq!(plans[0].conversion_totals(), ConversionCounts::default());
@@ -657,10 +832,91 @@ mod tests {
                 KernelCall::TrsmSp { i, k } => assert_eq!(map.get(i, k), Precision::F32),
                 KernelCall::TrsmHp { i, k } => assert_eq!(map.get(i, k), Precision::Bf16),
                 KernelCall::TrsmDp { i, k } => assert_eq!(map.get(i, k), Precision::F64),
-                // demotes only make sense on f64 tiles, promotes on reduced
+                // demotes only make sense on f64 tiles, promotes on
+                // reduced, decodes on packed bf16
                 KernelCall::DemoteTile { i, k } => assert_eq!(map.get(i, k), Precision::F64),
                 KernelCall::PromoteTile { i, k } => assert_ne!(map.get(i, k), Precision::F64),
+                KernelCall::DecodeBf16 { i, k } => assert_eq!(map.get(i, k), Precision::Bf16),
                 _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn fused_plan_task_counts_scale_with_tiles() {
+        let p = 8;
+        let unfused = CholeskyPlan::build(p, 32, Variant::FullDp, false);
+        let map = PrecisionMap::uniform(p, Precision::F64);
+        let fused = CholeskyPlan::build_fused(p, 32, Variant::FullDp, map, false);
+        assert!(fused.options.fuse_gemm);
+        assert!(!unfused.options.fuse_gemm);
+        // one batch per target tile (i, j) with 1 <= j < i
+        assert_eq!(
+            count_kind(&fused, |c| matches!(c, KernelCall::GemmBatch { .. })),
+            (p - 1) * (p - 2) / 2
+        );
+        assert_eq!(count_kind(&fused, |c| matches!(c, KernelCall::GemmDp { .. })), 0);
+        // every (target, step) rank-nb update is covered exactly once
+        let mut updates = 0usize;
+        for t in fused.graph.tasks() {
+            if let KernelCall::GemmBatch { k0, k1, .. } = t.payload.call {
+                updates += k1 - k0;
+            }
+        }
+        assert_eq!(updates, p * (p - 1) * (p - 2) / 6);
+        // same useful flops either way (up to summation-order rounding
+        // of the inexact potrf term), fewer tasks
+        let rel = (fused.total_flops() - unfused.total_flops()).abs() / unfused.total_flops();
+        assert!(rel < 1e-12, "flop totals diverge: rel {rel}");
+        assert!(fused.graph.len() < unfused.graph.len());
+        fused.graph.assert_forward_edges();
+    }
+
+    #[test]
+    fn fused_dst_batches_cover_exactly_the_live_updates() {
+        use std::collections::HashSet;
+        let p = 8;
+        let variant = Variant::Dst { diag_thick: 3 };
+        let map = variant.precision_map(p, None).unwrap();
+        let fused = CholeskyPlan::build_fused(p, 16, variant, map, false);
+        fused.graph.assert_forward_edges();
+        let unfused = CholeskyPlan::build(p, 16, variant, false);
+        let mut fused_updates = HashSet::new();
+        for t in fused.graph.tasks() {
+            if let KernelCall::GemmBatch { i, j, k0, k1, .. } = t.payload.call {
+                for k in k0..k1 {
+                    assert!(fused_updates.insert((i, j, k)), "duplicate update ({i},{j},{k})");
+                }
+            }
+        }
+        let mut unfused_updates = HashSet::new();
+        for t in unfused.graph.tasks() {
+            if let KernelCall::GemmDp { i, j, k } = t.payload.call {
+                unfused_updates.insert((i, j, k));
+            }
+        }
+        assert_eq!(fused_updates, unfused_updates);
+    }
+
+    #[test]
+    fn fused_plans_emit_fewer_conversions() {
+        // with gemm readers out of the per-step boundary analysis, the
+        // band demotes that only fed sgemm consumers disappear
+        let p = 8;
+        let v = Variant::MixedPrecision { diag_thick: 2 };
+        let unfused = CholeskyPlan::build(p, 16, v, false);
+        let map = v.precision_map(p, None).unwrap();
+        let fused = CholeskyPlan::build_fused(p, 16, v, map, false);
+        assert!(
+            fused.conversion_totals().total() < unfused.conversion_totals().total(),
+            "fused {:?} !< unfused {:?}",
+            fused.conversion_totals(),
+            unfused.conversion_totals()
+        );
+        // batch precision always matches the target tile's storage
+        for t in fused.graph.tasks() {
+            if let KernelCall::GemmBatch { i, j, prec, .. } = t.payload.call {
+                assert_eq!(fused.map.get(i, j), prec);
             }
         }
     }

@@ -2,16 +2,50 @@
 //! (`potrf`, `trsm`, `syrk`, `gemm`), generic over f32/f64.
 //!
 //! These replace MKL/cuBLAS from the paper's testbed.  Layout is
-//! column-major `nb x nb` tiles.  All four kernels dispatch to an
-//! MR x NR register-blocked microkernel path when the tile size permits
-//! (`nb % MR == 0 && nb % NR == 0`), with the straightforward stride-1
-//! forms kept as any-size fallbacks *and* as the test oracles the
-//! blocked paths are verified against.  The inner loops are branch-free
-//! on dense data — no per-element zero tests — so LLVM vectorizes them.
+//! column-major `nb x nb` tiles.  The hot path is a BLIS-style **packed
+//! micro-kernel** design shared by all four kernels:
+//!
+//! * [`pack_a`] copies the row operand into contiguous `MR x depth`
+//!   micro-panels (element `(ii, k)` of panel `p` at `p*MR*depth + k*MR
+//!   + ii`), so the micro-kernel's A loads are unit-stride and each
+//!   cache line is fully consumed.
+//! * [`pack_bt`] copies the transposed column operand into contiguous
+//!   `NR x depth` micro-panels (element `(jj, k)` of panel `q` at
+//!   `q*NR*depth + k*NR + jj`), turning the `B(j, k)` broadcast loads
+//!   (stride `nb` in the naive loop) into unit-stride streams.
+//! * [`microkernel`] is the one generic MR x NR register kernel: it
+//!   accumulates `acc[jj][ii] += A(ii, k) * B(jj, k)` over a k range
+//!   with the accumulator held in registers, parameterized by the lead
+//!   dimension of either operand so it runs over packed panels *and*
+//!   directly over column-major storage (the `trsm`/`potrf` in-place
+//!   operands).
+//!
+//! Cache blocking: `MC x NC` blocks of C are swept per packed-panel
+//! residency so the A slab stays in L2 and each B micro-panel in L1;
+//! `KC` bounds the k-depth one register sweep covers.  Tile depths in
+//! this codebase satisfy `nb <= KC`, so every micro-tile of C is read
+//! and written exactly once per kernel call *and* the packed path
+//! accumulates each element's k-sum in exactly the oracle's order —
+//! packed `gemm`/`syrk`/`trsm`/`potrf` are **bit-identical** to their
+//! `*_simple` dot-product oracles in f64 and f32 (asserted across tile
+//! sizes in `rust/tests/packed_kernels.rs`).  Sizes that do not divide
+//! into MR x NR blocks (or exceed KC) take the stride-1 `*_simple`
+//! fallbacks, which double as the test oracles.
+//!
+//! Deliberate trade-off: the `*_simple` forms are k-inner dot loops
+//! (stride-nb loads), slower than the old k-outer axpy fallbacks —
+//! accepted because that summation order is what makes the packed path
+//! bit-testable against them, the fallback only runs for tile sizes no
+//! production config uses (nb not divisible by 8), and the only
+//! on-path user is `syrk`'s diagonal-straddling blocks (O(MR + NR) of
+//! nb rows of the tile's flops).
+//!
 //! What matters for reproducing the paper is that the f32 instantiation
 //! genuinely runs ~2x the f64 throughput (half the memory traffic, twice
 //! the SIMD lanes) — that hardware property is what the mixed-precision
 //! algorithm converts into its 1.6x speedup.
+
+use std::cell::RefCell;
 
 use crate::error::{Error, Result};
 
@@ -32,6 +66,14 @@ pub trait Scalar:
     const ZERO: Self;
     fn sqrt(self) -> Self;
     fn to_f64(self) -> f64;
+
+    /// Run `f` with this thread's packing buffers for `Self` — the
+    /// reusable backing store for [`pack_a`]/[`pack_bt`] micro-panels,
+    /// so the packed kernels never allocate on the hot path.
+    fn with_pack_buffers<R, F>(f: F) -> R
+    where
+        Self: Sized,
+        F: FnOnce(&mut Vec<Self>, &mut Vec<Self>) -> R;
 }
 
 impl Scalar for f64 {
@@ -43,6 +85,19 @@ impl Scalar for f64 {
     #[inline]
     fn to_f64(self) -> f64 {
         self
+    }
+    fn with_pack_buffers<R, F>(f: F) -> R
+    where
+        F: FnOnce(&mut Vec<f64>, &mut Vec<f64>) -> R,
+    {
+        thread_local! {
+            static BUFS: RefCell<(Vec<f64>, Vec<f64>)> = RefCell::new((Vec::new(), Vec::new()));
+        }
+        BUFS.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (a, b) = &mut *guard;
+            f(a, b)
+        })
     }
 }
 
@@ -56,109 +111,218 @@ impl Scalar for f32 {
     fn to_f64(self) -> f64 {
         self as f64
     }
+    fn with_pack_buffers<R, F>(f: F) -> R
+    where
+        F: FnOnce(&mut Vec<f32>, &mut Vec<f32>) -> R,
+    {
+        thread_local! {
+            static BUFS: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((Vec::new(), Vec::new()));
+        }
+        BUFS.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (a, b) = &mut *guard;
+            f(a, b)
+        })
+    }
 }
 
-/// Microkernel rows (vector dimension) and columns (register reuse).
-const MR: usize = 8;
-const NR: usize = 4;
+/// Micro-kernel rows (the vector dimension: MR contiguous C rows per
+/// register sweep) and columns (register reuse: each A load feeds NR
+/// accumulator columns).
+pub const MR: usize = 8;
+/// See [`MR`].
+pub const NR: usize = 4;
+/// Maximum k-depth one register sweep covers.  Tiles with `nb <= KC`
+/// (all practical tile sizes) accumulate each C element's full k-sum in
+/// registers before a single read-modify-write of C — which also makes
+/// the packed path bit-identical to the dot-product oracles.  Deeper
+/// tiles fall back to the `*_simple` forms.
+pub const KC: usize = 1024;
+/// C row-block per packed-A slab residency (multiple of MR): bounds the
+/// hot A micro-panels at `MC x nb` elements so they live in L2 while
+/// the NC column sweep reuses them.
+pub const MC: usize = 64;
+/// C column-block per sweep (multiple of NR): each `NR x nb` B
+/// micro-panel is reused across the whole MC row block from L1.
+pub const NC: usize = 256;
 
-/// k-block depth: bounds the live A/B slab at MR x KC + KC x NR per
-/// microkernel sweep so large tiles stay cache-resident (SSPerf iter 2).
-const KC: usize = 64;
-
-/// Does `nb` admit the register-blocked paths?
+/// Does `nb` admit the packed micro-kernel paths?
 #[inline]
 fn blockable(nb: usize) -> bool {
-    nb % MR == 0 && nb % NR == 0
+    nb % MR == 0 && nb % NR == 0 && nb <= KC
+}
+
+/// Pack the row operand into `MR x nb` micro-panels:
+/// `buf[p*MR*nb + k*MR + ii] = src[(p*MR + ii) + k*nb]`.
+fn pack_a<T: Scalar>(src: &[T], nb: usize, buf: &mut Vec<T>) {
+    debug_assert_eq!(src.len(), nb * nb);
+    debug_assert_eq!(nb % MR, 0);
+    buf.clear();
+    buf.resize(nb * nb, T::ZERO);
+    for p in 0..nb / MR {
+        let base = p * MR * nb;
+        let row0 = p * MR;
+        for k in 0..nb {
+            let s = &src[k * nb + row0..k * nb + row0 + MR];
+            buf[base + k * MR..base + k * MR + MR].copy_from_slice(s);
+        }
+    }
+}
+
+/// Pack the transposed column operand into `NR x nb` micro-panels:
+/// `buf[q*NR*nb + k*NR + jj] = src[(q*NR + jj) + k*nb]` — i.e. element
+/// `B^T(k, j)` of the `C -= A * B^T` update, laid out so the
+/// micro-kernel's NR broadcast loads per k step are contiguous.
+fn pack_bt<T: Scalar>(src: &[T], nb: usize, buf: &mut Vec<T>) {
+    debug_assert_eq!(src.len(), nb * nb);
+    debug_assert_eq!(nb % NR, 0);
+    buf.clear();
+    buf.resize(nb * nb, T::ZERO);
+    for q in 0..nb / NR {
+        let base = q * NR * nb;
+        let j0 = q * NR;
+        for k in 0..nb {
+            for jj in 0..NR {
+                buf[base + k * NR + jj] = src[j0 + jj + k * nb];
+            }
+        }
+    }
+}
+
+/// The one MR x NR register micro-kernel:
+/// `acc[jj][ii] += A(ii, k) * B(jj, k)` for `k` in `k0..k1`, where
+/// `A(ii, k) = xa[a_off + ii + k*lda]` and `B(jj, k) = xb[b_off + jj +
+/// k*ldb]`.  `lda`/`ldb` select packed panels (`MR`/`NR`) or direct
+/// column-major storage (`nb`); the accumulator stays in registers and
+/// each element's partial sums are added in ascending-k order (the
+/// oracle order).
+///
+/// # Safety
+/// Caller guarantees `a_off + ii + k*lda < xa.len()` and
+/// `b_off + jj + k*ldb < xb.len()` for all `k` in `k0..k1`,
+/// `ii < MR`, `jj < NR`.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn microkernel<T: Scalar>(
+    xa: &[T],
+    a_off: usize,
+    lda: usize,
+    xb: &[T],
+    b_off: usize,
+    ldb: usize,
+    k0: usize,
+    k1: usize,
+    acc: &mut [[T; MR]; NR],
+) {
+    for k in k0..k1 {
+        let abase = a_off + k * lda;
+        let bbase = b_off + k * ldb;
+        let av = xa.get_unchecked(abase..abase + MR);
+        for jj in 0..NR {
+            let bv = *xb.get_unchecked(bbase + jj);
+            let row = acc.get_unchecked_mut(jj);
+            for ii in 0..MR {
+                row[ii] = row[ii] + *av.get_unchecked(ii) * bv;
+            }
+        }
+    }
+}
+
+/// Subtract a finished accumulator block from C at `(i0, j0)`.
+#[inline]
+fn store_sub<T: Scalar>(c: &mut [T], nb: usize, i0: usize, j0: usize, acc: &[[T; MR]; NR]) {
+    for jj in 0..NR {
+        let col = &mut c[(j0 + jj) * nb + i0..(j0 + jj) * nb + i0 + MR];
+        for ii in 0..MR {
+            col[ii] = col[ii] - acc[jj][ii];
+        }
+    }
 }
 
 /// `C -= A * B^T` on column-major `nb x nb` tiles
 /// (`dgemm`/`sgemm` with alpha = -1, beta = 1, transB = T).
 ///
-/// Dispatches to the register-blocked microkernel when the tile size
-/// permits, else falls back to the stride-1 axpy form.
+/// Dispatches to the packed micro-kernel path when the tile size
+/// permits, else falls back to the stride-1 dot-product form.
 pub fn gemm<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
     debug_assert!(c.len() == nb * nb && a.len() == nb * nb && b.len() == nb * nb);
     if blockable(nb) {
-        gemm_blocked(c, a, b, nb);
+        gemm_packed(c, a, b, nb);
     } else {
         gemm_simple(c, a, b, nb);
     }
 }
 
-/// Reference loop-order k-j-i form (any nb; also the test oracle for the
-/// blocked kernel).  The inner axpy is unconditional: covariance tiles
-/// are dense, and a per-column `b == 0` test in here costs more in lost
-/// vectorization than it ever saves (see `kernels_micro`).
+/// Reference dot-product form (any nb; also the test oracle for the
+/// packed kernel — same per-element ascending-k summation order, so the
+/// packed path must match it bit-for-bit).
 pub fn gemm_simple<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
-    for k in 0..nb {
-        let acol = &a[k * nb..(k + 1) * nb];
-        for j in 0..nb {
-            // B^T(k, j) = B(j, k)
-            let bjk = b[j + k * nb];
-            let ccol = &mut c[j * nb..(j + 1) * nb];
-            for i in 0..nb {
-                ccol[i] = ccol[i] - acol[i] * bjk;
+    for j in 0..nb {
+        for i in 0..nb {
+            let mut s = T::ZERO;
+            for k in 0..nb {
+                s = s + a[i + k * nb] * b[j + k * nb];
             }
+            let idx = i + j * nb;
+            c[idx] = c[idx] - s;
         }
     }
 }
 
-/// Register-blocked GEMM: each MR x NR block of C is accumulated in
-/// registers across a KC-deep k sweep, so C traffic drops to
-/// O(nb^2 * nb/KC) and each A load is reused NR times.  The i-dimension
-/// is contiguous, which LLVM vectorizes.  (SSPerf iterations 1-2 — see
-/// EXPERIMENTS.md.)
-fn gemm_blocked<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
-    for kb in (0..nb).step_by(KC) {
-        let kend = (kb + KC).min(nb);
-        for jb in (0..nb).step_by(NR) {
-            for ib in (0..nb).step_by(MR) {
-                // acc[jj][ii] = sum_{k in block} A(ib+ii, k) * B(jb+jj, k)
-                let mut acc = [[T::ZERO; MR]; NR];
-                for k in kb..kend {
-                    // SAFETY: ib+MR <= nb, jb+NR <= nb, k < nb by bounds.
-                    unsafe {
-                        let apan = a.get_unchecked(k * nb + ib..k * nb + ib + MR);
-                        for jj in 0..NR {
-                            let bjk = *b.get_unchecked(jb + jj + k * nb);
-                            let row = acc.get_unchecked_mut(jj);
-                            for ii in 0..MR {
-                                row[ii] = row[ii] + *apan.get_unchecked(ii) * bjk;
-                            }
+/// Packed GEMM: pack A into MR row-panels and B^T into NR
+/// column-panels, then sweep MC x NC blocks of C with the register
+/// micro-kernel.  Each C element is read and written exactly once
+/// (`nb <= KC`), so C traffic is `O(nb^2)` against `O(nb^3)` flops.
+fn gemm_packed<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    T::with_pack_buffers(|abuf, bbuf| {
+        pack_a(a, nb, abuf);
+        pack_bt(b, nb, bbuf);
+        for jc in (0..nb).step_by(NC) {
+            let jend = (jc + NC).min(nb);
+            for ic in (0..nb).step_by(MC) {
+                let iend = (ic + MC).min(nb);
+                for j0 in (jc..jend).step_by(NR) {
+                    for i0 in (ic..iend).step_by(MR) {
+                        let mut acc = [[T::ZERO; MR]; NR];
+                        // SAFETY: packed buffers are nb*nb and offsets
+                        // stay in-panel (i0 < nb, j0 < nb, k < nb).
+                        unsafe {
+                            microkernel(abuf, i0 * nb, MR, bbuf, j0 * nb, NR, 0, nb, &mut acc);
                         }
-                    }
-                }
-                for jj in 0..NR {
-                    let ccol = &mut c[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
-                    for ii in 0..MR {
-                        ccol[ii] = ccol[ii] - acc[jj][ii];
+                        store_sub(c, nb, i0, j0, &acc);
                     }
                 }
             }
         }
-    }
+    })
 }
 
 /// `C -= A * A^T` on a diagonal tile (`dsyrk`/`ssyrk`, lower).
 ///
 /// Only the lower triangle (including diagonal) is updated — the strict
 /// upper part of a diagonal tile is never read by the factorization.
-/// Strictly-sub-diagonal MR x NR blocks go through the same register
-/// microkernel as GEMM; diagonal-crossing blocks use the scalar loop.
+/// Strictly-sub-diagonal MR x NR blocks go through the packed register
+/// micro-kernel; diagonal-crossing blocks use the scalar dot loop.
 pub fn syrk<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
     debug_assert!(c.len() == nb * nb && a.len() == nb * nb);
     if blockable(nb) {
-        syrk_blocked(c, a, nb);
+        syrk_packed(c, a, nb);
     } else {
-        syrk_simple(c, a, nb, 0, nb, 0, nb);
+        syrk_block(c, a, nb, 0, nb, 0, nb);
     }
+}
+
+/// Reference dot-product form (any nb; also the test oracle for the
+/// packed kernel).
+pub fn syrk_simple<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
+    syrk_block(c, a, nb, 0, nb, 0, nb);
 }
 
 /// Scalar triangular update restricted to the block
 /// rows [i0, i1) x cols [j0, j1), still clipped to the lower triangle.
-/// Branch-free inner axpy (dense tiles — see [`gemm_simple`]).
-fn syrk_simple<T: Scalar>(
+/// Per-element full-k dot then one subtraction — the same summation
+/// order as the packed micro-kernel, so both paths agree bit-for-bit.
+fn syrk_block<T: Scalar>(
     c: &mut [T],
     a: &[T],
     nb: usize,
@@ -167,142 +331,127 @@ fn syrk_simple<T: Scalar>(
     j0: usize,
     j1: usize,
 ) {
-    for k in 0..nb {
-        let acol = &a[k * nb..(k + 1) * nb];
-        for j in j0..j1 {
-            let ajk = acol[j];
-            let ccol = &mut c[j * nb..(j + 1) * nb];
-            for i in i0.max(j)..i1 {
-                ccol[i] = ccol[i] - acol[i] * ajk;
+    for j in j0..j1 {
+        for i in i0.max(j)..i1 {
+            let mut s = T::ZERO;
+            for k in 0..nb {
+                s = s + a[i + k * nb] * a[j + k * nb];
             }
+            let idx = i + j * nb;
+            c[idx] = c[idx] - s;
         }
     }
 }
 
-fn syrk_blocked<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
-    for jb in (0..nb).step_by(NR) {
-        for ib in (jb / MR * MR..nb).step_by(MR) {
-            if ib >= jb + NR {
-                // strictly below the diagonal band: dense microkernel
-                for kb in (0..nb).step_by(KC) {
-                    let kend = (kb + KC).min(nb);
-                    let mut acc = [[T::ZERO; MR]; NR];
-                    for k in kb..kend {
-                        // SAFETY: block bounds divide nb.
-                        unsafe {
-                            let apan = a.get_unchecked(k * nb + ib..k * nb + ib + MR);
-                            for jj in 0..NR {
-                                let ajk = *a.get_unchecked(jb + jj + k * nb);
-                                let row = acc.get_unchecked_mut(jj);
-                                for ii in 0..MR {
-                                    row[ii] = row[ii] + *apan.get_unchecked(ii) * ajk;
-                                }
-                            }
+/// Packed SYRK on the GEMM core: both operands pack from the same tile
+/// (row-panels and transposed column-panels of A); blocks strictly
+/// below the diagonal band run the micro-kernel, diagonal-straddling
+/// blocks the scalar dot loop, fully-above blocks are skipped.
+fn syrk_packed<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
+    T::with_pack_buffers(|abuf, bbuf| {
+        pack_a(a, nb, abuf);
+        pack_bt(a, nb, bbuf);
+        for jc in (0..nb).step_by(NC) {
+            let jend = (jc + NC).min(nb);
+            for ic in (0..nb).step_by(MC) {
+                let iend = (ic + MC).min(nb);
+                for j0 in (jc..jend).step_by(NR) {
+                    for i0 in (ic..iend).step_by(MR) {
+                        if i0 + MR <= j0 {
+                            // entirely above the diagonal: nothing to do
+                            continue;
                         }
-                    }
-                    for jj in 0..NR {
-                        let ccol = &mut c[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
-                        for ii in 0..MR {
-                            ccol[ii] = ccol[ii] - acc[jj][ii];
+                        if i0 >= j0 + NR {
+                            // strictly below the diagonal band
+                            let mut acc = [[T::ZERO; MR]; NR];
+                            // SAFETY: same in-panel bounds as gemm_packed.
+                            unsafe {
+                                microkernel(abuf, i0 * nb, MR, bbuf, j0 * nb, NR, 0, nb, &mut acc);
+                            }
+                            store_sub(c, nb, i0, j0, &acc);
+                        } else {
+                            // block straddles the diagonal
+                            syrk_block(c, a, nb, i0, i0 + MR, j0, j0 + NR);
                         }
                     }
                 }
-            } else {
-                // block straddles the diagonal: scalar triangular path
-                syrk_simple(c, a, nb, ib, ib + MR, jb, jb + NR);
             }
         }
-    }
+    })
 }
 
 /// `B <- B * L^{-T}` for lower-triangular `L` (`dtrsm`/`strsm`:
 /// side = right, uplo = lower, trans = T, diag = non-unit).
 ///
 /// Column j of the result depends on columns 0..j (forward substitution
-/// across columns).  Dispatches to the register-blocked panel form when
-/// the tile size permits, else the stride-1 axpy form.
+/// across columns).  Dispatches to the packed-panel form when the tile
+/// size permits, else the stride-1 dot-product form.
 pub fn trsm<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
     debug_assert!(l.len() == nb * nb && b.len() == nb * nb);
     if blockable(nb) {
-        trsm_blocked(l, b, nb);
+        trsm_packed(l, b, nb);
     } else {
         trsm_simple(l, b, nb);
     }
 }
 
-/// Reference column-by-column form (any nb; also the test oracle for the
-/// blocked kernel).
+/// Reference dot-product form (any nb; also the test oracle for the
+/// packed kernel): `B(i, j) = (B(i, j) - sum_{k<j} B(i, k) L(j, k)) /
+/// L(j, j)`, summed in ascending k.
 pub fn trsm_simple<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
     for j in 0..nb {
-        // b[:, j] -= sum_{k < j} b[:, k] * L(j, k)
-        for k in 0..j {
-            let ljk = l[j + k * nb];
-            let (done, rest) = b.split_at_mut(j * nb);
-            let bk = &done[k * nb..(k + 1) * nb];
-            let bj = &mut rest[..nb];
-            for i in 0..nb {
-                bj[i] = bj[i] - bk[i] * ljk;
-            }
-        }
         let d = l[j + j * nb];
-        let bj = &mut b[j * nb..(j + 1) * nb];
-        for x in bj.iter_mut() {
-            *x = *x / d;
+        for i in 0..nb {
+            let mut s = T::ZERO;
+            for k in 0..j {
+                s = s + b[i + k * nb] * l[j + k * nb];
+            }
+            let idx = i + j * nb;
+            b[idx] = (b[idx] - s) / d;
         }
     }
 }
 
-/// Register-blocked TRSM: columns are solved in NR-wide panels.  The
-/// update of a panel from the already-solved columns 0..jb is a GEMM-
-/// shaped rank-jb sweep and goes through the MR x NR register microkernel
-/// (KC-chunked); only the small in-panel substitution runs in scalar
-/// form.  For nb >> NR virtually all flops land in the microkernel.
-fn trsm_blocked<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
-    for jb in (0..nb).step_by(NR) {
-        // panel update: B[:, jb..jb+NR) -= X[:, 0..jb) * L[jb.., 0..jb)^T
-        for ib in (0..nb).step_by(MR) {
-            for kb in (0..jb).step_by(KC) {
-                let kend = (kb + KC).min(jb);
+/// Packed TRSM on the GEMM core: L^T is packed once into NR
+/// column-panels; for each NR-wide column panel of B, every MR row
+/// block accumulates the full already-solved prefix (columns 0..jb)
+/// through the micro-kernel — reading B in place (lda = nb) — then
+/// finishes the in-panel substitution in the *same* register
+/// accumulator, so each element's k-sum is the oracle's, bit-for-bit.
+/// For nb >> NR virtually all flops land in the micro-kernel.
+fn trsm_packed<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
+    T::with_pack_buffers(|lbuf, _| {
+        pack_bt(l, nb, lbuf);
+        for j0 in (0..nb).step_by(NR) {
+            for i0 in (0..nb).step_by(MR) {
                 let mut acc = [[T::ZERO; MR]; NR];
-                for k in kb..kend {
-                    // SAFETY: ib+MR <= nb, jb+NR <= nb, k < jb <= nb.
-                    unsafe {
-                        let xpan = b.get_unchecked(k * nb + ib..k * nb + ib + MR);
-                        for jj in 0..NR {
-                            let ljk = *l.get_unchecked(jb + jj + k * nb);
-                            let row = acc.get_unchecked_mut(jj);
-                            for ii in 0..MR {
-                                row[ii] = row[ii] + *xpan.get_unchecked(ii) * ljk;
-                            }
+                // prefix: acc[jj] = sum_{k<j0} B(i, k) * L(j0+jj, k)
+                // SAFETY: k < j0 <= nb - NR keeps both operands in
+                // bounds; B columns 0..j0 are already solved.
+                unsafe {
+                    microkernel(&*b, i0, nb, lbuf, j0 * nb, NR, 0, j0, &mut acc);
+                }
+                // in-panel continuation and solve, column by column:
+                // column j0+jj extends its register sum with the
+                // panel's freshly solved columns before the single
+                // subtract-and-divide.
+                for jj in 0..NR {
+                    let j = j0 + jj;
+                    for k in j0..j {
+                        let ljk = l[j + k * nb];
+                        for ii in 0..MR {
+                            acc[jj][ii] = acc[jj][ii] + b[k * nb + i0 + ii] * ljk;
                         }
                     }
-                }
-                for jj in 0..NR {
-                    let bcol = &mut b[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
+                    let d = l[j + j * nb];
                     for ii in 0..MR {
-                        bcol[ii] = bcol[ii] - acc[jj][ii];
+                        let idx = j * nb + i0 + ii;
+                        b[idx] = (b[idx] - acc[jj][ii]) / d;
                     }
                 }
             }
         }
-        // in-panel forward substitution across the NR columns
-        for j in jb..jb + NR {
-            for k in jb..j {
-                let ljk = l[j + k * nb];
-                let (done, rest) = b.split_at_mut(j * nb);
-                let bk = &done[k * nb..(k + 1) * nb];
-                let bj = &mut rest[..nb];
-                for i in 0..nb {
-                    bj[i] = bj[i] - bk[i] * ljk;
-                }
-            }
-            let d = l[j + j * nb];
-            let bj = &mut b[j * nb..(j + 1) * nb];
-            for x in bj.iter_mut() {
-                *x = *x / d;
-            }
-        }
-    }
+    })
 }
 
 /// In-place lower Cholesky of a diagonal tile (`dpotrf`/`spotrf`).
@@ -310,121 +459,115 @@ fn trsm_blocked<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
 /// first row index, used to report the *global* pivot position on failure
 /// (the paper's SP(100%) failure mode surfaces here).
 ///
-/// Dispatches to the panel-blocked right-looking form when the tile size
+/// Dispatches to the packed left-looking form when the tile size
 /// permits, else the unblocked reference form.
 pub fn potrf<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
     debug_assert_eq!(a.len(), nb * nb);
     if blockable(nb) {
-        potrf_blocked(a, nb, tile_row0)
+        potrf_packed(a, nb, tile_row0)
     } else {
         potrf_simple(a, nb, tile_row0)
     }
 }
 
-/// Reference unblocked form (any nb; also the test oracle for the
-/// blocked kernel).
+/// Reference unblocked left-looking (Cholesky-Crout) form (any nb; also
+/// the test oracle for the packed kernel): each entry subtracts its
+/// full ascending-k dot once.
 pub fn potrf_simple<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
-    for k in 0..nb {
-        let pivot = a[k + k * nb].to_f64();
+    for j in 0..nb {
+        let mut s = T::ZERO;
+        for k in 0..j {
+            let v = a[j + k * nb];
+            s = s + v * v;
+        }
+        let pv = a[j + j * nb] - s;
+        let pivot = pv.to_f64();
         if !(pivot > 0.0) {
-            return Err(Error::NotPositiveDefinite { pivot, index: tile_row0 + k });
+            return Err(Error::NotPositiveDefinite { pivot, index: tile_row0 + j });
         }
-        let d = a[k + k * nb].sqrt();
-        for i in k..nb {
-            a[i + k * nb] = a[i + k * nb] / d;
-        }
-        for j in (k + 1)..nb {
-            let ljk = a[j + k * nb];
-            if ljk.to_f64() != 0.0 {
-                let (colk, colj) = {
-                    let (lo, hi) = a.split_at_mut(j * nb);
-                    (&lo[k * nb..(k + 1) * nb], &mut hi[..nb])
-                };
-                for i in j..nb {
-                    colj[i] = colj[i] - colk[i] * ljk;
-                }
+        let d = pv.sqrt();
+        a[j + j * nb] = d;
+        for i in (j + 1)..nb {
+            let mut s = T::ZERO;
+            for k in 0..j {
+                s = s + a[i + k * nb] * a[j + k * nb];
             }
+            let idx = i + j * nb;
+            a[idx] = (a[idx] - s) / d;
         }
     }
     zero_strict_upper(a, nb);
     Ok(())
 }
 
-/// Panel-blocked right-looking Cholesky: factor an MR-wide column panel
-/// unblocked, then apply its rank-MR trailing update through the same
-/// MR x NR register microkernel shape as SYRK (panel columns snapshot to
-/// stack arrays, so the update is safe branch-free code LLVM vectorizes).
-/// For nb >> MR the trailing updates are ~all the flops.
-fn potrf_blocked<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
-    // panel width: reuse the microkernel's MR so the trailing update's
-    // k-depth fits the register accumulators' sweep
-    const PB: usize = MR;
-    for kb in (0..nb).step_by(PB) {
-        let kend = kb + PB;
-        // unblocked factorization of columns [kb, kend), updating only
-        // within the panel
-        for k in kb..kend {
-            let pivot = a[k + k * nb].to_f64();
+/// Packed left-looking Cholesky on the GEMM core, by NR-wide column
+/// panels: the panel's diagonal block and the (at most MR - NR)
+/// unaligned rows below it run the scalar oracle loops; every aligned
+/// MR row block accumulates its full prefix (columns 0..j0) through the
+/// micro-kernel — both operands read from `a` in place — then extends
+/// the same register sum with the panel's already-finalized columns.
+/// Element-for-element the k-sums are the oracle's, bit-for-bit; for
+/// nb >> MR the prefix sweeps are ~all the flops.
+fn potrf_packed<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
+    for j0 in (0..nb).step_by(NR) {
+        let jend = j0 + NR;
+        // diagonal block rows [j0, jend): scalar left-looking
+        for j in j0..jend {
+            let mut s = T::ZERO;
+            for k in 0..j {
+                let v = a[j + k * nb];
+                s = s + v * v;
+            }
+            let pv = a[j + j * nb] - s;
+            let pivot = pv.to_f64();
             if !(pivot > 0.0) {
-                return Err(Error::NotPositiveDefinite { pivot, index: tile_row0 + k });
+                return Err(Error::NotPositiveDefinite { pivot, index: tile_row0 + j });
             }
-            let d = a[k + k * nb].sqrt();
-            for i in k..nb {
-                a[i + k * nb] = a[i + k * nb] / d;
-            }
-            for j in (k + 1)..kend {
-                let ljk = a[j + k * nb];
-                let (colk, colj) = {
-                    let (lo, hi) = a.split_at_mut(j * nb);
-                    (&lo[k * nb..(k + 1) * nb], &mut hi[..nb])
-                };
-                for i in j..nb {
-                    colj[i] = colj[i] - colk[i] * ljk;
+            let d = pv.sqrt();
+            a[j + j * nb] = d;
+            for i in (j + 1)..jend {
+                let mut s = T::ZERO;
+                for k in 0..j {
+                    s = s + a[i + k * nb] * a[j + k * nb];
                 }
+                let idx = i + j * nb;
+                a[idx] = (a[idx] - s) / d;
             }
         }
-        // trailing update: A[kend.., kend..] -= P P^T with P the freshly
-        // factored panel rows kend.., clipped to the lower triangle
-        if kend >= nb {
-            continue;
+        // unaligned rows [jend, aligned): scalar left-looking (NR < MR,
+        // so a panel boundary need not sit on an MR row boundary)
+        let aligned = jend.div_ceil(MR) * MR;
+        for i in jend..aligned.min(nb) {
+            for j in j0..jend {
+                let mut s = T::ZERO;
+                for k in 0..j {
+                    s = s + a[i + k * nb] * a[j + k * nb];
+                }
+                let d = a[j + j * nb];
+                let idx = i + j * nb;
+                a[idx] = (a[idx] - s) / d;
+            }
         }
-        for jb in (kend..nb).step_by(NR) {
-            for ib in (jb / MR * MR..nb).step_by(MR) {
-                if ib >= jb + NR {
-                    // strictly below the diagonal band: dense microkernel
-                    let mut acc = [[T::ZERO; MR]; NR];
-                    for k in kb..kend {
-                        // snapshot the panel segment: the borrow checker
-                        // cannot see that column k is disjoint from the
-                        // trailing columns being written
-                        let mut ap = [T::ZERO; MR];
-                        for ii in 0..MR {
-                            ap[ii] = a[k * nb + ib + ii];
-                        }
-                        for jj in 0..NR {
-                            let ljk = a[(jb + jj) + k * nb];
-                            for ii in 0..MR {
-                                acc[jj][ii] = acc[jj][ii] + ap[ii] * ljk;
-                            }
-                        }
+        // aligned MR row blocks below the panel: micro-kernel prefix,
+        // then the in-panel continuation in the same register sum
+        for i0 in (aligned..nb).step_by(MR) {
+            let mut acc = [[T::ZERO; MR]; NR];
+            // SAFETY: i0 + MR <= nb, j0 + NR <= nb, k < j0 < nb.
+            unsafe {
+                microkernel(&*a, i0, nb, &*a, j0, nb, 0, j0, &mut acc);
+            }
+            for jj in 0..NR {
+                let j = j0 + jj;
+                for k in j0..j {
+                    let ljk = a[j + k * nb];
+                    for ii in 0..MR {
+                        acc[jj][ii] = acc[jj][ii] + a[k * nb + i0 + ii] * ljk;
                     }
-                    for jj in 0..NR {
-                        let col = &mut a[(jb + jj) * nb + ib..(jb + jj) * nb + ib + MR];
-                        for ii in 0..MR {
-                            col[ii] = col[ii] - acc[jj][ii];
-                        }
-                    }
-                } else {
-                    // block straddles the diagonal: scalar triangular path
-                    for jj in 0..NR {
-                        let j = jb + jj;
-                        for k in kb..kend {
-                            let ljk = a[j + k * nb];
-                            for i in ib.max(j)..ib + MR {
-                                a[i + j * nb] = a[i + j * nb] - a[i + k * nb] * ljk;
-                            }
-                        }
-                    }
+                }
+                let d = a[j + j * nb];
+                for ii in 0..MR {
+                    let idx = j * nb + i0 + ii;
+                    a[idx] = (a[idx] - acc[jj][ii]) / d;
                 }
             }
         }
@@ -516,6 +659,23 @@ mod tests {
     }
 
     #[test]
+    fn gemm_packed_bitwise_matches_oracle() {
+        // 8, 32, 96 all take the packed path; the oracle shares its
+        // per-element summation order, so equality is exact
+        for &nb in &[8usize, 32, 96] {
+            let a = rand_tile::<f64>(nb, 11, |x| x);
+            let b = rand_tile::<f64>(nb, 12, |x| x);
+            let mut c1 = rand_tile::<f64>(nb, 13, |x| x);
+            let mut c2 = c1.clone();
+            gemm(&mut c1, &a, &b, nb);
+            gemm_simple(&mut c2, &a, &b, nb);
+            for k in 0..nb * nb {
+                assert_eq!(c1[k].to_bits(), c2[k].to_bits(), "nb={nb} [{k}]");
+            }
+        }
+    }
+
+    #[test]
     fn gemm_f32_matches_f64_within_eps() {
         let nb = 24;
         let a = rand_tile::<f64>(nb, 4, |x| x);
@@ -548,14 +708,16 @@ mod tests {
 
     #[test]
     fn syrk_leaves_strict_upper_untouched() {
-        let nb = 12;
-        let a = rand_tile::<f64>(nb, 9, |x| x);
-        let c0 = rand_tile::<f64>(nb, 10, |x| x);
-        let mut c = c0.clone();
-        syrk(&mut c, &a, nb);
-        for j in 1..nb {
-            for i in 0..j {
-                assert_eq!(c[i + j * nb], c0[i + j * nb]);
+        // 12 takes the fallback, 16 the packed path
+        for &nb in &[12usize, 16] {
+            let a = rand_tile::<f64>(nb, 9, |x| x);
+            let c0 = rand_tile::<f64>(nb, 10, |x| x);
+            let mut c = c0.clone();
+            syrk(&mut c, &a, nb);
+            for j in 1..nb {
+                for i in 0..j {
+                    assert_eq!(c[i + j * nb], c0[i + j * nb], "nb={nb}");
+                }
             }
         }
     }
@@ -585,44 +747,46 @@ mod tests {
     }
 
     #[test]
-    fn potrf_blocked_matches_simple_oracle() {
-        // 16 and 64 take the blocked path; verify element-wise against
-        // the unblocked oracle on the same input
+    fn potrf_packed_bitwise_matches_simple_oracle() {
+        // 16 and 64 take the packed path; same left-looking summation
+        // order as the oracle, so element equality is exact
         for &nb in &[16usize, 64] {
             let a0 = spd_tile(nb, 17);
-            let mut l_blocked = a0.clone();
+            let mut l_packed = a0.clone();
             let mut l_simple = a0.clone();
-            potrf(&mut l_blocked, nb, 0).unwrap();
+            potrf(&mut l_packed, nb, 0).unwrap();
             potrf_simple(&mut l_simple, nb, 0).unwrap();
             for j in 0..nb {
                 for i in 0..nb {
-                    let d = (l_blocked[i + j * nb] - l_simple[i + j * nb]).abs();
-                    assert!(d < 1e-9, "nb={nb} ({i},{j}): {d}");
+                    assert_eq!(
+                        l_packed[i + j * nb].to_bits(),
+                        l_simple[i + j * nb].to_bits(),
+                        "nb={nb} ({i},{j})"
+                    );
                 }
             }
         }
     }
 
     #[test]
-    fn trsm_blocked_matches_simple_oracle() {
+    fn trsm_packed_bitwise_matches_simple_oracle() {
         for &nb in &[16usize, 64] {
             let mut l = spd_tile(nb, 18);
             potrf(&mut l, nb, 0).unwrap();
             let b0 = rand_tile::<f64>(nb, 19, |x| x);
-            let mut b_blocked = b0.clone();
+            let mut b_packed = b0.clone();
             let mut b_simple = b0.clone();
-            trsm(&l, &mut b_blocked, nb);
+            trsm(&l, &mut b_packed, nb);
             trsm_simple(&l, &mut b_simple, nb);
             for k in 0..nb * nb {
-                let d = (b_blocked[k] - b_simple[k]).abs();
-                assert!(d < 1e-9, "nb={nb} [{k}]: {d}");
+                assert_eq!(b_packed[k].to_bits(), b_simple[k].to_bits(), "nb={nb} [{k}]");
             }
         }
     }
 
     #[test]
     fn potrf_reports_global_pivot_index() {
-        // nb = 8 exercises the blocked path, nb = 7 the fallback
+        // nb = 8 exercises the packed path, nb = 7 the fallback
         for &nb in &[8usize, 7] {
             let mut a = vec![0.0; nb * nb];
             for i in 0..nb {
@@ -711,6 +875,26 @@ mod tests {
                 assert!((s[i + j * nb] - acc).abs() < 1e-10);
             }
         }
+    }
+
+    #[test]
+    fn pack_roundtrip_layouts() {
+        let nb = 16;
+        let a = rand_tile::<f64>(nb, 20, |x| x);
+        f64::with_pack_buffers(|abuf, bbuf| {
+            pack_a(&a, nb, abuf);
+            pack_bt(&a, nb, bbuf);
+            for k in 0..nb {
+                for i in 0..nb {
+                    let p = i / MR;
+                    let ii = i % MR;
+                    assert_eq!(abuf[p * MR * nb + k * MR + ii], a[i + k * nb]);
+                    let q = i / NR;
+                    let jj = i % NR;
+                    assert_eq!(bbuf[q * NR * nb + k * NR + jj], a[i + k * nb]);
+                }
+            }
+        });
     }
 
     #[test]

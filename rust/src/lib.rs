@@ -99,8 +99,9 @@ pub mod tile;
 /// examples and benches.
 pub mod prelude {
     pub use crate::cholesky::{
-        factorize_dense, factorize_tiles, factorize_tiles_with_map, generate_and_factorize,
-        generate_covariance, CholeskyPlan, ConversionCounts, Variant,
+        factorize_dense, factorize_tiles, factorize_tiles_with_map, factorize_tiles_with_opts,
+        generate_and_factorize, generate_covariance, CholeskyPlan, ConversionCounts, PlanOptions,
+        Variant,
     };
     pub use crate::config::RunConfig;
     pub use crate::datagen::{FieldConfig, SyntheticField, WindFieldConfig};

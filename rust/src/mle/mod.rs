@@ -319,8 +319,15 @@ impl<'a> MleProblem<'a> {
             st.evals += 1;
             churn
         };
-        let rep =
-            datamove::simulate(&plan.graph, &self.cfg.model_device, self.cfg.nb, &plan.map);
+        // conversion-protocol bytes are priced inside the same transfer
+        // stream as the tile misses (ROADMAP follow-on to PR 3)
+        let rep = datamove::simulate_with_conversions(
+            &plan.graph,
+            &self.cfg.model_device,
+            self.cfg.nb,
+            &plan.map,
+            &plan.conversion_totals(),
+        );
         self.trace.borrow_mut().iterations.push(MleIterStat {
             census: plan.map.census(),
             map_churn: churn,

@@ -17,6 +17,7 @@ use std::collections::HashMap;
 
 use super::graph::{Access, TaskGraph};
 use super::TaskCost;
+use crate::cholesky::ConversionCounts;
 use crate::tile::{Precision, PrecisionMap, TileId};
 
 /// Accelerator + interconnect description.
@@ -92,8 +93,13 @@ pub struct DataMoveReport {
     pub compute_s: f64,
     /// Host->device + device->host volume, bytes (after overfetch).
     pub moved_bytes: f64,
-    /// Demand-miss volume before the prefetch multiplier.
+    /// Demand-miss volume before the prefetch multiplier (includes
+    /// `conversion_bytes` when the conversion census is supplied).
     pub demand_bytes: f64,
+    /// Bytes of the demote/promote/decode protocol's materialized
+    /// views, priced *inside* the transfer stream (zero when simulated
+    /// without a conversion census).
+    pub conversion_bytes: f64,
     /// Number of tile transfers.
     pub transfers: usize,
 }
@@ -168,6 +174,25 @@ pub fn simulate<P: TaskCost>(
     nb: usize,
     map: &PrecisionMap,
 ) -> DataMoveReport {
+    simulate_with_conversions(graph, dev, nb, map, &ConversionCounts::default())
+}
+
+/// [`simulate`] with the plan's demote/promote/decode census priced
+/// *inside* the transfer stream instead of reported alongside it: each
+/// conversion task materializes a staged copy the runtime must move —
+/// an f32 view (`dconv2s`, `hconv2s`: `nb^2 * 4` bytes) or an f64 view
+/// (`sconv2d`: `nb^2 * 8` bytes); `DropScratch` frees cost nothing.
+/// Pass `CholeskyPlan::conversion_totals()` (or one step's
+/// [`ConversionCounts`]) to attribute the protocol's volume to the same
+/// stream the tile misses pay into, so modeled transfer time reflects
+/// both.
+pub fn simulate_with_conversions<P: TaskCost>(
+    graph: &TaskGraph<P>,
+    dev: &DeviceModel,
+    nb: usize,
+    map: &PrecisionMap,
+    conversions: &ConversionCounts,
+) -> DataMoveReport {
     let mut cache = GpuCache::new(dev.gpu_mem_bytes);
     let mut rep = DataMoveReport::default();
     for t in graph.tasks() {
@@ -182,6 +207,10 @@ pub fn simulate<P: TaskCost>(
         }
         rep.compute_s += t.payload.flops() / (dev.rate(prec) * 1e9);
     }
+    let nn = (nb * nb) as f64;
+    rep.conversion_bytes = nn * 4.0 * (conversions.demotes + conversions.decodes) as f64
+        + nn * 8.0 * conversions.promotes as f64;
+    rep.demand_bytes += rep.conversion_bytes;
     rep.moved_bytes = rep.demand_bytes * dev.prefetch_overfetch;
     let transfer_s = rep.moved_bytes / (dev.pcie_gbs * 1e9);
     rep.time_s = rep.compute_s.max(transfer_s);
@@ -282,6 +311,28 @@ mod tests {
         assert_eq!(rep.transfers, 6);
         // dirty evictions add D2H volume on top of the 6 H2D loads
         assert!(rep.demand_bytes > 6.0 * 512.0 * 512.0 * 8.0);
+    }
+
+    #[test]
+    fn conversion_bytes_price_into_the_transfer_stream() {
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(0, 0), Access::Read)]);
+        let mut dev = DeviceModel::v100();
+        dev.prefetch_overfetch = 1.0;
+        let nb = 64usize;
+        let map = PrecisionMap::uniform(1, Precision::F64);
+        let base = simulate(&g, &dev, nb, &map);
+        assert_eq!(base.conversion_bytes, 0.0);
+        // 2 dconv2s + 3 hconv2s move f32 views, 1 sconv2d an f64 view;
+        // the 4 drops are free
+        let conv = ConversionCounts { demotes: 2, promotes: 1, decodes: 3, drops: 4 };
+        let rep = simulate_with_conversions(&g, &dev, nb, &map, &conv);
+        let nn = (nb * nb) as f64;
+        assert_eq!(rep.conversion_bytes, nn * 4.0 * 5.0 + nn * 8.0);
+        assert_eq!(rep.demand_bytes, base.demand_bytes + rep.conversion_bytes);
+        assert_eq!(rep.moved_bytes, rep.demand_bytes, "overfetch 1.0");
+        // the compute stream is untouched by conversion pricing
+        assert_eq!(rep.compute_s, base.compute_s);
     }
 
     #[test]

@@ -24,6 +24,13 @@ pub struct ExecutionTrace {
     pub spans: Vec<TaskSpan>,
     /// Wall-clock of the whole run.
     pub wall_ns: u64,
+    /// Nanoseconds the run spent unpacking packed-bf16 tiles (decode
+    /// cache fills and fallback unpacks).  The scheduler itself cannot
+    /// observe this — decode work happens *inside* task spans, so
+    /// [`Self::idle_ns`] alone cannot distinguish a stalled worker from
+    /// one filling a decode cache.  Drivers that care (the bench bin)
+    /// copy it in from the executor's `ExecStats` after the run.
+    pub decode_ns: u64,
 }
 
 impl ExecutionTrace {
@@ -82,6 +89,7 @@ mod tests {
                 TaskSpan { task: 1, worker: 1, start_ns: 0, end_ns: 50 },
             ],
             wall_ns: 100,
+            decode_ns: 0,
         }
     }
 

@@ -26,7 +26,6 @@ use crate::error::{Error, Result};
 pub enum SchedulingPolicy {
     /// Insertion order (StarPU `eager`): good locality for tile Cholesky
     /// because program order is already panel-major.
-    #[default]
     Fifo,
     /// Most recently enabled first (depth-first): minimizes live tiles.
     Lifo,
@@ -41,8 +40,17 @@ pub enum SchedulingPolicy {
     /// the bytes, twice the SIMD lanes) run first, finishing the wide
     /// cheap frontier early so their DP successors enable sooner.  Uses
     /// [`super::graph::TaskNode::cheapness`], which the Cholesky planner
-    /// fills from the realized `PrecisionMap`; graphs that never call
-    /// `compute_cheapness` degenerate to [`Self::CriticalPath`].
+    /// fills from the realized `PrecisionMap`.
+    ///
+    /// This is the **default** policy (ROADMAP follow-on to the PR that
+    /// introduced it): on graphs without cheapness ranks its keys are
+    /// `4 * height` — the *same order* CriticalPath produces, with the
+    /// same program-order tie-break — so it is a strict refinement of
+    /// CriticalPath and can only differ (by running the cheap frontier
+    /// first) where reduced-precision ranks exist.  The four-policy
+    /// sweep in `benches/ablations.rs` (also run by the CI bench job)
+    /// measures the two head-to-head on real hardware.
+    #[default]
     PrecisionFrontier,
 }
 
@@ -360,7 +368,7 @@ impl Scheduler {
         drop(failed);
         let mut spans = spans.into_inner().unwrap();
         spans.sort_by_key(|s| s.start_ns);
-        Ok(ExecutionTrace { spans, wall_ns: t0.elapsed().as_nanos() as u64 })
+        Ok(ExecutionTrace { spans, wall_ns: t0.elapsed().as_nanos() as u64, decode_ns: 0 })
     }
 }
 

@@ -1,0 +1,256 @@
+//! GemmBatch fusion acceptance: fused (left-looking, one task per
+//! output tile) plans must produce **bit-identical** final tiles to
+//! unfused (right-looking, one task per rank-nb update) plans wherever
+//! the target storage does not round between updates — DP enforced
+//! bitwise per the issue, and f32 targets get the same guarantee for
+//! free — under every scheduler policy.  bf16 targets round through
+//! storage once per batch instead of once per step, so the
+//! three-precision comparison is tolerance-based.
+//!
+//! Plus the per-step bf16 decode-cache acceptance: the run's unpack
+//! count must drop *strictly below* the per-task-unpack baseline (what
+//! the pre-decode-cache executor paid: one unpack per reduced-consumer
+//! read of a packed tile, plus one per bf16 in-place compute target).
+
+use mpcholesky::cholesky::{
+    factorize_tiles_with_opts, CholeskyPlan, GenContext, KernelCall, TileExecutor,
+};
+use mpcholesky::matern::matern_matrix;
+use mpcholesky::prelude::*;
+use mpcholesky::tile::{DenseMatrix, Precision};
+
+fn matern_dense(n: usize, seed: u64) -> DenseMatrix {
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    locs.sort_by(|a, b| (a.x + a.y).partial_cmp(&(b.x + b.y)).unwrap());
+    DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8)).unwrap()
+}
+
+/// Factor `a` through the public driver and return the dense factor.
+fn factor(
+    a: &DenseMatrix,
+    nb: usize,
+    variant: Variant,
+    fused: bool,
+    policy: SchedulingPolicy,
+) -> DenseMatrix {
+    let sched = Scheduler::new(SchedulerConfig { num_workers: 4, policy, trace: false });
+    let mut tiles = TileMatrix::from_dense(a, nb).unwrap();
+    let map = variant.precision_map(tiles.p(), Some(&tiles)).unwrap();
+    factorize_tiles_with_opts(
+        &mut tiles,
+        variant,
+        map,
+        PlanOptions { fuse_gemm: fused },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    tiles.to_dense(true)
+}
+
+#[test]
+fn fused_dp_bit_identical_to_unfused_under_all_policies() {
+    let a = matern_dense(160, 31);
+    let reference = factor(&a, 32, Variant::FullDp, false, SchedulingPolicy::Fifo);
+    for policy in [
+        SchedulingPolicy::Fifo,
+        SchedulingPolicy::Lifo,
+        SchedulingPolicy::CriticalPath,
+        SchedulingPolicy::PrecisionFrontier,
+    ] {
+        let fused = factor(&a, 32, Variant::FullDp, true, policy);
+        assert_eq!(
+            fused.max_abs_diff(&reference),
+            0.0,
+            "{policy:?}: fused DP factor diverges from unfused"
+        );
+    }
+}
+
+#[test]
+fn fused_mixed_precision_bit_identical_to_unfused() {
+    // f32 targets accumulate in their resident buffer in both schemes,
+    // in the same ascending-k order, with identically-converted
+    // operands — so even the mixed variant matches bitwise
+    let a = matern_dense(160, 32);
+    let variant = Variant::MixedPrecision { diag_thick: 2 };
+    let unfused = factor(&a, 32, variant, false, SchedulingPolicy::PrecisionFrontier);
+    for policy in [SchedulingPolicy::Fifo, SchedulingPolicy::CriticalPath] {
+        let fused = factor(&a, 32, variant, true, policy);
+        assert_eq!(
+            fused.max_abs_diff(&unfused),
+            0.0,
+            "{policy:?}: fused mixed factor diverges from unfused"
+        );
+    }
+}
+
+#[test]
+fn fused_three_precision_reconstructs_like_unfused() {
+    // bf16 targets round through storage once per batch instead of once
+    // per step: not bitwise, but both factors must reconstruct A to the
+    // same bf16-level accuracy
+    let n = 160;
+    let a = matern_dense(n, 33);
+    let variant = Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 };
+    let unfused = factor(&a, 32, variant, false, SchedulingPolicy::Fifo);
+    let fused = factor(&a, 32, variant, true, SchedulingPolicy::Fifo);
+    for l in [&unfused, &fused] {
+        let llt = l.matmul_nt(l);
+        let mut err = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+            }
+        }
+        assert!(err < 0.1, "3-precision reconstruction err {err}");
+    }
+    // and the two factors differ only at bf16 storage-rounding scale
+    assert!(
+        fused.max_abs_diff(&unfused) < 0.1,
+        "fused vs unfused 3p diff {}",
+        fused.max_abs_diff(&unfused)
+    );
+}
+
+/// What the pre-decode-cache executor would unpack for this plan: one
+/// unpack per reduced-consumer read of a packed-bf16 tile, one per
+/// packed in-place compute target, and one per `sconv2d` of a packed
+/// tile (identical in both worlds).
+fn per_task_unpack_baseline(plan: &CholeskyPlan) -> u64 {
+    let map = &plan.map;
+    let is_hp = |i: usize, j: usize| map.get(i, j) == Precision::Bf16;
+    let mut count = 0u64;
+    for t in plan.graph.tasks() {
+        match t.payload.call {
+            KernelCall::PotrfDp { k } => {
+                if is_hp(k, k) {
+                    count += 1;
+                }
+            }
+            KernelCall::TrsmSp { k, .. } => {
+                if is_hp(k, k) {
+                    count += 1;
+                }
+            }
+            KernelCall::TrsmHp { k, .. } => {
+                count += 1; // in-place bf16 solve target
+                if is_hp(k, k) {
+                    count += 1;
+                }
+            }
+            KernelCall::SyrkDp { j, k } => match map.get(j, j) {
+                Precision::F64 => {}
+                Precision::F32 => {
+                    if is_hp(j, k) {
+                        count += 1;
+                    }
+                }
+                Precision::Bf16 => {
+                    count += 1; // in-place bf16 accumulate target
+                    if is_hp(j, k) {
+                        count += 1;
+                    }
+                }
+            },
+            KernelCall::GemmSp { i, j: _, k } => {
+                // reduced compute: both operands unpack when packed
+                if is_hp(i, k) {
+                    count += 1;
+                }
+            }
+            KernelCall::GemmHp { i, j: _, k } => {
+                count += 1; // C unpack
+                if is_hp(i, k) {
+                    count += 1;
+                }
+            }
+            KernelCall::PromoteTile { i, k } => {
+                if is_hp(i, k) {
+                    count += 1;
+                }
+            }
+            _ => {}
+        }
+        // second gemm operand (j, k) — shared handling for both kinds
+        match t.payload.call {
+            KernelCall::GemmSp { j, k, .. } | KernelCall::GemmHp { j, k, .. } => {
+                if is_hp(j, k) {
+                    count += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    count
+}
+
+#[test]
+fn decode_cache_strictly_reduces_unpacks_below_per_task_baseline() {
+    let n = 256;
+    let nb = 32;
+    let a = matern_dense(n, 34);
+    let variant = Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 };
+    let sched = Scheduler::with_workers(4);
+
+    let mut tiles = TileMatrix::from_dense(&a, nb).unwrap();
+    let map = variant.precision_map(tiles.p(), Some(&tiles)).unwrap();
+    assert!(map.census().hp > 0, "setup must assign bf16 tiles");
+    tiles.apply_precision_map(&map);
+    let mut plan =
+        CholeskyPlan::build_with_opts(tiles.p(), nb, variant, map, false, PlanOptions::default());
+    let baseline = per_task_unpack_baseline(&plan);
+    assert!(baseline > 0);
+
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let exec = TileExecutor::new(&tiles, &NativeBackend);
+    sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx])).unwrap();
+
+    let actual = exec.stats.bf16_unpacks();
+    assert!(actual > 0);
+    assert!(
+        actual < baseline,
+        "decode cache must strictly beat per-task unpacking: {actual} !< {baseline}"
+    );
+    assert!(exec.stats.decode_ns() > 0, "timed unpacks must accumulate");
+}
+
+#[test]
+fn fused_plans_execute_on_the_scheduler_with_generation() {
+    // generation tasks, batches, trsms and conversions in one dataflow
+    // graph: the end-to-end fused pipeline must equal the dense path
+    let n = 128;
+    let nb = 32;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let mut r = Xoshiro256pp::seed_from_u64(77);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    locs.sort_by(|a, b| (a.x + a.y).partial_cmp(&(b.x + b.y)).unwrap());
+    let a =
+        DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8)).unwrap();
+
+    let variant = Variant::MixedPrecision { diag_thick: 2 };
+    let sched = Scheduler::with_workers(4);
+
+    // fused generate+factorize in one graph
+    let mut tiles = TileMatrix::zeros(n, nb).unwrap();
+    let map = variant.precision_map(n / nb, None).unwrap();
+    tiles.apply_precision_map(&map);
+    let mut plan = CholeskyPlan::build_fused(n / nb, nb, variant, map, true);
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let exec = TileExecutor::new(&tiles, &NativeBackend).with_generation(GenContext {
+        locations: &locs,
+        theta,
+        metric: Metric::Euclidean,
+        nugget: 1e-8,
+    });
+    sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx])).unwrap();
+
+    let dense_path = factor(&a, nb, variant, true, SchedulingPolicy::PrecisionFrontier);
+    assert_eq!(tiles.to_dense(true).max_abs_diff(&dense_path), 0.0);
+}

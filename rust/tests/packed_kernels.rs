@@ -1,0 +1,171 @@
+//! Property tests for the packed micro-kernel BLAS layer: across tile
+//! sizes (MR/NR-divisible sizes take the packed path, the odd size the
+//! any-nb fallback), `gemm`/`syrk`/`trsm`/`potrf` must match their
+//! `*_simple` dot-product oracles **bit-for-bit in f64** — the packed
+//! kernels accumulate every element's k-sum in the oracle's
+//! ascending-k order, so there is no tolerance to hide behind — and
+//! within a small eps in f32 (same argument, with the looser bound
+//! guarding against platform FMA contraction differences).
+
+use mpcholesky::kernels::blas::{
+    gemm, gemm_simple, potrf, potrf_simple, syrk, syrk_simple, trsm, trsm_simple,
+};
+use mpcholesky::rng::Xoshiro256pp;
+
+/// 8/64/96/128 take the packed micro-kernel path; 37 is odd and
+/// non-blockable, exercising the fallback dispatch.
+const SIZES: [usize; 5] = [8, 64, 96, 128, 37];
+
+fn rand_tile(nb: usize, seed: u64) -> Vec<f64> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    (0..nb * nb).map(|_| r.standard_normal()).collect()
+}
+
+fn spd_tile(nb: usize, seed: u64) -> Vec<f64> {
+    let b = rand_tile(nb, seed);
+    let mut a = vec![0.0; nb * nb];
+    for j in 0..nb {
+        for i in 0..nb {
+            let mut s = 0.0;
+            for k in 0..nb {
+                s += b[i + k * nb] * b[j + k * nb];
+            }
+            a[i + j * nb] = s + if i == j { nb as f64 } else { 0.0 };
+        }
+    }
+    a
+}
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+fn assert_bitwise(got: &[f64], want: &[f64], what: &str, nb: usize) {
+    for (k, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} nb={nb} [{k}]: {x} vs {y}");
+    }
+}
+
+fn assert_close_f32(got: &[f32], want: &[f32], what: &str, nb: usize) {
+    for (k, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+        let scale = y.abs().max(1.0);
+        assert!(
+            (x - y).abs() <= 8.0 * f32::EPSILON * scale * nb as f32,
+            "{what} nb={nb} [{k}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn packed_gemm_matches_oracle_bitwise_f64_and_eps_f32() {
+    for &nb in &SIZES {
+        let a = rand_tile(nb, 100 + nb as u64);
+        let b = rand_tile(nb, 200 + nb as u64);
+        let c0 = rand_tile(nb, 300 + nb as u64);
+
+        let mut c_packed = c0.clone();
+        let mut c_oracle = c0.clone();
+        gemm(&mut c_packed, &a, &b, nb);
+        gemm_simple(&mut c_oracle, &a, &b, nb);
+        assert_bitwise(&c_packed, &c_oracle, "gemm", nb);
+
+        let (a32, b32) = (to_f32(&a), to_f32(&b));
+        let mut cp32 = to_f32(&c0);
+        let mut co32 = to_f32(&c0);
+        gemm(&mut cp32, &a32, &b32, nb);
+        gemm_simple(&mut co32, &a32, &b32, nb);
+        assert_close_f32(&cp32, &co32, "gemm/f32", nb);
+    }
+}
+
+#[test]
+fn packed_syrk_matches_oracle_bitwise_f64_and_eps_f32() {
+    for &nb in &SIZES {
+        let a = rand_tile(nb, 400 + nb as u64);
+        let c0 = rand_tile(nb, 500 + nb as u64);
+
+        let mut c_packed = c0.clone();
+        let mut c_oracle = c0.clone();
+        syrk(&mut c_packed, &a, nb);
+        syrk_simple(&mut c_oracle, &a, nb);
+        assert_bitwise(&c_packed, &c_oracle, "syrk", nb);
+        // the strict upper triangle is untouched by either path
+        for j in 1..nb {
+            for i in 0..j {
+                assert_eq!(c_packed[i + j * nb], c0[i + j * nb], "syrk upper nb={nb}");
+            }
+        }
+
+        let a32 = to_f32(&a);
+        let mut cp32 = to_f32(&c0);
+        let mut co32 = to_f32(&c0);
+        syrk(&mut cp32, &a32, nb);
+        syrk_simple(&mut co32, &a32, nb);
+        assert_close_f32(&cp32, &co32, "syrk/f32", nb);
+    }
+}
+
+#[test]
+fn packed_trsm_matches_oracle_bitwise_f64_and_eps_f32() {
+    for &nb in &SIZES {
+        let mut l = spd_tile(nb, 600 + nb as u64);
+        potrf_simple(&mut l, nb, 0).unwrap();
+        let b0 = rand_tile(nb, 700 + nb as u64);
+
+        let mut b_packed = b0.clone();
+        let mut b_oracle = b0.clone();
+        trsm(&l, &mut b_packed, nb);
+        trsm_simple(&l, &mut b_oracle, nb);
+        assert_bitwise(&b_packed, &b_oracle, "trsm", nb);
+
+        let l32 = to_f32(&l);
+        let mut bp32 = to_f32(&b0);
+        let mut bo32 = to_f32(&b0);
+        trsm(&l32, &mut bp32, nb);
+        trsm_simple(&l32, &mut bo32, nb);
+        assert_close_f32(&bp32, &bo32, "trsm/f32", nb);
+    }
+}
+
+#[test]
+fn packed_potrf_matches_oracle_bitwise_f64_and_eps_f32() {
+    for &nb in &SIZES {
+        let a0 = spd_tile(nb, 800 + nb as u64);
+
+        let mut l_packed = a0.clone();
+        let mut l_oracle = a0.clone();
+        potrf(&mut l_packed, nb, 0).unwrap();
+        potrf_simple(&mut l_oracle, nb, 0).unwrap();
+        assert_bitwise(&l_packed, &l_oracle, "potrf", nb);
+
+        let mut lp32 = to_f32(&a0);
+        let mut lo32 = to_f32(&a0);
+        potrf(&mut lp32, nb, 0).unwrap();
+        potrf_simple(&mut lo32, nb, 0).unwrap();
+        assert_close_f32(&lp32, &lo32, "potrf/f32", nb);
+    }
+}
+
+#[test]
+fn packed_potrf_factor_reconstructs_spd_input() {
+    // end-to-end sanity beyond oracle agreement: L L^T == A
+    for &nb in &[64usize, 96] {
+        let a0 = spd_tile(nb, 900 + nb as u64);
+        let mut l = a0.clone();
+        potrf(&mut l, nb, 0).unwrap();
+        for j in 0..nb {
+            for i in j..nb {
+                let mut s = 0.0;
+                for k in 0..nb {
+                    s += l[i + k * nb] * l[j + k * nb];
+                }
+                let scale = a0[i + j * nb].abs().max(nb as f64);
+                assert!(
+                    (s - a0[i + j * nb]).abs() < 1e-9 * scale,
+                    "nb={nb} ({i},{j}): {s} vs {}",
+                    a0[i + j * nb]
+                );
+            }
+        }
+    }
+}

@@ -150,3 +150,79 @@ fn repeated_runs_are_reproducible_at_high_contention() {
         assert_eq!(cells, want);
     }
 }
+
+/// The fused `GemmBatch` task kind (wide access lists: 2 reads per
+/// covered panel step + 1 write) under the same exactly-once /
+/// identical-contents contract: a real fused factorization plan, every
+/// policy, 1/4/8 workers, every task exactly once, bit-identical
+/// factors across all runs.
+#[test]
+fn fused_gemm_batch_plans_execute_exactly_once_with_identical_factors() {
+    use mpcholesky::cholesky::{CholeskyPlan, KernelCall, TileExecutor, Variant};
+    use mpcholesky::kernels::NativeBackend;
+    use mpcholesky::matern::{matern_matrix, Location, MaternParams, Metric};
+    use mpcholesky::rng::Xoshiro256pp;
+    use mpcholesky::tile::{DenseMatrix, TileMatrix};
+
+    let n = 160;
+    let nb = 32;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let mut r = Xoshiro256pp::seed_from_u64(4);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    locs.sort_by(|a, b| (a.x + a.y).partial_cmp(&(b.x + b.y)).unwrap());
+    let a =
+        DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8)).unwrap();
+    let variant = Variant::MixedPrecision { diag_thick: 2 };
+
+    let mut reference: Option<DenseMatrix> = None;
+    for policy in [
+        SchedulingPolicy::Fifo,
+        SchedulingPolicy::Lifo,
+        SchedulingPolicy::CriticalPath,
+        SchedulingPolicy::PrecisionFrontier,
+    ] {
+        for workers in [1usize, 4, 8] {
+            let mut tiles = TileMatrix::from_dense(&a, nb).unwrap();
+            let map = variant.precision_map(n / nb, None).unwrap();
+            tiles.apply_precision_map(&map);
+            let mut plan = CholeskyPlan::build_fused(n / nb, nb, variant, map, false);
+            let has_batch = plan
+                .graph
+                .tasks()
+                .iter()
+                .any(|t| matches!(t.payload.call, KernelCall::GemmBatch { .. }));
+            assert!(has_batch, "plan must contain the new task kind");
+            let n_tasks = plan.graph.len();
+            let runs: Vec<AtomicUsize> = (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+            let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+            let exec = TileExecutor::new(&tiles, &NativeBackend);
+            let sched =
+                Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: false });
+            sched
+                .run(&mut plan.graph, |idx, sc| {
+                    runs[idx].fetch_add(1, Ordering::SeqCst);
+                    exec.execute(sc, &accesses[idx])
+                })
+                .unwrap();
+            for (k, r) in runs.iter().enumerate() {
+                assert_eq!(
+                    r.load(Ordering::SeqCst),
+                    1,
+                    "{policy:?}/{workers}w: task {k} run count"
+                );
+            }
+            let factor = tiles.to_dense(true);
+            if let Some(want) = &reference {
+                assert_eq!(
+                    factor.max_abs_diff(want),
+                    0.0,
+                    "{policy:?}/{workers}w: factor diverges"
+                );
+            } else {
+                reference = Some(factor);
+            }
+        }
+    }
+}
