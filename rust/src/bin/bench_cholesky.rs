@@ -1,8 +1,11 @@
-//! `bench_cholesky` — machine-readable factorization benchmark.
+//! `bench_cholesky` — machine-readable whole-iteration benchmark.
 //!
-//! Runs the fused generate+factorize pipeline per precision variant and
-//! tile size, reporting GFLOP/s, precision-native resident bytes and
-//! scheduler idle time, and (with `--json`) writes the results to
+//! Runs ONE pipeline task graph per precision variant and tile size —
+//! generation, (per-panel adaptive resolution,) factorization, the
+//! tiled forward solve and the log-determinant chain, i.e. a full
+//! likelihood-iteration's dataflow — reporting GFLOP/s,
+//! precision-native resident bytes, scheduler idle time and the
+//! epilogue's solve time, and (with `--json`) writes the results to
 //! `BENCH_cholesky.json` so CI can track the perf trajectory.
 //!
 //! ```bash
@@ -14,18 +17,17 @@
 //! `128`), `--reps R` (default 3), `--workers W` (default: all cores),
 //! `--policy fifo|lifo|cp|pf` (default `pf` = precision-frontier, the
 //! promoted default policy, which orders ready tasks by critical-path
-//! height then cheapest storage precision), `--fused` (lower trailing
-//! updates as left-looking `GemmBatch` tasks instead of per-step
-//! gemms), `--json [PATH]` (default path `BENCH_cholesky.json`).
+//! height then cheapest storage precision), `--fused` (lower static
+//! plans' trailing updates as left-looking `GemmBatch` tasks instead of
+//! per-step gemms; adaptive pipelines always lower left-looking),
+//! `--json [PATH]` (default path `BENCH_cholesky.json`).
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::time::Instant;
 
 use mpcholesky::bench::Table;
-use mpcholesky::cholesky::{
-    generate_covariance, CholeskyPlan, GenContext, PlanOptions, TileExecutor,
-};
+use mpcholesky::cholesky::{GenContext, PipelineCounts, PlanOptions};
 use mpcholesky::prelude::*;
 use mpcholesky::scheduler::datamove::{self, DeviceModel};
 use mpcholesky::scheduler::ExecutionTrace;
@@ -42,30 +44,36 @@ struct CaseResult {
     full_dp_bytes: usize,
     idle_s: f64,
     utilization: f64,
-    /// False for the adaptive variant, whose trace (and task/flop
-    /// counts) cover the factorization graph only — its generation
-    /// phase runs as a separate untraced graph inside the same timer.
+    /// Always true since the pipeline refactor: every variant —
+    /// including adaptive, which resolves its map per panel-column at
+    /// run time — runs generation inside the same traced graph.
     gen_fused: bool,
     /// Whether the plan's trailing updates ran as fused GemmBatch tasks.
     fused_gemm: bool,
     /// Conversion-protocol task counts of the executed plan.
     conversions: ConversionCounts,
+    /// Pipeline stage censuses (solve / log-det / cross-cov tasks).
+    counts: PipelineCounts,
+    /// Nanoseconds spent inside epilogue (solve/log-det/cross-cov)
+    /// task spans — the O(n^2) share of the iteration's wall time.
+    solve_ns: u64,
     /// Nanoseconds the run spent unpacking packed-bf16 tiles (decode
     /// cache fills + fallback unpacks) — distinguishes decode work from
     /// the scheduler idle time reported next to it.
     decode_ns: u64,
     /// Number of packed-bf16 tile unpacks the run performed.
     bf16_unpacks: u64,
-    /// Demand-miss bytes of replaying the plan on a V100 model with
-    /// per-tile pricing on the realized precision map, conversion-task
-    /// bytes priced inside the same stream.
+    /// Demand-miss bytes of replaying the full pipeline on a V100 model
+    /// with per-tile pricing on the realized precision map,
+    /// conversion-task bytes priced inside the same stream.
     modeled_transfer_bytes: f64,
 }
 
-/// One traced generate+factorize run; returns wall seconds, the lowered
-/// plan, the execution trace (decode counters folded in), the post-run
-/// resident bytes, and the run's bf16 unpack count.
-#[allow(clippy::type_complexity)]
+/// One traced whole-iteration pipeline run; returns wall seconds, the
+/// lowered plan, the execution trace (decode counters folded in), the
+/// post-run resident bytes, the bf16 unpack count, and the realized
+/// precision map.
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
 fn traced_run(
     variant: Variant,
     locs: &[Location],
@@ -74,51 +82,53 @@ fn traced_run(
     nb: usize,
     sched: &Scheduler,
     opts: PlanOptions,
-) -> Result<(f64, CholeskyPlan, ExecutionTrace, usize, u64)> {
+    rhs: &[f64],
+) -> Result<(f64, PipelinePlan, ExecutionTrace, usize, u64, PrecisionMap)> {
     let p = n / nb;
-    let mut tiles = TileMatrix::zeros(n, nb)?;
-    let t0 = Instant::now();
-    let adaptive = matches!(variant, Variant::Adaptive { .. });
-    let (mut plan, fused_gen) = if adaptive {
-        // the adaptive map needs the generated tile norms: generation is
-        // its own parallel phase, inside the same timer
-        generate_covariance(
-            &mut tiles,
-            locs,
-            theta,
-            Metric::Euclidean,
-            1e-8,
-            &NativeBackend,
-            sched,
-        )?;
-        let map = variant.precision_map(p, Some(&tiles))?;
-        tiles.apply_precision_map(&map);
-        (CholeskyPlan::build_with_opts(p, nb, variant, map, false, opts), false)
-    } else {
-        let map = variant.precision_map(p, None)?;
-        if !matches!(variant, Variant::Dst { .. }) {
-            // precision-native storage: tiles take their assigned format
-            // up front, generation writes it directly
-            tiles.apply_precision_map(&map);
-        }
-        (CholeskyPlan::build_with_opts(p, nb, variant, map, true, opts), true)
+    let popts = PipelineOptions {
+        rhs_cols: 1,
+        backward: false,
+        logdet: true,
+        pred_len: 0,
+        plan: opts,
     };
-    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
-    let mut exec = TileExecutor::new(&tiles, &NativeBackend);
-    if fused_gen {
-        exec = exec.with_generation(GenContext {
-            locations: locs,
-            theta,
-            metric: Metric::Euclidean,
-            nugget: 1e-8,
-        });
-    }
-    let mut trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
+    let mut tiles = TileMatrix::zeros(n, nb)?;
+    let mut bufs = PipelineBuffers::new(p, nb, 1, 0);
+    bufs.load_column(0, rhs);
+    let t0 = Instant::now();
+    let (mut plan, resolver) = match variant {
+        Variant::Adaptive { tolerance } => (
+            // per-panel-column resolution: generation, resolve,
+            // factorization and the epilogue in ONE graph — no
+            // whole-matrix barrier, no separate untraced phase
+            PipelinePlan::build_adaptive(p, nb, tolerance, popts),
+            Some(PanelResolver::new(p, tolerance)),
+        ),
+        v => {
+            let map = v.precision_map(p, None)?;
+            if !matches!(v, Variant::Dst { .. }) {
+                // precision-native storage: tiles take their assigned
+                // format up front, generation writes it directly
+                tiles.apply_precision_map(&map);
+            }
+            (PipelinePlan::build_static(p, nb, v, map, popts), None)
+        }
+    };
+    let gen = GenContext { locations: locs, theta, metric: Metric::Euclidean, nugget: 1e-8 };
+    let (trace, unpacks) = run_pipeline(
+        &mut plan,
+        &tiles,
+        &bufs,
+        resolver.as_ref(),
+        None,
+        Some(gen),
+        &NativeBackend,
+        sched,
+    )?;
     let wall = t0.elapsed().as_secs_f64();
-    trace.decode_ns = exec.stats.decode_ns();
-    let unpacks = exec.stats.bf16_unpacks();
+    let realized = plan.realized_map(&tiles);
     let resident = tiles.resident_bytes();
-    Ok((wall, plan, trace, resident, unpacks))
+    Ok((wall, plan, trace, resident, unpacks, realized))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -135,29 +145,42 @@ fn bench_case(
     opts: PlanOptions,
 ) -> Result<CaseResult> {
     let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true });
+    // deterministic per-instance RHS so the solve stage solves the same
+    // system every rep
+    let mut rng = Xoshiro256pp::seed_from_u64(7 + n as u64 + nb as u64);
+    let rhs: Vec<f64> = (0..n).map(|_| rng.standard_normal()).collect();
     // keep every rep and report ALL metrics from the median-wall rep, so
     // wall, idle, utilization and decode time describe the same run
     let mut runs = Vec::with_capacity(reps);
     for _ in 0..reps {
-        runs.push(traced_run(variant, locs, theta, n, nb, &sched, opts)?);
+        runs.push(traced_run(variant, locs, theta, n, nb, &sched, opts, &rhs)?);
     }
     runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let (median_s, plan, trace, resident, unpacks) = runs.swap_remove(runs.len() / 2);
+    let (median_s, plan, trace, resident, unpacks, realized) = runs.swap_remove(runs.len() / 2);
     let total_flops = plan.total_flops();
-    // analytic transfer volume of this plan on a V100: per-tile pricing
-    // at the realized map's stored bytes, conversion-task bytes priced
-    // inside the same stream
-    let modeled = datamove::simulate_with_conversions(
+    // analytic transfer volume of the full pipeline on a V100: per-tile
+    // pricing at the realized map's stored bytes, RHS/scalar resources
+    // at f64 bytes, conversion-task bytes priced inside the same stream
+    let modeled = datamove::simulate_pipeline(
         &plan.graph,
         &DeviceModel::v100(),
         nb,
-        &plan.map,
-        &plan.conversion_totals(),
+        &realized,
+        &plan.conversions,
+        plan.r.max(1),
     )
     .demand_bytes;
+    // epilogue share of the busy time: spans of solve/log-det/cross-cov
+    // tasks (the trace records task indices into the plan's graph)
+    let solve_ns: u64 = trace
+        .spans
+        .iter()
+        .filter(|s| plan.graph.task(s.task).payload.call.is_epilogue())
+        .map(|s| s.end_ns - s.start_ns)
+        .sum();
     Ok(CaseResult {
         key: key.to_string(),
-        label: plan.map.label(),
+        label: realized.label(),
         nb,
         tasks: plan.graph.len(),
         total_flops,
@@ -167,9 +190,11 @@ fn bench_case(
         full_dp_bytes: (n / nb) * ((n / nb) + 1) / 2 * nb * nb * 8,
         idle_s: trace.idle_ns(workers) as f64 / 1e9,
         utilization: trace.utilization(workers),
-        gen_fused: !matches!(variant, Variant::Adaptive { .. }),
-        fused_gemm: plan.options.fuse_gemm,
-        conversions: plan.conversion_totals(),
+        gen_fused: true,
+        fused_gemm: plan.options.plan.fuse_gemm || matches!(variant, Variant::Adaptive { .. }),
+        conversions: plan.conversions,
+        counts: plan.counts,
+        solve_ns,
         decode_ns: trace.decode_ns,
         bf16_unpacks: unpacks,
         modeled_transfer_bytes: modeled,
@@ -203,7 +228,9 @@ fn to_json(
              \"resident_bytes\": {}, \"full_dp_bytes\": {}, \"idle_s\": {:.6}, \
              \"utilization\": {:.4}, \"gen_fused\": {}, \"fused_gemm\": {}, \
              \"conv_demotes\": {}, \"conv_promotes\": {}, \"conv_decodes\": {}, \
-             \"conv_drops\": {}, \"decode_ns\": {}, \"bf16_unpacks\": {}, \
+             \"conv_drops\": {}, \"solve_tasks\": {}, \"logdet_tasks\": {}, \
+             \"crosscov_tasks\": {}, \"resolve_tasks\": {}, \"solve_ns\": {}, \
+             \"decode_ns\": {}, \"bf16_unpacks\": {}, \
              \"modeled_transfer_bytes\": {:.1}}}",
             json_escape(&r.key),
             json_escape(&r.label),
@@ -222,6 +249,11 @@ fn to_json(
             r.conversions.promotes,
             r.conversions.decodes,
             r.conversions.drops,
+            r.counts.solves(),
+            r.counts.logdet,
+            r.counts.crosscov,
+            r.counts.resolve,
+            r.solve_ns,
             r.decode_ns,
             r.bf16_unpacks,
             r.modeled_transfer_bytes
@@ -304,8 +336,8 @@ fn run() -> Result<()> {
 
     let mut rows = Vec::new();
     let mut table = Table::new(&[
-        "variant", "nb", "label", "tasks", "conv", "median s", "GFLOP/s", "resident MiB",
-        "model xfer MiB", "idle s", "decode ms", "util",
+        "variant", "nb", "label", "tasks", "solve", "conv", "median s", "GFLOP/s",
+        "resident MiB", "model xfer MiB", "idle s", "solve ms", "decode ms", "util",
     ]);
     for &nb in &nb_list {
         if n % nb != 0 {
@@ -319,12 +351,14 @@ fn run() -> Result<()> {
                 format!("{nb}"),
                 r.label.clone(),
                 format!("{}", r.tasks),
+                format!("{}", r.counts.solves() + r.counts.logdet + r.counts.crosscov),
                 format!("{}", r.conversions.total()),
                 format!("{:.4}", r.median_s),
                 format!("{:.2}", r.gflops),
                 format!("{:.2}", r.resident_bytes as f64 / (1024.0 * 1024.0)),
                 format!("{:.2}", r.modeled_transfer_bytes / (1024.0 * 1024.0)),
                 format!("{:.4}", r.idle_s),
+                format!("{:.3}", r.solve_ns as f64 / 1e6),
                 format!("{:.3}", r.decode_ns as f64 / 1e6),
                 format!("{:.2}", r.utilization),
             ]);

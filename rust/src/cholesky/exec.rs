@@ -33,11 +33,12 @@ use std::time::Instant;
 
 use crate::error::Result;
 use crate::kernels::TileBackend;
-use crate::matern::{Location, MaternParams, Metric};
-use crate::scheduler::graph::Access;
-use crate::tile::{convert, TileBuf, TileId, TileMatrix, TileSlot};
+use crate::matern::{matern_block, Location, MaternParams, Metric};
+use crate::scheduler::graph::{Access, ResourceId};
+use crate::tile::{convert, Precision, TileBuf, TileId, TileMatrix, TileSlot};
 
 use super::kernelcall::{KernelCall, SizedCall};
+use super::pipeline::{PanelResolver, PipelineBuffers, PRED_BLOCK};
 
 /// Covariance-generation context for `KernelCall::Generate` tasks.
 /// Each tile is generated straight into its native storage precision
@@ -49,6 +50,27 @@ pub struct GenContext<'a> {
     pub metric: Metric,
     /// Additive diagonal nugget applied to global diagonal entries.
     pub nugget: f64,
+}
+
+/// Cross-covariance context for `KernelCall::CrossCov` prediction
+/// tasks: which sites to predict, against which training set, and which
+/// RHS column holds the solved kriging weights.
+pub struct CrossCovContext<'a> {
+    pub sites: &'a [Location],
+    pub train: &'a [Location],
+    pub theta: MaternParams,
+    pub metric: Metric,
+    /// RHS panel column holding `w = Sigma^{-1} z`.
+    pub wcol: usize,
+}
+
+/// Pipeline context for the whole-iteration task kinds: the shared
+/// RHS/scalar/prediction buffers, plus the optional adaptive resolver
+/// (dynamic plans) and cross-covariance inputs (prediction plans).
+pub struct PipelineContext<'a> {
+    pub bufs: &'a PipelineBuffers,
+    pub resolver: Option<&'a PanelResolver>,
+    pub crosscov: Option<CrossCovContext<'a>>,
 }
 
 /// Per-worker conversion scratch: unpack/convert targets for
@@ -63,6 +85,15 @@ struct Scratch {
     a64: Vec<f64>,
     b64: Vec<f64>,
     gen64: Vec<f64>,
+    /// Per-column accumulator of the tiled solve updates (hoisted so
+    /// the solve hot path never allocates).
+    acc64: Vec<f64>,
+    /// Reassembled kriging weight vector for CrossCov tasks.
+    w64: Vec<f64>,
+    /// Cross-covariance block buffer (rows x n_train) for CrossCov
+    /// tasks — the same per-worker footprint the serial predictor's
+    /// blocking held, kept thread-local instead of per-task.
+    cov64: Vec<f64>,
 }
 
 thread_local! {
@@ -208,19 +239,22 @@ fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) {
     }
 }
 
-/// Executor: all tile mutability lives in the tile matrix; the executor
-/// itself carries only the run-wide (atomic) decode counters.
+/// Executor: all tile mutability lives in the tile matrix (and, for
+/// pipeline plans, the shared [`PipelineBuffers`]); the executor itself
+/// carries only the run-wide (atomic) decode counters.
 pub struct TileExecutor<'a, B: TileBackend + ?Sized> {
     pub tiles: &'a TileMatrix,
     pub backend: &'a B,
     pub gen: Option<GenContext<'a>>,
+    /// Pipeline state for the solve/log-det/cross-cov/resolve tasks.
+    pub pipe: Option<PipelineContext<'a>>,
     /// bf16 decode counters accumulated across the run (all workers).
     pub stats: ExecStats,
 }
 
 impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
     pub fn new(tiles: &'a TileMatrix, backend: &'a B) -> Self {
-        Self { tiles, backend, gen: None, stats: ExecStats::default() }
+        Self { tiles, backend, gen: None, pipe: None, stats: ExecStats::default() }
     }
 
     pub fn with_generation(mut self, gen: GenContext<'a>) -> Self {
@@ -228,17 +262,32 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
         self
     }
 
+    pub fn with_pipeline(mut self, pipe: PipelineContext<'a>) -> Self {
+        self.pipe = Some(pipe);
+        self
+    }
+
     /// Execute one call.  `accesses` is the task's declared access list —
-    /// used purely for the debug-mode guard protocol.
-    pub fn execute(&self, sc: &SizedCall, accesses: &[(TileId, Access)]) -> Result<()> {
-        for &(t, m) in accesses {
-            self.tiles.guard_acquire(t, m == Access::Write);
+    /// used purely for the debug-mode guard protocol (tile resources
+    /// only; RHS/scalar/prediction exclusivity rides the same DAG
+    /// ordering and is exercised by the scheduler-coverage tests).
+    pub fn execute(&self, sc: &SizedCall, accesses: &[(ResourceId, Access)]) -> Result<()> {
+        for &(res, m) in accesses {
+            if let ResourceId::Tile(t) = res {
+                self.tiles.guard_acquire(t, m == Access::Write);
+            }
         }
         let r = self.execute_inner(sc);
-        for &(t, m) in accesses {
-            self.tiles.guard_release(t, m == Access::Write);
+        for &(res, m) in accesses {
+            if let ResourceId::Tile(t) = res {
+                self.tiles.guard_release(t, m == Access::Write);
+            }
         }
         r
+    }
+
+    fn pipeline(&self) -> &PipelineContext<'a> {
+        self.pipe.as_ref().expect("pipeline task scheduled without PipelineContext")
     }
 
     fn execute_inner(&self, sc: &SizedCall) -> Result<()> {
@@ -268,6 +317,14 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                     for d in 0..nb {
                                         buf[d + d * nb] += g.nugget;
                                     }
+                                }
+                                // dynamic adaptive pipelines: record the
+                                // generation-time Frobenius norm for the
+                                // per-column ResolvePanel rule (tiles are
+                                // still F64 at this point by construction)
+                                if let Some(rz) = self.pipe.as_ref().and_then(|pc| pc.resolver) {
+                                    let sq: f64 = buf.iter().map(|x| x * x).sum();
+                                    rz.record_norm(i, j, sq.sqrt());
                                 }
                             }
                             TileBuf::F32(buf) => {
@@ -460,6 +517,212 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 }
                                 convert::pack_bf16(&*cv, bits);
                             }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::ResolvePanel { j } => {
+                        // fold column j's generation-time norms into the
+                        // ||A||_F prefix, pick each off-diagonal tile's
+                        // storage, and convert the column in place (the
+                        // diagonal always stays F64: potrf pivots)
+                        let rz = self
+                            .pipeline()
+                            .resolver
+                            .expect("ResolvePanel task scheduled without PanelResolver");
+                        let precs = rz.resolve_column(j);
+                        for (off, prec) in precs.iter().enumerate() {
+                            let i = j + 1 + off;
+                            if *prec != Precision::F64 {
+                                tm.tile_ptr(TileId::new(i, j)).convert_to(*prec);
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::TrsmNative { i, k } => {
+                        // runtime-precision trsm (adaptive pipelines):
+                        // dispatch on the panel tile's resolved storage,
+                        // operands converted inline (GemmBatch protocol)
+                        let l = tm.tile_ptr(TileId::new(k, k));
+                        let b = tm.tile_ptr(TileId::new(i, k));
+                        match &mut b.buf {
+                            TileBuf::F64(bb) => {
+                                let lv = f64_op_view(l, &mut scr.a64, &self.stats);
+                                self.backend.trsm_f64(lv, bb, nb);
+                            }
+                            TileBuf::F32(bb) => {
+                                let lv = f32_op_view(l, &mut scr.a32, &self.stats);
+                                self.backend.trsm_f32(lv, bb, nb);
+                            }
+                            TileBuf::Bf16(bits) => {
+                                let lv = f32_op_view(l, &mut scr.a32, &self.stats);
+                                let bv = resized(&mut scr.b32, nn);
+                                decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *bv));
+                                self.backend.trsm_f32(lv, bv, nb);
+                                convert::pack_bf16(&*bv, bits);
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::SyrkNative { j, k } => {
+                        // runtime-precision syrk on the diagonal target
+                        let a = tm.tile_ptr(TileId::new(j, k));
+                        let c = tm.tile_ptr(TileId::new(j, j));
+                        match &mut c.buf {
+                            TileBuf::F64(cb) => {
+                                let av = f64_op_view(a, &mut scr.a64, &self.stats);
+                                self.backend.syrk_f64(cb, av, nb);
+                            }
+                            TileBuf::F32(cb) => {
+                                let av = f32_op_view(a, &mut scr.a32, &self.stats);
+                                self.backend.syrk_f32(cb, av, nb);
+                            }
+                            TileBuf::Bf16(bits) => {
+                                let av = f32_op_view(a, &mut scr.a32, &self.stats);
+                                let cv = resized(&mut scr.c32, nn);
+                                decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
+                                self.backend.syrk_f32(cv, av, nb);
+                                convert::pack_bf16(&*cv, bits);
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::SolveFwd { i, k, .. } => {
+                        // multi-RHS forward substitution over RHS block
+                        // rows, column by column in the serial oracle's
+                        // exact op order (bit-identical in full DP);
+                        // reduced factor tiles promote through the
+                        // inline conversion protocol (exact)
+                        let bufs = self.pipeline().bufs;
+                        debug_assert_eq!(bufs.nb(), nb);
+                        let r = bufs.r();
+                        if i == k {
+                            let l = tm.tile_ptr(TileId::new(i, i));
+                            let t = f64_op_view(l, &mut scr.a64, &self.stats);
+                            let bi = bufs.rhs_block_mut(i);
+                            for col in 0..r {
+                                let yi = &mut bi[col * nb..(col + 1) * nb];
+                                for c in 0..nb {
+                                    yi[c] /= t[c + c * nb];
+                                    let yc = yi[c];
+                                    for row in (c + 1)..nb {
+                                        yi[row] -= t[row + c * nb] * yc;
+                                    }
+                                }
+                            }
+                        } else {
+                            let a = tm.tile_ptr(TileId::new(i, k));
+                            let t = f64_op_view(a, &mut scr.a64, &self.stats);
+                            let bk = bufs.rhs_block(k);
+                            let bi = bufs.rhs_block_mut(i);
+                            let acc = resized(&mut scr.acc64, nb);
+                            for col in 0..r {
+                                let yj = &bk[col * nb..(col + 1) * nb];
+                                acc.fill(0.0);
+                                for c in 0..nb {
+                                    let yc = yj[c];
+                                    if yc != 0.0 {
+                                        let tcol = &t[c * nb..(c + 1) * nb];
+                                        for row in 0..nb {
+                                            acc[row] += tcol[row] * yc;
+                                        }
+                                    }
+                                }
+                                let yi = &mut bi[col * nb..(col + 1) * nb];
+                                for row in 0..nb {
+                                    yi[row] -= acc[row];
+                                }
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::SolveBwd { i, k, .. } => {
+                        // multi-RHS backward substitution (L^T x = y),
+                        // same bit-exactness contract as SolveFwd
+                        let bufs = self.pipeline().bufs;
+                        debug_assert_eq!(bufs.nb(), nb);
+                        let r = bufs.r();
+                        if i == k {
+                            let l = tm.tile_ptr(TileId::new(i, i));
+                            let t = f64_op_view(l, &mut scr.a64, &self.stats);
+                            let bi = bufs.rhs_block_mut(i);
+                            for col in 0..r {
+                                let xi = &mut bi[col * nb..(col + 1) * nb];
+                                for c in (0..nb).rev() {
+                                    xi[c] /= t[c + c * nb];
+                                    let xc = xi[c];
+                                    for row in 0..c {
+                                        xi[row] -= t[c + row * nb] * xc;
+                                    }
+                                }
+                            }
+                        } else {
+                            // k > i: subtract L(k,i)^T x_k from block i
+                            let a = tm.tile_ptr(TileId::new(k, i));
+                            let t = f64_op_view(a, &mut scr.a64, &self.stats);
+                            let bk = bufs.rhs_block(k);
+                            let bi = bufs.rhs_block_mut(i);
+                            let acc = resized(&mut scr.acc64, nb);
+                            for col in 0..r {
+                                let xj = &bk[col * nb..(col + 1) * nb];
+                                for c in 0..nb {
+                                    let tcol = &t[c * nb..(c + 1) * nb];
+                                    let mut s = 0.0;
+                                    for row in 0..nb {
+                                        s += tcol[row] * xj[row];
+                                    }
+                                    acc[c] = s;
+                                }
+                                let xi = &mut bi[col * nb..(col + 1) * nb];
+                                for c in 0..nb {
+                                    xi[c] -= acc[c];
+                                }
+                            }
+                        }
+                        Ok(())
+                    }
+                    KernelCall::LogDetPartial { k } => {
+                        // extend the running sum-of-logs chain through
+                        // scalar slot k (the serial accumulation order)
+                        let bufs = self.pipeline().bufs;
+                        let l = tm.tile_ptr(TileId::new(k, k));
+                        let t = f64_op_view(l, &mut scr.a64, &self.stats);
+                        let mut s = bufs.logdet_prev(k);
+                        for d in 0..nb {
+                            s += t[d + d * nb].ln();
+                        }
+                        bufs.logdet_set(k, s);
+                        Ok(())
+                    }
+                    KernelCall::CrossCov { block, rows, n } => {
+                        // kriging cross-covariance gemv for one block of
+                        // prediction sites, identical op order to the
+                        // serial KrigingModel::predict path; buffers are
+                        // thread-local scratch, not per-task allocations
+                        let pc = self.pipeline();
+                        let cc = pc
+                            .crosscov
+                            .as_ref()
+                            .expect("CrossCov task scheduled without CrossCovContext");
+                        let bufs = pc.bufs;
+                        debug_assert_eq!(n, cc.train.len());
+                        debug_assert_eq!(n, bufs.p() * nb);
+                        let w = resized(&mut scr.w64, n);
+                        for b in 0..bufs.p() {
+                            let blk = bufs.rhs_block(b);
+                            w[b * nb..(b + 1) * nb]
+                                .copy_from_slice(&blk[cc.wcol * nb..(cc.wcol + 1) * nb]);
+                        }
+                        let s = block * PRED_BLOCK;
+                        let cov = resized(&mut scr.cov64, rows * n);
+                        matern_block(cov, &cc.sites[s..s + rows], cc.train, &cc.theta, cc.metric);
+                        let out = bufs.pred_block_mut(block);
+                        debug_assert_eq!(out.len(), rows);
+                        for rr in 0..rows {
+                            let mut acc = 0.0;
+                            for c in 0..n {
+                                acc += cov[rr + c * rows] * w[c];
+                            }
+                            out[rr] = acc;
                         }
                         Ok(())
                     }

@@ -69,6 +69,46 @@ pub enum KernelCall {
     /// Emitted by `CholeskyPlan::build_fused` so dependency-counter and
     /// ready-queue traffic scale with tiles, not rank-nb updates.
     GemmBatch { i: usize, j: usize, k0: usize, k1: usize, prec: Precision },
+    /// Resolve the adaptive precision of panel column `j` at run time
+    /// (pipeline plans): fold the column's generation-time tile norms
+    /// into the running prefix of `||A||_F`, pick each off-diagonal
+    /// tile's cheapest admissible storage, and convert the column in
+    /// place.  Chained through scalar slots so generation of column
+    /// j+1 overlaps factorization of earlier panels — this is the task
+    /// that replaces the old whole-matrix generation -> map barrier.
+    ResolvePanel { j: usize },
+    /// Panel `trsm` whose compute precision is the tile's *runtime*
+    /// storage (set by [`KernelCall::ResolvePanel`]); used by adaptive
+    /// pipeline plans, whose precisions are unknown at plan time.
+    /// Dispatch-equivalent to `TrsmDp`/`TrsmSp`/`TrsmHp` with inline
+    /// operand conversion (the `GemmBatch` protocol).
+    TrsmNative { i: usize, k: usize },
+    /// Trailing `syrk` dispatching on the diagonal target's runtime
+    /// storage, with inline operand conversion (adaptive pipelines).
+    SyrkNative { j: usize, k: usize },
+    /// Multi-RHS forward-substitution task on RHS block row `i` at panel
+    /// step `k` (`L y = b`, Eq. 2's quadratic form): `i == k` is the
+    /// in-tile forward solve with `L(k,k)`, `i > k` subtracts
+    /// `L(i,k) * y_k` from block `i`.  `r` is the RHS column count (the
+    /// n x r panel).  DP compute; reduced factor tiles are read through
+    /// the conversion/decode protocol.
+    SolveFwd { i: usize, k: usize, r: usize },
+    /// Multi-RHS backward-substitution task (`L^T x = y`, the kriging
+    /// weight solve): `i == k` solves with `L(i,i)^T`, `i < k` subtracts
+    /// `L(k,i)^T * x_k` from block `i` (left-looking, ascending-k per
+    /// block — the serial oracle's exact floating-point order).
+    SolveBwd { i: usize, k: usize, r: usize },
+    /// Log-determinant partial of diagonal tile `k`: extends the running
+    /// `sum log L_dd` chain through scalar slot k (bit-identical to the
+    /// serial accumulation order of `log_determinant`).
+    LogDetPartial { k: usize },
+    /// Kriging cross-covariance gemv for prediction block `block`:
+    /// `mu*_block = C(s*_block, s_train) w` against the solved weights
+    /// in the RHS panel — the prediction epilogue as schedulable tasks.
+    /// `rows` is the block's site count (the last block may be partial)
+    /// and `n` the training-set size, so the cost models can price the
+    /// 2*rows*n gemv flops exactly.
+    CrossCov { block: usize, rows: usize, n: usize },
 }
 
 impl KernelCall {
@@ -85,12 +125,25 @@ impl KernelCall {
             KernelCall::DropScratch { .. } => 0.0,
             KernelCall::TrsmDp { .. }
             | KernelCall::TrsmSp { .. }
-            | KernelCall::TrsmHp { .. } => flops::trsm(nb),
-            KernelCall::SyrkDp { .. } => flops::syrk(nb),
+            | KernelCall::TrsmHp { .. }
+            | KernelCall::TrsmNative { .. } => flops::trsm(nb),
+            KernelCall::SyrkDp { .. } | KernelCall::SyrkNative { .. } => flops::syrk(nb),
             KernelCall::GemmDp { .. }
             | KernelCall::GemmSp { .. }
             | KernelCall::GemmHp { .. } => flops::gemm(nb),
             KernelCall::GemmBatch { k0, k1, .. } => (k1 - k0) as f64 * flops::gemm(nb),
+            // column-norm bookkeeping + O(column) storage conversion:
+            // byte-bound, element count as proxy (like the conversions)
+            KernelCall::ResolvePanel { .. } => (nb * nb) as f64,
+            // in-tile triangular solve: nb^2 flops per RHS column
+            KernelCall::SolveFwd { i, k, r } | KernelCall::SolveBwd { i, k, r } => {
+                let per_col = if i == k { nb * nb } else { 2 * nb * nb };
+                (r * per_col) as f64
+            }
+            KernelCall::LogDetPartial { .. } => nb as f64,
+            // cross-covariance gemv: evaluate rows*n covariances and
+            // accumulate 2*rows*n flops against the weight vector
+            KernelCall::CrossCov { rows, n, .. } => (2 * rows * n) as f64,
         }
     }
 
@@ -101,6 +154,9 @@ impl KernelCall {
             KernelCall::TrsmSp { .. } | KernelCall::GemmSp { .. } => Precision::F32,
             KernelCall::TrsmHp { .. } | KernelCall::GemmHp { .. } => Precision::Bf16,
             KernelCall::GemmBatch { prec, .. } => *prec,
+            // runtime-precision codelets (adaptive pipelines) and the
+            // DP epilogue report F64: cost models price their compute
+            // conservatively and the PrecisionFrontier rank ties at 0
             _ => Precision::F64,
         }
     }
@@ -125,7 +181,27 @@ impl KernelCall {
             KernelCall::GemmBatch { prec: Precision::F64, .. } => "dgemmb",
             KernelCall::GemmBatch { prec: Precision::F32, .. } => "sgemmb",
             KernelCall::GemmBatch { prec: Precision::Bf16, .. } => "hgemmb",
+            KernelCall::ResolvePanel { .. } => "resolve",
+            KernelCall::TrsmNative { .. } => "ntrsm",
+            KernelCall::SyrkNative { .. } => "nsyrk",
+            KernelCall::SolveFwd { .. } => "dtrsv",
+            KernelCall::SolveBwd { .. } => "dtrsvt",
+            KernelCall::LogDetPartial { .. } => "logdet",
+            KernelCall::CrossCov { .. } => "crosscov",
         }
+    }
+
+    /// Is this one of the pipeline's O(n^2) epilogue tasks (triangular
+    /// solve, log-det, cross-covariance)?  Bench reports split wall time
+    /// between the cubic factorization and this set.
+    pub fn is_epilogue(&self) -> bool {
+        matches!(
+            self,
+            KernelCall::SolveFwd { .. }
+                | KernelCall::SolveBwd { .. }
+                | KernelCall::LogDetPartial { .. }
+                | KernelCall::CrossCov { .. }
+        )
     }
 }
 
@@ -192,6 +268,37 @@ mod tests {
         // conversion tasks rank as f64 for the PrecisionFrontier tie-break
         assert_eq!(d.precision(), Precision::F64);
         assert_eq!(d.name(), "hconv2s");
+    }
+
+    #[test]
+    fn pipeline_calls_report_cost_names_and_epilogue() {
+        let nb = 32;
+        let diag = KernelCall::SolveFwd { i: 2, k: 2, r: 4 };
+        assert_eq!(diag.flops_at(nb), (4 * nb * nb) as f64);
+        let upd = KernelCall::SolveFwd { i: 3, k: 1, r: 2 };
+        assert_eq!(upd.flops_at(nb), (2 * 2 * nb * nb) as f64);
+        assert!(upd.is_epilogue());
+        assert!(KernelCall::LogDetPartial { k: 0 }.is_epilogue());
+        let cc = KernelCall::CrossCov { block: 0, rows: 100, n: 512 };
+        assert!(cc.is_epilogue());
+        assert_eq!(cc.flops_at(nb), (2 * 100 * 512) as f64);
+        assert_eq!(cc.name(), "crosscov");
+        assert!(!KernelCall::PotrfDp { k: 0 }.is_epilogue());
+        assert!(!KernelCall::ResolvePanel { j: 0 }.is_epilogue());
+        // the DP epilogue + runtime-precision codelets all report F64
+        assert_eq!(diag.precision(), Precision::F64);
+        assert_eq!(KernelCall::TrsmNative { i: 1, k: 0 }.precision(), Precision::F64);
+        assert_eq!(diag.name(), "dtrsv");
+        assert_eq!(KernelCall::SolveBwd { i: 0, k: 1, r: 1 }.name(), "dtrsvt");
+        assert_eq!(KernelCall::ResolvePanel { j: 1 }.name(), "resolve");
+        assert_eq!(
+            KernelCall::TrsmNative { i: 1, k: 0 }.flops_at(nb),
+            KernelCall::TrsmDp { i: 1, k: 0 }.flops_at(nb)
+        );
+        assert_eq!(
+            KernelCall::SyrkNative { j: 1, k: 0 }.flops_at(nb),
+            KernelCall::SyrkDp { j: 1, k: 0 }.flops_at(nb)
+        );
     }
 
     #[test]

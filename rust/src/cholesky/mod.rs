@@ -20,11 +20,16 @@
 
 pub mod exec;
 pub mod kernelcall;
+pub mod pipeline;
 pub mod plan;
 pub mod solve;
 
-pub use exec::{ExecStats, GenContext, TileExecutor};
+pub use exec::{CrossCovContext, ExecStats, GenContext, PipelineContext, TileExecutor};
 pub use kernelcall::{KernelCall, SizedCall};
+pub use pipeline::{
+    merge_graphs, run_pipeline, BatchCall, PanelResolver, PipelineBuffers, PipelineCounts,
+    PipelineOptions, PipelinePlan, PRED_BLOCK,
+};
 pub use plan::{CholeskyPlan, ConversionCounts, PlanOptions};
 pub use solve::{log_determinant, solve_lower, solve_lower_transposed};
 
@@ -175,8 +180,9 @@ impl Variant {
 /// Prepare tile storage for a variant's precision map: convert non-DP
 /// tiles to their native reduced storage (Algorithm 1 lines 2-6, with
 /// bf16 packing for Bf16 tiles) or zero them (DST, which keeps all live
-/// tiles f64).
-fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
+/// tiles f64).  Shared with the pipeline drivers (MLE / kriging), whose
+/// static plans need the same storage prep before generation runs.
+pub(crate) fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
     match variant {
         Variant::FullDp => {}
         Variant::Dst { .. } => {

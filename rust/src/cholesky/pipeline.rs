@@ -1,0 +1,979 @@
+//! Whole-iteration pipeline plans: one STF task graph covering
+//! generation -> precision-map resolution -> factorization -> multi-RHS
+//! triangular solves -> log-determinant -> kriging cross-covariance.
+//!
+//! Before this module, only the cubic factorization was task-based: the
+//! O(n^2) epilogue (solves, log-det) and the prediction path ran as
+//! serial loops the scheduler, the data-movement pricer and the trace
+//! could not see, and `Variant::Adaptive` forced a whole-matrix barrier
+//! between generation and factorization.  A [`PipelinePlan`] closes both
+//! gaps:
+//!
+//! * The epilogue joins the dataflow as [`KernelCall::SolveFwd`] /
+//!   [`KernelCall::SolveBwd`] panel tasks over an n x r RHS block
+//!   (declaring [`ResourceId::Rhs`] accesses), a
+//!   [`KernelCall::LogDetPartial`] chain through scalar slots, and
+//!   [`KernelCall::CrossCov`] gemv tasks over prediction blocks.  All of
+//!   them replicate the serial oracles' exact floating-point order, so
+//!   full-DP pipelines are bit-identical to `solve_lower` /
+//!   `solve_lower_transposed` / `log_determinant`.
+//!
+//! * Adaptive plans ([`PipelinePlan::build_adaptive`]) resolve the
+//!   precision map **per panel-column** at run time: generation tasks
+//!   record their tile's Frobenius norm, and a [`KernelCall::ResolvePanel`]
+//!   task per column folds those norms into a running prefix of
+//!   `||A||_F`, picks each tile's storage and converts the column in
+//!   place.  The prefix norm is a lower bound of the full norm, so the
+//!   per-column rule never demotes a tile the whole-matrix rule would
+//!   keep (it is strictly conservative; the last column sees the exact
+//!   global norm).  Resolution of column j depends only on generation of
+//!   columns <= j plus the scalar chain link from column j-1, so
+//!   generation of panel j+1 overlaps factorization of panel j under
+//!   every `SchedulingPolicy` — the old generate-everything barrier is
+//!   gone.  The factor stage lowers left-looking ([`KernelCall::GemmBatch`]
+//!   + [`KernelCall::TrsmNative`]/[`KernelCall::SyrkNative`]), which is
+//!   what makes per-column resolution sound: every write to tile (i, j)
+//!   happens at its finalizing step j, after `ResolvePanel { j }`.
+//!
+//! Scalar-slot layout: slots `0..p` carry the adaptive resolution chain,
+//! slots `p..2p` the log-determinant chain.
+//!
+//! [`merge_graphs`] batches several independent pipelines (e.g. the k
+//! folds of a PMSE cross-validation) into ONE graph by offsetting each
+//! member's resources into a private namespace, so a single
+//! `Scheduler::run` work-steals across all of them.
+
+use std::cell::UnsafeCell;
+
+use crate::error::Result;
+use crate::kernels::TileBackend;
+use crate::scheduler::{Access, ExecutionTrace, ResourceId, Scheduler, TaskCost, TaskGraph};
+use crate::tile::{Precision, PrecisionMap, TileId, TileMatrix};
+
+use super::exec::{CrossCovContext, GenContext, PipelineContext, TileExecutor};
+use super::kernelcall::{KernelCall, SizedCall};
+use super::plan::{CholeskyPlan, ConversionCounts, PlanOptions};
+use super::Variant;
+
+/// Sites per [`KernelCall::CrossCov`] prediction block — the same
+/// blocking `KrigingModel::predict` uses, so in-graph predictions are
+/// bit-identical to the serial path.
+pub const PRED_BLOCK: usize = 256;
+
+/// Scalar slot carrying the adaptive resolution chain link of column `j`.
+fn resolve_slot(j: usize) -> usize {
+    j
+}
+
+/// Scalar slot carrying the log-det running sum through diagonal tile `k`.
+fn logdet_slot(p: usize, k: usize) -> usize {
+    p + k
+}
+
+/// Reinterpret a run of `UnsafeCell<f64>` as a plain shared slice.
+///
+/// # Safety
+/// Caller must guarantee (via the scheduler's DAG ordering) that no
+/// conflicting write to the same cells is live.
+unsafe fn cells_ref(cells: &[UnsafeCell<f64>]) -> &[f64] {
+    std::slice::from_raw_parts(cells.as_ptr() as *const f64, cells.len())
+}
+
+/// Reinterpret a run of `UnsafeCell<f64>` as an exclusive slice.
+///
+/// # Safety
+/// Caller must guarantee (via the scheduler's DAG ordering) that this is
+/// the only live access to the cells.
+#[allow(clippy::mut_from_ref)]
+unsafe fn cells_mut(cells: &[UnsafeCell<f64>]) -> &mut [f64] {
+    std::slice::from_raw_parts_mut(cells.as_ptr() as *mut f64, cells.len())
+}
+
+/// Shared mutable storage of one pipeline run: the multi-RHS panel, the
+/// log-det scalar slots and the prediction output vector.  Same
+/// concurrency contract as [`TileMatrix`]: conflicting accesses are
+/// ordered by the task graph, workers reach blocks through the unsafe
+/// accessors, and `&self` reads are only sound after `Scheduler::run`
+/// has joined.
+pub struct PipelineBuffers {
+    p: usize,
+    nb: usize,
+    r: usize,
+    /// Block-major RHS panel: block `b` occupies
+    /// `[b*nb*r, (b+1)*nb*r)`, column-major within the block, so one
+    /// solve task touches one contiguous run.
+    rhs: Box<[UnsafeCell<f64>]>,
+    /// Log-det chain slots (slot k = running `sum log L_dd` through
+    /// diagonal tile k).
+    logdet: Box<[UnsafeCell<f64>]>,
+    /// Prediction outputs, blocked by [`PRED_BLOCK`].
+    pred: Box<[UnsafeCell<f64>]>,
+}
+
+// SAFETY: concurrent access is mediated by the scheduler's dependency
+// DAG, exactly as for TileMatrix (see module docs there).
+unsafe impl Sync for PipelineBuffers {}
+unsafe impl Send for PipelineBuffers {}
+
+impl PipelineBuffers {
+    /// Zeroed buffers for a `p x p`-tile pipeline with `r` RHS columns
+    /// and `pred_len` prediction outputs (0 when the plan has no
+    /// cross-covariance stage).
+    pub fn new(p: usize, nb: usize, r: usize, pred_len: usize) -> Self {
+        let zeroed = |n: usize| (0..n).map(|_| UnsafeCell::new(0.0f64)).collect();
+        Self {
+            p,
+            nb,
+            r,
+            rhs: zeroed(p * nb * r),
+            logdet: zeroed(p),
+            pred: zeroed(pred_len),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+    /// RHS columns (the pipeline's `r`).
+    pub fn r(&self) -> usize {
+        self.r
+    }
+    /// Prediction output length.
+    pub fn pred_len(&self) -> usize {
+        self.pred.len()
+    }
+
+    /// Load RHS column `col` from a flat length-n vector (row order).
+    pub fn load_column(&mut self, col: usize, v: &[f64]) {
+        assert!(col < self.r, "rhs column {col} out of range r={}", self.r);
+        assert_eq!(v.len(), self.p * self.nb, "rhs length != n");
+        for b in 0..self.p {
+            for d in 0..self.nb {
+                *self.rhs[b * self.nb * self.r + col * self.nb + d].get_mut() =
+                    v[b * self.nb + d];
+            }
+        }
+    }
+
+    /// Read RHS column `col` back as a flat length-n vector.  Only sound
+    /// after the scheduler run has joined (same contract as
+    /// [`TileMatrix::tile`]).
+    pub fn column(&self, col: usize) -> Vec<f64> {
+        assert!(col < self.r, "rhs column {col} out of range r={}", self.r);
+        let mut out = vec![0.0; self.p * self.nb];
+        for b in 0..self.p {
+            for d in 0..self.nb {
+                out[b * self.nb + d] =
+                    unsafe { *self.rhs[b * self.nb * self.r + col * self.nb + d].get() };
+            }
+        }
+        out
+    }
+
+    /// `log|Sigma| = 2 sum_k log L_kk` off the completed chain (slot
+    /// p-1 holds the full running sum — bit-identical to the serial
+    /// [`super::solve::log_determinant`] accumulation order).
+    pub fn logdet(&self) -> f64 {
+        2.0 * unsafe { *self.logdet[self.p - 1].get() }
+    }
+
+    /// The prediction vector (after a run with cross-covariance tasks).
+    pub fn predictions(&self) -> Vec<f64> {
+        self.pred.iter().map(|c| unsafe { *c.get() }).collect()
+    }
+
+    /// Shared view of RHS block `b` (`nb * r` values, column-major).
+    ///
+    /// # Safety
+    /// Scheduler-ordered access (the calling task declared `Rhs(b)`).
+    pub unsafe fn rhs_block(&self, b: usize) -> &[f64] {
+        let w = self.nb * self.r;
+        cells_ref(&self.rhs[b * w..(b + 1) * w])
+    }
+
+    /// Exclusive view of RHS block `b`.
+    ///
+    /// # Safety
+    /// Scheduler-ordered exclusive access (the calling task declared
+    /// `Rhs(b)` as Write).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rhs_block_mut(&self, b: usize) -> &mut [f64] {
+        let w = self.nb * self.r;
+        cells_mut(&self.rhs[b * w..(b + 1) * w])
+    }
+
+    /// Log-det chain value through tile `k-1` (0.0 at the chain head).
+    ///
+    /// # Safety
+    /// Scheduler-ordered access (the calling task declared the slot).
+    pub unsafe fn logdet_prev(&self, k: usize) -> f64 {
+        if k == 0 {
+            0.0
+        } else {
+            *self.logdet[k - 1].get()
+        }
+    }
+
+    /// Write log-det chain slot `k`.
+    ///
+    /// # Safety
+    /// Scheduler-ordered exclusive access to slot `k`.
+    pub unsafe fn logdet_set(&self, k: usize, v: f64) {
+        *self.logdet[k].get() = v;
+    }
+
+    /// Exclusive view of prediction block `b`
+    /// (`[b*PRED_BLOCK, min(len, (b+1)*PRED_BLOCK))`).
+    ///
+    /// # Safety
+    /// Scheduler-ordered exclusive access (the calling task declared
+    /// `Pred(b)` as Write).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn pred_block_mut(&self, b: usize) -> &mut [f64] {
+        let s = b * PRED_BLOCK;
+        let e = (s + PRED_BLOCK).min(self.pred.len());
+        cells_mut(&self.pred[s..e])
+    }
+}
+
+/// Run-time adaptive precision state of one pipeline: generation-time
+/// tile norms plus the running `||A||_F^2` prefix the per-column
+/// resolution rule normalizes against.  Written by `Generate` tasks
+/// (each under its tile's write exclusivity) and consumed by the
+/// `ResolvePanel` chain (serialized through scalar slots).
+pub struct PanelResolver {
+    p: usize,
+    tolerance: f64,
+    /// Lower-triangle tile norms, index = i*(i+1)/2 + j.
+    norms: Box<[UnsafeCell<f64>]>,
+    /// Running `||A||_F^2` over resolved columns (exclusive to the
+    /// resolve chain).
+    prefix_sq: UnsafeCell<f64>,
+}
+
+// SAFETY: scheduler-ordered access, as for PipelineBuffers.
+unsafe impl Sync for PanelResolver {}
+unsafe impl Send for PanelResolver {}
+
+impl PanelResolver {
+    pub fn new(p: usize, tolerance: f64) -> Self {
+        assert!(
+            tolerance.is_finite() && tolerance >= 0.0,
+            "adaptive tolerance must be finite and >= 0, got {tolerance}"
+        );
+        Self {
+            p,
+            tolerance,
+            norms: (0..p * (p + 1) / 2).map(|_| UnsafeCell::new(0.0)).collect(),
+            prefix_sq: UnsafeCell::new(0.0),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(j <= i && i < self.p);
+        i * (i + 1) / 2 + j
+    }
+
+    /// Record tile (i, j)'s generation-time Frobenius norm.
+    ///
+    /// # Safety
+    /// Called from the tile's own `Generate` task (write exclusivity).
+    pub unsafe fn record_norm(&self, i: usize, j: usize, norm: f64) {
+        *self.norms[self.idx(i, j)].get() = norm;
+    }
+
+    /// Resolve column `j`: fold its norms into the prefix of
+    /// `||A||_F^2` (off-diagonal tiles counted twice, as in the
+    /// symmetric full-matrix norm) and return the storage precision of
+    /// each off-diagonal tile `(j+1..p, j)` under the adaptive rule
+    /// `cal = ||A_ij||_F * p / ||A||_F < tolerance / eps(prec)`.  The
+    /// prefix only covers generated columns `<= j`, a lower bound of
+    /// the full norm, so the per-column decision is conservative: it
+    /// never demotes a tile the whole-matrix rule would keep.
+    ///
+    /// # Safety
+    /// Called from the `ResolvePanel { j }` task (the scalar chain makes
+    /// the prefix access exclusive, and column j's norms are final).
+    pub unsafe fn resolve_column(&self, j: usize) -> Vec<Precision> {
+        let norm_at = |i: usize| *self.norms[self.idx(i, j)].get();
+        let mut colsq = 0.0;
+        for i in j..self.p {
+            let nrm = norm_at(i);
+            colsq += if i == j { nrm * nrm } else { 2.0 * nrm * nrm };
+        }
+        let prefix = self.prefix_sq.get();
+        *prefix += colsq;
+        let global = (*prefix).sqrt();
+        let scalar = self.p as f64;
+        let mut out = Vec::with_capacity(self.p - j - 1);
+        for i in (j + 1)..self.p {
+            let prec = if global == 0.0 {
+                Precision::F64
+            } else {
+                // the SAME rule the whole-matrix map uses, against the
+                // prefix norm instead of the full one
+                Precision::pick_adaptive(norm_at(i) * scalar / global, self.tolerance)
+            };
+            out.push(prec);
+        }
+        out
+    }
+}
+
+/// Stage knobs of a [`PipelinePlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineOptions {
+    /// RHS columns of the multi-RHS panel (`0` = no solve stage).
+    pub rhs_cols: usize,
+    /// Append the `L^T x = y` backward solve after the forward solve.
+    pub backward: bool,
+    /// Append the log-determinant chain.
+    pub logdet: bool,
+    /// Prediction sites to cover with cross-covariance tasks, one per
+    /// [`PRED_BLOCK`] chunk (0 = none; requires `backward` and
+    /// `rhs_cols >= 1`).
+    pub pred_len: usize,
+    /// Factor-stage lowering knobs (static plans only; adaptive
+    /// pipelines always lower left-looking).
+    pub plan: PlanOptions,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self {
+            rhs_cols: 1,
+            backward: false,
+            logdet: true,
+            pred_len: 0,
+            plan: PlanOptions::default(),
+        }
+    }
+}
+
+/// Per-kind task census of a pipeline graph.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineCounts {
+    pub generate: usize,
+    /// potrf + trsm + syrk + gemm (+ batches).
+    pub factor: usize,
+    /// demote/promote/decode/drop protocol tasks.
+    pub conversion: usize,
+    pub resolve: usize,
+    pub solve_fwd: usize,
+    pub solve_bwd: usize,
+    pub logdet: usize,
+    pub crosscov: usize,
+}
+
+impl PipelineCounts {
+    /// All triangular-solve tasks (forward + backward).
+    pub fn solves(&self) -> usize {
+        self.solve_fwd + self.solve_bwd
+    }
+
+    fn classify(graph: &TaskGraph<SizedCall>) -> Self {
+        let mut c = Self::default();
+        for t in graph.tasks() {
+            match t.payload.call {
+                KernelCall::Generate { .. } => c.generate += 1,
+                KernelCall::ResolvePanel { .. } => c.resolve += 1,
+                KernelCall::SolveFwd { .. } => c.solve_fwd += 1,
+                KernelCall::SolveBwd { .. } => c.solve_bwd += 1,
+                KernelCall::LogDetPartial { .. } => c.logdet += 1,
+                KernelCall::CrossCov { .. } => c.crosscov += 1,
+                KernelCall::DemoteDiag { .. }
+                | KernelCall::DemoteTile { .. }
+                | KernelCall::PromoteTile { .. }
+                | KernelCall::DecodeBf16 { .. }
+                | KernelCall::DropScratch { .. } => c.conversion += 1,
+                _ => c.factor += 1,
+            }
+        }
+        c
+    }
+}
+
+/// A lowered whole-iteration pipeline: the task graph plus the metadata
+/// the trace, the cost models and the bench tables consume.
+#[derive(Debug)]
+pub struct PipelinePlan {
+    pub graph: TaskGraph<SizedCall>,
+    pub p: usize,
+    pub nb: usize,
+    /// RHS columns of the solve stage (0 = factor-only pipeline).
+    pub r: usize,
+    pub variant: Variant,
+    /// The static map codelet precisions were lowered from, when there
+    /// is one.  `None` for dynamic (per-panel adaptive) plans — read the
+    /// realized assignment off the tiles after the run
+    /// ([`PipelinePlan::realized_map`]).
+    pub map: Option<PrecisionMap>,
+    /// Conversion-protocol task totals (zero for dynamic plans, which
+    /// convert operands inline).
+    pub conversions: ConversionCounts,
+    pub dp_flops: f64,
+    pub sp_flops: f64,
+    pub counts: PipelineCounts,
+    pub options: PipelineOptions,
+}
+
+impl PipelinePlan {
+    /// Pipeline over a *static* precision map (the band variants, or
+    /// adaptive with a cached realized map): fused generation +
+    /// factorization from [`CholeskyPlan::build_with_opts`], epilogue
+    /// appended to the same graph.  The caller prepares tile storage
+    /// (`prepare_tiles`/`apply_precision_map`) before running, exactly
+    /// as for `generate_and_factorize`.
+    pub fn build_static(
+        p: usize,
+        nb: usize,
+        variant: Variant,
+        map: PrecisionMap,
+        opts: PipelineOptions,
+    ) -> Self {
+        let cp = CholeskyPlan::build_with_opts(p, nb, variant, map, true, opts.plan);
+        let conversions = cp.conversion_totals();
+        let CholeskyPlan { mut graph, map, dp_flops, sp_flops, .. } = cp;
+        let mut dp = dp_flops;
+        append_epilogue(&mut graph, p, nb, &opts, &mut dp);
+        Self::finish(graph, p, nb, variant, Some(map), conversions, dp, sp_flops, opts)
+    }
+
+    /// Dynamic adaptive pipeline: generation records tile norms,
+    /// [`KernelCall::ResolvePanel`] tasks fix each column's precisions at
+    /// run time, and the factor stage lowers left-looking with
+    /// runtime-precision codelets.  Requires a fresh all-F64
+    /// [`TileMatrix`] and a [`PanelResolver`] with the same tolerance.
+    ///
+    /// Flop counters price every codelet at DP (precisions are unknown
+    /// at plan time); the realized split is visible post-run through
+    /// [`PipelinePlan::realized_map`].
+    pub fn build_adaptive(p: usize, nb: usize, tolerance: f64, opts: PipelineOptions) -> Self {
+        let variant = Variant::Adaptive { tolerance };
+        let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
+        let mut dp_flops = 0.0;
+        let mut submit = |g: &mut TaskGraph<SizedCall>,
+                          call: KernelCall,
+                          acc: Vec<(ResourceId, Access)>| {
+            dp_flops += call.flops_at(nb);
+            g.submit(SizedCall { call, nb }, acc)
+        };
+        let tile = |i: usize, j: usize| ResourceId::Tile(TileId::new(i, j));
+
+        // phase 1: generation, recording per-tile norms
+        for j in 0..p {
+            for i in j..p {
+                let acc = vec![(tile(i, j), Access::Write)];
+                submit(&mut graph, KernelCall::Generate { i, j }, acc);
+            }
+        }
+        // phase 2: per-column resolution chain.  Resolve(j) depends on
+        // column j's generation (tile WAW edges) and Resolve(j-1) (the
+        // scalar link carrying the norm prefix) — never on generation of
+        // later columns, so the stages interleave.
+        for j in 0..p {
+            let mut acc: Vec<(ResourceId, Access)> = Vec::with_capacity(p - j + 2);
+            for i in j..p {
+                acc.push((tile(i, j), Access::Write));
+            }
+            if j > 0 {
+                acc.push((ResourceId::Scalar(resolve_slot(j - 1)), Access::Read));
+            }
+            acc.push((ResourceId::Scalar(resolve_slot(j)), Access::Write));
+            submit(&mut graph, KernelCall::ResolvePanel { j }, acc);
+        }
+        // phase 3: left-looking factorization with runtime-precision
+        // codelets.  Every write to tile (i, k) happens at its
+        // finalizing step k — the property that makes per-column
+        // resolution sound.
+        for k in 0..p {
+            for i in (k + 1)..p {
+                if k > 0 {
+                    let mut acc: Vec<(ResourceId, Access)> = Vec::with_capacity(2 * k + 1);
+                    for t in 0..k {
+                        acc.push((tile(i, t), Access::Read));
+                        acc.push((tile(k, t), Access::Read));
+                    }
+                    acc.push((tile(i, k), Access::Write));
+                    submit(
+                        &mut graph,
+                        KernelCall::GemmBatch { i, j: k, k0: 0, k1: k, prec: Precision::F64 },
+                        acc,
+                    );
+                }
+            }
+            submit(&mut graph, KernelCall::PotrfDp { k }, vec![(tile(k, k), Access::Write)]);
+            for i in (k + 1)..p {
+                submit(
+                    &mut graph,
+                    KernelCall::TrsmNative { i, k },
+                    vec![(tile(k, k), Access::Read), (tile(i, k), Access::Write)],
+                );
+            }
+            for j in (k + 1)..p {
+                submit(
+                    &mut graph,
+                    KernelCall::SyrkNative { j, k },
+                    vec![(tile(j, k), Access::Read), (tile(j, j), Access::Write)],
+                );
+            }
+        }
+        drop(submit);
+        let mut dp = dp_flops;
+        append_epilogue(&mut graph, p, nb, &opts, &mut dp);
+        Self::finish(graph, p, nb, variant, None, ConversionCounts::default(), dp, 0.0, opts)
+    }
+
+    /// Epilogue-only plan (solves / log-det / cross-covariance) against
+    /// an already-factored tile matrix — the bit-exactness harness and
+    /// the "many solves against one factor" reuse path.
+    pub fn build_epilogue(p: usize, nb: usize, variant: Variant, opts: PipelineOptions) -> Self {
+        let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
+        let mut dp = 0.0;
+        append_epilogue(&mut graph, p, nb, &opts, &mut dp);
+        Self::finish(graph, p, nb, variant, None, ConversionCounts::default(), dp, 0.0, opts)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        mut graph: TaskGraph<SizedCall>,
+        p: usize,
+        nb: usize,
+        variant: Variant,
+        map: Option<PrecisionMap>,
+        conversions: ConversionCounts,
+        dp_flops: f64,
+        sp_flops: f64,
+        options: PipelineOptions,
+    ) -> Self {
+        // rank storage cheapness over the WHOLE graph (epilogue tasks
+        // rank 0 = DP) so PrecisionFrontier keys stay meaningful
+        graph.compute_cheapness(|sc| match sc.call.precision() {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+            Precision::Bf16 => 2,
+        });
+        let counts = PipelineCounts::classify(&graph);
+        let r = options.rhs_cols;
+        Self { graph, p, nb, r, variant, map, conversions, dp_flops, sp_flops, counts, options }
+    }
+
+    /// Total useful flops in the plan (factor + epilogue).
+    pub fn total_flops(&self) -> f64 {
+        self.dp_flops + self.sp_flops
+    }
+
+    /// The per-tile precision assignment this run actually used: the
+    /// static map when there is one, otherwise the storage realized by
+    /// the run-time `ResolvePanel` tasks (read off the tiles; only
+    /// meaningful after the run).
+    pub fn realized_map(&self, tiles: &TileMatrix) -> PrecisionMap {
+        match &self.map {
+            Some(m) => m.clone(),
+            None => tiles.storage_map(),
+        }
+    }
+}
+
+/// Append the solve / log-det / cross-covariance stages to `graph`.
+/// Submission order replicates the serial oracles' loop structure, so
+/// the WAW chains on each RHS block reproduce their exact floating-point
+/// update order (bit-identical in full DP).
+fn append_epilogue(
+    graph: &mut TaskGraph<SizedCall>,
+    p: usize,
+    nb: usize,
+    opts: &PipelineOptions,
+    dp_flops: &mut f64,
+) {
+    assert!(
+        opts.pred_len == 0 || (opts.backward && opts.rhs_cols >= 1),
+        "cross-covariance needs solved weights: enable backward + rhs_cols >= 1"
+    );
+    let r = opts.rhs_cols;
+    let mut submit = |g: &mut TaskGraph<SizedCall>,
+                      call: KernelCall,
+                      acc: Vec<(ResourceId, Access)>| {
+        *dp_flops += call.flops_at(nb);
+        g.submit(SizedCall { call, nb }, acc)
+    };
+    let tile = |i: usize, j: usize| ResourceId::Tile(TileId::new(i, j));
+
+    if r > 0 {
+        // forward substitution L y = b, left-looking per block row (the
+        // oracle's order: ascending-j updates, then the diagonal solve)
+        for i in 0..p {
+            for j in 0..i {
+                submit(
+                    graph,
+                    KernelCall::SolveFwd { i, k: j, r },
+                    vec![
+                        (tile(i, j), Access::Read),
+                        (ResourceId::Rhs(j), Access::Read),
+                        (ResourceId::Rhs(i), Access::Write),
+                    ],
+                );
+            }
+            submit(
+                graph,
+                KernelCall::SolveFwd { i, k: i, r },
+                vec![(tile(i, i), Access::Read), (ResourceId::Rhs(i), Access::Write)],
+            );
+        }
+    }
+
+    if opts.logdet {
+        // running-sum chain through scalar slots: one task per diagonal
+        // tile, bit-identical to the serial accumulation
+        for k in 0..p {
+            let mut acc: Vec<(ResourceId, Access)> = Vec::with_capacity(3);
+            acc.push((tile(k, k), Access::Read));
+            if k > 0 {
+                acc.push((ResourceId::Scalar(logdet_slot(p, k - 1)), Access::Read));
+            }
+            acc.push((ResourceId::Scalar(logdet_slot(p, k)), Access::Write));
+            submit(graph, KernelCall::LogDetPartial { k }, acc);
+        }
+    }
+
+    if r > 0 && opts.backward {
+        // backward substitution L^T x = y, left-looking per block row in
+        // descending i (the oracle's order: ascending-j updates from the
+        // already-finalized deeper blocks, then the diagonal solve)
+        for i in (0..p).rev() {
+            for j in (i + 1)..p {
+                submit(
+                    graph,
+                    KernelCall::SolveBwd { i, k: j, r },
+                    vec![
+                        (tile(j, i), Access::Read),
+                        (ResourceId::Rhs(j), Access::Read),
+                        (ResourceId::Rhs(i), Access::Write),
+                    ],
+                );
+            }
+            submit(
+                graph,
+                KernelCall::SolveBwd { i, k: i, r },
+                vec![(tile(i, i), Access::Read), (ResourceId::Rhs(i), Access::Write)],
+            );
+        }
+    }
+
+    let pred_blocks = if opts.pred_len == 0 {
+        0
+    } else {
+        (opts.pred_len + PRED_BLOCK - 1) / PRED_BLOCK
+    };
+    for b in 0..pred_blocks {
+        // each prediction block reads the full weight vector (every RHS
+        // block) — the leaf fan-out of the iteration.  rows/n ride the
+        // payload so the cost models price the gemv exactly.
+        let rows = (opts.pred_len - b * PRED_BLOCK).min(PRED_BLOCK);
+        let mut acc: Vec<(ResourceId, Access)> = Vec::with_capacity(p + 1);
+        for blk in 0..p {
+            acc.push((ResourceId::Rhs(blk), Access::Read));
+        }
+        acc.push((ResourceId::Pred(b), Access::Write));
+        submit(graph, KernelCall::CrossCov { block: b, rows, n: p * nb }, acc);
+    }
+}
+
+/// Execute one pipeline: binds the plan to its tile matrix, buffers and
+/// optional generation / resolver / cross-covariance contexts, runs the
+/// graph on `sched`, and returns the trace (bf16 decode time folded in)
+/// plus the run's bf16 unpack count.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    plan: &mut PipelinePlan,
+    tiles: &TileMatrix,
+    bufs: &PipelineBuffers,
+    resolver: Option<&PanelResolver>,
+    crosscov: Option<CrossCovContext<'_>>,
+    gen: Option<GenContext<'_>>,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<(ExecutionTrace, u64)> {
+    // a mismatched buffer set would silently solve the wrong number of
+    // RHS columns (or index out of range mid-run) — fail loudly up front
+    assert_eq!(plan.p, bufs.p(), "pipeline plan p != buffer p");
+    assert_eq!(plan.nb, bufs.nb(), "pipeline plan nb != buffer nb");
+    assert_eq!(plan.r, bufs.r(), "pipeline plan rhs_cols != buffer rhs columns");
+    assert_eq!(plan.p, tiles.p(), "pipeline plan p != tile matrix p");
+    let want_blocks = if bufs.pred_len() == 0 {
+        0
+    } else {
+        (bufs.pred_len() + PRED_BLOCK - 1) / PRED_BLOCK
+    };
+    assert_eq!(
+        plan.counts.crosscov, want_blocks,
+        "plan cross-cov blocks != buffer prediction length"
+    );
+    let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let mut exec = TileExecutor::new(tiles, backend);
+    if let Some(g) = gen {
+        exec = exec.with_generation(g);
+    }
+    exec = exec.with_pipeline(PipelineContext { bufs, resolver, crosscov });
+    let mut trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
+    trace.decode_ns = exec.stats.decode_ns();
+    Ok((trace, exec.stats.bf16_unpacks()))
+}
+
+/// One member task of a batched multi-problem pipeline graph (e.g. one
+/// k-fold member's codelet).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCall {
+    /// Which member pipeline this task belongs to.
+    pub member: usize,
+    pub call: SizedCall,
+}
+
+impl TaskCost for BatchCall {
+    fn flops(&self) -> f64 {
+        self.call.flops()
+    }
+    fn precision(&self) -> Precision {
+        self.call.precision()
+    }
+}
+
+/// Merge several independent pipelines into ONE task graph: member `m`'s
+/// resources are shifted into a private namespace (tiles by row/column
+/// offset, RHS/prediction/scalar slots by slot offset), so the merged
+/// graph's inferred edges are exactly the union of the members' edges
+/// and a single `Scheduler::run` work-steals across all of them.
+/// Returns the merged graph plus each task's *member-local* access list
+/// (what the member's executor needs for its guard protocol).
+pub fn merge_graphs(
+    plans: &[PipelinePlan],
+) -> (TaskGraph<BatchCall>, Vec<Vec<(ResourceId, Access)>>) {
+    let tile_off = plans.iter().map(|pl| pl.p).max().unwrap_or(0);
+    let slot_off = plans
+        .iter()
+        .map(|pl| (2 * pl.p).max(pl.counts.crosscov))
+        .max()
+        .unwrap_or(0);
+    let mut g: TaskGraph<BatchCall> = TaskGraph::new();
+    let mut local: Vec<Vec<(ResourceId, Access)>> = Vec::new();
+    for (m, pl) in plans.iter().enumerate() {
+        for t in pl.graph.tasks() {
+            let global: Vec<(ResourceId, Access)> = t
+                .accesses
+                .iter()
+                .map(|&(res, mode)| {
+                    let shifted = match res {
+                        ResourceId::Tile(tl) => ResourceId::Tile(TileId::new(
+                            tl.i + m * tile_off,
+                            tl.j + m * tile_off,
+                        )),
+                        ResourceId::Rhs(b) => ResourceId::Rhs(b + m * slot_off),
+                        ResourceId::Pred(b) => ResourceId::Pred(b + m * slot_off),
+                        ResourceId::Scalar(s) => ResourceId::Scalar(s + m * slot_off),
+                    };
+                    (shifted, mode)
+                })
+                .collect();
+            g.submit(BatchCall { member: m, call: t.payload }, global);
+            local.push(t.accesses.clone());
+        }
+    }
+    g.compute_cheapness(|bc| match bc.call.call.precision() {
+        Precision::F64 => 0,
+        Precision::F32 => 1,
+        Precision::Bf16 => 2,
+    });
+    (g, local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_pipeline_counts_cover_every_stage() {
+        let p = 4;
+        let v = Variant::MixedPrecision { diag_thick: 2 };
+        let map = v.precision_map(p, None).unwrap();
+        let opts = PipelineOptions {
+            rhs_cols: 2,
+            backward: true,
+            logdet: true,
+            // 2 full PRED_BLOCK chunks + 1 partial -> 3 crosscov tasks
+            pred_len: 2 * PRED_BLOCK + 7,
+            ..Default::default()
+        };
+        let plan = PipelinePlan::build_static(p, 32, v, map, opts);
+        plan.graph.assert_forward_edges();
+        assert_eq!(plan.counts.generate, p * (p + 1) / 2);
+        // forward solve: p diagonal + p(p-1)/2 update tasks; same for bwd
+        assert_eq!(plan.counts.solve_fwd, p + p * (p - 1) / 2);
+        assert_eq!(plan.counts.solve_bwd, p + p * (p - 1) / 2);
+        assert_eq!(plan.counts.logdet, p);
+        assert_eq!(plan.counts.crosscov, 3);
+        // the partial last block carries its true row count and the
+        // training size, so the gemv flops are priced exactly
+        for t in plan.graph.tasks() {
+            if let KernelCall::CrossCov { block, rows, n } = t.payload.call {
+                assert_eq!(rows, if block == 2 { 7 } else { PRED_BLOCK });
+                assert_eq!(n, p * 32);
+            }
+        }
+        assert_eq!(plan.counts.resolve, 0);
+        assert!(plan.counts.factor > 0);
+        assert!(plan.map.is_some());
+        assert_eq!(plan.r, 2);
+        // solve tasks carry the RHS width
+        for t in plan.graph.tasks() {
+            if let KernelCall::SolveFwd { r, .. } | KernelCall::SolveBwd { r, .. } =
+                t.payload.call
+            {
+                assert_eq!(r, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_pipeline_fuses_generation_without_a_barrier() {
+        let p = 5;
+        let plan = PipelinePlan::build_adaptive(p, 16, 1e-8, PipelineOptions::default());
+        plan.graph.assert_forward_edges();
+        // the acceptance property: the fused Adaptive plan contains
+        // Generate tasks in the same graph as the factorization
+        assert_eq!(plan.counts.generate, p * (p + 1) / 2);
+        assert_eq!(plan.counts.resolve, p);
+        assert!(plan.counts.factor > 0);
+        assert!(plan.map.is_none(), "dynamic plans resolve at run time");
+        // no whole-matrix barrier: Resolve(0) must not depend on the
+        // generation of any later column
+        let tasks = plan.graph.tasks();
+        let resolve0 = tasks
+            .iter()
+            .position(|t| t.payload.call == KernelCall::ResolvePanel { j: 0 })
+            .unwrap();
+        for t in tasks.iter() {
+            if let KernelCall::Generate { j, .. } = t.payload.call {
+                if j > 0 {
+                    assert!(
+                        !t.successors.contains(&resolve0),
+                        "Resolve(0) depends on generation of column {j}"
+                    );
+                }
+            }
+        }
+        // left-looking: every write to tile (i, k) happens at step k,
+        // i.e. trsm on (i, k) is ordered after Resolve(k) via WAW
+        let resolve_k = |k: usize| {
+            tasks
+                .iter()
+                .position(|t| t.payload.call == KernelCall::ResolvePanel { j: k })
+                .unwrap()
+        };
+        for (idx, t) in tasks.iter().enumerate() {
+            if let KernelCall::TrsmNative { k, .. } = t.payload.call {
+                assert!(idx > resolve_k(k), "trsm submitted before its column's resolve");
+            }
+        }
+    }
+
+    #[test]
+    fn epilogue_only_plan_has_no_factor_tasks() {
+        let p = 3;
+        let opts = PipelineOptions { rhs_cols: 1, backward: true, ..Default::default() };
+        let plan = PipelinePlan::build_epilogue(p, 8, Variant::FullDp, opts);
+        assert_eq!(plan.counts.factor, 0);
+        assert_eq!(plan.counts.generate, 0);
+        assert_eq!(plan.counts.solves(), 2 * (p + p * (p - 1) / 2));
+        assert_eq!(plan.counts.logdet, p);
+        plan.graph.assert_forward_edges();
+    }
+
+    #[test]
+    fn merged_graphs_stay_member_disjoint() {
+        let p = 3;
+        let v = Variant::FullDp;
+        let mk = || {
+            PipelinePlan::build_static(
+                p,
+                8,
+                v,
+                PrecisionMap::uniform(p, Precision::F64),
+                PipelineOptions { rhs_cols: 1, backward: true, ..Default::default() },
+            )
+        };
+        let plans = vec![mk(), mk()];
+        let total: usize = plans.iter().map(|pl| pl.graph.len()).sum();
+        let (g, local) = merge_graphs(&plans);
+        assert_eq!(g.len(), total);
+        assert_eq!(local.len(), total);
+        // no edge crosses members: merged dependencies are exactly the
+        // union of the members' own dependencies
+        for (idx, t) in g.tasks().iter().enumerate() {
+            for &s in &t.successors {
+                assert_eq!(
+                    g.task(s).payload.member,
+                    t.payload.member,
+                    "edge {idx} -> {s} crosses members"
+                );
+            }
+        }
+        g.assert_forward_edges();
+    }
+
+    #[test]
+    fn buffers_roundtrip_columns_block_major() {
+        let (p, nb, r) = (3, 4, 2);
+        let mut bufs = PipelineBuffers::new(p, nb, r, 5);
+        let v0: Vec<f64> = (0..p * nb).map(|x| x as f64).collect();
+        let v1: Vec<f64> = (0..p * nb).map(|x| -(x as f64)).collect();
+        bufs.load_column(0, &v0);
+        bufs.load_column(1, &v1);
+        assert_eq!(bufs.column(0), v0);
+        assert_eq!(bufs.column(1), v1);
+        // block 1, column 1, row 2 lives at 1*nb*r + 1*nb + 2
+        unsafe {
+            let b1 = bufs.rhs_block(1);
+            assert_eq!(b1[nb + 2], v1[nb + 2]);
+        }
+        assert_eq!(bufs.pred_len(), 5);
+        assert_eq!(bufs.predictions(), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn resolver_prefix_rule_is_conservative_and_deterministic() {
+        // two columns: a big column 0, a tiny column 1.  Resolving
+        // column 1 against the prefix (cols 0..=1) must demote at least
+        // as conservatively as against column 1 alone.
+        let p = 3;
+        let rz = PanelResolver::new(p, 1e-4);
+        unsafe {
+            rz.record_norm(0, 0, 10.0);
+            rz.record_norm(1, 0, 1e-9);
+            rz.record_norm(2, 0, 1e-9);
+            rz.record_norm(1, 1, 10.0);
+            rz.record_norm(2, 1, 1e-9);
+            rz.record_norm(2, 2, 10.0);
+            let c0 = rz.resolve_column(0);
+            assert_eq!(c0.len(), 2);
+            // tiny off-diagonal tiles against a 10.0 diagonal: demoted
+            assert!(c0.iter().all(|&pr| pr != Precision::F64), "{c0:?}");
+            let c1 = rz.resolve_column(1);
+            assert_eq!(c1.len(), 1);
+            assert_ne!(c1[0], Precision::F64);
+            let c2 = rz.resolve_column(2);
+            assert!(c2.is_empty());
+        }
+        // zero tolerance never demotes
+        let rz0 = PanelResolver::new(2, 0.0);
+        unsafe {
+            rz0.record_norm(0, 0, 1.0);
+            rz0.record_norm(1, 0, 1e-20);
+            rz0.record_norm(1, 1, 1.0);
+            assert_eq!(rz0.resolve_column(0), vec![Precision::F64]);
+        }
+    }
+}

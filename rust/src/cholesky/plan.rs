@@ -566,7 +566,8 @@ mod tests {
         assert_eq!(dst.sp_flops, 0.0);
         // no task touches an off-band tile
         for t in dst.graph.tasks() {
-            for (tile, _) in &t.accesses {
+            for &(res, _) in &t.accesses {
+                let tile = res.as_tile().expect("factorization plans touch only tiles");
                 assert!(tile.i - tile.j < 2, "off-band tile {tile:?} in DST plan");
             }
         }

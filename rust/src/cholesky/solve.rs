@@ -22,12 +22,16 @@ pub fn solve_lower(l: &TileMatrix, b: &[f64]) -> Result<Vec<f64>> {
     }
     let mut y = b.to_vec();
     let mut scratch = Vec::new();
+    // one hoisted accumulator reused across all (i, j) tiles: this is
+    // the bit-exactness oracle of the pipeline's SolveFwd tasks, but it
+    // should not allocate O(p^2) times
+    let mut acc = vec![0.0; nb];
     for i in 0..l.p() {
         // y_i -= L(i, j) y_j  for j < i
         for j in 0..i {
             let t = l.tile(TileId::new(i, j)).f64_values(&mut scratch);
             let yj = &y[j * nb..(j + 1) * nb];
-            let mut acc = vec![0.0; nb];
+            acc.fill(0.0);
             for c in 0..nb {
                 let yc = yj[c];
                 if yc != 0.0 {
@@ -64,12 +68,13 @@ pub fn solve_lower_transposed(l: &TileMatrix, b: &[f64]) -> Result<Vec<f64>> {
     }
     let mut x = b.to_vec();
     let mut scratch = Vec::new();
+    // hoisted accumulator (fully overwritten per tile, so no refill)
+    let mut acc = vec![0.0; nb];
     for i in (0..l.p()).rev() {
         // x_i -= L(j, i)^T x_j for j > i
         for j in (i + 1)..l.p() {
             let t = l.tile(TileId::new(j, i)).f64_values(&mut scratch);
             let xj = &x[j * nb..(j + 1) * nb];
-            let mut acc = vec![0.0; nb];
             // acc_c = sum_r L(j,i)[r,c] * xj[r]
             for c in 0..nb {
                 let col = &t[c * nb..(c + 1) * nb];

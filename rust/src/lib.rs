@@ -100,8 +100,8 @@ pub mod tile;
 pub mod prelude {
     pub use crate::cholesky::{
         factorize_dense, factorize_tiles, factorize_tiles_with_map, factorize_tiles_with_opts,
-        generate_and_factorize, generate_covariance, CholeskyPlan, ConversionCounts, PlanOptions,
-        Variant,
+        generate_and_factorize, generate_covariance, run_pipeline, CholeskyPlan, ConversionCounts,
+        PanelResolver, PipelineBuffers, PipelineOptions, PipelinePlan, PlanOptions, Variant,
     };
     pub use crate::config::RunConfig;
     pub use crate::datagen::{FieldConfig, SyntheticField, WindFieldConfig};

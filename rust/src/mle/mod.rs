@@ -1,12 +1,20 @@
 //! Maximum likelihood estimation (paper SSIV-C) — the application driver
 //! the whole stack exists to serve.
 //!
-//! Each objective evaluation is one pass of the paper's pipeline:
-//! regenerate the Matern covariance at the candidate theta (tile tasks),
-//! factor it with the selected [`Variant`] (Algorithm 1 / DP / DST),
-//! then one forward solve + log-det for Eq. 2:
+//! Each objective evaluation is ONE task graph (`Scheduler::run`): the
+//! Matern covariance is regenerated at the candidate theta, factored
+//! with the selected [`Variant`] (Algorithm 1 / DP / DST / adaptive),
+//! and the Eq. 2 epilogue — the forward solve of the quadratic form and
+//! the log-determinant — rides the same dataflow as tiled
+//! `SolveFwd`/`LogDetPartial` tasks:
 //!
 //! `l(theta) = -n/2 log(2 pi) - 1/2 log|Sigma(theta)| - 1/2 z' Sigma^-1 z`
+//!
+//! [`Variant::Adaptive`] resolves its precision map *per panel-column*
+//! inside that same graph (`ResolvePanel` tasks), so there is no
+//! generation -> factorization barrier at any variant; the `remap_every`
+//! stride instead reuses the previous realized map through a static-map
+//! pipeline.  The serial solves remain as bit-exactness oracles.
 //!
 //! The optimizer is derivative-free ([`optimizer`]); evaluations that
 //! lose positive definiteness are rejected with an infinite objective —
@@ -20,7 +28,10 @@ pub use optimizer::{minimize_positive, OptimResult, OptimizerConfig};
 use std::cell::RefCell;
 use std::time::Instant;
 
-use crate::cholesky::{self, CholeskyPlan, Variant};
+use crate::cholesky::{
+    self, run_pipeline, GenContext, PanelResolver, PipelineBuffers, PipelineOptions, PipelinePlan,
+    Variant,
+};
 use crate::error::{Error, Result};
 use crate::kernels::{NativeBackend, TileBackend};
 use crate::matern::{Location, MaternParams, Metric};
@@ -110,11 +121,19 @@ pub struct MleIterStat {
     /// True when every diagonal tile stayed F64.
     pub diagonal_dp: bool,
     /// Demand-miss transfer bytes from replaying this evaluation's
-    /// factorization graph on [`MleConfig::model_device`] with per-tile
-    /// pricing on the realized map.  (Adaptive evaluations replay the
-    /// factorization-only graph; band variants include generation tasks
-    /// — comparable within a variant across iterations.)
+    /// whole-iteration graph (generation + factorization + solve +
+    /// log-det) on [`MleConfig::model_device`], tiles priced at their
+    /// realized stored bytes and RHS/scalar resources at f64 bytes.
     pub modeled_transfer_bytes: f64,
+    /// Total tasks in the evaluation's pipeline graph.
+    pub pipeline_tasks: usize,
+    /// Tiled triangular-solve tasks (forward + backward).
+    pub solve_tasks: usize,
+    /// Log-determinant chain tasks.
+    pub logdet_tasks: usize,
+    /// Cross-covariance prediction tasks (0 on the likelihood path; the
+    /// kriging/PMSE drivers report them).
+    pub crosscov_tasks: usize,
 }
 
 /// Per-evaluation precision trace of an MLE run (one entry per
@@ -215,11 +234,7 @@ impl<'a> MleProblem<'a> {
                 cfg.nb
             );
         }
-        let workers = if cfg.num_workers == 0 {
-            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
-        } else {
-            cfg.num_workers
-        };
+        let workers = SchedulerConfig::resolve_workers(cfg.num_workers);
         let scheduler = Scheduler::new(SchedulerConfig {
             num_workers: workers,
             policy: cfg.policy,
@@ -245,9 +260,12 @@ impl<'a> MleProblem<'a> {
     }
 
     /// Factor Sigma(theta) with the configured variant; returns the tile
-    /// factor (shared by the likelihood and the kriging predictor).
+    /// factor.  One pipeline graph (generation + factorization, no
+    /// epilogue stages), with the same remap-stride and trace
+    /// bookkeeping as [`Self::loglik`].
     pub fn factorize(&self, theta: &MaternParams) -> Result<TileMatrix> {
-        Ok(self.factorize_traced(theta)?.0)
+        let opts = PipelineOptions { rhs_cols: 0, logdet: false, ..Default::default() };
+        Ok(self.run_iteration(theta, opts)?.0)
     }
 
     /// The per-evaluation precision trace recorded so far (map census,
@@ -258,92 +276,121 @@ impl<'a> MleProblem<'a> {
         self.trace.borrow().clone()
     }
 
-    /// One factorization pass with remap-stride and trace bookkeeping.
-    ///
-    /// For [`Variant::Adaptive`] the covariance is generated first, then
-    /// the precision map is either recomputed from this theta's tile
-    /// norms (every `remap_every`-th successful evaluation) or the
-    /// previous realized map is reused; band variants keep their fused
-    /// generate+factorize path and static map.
-    fn factorize_traced(&self, theta: &MaternParams) -> Result<(TileMatrix, CholeskyPlan)> {
-        let mut tiles = TileMatrix::zeros(self.n(), self.cfg.nb)?;
-        let (plan, remapped) = if matches!(self.cfg.variant, Variant::Adaptive { .. }) {
-            cholesky::generate_covariance(
-                &mut tiles,
-                self.locations,
-                *theta,
-                self.cfg.metric,
-                self.cfg.nugget,
-                self.backend,
-                &self.scheduler,
-            )?;
-            let stride = self.cfg.remap_every.max(1);
-            let (cached, evals) = {
-                let st = self.remap.borrow();
-                (st.map.clone(), st.evals)
-            };
-            let (map, remapped) = match cached {
-                Some(prev) if evals % stride != 0 && prev.p() == tiles.p() => (prev, false),
-                _ => (self.cfg.variant.precision_map(tiles.p(), Some(&tiles))?, true),
-            };
-            let plan = cholesky::factorize_tiles_with_map(
-                &mut tiles,
-                self.cfg.variant,
-                map,
-                self.backend,
-                &self.scheduler,
-            )?;
-            (plan, remapped)
-        } else {
-            let first = self.remap.borrow().evals == 0;
-            let plan = cholesky::generate_and_factorize(
-                &mut tiles,
-                self.locations,
-                *theta,
-                self.cfg.metric,
-                self.cfg.nugget,
-                self.cfg.variant,
-                self.backend,
-                &self.scheduler,
-            )?;
-            (plan, first)
+    /// One whole-iteration pipeline run with remap-stride and trace
+    /// bookkeeping: builds the plan (static map for band variants and
+    /// between-stride adaptive reuse; dynamic per-panel resolution for
+    /// adaptive remap evaluations), executes it as ONE `Scheduler::run`,
+    /// and records the realized map's census/churn plus the modeled
+    /// transfer bytes of the full graph.
+    fn run_iteration(
+        &self,
+        theta: &MaternParams,
+        opts: PipelineOptions,
+    ) -> Result<(TileMatrix, PipelineBuffers)> {
+        theta.validate()?;
+        let n = self.n();
+        let nb = self.cfg.nb;
+        let p = n / nb;
+        let mut tiles = TileMatrix::zeros(n, nb)?;
+        let mut bufs = PipelineBuffers::new(p, nb, opts.rhs_cols, 0);
+        if opts.rhs_cols > 0 {
+            bufs.load_column(0, self.z);
+        }
+
+        let (mut plan, resolver, remapped) = match self.cfg.variant {
+            Variant::Adaptive { tolerance } => {
+                let stride = self.cfg.remap_every.max(1);
+                let (cached, evals) = {
+                    let st = self.remap.borrow();
+                    (st.map.clone(), st.evals)
+                };
+                match cached {
+                    Some(prev) if evals % stride != 0 && prev.p() == p => {
+                        // between strides: reuse the previous realized
+                        // map through a static-map pipeline (still one
+                        // graph, no norm sweep)
+                        cholesky::prepare_tiles(&mut tiles, self.cfg.variant, &prev);
+                        let plan = PipelinePlan::build_static(p, nb, self.cfg.variant, prev, opts);
+                        (plan, None, false)
+                    }
+                    _ => {
+                        // remap evaluation: per-panel-column resolution
+                        // inside the graph (no generation barrier)
+                        let plan = PipelinePlan::build_adaptive(p, nb, tolerance, opts);
+                        (plan, Some(PanelResolver::new(p, tolerance)), true)
+                    }
+                }
+            }
+            _ => {
+                let first = self.remap.borrow().evals == 0;
+                let map = self.cfg.variant.precision_map(p, None)?;
+                cholesky::prepare_tiles(&mut tiles, self.cfg.variant, &map);
+                let plan = PipelinePlan::build_static(p, nb, self.cfg.variant, map, opts);
+                (plan, None, first)
+            }
         };
+
+        let gen = GenContext {
+            locations: self.locations,
+            theta: *theta,
+            metric: self.cfg.metric,
+            nugget: self.cfg.nugget,
+        };
+        run_pipeline(
+            &mut plan,
+            &tiles,
+            &bufs,
+            resolver.as_ref(),
+            None,
+            Some(gen),
+            self.backend,
+            &self.scheduler,
+        )?;
 
         // per-iteration bookkeeping on the *realized* map: churn vs the
         // previous successful evaluation, and the modeled transfer volume
-        // of replaying this evaluation's graph with per-tile pricing
+        // of replaying the full iteration graph with per-tile pricing
+        let realized = plan.realized_map(&tiles);
         let churn = {
             let mut st = self.remap.borrow_mut();
-            let churn = st.map.as_ref().map_or(0, |prev| prev.churn(&plan.map));
-            st.map = Some(plan.map.clone());
+            let churn = st.map.as_ref().map_or(0, |prev| prev.churn(&realized));
+            st.map = Some(realized.clone());
             st.evals += 1;
             churn
         };
-        // conversion-protocol bytes are priced inside the same transfer
-        // stream as the tile misses (ROADMAP follow-on to PR 3)
-        let rep = datamove::simulate_with_conversions(
+        let rep = datamove::simulate_pipeline(
             &plan.graph,
             &self.cfg.model_device,
-            self.cfg.nb,
-            &plan.map,
-            &plan.conversion_totals(),
+            nb,
+            &realized,
+            &plan.conversions,
+            plan.r.max(1),
         );
         self.trace.borrow_mut().iterations.push(MleIterStat {
-            census: plan.map.census(),
+            census: realized.census(),
             map_churn: churn,
             remapped,
-            diagonal_dp: plan.map.diagonal_is_dp(),
+            diagonal_dp: realized.diagonal_is_dp(),
             modeled_transfer_bytes: rep.demand_bytes,
+            pipeline_tasks: plan.graph.len(),
+            solve_tasks: plan.counts.solves(),
+            logdet_tasks: plan.counts.logdet,
+            crosscov_tasks: plan.counts.crosscov,
         });
-        Ok((tiles, plan))
+        Ok((tiles, bufs))
     }
 
-    /// Evaluate the Gaussian log-likelihood (Eq. 2) at `theta`.
+    /// Evaluate the Gaussian log-likelihood (Eq. 2) at `theta`: ONE task
+    /// graph covering generation, (adaptive per-panel resolution,)
+    /// factorization, the tiled forward solve of the quadratic form and
+    /// the log-determinant chain — bit-identical to the serial
+    /// `solve_lower`/`log_determinant` oracles.
     pub fn loglik(&self, theta: &MaternParams) -> Result<f64> {
         let n = self.n();
-        let tiles = self.factorize(theta)?;
-        let logdet = cholesky::log_determinant(&tiles);
-        let u = cholesky::solve_lower(&tiles, self.z)?;
+        let opts = PipelineOptions { rhs_cols: 1, logdet: true, ..Default::default() };
+        let (_tiles, bufs) = self.run_iteration(theta, opts)?;
+        let logdet = bufs.logdet();
+        let u = bufs.column(0);
         let quad: f64 = u.iter().map(|x| x * x).sum();
         Ok(-0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln() - 0.5 * logdet - 0.5 * quad)
     }

@@ -6,14 +6,25 @@
 //! factor: two triangular solves give `w = Sigma^{-1} z`, then one
 //! cross-covariance product per prediction block.  Prediction quality is
 //! summarized by the paper's PMSE under k-fold cross-validation (k = 10).
+//!
+//! Both drivers run as whole-iteration pipeline graphs: [`KrigingModel::fit`]
+//! is ONE `Scheduler::run` covering generation -> factorization -> the
+//! forward+backward weight solves, and [`kfold_pmse`] batches ALL k
+//! folds — each a full generate/factor/solve/cross-covariance pipeline
+//! over its own training set — into a single merged graph, so one
+//! scheduler invocation work-steals across folds and every prediction
+//! rides an in-graph [`crate::cholesky::KernelCall::CrossCov`] task.
 
-use crate::cholesky;
+use crate::cholesky::{
+    self, merge_graphs, run_pipeline, CrossCovContext, GenContext, PanelResolver, PipelineBuffers,
+    PipelineContext, PipelineOptions, PipelinePlan, TileExecutor, Variant, PRED_BLOCK,
+};
 use crate::error::Result;
 use crate::kernels::{NativeBackend, TileBackend};
 use crate::matern::{matern_block, Location, MaternParams, Metric};
 use crate::mle::MleConfig;
 use crate::rng::Xoshiro256pp;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::tile::TileMatrix;
 
 /// A fitted kriging predictor.
@@ -23,6 +34,50 @@ pub struct KrigingModel {
     weights: Vec<f64>,
     theta: MaternParams,
     metric: Metric,
+}
+
+/// One pipeline problem's run state: tiles + shared buffers
+/// (+ resolver for adaptive variants).  Built per fit / per fold; the
+/// lowered plan travels separately so fold plans can be merged.
+struct PipelineSetup {
+    tiles: TileMatrix,
+    bufs: PipelineBuffers,
+    resolver: Option<PanelResolver>,
+}
+
+/// Lower one kriging problem (n training sites, weight solve, optional
+/// `pred_len` in-graph predictions) into a pipeline plan with prepared
+/// storage and a loaded RHS.
+fn build_setup(
+    n: usize,
+    z: &[f64],
+    cfg: &MleConfig,
+    pred_len: usize,
+) -> Result<(PipelineSetup, PipelinePlan)> {
+    let nb = cfg.nb;
+    let p = n / nb;
+    let opts = PipelineOptions {
+        rhs_cols: 1,
+        backward: true,
+        logdet: false,
+        pred_len,
+        ..Default::default()
+    };
+    let mut tiles = TileMatrix::zeros(n, nb)?;
+    let mut bufs = PipelineBuffers::new(p, nb, 1, pred_len);
+    bufs.load_column(0, z);
+    let (plan, resolver) = match cfg.variant {
+        Variant::Adaptive { tolerance } => (
+            PipelinePlan::build_adaptive(p, nb, tolerance, opts),
+            Some(PanelResolver::new(p, tolerance)),
+        ),
+        v => {
+            let map = v.precision_map(p, None)?;
+            cholesky::prepare_tiles(&mut tiles, v, &map);
+            (PipelinePlan::build_static(p, nb, v, map, opts), None)
+        }
+    };
+    Ok((PipelineSetup { tiles, bufs, resolver }, plan))
 }
 
 impl KrigingModel {
@@ -37,7 +92,10 @@ impl KrigingModel {
         Self::fit_with_backend(locations, z, theta, cfg, &NativeBackend)
     }
 
-    /// Same as [`Self::fit`] with an explicit backend.
+    /// Same as [`Self::fit`] with an explicit backend.  One pipeline
+    /// graph: generation, factorization and both triangular weight
+    /// solves in a single `Scheduler::run` (bit-identical to the serial
+    /// solve oracles).
     pub fn fit_with_backend(
         locations: &[Location],
         z: &[f64],
@@ -55,39 +113,41 @@ impl KrigingModel {
                 cfg.nb
             );
         }
-        let workers = if cfg.num_workers == 0 {
-            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
-        } else {
-            cfg.num_workers
-        };
-        let sched = Scheduler::with_workers(workers);
-        let mut tiles = TileMatrix::zeros(locations.len(), cfg.nb)?;
-        cholesky::generate_and_factorize(
-            &mut tiles,
-            locations,
-            theta,
-            cfg.metric,
-            cfg.nugget,
-            cfg.variant,
+        theta.validate()?;
+        let workers = SchedulerConfig::resolve_workers(cfg.num_workers);
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: workers,
+            policy: cfg.policy,
+            trace: false,
+        });
+        let (setup, mut plan) = build_setup(locations.len(), z, cfg, 0)?;
+        let gen = GenContext { locations, theta, metric: cfg.metric, nugget: cfg.nugget };
+        run_pipeline(
+            &mut plan,
+            &setup.tiles,
+            &setup.bufs,
+            setup.resolver.as_ref(),
+            None,
+            Some(gen),
             backend,
             &sched,
         )?;
-        let y = cholesky::solve_lower(&tiles, z)?;
-        let weights = cholesky::solve_lower_transposed(&tiles, &y)?;
+        let weights = setup.bufs.column(0);
         Ok(Self { train_locs: locations.to_vec(), weights, theta, metric: cfg.metric })
     }
 
-    /// Predict the conditional mean at new sites.
+    /// Predict the conditional mean at new sites (serial; the k-fold
+    /// driver instead emits in-graph `CrossCov` tasks with the same
+    /// blocking, so the two paths are bit-identical).
     pub fn predict(&self, sites: &[Location]) -> Vec<f64> {
         let m = sites.len();
         let n = self.train_locs.len();
         // block the cross-covariance so memory stays at blk*n
-        const BLK: usize = 256;
         let mut out = vec![0.0; m];
-        let mut buf = vec![0.0; BLK.min(m).max(1) * n];
+        let mut buf = vec![0.0; PRED_BLOCK.min(m).max(1) * n];
         let mut s = 0;
         while s < m {
-            let e = (s + BLK).min(m);
+            let e = (s + PRED_BLOCK).min(m);
             let rows = e - s;
             let block = &mut buf[..rows * n];
             // column-major (rows x n): block[r + c*rows] = C(site_r, train_c)
@@ -129,6 +189,20 @@ pub struct KfoldReport {
 /// k-fold cross-validated PMSE (paper uses k = 10): shuffle sites,
 /// hold out each fold, krige it from the rest, average the MSEs.
 ///
+/// All k folds run through **one merged task graph**: each fold
+/// contributes its full pipeline (generation over its training set,
+/// factorization, the multi-RHS forward+backward weight solves, and one
+/// `CrossCov` task per held-out prediction block), with resources
+/// namespaced per fold, so a single `Scheduler::run` executes — and
+/// work-steals across — the entire cross-validation.  Fold contents are
+/// bit-identical to fitting and predicting each fold serially.
+///
+/// Trade-off: batching holds every fold's tile matrix resident at once
+/// (~k x the serial driver's peak memory, each fold being a
+/// ((k-1)/k · n)^2/2 triangle) in exchange for k x the schedulable
+/// parallelism.  At memory-bound problem sizes, fall back to fitting
+/// folds serially via [`KrigingModel::fit`].
+///
 /// Requires `n % (k * cfg.nb) == 0` so every training set stays
 /// tile-aligned.
 pub fn kfold_pmse(
@@ -139,35 +213,107 @@ pub fn kfold_pmse(
     cfg: &MleConfig,
     seed: u64,
 ) -> Result<KfoldReport> {
+    kfold_pmse_with_backend(locations, z, theta, k, cfg, seed, &NativeBackend)
+}
+
+/// [`kfold_pmse`] with an explicit backend.
+#[allow(clippy::too_many_arguments)]
+pub fn kfold_pmse_with_backend(
+    locations: &[Location],
+    z: &[f64],
+    theta: MaternParams,
+    k: usize,
+    cfg: &MleConfig,
+    seed: u64,
+    backend: &dyn TileBackend,
+) -> Result<KfoldReport> {
     let n = locations.len();
     if k < 2 || n % (k * cfg.nb) != 0 {
         crate::invalid_arg!("k-fold needs n % (k * nb) == 0 (n={n}, k={k}, nb={})", cfg.nb);
     }
+    theta.validate()?;
     let mut idx: Vec<usize> = (0..n).collect();
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     rng.shuffle(&mut idx);
     let fold_len = n / k;
-    let mut fold_pmse = Vec::with_capacity(k);
+
+    // fold membership (identical split to the historical serial driver)
+    struct Fold {
+        tr_locs: Vec<Location>,
+        tr_z: Vec<f64>,
+        te_locs: Vec<Location>,
+        te_z: Vec<f64>,
+    }
+    let mut folds: Vec<Fold> = Vec::with_capacity(k);
     for f in 0..k {
         let test: Vec<usize> = idx[f * fold_len..(f + 1) * fold_len].to_vec();
         let mut mask = vec![false; n];
         for &t in &test {
             mask[t] = true;
         }
-        let (mut tr_locs, mut tr_z, mut te_locs, mut te_z) =
-            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut fold = Fold {
+            tr_locs: Vec::new(),
+            tr_z: Vec::new(),
+            te_locs: Vec::new(),
+            te_z: Vec::new(),
+        };
         for i in 0..n {
             if mask[i] {
-                te_locs.push(locations[i]);
-                te_z.push(z[i]);
+                fold.te_locs.push(locations[i]);
+                fold.te_z.push(z[i]);
             } else {
-                tr_locs.push(locations[i]);
-                tr_z.push(z[i]);
+                fold.tr_locs.push(locations[i]);
+                fold.tr_z.push(z[i]);
             }
         }
-        let model = KrigingModel::fit(&tr_locs, &tr_z, theta, cfg)?;
-        let pred = model.predict(&te_locs);
-        fold_pmse.push(pmse(&pred, &te_z));
+        folds.push(fold);
+    }
+
+    // one pipeline per fold, merged into a single batched graph
+    let mut setups: Vec<PipelineSetup> = Vec::with_capacity(k);
+    let mut plans: Vec<PipelinePlan> = Vec::with_capacity(k);
+    for fold in &folds {
+        let (setup, plan) = build_setup(fold.tr_locs.len(), &fold.tr_z, cfg, fold.te_locs.len())?;
+        setups.push(setup);
+        plans.push(plan);
+    }
+    let (mut graph, local) = merge_graphs(&plans);
+
+    let workers = SchedulerConfig::resolve_workers(cfg.num_workers);
+    let sched = Scheduler::new(SchedulerConfig {
+        num_workers: workers,
+        policy: cfg.policy,
+        trace: false,
+    });
+    let execs: Vec<TileExecutor<'_, dyn TileBackend>> = folds
+        .iter()
+        .zip(setups.iter())
+        .map(|(fold, s)| {
+            TileExecutor::new(&s.tiles, backend)
+                .with_generation(GenContext {
+                    locations: &fold.tr_locs,
+                    theta,
+                    metric: cfg.metric,
+                    nugget: cfg.nugget,
+                })
+                .with_pipeline(PipelineContext {
+                    bufs: &s.bufs,
+                    resolver: s.resolver.as_ref(),
+                    crosscov: Some(CrossCovContext {
+                        sites: &fold.te_locs,
+                        train: &fold.tr_locs,
+                        theta,
+                        metric: cfg.metric,
+                        wcol: 0,
+                    }),
+                })
+        })
+        .collect();
+    sched.run(&mut graph, |task, bc| execs[bc.member].execute(&bc.call, &local[task]))?;
+
+    let mut fold_pmse = Vec::with_capacity(k);
+    for (fold, s) in folds.iter().zip(setups.iter()) {
+        fold_pmse.push(pmse(&s.bufs.predictions(), &fold.te_z));
     }
     let mean_pmse = fold_pmse.iter().sum::<f64>() / k as f64;
     Ok(KfoldReport { fold_pmse, mean_pmse })

@@ -15,10 +15,10 @@
 
 use std::collections::HashMap;
 
-use super::graph::{Access, TaskGraph};
+use super::graph::{Access, ResourceId, TaskGraph};
 use super::TaskCost;
 use crate::cholesky::ConversionCounts;
-use crate::tile::{Precision, PrecisionMap, TileId};
+use crate::tile::{Precision, PrecisionMap};
 
 /// Accelerator + interconnect description.
 #[derive(Clone, Debug)]
@@ -110,19 +110,21 @@ impl DataMoveReport {
     }
 }
 
-/// LRU tile cache of the device memory.
+/// LRU resource cache of the device memory.
 ///
-/// Keyed by [`TileId`] alone: storage is precision-native, so a tile has
-/// exactly one resident representation (its map precision) and a tile
-/// resident on-device satisfies every access — cross-precision views are
-/// derived on-device by the plan's conversion tasks.  The transfer saving
-/// of mixed precision comes from loads of reduced tiles costing their
-/// stored bytes, not f64 bytes.
+/// Keyed by [`ResourceId`] alone: storage is precision-native, so a tile
+/// has exactly one resident representation (its map precision) and a
+/// resource resident on-device satisfies every access — cross-precision
+/// views are derived on-device by the plan's conversion tasks.  The
+/// transfer saving of mixed precision comes from loads of reduced tiles
+/// costing their stored bytes, not f64 bytes.  RHS blocks, prediction
+/// blocks and scalar slots pay their own (f64) bytes through the same
+/// cache, so the pipeline's epilogue traffic shows up in the stream.
 struct GpuCache {
     capacity: usize,
     used: usize,
-    /// tile -> (bytes, lru stamp, dirty)
-    resident: HashMap<TileId, (usize, u64, bool)>,
+    /// resource -> (bytes, lru stamp, dirty)
+    resident: HashMap<ResourceId, (usize, u64, bool)>,
     clock: u64,
 }
 
@@ -131,9 +133,9 @@ impl GpuCache {
         Self { capacity, used: 0, resident: HashMap::new(), clock: 0 }
     }
 
-    /// Touch a tile; returns bytes transferred H2D (0 on hit) and bytes
-    /// written back D2H by evictions.
-    fn touch(&mut self, key: TileId, bytes: usize, write: bool) -> (usize, usize) {
+    /// Touch a resource; returns bytes transferred H2D (0 on hit) and
+    /// bytes written back D2H by evictions.
+    fn touch(&mut self, key: ResourceId, bytes: usize, write: bool) -> (usize, usize) {
         self.clock += 1;
         if let Some(e) = self.resident.get_mut(&key) {
             e.1 = self.clock;
@@ -193,13 +195,40 @@ pub fn simulate_with_conversions<P: TaskCost>(
     map: &PrecisionMap,
     conversions: &ConversionCounts,
 ) -> DataMoveReport {
+    simulate_pipeline(graph, dev, nb, map, conversions, 1)
+}
+
+/// [`simulate_with_conversions`] for whole-iteration pipeline graphs:
+/// non-tile resources are priced in the same transfer stream — an RHS
+/// block moves `nb * rhs_cols * 8` bytes (the f64 multi-RHS panel rows),
+/// a prediction block `PRED_BLOCK * 8` (its site chunk), and a scalar
+/// reduction slot 8 bytes.  `rhs_cols` is the pipeline's `r` (pass 1
+/// for factorization-only graphs, which is what the thinner wrappers
+/// do).
+pub fn simulate_pipeline<P: TaskCost>(
+    graph: &TaskGraph<P>,
+    dev: &DeviceModel,
+    nb: usize,
+    map: &PrecisionMap,
+    conversions: &ConversionCounts,
+    rhs_cols: usize,
+) -> DataMoveReport {
     let mut cache = GpuCache::new(dev.gpu_mem_bytes);
     let mut rep = DataMoveReport::default();
     for t in graph.tasks() {
         let prec = t.payload.precision();
-        for &(tile, mode) in &t.accesses {
-            let tile_bytes = nb * nb * map.get(tile.i, tile.j).bytes();
-            let (h2d, d2h) = cache.touch(tile, tile_bytes, mode == Access::Write);
+        for &(res, mode) in &t.accesses {
+            let bytes = match res {
+                ResourceId::Tile(tile) => nb * nb * map.get(tile.i, tile.j).bytes(),
+                ResourceId::Rhs(_) => nb * rhs_cols.max(1) * 8,
+                // full-chunk upper bound: the pricer sees resources, not
+                // payloads, so a partial last block is charged the full
+                // PRED_BLOCK (the gemv *flops* are priced exactly from
+                // the CrossCov payload's row count)
+                ResourceId::Pred(_) => crate::cholesky::PRED_BLOCK * 8,
+                ResourceId::Scalar(_) => 8,
+            };
+            let (h2d, d2h) = cache.touch(res, bytes, mode == Access::Write);
             if h2d > 0 {
                 rep.transfers += 1;
             }
@@ -221,6 +250,7 @@ pub fn simulate_with_conversions<P: TaskCost>(
 mod tests {
     use super::*;
     use crate::scheduler::graph::Access;
+    use crate::tile::TileId;
 
     struct Toy {
         flops: f64,

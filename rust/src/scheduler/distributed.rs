@@ -20,7 +20,7 @@
 
 use std::collections::HashMap;
 
-use super::graph::{Access, TaskGraph};
+use super::graph::{Access, ResourceId, TaskGraph};
 use super::TaskCost;
 use crate::tile::{Precision, PrecisionMap, TileId};
 
@@ -63,6 +63,18 @@ impl ClusterModel {
         let (pr, pc) = self.grid();
         (t.i % pr) * pc + (t.j % pc)
     }
+
+    /// Owning node of any pipeline resource: tiles follow the 2D
+    /// block-cyclic map; RHS/prediction block `b` and scalar slot `s`
+    /// live with the diagonal tile of the same index (the node whose
+    /// panel work produces/consumes them).
+    fn owner_res(&self, r: ResourceId) -> usize {
+        match r {
+            ResourceId::Tile(t) => self.owner(t),
+            ResourceId::Rhs(b) | ResourceId::Pred(b) => self.owner(TileId::new(b, b)),
+            ResourceId::Scalar(s) => self.owner(TileId::new(s, s)),
+        }
+    }
 }
 
 /// Modelled distributed execution outcome.
@@ -100,8 +112,9 @@ pub fn simulate<P: TaskCost>(
     let mut compute = vec![0.0f64; cluster.nodes];
     let mut comm = vec![0.0f64; cluster.nodes];
     let mut rep = DistributedReport::default();
-    // last writer of each tile, to attribute producer->consumer transfers
-    let mut producer_node: HashMap<TileId, usize> = HashMap::new();
+    // last writer of each resource, to attribute producer->consumer
+    // transfers
+    let mut producer_node: HashMap<ResourceId, usize> = HashMap::new();
     // critical path: completion time per task under infinite parallelism
     let mut finish = vec![0.0f64; graph.len()];
     // predecessor lists, inverted from the forward successor edges
@@ -118,27 +131,41 @@ pub fn simulate<P: TaskCost>(
             * if prec == Precision::F64 { 1.0 } else { cluster.sp_speedup };
         let exec_s = t.payload.flops() / (rate * 1e9);
 
-        // node that runs the task = owner of its first written tile
-        let out_tile = t
+        // node that runs the task = owner of its first written resource
+        let out_res = t
             .accesses
             .iter()
             .find(|(_, m)| *m == Access::Write)
-            .map(|(tl, _)| *tl)
+            .map(|(r, _)| *r)
             .unwrap_or(t.accesses[0].0);
-        let node = cluster.owner(out_tile);
+        let node = cluster.owner_res(out_res);
 
         let mut ready = 0.0f64;
-        for &(tile, mode) in &t.accesses {
+        for &(res, mode) in &t.accesses {
             if mode == Access::Read {
-                let src = *producer_node.get(&tile).unwrap_or(&cluster.owner(tile));
+                let src = *producer_node.get(&res).unwrap_or(&cluster.owner_res(res));
                 if src != node {
-                    // the wire carries the tile's stored representation
-                    let tile_bytes = (nb * nb * map.get(tile.i, tile.j).bytes()) as f64;
-                    let msg = cluster.alpha_s + tile_bytes / cluster.beta_bytes_per_s;
+                    // the wire carries the resource's stored
+                    // representation: tiles at their map precision, RHS
+                    // block rows as f64 (single-column assumption — the
+                    // cluster model has no rhs_cols knob), prediction
+                    // blocks at their full PRED_BLOCK chunk (upper bound
+                    // for a partial last block), scalars one f64
+                    let res_bytes = match res {
+                        ResourceId::Tile(tile) => {
+                            (nb * nb * map.get(tile.i, tile.j).bytes()) as f64
+                        }
+                        ResourceId::Rhs(_) => (nb * 8) as f64,
+                        ResourceId::Pred(_) => (crate::cholesky::PRED_BLOCK * 8) as f64,
+                        ResourceId::Scalar(_) => 8.0,
+                    };
+                    let msg = cluster.alpha_s + res_bytes / cluster.beta_bytes_per_s;
                     comm[node] += msg;
-                    rep.total_comm_bytes += tile_bytes;
+                    rep.total_comm_bytes += res_bytes;
                     rep.messages += 1;
-                    *rep.per_tile_messages.entry(tile).or_insert(0) += 1;
+                    if let ResourceId::Tile(tile) = res {
+                        *rep.per_tile_messages.entry(tile).or_insert(0) += 1;
+                    }
                     ready = ready.max(msg);
                 }
             }
@@ -150,10 +177,10 @@ pub fn simulate<P: TaskCost>(
         let pred_max = preds[idx].iter().map(|&p| finish[p]).fold(0.0, f64::max);
         finish[idx] = pred_max + ready + exec_s;
 
-        // record who produced each written tile (for later consumers)
-        for &(tile, mode) in &t.accesses {
+        // record who produced each written resource (for consumers)
+        for &(res, mode) in &t.accesses {
             if mode == Access::Write {
-                producer_node.insert(tile, node);
+                producer_node.insert(res, node);
             }
         }
     }

@@ -1,31 +1,77 @@
 //! Sequential-task-flow (STF) dependency graph — the StarPU core idea:
-//! the algorithm *inserts* tasks in program order declaring which tiles it
-//! reads/writes, and the graph infers RAW/WAR/WAW edges automatically.
+//! the algorithm *inserts* tasks in program order declaring which
+//! resources it reads/writes, and the graph infers RAW/WAR/WAW edges
+//! automatically.
 //!
 //! The graph is payload-generic: the Cholesky planner attaches a
 //! [`crate::cholesky::KernelCall`] to each node, the tests attach toy
 //! payloads, and the Fig. 5/6 simulators replay the same graphs under
 //! analytic device/network models.
+//!
+//! Resources are [`ResourceId`]s, not just tiles: the whole-iteration
+//! pipeline (generation -> factorization -> triangular solves -> log-det
+//! -> kriging cross-covariance) declares access to RHS vector blocks and
+//! scalar reduction slots with the same R/W protocol the tiles use, so
+//! the O(n^2) epilogue is scheduled, priced and traced like the cubic
+//! factorization instead of running as serial loops the runtime cannot
+//! see.  [`TaskGraph::submit`] accepts anything `Into<ResourceId>`, so
+//! tile-only builders keep passing plain [`TileId`]s.
 
 use std::collections::HashMap;
 
 use crate::tile::TileId;
 
-/// Access mode a task declares on a tile (StarPU's R / RW).
+/// Access mode a task declares on a resource (StarPU's R / RW).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Access {
     Read,
     Write,
 }
 
+/// One schedulable resource: a matrix tile, an `nb`-row block of the
+/// shared multi-RHS panel, a block of the prediction output vector, or a
+/// scalar reduction slot.  The dependency inference treats every variant
+/// identically — only the analytic cost models care which kind of bytes
+/// a transfer carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ResourceId {
+    /// A lower-triangle covariance/factor tile.
+    Tile(TileId),
+    /// Block-row `b` of the RHS panel (rows `b*nb..(b+1)*nb`, all `r`
+    /// columns — the n x r multi-RHS block the tiled solves operate on).
+    Rhs(usize),
+    /// Block `b` of the kriging prediction output vector.
+    Pred(usize),
+    /// Scalar reduction slot `s` (log-det partials, panel-resolution
+    /// chain links).
+    Scalar(usize),
+}
+
+impl From<TileId> for ResourceId {
+    fn from(t: TileId) -> Self {
+        ResourceId::Tile(t)
+    }
+}
+
+impl ResourceId {
+    /// The tile behind this resource, if it is one (cost models that
+    /// only understand tiles filter through this).
+    pub fn as_tile(self) -> Option<TileId> {
+        match self {
+            ResourceId::Tile(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
 /// Node index within a [`TaskGraph`].
 pub type TaskIdx = usize;
 
-/// One task: payload + declared tile accesses + inferred structure.
+/// One task: payload + declared resource accesses + inferred structure.
 #[derive(Debug)]
 pub struct TaskNode<P> {
     pub payload: P,
-    pub accesses: Vec<(TileId, Access)>,
+    pub accesses: Vec<(ResourceId, Access)>,
     /// Tasks that must run after this one.
     pub successors: Vec<TaskIdx>,
     /// Number of unfinished predecessors (filled by [`TaskGraph::indegrees`]).
@@ -41,16 +87,16 @@ pub struct TaskNode<P> {
 }
 
 #[derive(Debug, Default)]
-struct TileState {
+struct ResourceState {
     last_writer: Option<TaskIdx>,
     readers_since_write: Vec<TaskIdx>,
 }
 
-/// STF task graph over tiles.
+/// STF task graph over resources (tiles, RHS blocks, scalar slots).
 #[derive(Debug)]
 pub struct TaskGraph<P> {
     tasks: Vec<TaskNode<P>>,
-    tiles: HashMap<TileId, TileState>,
+    resources: HashMap<ResourceId, ResourceState>,
 }
 
 impl<P> Default for TaskGraph<P> {
@@ -61,19 +107,28 @@ impl<P> Default for TaskGraph<P> {
 
 impl<P> TaskGraph<P> {
     pub fn new() -> Self {
-        Self { tasks: Vec::new(), tiles: HashMap::new() }
+        Self { tasks: Vec::new(), resources: HashMap::new() }
     }
 
     /// Insert a task in program order; dependencies on earlier tasks are
-    /// inferred from overlapping tile accesses:
-    /// * Read  -> RAW edge from the tile's last writer.
+    /// inferred from overlapping resource accesses:
+    /// * Read  -> RAW edge from the resource's last writer.
     /// * Write -> WAW edge from the last writer plus WAR edges from every
     ///   reader since (then this task becomes the last writer).
-    pub fn submit(&mut self, payload: P, accesses: Vec<(TileId, Access)>) -> TaskIdx {
+    ///
+    /// Accesses accept anything `Into<ResourceId>`, so tile-only plans
+    /// keep submitting plain `(TileId, Access)` lists.
+    pub fn submit<R: Into<ResourceId>>(
+        &mut self,
+        payload: P,
+        accesses: Vec<(R, Access)>,
+    ) -> TaskIdx {
+        let accesses: Vec<(ResourceId, Access)> =
+            accesses.into_iter().map(|(r, m)| (r.into(), m)).collect();
         let idx = self.tasks.len();
         let mut preds: Vec<TaskIdx> = Vec::new();
-        for &(tile, mode) in &accesses {
-            let st = self.tiles.entry(tile).or_default();
+        for &(res, mode) in &accesses {
+            let st = self.resources.entry(res).or_default();
             match mode {
                 Access::Read => {
                     if let Some(w) = st.last_writer {

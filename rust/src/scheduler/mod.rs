@@ -15,7 +15,7 @@ pub mod graph;
 pub mod trace;
 pub mod worker;
 
-pub use graph::{Access, TaskGraph, TaskIdx, TaskNode};
+pub use graph::{Access, ResourceId, TaskGraph, TaskIdx, TaskNode};
 pub use trace::{ExecutionTrace, TaskSpan};
 pub use worker::{Scheduler, SchedulerConfig, SchedulingPolicy};
 

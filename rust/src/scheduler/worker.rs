@@ -91,12 +91,24 @@ pub struct SchedulerConfig {
     pub trace: bool,
 }
 
+impl SchedulerConfig {
+    /// Resolve a configured worker count: `0` means "use the machine's
+    /// available parallelism" (falling back to 1 when it cannot be
+    /// queried).  The MLE and prediction drivers share this one
+    /// definition instead of each re-deriving it.
+    pub fn resolve_workers(num_workers: usize) -> usize {
+        if num_workers == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            num_workers
+        }
+    }
+}
+
 impl Default for SchedulerConfig {
     fn default() -> Self {
         Self {
-            num_workers: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
+            num_workers: SchedulerConfig::resolve_workers(0),
             policy: SchedulingPolicy::default(),
             trace: false,
         }

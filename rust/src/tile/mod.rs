@@ -69,6 +69,21 @@ impl Precision {
             Precision::Bf16 => BF16_EPS,
         }
     }
+
+    /// The adaptive tile-selection rule, shared by the whole-matrix map
+    /// ([`PrecisionMap::adaptive`]) and the pipeline's per-column panel
+    /// resolver so the two paths can never diverge: the cheapest storage
+    /// whose roundoff keeps `cal < tolerance / eps(prec)` (bf16 before
+    /// f32 before f64).
+    pub fn pick_adaptive(cal: f64, tolerance: f64) -> Precision {
+        if cal < tolerance / Precision::Bf16.eps() {
+            Precision::Bf16
+        } else if cal < tolerance / Precision::F32.eps() {
+            Precision::F32
+        } else {
+            Precision::F64
+        }
+    }
 }
 
 /// Per-tile storage-precision assignment over the lower triangle of a
@@ -140,13 +155,7 @@ impl PrecisionMap {
                 return Precision::F64;
             }
             let cal = norms[i * (i + 1) / 2 + j] * scalar / global;
-            if cal < tolerance / Precision::Bf16.eps() {
-                Precision::Bf16
-            } else if cal < tolerance / Precision::F32.eps() {
-                Precision::F32
-            } else {
-                Precision::F64
-            }
+            Precision::pick_adaptive(cal, tolerance)
         })
     }
 

@@ -1,0 +1,431 @@
+//! Whole-iteration pipeline acceptance tests:
+//!
+//! * multi-RHS tiled `SolveFwd`/`SolveBwd` and the `LogDetPartial` chain
+//!   are **bit-identical** (`to_bits`) to the serial oracles in full DP
+//!   across nb in {8, 64, 96} x r in {1, 4};
+//! * the fused Adaptive pipeline runs generation, per-panel-column map
+//!   resolution, factorization and the epilogue as ONE `Scheduler::run`
+//!   — no whole-matrix barrier — and still factors correctly;
+//! * k-fold PMSE rides one batched multi-RHS graph and is deterministic:
+//!   same seed => bit-identical PMSE under 1/4/8 workers and all four
+//!   scheduling policies, and identical to the serial fit+predict path;
+//! * the MLE trace reports the pipeline's solve/log-det task counts and
+//!   modeled transfer bytes for the full iteration.
+
+use mpcholesky::cholesky::{
+    factorize_dense, log_determinant, run_pipeline, solve_lower, solve_lower_transposed, KernelCall,
+    PanelResolver, PipelineBuffers, PipelineOptions, PipelinePlan, Variant,
+};
+use mpcholesky::kernels::NativeBackend;
+use mpcholesky::matern::{matern_matrix, Location, MaternParams, Metric};
+use mpcholesky::mle::{MleConfig, MleProblem};
+use mpcholesky::predict::{kfold_pmse, pmse, KrigingModel};
+use mpcholesky::rng::Xoshiro256pp;
+use mpcholesky::scheduler::{Scheduler, SchedulingPolicy};
+use mpcholesky::tile::{DenseMatrix, TileMatrix};
+
+fn matern_locs(n: usize, seed: u64) -> Vec<Location> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    locs.sort_by(|a, b| (a.x + a.y).partial_cmp(&(b.x + b.y)).unwrap());
+    locs
+}
+
+fn spd_dense(n: usize, seed: u64) -> DenseMatrix {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut b = DenseMatrix::zeros(n);
+    for j in 0..n {
+        for i in 0..n {
+            b.set(i, j, r.standard_normal());
+        }
+    }
+    let mut a = b.matmul_nt(&b);
+    for i in 0..n {
+        a.set(i, i, a.get(i, i) + n as f64);
+    }
+    a
+}
+
+/// Multi-RHS tiled solves + log-det chain vs the serial oracles, full
+/// DP, `to_bits` equality over the required nb x r sweep.
+#[test]
+fn multi_rhs_solves_bit_identical_to_serial_oracles() {
+    for nb in [8usize, 64, 96] {
+        let p = 4;
+        let n = p * nb;
+        let a = spd_dense(n, 1000 + nb as u64);
+        let sched = Scheduler::with_workers(4);
+        let tiles = factorize_dense(&a, nb, Variant::FullDp, &NativeBackend, &sched).unwrap();
+        for r in [1usize, 4] {
+            let opts = PipelineOptions {
+                rhs_cols: r,
+                backward: true,
+                logdet: true,
+                ..Default::default()
+            };
+            let mut plan = PipelinePlan::build_epilogue(p, nb, Variant::FullDp, opts);
+            // the solve stage is one graph regardless of r: task count
+            // scales with tiles, each task sweeps all r columns
+            assert_eq!(plan.counts.solve_fwd, p + p * (p - 1) / 2, "nb={nb} r={r}");
+            let mut bufs = PipelineBuffers::new(p, nb, r, 0);
+            let mut rng = Xoshiro256pp::seed_from_u64(2000 + (nb + r) as u64);
+            let cols: Vec<Vec<f64>> = (0..r)
+                .map(|_| (0..n).map(|_| rng.standard_normal()).collect())
+                .collect();
+            for (c, v) in cols.iter().enumerate() {
+                bufs.load_column(c, v);
+            }
+            run_pipeline(&mut plan, &tiles, &bufs, None, None, None, &NativeBackend, &sched)
+                .unwrap();
+            for (c, v) in cols.iter().enumerate() {
+                let y = solve_lower(&tiles, v).unwrap();
+                let x = solve_lower_transposed(&tiles, &y).unwrap();
+                let got = bufs.column(c);
+                assert_eq!(got.len(), x.len());
+                for (d, (g, w)) in got.iter().zip(x.iter()).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "nb={nb} r={r} col={c} row={d}: {g} vs {w}"
+                    );
+                }
+            }
+            assert_eq!(
+                bufs.logdet().to_bits(),
+                log_determinant(&tiles).to_bits(),
+                "nb={nb} r={r}: log-det chain diverges from the serial oracle"
+            );
+        }
+    }
+}
+
+/// The fused Adaptive pipeline: generation tasks live in the SAME graph
+/// as the factorization (the acceptance property — no whole-matrix
+/// barrier), one `Scheduler::run` produces a valid factor, the realized
+/// map keeps the diagonal DP, and zero tolerance reproduces the full-DP
+/// factor bit-for-bit.
+#[test]
+fn adaptive_pipeline_is_one_graph_and_factors_correctly() {
+    let n = 160;
+    let nb = 32;
+    let p = n / nb;
+    let locs = matern_locs(n, 41);
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let a = DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8))
+        .unwrap();
+    let sched = Scheduler::with_workers(4);
+
+    let run_adaptive = |tolerance: f64| -> (TileMatrix, PipelinePlan) {
+        let opts = PipelineOptions { rhs_cols: 0, logdet: false, ..Default::default() };
+        let mut plan = PipelinePlan::build_adaptive(p, nb, tolerance, opts);
+        // acceptance: the fused Adaptive plan contains Generate tasks
+        assert!(
+            plan.graph
+                .tasks()
+                .iter()
+                .any(|t| matches!(t.payload.call, KernelCall::Generate { .. })),
+            "fused adaptive plan lost its generation stage"
+        );
+        let tiles = TileMatrix::zeros(n, nb).unwrap();
+        let bufs = PipelineBuffers::new(p, nb, 0, 0);
+        let resolver = PanelResolver::new(p, tolerance);
+        let gen = mpcholesky::cholesky::GenContext {
+            locations: &locs,
+            theta,
+            metric: Metric::Euclidean,
+            nugget: 1e-8,
+        };
+        run_pipeline(
+            &mut plan,
+            &tiles,
+            &bufs,
+            Some(&resolver),
+            None,
+            Some(gen),
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
+        (tiles, plan)
+    };
+
+    // tolerance 0: nothing demotes; bit-identical to the full-DP factor
+    let (t0, plan0) = run_adaptive(0.0);
+    let dp = factorize_dense(&a, nb, Variant::FullDp, &NativeBackend, &sched).unwrap();
+    assert_eq!(t0.to_dense(true).max_abs_diff(&dp.to_dense(true)), 0.0);
+    let map0 = plan0.realized_map(&t0);
+    assert_eq!(map0.census().dp, p * (p + 1) / 2, "tolerance 0 demoted a tile");
+
+    // a real tolerance: tiles demote, the diagonal stays DP, and the
+    // factor still reconstructs the covariance to mixed-precision level
+    let (t1, plan1) = run_adaptive(1e-6);
+    let map1 = plan1.realized_map(&t1);
+    assert!(map1.diagonal_is_dp(), "per-column resolution demoted a diagonal tile");
+    let l = t1.to_dense(true);
+    let llt = l.matmul_nt(&l);
+    let mut err = 0.0f64;
+    for j in 0..n {
+        for i in j..n {
+            err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+        }
+    }
+    assert!(err < 5e-5, "adaptive pipeline reconstruction err {err}");
+}
+
+/// Per-column (prefix-norm) resolution is conservative relative to the
+/// whole-matrix rule: it never stores a tile in LOWER precision than
+/// the two-phase adaptive map would.
+#[test]
+fn per_column_resolution_never_demotes_below_whole_matrix_rule() {
+    let n = 192;
+    let nb = 32;
+    let p = n / nb;
+    let locs = matern_locs(n, 43);
+    let theta = MaternParams::new(1.0, 0.08, 0.5);
+    let tol = 1e-6;
+    let sched = Scheduler::with_workers(3);
+
+    // whole-matrix rule (two-phase oracle path)
+    let mut gen_tiles = TileMatrix::zeros(n, nb).unwrap();
+    mpcholesky::cholesky::generate_covariance(
+        &mut gen_tiles,
+        &locs,
+        theta,
+        Metric::Euclidean,
+        1e-8,
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    let full_map = Variant::Adaptive { tolerance: tol }
+        .precision_map(p, Some(&gen_tiles))
+        .unwrap();
+
+    // per-column rule (one-graph pipeline)
+    let opts = PipelineOptions { rhs_cols: 0, logdet: false, ..Default::default() };
+    let mut plan = PipelinePlan::build_adaptive(p, nb, tol, opts);
+    let tiles = TileMatrix::zeros(n, nb).unwrap();
+    let bufs = PipelineBuffers::new(p, nb, 0, 0);
+    let resolver = PanelResolver::new(p, tol);
+    let gen = mpcholesky::cholesky::GenContext {
+        locations: &locs,
+        theta,
+        metric: Metric::Euclidean,
+        nugget: 1e-8,
+    };
+    run_pipeline(&mut plan, &tiles, &bufs, Some(&resolver), None, Some(gen), &NativeBackend, &sched)
+        .unwrap();
+    let col_map = plan.realized_map(&tiles);
+
+    // Precision derives Ord with Bf16 < F32 < F64: "conservative" means
+    // the per-column assignment is >= the whole-matrix one everywhere
+    for i in 0..p {
+        for j in 0..=i {
+            assert!(
+                col_map.get(i, j) >= full_map.get(i, j),
+                "tile ({i},{j}): per-column {:?} below whole-matrix {:?}",
+                col_map.get(i, j),
+                full_map.get(i, j)
+            );
+        }
+    }
+    // and it is not vacuous: something still demotes under the prefix rule
+    assert!(col_map.census().dp < p * (p + 1) / 2, "prefix rule demoted nothing");
+}
+
+/// k-fold PMSE determinism: one batched multi-RHS graph, same seed =>
+/// bit-identical fold PMSEs under 1/4/8 workers and all four policies —
+/// and identical to the serial fit+predict path for the same fold split.
+#[test]
+fn kfold_pmse_deterministic_across_workers_and_policies() {
+    use mpcholesky::datagen::{FieldConfig, SyntheticField};
+    let f = SyntheticField::generate(&FieldConfig {
+        n: 256,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 5,
+        ..Default::default()
+    })
+    .unwrap();
+    let k = 4;
+    let seed = 9;
+    let mut reference: Option<Vec<u64>> = None;
+    for policy in [
+        SchedulingPolicy::Fifo,
+        SchedulingPolicy::Lifo,
+        SchedulingPolicy::CriticalPath,
+        SchedulingPolicy::PrecisionFrontier,
+    ] {
+        for workers in [1usize, 4, 8] {
+            let cfg = MleConfig {
+                nb: 64,
+                variant: Variant::MixedPrecision { diag_thick: 2 },
+                num_workers: workers,
+                policy,
+                ..Default::default()
+            };
+            let rep = kfold_pmse(&f.locations, &f.values, f.theta, k, &cfg, seed).unwrap();
+            assert_eq!(rep.fold_pmse.len(), k);
+            let bits: Vec<u64> = rep.fold_pmse.iter().map(|v| v.to_bits()).collect();
+            if let Some(want) = &reference {
+                assert_eq!(&bits, want, "{policy:?}/{workers}w: PMSE diverges");
+            } else {
+                reference = Some(bits);
+            }
+        }
+    }
+
+    // cross-check fold 0 against the serial fit+predict path (same
+    // shuffle => same membership): the batched graph must reproduce it
+    let n = f.locations.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let fold_len = n / k;
+    let mut mask = vec![false; n];
+    for &t in &idx[0..fold_len] {
+        mask[t] = true;
+    }
+    let (mut tr_locs, mut tr_z, mut te_locs, mut te_z) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for i in 0..n {
+        if mask[i] {
+            te_locs.push(f.locations[i]);
+            te_z.push(f.values[i]);
+        } else {
+            tr_locs.push(f.locations[i]);
+            tr_z.push(f.values[i]);
+        }
+    }
+    let cfg = MleConfig {
+        nb: 64,
+        variant: Variant::MixedPrecision { diag_thick: 2 },
+        ..Default::default()
+    };
+    let model = KrigingModel::fit(&tr_locs, &tr_z, f.theta, &cfg).unwrap();
+    let serial = pmse(&model.predict(&te_locs), &te_z);
+    let rep = kfold_pmse(&f.locations, &f.values, f.theta, k, &cfg, seed).unwrap();
+    assert_eq!(
+        rep.fold_pmse[0].to_bits(),
+        serial.to_bits(),
+        "batched fold 0 diverges from serial fit+predict"
+    );
+}
+
+/// Adaptive k-fold also runs through the batched graph (dynamic
+/// per-fold resolution) and stays deterministic.
+#[test]
+fn adaptive_kfold_is_deterministic() {
+    use mpcholesky::datagen::{FieldConfig, SyntheticField};
+    let f = SyntheticField::generate(&FieldConfig {
+        n: 256,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 6,
+        ..Default::default()
+    })
+    .unwrap();
+    let mk = |workers: usize| MleConfig {
+        nb: 64,
+        variant: Variant::Adaptive { tolerance: 1e-6 },
+        num_workers: workers,
+        ..Default::default()
+    };
+    let a = kfold_pmse(&f.locations, &f.values, f.theta, 4, &mk(1), 3).unwrap();
+    let b = kfold_pmse(&f.locations, &f.values, f.theta, 4, &mk(8), 3).unwrap();
+    for (x, y) in a.fold_pmse.iter().zip(b.fold_pmse.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "adaptive k-fold diverges across widths");
+    }
+    // and the predictor is actually predictive
+    assert!(a.mean_pmse.is_finite() && a.mean_pmse > 0.0);
+}
+
+/// The MLE trace reports the whole iteration: solve + log-det task
+/// counts and modeled transfer bytes for the full pipeline graph, for
+/// every variant — and the adaptive likelihood (per-column rule) stays
+/// within the established relative tolerance of full DP.
+#[test]
+fn mle_trace_reports_full_iteration_pipeline() {
+    use mpcholesky::datagen::{FieldConfig, SyntheticField};
+    let f = SyntheticField::generate(&FieldConfig {
+        n: 256,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed: 8,
+        gen_nb: 64,
+        ..Default::default()
+    })
+    .unwrap();
+    let theta = f.theta;
+    let p = 256 / 64;
+    let mut dp_ll = None;
+    for variant in [
+        Variant::FullDp,
+        Variant::MixedPrecision { diag_thick: 2 },
+        Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 },
+        Variant::Adaptive { tolerance: 1e-6 },
+    ] {
+        let cfg = MleConfig { nb: 64, variant, ..Default::default() };
+        let prob = MleProblem::new(&f.locations, &f.values, cfg).unwrap();
+        let ll = prob.loglik(&theta).unwrap();
+        let trace = prob.trace();
+        assert_eq!(trace.iterations.len(), 1);
+        let it = &trace.iterations[0];
+        // forward solve tasks: p diagonal + p(p-1)/2 updates; log-det
+        // chain: one per diagonal tile; all inside ONE pipeline graph
+        assert_eq!(it.solve_tasks, p + p * (p - 1) / 2, "{variant:?}");
+        assert_eq!(it.logdet_tasks, p, "{variant:?}");
+        assert_eq!(it.crosscov_tasks, 0, "{variant:?}");
+        assert!(
+            it.pipeline_tasks > it.solve_tasks + it.logdet_tasks,
+            "{variant:?}: pipeline graph missing its factor stage"
+        );
+        assert!(it.modeled_transfer_bytes > 0.0, "{variant:?}");
+        match variant {
+            Variant::FullDp => dp_ll = Some(ll),
+            Variant::Adaptive { .. } => {
+                let dp = dp_ll.expect("FullDp ran first");
+                assert!(
+                    (dp - ll).abs() < 1e-3 * dp.abs().max(1.0),
+                    "adaptive pipeline loglik {ll} vs DP {dp}"
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Reduced-precision factors promote identically through the pipeline
+/// solves and the serial oracles: mixed-precision pipelines are
+/// bit-identical to the oracle epilogue too (the promotion is exact in
+/// both paths).
+#[test]
+fn mixed_precision_pipeline_solves_match_oracles_bitwise() {
+    let nb = 32;
+    let p = 5;
+    let n = p * nb;
+    let locs = matern_locs(n, 77);
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let a = DenseMatrix::from_vec(n, matern_matrix(&locs, &theta, Metric::Euclidean, 1e-8))
+        .unwrap();
+    let sched = Scheduler::with_workers(4);
+    let variant = Variant::ThreePrecision { dp_thick: 1, sp_thick: 3 };
+    let tiles = factorize_dense(&a, nb, variant, &NativeBackend, &sched).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(78);
+    let b: Vec<f64> = (0..n).map(|_| rng.standard_normal()).collect();
+
+    let opts = PipelineOptions { rhs_cols: 1, backward: true, logdet: true, ..Default::default() };
+    let mut plan = PipelinePlan::build_epilogue(p, nb, variant, opts);
+    let mut bufs = PipelineBuffers::new(p, nb, 1, 0);
+    bufs.load_column(0, &b);
+    run_pipeline(&mut plan, &tiles, &bufs, None, None, None, &NativeBackend, &sched).unwrap();
+
+    let y = solve_lower(&tiles, &b).unwrap();
+    let x = solve_lower_transposed(&tiles, &y).unwrap();
+    for (g, w) in bufs.column(0).iter().zip(x.iter()) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+    assert_eq!(bufs.logdet().to_bits(), log_determinant(&tiles).to_bits());
+    // sanity: the factor really holds reduced tiles
+    let map = tiles.storage_map();
+    assert!(map.census().sp + map.census().hp > 0);
+}

@@ -74,7 +74,8 @@ fn reference_contents() -> Vec<u64> {
     let g = build_graph();
     let mut cells = vec![0u64; TILES];
     for (k, t) in g.tasks().iter().enumerate() {
-        for &(tile, mode) in &t.accesses {
+        for &(res, mode) in &t.accesses {
+            let tile = res.as_tile().expect("toy graph uses tile resources only");
             if mode == Access::Write {
                 cells[tile.i] = mix(cells[tile.i], k);
             }
@@ -92,7 +93,8 @@ fn run_once(policy: SchedulingPolicy, workers: usize) -> (Vec<u64>, Vec<usize>) 
     sched
         .run(&mut g, |idx, &payload| {
             runs[idx].fetch_add(1, Ordering::SeqCst);
-            for &(tile, mode) in &accesses[idx] {
+            for &(res, mode) in &accesses[idx] {
+                let tile = res.as_tile().expect("toy graph uses tile resources only");
                 match mode {
                     // DAG edges serialize conflicting accesses, so a
                     // load/store pair (not a RMW) is race-free iff the
@@ -148,6 +150,121 @@ fn repeated_runs_are_reproducible_at_high_contention() {
         let (cells, runs) = run_once(SchedulingPolicy::PrecisionFrontier, 8);
         assert!(runs.iter().all(|&r| r == 1));
         assert_eq!(cells, want);
+    }
+}
+
+/// The whole-iteration pipeline task kinds (`SolveFwd`/`SolveBwd` RHS
+/// blocks, the `LogDetPartial` scalar chain, and the adaptive
+/// `ResolvePanel`/`TrsmNative`/`SyrkNative` runtime-precision codelets)
+/// under the same exactly-once / identical-results contract: a static
+/// mixed-precision pipeline and a dynamic adaptive pipeline, every
+/// policy, 1/4/8 workers — every task runs exactly once and the factor,
+/// the solved RHS and the log-determinant are identical across runs.
+#[test]
+fn pipeline_plans_execute_exactly_once_with_identical_results() {
+    use mpcholesky::cholesky::{
+        GenContext, KernelCall, PanelResolver, PipelineBuffers, PipelineContext, PipelineOptions,
+        PipelinePlan, TileExecutor, Variant,
+    };
+    use mpcholesky::kernels::NativeBackend;
+    use mpcholesky::matern::{Location, MaternParams, Metric};
+    use mpcholesky::rng::Xoshiro256pp;
+    use mpcholesky::tile::{DenseMatrix, TileMatrix};
+
+    let n = 160;
+    let nb = 32;
+    let p = n / nb;
+    let theta = MaternParams::new(1.0, 0.1, 0.5);
+    let mut r = Xoshiro256pp::seed_from_u64(7);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    locs.sort_by(|a, b| (a.x + a.y).partial_cmp(&(b.x + b.y)).unwrap());
+    let rhs: Vec<f64> = (0..n).map(|_| r.standard_normal()).collect();
+    let opts = PipelineOptions { rhs_cols: 1, backward: true, logdet: true, ..Default::default() };
+
+    for dynamic in [false, true] {
+        let mut reference: Option<(DenseMatrix, Vec<f64>, f64)> = None;
+        for policy in [
+            SchedulingPolicy::Fifo,
+            SchedulingPolicy::Lifo,
+            SchedulingPolicy::CriticalPath,
+            SchedulingPolicy::PrecisionFrontier,
+        ] {
+            for workers in [1usize, 4, 8] {
+                let mut tiles = TileMatrix::zeros(n, nb).unwrap();
+                let (mut plan, resolver) = if dynamic {
+                    (
+                        PipelinePlan::build_adaptive(p, nb, 1e-6, opts),
+                        Some(PanelResolver::new(p, 1e-6)),
+                    )
+                } else {
+                    let v = Variant::MixedPrecision { diag_thick: 2 };
+                    let map = v.precision_map(p, None).unwrap();
+                    tiles.apply_precision_map(&map);
+                    (PipelinePlan::build_static(p, nb, v, map, opts), None)
+                };
+                let has = |pred: &dyn Fn(&KernelCall) -> bool| {
+                    plan.graph.tasks().iter().any(|t| pred(&t.payload.call))
+                };
+                assert!(has(&|c| matches!(c, KernelCall::SolveFwd { .. })));
+                assert!(has(&|c| matches!(c, KernelCall::SolveBwd { .. })));
+                assert!(has(&|c| matches!(c, KernelCall::LogDetPartial { .. })));
+                assert!(has(&|c| matches!(c, KernelCall::Generate { .. })));
+                if dynamic {
+                    assert!(has(&|c| matches!(c, KernelCall::ResolvePanel { .. })));
+                    assert!(has(&|c| matches!(c, KernelCall::TrsmNative { .. })));
+                    assert!(has(&|c| matches!(c, KernelCall::SyrkNative { .. })));
+                }
+                let mut bufs = PipelineBuffers::new(p, nb, 1, 0);
+                bufs.load_column(0, &rhs);
+                let n_tasks = plan.graph.len();
+                let runs: Vec<AtomicUsize> = (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+                let accesses: Vec<_> =
+                    plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+                let exec = TileExecutor::new(&tiles, &NativeBackend)
+                    .with_generation(GenContext {
+                        locations: &locs,
+                        theta,
+                        metric: Metric::Euclidean,
+                        nugget: 1e-8,
+                    })
+                    .with_pipeline(PipelineContext {
+                        bufs: &bufs,
+                        resolver: resolver.as_ref(),
+                        crosscov: None,
+                    });
+                let sched =
+                    Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: false });
+                sched
+                    .run(&mut plan.graph, |idx, sc| {
+                        runs[idx].fetch_add(1, Ordering::SeqCst);
+                        exec.execute(sc, &accesses[idx])
+                    })
+                    .unwrap();
+                for (t, c) in runs.iter().enumerate() {
+                    assert_eq!(
+                        c.load(Ordering::SeqCst),
+                        1,
+                        "{policy:?}/{workers}w dynamic={dynamic}: task {t} run count"
+                    );
+                }
+                let factor = tiles.to_dense(true);
+                let solved = bufs.column(0);
+                let logdet = bufs.logdet();
+                if let Some((f0, s0, l0)) = &reference {
+                    assert_eq!(
+                        factor.max_abs_diff(f0),
+                        0.0,
+                        "{policy:?}/{workers}w dynamic={dynamic}: factor diverges"
+                    );
+                    assert_eq!(&solved, s0, "{policy:?}/{workers}w: solved RHS diverges");
+                    assert_eq!(logdet, *l0, "{policy:?}/{workers}w: log-det diverges");
+                } else {
+                    reference = Some((factor, solved, logdet));
+                }
+            }
+        }
     }
 }
 

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Fold bench_cholesky JSON snapshots into one markdown trend table.
+
+Usage:
+    python3 tools/bench_trend.py FILE_OR_DIR... [--out BENCH_trend.md]
+
+Each input is a `bench_cholesky --json` snapshot (or a directory of
+them, e.g. per-push CI artifacts downloaded side by side).  The output
+is a markdown table with one row per (variant, nb) case and one column
+per snapshot, carrying `GFLOP/s` plus the epilogue's solve-time share —
+enough to eyeball a perf trajectory across pushes, policies, or fused
+vs unfused lowering without spreadsheet work.
+
+Snapshots are column-labelled by file stem (`BENCH_policy_pf` ->
+`policy_pf`); rows missing from a snapshot render as `-`.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def collect(paths, seen=None):
+    """Yield (label, parsed json) per snapshot file, directories expanded.
+
+    Labels are file stems; same-named files from different directories
+    (the per-push artifact layout) are disambiguated with their parent
+    directory so columns never silently overwrite each other.
+    """
+    if seen is None:
+        seen = set()
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from collect(sorted(path.glob("*.json")), seen)
+            continue
+        if not path.exists():
+            print(f"bench_trend: skipping missing {path}", file=sys.stderr)
+            continue
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            print(f"bench_trend: skipping unparsable {path}: {e}", file=sys.stderr)
+            continue
+        if data.get("bench") != "cholesky" or "results" not in data:
+            print(f"bench_trend: skipping non-bench json {path}", file=sys.stderr)
+            continue
+        label = path.stem
+        if label.startswith("BENCH_"):
+            label = label[len("BENCH_"):]
+        if label in seen:
+            label = f"{path.parent.name}/{label}"
+        k = 2
+        base = label
+        while label in seen:
+            label = f"{base}#{k}"
+            k += 1
+        seen.add(label)
+        yield label, data
+
+
+def cell(row):
+    """Render one snapshot's cell for a case row."""
+    gflops = row.get("gflops", 0.0)
+    out = f"{gflops:.2f}"
+    # epilogue share: solve span time over the run's wall time
+    solve_ns = row.get("solve_ns")
+    median_s = row.get("median_s", 0.0)
+    if solve_ns is not None and median_s > 0:
+        out += f" ({100.0 * solve_ns / 1e9 / median_s:.1f}%)"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("inputs", nargs="+", help="bench JSON files or directories")
+    ap.add_argument("--out", default="BENCH_trend.md", help="markdown output path")
+    args = ap.parse_args()
+
+    snapshots = list(collect(args.inputs))
+    if not snapshots:
+        print("bench_trend: no usable snapshots", file=sys.stderr)
+        return 1
+
+    # case key -> {snapshot label -> row}
+    cases = {}
+    for label, data in snapshots:
+        for row in data["results"]:
+            cases.setdefault((row["variant"], row["nb"]), {})[label] = row
+
+    labels = [label for label, _ in snapshots]
+    lines = [
+        "# bench_cholesky trend",
+        "",
+        "GFLOP/s per (variant, nb) case; parenthesized percentage is the",
+        "solve/log-det epilogue's share of the run's wall time.",
+        "",
+        "| variant | nb | " + " | ".join(labels) + " |",
+        "|---|---|" + "---|" * len(labels),
+    ]
+    for (variant, nb), per_snap in sorted(cases.items()):
+        cells = [cell(per_snap[l]) if l in per_snap else "-" for l in labels]
+        lines.append(f"| {variant} | {nb} | " + " | ".join(cells) + " |")
+    lines.append("")
+
+    Path(args.out).write_text("\n".join(lines))
+    print(f"bench_trend: wrote {args.out} ({len(cases)} cases x {len(labels)} snapshots)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
