@@ -20,14 +20,23 @@
 //! height then cheapest storage precision), `--fused` (lower static
 //! plans' trailing updates as left-looking `GemmBatch` tasks instead of
 //! per-step gemms; adaptive pipelines always lower left-looking),
-//! `--json [PATH]` (default path `BENCH_cholesky.json`).
+//! `--ablation` (sweep the adaptive tolerance at the smallest tile size
+//! and record the four-tier accuracy/bytes frontier — realized
+//! dp/sp/f16/bf16 census, resident bytes, `||L L^T - A||_max` — into
+//! the JSON `ablation` array), `--json [PATH]` (default path
+//! `BENCH_cholesky.json`).  The JSON also records `simd_isa`, the
+//! micro-kernel dispatch tier the run selected (`scalar` under
+//! `PALLAS_FORCE_SCALAR=1`).
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::time::Instant;
 
 use mpcholesky::bench::Table;
-use mpcholesky::cholesky::{GenContext, PipelineCounts, PlanOptions};
+use mpcholesky::cholesky::{
+    factorize_tiles_with_map, generate_covariance, GenContext, PipelineCounts, PlanOptions,
+};
+use mpcholesky::kernels::blas::active_isa;
 use mpcholesky::prelude::*;
 use mpcholesky::scheduler::datamove::{self, DeviceModel};
 use mpcholesky::scheduler::ExecutionTrace;
@@ -63,6 +72,8 @@ struct CaseResult {
     decode_ns: u64,
     /// Number of packed-bf16 tile unpacks the run performed.
     bf16_unpacks: u64,
+    /// Realized f16 tile count (fourth storage tier) of the run's map.
+    f16_tiles: usize,
     /// Demand-miss bytes of replaying the full pipeline on a V100 model
     /// with per-tile pricing on the realized precision map,
     /// conversion-task bytes priced inside the same stream.
@@ -197,8 +208,76 @@ fn bench_case(
         solve_ns,
         decode_ns: trace.decode_ns,
         bf16_unpacks: unpacks,
+        f16_tiles: realized.census().f16,
         modeled_transfer_bytes: modeled,
     })
+}
+
+/// One tolerance point of the `--ablation` sweep: the realized census
+/// and footprint of the adaptive map at that tolerance, plus the
+/// factorization backward error `||L L^T - A||_max`.
+struct AblationRow {
+    tolerance: f64,
+    label: String,
+    census: PrecisionCensus,
+    resident_bytes: usize,
+    max_abs_err: f64,
+}
+
+/// Sweep the adaptive tolerance over the four-tier ladder: each point
+/// generates the covariance, resolves the norm-based map, factors under
+/// it and measures the reconstruction error — the accuracy/bytes
+/// frontier the f16 tier sits on.
+fn tolerance_ablation(
+    locs: &[Location],
+    theta: MaternParams,
+    n: usize,
+    nb: usize,
+    workers: usize,
+    policy: SchedulingPolicy,
+) -> Result<Vec<AblationRow>> {
+    let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: false });
+    let tols = [1e-2, 1e-3, 1e-4, 1e-6, 1e-8, 1e-10];
+    let mut rows = Vec::with_capacity(tols.len());
+    for &tol in &tols {
+        let mut tiles = TileMatrix::zeros(n, nb)?;
+        generate_covariance(
+            &mut tiles,
+            locs,
+            theta,
+            Metric::Euclidean,
+            1e-8,
+            &NativeBackend,
+            &sched,
+        )?;
+        let a = tiles.to_dense(true);
+        let map = PrecisionMap::adaptive(&tiles, tol);
+        let census = map.census();
+        let label = map.label();
+        factorize_tiles_with_map(
+            &mut tiles,
+            Variant::Adaptive { tolerance: tol },
+            map,
+            &NativeBackend,
+            &sched,
+        )?;
+        let l = tiles.to_dense(true);
+        let llt = l.matmul_nt(&l);
+        let mut err = 0.0f64;
+        for j in 0..n {
+            for i in j..n {
+                err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+            }
+        }
+        rows.push(AblationRow {
+            tolerance: tol,
+            label,
+            census,
+            resident_bytes: tiles.resident_bytes(),
+            max_abs_err: err,
+        });
+    }
+    Ok(rows)
 }
 
 fn json_escape(s: &str) -> String {
@@ -211,6 +290,7 @@ fn to_json(
     reps: usize,
     policy: SchedulingPolicy,
     rows: &[CaseResult],
+    ablation: &[AblationRow],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
@@ -219,6 +299,27 @@ fn to_json(
     let _ = writeln!(out, "  \"workers\": {workers},");
     let _ = writeln!(out, "  \"reps\": {reps},");
     let _ = writeln!(out, "  \"policy\": \"{}\",", policy.name());
+    let _ = writeln!(out, "  \"simd_isa\": \"{}\",", active_isa().name());
+    if !ablation.is_empty() {
+        out.push_str("  \"ablation\": [\n");
+        for (i, r) in ablation.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"tolerance\": {:e}, \"label\": \"{}\", \"dp\": {}, \"sp\": {}, \
+                 \"f16\": {}, \"hp\": {}, \"resident_bytes\": {}, \"max_abs_err\": {:.3e}}}",
+                r.tolerance,
+                json_escape(&r.label),
+                r.census.dp,
+                r.census.sp,
+                r.census.f16,
+                r.census.hp,
+                r.resident_bytes,
+                r.max_abs_err
+            );
+            out.push_str(if i + 1 < ablation.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n");
+    }
     out.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let _ = write!(
@@ -230,7 +331,7 @@ fn to_json(
              \"conv_demotes\": {}, \"conv_promotes\": {}, \"conv_decodes\": {}, \
              \"conv_drops\": {}, \"solve_tasks\": {}, \"logdet_tasks\": {}, \
              \"crosscov_tasks\": {}, \"resolve_tasks\": {}, \"solve_ns\": {}, \
-             \"decode_ns\": {}, \"bf16_unpacks\": {}, \
+             \"decode_ns\": {}, \"bf16_unpacks\": {}, \"f16_tiles\": {}, \
              \"modeled_transfer_bytes\": {:.1}}}",
             json_escape(&r.key),
             json_escape(&r.label),
@@ -256,6 +357,7 @@ fn to_json(
             r.solve_ns,
             r.decode_ns,
             r.bf16_unpacks,
+            r.f16_tiles,
             r.modeled_transfer_bytes
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
@@ -327,10 +429,11 @@ fn run() -> Result<()> {
         .collect();
     mpcholesky::datagen::morton_sort(&mut locs);
 
-    let variants: [(&str, Variant); 4] = [
+    let variants: [(&str, Variant); 5] = [
         ("dp", Variant::FullDp),
         ("mp_t2", Variant::MixedPrecision { diag_thick: 2 }),
         ("3p_t2_4", Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 }),
+        ("4p_t2_4_6", Variant::FourPrecision { dp_thick: 2, sp_thick: 4, f16_thick: 6 }),
         ("adaptive_1e-8", Variant::Adaptive { tolerance: 1e-8 }),
     ];
 
@@ -366,18 +469,45 @@ fn run() -> Result<()> {
         }
     }
     println!(
-        "# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}, policy = {}, fused = {}",
+        "# bench_cholesky: n = {n}, workers = {workers}, reps = {reps}, policy = {}, fused = {}, \
+         simd_isa = {}",
         policy.name(),
-        opts.fuse_gemm
+        opts.fuse_gemm,
+        active_isa().name()
     );
     table.print();
+
+    let mut ablation = Vec::new();
+    if flags.contains_key("ablation") {
+        let nb_min = nb_list.iter().copied().filter(|nb| n % nb == 0).min();
+        if let Some(nb) = nb_min {
+            ablation = tolerance_ablation(&locs, theta, n, nb, workers, policy)?;
+            println!("# tolerance ablation (adaptive maps, nb = {nb}):");
+            for r in &ablation {
+                println!(
+                    "#   tol {:>7.0e}  {:28}  dp {:>3} sp {:>3} f16 {:>3} hp {:>3}  \
+                     {:>8.2} MiB  err {:.3e}",
+                    r.tolerance,
+                    r.label,
+                    r.census.dp,
+                    r.census.sp,
+                    r.census.f16,
+                    r.census.hp,
+                    r.resident_bytes as f64 / (1024.0 * 1024.0),
+                    r.max_abs_err
+                );
+            }
+        } else {
+            eprintln!("--ablation: no tile size divides n={n}, skipping sweep");
+        }
+    }
 
     if flags.contains_key("json") {
         let path = match flags.get("json").map(String::as_str) {
             Some("true") | None => "BENCH_cholesky.json",
             Some(p) => p,
         };
-        std::fs::write(path, to_json(n, workers, reps, policy, &rows))?;
+        std::fs::write(path, to_json(n, workers, reps, policy, &rows, &ablation))?;
         eprintln!("wrote {path}");
     }
     Ok(())

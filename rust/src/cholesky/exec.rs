@@ -4,23 +4,23 @@
 //!
 //! Every codelet runs at its tile's *native* storage precision: an f32
 //! tile is solved and accumulated in its resident f32 buffer, a packed
-//! bf16 tile is computed in f32 with an unpack/repack at the kernel
-//! boundary (MXU semantics).  Cross-precision operands are read through
-//! the conversion views the plan materialized (`dconv2s`/`sconv2d`
-//! tasks), and bf16 operands through the plan's per-step **decode
-//! cache** (`hconv2s` tasks fill [`TileSlot::f32_scratch`] once per
-//! step; every reduced-precision reader shares that one unpack, with
-//! thread-local scratch only as the fallback for views the plan did not
-//! materialize).  There is no per-task promotion back to f64 anywhere
+//! bf16 or f16 tile is computed in f32 with an unpack/repack at the
+//! kernel boundary (MXU semantics).  Cross-precision operands are read
+//! through the conversion views the plan materialized
+//! (`dconv2s`/`sconv2d` tasks), and bf16/f16 operands through the
+//! plan's per-step **decode cache** (`hconv2s`/`fconv2s` tasks fill
+//! [`TileSlot::f32_scratch`] once per step; every reduced-precision
+//! reader shares that one unpack, with thread-local scratch only as the
+//! fallback for views the plan did not materialize).  There is no per-task promotion back to f64 anywhere
 //! on the compute path.  [`KernelCall::GemmBatch`] tasks apply a whole
 //! left-looking update run against one target: the target is unpacked
 //! (bf16) at most once per batch and cross-precision operands are
 //! converted inline, since the step-scoped views of old panel columns
 //! are freed long before a batch runs.
 //!
-//! The executor keeps run-wide [`ExecStats`] (bf16 unpack count and
-//! nanoseconds) so decode work is distinguishable from scheduler idle
-//! time in the bench reports.
+//! The executor keeps run-wide [`ExecStats`] (bf16 and f16 unpack
+//! counts and nanoseconds) so decode work is distinguishable from
+//! scheduler idle time in the bench reports.
 //!
 //! Safety protocol: tile buffers are reached through
 //! [`TileMatrix::tile_ptr`]; the scheduler's DAG ordering guarantees
@@ -101,19 +101,21 @@ thread_local! {
 }
 
 /// Run-wide decode counters, shared by every worker through the
-/// executor: how many packed-bf16 tile unpacks ran and how long they
-/// took.  The bench JSON surfaces both (`decode_ns`, `bf16_unpacks`) so
-/// decode-cache fills are distinguishable from scheduler idle time —
-/// and so the per-step decode cache's amortization (one unpack per tile
-/// per step instead of one per consumer task) is measurable.
+/// executor: how many packed-bf16/-f16 tile unpacks ran and how long
+/// they took.  The bench JSON surfaces them (`decode_ns`,
+/// `bf16_unpacks`, `f16_unpacks`) so decode-cache fills are
+/// distinguishable from scheduler idle time — and so the per-step
+/// decode cache's amortization (one unpack per tile per step instead of
+/// one per consumer task) is measurable per storage tier.
 #[derive(Debug, Default)]
 pub struct ExecStats {
     decode_ns: AtomicU64,
     bf16_unpacks: AtomicU64,
+    f16_unpacks: AtomicU64,
 }
 
 impl ExecStats {
-    /// Nanoseconds spent unpacking packed-bf16 tiles.
+    /// Nanoseconds spent unpacking packed-bf16/-f16 tiles.
     pub fn decode_ns(&self) -> u64 {
         self.decode_ns.load(Ordering::Relaxed)
     }
@@ -121,6 +123,11 @@ impl ExecStats {
     /// Number of packed-bf16 tile unpacks (to f32 or f64).
     pub fn bf16_unpacks(&self) -> u64 {
         self.bf16_unpacks.load(Ordering::Relaxed)
+    }
+
+    /// Number of packed-f16 tile unpacks (to f32 or f64).
+    pub fn f16_unpacks(&self) -> u64 {
+        self.f16_unpacks.load(Ordering::Relaxed)
     }
 }
 
@@ -130,6 +137,14 @@ fn decode_timed<F: FnOnce()>(stats: &ExecStats, f: F) {
     f();
     stats.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     stats.bf16_unpacks.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Time one f16 unpack into the run-wide counters.
+fn decode_timed_f16<F: FnOnce()>(stats: &ExecStats, f: F) {
+    let t0 = Instant::now();
+    f();
+    stats.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    stats.f16_unpacks.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Grow-and-slice helper for scratch buffers.
@@ -161,6 +176,14 @@ fn f32_view<'a>(
             decode_timed(stats, || convert::unpack_bf16(bits, &mut *out));
             out
         }
+        TileBuf::F16(bits) => {
+            if let Some(cached) = slot.f32_scratch.as_deref() {
+                return cached;
+            }
+            let out = resized(scratch, bits.len());
+            decode_timed_f16(stats, || convert::unpack_f16(bits, &mut *out));
+            out
+        }
         TileBuf::F64(_) => slot
             .f32_scratch
             .as_deref()
@@ -186,6 +209,11 @@ fn f64_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f64>, stats: &ExecSt
             decode_timed(stats, || convert::unpack_bf16_to_f64(bits, &mut scratch[..]));
             scratch
         }
+        TileBuf::F16(bits) => {
+            scratch.resize(bits.len(), 0.0);
+            decode_timed_f16(stats, || convert::unpack_f16_to_f64(bits, &mut scratch[..]));
+            scratch
+        }
     }
 }
 
@@ -201,6 +229,11 @@ fn f32_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f32>, stats: &ExecSt
         TileBuf::Bf16(bits) => {
             scratch.resize(bits.len(), 0.0);
             decode_timed(stats, || convert::unpack_bf16(bits, &mut scratch[..]));
+            scratch
+        }
+        TileBuf::F16(bits) => {
+            scratch.resize(bits.len(), 0.0);
+            decode_timed_f16(stats, || convert::unpack_f16(bits, &mut scratch[..]));
             scratch
         }
     }
@@ -234,6 +267,9 @@ fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) {
         TileBuf::F32(v) => convert::promote(v, dst),
         TileBuf::Bf16(bits) => {
             decode_timed(stats, || convert::unpack_bf16_to_f64(bits, &mut dst[..]))
+        }
+        TileBuf::F16(bits) => {
+            decode_timed_f16(stats, || convert::unpack_f16_to_f64(bits, &mut dst[..]))
         }
         TileBuf::F64(_) => unreachable!("sconv2d scheduled on an f64 tile (plan bug)"),
     }
@@ -349,6 +385,18 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 convert::demote(tmp, sp);
                                 convert::pack_bf16(sp, bits);
                             }
+                            TileBuf::F16(bits) => {
+                                let tmp = resized(&mut scr.gen64, nn);
+                                self.backend.matern_f64(tmp, x1, x2, &g.theta, g.metric);
+                                if i == j && g.nugget != 0.0 {
+                                    for d in 0..nb {
+                                        tmp[d + d * nb] += g.nugget;
+                                    }
+                                }
+                                let sp = resized(&mut scr.a32, nn);
+                                convert::demote(tmp, sp);
+                                convert::pack_f16(sp, bits);
+                            }
                         }
                         Ok(())
                     }
@@ -362,6 +410,15 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *a));
                                 let r = self.backend.potrf_f32(a, nb, k * nb);
                                 convert::pack_bf16(&*a, bits);
+                                r
+                            }
+                            TileBuf::F16(bits) => {
+                                let a = resized(&mut scr.a32, nn);
+                                decode_timed_f16(&self.stats, || {
+                                    convert::unpack_f16(bits, &mut *a)
+                                });
+                                let r = self.backend.potrf_f32(a, nb, k * nb);
+                                convert::pack_f16(&*a, bits);
                                 r
                             }
                         }
@@ -387,6 +444,16 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let bits = buf.as_bf16();
                         let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
                         decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut dst[..]));
+                        Ok(())
+                    }
+                    KernelCall::DecodeF16 { i, k } => {
+                        // f16 decode cache fill — same contract as
+                        // DecodeBf16, second packed tier
+                        let slot = tm.tile_ptr(TileId::new(i, k));
+                        let TileSlot { buf, f32_scratch, .. } = slot;
+                        let bits = buf.as_f16();
+                        let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
+                        decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut dst[..]));
                         Ok(())
                     }
                     KernelCall::DropScratch { i, k } => {
@@ -419,6 +486,18 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         convert::pack_bf16(&*bv, bits);
                         Ok(())
                     }
+                    KernelCall::TrsmF16 { i, k } => {
+                        // fourth level: f32 compute, IEEE f16 storage
+                        let l = tm.tile_ptr(TileId::new(k, k));
+                        let b = tm.tile_ptr(TileId::new(i, k));
+                        let lv = f32_view(l, &mut scr.a32, &self.stats, "ftrsm");
+                        let bits = b.buf.as_f16_mut();
+                        let bv = resized(&mut scr.b32, nn);
+                        decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut *bv));
+                        self.backend.trsm_f32(lv, bv, nb);
+                        convert::pack_f16(&*bv, bits);
+                        Ok(())
+                    }
                     KernelCall::SyrkDp { j, k } => {
                         let a = tm.tile_ptr(TileId::new(j, k));
                         let c = tm.tile_ptr(TileId::new(j, j));
@@ -436,6 +515,15 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
                                 self.backend.syrk_f32(cv, av, nb);
                                 convert::pack_bf16(&*cv, bits);
+                            }
+                            TileBuf::F16(bits) => {
+                                let av = f32_view(a, &mut scr.a32, &self.stats, "fsyrk");
+                                let cv = resized(&mut scr.c32, nn);
+                                decode_timed_f16(&self.stats, || {
+                                    convert::unpack_f16(bits, &mut *cv)
+                                });
+                                self.backend.syrk_f32(cv, av, nb);
+                                convert::pack_f16(&*cv, bits);
                             }
                         }
                         Ok(())
@@ -474,6 +562,19 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
                         self.backend.gemm_f32(cv, av, bv, nb);
                         convert::pack_bf16(&*cv, bits);
+                        Ok(())
+                    }
+                    KernelCall::GemmF16 { i, j, k } => {
+                        let a = tm.tile_ptr(TileId::new(i, k));
+                        let b = tm.tile_ptr(TileId::new(j, k));
+                        let c = tm.tile_ptr(TileId::new(i, j));
+                        let av = f32_view(a, &mut scr.a32, &self.stats, "fgemm");
+                        let bv = f32_view(b, &mut scr.b32, &self.stats, "fgemm");
+                        let bits = c.buf.as_f16_mut();
+                        let cv = resized(&mut scr.c32, nn);
+                        decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut *cv));
+                        self.backend.gemm_f32(cv, av, bv, nb);
+                        convert::pack_f16(&*cv, bits);
                         Ok(())
                     }
                     KernelCall::GemmBatch { i, j, k0, k1, .. } => {
@@ -516,6 +617,20 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                     self.backend.gemm_f32(cv, av, bv, nb);
                                 }
                                 convert::pack_bf16(&*cv, bits);
+                            }
+                            TileBuf::F16(bits) => {
+                                let cv = resized(&mut scr.c32, nn);
+                                decode_timed_f16(&self.stats, || {
+                                    convert::unpack_f16(bits, &mut *cv)
+                                });
+                                for k in k0..k1 {
+                                    let a = tm.tile_ptr(TileId::new(i, k));
+                                    let b = tm.tile_ptr(TileId::new(j, k));
+                                    let av = f32_op_view(a, &mut scr.a32, &self.stats);
+                                    let bv = f32_op_view(b, &mut scr.b32, &self.stats);
+                                    self.backend.gemm_f32(cv, av, bv, nb);
+                                }
+                                convert::pack_f16(&*cv, bits);
                             }
                         }
                         Ok(())
@@ -560,6 +675,15 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 self.backend.trsm_f32(lv, bv, nb);
                                 convert::pack_bf16(&*bv, bits);
                             }
+                            TileBuf::F16(bits) => {
+                                let lv = f32_op_view(l, &mut scr.a32, &self.stats);
+                                let bv = resized(&mut scr.b32, nn);
+                                decode_timed_f16(&self.stats, || {
+                                    convert::unpack_f16(bits, &mut *bv)
+                                });
+                                self.backend.trsm_f32(lv, bv, nb);
+                                convert::pack_f16(&*bv, bits);
+                            }
                         }
                         Ok(())
                     }
@@ -582,6 +706,15 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
                                 self.backend.syrk_f32(cv, av, nb);
                                 convert::pack_bf16(&*cv, bits);
+                            }
+                            TileBuf::F16(bits) => {
+                                let av = f32_op_view(a, &mut scr.a32, &self.stats);
+                                let cv = resized(&mut scr.c32, nn);
+                                decode_timed_f16(&self.stats, || {
+                                    convert::unpack_f16(bits, &mut *cv)
+                                });
+                                self.backend.syrk_f32(cv, av, nb);
+                                convert::pack_f16(&*cv, bits);
                             }
                         }
                         Ok(())

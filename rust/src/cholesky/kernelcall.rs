@@ -43,6 +43,10 @@ pub enum KernelCall {
     /// reduced-precision readers (replaces one thread-local unpack per
     /// consumer task).  Freed by the step's `DropScratch`.
     DecodeBf16 { i: usize, k: usize },
+    /// Per-step f16 decode cache fill — the fourth-tier generalization
+    /// of [`KernelCall::DecodeBf16`]: unpack packed-f16 tile (i, k) into
+    /// its f32 conversion scratch once per step.
+    DecodeF16 { i: usize, k: usize },
     /// Free tile (i, k)'s conversion scratch at the end of step k (keeps
     /// the transient footprint O(p) tiles).
     DropScratch { i: usize, k: usize },
@@ -59,6 +63,12 @@ pub enum KernelCall {
     /// Paper SSIX third level: `sgemm` with a packed-bf16 target
     /// (f32 accumulate — MXU semantics), repacked through bf16.
     GemmHp { i: usize, j: usize, k: usize },
+    /// Fourth tier: `strsm` on a packed-f16 panel tile (f32 compute,
+    /// binary16 storage rounding on the repack).
+    TrsmF16 { i: usize, k: usize },
+    /// Fourth tier: `sgemm` with a packed-f16 target (f32 accumulate),
+    /// repacked through binary16.
+    GemmF16 { i: usize, j: usize, k: usize },
     /// Fused (left-looking) trailing update: apply the rank-nb GEMM
     /// updates of every panel step in `k0..k1` to target tile (i, j) in
     /// one task, in ascending-k order — the same floating-point sequence
@@ -121,16 +131,19 @@ impl KernelCall {
             KernelCall::DemoteDiag { .. }
             | KernelCall::DemoteTile { .. }
             | KernelCall::PromoteTile { .. }
-            | KernelCall::DecodeBf16 { .. } => (nb * nb) as f64,
+            | KernelCall::DecodeBf16 { .. }
+            | KernelCall::DecodeF16 { .. } => (nb * nb) as f64,
             KernelCall::DropScratch { .. } => 0.0,
             KernelCall::TrsmDp { .. }
             | KernelCall::TrsmSp { .. }
             | KernelCall::TrsmHp { .. }
+            | KernelCall::TrsmF16 { .. }
             | KernelCall::TrsmNative { .. } => flops::trsm(nb),
             KernelCall::SyrkDp { .. } | KernelCall::SyrkNative { .. } => flops::syrk(nb),
             KernelCall::GemmDp { .. }
             | KernelCall::GemmSp { .. }
-            | KernelCall::GemmHp { .. } => flops::gemm(nb),
+            | KernelCall::GemmHp { .. }
+            | KernelCall::GemmF16 { .. } => flops::gemm(nb),
             KernelCall::GemmBatch { k0, k1, .. } => (k1 - k0) as f64 * flops::gemm(nb),
             // column-norm bookkeeping + O(column) storage conversion:
             // byte-bound, element count as proxy (like the conversions)
@@ -153,6 +166,7 @@ impl KernelCall {
         match self {
             KernelCall::TrsmSp { .. } | KernelCall::GemmSp { .. } => Precision::F32,
             KernelCall::TrsmHp { .. } | KernelCall::GemmHp { .. } => Precision::Bf16,
+            KernelCall::TrsmF16 { .. } | KernelCall::GemmF16 { .. } => Precision::F16,
             KernelCall::GemmBatch { prec, .. } => *prec,
             // runtime-precision codelets (adaptive pipelines) and the
             // DP epilogue report F64: cost models price their compute
@@ -172,14 +186,18 @@ impl KernelCall {
             KernelCall::DemoteTile { .. } => "dconv2s",
             KernelCall::PromoteTile { .. } => "sconv2d",
             KernelCall::DecodeBf16 { .. } => "hconv2s",
+            KernelCall::DecodeF16 { .. } => "fconv2s",
             KernelCall::DropScratch { .. } => "free",
             KernelCall::SyrkDp { .. } => "dsyrk",
             KernelCall::GemmDp { .. } => "dgemm",
             KernelCall::GemmSp { .. } => "sgemm",
             KernelCall::TrsmHp { .. } => "htrsm",
             KernelCall::GemmHp { .. } => "hgemm",
+            KernelCall::TrsmF16 { .. } => "ftrsm",
+            KernelCall::GemmF16 { .. } => "fgemm",
             KernelCall::GemmBatch { prec: Precision::F64, .. } => "dgemmb",
             KernelCall::GemmBatch { prec: Precision::F32, .. } => "sgemmb",
+            KernelCall::GemmBatch { prec: Precision::F16, .. } => "fgemmb",
             KernelCall::GemmBatch { prec: Precision::Bf16, .. } => "hgemmb",
             KernelCall::ResolvePanel { .. } => "resolve",
             KernelCall::TrsmNative { .. } => "ntrsm",
@@ -268,6 +286,27 @@ mod tests {
         // conversion tasks rank as f64 for the PrecisionFrontier tie-break
         assert_eq!(d.precision(), Precision::F64);
         assert_eq!(d.name(), "hconv2s");
+    }
+
+    #[test]
+    fn f16_calls_report_cost_precision_and_names() {
+        let nb = 64;
+        let t = KernelCall::TrsmF16 { i: 3, k: 1 };
+        assert_eq!(t.precision(), Precision::F16);
+        assert_eq!(t.name(), "ftrsm");
+        assert_eq!(t.flops_at(nb), KernelCall::TrsmDp { i: 3, k: 1 }.flops_at(nb));
+        let g = KernelCall::GemmF16 { i: 4, j: 2, k: 1 };
+        assert_eq!(g.precision(), Precision::F16);
+        assert_eq!(g.name(), "fgemm");
+        assert_eq!(g.flops_at(nb), KernelCall::GemmDp { i: 4, j: 2, k: 1 }.flops_at(nb));
+        let d = KernelCall::DecodeF16 { i: 2, k: 1 };
+        assert_eq!(d.flops_at(nb), (nb * nb) as f64);
+        assert_eq!(d.precision(), Precision::F64);
+        assert_eq!(d.name(), "fconv2s");
+        assert_eq!(
+            KernelCall::GemmBatch { i: 5, j: 3, k0: 0, k1: 2, prec: Precision::F16 }.name(),
+            "fgemmb"
+        );
     }
 
     #[test]

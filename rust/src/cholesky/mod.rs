@@ -52,6 +52,12 @@ pub enum Variant {
     /// Paper SSIX future work: f64 within `dp_thick`, f32 within
     /// `sp_thick`, bf16 storage beyond (`dp_thick <= sp_thick`).
     ThreePrecision { dp_thick: usize, sp_thick: usize },
+    /// Full four-tier storage ladder: f64 within `dp_thick`, f32 within
+    /// `sp_thick`, IEEE f16 within `f16_thick`, bf16 beyond
+    /// (`dp_thick <= sp_thick <= f16_thick`).  The f16 band keeps a
+    /// 10-bit mantissa where bf16 would keep 7; the far band keeps
+    /// bf16's f32-sized exponent range.
+    FourPrecision { dp_thick: usize, sp_thick: usize, f16_thick: usize },
     /// Norm-based adaptive selection (ExaGeoStat line of work): each
     /// off-diagonal tile takes the cheapest of f64/f32/bf16-storage whose
     /// roundoff keeps `||A_ij||_F * p / ||A||_F` under
@@ -84,6 +90,17 @@ impl Variant {
                     F64
                 } else if d < sp_thick {
                     F32
+                } else {
+                    Bf16
+                }
+            }
+            Variant::FourPrecision { dp_thick, sp_thick, f16_thick } => {
+                if d < dp_thick {
+                    F64
+                } else if d < sp_thick {
+                    F32
+                } else if d < f16_thick {
+                    F16
                 } else {
                     Bf16
                 }
@@ -154,6 +171,12 @@ impl Variant {
                 let s = frac(sp_thick) - d;
                 format!("DP({d}%)-SP({s}%)-HP({}%)", 100 - d - s)
             }
+            Variant::FourPrecision { dp_thick, sp_thick, f16_thick } => {
+                let d = frac(dp_thick);
+                let s = frac(sp_thick) - d;
+                let f = frac(f16_thick) - d - s;
+                format!("DP({d}%)-SP({s}%)-F16({f}%)-HP({}%)", 100 - d - s - f)
+            }
             // the realized split depends on the data; report the knob
             // (PrecisionMap::label gives the realized percentages)
             Variant::Adaptive { tolerance } => format!("Adaptive(tol={tolerance:.0e})"),
@@ -199,6 +222,7 @@ pub(crate) fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &Prec
         }
         Variant::MixedPrecision { .. }
         | Variant::ThreePrecision { .. }
+        | Variant::FourPrecision { .. }
         | Variant::Adaptive { .. } => tiles.apply_precision_map(map),
     }
 }

@@ -389,6 +389,7 @@ impl PipelineCounts {
                 | KernelCall::DemoteTile { .. }
                 | KernelCall::PromoteTile { .. }
                 | KernelCall::DecodeBf16 { .. }
+                | KernelCall::DecodeF16 { .. }
                 | KernelCall::DropScratch { .. } => c.conversion += 1,
                 _ => c.factor += 1,
             }
@@ -555,7 +556,8 @@ impl PipelinePlan {
         graph.compute_cheapness(|sc| match sc.call.precision() {
             Precision::F64 => 0,
             Precision::F32 => 1,
-            Precision::Bf16 => 2,
+            Precision::F16 => 2,
+            Precision::Bf16 => 3,
         });
         let counts = PipelineCounts::classify(&graph);
         let r = options.rhs_cols;
@@ -785,7 +787,8 @@ pub fn merge_graphs(
     g.compute_cheapness(|bc| match bc.call.call.precision() {
         Precision::F64 => 0,
         Precision::F32 => 1,
-        Precision::Bf16 => 2,
+        Precision::F16 => 2,
+        Precision::Bf16 => 3,
     });
     (g, local)
 }

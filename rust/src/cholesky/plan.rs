@@ -9,11 +9,11 @@
 //! conversions are decided: at each panel step it computes which step-k
 //! tiles are read across a precision boundary and emits exactly one
 //! `dlag2s`/`dconv2s` (f64 tile read by a reduced consumer), `sconv2d`
-//! (reduced tile read by a DP consumer) or `hconv2s` (packed-bf16 tile
-//! read by a reduced consumer — the per-step **decode cache**, unpacked
-//! once instead of once per consumer task) per such tile, plus one
-//! `DropScratch` at the end of the step to free the view.  Compute
-//! codelets never convert.
+//! (reduced tile read by a DP consumer) or `hconv2s`/`fconv2s`
+//! (packed-bf16/-f16 tile read by a reduced consumer — the per-step
+//! **decode cache**, unpacked once instead of once per consumer task)
+//! per such tile, plus one `DropScratch` at the end of the step to free
+//! the view.  Compute codelets never convert.
 //!
 //! [`CholeskyPlan::build_fused`] additionally replaces the per-step
 //! rank-nb `Gemm*` updates with one left-looking [`KernelCall::GemmBatch`]
@@ -40,7 +40,8 @@ pub struct ConversionCounts {
     pub demotes: usize,
     /// `sconv2d` tasks (f64 view of a reduced tile).
     pub promotes: usize,
-    /// `hconv2s` tasks (per-step f32 decode of a packed-bf16 tile).
+    /// `hconv2s`/`fconv2s` tasks (per-step f32 decode of a packed
+    /// bf16/f16 tile).
     pub decodes: usize,
     /// `DropScratch` frees (one per converted tile per step).
     pub drops: usize,
@@ -95,9 +96,9 @@ pub struct CholeskyPlan {
 /// Record a cross-precision read of step-k tile `x` (row index; `x == k`
 /// is the diagonal): a DP consumer of a reduced tile needs the f64 view,
 /// a reduced consumer of an f64 tile needs the f32 view, and a reduced
-/// consumer of a packed-bf16 tile needs the decoded f32 view (the
-/// per-step decode cache — one `hconv2s` unpack shared by every reduced
-/// reader instead of one thread-local unpack per task).
+/// consumer of a packed-bf16/-f16 tile needs the decoded f32 view (the
+/// per-step decode cache — one `hconv2s`/`fconv2s` unpack shared by
+/// every reduced reader instead of one thread-local unpack per task).
 fn mark_boundary(
     op_prec: Precision,
     f64_compute: bool,
@@ -105,6 +106,7 @@ fn mark_boundary(
     needs_f32: &mut [bool],
     needs_f64: &mut [bool],
     needs_decode: &mut [bool],
+    needs_decode_f16: &mut [bool],
 ) {
     if f64_compute {
         if op_prec != Precision::F64 {
@@ -114,6 +116,8 @@ fn mark_boundary(
         needs_f32[x] = true;
     } else if op_prec == Precision::Bf16 {
         needs_decode[x] = true;
+    } else if op_prec == Precision::F16 {
+        needs_decode_f16[x] = true;
     }
 }
 
@@ -183,8 +187,10 @@ impl CholeskyPlan {
             let sc = SizedCall { call, nb };
             match call.precision() {
                 Precision::F64 => dp_flops += call.flops_at(nb),
-                // bf16 tasks *compute* in f32 (storage is what differs)
-                Precision::F32 | Precision::Bf16 => sp_flops += call.flops_at(nb),
+                // bf16/f16 tasks *compute* in f32 (storage is what differs)
+                Precision::F32 | Precision::F16 | Precision::Bf16 => {
+                    sp_flops += call.flops_at(nb)
+                }
             }
             g.submit(sc, acc)
         };
@@ -264,6 +270,7 @@ impl CholeskyPlan {
             let mut needs_f32 = vec![false; p];
             let mut needs_f64 = vec![false; p];
             let mut needs_decode = vec![false; p];
+            let mut needs_decode_f16 = vec![false; p];
             for i in (k + 1)..p {
                 if live(i, k) {
                     let f64c = prec(i, k) == Precision::F64;
@@ -274,6 +281,7 @@ impl CholeskyPlan {
                         &mut needs_f32,
                         &mut needs_f64,
                         &mut needs_decode,
+                        &mut needs_decode_f16,
                     );
                 }
             }
@@ -287,6 +295,7 @@ impl CholeskyPlan {
                         &mut needs_f32,
                         &mut needs_f64,
                         &mut needs_decode,
+                        &mut needs_decode_f16,
                     );
                 }
                 if opts.fuse_gemm {
@@ -304,6 +313,7 @@ impl CholeskyPlan {
                         &mut needs_f32,
                         &mut needs_f64,
                         &mut needs_decode,
+                        &mut needs_decode_f16,
                     );
                     mark_boundary(
                         prec(j, k),
@@ -312,6 +322,7 @@ impl CholeskyPlan {
                         &mut needs_f32,
                         &mut needs_f64,
                         &mut needs_decode,
+                        &mut needs_decode_f16,
                     );
                 }
             }
@@ -342,6 +353,14 @@ impl CholeskyPlan {
                     vec![(TileId::new(k, k), Access::Write)],
                 );
             }
+            if needs_decode_f16[k] {
+                conv.decodes += 1;
+                submit(
+                    &mut graph,
+                    KernelCall::DecodeF16 { i: k, k },
+                    vec![(TileId::new(k, k), Access::Write)],
+                );
+            }
 
             // lines 10-17: panel solve at each tile's native precision,
             // followed by that tile's (single) boundary conversion
@@ -352,6 +371,7 @@ impl CholeskyPlan {
                 let call = match prec(i, k) {
                     Precision::F64 => KernelCall::TrsmDp { i, k },
                     Precision::F32 => KernelCall::TrsmSp { i, k },
+                    Precision::F16 => KernelCall::TrsmF16 { i, k },
                     Precision::Bf16 => KernelCall::TrsmHp { i, k },
                 };
                 submit(
@@ -386,6 +406,14 @@ impl CholeskyPlan {
                         vec![(TileId::new(i, k), Access::Write)],
                     );
                 }
+                if needs_decode_f16[i] {
+                    conv.decodes += 1;
+                    submit(
+                        &mut graph,
+                        KernelCall::DecodeF16 { i, k },
+                        vec![(TileId::new(i, k), Access::Write)],
+                    );
+                }
             }
 
             // lines 18-30: trailing update
@@ -412,6 +440,7 @@ impl CholeskyPlan {
                     let call = match prec(i, j) {
                         Precision::F64 => KernelCall::GemmDp { i, j, k },
                         Precision::F32 => KernelCall::GemmSp { i, j, k },
+                        Precision::F16 => KernelCall::GemmF16 { i, j, k },
                         Precision::Bf16 => KernelCall::GemmHp { i, j, k },
                     };
                     submit(
@@ -430,7 +459,7 @@ impl CholeskyPlan {
             // (the WAR edges from the step's readers order each drop
             // after the last consumer of its tile)
             for x in k..p {
-                if needs_f32[x] || needs_f64[x] || needs_decode[x] {
+                if needs_f32[x] || needs_f64[x] || needs_decode[x] || needs_decode_f16[x] {
                     conv.drops += 1;
                     submit(
                         &mut graph,
@@ -443,12 +472,14 @@ impl CholeskyPlan {
         }
 
         // rank storage cheapness for the PrecisionFrontier policy:
-        // f64 < f32 < packed bf16 (bf16 tasks compute in f32 but store
-        // half again fewer bytes)
+        // f64 < f32 < packed f16 < packed bf16 (f16/bf16 tasks compute
+        // in f32 but store half again fewer bytes; bf16's wider exponent
+        // makes it the coarsest — and cheapest-to-pick — mantissa)
         graph.compute_cheapness(|sc| match sc.call.precision() {
             Precision::F64 => 0,
             Precision::F32 => 1,
-            Precision::Bf16 => 2,
+            Precision::F16 => 2,
+            Precision::Bf16 => 3,
         });
 
         Self { graph, p, nb, variant, map, options: opts, dp_flops, sp_flops, step_conversions }
@@ -494,12 +525,12 @@ impl CholeskyPlan {
     }
 
     /// Tile fractions (dp_tiles, reduced_tiles) of the lower triangle —
-    /// the paper's DP(x%)-SP(y%) percentages, read off the map (bf16
-    /// tiles count with the reduced share, as in the band formula).
+    /// the paper's DP(x%)-SP(y%) percentages, read off the map (f16 and
+    /// bf16 tiles count with the reduced share, as in the band formula).
     pub fn tile_fractions(&self) -> (f64, f64) {
         let c = self.map.census();
         let total = c.total() as f64;
-        (c.dp as f64 / total, (c.sp + c.hp) as f64 / total)
+        (c.dp as f64 / total, (c.sp + c.f16 + c.hp) as f64 / total)
     }
 }
 
@@ -652,6 +683,8 @@ mod tests {
                 Precision::F64
             } else if (i * 3 + j) % 4 == 0 {
                 Precision::Bf16
+            } else if (i * 5 + j) % 7 == 0 {
+                Precision::F16
             } else if (i + j) % 2 == 1 {
                 Precision::F32
             } else {
@@ -683,7 +716,10 @@ mod tests {
             );
             assert_eq!(
                 t.decodes,
-                count_kind(plan, |c| matches!(c, KernelCall::DecodeBf16 { .. }))
+                count_kind(plan, |c| matches!(
+                    c,
+                    KernelCall::DecodeBf16 { .. } | KernelCall::DecodeF16 { .. }
+                ))
             );
             assert_eq!(t.drops, count_kind(plan, |c| matches!(c, KernelCall::DropScratch { .. })));
             // every converted tile is freed exactly once within its step:
@@ -698,7 +734,8 @@ mod tests {
                     }
                     KernelCall::DemoteTile { i, k }
                     | KernelCall::PromoteTile { i, k }
-                    | KernelCall::DecodeBf16 { i, k } => {
+                    | KernelCall::DecodeBf16 { i, k }
+                    | KernelCall::DecodeF16 { i, k } => {
                         viewed.insert((i, k));
                     }
                     _ => {}
@@ -726,7 +763,8 @@ mod tests {
             let want = match t.payload.call.precision() {
                 Precision::F64 => 0,
                 Precision::F32 => 1,
-                Precision::Bf16 => 2,
+                Precision::F16 => 2,
+                Precision::Bf16 => 3,
             };
             assert_eq!(t.cheapness, want, "{:?}", t.payload.call);
         }
@@ -809,6 +847,8 @@ mod tests {
                 Precision::F32
             } else if i - j > 3 {
                 Precision::Bf16
+            } else if i - j > 2 {
+                Precision::F16
             } else {
                 Precision::F64
             }
@@ -828,16 +868,19 @@ mod tests {
         for t in plan.graph.tasks() {
             match t.payload.call {
                 KernelCall::GemmSp { i, j, .. } => assert_eq!(map.get(i, j), Precision::F32),
+                KernelCall::GemmF16 { i, j, .. } => assert_eq!(map.get(i, j), Precision::F16),
                 KernelCall::GemmHp { i, j, .. } => assert_eq!(map.get(i, j), Precision::Bf16),
                 KernelCall::GemmDp { i, j, .. } => assert_eq!(map.get(i, j), Precision::F64),
                 KernelCall::TrsmSp { i, k } => assert_eq!(map.get(i, k), Precision::F32),
+                KernelCall::TrsmF16 { i, k } => assert_eq!(map.get(i, k), Precision::F16),
                 KernelCall::TrsmHp { i, k } => assert_eq!(map.get(i, k), Precision::Bf16),
                 KernelCall::TrsmDp { i, k } => assert_eq!(map.get(i, k), Precision::F64),
                 // demotes only make sense on f64 tiles, promotes on
-                // reduced, decodes on packed bf16
+                // reduced, decodes on packed bf16/f16
                 KernelCall::DemoteTile { i, k } => assert_eq!(map.get(i, k), Precision::F64),
                 KernelCall::PromoteTile { i, k } => assert_ne!(map.get(i, k), Precision::F64),
                 KernelCall::DecodeBf16 { i, k } => assert_eq!(map.get(i, k), Precision::Bf16),
+                KernelCall::DecodeF16 { i, k } => assert_eq!(map.get(i, k), Precision::F16),
                 _ => {}
             }
         }

@@ -95,6 +95,7 @@ impl RunConfig {
         let mut variant_name: Option<String> = None;
         let mut diag_thick: Option<usize> = None;
         let mut sp_thick: Option<usize> = None;
+        let mut f16_thick: Option<usize> = None;
         let mut tolerance: Option<f64> = None;
 
         fn parse<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
@@ -145,6 +146,7 @@ impl RunConfig {
                 "variant" => variant_name = Some(v.clone()),
                 "diag_thick" | "dp_thick" => diag_thick = Some(parse(k, v)?),
                 "sp_thick" => sp_thick = Some(parse(k, v)?),
+                "f16_thick" => f16_thick = Some(parse(k, v)?),
                 "tolerance" => tolerance = Some(parse(k, v)?),
                 other => {
                     return Err(Error::InvalidArgument(format!(
@@ -157,6 +159,7 @@ impl RunConfig {
         if variant_name.is_some()
             || diag_thick.is_some()
             || sp_thick.is_some()
+            || f16_thick.is_some()
             || tolerance.is_some()
         {
             let name = variant_name.unwrap_or_else(|| {
@@ -165,27 +168,36 @@ impl RunConfig {
                     Variant::MixedPrecision { .. } => "mp",
                     Variant::Dst { .. } => "dst",
                     Variant::ThreePrecision { .. } => "3p",
+                    Variant::FourPrecision { .. } => "4p",
                     Variant::Adaptive { .. } => "adaptive",
                 }
                 .to_string()
             });
             // re-assembly keeps previously configured knobs when they are
             // not overridden in this map (a lone `tolerance` or `nb`
-            // override must not reset an mp/dst/3p band to the default)
+            // override must not reset an mp/dst/3p/4p band to the default)
             let t = diag_thick.unwrap_or(match self.variant {
                 Variant::MixedPrecision { diag_thick } | Variant::Dst { diag_thick } => diag_thick,
                 Variant::ThreePrecision { dp_thick, .. } => dp_thick,
+                Variant::FourPrecision { dp_thick, .. } => dp_thick,
                 _ => 2,
+            });
+            let s = sp_thick.unwrap_or(match self.variant {
+                Variant::ThreePrecision { sp_thick, .. } => sp_thick,
+                Variant::FourPrecision { sp_thick, .. } => sp_thick,
+                _ => t * 2,
             });
             self.variant = match name.as_str() {
                 "dp" => Variant::FullDp,
                 "mp" => Variant::MixedPrecision { diag_thick: t },
                 "dst" => Variant::Dst { diag_thick: t },
-                "3p" => Variant::ThreePrecision {
+                "3p" => Variant::ThreePrecision { dp_thick: t, sp_thick: s },
+                "4p" => Variant::FourPrecision {
                     dp_thick: t,
-                    sp_thick: sp_thick.unwrap_or(match self.variant {
-                        Variant::ThreePrecision { sp_thick, .. } => sp_thick,
-                        _ => t * 2,
+                    sp_thick: s,
+                    f16_thick: f16_thick.unwrap_or(match self.variant {
+                        Variant::FourPrecision { f16_thick, .. } => f16_thick,
+                        _ => s + t,
                     }),
                 },
                 "adaptive" => Variant::Adaptive {
@@ -198,7 +210,7 @@ impl RunConfig {
                 },
                 other => {
                     return Err(Error::InvalidArgument(format!(
-                        "variant must be dp|mp|dst|3p|adaptive, got {other:?}"
+                        "variant must be dp|mp|dst|3p|4p|adaptive, got {other:?}"
                     )))
                 }
             };
@@ -214,6 +226,14 @@ impl RunConfig {
         if let Variant::ThreePrecision { dp_thick, sp_thick } = self.variant {
             if dp_thick > sp_thick {
                 crate::invalid_arg!("3p requires dp_thick <= sp_thick ({dp_thick} > {sp_thick})");
+            }
+        }
+        if let Variant::FourPrecision { dp_thick, sp_thick, f16_thick } = self.variant {
+            if dp_thick > sp_thick || sp_thick > f16_thick {
+                crate::invalid_arg!(
+                    "4p requires dp_thick <= sp_thick <= f16_thick \
+                     ({dp_thick}, {sp_thick}, {f16_thick})"
+                );
             }
         }
         if let Variant::Adaptive { tolerance } = self.variant {
@@ -269,6 +289,34 @@ mod tests {
         let c = RunConfig::parse("variant = 3p\ndp_thick = 1\nsp_thick = 4\n").unwrap();
         assert_eq!(c.variant, Variant::ThreePrecision { dp_thick: 1, sp_thick: 4 });
         assert!(RunConfig::parse("variant = 3p\ndp_thick = 5\nsp_thick = 2\n").is_err());
+    }
+
+    #[test]
+    fn four_precision_roundtrip() {
+        let c =
+            RunConfig::parse("variant = 4p\ndp_thick = 1\nsp_thick = 3\nf16_thick = 5\n").unwrap();
+        assert_eq!(
+            c.variant,
+            Variant::FourPrecision { dp_thick: 1, sp_thick: 3, f16_thick: 5 }
+        );
+        // default f16_thick extends the sp band by the dp thickness
+        let d = RunConfig::parse("variant = 4p\ndp_thick = 2\nsp_thick = 4\n").unwrap();
+        assert_eq!(
+            d.variant,
+            Variant::FourPrecision { dp_thick: 2, sp_thick: 4, f16_thick: 6 }
+        );
+        // band ordering is validated
+        assert!(RunConfig::parse("variant = 4p\ndp_thick = 2\nsp_thick = 4\nf16_thick = 3\n")
+            .is_err());
+        // a partial override keeps the other band knobs
+        let mut c = c;
+        let mut over = HashMap::new();
+        over.insert("f16_thick".to_string(), "6".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(
+            c.variant,
+            Variant::FourPrecision { dp_thick: 1, sp_thick: 3, f16_thick: 6 }
+        );
     }
 
     #[test]

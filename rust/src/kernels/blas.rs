@@ -44,10 +44,110 @@
 //! genuinely runs ~2x the f64 throughput (half the memory traffic, twice
 //! the SIMD lanes) — that hardware property is what the mixed-precision
 //! algorithm converts into its 1.6x speedup.
+//!
+//! ## SIMD dispatch
+//!
+//! The MR x NR register sweep has explicit `std::arch` forms selected by
+//! **one-time runtime feature detection** ([`active_isa`], a `OnceLock`
+//! — no per-call `is_x86_feature_detected!`): AVX2(+FMA) on x86_64 and
+//! NEON on aarch64, with the generic scalar [`microkernel`] as both the
+//! fallback and the bit-exactness oracle.  CPUs with AVX-512 are
+//! detected and reported as [`SimdIsa::Avx512`] but run the 256-bit
+//! kernels (the 512-bit intrinsics are unstable on the pinned
+//! toolchain).  `PALLAS_FORCE_SCALAR=1` forces the scalar path.
+//!
+//! Bit-exactness contract: the **f64** vector kernels use separate
+//! multiply and add (no FMA) over the same ascending-k order, so every
+//! lane performs exactly the scalar oracle's arithmetic — `to_bits`
+//! identical, asserted per supported ISA in `tests/packed_kernels.rs`.
+//! The **f32** kernels use FMA (one rounding per step instead of two):
+//! faster and no less accurate, but not bit-identical to the oracle;
+//! they carry a documented relative-error bound `<= C * k * eps_f32`
+//! instead.
 
 use std::cell::RefCell;
+use std::sync::OnceLock;
 
 use crate::error::{Error, Result};
+
+/// Instruction-set tier the micro-kernels dispatch on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Generic scalar Rust (every platform; the oracle).
+    Scalar,
+    /// x86_64 AVX2 + FMA: 256-bit kernels.
+    Avx2,
+    /// x86_64 AVX-512 detected; runs the 256-bit AVX2 kernels (512-bit
+    /// intrinsics are unstable on the pinned toolchain) but is reported
+    /// distinctly so benches record the true hardware tier.
+    Avx512,
+    /// aarch64 NEON: 128-bit kernels.
+    Neon,
+}
+
+impl SimdIsa {
+    /// Stable lowercase name (the `simd_isa` key in bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Avx512 => "avx512",
+            SimdIsa::Neon => "neon",
+        }
+    }
+}
+
+static ACTIVE_ISA: OnceLock<SimdIsa> = OnceLock::new();
+
+/// The ISA every dispatching kernel entry point uses, detected once per
+/// process and cached (`PALLAS_FORCE_SCALAR` wins over detection).
+pub fn active_isa() -> SimdIsa {
+    *ACTIVE_ISA.get_or_init(detect_isa)
+}
+
+fn detect_isa() -> SimdIsa {
+    let forced = std::env::var("PALLAS_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if forced {
+        return SimdIsa::Scalar;
+    }
+    best_hardware_isa()
+}
+
+/// Best tier the running CPU supports, ignoring the env override.
+fn best_hardware_isa() -> SimdIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+        {
+            return SimdIsa::Avx512;
+        }
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdIsa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdIsa::Neon;
+        }
+    }
+    SimdIsa::Scalar
+}
+
+/// Every ISA the running CPU can execute, scalar first — the set the
+/// per-ISA equivalence tests sweep via the `*_with_isa` entry points.
+pub fn supported_isas() -> Vec<SimdIsa> {
+    match best_hardware_isa() {
+        SimdIsa::Scalar => vec![SimdIsa::Scalar],
+        SimdIsa::Avx2 => vec![SimdIsa::Scalar, SimdIsa::Avx2],
+        SimdIsa::Avx512 => vec![SimdIsa::Scalar, SimdIsa::Avx2, SimdIsa::Avx512],
+        SimdIsa::Neon => vec![SimdIsa::Scalar, SimdIsa::Neon],
+    }
+}
 
 /// Scalar types the tile kernels are instantiated at.
 pub trait Scalar:
@@ -74,6 +174,34 @@ pub trait Scalar:
     where
         Self: Sized,
         F: FnOnce(&mut Vec<Self>, &mut Vec<Self>) -> R;
+
+    /// The MR x NR register sweep at a selected ISA tier.  The default
+    /// is the scalar oracle; f64/f32 override it with `std::arch`
+    /// kernels (f64 bit-identical to scalar, f32 within the documented
+    /// FMA bound — see the module docs).
+    ///
+    /// # Safety
+    /// Same bounds contract as [`microkernel`]; `isa` must be one the
+    /// running CPU supports (guaranteed when it comes from
+    /// [`active_isa`] or [`supported_isas`]).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn microkernel_isa(
+        isa: SimdIsa,
+        xa: &[Self],
+        a_off: usize,
+        lda: usize,
+        xb: &[Self],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[Self; MR]; NR],
+    ) where
+        Self: Sized,
+    {
+        let _ = isa;
+        microkernel(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
+    }
 }
 
 impl Scalar for f64 {
@@ -99,6 +227,30 @@ impl Scalar for f64 {
             f(a, b)
         })
     }
+
+    unsafe fn microkernel_isa(
+        isa: SimdIsa,
+        xa: &[f64],
+        a_off: usize,
+        lda: usize,
+        xb: &[f64],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f64; MR]; NR],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if matches!(isa, SimdIsa::Avx2 | SimdIsa::Avx512) {
+            return x86::microkernel_f64_avx(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if isa == SimdIsa::Neon {
+            return neon::microkernel_f64_neon(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
+        }
+        let _ = isa;
+        microkernel(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
+    }
 }
 
 impl Scalar for f32 {
@@ -123,6 +275,30 @@ impl Scalar for f32 {
             let (a, b) = &mut *guard;
             f(a, b)
         })
+    }
+
+    unsafe fn microkernel_isa(
+        isa: SimdIsa,
+        xa: &[f32],
+        a_off: usize,
+        lda: usize,
+        xb: &[f32],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f32; MR]; NR],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if matches!(isa, SimdIsa::Avx2 | SimdIsa::Avx512) {
+            return x86::microkernel_f32_fma(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if isa == SimdIsa::Neon {
+            return neon::microkernel_f32_neon(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
+        }
+        let _ = isa;
+        microkernel(xa, a_off, lda, xb, b_off, ldb, k0, k1, acc);
     }
 }
 
@@ -228,6 +404,196 @@ unsafe fn microkernel<T: Scalar>(
     }
 }
 
+/// x86_64 vector micro-kernels (MR = 8, NR = 4, 256-bit registers).
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// f64 sweep: two `__m256d` per accumulator column, separate
+    /// multiply and add — one rounding per op per lane in ascending-k
+    /// order, exactly the scalar oracle's arithmetic, so the result is
+    /// bit-identical.
+    ///
+    /// # Safety
+    /// Same bounds contract as the scalar `microkernel`; the CPU must
+    /// support AVX (implied by the Avx2/Avx512 dispatch tiers).
+    #[target_feature(enable = "avx")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn microkernel_f64_avx(
+        xa: &[f64],
+        a_off: usize,
+        lda: usize,
+        xb: &[f64],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f64; MR]; NR],
+    ) {
+        let ap = xa.as_ptr();
+        let bp = xb.as_ptr();
+        let mut r = [[_mm256_setzero_pd(); 2]; NR];
+        for jj in 0..NR {
+            r[jj][0] = _mm256_loadu_pd(acc[jj].as_ptr());
+            r[jj][1] = _mm256_loadu_pd(acc[jj].as_ptr().add(4));
+        }
+        for k in k0..k1 {
+            let abase = a_off + k * lda;
+            let bbase = b_off + k * ldb;
+            let a0 = _mm256_loadu_pd(ap.add(abase));
+            let a1 = _mm256_loadu_pd(ap.add(abase + 4));
+            for jj in 0..NR {
+                let bv = _mm256_set1_pd(*bp.add(bbase + jj));
+                r[jj][0] = _mm256_add_pd(r[jj][0], _mm256_mul_pd(a0, bv));
+                r[jj][1] = _mm256_add_pd(r[jj][1], _mm256_mul_pd(a1, bv));
+            }
+        }
+        for jj in 0..NR {
+            _mm256_storeu_pd(acc[jj].as_mut_ptr(), r[jj][0]);
+            _mm256_storeu_pd(acc[jj].as_mut_ptr().add(4), r[jj][1]);
+        }
+    }
+
+    /// f32 sweep: one `__m256` per accumulator column with FMA — a
+    /// single rounding where the oracle takes two, so not bit-identical;
+    /// covered by the documented `C * k * eps_f32` bound instead.
+    ///
+    /// # Safety
+    /// Same bounds contract as the scalar `microkernel`; the CPU must
+    /// support AVX2 + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn microkernel_f32_fma(
+        xa: &[f32],
+        a_off: usize,
+        lda: usize,
+        xb: &[f32],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f32; MR]; NR],
+    ) {
+        let ap = xa.as_ptr();
+        let bp = xb.as_ptr();
+        let mut r = [_mm256_setzero_ps(); NR];
+        for jj in 0..NR {
+            r[jj] = _mm256_loadu_ps(acc[jj].as_ptr());
+        }
+        for k in k0..k1 {
+            let av = _mm256_loadu_ps(ap.add(a_off + k * lda));
+            let bbase = b_off + k * ldb;
+            for jj in 0..NR {
+                r[jj] = _mm256_fmadd_ps(av, _mm256_set1_ps(*bp.add(bbase + jj)), r[jj]);
+            }
+        }
+        for jj in 0..NR {
+            _mm256_storeu_ps(acc[jj].as_mut_ptr(), r[jj]);
+        }
+    }
+}
+
+/// aarch64 NEON micro-kernels (MR = 8, NR = 4, 128-bit registers).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// f64 sweep: four `float64x2_t` per accumulator column, separate
+    /// multiply and add — bit-identical to the scalar oracle (same
+    /// arithmetic, same order).
+    ///
+    /// # Safety
+    /// Same bounds contract as the scalar `microkernel`; NEON required.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn microkernel_f64_neon(
+        xa: &[f64],
+        a_off: usize,
+        lda: usize,
+        xb: &[f64],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f64; MR]; NR],
+    ) {
+        let ap = xa.as_ptr();
+        let bp = xb.as_ptr();
+        let mut r = [[vdupq_n_f64(0.0); 4]; NR];
+        for jj in 0..NR {
+            for h in 0..4 {
+                r[jj][h] = vld1q_f64(acc[jj].as_ptr().add(h * 2));
+            }
+        }
+        for k in k0..k1 {
+            let abase = a_off + k * lda;
+            let a = [
+                vld1q_f64(ap.add(abase)),
+                vld1q_f64(ap.add(abase + 2)),
+                vld1q_f64(ap.add(abase + 4)),
+                vld1q_f64(ap.add(abase + 6)),
+            ];
+            let bbase = b_off + k * ldb;
+            for jj in 0..NR {
+                let bv = vdupq_n_f64(*bp.add(bbase + jj));
+                for h in 0..4 {
+                    r[jj][h] = vaddq_f64(r[jj][h], vmulq_f64(a[h], bv));
+                }
+            }
+        }
+        for jj in 0..NR {
+            for h in 0..4 {
+                vst1q_f64(acc[jj].as_mut_ptr().add(h * 2), r[jj][h]);
+            }
+        }
+    }
+
+    /// f32 sweep: two `float32x4_t` per accumulator column with fused
+    /// multiply-add — not bit-identical to the oracle; covered by the
+    /// documented `C * k * eps_f32` bound.
+    ///
+    /// # Safety
+    /// Same bounds contract as the scalar `microkernel`; NEON required.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn microkernel_f32_neon(
+        xa: &[f32],
+        a_off: usize,
+        lda: usize,
+        xb: &[f32],
+        b_off: usize,
+        ldb: usize,
+        k0: usize,
+        k1: usize,
+        acc: &mut [[f32; MR]; NR],
+    ) {
+        let ap = xa.as_ptr();
+        let bp = xb.as_ptr();
+        let mut r = [[vdupq_n_f32(0.0); 2]; NR];
+        for jj in 0..NR {
+            r[jj][0] = vld1q_f32(acc[jj].as_ptr());
+            r[jj][1] = vld1q_f32(acc[jj].as_ptr().add(4));
+        }
+        for k in k0..k1 {
+            let abase = a_off + k * lda;
+            let a0 = vld1q_f32(ap.add(abase));
+            let a1 = vld1q_f32(ap.add(abase + 4));
+            let bbase = b_off + k * ldb;
+            for jj in 0..NR {
+                let bv = vdupq_n_f32(*bp.add(bbase + jj));
+                r[jj][0] = vfmaq_f32(r[jj][0], a0, bv);
+                r[jj][1] = vfmaq_f32(r[jj][1], a1, bv);
+            }
+        }
+        for jj in 0..NR {
+            vst1q_f32(acc[jj].as_mut_ptr(), r[jj][0]);
+            vst1q_f32(acc[jj].as_mut_ptr().add(4), r[jj][1]);
+        }
+    }
+}
+
 /// Subtract a finished accumulator block from C at `(i0, j0)`.
 #[inline]
 fn store_sub<T: Scalar>(c: &mut [T], nb: usize, i0: usize, j0: usize, acc: &[[T; MR]; NR]) {
@@ -242,12 +608,19 @@ fn store_sub<T: Scalar>(c: &mut [T], nb: usize, i0: usize, j0: usize, acc: &[[T;
 /// `C -= A * B^T` on column-major `nb x nb` tiles
 /// (`dgemm`/`sgemm` with alpha = -1, beta = 1, transB = T).
 ///
-/// Dispatches to the packed micro-kernel path when the tile size
-/// permits, else falls back to the stride-1 dot-product form.
+/// Dispatches to the packed micro-kernel path (at the cached
+/// [`active_isa`] tier) when the tile size permits, else falls back to
+/// the stride-1 dot-product form.
 pub fn gemm<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+    gemm_with_isa(c, a, b, nb, active_isa());
+}
+
+/// [`gemm`] at an explicit ISA tier — the hook the per-ISA equivalence
+/// tests sweep over [`supported_isas`].
+pub fn gemm_with_isa<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize, isa: SimdIsa) {
     debug_assert!(c.len() == nb * nb && a.len() == nb * nb && b.len() == nb * nb);
     if blockable(nb) {
-        gemm_packed(c, a, b, nb);
+        gemm_packed(c, a, b, nb, isa);
     } else {
         gemm_simple(c, a, b, nb);
     }
@@ -273,7 +646,7 @@ pub fn gemm_simple<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
 /// column-panels, then sweep MC x NC blocks of C with the register
 /// micro-kernel.  Each C element is read and written exactly once
 /// (`nb <= KC`), so C traffic is `O(nb^2)` against `O(nb^3)` flops.
-fn gemm_packed<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
+fn gemm_packed<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize, isa: SimdIsa) {
     T::with_pack_buffers(|abuf, bbuf| {
         pack_a(a, nb, abuf);
         pack_bt(b, nb, bbuf);
@@ -287,7 +660,18 @@ fn gemm_packed<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
                         // SAFETY: packed buffers are nb*nb and offsets
                         // stay in-panel (i0 < nb, j0 < nb, k < nb).
                         unsafe {
-                            microkernel(abuf, i0 * nb, MR, bbuf, j0 * nb, NR, 0, nb, &mut acc);
+                            T::microkernel_isa(
+                                isa,
+                                abuf,
+                                i0 * nb,
+                                MR,
+                                bbuf,
+                                j0 * nb,
+                                NR,
+                                0,
+                                nb,
+                                &mut acc,
+                            );
                         }
                         store_sub(c, nb, i0, j0, &acc);
                     }
@@ -304,9 +688,14 @@ fn gemm_packed<T: Scalar>(c: &mut [T], a: &[T], b: &[T], nb: usize) {
 /// Strictly-sub-diagonal MR x NR blocks go through the packed register
 /// micro-kernel; diagonal-crossing blocks use the scalar dot loop.
 pub fn syrk<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
+    syrk_with_isa(c, a, nb, active_isa());
+}
+
+/// [`syrk`] at an explicit ISA tier (per-ISA equivalence test hook).
+pub fn syrk_with_isa<T: Scalar>(c: &mut [T], a: &[T], nb: usize, isa: SimdIsa) {
     debug_assert!(c.len() == nb * nb && a.len() == nb * nb);
     if blockable(nb) {
-        syrk_packed(c, a, nb);
+        syrk_packed(c, a, nb, isa);
     } else {
         syrk_block(c, a, nb, 0, nb, 0, nb);
     }
@@ -347,7 +736,7 @@ fn syrk_block<T: Scalar>(
 /// (row-panels and transposed column-panels of A); blocks strictly
 /// below the diagonal band run the micro-kernel, diagonal-straddling
 /// blocks the scalar dot loop, fully-above blocks are skipped.
-fn syrk_packed<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
+fn syrk_packed<T: Scalar>(c: &mut [T], a: &[T], nb: usize, isa: SimdIsa) {
     T::with_pack_buffers(|abuf, bbuf| {
         pack_a(a, nb, abuf);
         pack_bt(a, nb, bbuf);
@@ -366,7 +755,18 @@ fn syrk_packed<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
                             let mut acc = [[T::ZERO; MR]; NR];
                             // SAFETY: same in-panel bounds as gemm_packed.
                             unsafe {
-                                microkernel(abuf, i0 * nb, MR, bbuf, j0 * nb, NR, 0, nb, &mut acc);
+                                T::microkernel_isa(
+                                    isa,
+                                    abuf,
+                                    i0 * nb,
+                                    MR,
+                                    bbuf,
+                                    j0 * nb,
+                                    NR,
+                                    0,
+                                    nb,
+                                    &mut acc,
+                                );
                             }
                             store_sub(c, nb, i0, j0, &acc);
                         } else {
@@ -387,9 +787,14 @@ fn syrk_packed<T: Scalar>(c: &mut [T], a: &[T], nb: usize) {
 /// across columns).  Dispatches to the packed-panel form when the tile
 /// size permits, else the stride-1 dot-product form.
 pub fn trsm<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
+    trsm_with_isa(l, b, nb, active_isa());
+}
+
+/// [`trsm`] at an explicit ISA tier (per-ISA equivalence test hook).
+pub fn trsm_with_isa<T: Scalar>(l: &[T], b: &mut [T], nb: usize, isa: SimdIsa) {
     debug_assert!(l.len() == nb * nb && b.len() == nb * nb);
     if blockable(nb) {
-        trsm_packed(l, b, nb);
+        trsm_packed(l, b, nb, isa);
     } else {
         trsm_simple(l, b, nb);
     }
@@ -419,7 +824,7 @@ pub fn trsm_simple<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
 /// finishes the in-panel substitution in the *same* register
 /// accumulator, so each element's k-sum is the oracle's, bit-for-bit.
 /// For nb >> NR virtually all flops land in the micro-kernel.
-fn trsm_packed<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
+fn trsm_packed<T: Scalar>(l: &[T], b: &mut [T], nb: usize, isa: SimdIsa) {
     T::with_pack_buffers(|lbuf, _| {
         pack_bt(l, nb, lbuf);
         for j0 in (0..nb).step_by(NR) {
@@ -429,7 +834,7 @@ fn trsm_packed<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
                 // SAFETY: k < j0 <= nb - NR keeps both operands in
                 // bounds; B columns 0..j0 are already solved.
                 unsafe {
-                    microkernel(&*b, i0, nb, lbuf, j0 * nb, NR, 0, j0, &mut acc);
+                    T::microkernel_isa(isa, &*b, i0, nb, lbuf, j0 * nb, NR, 0, j0, &mut acc);
                 }
                 // in-panel continuation and solve, column by column:
                 // column j0+jj extends its register sum with the
@@ -462,9 +867,19 @@ fn trsm_packed<T: Scalar>(l: &[T], b: &mut [T], nb: usize) {
 /// Dispatches to the packed left-looking form when the tile size
 /// permits, else the unblocked reference form.
 pub fn potrf<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
+    potrf_with_isa(a, nb, tile_row0, active_isa())
+}
+
+/// [`potrf`] at an explicit ISA tier (per-ISA equivalence test hook).
+pub fn potrf_with_isa<T: Scalar>(
+    a: &mut [T],
+    nb: usize,
+    tile_row0: usize,
+    isa: SimdIsa,
+) -> Result<()> {
     debug_assert_eq!(a.len(), nb * nb);
     if blockable(nb) {
-        potrf_packed(a, nb, tile_row0)
+        potrf_packed(a, nb, tile_row0, isa)
     } else {
         potrf_simple(a, nb, tile_row0)
     }
@@ -508,7 +923,7 @@ pub fn potrf_simple<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Resu
 /// the same register sum with the panel's already-finalized columns.
 /// Element-for-element the k-sums are the oracle's, bit-for-bit; for
 /// nb >> MR the prefix sweeps are ~all the flops.
-fn potrf_packed<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<()> {
+fn potrf_packed<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize, isa: SimdIsa) -> Result<()> {
     for j0 in (0..nb).step_by(NR) {
         let jend = j0 + NR;
         // diagonal block rows [j0, jend): scalar left-looking
@@ -554,7 +969,7 @@ fn potrf_packed<T: Scalar>(a: &mut [T], nb: usize, tile_row0: usize) -> Result<(
             let mut acc = [[T::ZERO; MR]; NR];
             // SAFETY: i0 + MR <= nb, j0 + NR <= nb, k < j0 < nb.
             unsafe {
-                microkernel(&*a, i0, nb, &*a, j0, nb, 0, j0, &mut acc);
+                T::microkernel_isa(isa, &*a, i0, nb, &*a, j0, nb, 0, j0, &mut acc);
             }
             for jj in 0..NR {
                 let j = j0 + jj;
@@ -902,5 +1317,60 @@ mod tests {
         assert_eq!(flops::gemm(10), 2000.0);
         assert_eq!(flops::trsm(10), 1000.0);
         assert!(flops::potrf(10) < flops::trsm(10));
+    }
+
+    #[test]
+    fn active_isa_is_cached_and_supported() {
+        let isa = active_isa();
+        assert_eq!(active_isa(), isa, "OnceLock selector must be stable");
+        let sup = supported_isas();
+        assert_eq!(sup[0], SimdIsa::Scalar, "scalar is always supported");
+        assert!(sup.contains(&isa), "{isa:?} not in {sup:?}");
+    }
+
+    #[test]
+    fn isa_names_are_the_bench_json_values() {
+        assert_eq!(SimdIsa::Scalar.name(), "scalar");
+        assert_eq!(SimdIsa::Avx2.name(), "avx2");
+        assert_eq!(SimdIsa::Avx512.name(), "avx512");
+        assert_eq!(SimdIsa::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn force_scalar_env_overrides_detection() {
+        // detect_isa reads the env each call; only active_isa caches.
+        std::env::set_var("PALLAS_FORCE_SCALAR", "1");
+        assert_eq!(detect_isa(), SimdIsa::Scalar);
+        std::env::set_var("PALLAS_FORCE_SCALAR", "0");
+        assert_eq!(detect_isa(), best_hardware_isa(), "0 means not forced");
+        std::env::remove_var("PALLAS_FORCE_SCALAR");
+        assert_eq!(detect_isa(), best_hardware_isa());
+    }
+
+    #[test]
+    fn f64_kernels_bit_identical_across_supported_isas() {
+        // the module-doc contract: every vector f64 tier reproduces the
+        // scalar oracle's bits (mul+add, ascending k, no FMA)
+        let nb = 32;
+        for isa in supported_isas() {
+            let a = rand_tile::<f64>(nb, 21, |x| x);
+            let b = rand_tile::<f64>(nb, 22, |x| x);
+            let mut c_isa = rand_tile::<f64>(nb, 23, |x| x);
+            let mut c_ref = c_isa.clone();
+            gemm_with_isa(&mut c_isa, &a, &b, nb, isa);
+            gemm_with_isa(&mut c_ref, &a, &b, nb, SimdIsa::Scalar);
+            for k in 0..nb * nb {
+                assert_eq!(c_isa[k].to_bits(), c_ref[k].to_bits(), "{isa:?} gemm [{k}]");
+            }
+
+            let a0 = spd_tile(nb, 24);
+            let mut l_isa = a0.clone();
+            let mut l_ref = a0.clone();
+            potrf_with_isa(&mut l_isa, nb, 0, isa).unwrap();
+            potrf_with_isa(&mut l_ref, nb, 0, SimdIsa::Scalar).unwrap();
+            for k in 0..nb * nb {
+                assert_eq!(l_isa[k].to_bits(), l_ref[k].to_bits(), "{isa:?} potrf [{k}]");
+            }
+        }
     }
 }

@@ -11,8 +11,9 @@
 //! defaults — see `rust/src/config.rs` and `configs/*.conf`):
 //!   --config FILE    key = value run configuration
 //!   --n N            sites (default 1024)         --nb NB   tile (64)
-//!   --variant V      dp | mp | dst | 3p | adaptive (mp)
-//!   --thick T        band thickness (2)           --sp-thick T  3p band
+//!   --variant V      dp | mp | dst | 3p | 4p | adaptive (mp)
+//!   --thick T        band thickness (2)           --sp-thick T  3p/4p band
+//!   --f16-thick T    4p f16 band edge (sp+dp)
 //!   --tolerance T    adaptive precision tolerance (1e-8)
 //!   --backend B      native | pjrt (native)       --workers W (all)
 //!   --policy P       fifo | lifo | cp | pf scheduler ready-queue policy
@@ -63,6 +64,7 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("variant", "variant"),
         ("thick", "diag_thick"),
         ("sp-thick", "sp_thick"),
+        ("f16-thick", "f16_thick"),
         ("tolerance", "tolerance"),
         ("max-evals", "max_evals"),
     ] {

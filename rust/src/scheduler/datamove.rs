@@ -75,10 +75,10 @@ impl DeviceModel {
     fn rate(&self, p: Precision) -> f64 {
         match p {
             Precision::F64 => self.dp_gflops,
-            // bf16 *arithmetic* is f32 (accumulation); only the storage
-            // footprint differs.  Pre-tensor-core devices had no bf16
-            // rate advantage anyway.
-            Precision::F32 | Precision::Bf16 => self.sp_gflops,
+            // bf16/f16 *arithmetic* is f32 (accumulation); only the
+            // storage footprint differs.  Pre-tensor-core devices had
+            // no half-precision rate advantage anyway.
+            Precision::F32 | Precision::F16 | Precision::Bf16 => self.sp_gflops,
         }
     }
 }

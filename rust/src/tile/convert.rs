@@ -1,14 +1,18 @@
 //! Precision conversion kernels — the paper's `dconv2s` / `sconv2d`
-//! (a.k.a. LAPACK `dlag2s`/`slag2d`) applied tile-wise, plus the bf16
-//! pack/unpack pair for the SSIX third storage level.
+//! (a.k.a. LAPACK `dlag2s`/`slag2d`) applied tile-wise, plus the
+//! bf16/f16 pack/unpack pairs for the reduced storage levels.
 //!
 //! These are the native analogs of the `lag2s`/`lag2d` HLO artifacts.
 //! With precision-native storage a conversion runs only at an explicit
-//! plan boundary (a `dconv2s`/`sconv2d` task or a lazy read in the
-//! solve/predict epilogue), never inside a compute codelet — each
-//! function is a straight cast loop that LLVM vectorizes.
+//! plan boundary (a `dconv2s`/`sconv2d`/`hconv2s`/`fconv2s` task or a
+//! lazy read in the solve/predict epilogue), never inside a compute
+//! codelet — each function is a straight cast loop that LLVM
+//! vectorizes, except the bf16 unpack which carries an explicit AVX2
+//! widening path (a pure bit shift, so the SIMD form is exact) behind
+//! the same cached ISA dispatch as the micro-kernels.
 
 use super::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
+use super::f16::{f16_bits_to_f32, f32_to_f16_bits};
 
 /// Demote f64 -> f32 (`dlag2s`).  Values beyond f32 range become ±inf —
 /// same contract as LAPACK (callers on covariance data never hit it).
@@ -40,12 +44,40 @@ pub fn pack_bf16(src: &[f32], dst: &mut [u16]) {
 }
 
 /// Unpack bf16 bit patterns to f32 (exact) — the working-precision read
-/// of a bf16 tile.
+/// of a bf16 tile.  Widening bf16 is a 16-bit left shift, so the AVX2
+/// form is bit-identical to the scalar loop; dispatch reuses the
+/// micro-kernels' cached ISA selection (`PALLAS_FORCE_SCALAR` included).
 #[inline]
 pub fn unpack_bf16(src: &[u16], dst: &mut [f32]) {
     debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        use crate::kernels::blas::{active_isa, SimdIsa};
+        if matches!(active_isa(), SimdIsa::Avx2 | SimdIsa::Avx512) {
+            // SAFETY: Avx2/Avx512 selection implies avx2 was detected
+            unsafe { unpack_bf16_avx2(src, dst) };
+            return;
+        }
+    }
     for (d, s) in dst.iter_mut().zip(src.iter()) {
         *d = bf16_bits_to_f32(*s);
+    }
+}
+
+/// AVX2 bf16 widening: 8 lanes of `u16 -> u32 << 16` per step, exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_bf16_avx2(src: &[u16], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = src.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let v = _mm_loadu_si128(src.as_ptr().add(c * 8) as *const __m128i);
+        let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(v));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(c * 8), _mm256_castsi256_ps(w));
+    }
+    for i in chunks * 8..n {
+        dst[i] = bf16_bits_to_f32(src[i]);
     }
 }
 
@@ -56,6 +88,36 @@ pub fn unpack_bf16_to_f64(src: &[u16], dst: &mut [f64]) {
     debug_assert_eq!(src.len(), dst.len());
     for (d, s) in dst.iter_mut().zip(src.iter()) {
         *d = bf16_bits_to_f32(*s) as f64;
+    }
+}
+
+/// Pack f32 values into IEEE binary16 bit patterns
+/// (round-to-nearest-even) — the storage write of an f16 tile.
+#[inline]
+pub fn pack_f16(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = f32_to_f16_bits(*s);
+    }
+}
+
+/// Unpack f16 bit patterns to f32 (exact) — the working-precision read
+/// of an f16 tile.
+#[inline]
+pub fn unpack_f16(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = f16_bits_to_f32(*s);
+    }
+}
+
+/// Unpack f16 bit patterns straight to f64 (exact) — the lazy
+/// promotion the solve/predict epilogue uses.
+#[inline]
+pub fn unpack_f16_to_f64(src: &[u16], dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = f16_bits_to_f32(*s) as f64;
     }
 }
 
@@ -99,6 +161,25 @@ mod tests {
         // unpacking to f64 widens the same values exactly
         let mut wide = vec![0.0f64; 128];
         unpack_bf16_to_f64(&bits, &mut wide);
+        for (b, w) in back.iter().zip(wide.iter()) {
+            assert_eq!(*b as f64, *w);
+        }
+    }
+
+    #[test]
+    fn f16_pack_unpack_is_quantization() {
+        use crate::tile::f16::quantize_f16;
+        // length 131 leaves a non-multiple-of-8 tail for the unpack loop
+        let src: Vec<f32> = (0..131).map(|i| (i as f32 * 0.119).sin() * 1.7).collect();
+        let mut bits = vec![0u16; 131];
+        let mut back = vec![0.0f32; 131];
+        pack_f16(&src, &mut bits);
+        unpack_f16(&bits, &mut back);
+        for (s, b) in src.iter().zip(back.iter()) {
+            assert_eq!(*b, quantize_f16(*s), "pack+unpack == quantize");
+        }
+        let mut wide = vec![0.0f64; 131];
+        unpack_f16_to_f64(&bits, &mut wide);
         for (b, w) in back.iter().zip(wide.iter()) {
             assert_eq!(*b as f64, *w);
         }

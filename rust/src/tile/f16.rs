@@ -1,0 +1,205 @@
+//! Software IEEE 754 binary16 — the fourth precision level of the
+//! ladder (f64 > f32 > f16 > bf16 by decreasing accuracy of storage).
+//!
+//! Same storage model as [`super::bf16`]: values are *stored* in f16
+//! (2 bytes, 10 stored mantissa bits) while arithmetic runs in f32 with
+//! the inputs rounded through f16 — matching GPU half-precision units
+//! with f32 accumulate.  f16 trades bf16's exponent range (which
+//! covariance tiles, bounded by the variance, never need) for three
+//! extra mantissa bits, so at equal 2-byte cost it sits strictly above
+//! bf16 on the accuracy axis and below f32 — the adaptive rule can pick
+//! it for tiles whose norm budget tolerates f16 roundoff but not bf16's.
+
+/// Machine epsilon of f16 storage: 10 stored mantissa bits put the next
+/// representable value after 1.0 at `1 + 2^-10`.  Used by the adaptive
+/// precision rule ([`crate::tile::PrecisionMap::adaptive`]).
+pub const F16_EPS: f64 = 1.0 / 1024.0;
+
+/// Round an f32 to the nearest IEEE binary16 (round-to-nearest-even),
+/// returned as the f16 bit pattern.  Handles overflow to ±inf, gradual
+/// underflow to f16 subnormals, and underflow to ±0.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN (quiet the NaN payload into the top mantissa bit)
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    if exp == 0 {
+        // f32 subnormal: far below the smallest f16 subnormal
+        return sign;
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        // beyond f16's max exponent: overflow to inf
+        return sign | 0x7c00;
+    }
+    if e >= -14 {
+        // normal f16: keep the top 10 mantissa bits, RNE on the rest
+        let m = (man >> 13) as u16;
+        let rest = man & 0x1fff;
+        let half = 0x1000;
+        let mut h = sign | (((e + 15) as u16) << 10) | m;
+        if rest > half || (rest == half && (m & 1) == 1) {
+            // carry may roll into the exponent (next binade / inf) —
+            // that is the correctly rounded result
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    if e >= -25 {
+        // f16 subnormal: integer significand is round(M * 2^(e+1)) with
+        // M the 24-bit f32 significand (implicit bit restored)
+        let m32 = man | 0x0080_0000;
+        let s = (-e - 1) as u32; // 14..=24
+        let kept = (m32 >> s) as u16;
+        let rem = m32 & ((1u32 << s) - 1);
+        let half = 1u32 << (s - 1);
+        let mut h = sign | kept;
+        if rem > half || (rem == half && (kept & 1) == 1) {
+            // rounding up from the largest subnormal yields 0x0400,
+            // the smallest normal — again the correct encoding
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    // below half the smallest subnormal: underflow to signed zero
+    sign
+}
+
+/// Expand an f16 bit pattern to f32 (exact — f16 ⊂ f32).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let man = (bits & 0x03ff) as u32;
+    let out = if exp == 0x1f {
+        // inf / NaN
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp != 0 {
+        // normal: rebias 15 -> 127
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man != 0 {
+        // subnormal: value = man * 2^-24, normalize into an f32 normal
+        let t = 31 - man.leading_zeros(); // top set bit, 0..=9
+        let exp_f32 = t + 103; // (t - 24) + 127
+        let man_f32 = (man ^ (1 << t)) << (23 - t);
+        sign | (exp_f32 << 23) | man_f32
+    } else {
+        sign // ±0
+    };
+    f32::from_bits(out)
+}
+
+/// Quantize an f32 value through f16 (the storage round-trip).
+#[inline]
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Quantize a whole buffer in place.
+pub fn quantize_f16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_f16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        // powers of two and small integers are exactly representable
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 1024.0, -0.25, 0.125] {
+            assert_eq!(quantize_f16(v), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_by_f16_eps() {
+        // 10 stored mantissa bits -> ulp = 2^-10, round-to-nearest
+        // error <= 2^-11 relative on normal values
+        let eps = 1.0 / 2048.0;
+        let mut x = 0.1f32;
+        for _ in 0..200 {
+            x = x * 1.05 + 0.013;
+            let q = quantize_f16(x);
+            assert!(((q - x) / x).abs() <= eps, "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn strictly_more_accurate_than_bf16_at_equal_bytes() {
+        use super::super::bf16::quantize_bf16;
+        // the ladder ordering that motivates the tier: at 2 bytes/value
+        // f16's worst normal-range relative error (2^-11) undercuts
+        // bf16's (2^-8)
+        let mut worst_f16 = 0.0f32;
+        let mut worst_bf16 = 0.0f32;
+        let mut x = 0.07f32;
+        for _ in 0..300 {
+            x = x * 1.04 + 0.009;
+            worst_f16 = worst_f16.max(((quantize_f16(x) - x) / x).abs());
+            worst_bf16 = worst_bf16.max(((quantize_bf16(x) - x) / x).abs());
+        }
+        assert!(worst_f16 < worst_bf16, "f16 {worst_f16} !< bf16 {worst_bf16}");
+        assert!(worst_f16 <= 1.0 / 2048.0);
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // f16 ulp near 1.0 is 2^-10; 1.0 + 2^-11 is exactly halfway —
+        // round-to-even picks 1.0
+        let halfway = 1.0f32 + 1.0 / 2048.0;
+        assert_eq!(quantize_f16(halfway), 1.0);
+        // just above halfway rounds up
+        let above = 1.0f32 + 1.0 / 2048.0 + 1.0 / 65536.0;
+        assert_eq!(quantize_f16(above), 1.0 + 1.0 / 1024.0);
+        // halfway above an odd significand rounds up to even
+        let odd_half = 1.0f32 + 1.5 / 1024.0;
+        assert_eq!(quantize_f16(odd_half), 1.0 + 2.0 / 1024.0);
+    }
+
+    #[test]
+    fn overflow_underflow_and_specials() {
+        assert!(quantize_f16(f32::NAN).is_nan());
+        assert_eq!(quantize_f16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_f16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // f16 max finite is 65504; beyond it overflows to inf
+        assert_eq!(quantize_f16(65504.0), 65504.0);
+        assert_eq!(quantize_f16(1e6), f32::INFINITY);
+        assert_eq!(quantize_f16(-1e6), f32::NEG_INFINITY);
+        // smallest normal and subnormals survive the round trip
+        let min_normal = f32::from_bits(0x3880_0000); // 2^-14
+        assert_eq!(quantize_f16(min_normal), min_normal);
+        let sub = 3.0 * f32::from_bits(0x3380_0000); // 3 * 2^-24
+        assert_eq!(quantize_f16(sub), sub);
+        // below half the smallest subnormal flushes to zero
+        assert_eq!(quantize_f16(1e-9), 0.0);
+        assert_eq!(quantize_f16(-1e-9), -0.0);
+    }
+
+    #[test]
+    fn monotone_on_a_sweep() {
+        // quantization must preserve (non-strict) ordering
+        let mut prev = f32::NEG_INFINITY;
+        let mut x = -100.0f32;
+        while x < 100.0 {
+            let q = quantize_f16(x);
+            assert!(q >= prev, "{x}: {q} < {prev}");
+            prev = q;
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn slice_quantize_idempotent() {
+        let mut xs = vec![0.1f32, 0.2, 0.3, -7.13, 42.0];
+        quantize_f16_slice(&mut xs);
+        for x in &xs {
+            assert_eq!(quantize_f16(*x), *x, "idempotent after one pass");
+        }
+    }
+}

@@ -29,10 +29,15 @@
 pub mod bf16;
 pub mod convert;
 pub mod dense;
+pub mod f16;
 
 pub use bf16::{quantize_bf16, quantize_bf16_slice, BF16_EPS};
-pub use convert::{demote, pack_bf16, promote, unpack_bf16, unpack_bf16_to_f64};
+pub use convert::{
+    demote, pack_bf16, pack_f16, promote, unpack_bf16, unpack_bf16_to_f64, unpack_f16,
+    unpack_f16_to_f64,
+};
 pub use dense::DenseMatrix;
+pub use f16::{quantize_f16, quantize_f16_slice, F16_EPS};
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicI32, Ordering};
@@ -41,11 +46,18 @@ use crate::error::Result;
 
 /// Floating-point precision of a tile's *active* representation.
 ///
-/// `Bf16` is the paper's SSIX third level: bf16 *storage* with f32
-/// arithmetic (MXU semantics) — see [`bf16`].
+/// Declaration order is coarsest-first, so the derived `Ord` ranks
+/// formats by increasing accuracy.  `Bf16` is the paper's SSIX third
+/// level: bf16 *storage* with f32 arithmetic (MXU semantics) — see
+/// [`bf16`].  `F16` is the fourth rung of the ladder: IEEE binary16
+/// storage with f32 arithmetic — same 2 bytes/value as bf16 but three
+/// extra mantissa bits (eps 2^-10 vs 2^-7), so the adaptive rule can
+/// demote tiles whose budget tolerates f16 roundoff but not bf16's
+/// without paying f32's 4 bytes — see [`f16`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Precision {
     Bf16,
+    F16,
     F32,
     F64,
 }
@@ -56,6 +68,7 @@ impl Precision {
         match self {
             Precision::F64 => 8,
             Precision::F32 => 4,
+            Precision::F16 => 2,
             Precision::Bf16 => 2,
         }
     }
@@ -66,6 +79,7 @@ impl Precision {
         match self {
             Precision::F64 => f64::EPSILON,
             Precision::F32 => f32::EPSILON as f64,
+            Precision::F16 => F16_EPS,
             Precision::Bf16 => BF16_EPS,
         }
     }
@@ -73,11 +87,16 @@ impl Precision {
     /// The adaptive tile-selection rule, shared by the whole-matrix map
     /// ([`PrecisionMap::adaptive`]) and the pipeline's per-column panel
     /// resolver so the two paths can never diverge: the cheapest storage
-    /// whose roundoff keeps `cal < tolerance / eps(prec)` (bf16 before
-    /// f32 before f64).
+    /// whose roundoff keeps `cal < tolerance / eps(prec)`, tried
+    /// coarsest-first (bf16 before f16 before f32 before f64).  Bf16 and
+    /// f16 both cost 2 bytes, so trying bf16 first preserves every
+    /// assignment the three-tier rule made; f16 then captures tiles that
+    /// previously had to pay for f32.
     pub fn pick_adaptive(cal: f64, tolerance: f64) -> Precision {
         if cal < tolerance / Precision::Bf16.eps() {
             Precision::Bf16
+        } else if cal < tolerance / Precision::F16.eps() {
+            Precision::F16
         } else if cal < tolerance / Precision::F32.eps() {
             Precision::F32
         } else {
@@ -124,8 +143,8 @@ impl PrecisionMap {
     ///
     /// For each off-diagonal tile the decision quantity is
     /// `cal = ||A_ij||_F * p / ||A||_F` and the tile takes the cheapest
-    /// precision with `cal < tolerance / eps(prec)` (bf16 before f32
-    /// before f64) — so a demoted tile's storage roundoff contributes at
+    /// precision with `cal < tolerance / eps(prec)` (bf16 before f16
+    /// before f32 before f64) — so a demoted tile's storage roundoff contributes at
     /// most ~`tolerance/p` of the global norm.  Diagonal tiles always
     /// stay `F64`: the potrf pivots live there.  `tolerance = 0` demotes
     /// nothing and reproduces the full-DP map.
@@ -206,30 +225,34 @@ impl PrecisionMap {
         self.prec.iter().map(|pr| nb * nb * pr.bytes()).sum()
     }
 
-    /// Tile counts per precision (the dp/sp/bf16 census bench reports).
+    /// Tile counts per precision (the dp/sp/f16/bf16 census bench reports).
     pub fn census(&self) -> PrecisionCensus {
         let mut c = PrecisionCensus::default();
         for &pr in &self.prec {
             match pr {
                 Precision::F64 => c.dp += 1,
                 Precision::F32 => c.sp += 1,
+                Precision::F16 => c.f16 += 1,
                 Precision::Bf16 => c.hp += 1,
             }
         }
         c
     }
 
-    /// The paper's DP(x%)-SP(y%)[-HP(z%)] label computed from the actual
-    /// assignment (rather than from a band formula).
+    /// The paper's DP(x%)-SP(y%)[-F16(w%)][-HP(z%)] label computed from
+    /// the actual assignment (rather than from a band formula).
     pub fn label(&self) -> String {
         let c = self.census();
         let total = c.total() as f64;
         let pct = |k: usize| (k as f64 / total * 100.0).round() as usize;
-        if c.hp > 0 {
-            format!("DP({}%)-SP({}%)-HP({}%)", pct(c.dp), pct(c.sp), pct(c.hp))
-        } else {
-            format!("DP({}%)-SP({}%)", pct(c.dp), pct(c.sp))
+        let mut s = format!("DP({}%)-SP({}%)", pct(c.dp), pct(c.sp));
+        if c.f16 > 0 {
+            s.push_str(&format!("-F16({}%)", pct(c.f16)));
         }
+        if c.hp > 0 {
+            s.push_str(&format!("-HP({}%)", pct(c.hp)));
+        }
+        s
     }
 }
 
@@ -240,6 +263,8 @@ pub struct PrecisionCensus {
     pub dp: usize,
     /// F32 tiles.
     pub sp: usize,
+    /// F16-storage tiles.
+    pub f16: usize,
     /// Bf16-storage tiles.
     pub hp: usize,
 }
@@ -247,18 +272,20 @@ pub struct PrecisionCensus {
 impl PrecisionCensus {
     /// Total tiles in the lower triangle.
     pub fn total(&self) -> usize {
-        self.dp + self.sp + self.hp
+        self.dp + self.sp + self.f16 + self.hp
     }
 }
 
 /// A tile's single native buffer: exactly one representation, in the
-/// precision the policy assigned.  Bf16 tiles are *packed* (2 bytes per
-/// element); arithmetic on them runs in f32 with an unpack/repack at the
-/// kernel boundary (MXU semantics — see [`bf16`]).
+/// precision the policy assigned.  Bf16 and f16 tiles are *packed*
+/// (2 bytes per element); arithmetic on them runs in f32 with an
+/// unpack/repack at the kernel boundary (MXU / half-unit semantics —
+/// see [`bf16`] and [`f16`]).
 #[derive(Clone, Debug)]
 pub enum TileBuf {
     F64(Vec<f64>),
     F32(Vec<f32>),
+    F16(Vec<u16>),
     Bf16(Vec<u16>),
 }
 
@@ -268,6 +295,7 @@ impl TileBuf {
         match self {
             TileBuf::F64(_) => Precision::F64,
             TileBuf::F32(_) => Precision::F32,
+            TileBuf::F16(_) => Precision::F16,
             TileBuf::Bf16(_) => Precision::Bf16,
         }
     }
@@ -277,6 +305,7 @@ impl TileBuf {
         match self {
             TileBuf::F64(v) => v.len(),
             TileBuf::F32(v) => v.len(),
+            TileBuf::F16(v) => v.len(),
             TileBuf::Bf16(v) => v.len(),
         }
     }
@@ -339,6 +368,22 @@ impl TileBuf {
             other => panic!("expected Bf16 tile, found {:?}", other.precision()),
         }
     }
+
+    /// Packed f16 bits (panics unless F16).
+    pub fn as_f16(&self) -> &[u16] {
+        match self {
+            TileBuf::F16(v) => v,
+            other => panic!("expected F16 tile, found {:?}", other.precision()),
+        }
+    }
+
+    /// Packed mutable f16 bits (panics unless F16).
+    pub fn as_f16_mut(&mut self) -> &mut [u16] {
+        match self {
+            TileBuf::F16(v) => v,
+            other => panic!("expected F16 tile, found {:?}", other.precision()),
+        }
+    }
 }
 
 /// One lower-triangle tile slot: the native buffer plus the transient
@@ -385,6 +430,11 @@ impl TileSlot {
                 convert::promote(v, scratch);
                 scratch
             }
+            TileBuf::F16(bits) => {
+                scratch.resize(bits.len(), 0.0);
+                convert::unpack_f16_to_f64(bits, scratch);
+                scratch
+            }
             TileBuf::Bf16(bits) => {
                 scratch.resize(bits.len(), 0.0);
                 convert::unpack_bf16_to_f64(bits, scratch);
@@ -416,6 +466,13 @@ impl TileSlot {
                 convert::pack_bf16(&sp, &mut bits);
                 TileBuf::Bf16(bits)
             }
+            (TileBuf::F64(v), Precision::F16) => {
+                let mut sp = vec![0.0f32; n];
+                convert::demote(v, &mut sp);
+                let mut bits = vec![0u16; n];
+                convert::pack_f16(&sp, &mut bits);
+                TileBuf::F16(bits)
+            }
             (TileBuf::F32(v), Precision::F64) => {
                 let mut out = vec![0.0f64; n];
                 convert::promote(v, &mut out);
@@ -426,6 +483,28 @@ impl TileSlot {
                 convert::pack_bf16(v, &mut bits);
                 TileBuf::Bf16(bits)
             }
+            (TileBuf::F32(v), Precision::F16) => {
+                let mut bits = vec![0u16; n];
+                convert::pack_f16(v, &mut bits);
+                TileBuf::F16(bits)
+            }
+            (TileBuf::F16(bits), Precision::F32) => {
+                let mut out = vec![0.0f32; n];
+                convert::unpack_f16(bits, &mut out);
+                TileBuf::F32(out)
+            }
+            (TileBuf::F16(bits), Precision::F64) => {
+                let mut out = vec![0.0f64; n];
+                convert::unpack_f16_to_f64(bits, &mut out);
+                TileBuf::F64(out)
+            }
+            (TileBuf::F16(bits), Precision::Bf16) => {
+                let mut sp = vec![0.0f32; n];
+                convert::unpack_f16(bits, &mut sp);
+                let mut out = vec![0u16; n];
+                convert::pack_bf16(&sp, &mut out);
+                TileBuf::Bf16(out)
+            }
             (TileBuf::Bf16(bits), Precision::F32) => {
                 let mut out = vec![0.0f32; n];
                 convert::unpack_bf16(bits, &mut out);
@@ -435,6 +514,13 @@ impl TileSlot {
                 let mut out = vec![0.0f64; n];
                 convert::unpack_bf16_to_f64(bits, &mut out);
                 TileBuf::F64(out)
+            }
+            (TileBuf::Bf16(bits), Precision::F16) => {
+                let mut sp = vec![0.0f32; n];
+                convert::unpack_bf16(bits, &mut sp);
+                let mut out = vec![0u16; n];
+                convert::pack_f16(&sp, &mut out);
+                TileBuf::F16(out)
             }
             // same-precision pairs returned early above
             _ => unreachable!("conversion to the current precision"),
@@ -648,6 +734,13 @@ impl TileMatrix {
                     d * d
                 })
                 .sum::<f64>(),
+            TileBuf::F16(bits) => bits
+                .iter()
+                .map(|&b| {
+                    let d = f16::f16_bits_to_f32(b) as f64;
+                    d * d
+                })
+                .sum::<f64>(),
             TileBuf::Bf16(bits) => bits
                 .iter()
                 .map(|&b| {
@@ -743,6 +836,16 @@ impl TileMatrix {
         self.tile_ids()
             .map(|t| match &self.tile(t).buf {
                 TileBuf::Bf16(v) => v.len() * 2,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Bytes held in packed f16 storage.
+    pub fn f16_bytes(&self) -> usize {
+        self.tile_ids()
+            .map(|t| match &self.tile(t).buf {
+                TileBuf::F16(v) => v.len() * 2,
                 _ => 0,
             })
             .sum()
@@ -904,12 +1007,70 @@ mod tests {
     #[test]
     fn precision_map_uniform_and_eps() {
         let m = PrecisionMap::uniform(3, Precision::F64);
-        assert_eq!(m.census(), PrecisionCensus { dp: 6, sp: 0, hp: 0 });
+        assert_eq!(m.census(), PrecisionCensus { dp: 6, sp: 0, f16: 0, hp: 0 });
         assert!(m.is_dp(2, 0));
         assert_eq!(m.label(), "DP(100%)-SP(0%)");
         assert!(Precision::F64.eps() < Precision::F32.eps());
-        assert!(Precision::F32.eps() < Precision::Bf16.eps());
+        assert!(Precision::F32.eps() < Precision::F16.eps());
+        assert!(Precision::F16.eps() < Precision::Bf16.eps());
+        assert_eq!(Precision::F16.eps(), F16_EPS);
         assert_eq!(Precision::Bf16.eps(), BF16_EPS);
+        // the two 2-byte formats share storage cost; the ladder is
+        // f64 > f32 > {f16, bf16} by bytes
+        assert_eq!(Precision::F16.bytes(), Precision::Bf16.bytes());
+        assert!(Precision::F16.bytes() < Precision::F32.bytes());
+    }
+
+    #[test]
+    fn f16_tier_census_label_and_conversions() {
+        // p = 4 band map touching every tier: diag F64, first off-diag
+        // F32, second F16, corner Bf16
+        let p = 4;
+        let map = PrecisionMap::from_fn(p, |i, j| match i - j {
+            0 => Precision::F64,
+            1 => Precision::F32,
+            2 => Precision::F16,
+            _ => Precision::Bf16,
+        });
+        let c = map.census();
+        assert_eq!(c, PrecisionCensus { dp: 4, sp: 3, f16: 2, hp: 1 });
+        assert_eq!(c.total(), p * (p + 1) / 2);
+        assert!(map.label().contains("F16("), "{}", map.label());
+        assert!(map.label().contains("HP("), "{}", map.label());
+        assert_eq!(map.storage_bytes(8), 8 * 8 * (4 * 8 + 3 * 4 + 2 * 2 + 2));
+
+        let nb = 4;
+        let mut tm = TileMatrix::zeros(nb * p, nb).unwrap();
+        for t in (0..p).flat_map(|j| (j..p).map(move |i| TileId::new(i, j))) {
+            for x in tm.tile_mut(t).buf.as_f64_mut().iter_mut() {
+                *x = 0.1234567890123;
+            }
+        }
+        tm.apply_precision_map(&map);
+        assert_eq!(tm.storage_map(), map);
+        assert_eq!(tm.f16_bytes(), 2 * nb * nb * 2);
+        assert_eq!(tm.hp_bytes(), nb * nb * 2);
+        // f16 storage rounds through binary16; reads promote exactly
+        let mut scratch = Vec::new();
+        let vals = tm.tile(TileId::new(2, 0)).f64_values(&mut scratch);
+        assert_eq!(vals[0], quantize_f16(0.1234567890123f64 as f32) as f64);
+        // f16 keeps strictly more mantissa than bf16 on this value
+        let bf = quantize_bf16(0.1234567890123f64 as f32) as f64;
+        let exact = 0.1234567890123f64;
+        assert!((vals[0] - exact).abs() < (bf - exact).abs());
+        // every cross-tier conversion is reachable: cycle one tile
+        // F16 -> Bf16 -> F16 -> F32 -> F16 -> F64
+        let t = TileId::new(2, 0);
+        for prec in [
+            Precision::Bf16,
+            Precision::F16,
+            Precision::F32,
+            Precision::F16,
+            Precision::F64,
+        ] {
+            tm.tile_mut(t).convert_to(prec);
+            assert_eq!(tm.tile(t).precision(), prec);
+        }
     }
 
     #[test]

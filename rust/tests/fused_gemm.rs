@@ -145,7 +145,9 @@ fn per_task_unpack_baseline(plan: &CholeskyPlan) -> u64 {
             }
             KernelCall::SyrkDp { j, k } => match map.get(j, j) {
                 Precision::F64 => {}
-                Precision::F32 => {
+                // this baseline models bf16-only maps (diagonals are
+                // never F16 in the plans exercised here)
+                Precision::F32 | Precision::F16 => {
                     if is_hp(j, k) {
                         count += 1;
                     }

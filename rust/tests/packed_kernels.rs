@@ -6,9 +6,19 @@
 //! ascending-k order, so there is no tolerance to hide behind — and
 //! within a small eps in f32 (same argument, with the looser bound
 //! guarding against platform FMA contraction differences).
+//!
+//! The SIMD dispatch layer gets the same treatment: every ISA tier the
+//! hardware supports (`supported_isas()`) must produce **bit-identical**
+//! f64 results to the `SimdIsa::Scalar` oracle — the vector f64
+//! micro-kernels deliberately use separate mul+add (no FMA) and keep
+//! the scalar kernel's ascending-k per-lane reduction order, so
+//! `to_bits` equality is the contract, not a tolerance.  The f32 vector
+//! kernels *do* fuse (FMA), so they carry the documented
+//! `16 * eps * nb` accuracy bound instead.
 
 use mpcholesky::kernels::blas::{
-    gemm, gemm_simple, potrf, potrf_simple, syrk, syrk_simple, trsm, trsm_simple,
+    active_isa, gemm, gemm_simple, gemm_with_isa, potrf, potrf_simple, potrf_with_isa,
+    supported_isas, syrk, syrk_simple, syrk_with_isa, trsm, trsm_simple, trsm_with_isa, SimdIsa,
 };
 use mpcholesky::rng::Xoshiro256pp;
 
@@ -49,8 +59,12 @@ fn assert_bitwise(got: &[f64], want: &[f64], what: &str, nb: usize) {
 fn assert_close_f32(got: &[f32], want: &[f32], what: &str, nb: usize) {
     for (k, (x, y)) in got.iter().zip(want.iter()).enumerate() {
         let scale = y.abs().max(1.0);
+        // 16*eps*nb: the documented f32 SIMD accuracy bound — vector
+        // f32 kernels use FMA (one rounding per mul+add instead of
+        // two), so their reductions are *more* accurate but not
+        // bit-identical to the scalar two-rounding order
         assert!(
-            (x - y).abs() <= 8.0 * f32::EPSILON * scale * nb as f32,
+            (x - y).abs() <= 16.0 * f32::EPSILON * scale * nb as f32,
             "{what} nb={nb} [{k}]: {x} vs {y}"
         );
     }
@@ -143,6 +157,93 @@ fn packed_potrf_matches_oracle_bitwise_f64_and_eps_f32() {
         potrf(&mut lp32, nb, 0).unwrap();
         potrf_simple(&mut lo32, nb, 0).unwrap();
         assert_close_f32(&lp32, &lo32, "potrf/f32", nb);
+    }
+}
+
+#[test]
+fn active_isa_is_one_of_the_supported_tiers() {
+    let supported = supported_isas();
+    assert!(supported.contains(&SimdIsa::Scalar), "scalar tier always available");
+    assert!(
+        supported.contains(&active_isa()),
+        "dispatch picked {:?}, not in supported set {supported:?}",
+        active_isa()
+    );
+}
+
+#[test]
+fn simd_f64_kernels_bit_identical_to_scalar_oracle_across_isas() {
+    // the tentpole contract: per ISA tier, per tile size (packed path
+    // and odd fallback alike), f64 gemm/syrk/trsm/potrf must agree with
+    // the scalar micro-kernel to the last bit
+    for isa in supported_isas() {
+        for &nb in &SIZES {
+            let a = rand_tile(nb, 1000 + nb as u64);
+            let b = rand_tile(nb, 1100 + nb as u64);
+            let c0 = rand_tile(nb, 1200 + nb as u64);
+            let what = format!("gemm[{isa:?}]");
+
+            let mut c_isa = c0.clone();
+            let mut c_ref = c0.clone();
+            gemm_with_isa(&mut c_isa, &a, &b, nb, isa);
+            gemm_with_isa(&mut c_ref, &a, &b, nb, SimdIsa::Scalar);
+            assert_bitwise(&c_isa, &c_ref, &what, nb);
+
+            let mut s_isa = c0.clone();
+            let mut s_ref = c0.clone();
+            syrk_with_isa(&mut s_isa, &a, nb, isa);
+            syrk_with_isa(&mut s_ref, &a, nb, SimdIsa::Scalar);
+            assert_bitwise(&s_isa, &s_ref, &format!("syrk[{isa:?}]"), nb);
+
+            let mut l = spd_tile(nb, 1300 + nb as u64);
+            potrf_simple(&mut l, nb, 0).unwrap();
+            let mut b_isa = b.clone();
+            let mut b_ref = b.clone();
+            trsm_with_isa(&l, &mut b_isa, nb, isa);
+            trsm_with_isa(&l, &mut b_ref, nb, SimdIsa::Scalar);
+            assert_bitwise(&b_isa, &b_ref, &format!("trsm[{isa:?}]"), nb);
+
+            let spd = spd_tile(nb, 1400 + nb as u64);
+            let mut p_isa = spd.clone();
+            let mut p_ref = spd.clone();
+            potrf_with_isa(&mut p_isa, nb, 0, isa).unwrap();
+            potrf_with_isa(&mut p_ref, nb, 0, SimdIsa::Scalar).unwrap();
+            assert_bitwise(&p_isa, &p_ref, &format!("potrf[{isa:?}]"), nb);
+        }
+    }
+}
+
+#[test]
+fn simd_f32_kernels_within_documented_bound_across_isas() {
+    // f32 vector kernels fuse mul+add (FMA): not bit-identical to the
+    // scalar order, but inside the documented 16*eps*nb envelope
+    for isa in supported_isas() {
+        for &nb in &SIZES {
+            let a = to_f32(&rand_tile(nb, 1500 + nb as u64));
+            let b = to_f32(&rand_tile(nb, 1600 + nb as u64));
+            let c0 = to_f32(&rand_tile(nb, 1700 + nb as u64));
+
+            let mut c_isa = c0.clone();
+            let mut c_ref = c0.clone();
+            gemm_with_isa(&mut c_isa, &a, &b, nb, isa);
+            gemm_with_isa(&mut c_ref, &a, &b, nb, SimdIsa::Scalar);
+            assert_close_f32(&c_isa, &c_ref, &format!("gemm/f32[{isa:?}]"), nb);
+
+            let mut s_isa = c0.clone();
+            let mut s_ref = c0;
+            syrk_with_isa(&mut s_isa, &a, nb, isa);
+            syrk_with_isa(&mut s_ref, &a, nb, SimdIsa::Scalar);
+            assert_close_f32(&s_isa, &s_ref, &format!("syrk/f32[{isa:?}]"), nb);
+
+            let mut l64 = spd_tile(nb, 1800 + nb as u64);
+            potrf_simple(&mut l64, nb, 0).unwrap();
+            let l = to_f32(&l64);
+            let mut b_isa = b.clone();
+            let mut b_ref = b;
+            trsm_with_isa(&l, &mut b_isa, nb, isa);
+            trsm_with_isa(&l, &mut b_ref, nb, SimdIsa::Scalar);
+            assert_close_f32(&b_isa, &b_ref, &format!("trsm/f32[{isa:?}]"), nb);
+        }
     }
 }
 

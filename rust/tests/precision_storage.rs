@@ -15,7 +15,8 @@
 
 use mpcholesky::matern::matern_matrix;
 use mpcholesky::prelude::*;
-use mpcholesky::tile::DenseMatrix;
+use mpcholesky::tile::f16::{f16_bits_to_f32, f32_to_f16_bits};
+use mpcholesky::tile::{DenseMatrix, Precision, PrecisionMap};
 
 fn matern_dense_with_range(n: usize, seed: u64, range: f64) -> DenseMatrix {
     let mut r = Xoshiro256pp::seed_from_u64(seed);
@@ -191,4 +192,121 @@ fn three_precision_resident_counts_packed_bf16() {
     assert!(tiles.resident_bytes() < tiles.full_dp_bytes());
     let err = backward_error(&tiles, &a);
     assert!(err < 0.1, "three-precision backward error {err}");
+}
+
+#[test]
+fn four_precision_resident_counts_packed_f16() {
+    // p = 5 with dp_thick = 2, sp_thick = 3, f16_thick = 4: 9 f64
+    // tiles, 3 f32 tiles, 2 packed-f16 tiles (3,0) and (4,1), and one
+    // packed-bf16 tile (4,0) — both 2-byte rings accounted separately
+    let (n, nb) = (640, 128);
+    let a = matern_dense_with_range(n, 6, 0.05);
+    let sched = Scheduler::with_workers(2);
+    let mut tiles = TileMatrix::from_dense(&a, nb).unwrap();
+    let plan = factorize_tiles(
+        &mut tiles,
+        Variant::FourPrecision { dp_thick: 2, sp_thick: 3, f16_thick: 4 },
+        &NativeBackend,
+        &sched,
+    )
+    .unwrap();
+    let census = plan.census();
+    assert_eq!((census.dp, census.sp, census.f16, census.hp), (9, 3, 2, 1), "{census:?}");
+    let nn = nb * nb;
+    assert_eq!(tiles.f16_bytes(), 2 * nn * 2, "two packed f16 tiles");
+    assert_eq!(tiles.hp_bytes(), nn * 2, "one packed bf16 tile");
+    assert_eq!(tiles.sp_bytes(), 3 * nn * 4);
+    assert_eq!(tiles.dp_bytes(), 9 * nn * 8);
+    assert_eq!(tiles.resident_bytes(), plan.map.storage_bytes(nb));
+    assert!(tiles.resident_bytes() < tiles.full_dp_bytes());
+    // f16's three extra mantissa bits: the four-tier factor must stay
+    // at least as accurate as the all-bf16-tail three-tier band above
+    let err = backward_error(&tiles, &a);
+    assert!(err < 0.1, "four-precision backward error {err}");
+}
+
+#[test]
+fn precision_ladder_bytes_and_eps_are_monotone() {
+    // the four-tier ladder: bytes non-increasing, storage roundoff
+    // strictly increasing, f64 > f32 > f16 > bf16
+    let ladder =
+        [Precision::F64, Precision::F32, Precision::F16, Precision::Bf16];
+    for w in ladder.windows(2) {
+        assert!(w[0].bytes() >= w[1].bytes(), "{w:?} bytes out of order");
+        assert!(w[0].eps() < w[1].eps(), "{w:?} eps out of order");
+    }
+    assert_eq!(Precision::F16.bytes(), 2);
+    assert_eq!(Precision::Bf16.bytes(), 2);
+}
+
+#[test]
+fn f16_is_exactly_embedded_in_f32() {
+    // every non-NaN f16 bit pattern — all normals, all subnormals, both
+    // zeros, both infinities — expands to f32 and re-encodes to the
+    // identical bits: the nesting f16 ⊂ f32 (⊂ f64) is exact, so
+    // promote/demote chains through the ladder lose nothing on values
+    // already representable downstairs
+    for bits in 0u16..=u16::MAX {
+        let x = f16_bits_to_f32(bits);
+        if x.is_nan() {
+            continue;
+        }
+        assert_eq!(
+            f32_to_f16_bits(x),
+            bits,
+            "bits {bits:#06x} -> {x} failed to round-trip"
+        );
+        // and the f64 leg of the nesting: through f64 and back to f32
+        // is the identity on f16-representable values
+        assert_eq!((x as f64) as f32, x, "bits {bits:#06x}");
+    }
+}
+
+#[test]
+fn adaptive_rule_walks_the_four_tier_ladder() {
+    // pick_adaptive at fixed cal = 1: loosening the tolerance walks
+    // F64 -> F32 -> F16 -> Bf16, each tier claimed at the documented
+    // eps threshold (f32 2^-23, f16 2^-10, bf16 2^-7)
+    assert_eq!(Precision::pick_adaptive(1.0, 1e-8), Precision::F64);
+    assert_eq!(Precision::pick_adaptive(1.0, 1e-6), Precision::F32);
+    assert_eq!(Precision::pick_adaptive(1.0, 1e-3), Precision::F16);
+    assert_eq!(Precision::pick_adaptive(1.0, 1e-2), Precision::Bf16);
+    // tier is monotone in tolerance: a looser budget never buys a more
+    // expensive format
+    let mut tol = 1e-10;
+    let mut prev = Precision::pick_adaptive(1.0, tol);
+    while tol < 1.0 {
+        tol *= 1.5;
+        let now = Precision::pick_adaptive(1.0, tol);
+        assert!(now.eps() >= prev.eps(), "tier regressed at tol {tol}");
+        prev = now;
+    }
+    assert_eq!(prev, Precision::Bf16, "sweep must end at bf16");
+}
+
+#[test]
+fn adaptive_map_reaches_f16_and_never_demotes_diagonals() {
+    // a factor-2 tolerance sweep is denser than the factor-8 window
+    // (tol*128 <= cal < tol*1024) in which a tile takes f16, so some
+    // tolerance must land at least one off-diagonal tile on the f16
+    // tier; diagonals stay F64 at every tolerance (potrf pivots)
+    let (n, nb) = (640, 128);
+    let a = matern_dense_with_range(n, 9, 0.05);
+    let tiles = TileMatrix::from_dense(&a, nb).unwrap();
+    let p = tiles.p();
+    let mut saw_f16 = false;
+    let mut prev_bytes = usize::MAX;
+    let mut tol = 1e-7;
+    while tol < 0.2 {
+        let map = PrecisionMap::adaptive(&tiles, tol);
+        for k in 0..p {
+            assert_eq!(map.get(k, k), Precision::F64, "diagonal ({k},{k}) demoted at tol {tol}");
+        }
+        let bytes = map.storage_bytes(nb);
+        assert!(bytes <= prev_bytes, "footprint grew when tolerance loosened to {tol}");
+        prev_bytes = bytes;
+        saw_f16 |= map.census().f16 > 0;
+        tol *= 2.0;
+    }
+    assert!(saw_f16, "no tolerance in the sweep reached the f16 tier");
 }

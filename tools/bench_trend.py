@@ -83,25 +83,31 @@ def main():
         print("bench_trend: no usable snapshots", file=sys.stderr)
         return 1
 
-    # case key -> {snapshot label -> row}
+    # case key -> {snapshot label -> row}; fused and unfused runs of the
+    # same (variant, nb) are distinct cases so the head-to-head
+    # comparison reads off adjacent rows instead of clobbering a column
     cases = {}
     for label, data in snapshots:
         for row in data["results"]:
-            cases.setdefault((row["variant"], row["nb"]), {})[label] = row
+            key = (row["variant"], row["nb"], bool(row.get("fused_gemm", False)))
+            cases.setdefault(key, {})[label] = row
 
     labels = [label for label, _ in snapshots]
     lines = [
         "# bench_cholesky trend",
         "",
-        "GFLOP/s per (variant, nb) case; parenthesized percentage is the",
-        "solve/log-det epilogue's share of the run's wall time.",
+        "GFLOP/s per (variant, nb, fused) case; parenthesized percentage is",
+        "the solve/log-det epilogue's share of the run's wall time.  The",
+        "`fused` column separates fused-GemmBatch lowering from per-update",
+        "gemm tasks (`--fused` bench legs).",
         "",
-        "| variant | nb | " + " | ".join(labels) + " |",
-        "|---|---|" + "---|" * len(labels),
+        "| variant | nb | fused | " + " | ".join(labels) + " |",
+        "|---|---|---|" + "---|" * len(labels),
     ]
-    for (variant, nb), per_snap in sorted(cases.items()):
+    for (variant, nb, fused), per_snap in sorted(cases.items()):
         cells = [cell(per_snap[l]) if l in per_snap else "-" for l in labels]
-        lines.append(f"| {variant} | {nb} | " + " | ".join(cells) + " |")
+        fused_mark = "yes" if fused else "no"
+        lines.append(f"| {variant} | {nb} | {fused_mark} | " + " | ".join(cells) + " |")
     lines.append("")
 
     Path(args.out).write_text("\n".join(lines))
