@@ -168,7 +168,7 @@ fn policy_ablation() {
         SchedulingPolicy::PrecisionFrontier,
     ] {
         let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
-        let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true });
+        let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true, ..Default::default() });
         let mut util = 0.0;
         let times = mpcholesky::bench::time_reps(
             || {

@@ -29,9 +29,11 @@
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
 use crate::kernels::TileBackend;
 use crate::matern::{matern_block, Location, MaternParams, Metric};
 use crate::scheduler::graph::{Access, ResourceId};
@@ -165,29 +167,30 @@ fn f32_view<'a>(
     scratch: &'a mut Vec<f32>,
     stats: &ExecStats,
     what: &str,
-) -> &'a [f32] {
+) -> Result<&'a [f32]> {
     match &slot.buf {
-        TileBuf::F32(v) => v,
+        TileBuf::F32(v) => Ok(v),
         TileBuf::Bf16(bits) => {
             if let Some(cached) = slot.f32_scratch.as_deref() {
-                return cached;
+                return Ok(cached);
             }
             let out = resized(scratch, bits.len());
             decode_timed(stats, || convert::unpack_bf16(bits, &mut *out));
-            out
+            Ok(out)
         }
         TileBuf::F16(bits) => {
             if let Some(cached) = slot.f32_scratch.as_deref() {
-                return cached;
+                return Ok(cached);
             }
             let out = resized(scratch, bits.len());
             decode_timed_f16(stats, || convert::unpack_f16(bits, &mut *out));
-            out
+            Ok(out)
         }
-        TileBuf::F64(_) => slot
-            .f32_scratch
-            .as_deref()
-            .unwrap_or_else(|| panic!("{what}: f64 tile lacks its dconv2s view (plan bug)")),
+        // reachable by running a plan against tiles prepared under a
+        // different PrecisionMap, hence an error rather than a panic
+        TileBuf::F64(_) => slot.f32_scratch.as_deref().ok_or_else(|| {
+            Error::PlanMismatch(format!("{what}: f64 tile lacks its dconv2s view"))
+        }),
     }
 }
 
@@ -241,13 +244,13 @@ fn f32_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f32>, stats: &ExecSt
 
 /// f64 view of an operand tile for DP compute: the native f64 buffer or
 /// the plan's `sconv2d` view of a reduced tile.
-fn f64_view<'a>(slot: &'a TileSlot, what: &str) -> &'a [f64] {
+fn f64_view<'a>(slot: &'a TileSlot, what: &str) -> Result<&'a [f64]> {
     match &slot.buf {
-        TileBuf::F64(v) => v,
-        _ => slot
-            .f64_scratch
-            .as_deref()
-            .unwrap_or_else(|| panic!("{what}: reduced tile lacks its sconv2d view (plan bug)")),
+        TileBuf::F64(v) => Ok(v),
+        // see f32_view: a plan/storage mismatch, not necessarily a crate bug
+        _ => slot.f64_scratch.as_deref().ok_or_else(|| {
+            Error::PlanMismatch(format!("{what}: reduced tile lacks its sconv2d view"))
+        }),
     }
 }
 
@@ -260,7 +263,7 @@ fn demote_view(slot: &mut TileSlot, nn: usize) {
 }
 
 /// `sconv2d`: refresh the f64 conversion view of a reduced tile.
-fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) {
+fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) -> Result<()> {
     let TileSlot { buf, f64_scratch, .. } = slot;
     let dst = f64_scratch.get_or_insert_with(|| vec![0.0; nn]);
     match buf {
@@ -271,7 +274,23 @@ fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) {
         TileBuf::F16(bits) => {
             decode_timed_f16(stats, || convert::unpack_f16_to_f64(bits, &mut dst[..]))
         }
-        TileBuf::F64(_) => unreachable!("sconv2d scheduled on an f64 tile (plan bug)"),
+        TileBuf::F64(_) => {
+            return Err(Error::PlanMismatch("sconv2d scheduled on an f64 tile".into()))
+        }
+    }
+    Ok(())
+}
+
+/// Generated covariance values must be finite *before* any demotion —
+/// a bad theta/nugget/location combination would otherwise surface
+/// tiles away from its origin as a NaN pivot.  Errors name the tile.
+fn check_generated_finite(vals: &[f64], i: usize, j: usize) -> Result<()> {
+    match vals.iter().position(|v| !v.is_finite()) {
+        None => Ok(()),
+        Some(at) => Err(Error::InvalidArgument(format!(
+            "Generate({i},{j}): non-finite covariance value at element {at} \
+             (check theta/nugget/locations)"
+        ))),
     }
 }
 
@@ -286,11 +305,21 @@ pub struct TileExecutor<'a, B: TileBackend + ?Sized> {
     pub pipe: Option<PipelineContext<'a>>,
     /// bf16 decode counters accumulated across the run (all workers).
     pub stats: ExecStats,
+    /// Fault-injection plan (ambient `PALLAS_INJECT` by default):
+    /// codelet-level forced errors/panics and decode-time corruption.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
     pub fn new(tiles: &'a TileMatrix, backend: &'a B) -> Self {
-        Self { tiles, backend, gen: None, pipe: None, stats: ExecStats::default() }
+        Self {
+            tiles,
+            backend,
+            gen: None,
+            pipe: None,
+            stats: ExecStats::default(),
+            faults: crate::fault::env_plan(),
+        }
     }
 
     pub fn with_generation(mut self, gen: GenContext<'a>) -> Self {
@@ -303,11 +332,23 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
         self
     }
 
+    /// Override the ambient fault plan (`None` disables injection even
+    /// when `PALLAS_INJECT` is set — tests shield themselves this way).
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Execute one call.  `accesses` is the task's declared access list —
     /// used purely for the debug-mode guard protocol (tile resources
     /// only; RHS/scalar/prediction exclusivity rides the same DAG
     /// ordering and is exercised by the scheduler-coverage tests).
     pub fn execute(&self, sc: &SizedCall, accesses: &[(ResourceId, Access)]) -> Result<()> {
+        if let Some(fp) = &self.faults {
+            // forced error/panic hooks fire before any guard is taken,
+            // so an injected failure never leaks guard state
+            fp.on_call(sc.call.name())?;
+        }
         for &(res, m) in accesses {
             if let ResourceId::Tile(t) = res {
                 self.tiles.guard_acquire(t, m == Access::Write);
@@ -322,8 +363,10 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
         r
     }
 
-    fn pipeline(&self) -> &PipelineContext<'a> {
-        self.pipe.as_ref().expect("pipeline task scheduled without PipelineContext")
+    fn pipeline(&self) -> Result<&PipelineContext<'a>> {
+        self.pipe.as_ref().ok_or_else(|| {
+            Error::PlanMismatch("pipeline task scheduled without PipelineContext".into())
+        })
     }
 
     fn execute_inner(&self, sc: &SizedCall) -> Result<()> {
@@ -339,10 +382,11 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
             unsafe {
                 match sc.call {
                     KernelCall::Generate { i, j } => {
-                        let g = self
-                            .gen
-                            .as_ref()
-                            .expect("Generate task scheduled without GenContext");
+                        let g = self.gen.as_ref().ok_or_else(|| {
+                            Error::PlanMismatch(
+                                "Generate task scheduled without GenContext".into(),
+                            )
+                        })?;
                         let slot = tm.tile_ptr(TileId::new(i, j));
                         let x1 = &g.locations[i * nb..(i + 1) * nb];
                         let x2 = &g.locations[j * nb..(j + 1) * nb];
@@ -354,6 +398,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                         buf[d + d * nb] += g.nugget;
                                     }
                                 }
+                                check_generated_finite(buf, i, j)?;
                                 // dynamic adaptive pipelines: record the
                                 // generation-time Frobenius norm for the
                                 // per-column ResolvePanel rule (tiles are
@@ -371,6 +416,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                         tmp[d + d * nb] += g.nugget;
                                     }
                                 }
+                                check_generated_finite(tmp, i, j)?;
                                 convert::demote(tmp, buf);
                             }
                             TileBuf::Bf16(bits) => {
@@ -381,6 +427,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                         tmp[d + d * nb] += g.nugget;
                                     }
                                 }
+                                check_generated_finite(tmp, i, j)?;
                                 let sp = resized(&mut scr.a32, nn);
                                 convert::demote(tmp, sp);
                                 convert::pack_bf16(sp, bits);
@@ -393,6 +440,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                         tmp[d + d * nb] += g.nugget;
                                     }
                                 }
+                                check_generated_finite(tmp, i, j)?;
                                 let sp = resized(&mut scr.a32, nn);
                                 convert::demote(tmp, sp);
                                 convert::pack_f16(sp, bits);
@@ -432,7 +480,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         Ok(())
                     }
                     KernelCall::PromoteTile { i, k } => {
-                        promote_view(tm.tile_ptr(TileId::new(i, k)), nn, &self.stats);
+                        promote_view(tm.tile_ptr(TileId::new(i, k)), nn, &self.stats)?;
                         Ok(())
                     }
                     KernelCall::DecodeBf16 { i, k } => {
@@ -444,6 +492,9 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let bits = buf.as_bf16();
                         let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
                         decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut dst[..]));
+                        if let Some(fp) = &self.faults {
+                            fp.corrupt_decoded(i, k, dst);
+                        }
                         Ok(())
                     }
                     KernelCall::DecodeF16 { i, k } => {
@@ -454,6 +505,9 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let bits = buf.as_f16();
                         let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
                         decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut dst[..]));
+                        if let Some(fp) = &self.faults {
+                            fp.corrupt_decoded(i, k, dst);
+                        }
                         Ok(())
                     }
                     KernelCall::DropScratch { i, k } => {
@@ -463,13 +517,13 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                     KernelCall::TrsmDp { i, k } => {
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        self.backend.trsm_f64(f64_view(l, "dtrsm"), b.buf.as_f64_mut(), nb);
+                        self.backend.trsm_f64(f64_view(l, "dtrsm")?, b.buf.as_f64_mut(), nb);
                         Ok(())
                     }
                     KernelCall::TrsmSp { i, k } => {
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        let lv = f32_view(l, &mut scr.a32, &self.stats, "strsm");
+                        let lv = f32_view(l, &mut scr.a32, &self.stats, "strsm")?;
                         // the result stays resident in f32 — no promotion
                         self.backend.trsm_f32(lv, b.buf.as_f32_mut(), nb);
                         Ok(())
@@ -478,7 +532,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // SSIX third level: f32 compute, bf16 storage
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        let lv = f32_view(l, &mut scr.a32, &self.stats, "htrsm");
+                        let lv = f32_view(l, &mut scr.a32, &self.stats, "htrsm")?;
                         let bits = b.buf.as_bf16_mut();
                         let bv = resized(&mut scr.b32, nn);
                         decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *bv));
@@ -490,7 +544,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // fourth level: f32 compute, IEEE f16 storage
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        let lv = f32_view(l, &mut scr.a32, &self.stats, "ftrsm");
+                        let lv = f32_view(l, &mut scr.a32, &self.stats, "ftrsm")?;
                         let bits = b.buf.as_f16_mut();
                         let bv = resized(&mut scr.b32, nn);
                         decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut *bv));
@@ -503,21 +557,21 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let c = tm.tile_ptr(TileId::new(j, j));
                         match &mut c.buf {
                             TileBuf::F64(cb) => {
-                                self.backend.syrk_f64(cb, f64_view(a, "dsyrk"), nb);
+                                self.backend.syrk_f64(cb, f64_view(a, "dsyrk")?, nb);
                             }
                             TileBuf::F32(cb) => {
-                                let av = f32_view(a, &mut scr.a32, &self.stats, "ssyrk");
+                                let av = f32_view(a, &mut scr.a32, &self.stats, "ssyrk")?;
                                 self.backend.syrk_f32(cb, av, nb);
                             }
                             TileBuf::Bf16(bits) => {
-                                let av = f32_view(a, &mut scr.a32, &self.stats, "hsyrk");
+                                let av = f32_view(a, &mut scr.a32, &self.stats, "hsyrk")?;
                                 let cv = resized(&mut scr.c32, nn);
                                 decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
                                 self.backend.syrk_f32(cv, av, nb);
                                 convert::pack_bf16(&*cv, bits);
                             }
                             TileBuf::F16(bits) => {
-                                let av = f32_view(a, &mut scr.a32, &self.stats, "fsyrk");
+                                let av = f32_view(a, &mut scr.a32, &self.stats, "fsyrk")?;
                                 let cv = resized(&mut scr.c32, nn);
                                 decode_timed_f16(&self.stats, || {
                                     convert::unpack_f16(bits, &mut *cv)
@@ -534,8 +588,8 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let c = tm.tile_ptr(TileId::new(i, j));
                         self.backend.gemm_f64(
                             c.buf.as_f64_mut(),
-                            f64_view(a, "dgemm"),
-                            f64_view(b, "dgemm"),
+                            f64_view(a, "dgemm")?,
+                            f64_view(b, "dgemm")?,
                             nb,
                         );
                         Ok(())
@@ -544,8 +598,8 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let a = tm.tile_ptr(TileId::new(i, k));
                         let b = tm.tile_ptr(TileId::new(j, k));
                         let c = tm.tile_ptr(TileId::new(i, j));
-                        let av = f32_view(a, &mut scr.a32, &self.stats, "sgemm");
-                        let bv = f32_view(b, &mut scr.b32, &self.stats, "sgemm");
+                        let av = f32_view(a, &mut scr.a32, &self.stats, "sgemm")?;
+                        let bv = f32_view(b, &mut scr.b32, &self.stats, "sgemm")?;
                         // accumulate in the resident f32 buffer — no
                         // per-task promotion back to f64
                         self.backend.gemm_f32(c.buf.as_f32_mut(), av, bv, nb);
@@ -555,8 +609,8 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let a = tm.tile_ptr(TileId::new(i, k));
                         let b = tm.tile_ptr(TileId::new(j, k));
                         let c = tm.tile_ptr(TileId::new(i, j));
-                        let av = f32_view(a, &mut scr.a32, &self.stats, "hgemm");
-                        let bv = f32_view(b, &mut scr.b32, &self.stats, "hgemm");
+                        let av = f32_view(a, &mut scr.a32, &self.stats, "hgemm")?;
+                        let bv = f32_view(b, &mut scr.b32, &self.stats, "hgemm")?;
                         let bits = c.buf.as_bf16_mut();
                         let cv = resized(&mut scr.c32, nn);
                         decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut *cv));
@@ -568,8 +622,8 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let a = tm.tile_ptr(TileId::new(i, k));
                         let b = tm.tile_ptr(TileId::new(j, k));
                         let c = tm.tile_ptr(TileId::new(i, j));
-                        let av = f32_view(a, &mut scr.a32, &self.stats, "fgemm");
-                        let bv = f32_view(b, &mut scr.b32, &self.stats, "fgemm");
+                        let av = f32_view(a, &mut scr.a32, &self.stats, "fgemm")?;
+                        let bv = f32_view(b, &mut scr.b32, &self.stats, "fgemm")?;
                         let bits = c.buf.as_f16_mut();
                         let cv = resized(&mut scr.c32, nn);
                         decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut *cv));
@@ -640,10 +694,11 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // ||A||_F prefix, pick each off-diagonal tile's
                         // storage, and convert the column in place (the
                         // diagonal always stays F64: potrf pivots)
-                        let rz = self
-                            .pipeline()
-                            .resolver
-                            .expect("ResolvePanel task scheduled without PanelResolver");
+                        let rz = self.pipeline()?.resolver.ok_or_else(|| {
+                            Error::PlanMismatch(
+                                "ResolvePanel task scheduled without PanelResolver".into(),
+                            )
+                        })?;
                         let precs = rz.resolve_column(j);
                         for (off, prec) in precs.iter().enumerate() {
                             let i = j + 1 + off;
@@ -725,7 +780,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // exact op order (bit-identical in full DP);
                         // reduced factor tiles promote through the
                         // inline conversion protocol (exact)
-                        let bufs = self.pipeline().bufs;
+                        let bufs = self.pipeline()?.bufs;
                         debug_assert_eq!(bufs.nb(), nb);
                         let r = bufs.r();
                         if i == k {
@@ -771,7 +826,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                     KernelCall::SolveBwd { i, k, .. } => {
                         // multi-RHS backward substitution (L^T x = y),
                         // same bit-exactness contract as SolveFwd
-                        let bufs = self.pipeline().bufs;
+                        let bufs = self.pipeline()?.bufs;
                         debug_assert_eq!(bufs.nb(), nb);
                         let r = bufs.r();
                         if i == k {
@@ -816,7 +871,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                     KernelCall::LogDetPartial { k } => {
                         // extend the running sum-of-logs chain through
                         // scalar slot k (the serial accumulation order)
-                        let bufs = self.pipeline().bufs;
+                        let bufs = self.pipeline()?.bufs;
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let t = f64_op_view(l, &mut scr.a64, &self.stats);
                         let mut s = bufs.logdet_prev(k);
@@ -831,11 +886,12 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // prediction sites, identical op order to the
                         // serial KrigingModel::predict path; buffers are
                         // thread-local scratch, not per-task allocations
-                        let pc = self.pipeline();
-                        let cc = pc
-                            .crosscov
-                            .as_ref()
-                            .expect("CrossCov task scheduled without CrossCovContext");
+                        let pc = self.pipeline()?;
+                        let cc = pc.crosscov.as_ref().ok_or_else(|| {
+                            Error::PlanMismatch(
+                                "CrossCov task scheduled without CrossCovContext".into(),
+                            )
+                        })?;
                         let bufs = pc.bufs;
                         debug_assert_eq!(n, cc.train.len());
                         debug_assert_eq!(n, bufs.p() * nb);

@@ -283,6 +283,157 @@ pub fn factorize_tiles_with_opts(
     Ok(plan)
 }
 
+/// Default bound on precision-escalation retries before a
+/// [`NotPositiveDefinite`](crate::error::Error::NotPositiveDefinite)
+/// breakdown is propagated to the caller.
+pub const DEFAULT_RETRY_BUDGET: usize = 4;
+
+/// Knobs for [`factorize_tiles_with_recovery`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryOptions {
+    /// Maximum escalate-and-retry attempts (0 disables recovery).
+    pub max_retries: usize,
+}
+
+impl Default for RecoveryOptions {
+    fn default() -> Self {
+        Self { max_retries: DEFAULT_RETRY_BUDGET }
+    }
+}
+
+/// What the escalation ladder did to rescue a factorization: how many
+/// retries ran, how many tile assignments were promoted, and how far the
+/// final map drifted from the requested one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryTrace {
+    /// Retries performed (0 means the first attempt succeeded).
+    pub attempts: usize,
+    /// Tile assignments promoted one rung across all retries.
+    pub escalated_tiles: usize,
+    /// Tiles whose final precision differs from the requested map.
+    pub map_churn: usize,
+}
+
+/// One rung up the storage ladder: bf16 -> f16 -> f32 -> f64.
+fn promote_one(prec: Precision) -> Precision {
+    match prec {
+        Precision::Bf16 => Precision::F16,
+        Precision::F16 => Precision::F32,
+        Precision::F32 | Precision::F64 => Precision::F64,
+    }
+}
+
+/// Promote every lower-triangle tile in row/column `panel` one rung up
+/// the ladder — the targeted response to a breakdown at that panel,
+/// since the pivot that went non-positive accumulated exactly those
+/// tiles' roundoff.  Returns the new map and how many tiles changed.
+pub fn escalate_map(map: &PrecisionMap, panel: usize) -> (PrecisionMap, usize) {
+    let mut changed = 0usize;
+    let next = PrecisionMap::from_fn(map.p(), |i, j| {
+        let cur = map.get(i, j);
+        if i == panel || j == panel {
+            let up = promote_one(cur);
+            if up != cur {
+                changed += 1;
+            }
+            up
+        } else {
+            cur
+        }
+    });
+    (next, changed)
+}
+
+/// Promote *every* lower-triangle tile one rung — the final rung of the
+/// escalation ladder when targeted panel promotion no longer changes
+/// anything.  Returns the new map and how many tiles changed.
+pub fn escalate_map_all(map: &PrecisionMap) -> (PrecisionMap, usize) {
+    let mut changed = 0usize;
+    let next = PrecisionMap::from_fn(map.p(), |i, j| {
+        let cur = map.get(i, j);
+        let up = promote_one(cur);
+        if up != cur {
+            changed += 1;
+        }
+        up
+    });
+    (next, changed)
+}
+
+/// [`factorize_tiles_with_opts`] wrapped in the precision-escalation
+/// retry ladder: when the factorization breaks down with
+/// [`NotPositiveDefinite`](crate::error::Error::NotPositiveDefinite)
+/// under a reduced map, promote the implicated panel's tiles one rung
+/// (bf16 -> f16 -> f32 -> f64; whole-map promotion once the panel is
+/// exhausted), restore the pristine covariance, and re-run — up to
+/// `recovery.max_retries` times.  A rescued run is bit-identical to
+/// running the escalated map directly, because each retry restarts from
+/// the same f64 snapshot of the input tiles.  Breakdown at full DP (or
+/// budget exhaustion) propagates the original error.
+#[allow(clippy::too_many_arguments)]
+pub fn factorize_tiles_with_recovery(
+    tiles: &mut TileMatrix,
+    variant: Variant,
+    map: PrecisionMap,
+    opts: PlanOptions,
+    recovery: RecoveryOptions,
+    backend: &dyn TileBackend,
+    sched: &Scheduler,
+) -> Result<(CholeskyPlan, RecoveryTrace)> {
+    if map.p() != tiles.p() {
+        crate::invalid_arg!("precision map order {} != tile matrix order {}", map.p(), tiles.p());
+    }
+    let p = tiles.p();
+    let nb = tiles.nb();
+    // Factorization overwrites the tiles in place, so retries need the
+    // pristine covariance back: snapshot the lower triangle as f64 once.
+    let mut scratch = Vec::new();
+    let mut snapshot = Vec::with_capacity(p * (p + 1) / 2);
+    for j in 0..p {
+        for i in j..p {
+            snapshot.push(tiles.tile(TileId::new(i, j)).f64_values(&mut scratch).to_vec());
+        }
+    }
+    let requested = map.clone();
+    let mut current = map;
+    let mut trace = RecoveryTrace::default();
+    loop {
+        if trace.attempts > 0 {
+            let mut k = 0;
+            for j in 0..p {
+                for i in j..p {
+                    let slot = tiles.tile_mut(TileId::new(i, j));
+                    slot.convert_to(Precision::F64);
+                    slot.buf.as_f64_mut().copy_from_slice(&snapshot[k]);
+                    k += 1;
+                }
+            }
+        }
+        match factorize_tiles_with_opts(tiles, variant, current.clone(), opts, backend, sched) {
+            Ok(plan) => {
+                trace.map_churn = requested.churn(&current);
+                return Ok((plan, trace));
+            }
+            Err(crate::error::Error::NotPositiveDefinite { pivot, index })
+                if trace.attempts < recovery.max_retries =>
+            {
+                let panel = (index / nb).min(p - 1);
+                let (next, changed) = escalate_map(&current, panel);
+                let (next, changed) =
+                    if changed > 0 { (next, changed) } else { escalate_map_all(&current) };
+                if changed == 0 {
+                    // already full DP everywhere: escalation cannot help
+                    return Err(crate::error::Error::NotPositiveDefinite { pivot, index });
+                }
+                trace.attempts += 1;
+                trace.escalated_tiles += changed;
+                current = next;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// Generate the Matern covariance tiles in parallel without factoring —
 /// phase 1 of the adaptive path (the norms must exist before the
 /// precision map can), also used by the trace tool.
@@ -576,7 +727,7 @@ mod tests {
             SchedulingPolicy::PrecisionFrontier,
         ] {
             let sched =
-                Scheduler::new(SchedulerConfig { num_workers: 4, policy, trace: false });
+                Scheduler::new(SchedulerConfig { num_workers: 4, policy, ..Default::default() });
             let tiles = factorize_dense(
                 &a,
                 32,

@@ -579,6 +579,35 @@ impl PipelinePlan {
             None => tiles.storage_map(),
         }
     }
+
+    /// Re-price `dp_flops` / `sp_flops` on a *realized* precision map.
+    /// The dynamic adaptive planner prices every codelet at DP because
+    /// tile precisions are unknown at plan time; once the run has fixed
+    /// them, this walks the graph and re-buckets each runtime-precision
+    /// codelet's flops by the precision of the tile it targets
+    /// (`TrsmNative`/`GemmBatch` by their written off-diagonal tile,
+    /// `SyrkNative` by the diagonal it updates — always DP).  Statically
+    /// typed codelets keep their lowered precision.
+    pub fn reprice_flops(&mut self, realized: &PrecisionMap) {
+        let nb = self.nb;
+        let mut dp = 0.0;
+        let mut sp = 0.0;
+        for task in self.graph.tasks() {
+            let call = &task.payload.call;
+            let prec = match *call {
+                KernelCall::TrsmNative { i, k } => realized.get(i, k),
+                KernelCall::SyrkNative { j, .. } => realized.get(j, j),
+                KernelCall::GemmBatch { i, j, .. } => realized.get(i, j),
+                _ => call.precision(),
+            };
+            match prec {
+                Precision::F64 => dp += call.flops_at(nb),
+                _ => sp += call.flops_at(nb),
+            }
+        }
+        self.dp_flops = dp;
+        self.sp_flops = sp;
+    }
 }
 
 /// Append the solve / log-det / cross-covariance stages to `graph`.

@@ -39,6 +39,17 @@ pub struct RunConfig {
     pub max_evals: usize,
     /// Optimizer tolerance (paper SSVIII.D.2 uses 1e-3).
     pub ftol: f64,
+    /// Precision-escalation retries per factorization before a
+    /// `NotPositiveDefinite` breakdown is propagated (0 disables
+    /// recovery).
+    pub retry_budget: usize,
+    /// Scheduler wall-clock watchdog in milliseconds (0 = disabled): a
+    /// task graph that has not finished within the deadline aborts with
+    /// a diagnostic error instead of hanging.
+    pub deadline_ms: u64,
+    /// Fault-injection spec (the `PALLAS_INJECT` grammar, e.g.
+    /// `nan:rate=0.5:seed=7,kill:worker=any`); empty = no injection.
+    pub inject: String,
 }
 
 impl Default for RunConfig {
@@ -56,6 +67,9 @@ impl Default for RunConfig {
             backend: "native".into(),
             max_evals: 500,
             ftol: 1e-3,
+            retry_budget: crate::cholesky::DEFAULT_RETRY_BUDGET,
+            deadline_ms: 0,
+            inject: String::new(),
         }
     }
 }
@@ -124,6 +138,9 @@ impl RunConfig {
                 }
                 "max_evals" => self.max_evals = parse(k, v)?,
                 "ftol" => self.ftol = parse(k, v)?,
+                "retry_budget" => self.retry_budget = parse(k, v)?,
+                "deadline_ms" => self.deadline_ms = parse(k, v)?,
+                "inject" => self.inject = v.clone(),
                 "backend" => match v.as_str() {
                     "native" | "pjrt" => self.backend = v.clone(),
                     other => {
@@ -243,6 +260,10 @@ impl RunConfig {
         }
         if !(self.theta.iter().all(|&x| x > 0.0)) {
             crate::invalid_arg!("theta components must be positive: {:?}", self.theta);
+        }
+        if !self.inject.is_empty() {
+            // fail at config time, not mid-run
+            crate::fault::FaultPlan::parse(&self.inject)?;
         }
         Ok(())
     }
@@ -405,5 +426,26 @@ mod tests {
     #[test]
     fn missing_equals_is_an_error() {
         assert!(RunConfig::parse("n 2048\n").is_err());
+    }
+
+    #[test]
+    fn robustness_keys_parse_and_validate() {
+        let c = RunConfig::parse(
+            "retry_budget = 2\n\
+             deadline_ms = 5000\n\
+             inject = nan:rate=0.5:seed=7,kill:worker=any\n",
+        )
+        .unwrap();
+        assert_eq!(c.retry_budget, 2);
+        assert_eq!(c.deadline_ms, 5000);
+        assert_eq!(c.inject, "nan:rate=0.5:seed=7,kill:worker=any");
+        // defaults: recovery on, watchdog off, no injection
+        let d = RunConfig::default();
+        assert_eq!(d.retry_budget, crate::cholesky::DEFAULT_RETRY_BUDGET);
+        assert_eq!(d.deadline_ms, 0);
+        assert!(d.inject.is_empty());
+        // malformed injection specs fail at config time
+        assert!(RunConfig::parse("inject = nonsense\n").is_err());
+        assert!(RunConfig::parse("inject = kill:worker=soon\n").is_err());
     }
 }

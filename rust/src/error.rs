@@ -27,6 +27,42 @@ pub enum Error {
     /// The MLE optimizer failed to make progress.
     Optimization(String),
 
+    /// A codelet panicked inside the worker pool.  The panic is caught at
+    /// the scheduler layer (`catch_unwind`) and converted into an abort of
+    /// the whole graph instead of a poisoned-Condvar hang.
+    TaskPanicked {
+        /// Graph index of the panicking task.
+        task: usize,
+        /// The panic payload, when it was a string.
+        message: String,
+    },
+
+    /// The scheduler watchdog fired: the graph made no progress before
+    /// [`SchedulerConfig::deadline`](crate::scheduler::SchedulerConfig)
+    /// elapsed.  `detail` names stuck tasks and their unmet dep counts.
+    DeadlineExceeded {
+        /// Wall-clock milliseconds elapsed when the watchdog fired.
+        elapsed_ms: u64,
+        /// Tasks that had finished at that point.
+        finished: usize,
+        /// Total tasks in the graph.
+        total: usize,
+        /// Stuck-task diagnostic (task indices + unmet dependency counts).
+        detail: String,
+    },
+
+    /// A deliberately injected failure from the `fault` module
+    /// (`PALLAS_INJECT`): forced codelet errors and worker kills surface
+    /// here so tests can tell injected faults from organic ones.
+    FaultInjected(String),
+
+    /// The executed plan and the storage/context it ran against disagree
+    /// (e.g. a decode task scheduled on a tile whose stored precision does
+    /// not match the plan's map, or a Generate task without a
+    /// `GenContext`).  Reachable through hostile `PrecisionMap`/plan
+    /// combinations, hence an error rather than a panic.
+    PlanMismatch(String),
+
     /// Artifact manifest / HLO loading problems (PJRT backend).
     Artifact(String),
 
@@ -46,6 +82,16 @@ impl fmt::Display for Error {
                 "matrix is not positive definite (pivot {pivot} at global index {index})"
             ),
             Error::Optimization(s) => write!(f, "optimization failed: {s}"),
+            Error::TaskPanicked { task, message } => {
+                write!(f, "task {task} panicked: {message}")
+            }
+            Error::DeadlineExceeded { elapsed_ms, finished, total, detail } => write!(
+                f,
+                "scheduler deadline exceeded after {elapsed_ms} ms \
+                 ({finished}/{total} tasks finished; {detail})"
+            ),
+            Error::FaultInjected(s) => write!(f, "injected fault: {s}"),
+            Error::PlanMismatch(s) => write!(f, "plan/storage mismatch: {s}"),
             Error::Artifact(s) => write!(f, "runtime artifact error: {s}"),
             Error::Xla(s) => write!(f, "xla error: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
@@ -95,6 +141,24 @@ mod tests {
         let e = Error::NotPositiveDefinite { pivot: -1.5, index: 42 };
         let s = e.to_string();
         assert!(s.contains("-1.5") && s.contains("42"));
+    }
+
+    #[test]
+    fn recovery_variants_display_is_informative() {
+        let e = Error::TaskPanicked { task: 7, message: "index out of bounds".into() };
+        assert!(e.to_string().contains("task 7") && e.to_string().contains("index out of"));
+        let e = Error::DeadlineExceeded {
+            elapsed_ms: 250,
+            finished: 3,
+            total: 10,
+            detail: "task 4: 2 unmet deps".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("250 ms") && s.contains("3/10") && s.contains("task 4"));
+        let e = Error::FaultInjected("worker 1 killed".into());
+        assert!(e.to_string().contains("injected fault"));
+        let e = Error::PlanMismatch("f64 tile lacks its dconv2s view".into());
+        assert!(e.to_string().contains("plan/storage mismatch"));
     }
 
     #[test]

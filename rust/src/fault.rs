@@ -1,0 +1,418 @@
+//! Seeded fault injection — the harness that proves the recovery and
+//! abort paths actually work.
+//!
+//! A [`FaultPlan`] describes deliberate failures to inject into a run:
+//! NaN or bit-flip corruption of reduced-precision tiles at decode time,
+//! a forced error or panic from a chosen codelet, and worker-level
+//! delays/kills inside the scheduler.  Plans are deterministic: tile
+//! corruption is keyed on the (seed, tile coordinate) pair through the
+//! crate's own [`Xoshiro256pp`], so a failing run replays exactly.
+//!
+//! Plans arrive two ways:
+//! - **Environment:** `PALLAS_INJECT=<spec>` (see [`FaultPlan::parse`]
+//!   for the grammar), parsed once and cached — this is what the CI
+//!   fault-matrix legs use.
+//! - **Explicit:** construct a plan in code and hand it to
+//!   [`TileExecutor::with_faults`](crate::cholesky::TileExecutor) or
+//!   `SchedulerConfig::faults`.  An explicit plan always wins over the
+//!   environment, so parallel tests never contaminate each other.
+//!
+//! Spec grammar (clauses joined with `,`; fields joined with `:`):
+//!
+//! ```text
+//! nan[:rate=R][:seed=S]      NaN one element of each decoded tile w.p. R
+//! flip[:rate=R][:seed=S]     flip one mantissa bit instead
+//! error:call=NAME[:nth=N]    Nth task of codelet NAME returns an error
+//! panic:call=NAME[:nth=N]    Nth task of codelet NAME panics
+//! kill:worker=W|any          worker W (or the first to pop) dies mid-run
+//! delay:worker=W:ms=M        worker W sleeps M ms before every task
+//! lose:task=T                task T's completion is dropped (wedges the
+//!                            graph — watchdog test hook)
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::rng::Xoshiro256pp;
+
+/// Environment variable holding the injection spec.
+pub const ENV_VAR: &str = "PALLAS_INJECT";
+
+/// Probability + seed for a tile-corruption clause.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorruptSpec {
+    /// Per-tile corruption probability in `[0, 1]`.
+    pub rate: f64,
+    /// Base seed; the per-tile stream is keyed on `(seed, i, j)`.
+    pub seed: u64,
+}
+
+impl Default for CorruptSpec {
+    fn default() -> Self {
+        Self { rate: 1.0, seed: 0 }
+    }
+}
+
+/// Which worker a `kill` clause targets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KillTarget {
+    /// The first worker to pop a task after the plan arms.
+    Any,
+    /// A specific worker index.
+    Worker(usize),
+}
+
+/// What the scheduler should do after the pre-task worker hook.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkerFault {
+    /// Proceed normally.
+    Continue,
+    /// This worker dies now (the popped task is charged as failed).
+    Kill,
+}
+
+#[derive(Debug)]
+struct CallTrigger {
+    call: String,
+    nth: usize,
+    seen: AtomicUsize,
+}
+
+impl CallTrigger {
+    fn fires(&self, name: &str) -> bool {
+        name == self.call && self.seen.fetch_add(1, Ordering::Relaxed) == self.nth
+    }
+}
+
+/// A set of faults to inject into one run.  `FaultPlan::default()` is
+/// the empty plan (injects nothing) — pass it explicitly to shield a
+/// run from any ambient `PALLAS_INJECT`.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    nan: Option<CorruptSpec>,
+    flip: Option<CorruptSpec>,
+    error_call: Option<CallTrigger>,
+    panic_call: Option<CallTrigger>,
+    kill: Option<KillTarget>,
+    delay: Option<(usize, u64)>,
+    lose_task: Option<usize>,
+    killed: AtomicBool,
+}
+
+impl FaultPlan {
+    /// Corrupt each decoded tile's f32 values with probability `rate`.
+    pub fn with_nan(mut self, rate: f64, seed: u64) -> Self {
+        self.nan = Some(CorruptSpec { rate, seed });
+        self
+    }
+
+    /// Flip one mantissa bit per corrupted tile instead of writing NaN.
+    pub fn with_flip(mut self, rate: f64, seed: u64) -> Self {
+        self.flip = Some(CorruptSpec { rate, seed });
+        self
+    }
+
+    /// The `nth` executed task of codelet `call` returns
+    /// [`Error::FaultInjected`].
+    pub fn with_error_call(mut self, call: &str, nth: usize) -> Self {
+        self.error_call = Some(CallTrigger { call: call.into(), nth, seen: AtomicUsize::new(0) });
+        self
+    }
+
+    /// The `nth` executed task of codelet `call` panics.
+    pub fn with_panic_call(mut self, call: &str, nth: usize) -> Self {
+        self.panic_call = Some(CallTrigger { call: call.into(), nth, seen: AtomicUsize::new(0) });
+        self
+    }
+
+    /// One worker dies mid-run (once per plan).
+    pub fn with_kill(mut self, target: KillTarget) -> Self {
+        self.kill = Some(target);
+        self
+    }
+
+    /// Worker `worker` sleeps `ms` milliseconds before every task.
+    pub fn with_delay(mut self, worker: usize, ms: u64) -> Self {
+        self.delay = Some((worker, ms));
+        self
+    }
+
+    /// Task `task` completes but its successors are never notified —
+    /// a deterministic graph wedge for exercising the watchdog.
+    pub fn with_lose_task(mut self, task: usize) -> Self {
+        self.lose_task = Some(task);
+        self
+    }
+
+    /// Parse the `PALLAS_INJECT` spec grammar (module docs).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut fields = clause.split(':').map(str::trim);
+            let kind = fields.next().unwrap_or("");
+            let mut kv = std::collections::HashMap::new();
+            for field in fields {
+                let (k, v) = field.split_once('=').ok_or_else(|| {
+                    Error::InvalidArgument(format!(
+                        "{ENV_VAR} clause {clause:?}: expected key=value, got {field:?}"
+                    ))
+                })?;
+                kv.insert(k, v);
+            }
+            let num = |key: &str, default: Option<u64>| -> Result<u64> {
+                match kv.get(key) {
+                    Some(v) => v.parse().map_err(|_| {
+                        Error::InvalidArgument(format!(
+                            "{ENV_VAR} clause {clause:?}: cannot parse {key}={v:?}"
+                        ))
+                    }),
+                    None => default.ok_or_else(|| {
+                        Error::InvalidArgument(format!(
+                            "{ENV_VAR} clause {clause:?}: missing required key {key:?}"
+                        ))
+                    }),
+                }
+            };
+            let rate = |kv: &std::collections::HashMap<&str, &str>| -> Result<f64> {
+                match kv.get("rate") {
+                    Some(v) => v.parse().map_err(|_| {
+                        Error::InvalidArgument(format!(
+                            "{ENV_VAR} clause {clause:?}: cannot parse rate={v:?}"
+                        ))
+                    }),
+                    None => Ok(1.0),
+                }
+            };
+            match kind {
+                "nan" => {
+                    plan.nan = Some(CorruptSpec { rate: rate(&kv)?, seed: num("seed", Some(0))? })
+                }
+                "flip" => {
+                    plan.flip = Some(CorruptSpec { rate: rate(&kv)?, seed: num("seed", Some(0))? })
+                }
+                "error" | "panic" => {
+                    let call = kv.get("call").ok_or_else(|| {
+                        Error::InvalidArgument(format!(
+                            "{ENV_VAR} clause {clause:?}: missing required key \"call\""
+                        ))
+                    })?;
+                    let trig = CallTrigger {
+                        call: (*call).to_string(),
+                        nth: num("nth", Some(0))? as usize,
+                        seen: AtomicUsize::new(0),
+                    };
+                    if kind == "error" {
+                        plan.error_call = Some(trig);
+                    } else {
+                        plan.panic_call = Some(trig);
+                    }
+                }
+                "kill" => {
+                    plan.kill = Some(match kv.get("worker") {
+                        Some(&"any") => KillTarget::Any,
+                        _ => KillTarget::Worker(num("worker", None)? as usize),
+                    })
+                }
+                "delay" => {
+                    plan.delay = Some((num("worker", None)? as usize, num("ms", Some(1))?));
+                }
+                "lose" => plan.lose_task = Some(num("task", None)? as usize),
+                other => {
+                    return Err(Error::InvalidArgument(format!(
+                        "{ENV_VAR}: unknown fault kind {other:?} \
+                         (expected nan|flip|error|panic|kill|delay|lose)"
+                    )))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Pre-execution codelet hook: forced panics and forced errors.
+    pub fn on_call(&self, name: &str) -> Result<()> {
+        if let Some(t) = &self.panic_call {
+            if t.fires(name) {
+                panic!("injected panic in {name} ({ENV_VAR})");
+            }
+        }
+        if let Some(t) = &self.error_call {
+            if t.fires(name) {
+                return Err(Error::FaultInjected(format!(
+                    "forced failure of {name} task #{}",
+                    t.nth
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministically corrupt a freshly decoded tile `(i, j)`.
+    /// Returns how many elements were corrupted.
+    pub fn corrupt_decoded(&self, i: usize, j: usize, vals: &mut [f32]) -> usize {
+        if vals.is_empty() {
+            return 0;
+        }
+        let mut hits = 0;
+        for (spec, nan) in [(self.nan, true), (self.flip, false)] {
+            let Some(CorruptSpec { rate, seed }) = spec else { continue };
+            // per-tile stream: replays identically for a given (seed, i, j)
+            let key = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (j as u64);
+            let mut rng = Xoshiro256pp::seed_from_u64(key);
+            if rng.uniform() < rate {
+                let at = (rng.next_u64_raw() as usize) % vals.len();
+                vals[at] = if nan {
+                    f32::NAN
+                } else {
+                    f32::from_bits(vals[at].to_bits() ^ (1 << ((rng.next_u64_raw() % 23) as u32)))
+                };
+                hits += 1;
+            }
+        }
+        hits
+    }
+
+    /// Scheduler hook, called when `worker` pops a task.  Applies the
+    /// delay clause and reports whether this worker should die.
+    pub fn on_worker_pop(&self, worker: usize) -> WorkerFault {
+        if let Some((w, ms)) = self.delay {
+            if w == worker {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+        if let Some(target) = self.kill {
+            let hit = match target {
+                KillTarget::Any => true,
+                KillTarget::Worker(w) => w == worker,
+            };
+            // fire exactly once per plan
+            if hit && !self.killed.swap(true, Ordering::Relaxed) {
+                return WorkerFault::Kill;
+            }
+        }
+        WorkerFault::Continue
+    }
+
+    /// Whether `task`'s completion notification should be dropped.
+    pub fn loses_completion(&self, task: usize) -> bool {
+        self.lose_task == Some(task)
+    }
+
+    /// True when the plan injects nothing (the shielding plan).
+    pub fn is_empty(&self) -> bool {
+        self.nan.is_none()
+            && self.flip.is_none()
+            && self.error_call.is_none()
+            && self.panic_call.is_none()
+            && self.kill.is_none()
+            && self.delay.is_none()
+            && self.lose_task.is_none()
+    }
+}
+
+/// The ambient plan from `PALLAS_INJECT`, parsed once per process.
+/// A malformed spec is reported to stderr once and treated as no plan
+/// (the fault-matrix tests assert `is_some()` to catch typos loudly).
+pub fn env_plan() -> Option<Arc<FaultPlan>> {
+    static PLAN: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+    PLAN.get_or_init(|| {
+        let spec = std::env::var(ENV_VAR).ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(plan) => Some(Arc::new(plan)),
+            Err(e) => {
+                eprintln!("warning: ignoring malformed {ENV_VAR}: {e}");
+                None
+            }
+        }
+    })
+    .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse(
+            "nan:rate=0.5:seed=7, flip, error:call=dpotrf:nth=2, kill:worker=any, \
+             delay:worker=1:ms=3, lose:task=9",
+        )
+        .unwrap();
+        assert_eq!(p.nan, Some(CorruptSpec { rate: 0.5, seed: 7 }));
+        assert_eq!(p.flip, Some(CorruptSpec { rate: 1.0, seed: 0 }));
+        assert_eq!(p.error_call.as_ref().map(|t| (t.call.as_str(), t.nth)), Some(("dpotrf", 2)));
+        assert_eq!(p.kill, Some(KillTarget::Any));
+        assert_eq!(p.delay, Some((1, 3)));
+        assert_eq!(p.lose_task, Some(9));
+        assert!(!p.is_empty());
+        assert_eq!(
+            FaultPlan::parse("kill:worker=3").unwrap().kill,
+            Some(KillTarget::Worker(3))
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("warp:speed=9").is_err());
+        assert!(FaultPlan::parse("error:nth=1").is_err()); // missing call
+        assert!(FaultPlan::parse("kill").is_err()); // missing worker
+        assert!(FaultPlan::parse("nan:rate=lots").is_err());
+        assert!(FaultPlan::parse("delay:worker").is_err()); // not key=value
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn corruption_is_deterministic_per_tile() {
+        let plan = FaultPlan::default().with_nan(1.0, 42);
+        let mut a = vec![1.0f32; 64];
+        let mut b = vec![1.0f32; 64];
+        assert_eq!(plan.corrupt_decoded(2, 1, &mut a), 1);
+        assert_eq!(plan.corrupt_decoded(2, 1, &mut b), 1);
+        // same tile -> same element; exactly one NaN
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.iter().filter(|v| v.is_nan()).count(), 1);
+        // rate 0 never corrupts
+        let quiet = FaultPlan::default().with_nan(0.0, 42);
+        let mut c = vec![1.0f32; 64];
+        assert_eq!(quiet.corrupt_decoded(2, 1, &mut c), 0);
+        assert!(c.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn bit_flip_changes_exactly_one_value() {
+        let plan = FaultPlan::default().with_flip(1.0, 3);
+        let mut a = vec![1.5f32; 32];
+        assert_eq!(plan.corrupt_decoded(0, 0, &mut a), 1);
+        let changed: Vec<_> = a.iter().filter(|&&v| v != 1.5).collect();
+        assert_eq!(changed.len(), 1);
+        // mantissa-only flip: still finite, same order of magnitude
+        assert!(changed[0].is_finite());
+    }
+
+    #[test]
+    fn forced_error_fires_on_exact_occurrence() {
+        let plan = FaultPlan::default().with_error_call("dgemm", 1);
+        assert!(plan.on_call("dgemm").is_ok()); // occurrence 0
+        assert!(matches!(plan.on_call("dgemm"), Err(Error::FaultInjected(_))));
+        assert!(plan.on_call("dgemm").is_ok()); // fires once
+        assert!(plan.on_call("dpotrf").is_ok()); // other codelets untouched
+    }
+
+    #[test]
+    fn kill_fires_once() {
+        let plan = FaultPlan::default().with_kill(KillTarget::Worker(2));
+        assert_eq!(plan.on_worker_pop(0), WorkerFault::Continue);
+        assert_eq!(plan.on_worker_pop(2), WorkerFault::Kill);
+        assert_eq!(plan.on_worker_pop(2), WorkerFault::Continue);
+        let any = FaultPlan::default().with_kill(KillTarget::Any);
+        assert_eq!(any.on_worker_pop(5), WorkerFault::Kill);
+        assert_eq!(any.on_worker_pop(0), WorkerFault::Continue);
+    }
+}

@@ -86,6 +86,7 @@ pub mod cholesky;
 pub mod config;
 pub mod datagen;
 pub mod error;
+pub mod fault;
 pub mod kernels;
 pub mod matern;
 pub mod mle;
@@ -99,10 +100,13 @@ pub mod tile;
 /// examples and benches.
 pub mod prelude {
     pub use crate::cholesky::{
-        factorize_dense, factorize_tiles, factorize_tiles_with_map, factorize_tiles_with_opts,
-        generate_and_factorize, generate_covariance, run_pipeline, CholeskyPlan, ConversionCounts,
-        PanelResolver, PipelineBuffers, PipelineOptions, PipelinePlan, PlanOptions, Variant,
+        escalate_map, escalate_map_all, factorize_dense, factorize_tiles, factorize_tiles_with_map,
+        factorize_tiles_with_opts, factorize_tiles_with_recovery, generate_and_factorize,
+        generate_covariance, run_pipeline, CholeskyPlan, ConversionCounts, PanelResolver,
+        PipelineBuffers, PipelineOptions, PipelinePlan, PlanOptions, RecoveryOptions, RecoveryTrace,
+        Variant, DEFAULT_RETRY_BUDGET,
     };
+    pub use crate::fault::FaultPlan;
     pub use crate::config::RunConfig;
     pub use crate::datagen::{FieldConfig, SyntheticField, WindFieldConfig};
     pub use crate::error::{Error, Result};

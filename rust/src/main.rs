@@ -18,6 +18,9 @@
 //!   --backend B      native | pjrt (native)       --workers W (all)
 //!   --policy P       fifo | lifo | cp | pf scheduler ready-queue policy
 //!   --range R        theta2 of the generator (0.1) --seed S  (42)
+//!   --retry-budget N precision-escalation retries on breakdown (4)
+//!   --deadline-ms M  scheduler watchdog in ms (0 = off)
+//!   --inject SPEC    fault injection (PALLAS_INJECT grammar)
 //!
 //! (Hand-rolled parsing: clap is unavailable in the offline crate set.)
 
@@ -67,6 +70,9 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("f16-thick", "f16_thick"),
         ("tolerance", "tolerance"),
         ("max-evals", "max_evals"),
+        ("retry-budget", "retry_budget"),
+        ("deadline-ms", "deadline_ms"),
+        ("inject", "inject"),
     ] {
         if let Some(v) = flags.get(flag) {
             over.insert(key.to_string(), v.clone());
@@ -97,6 +103,11 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
     }
 
     let rc = resolve_config(flags)?;
+    if !rc.inject.is_empty() {
+        // the executor and scheduler pick this up through fault::env_plan
+        std::env::set_var(mpcholesky::fault::ENV_VAR, &rc.inject);
+        eprintln!("fault injection armed: {}", rc.inject);
+    }
     let (n, nb, seed, workers, variant) = (rc.n, rc.nb, rc.seed, rc.workers, rc.variant);
     let range = rc.theta[1];
     let theta0 = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
@@ -124,6 +135,9 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             ftol: rc.ftol,
             ..Default::default()
         },
+        retry_budget: rc.retry_budget,
+        deadline: (rc.deadline_ms > 0)
+            .then_some(std::time::Duration::from_millis(rc.deadline_ms)),
         start: Some([0.5, (range * 0.7).max(0.01), 0.8]),
         ..Default::default()
     };
@@ -189,6 +203,7 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
         num_workers: workers,
         policy: rc.policy,
         trace: true,
+        ..Default::default()
     });
     let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
     let p = rc.n / rc.nb;

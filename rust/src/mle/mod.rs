@@ -26,7 +26,7 @@ pub mod optimizer;
 pub use optimizer::{minimize_positive, OptimResult, OptimizerConfig};
 
 use std::cell::RefCell;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cholesky::{
     self, run_pipeline, GenContext, PanelResolver, PipelineBuffers, PipelineOptions, PipelinePlan,
@@ -67,6 +67,15 @@ pub struct MleConfig {
     /// Device model used to price each evaluation's factorization graph
     /// in [`MleTrace`] (modeled transfer bytes on the realized map).
     pub model_device: DeviceModel,
+    /// Maximum precision-escalation retries per objective evaluation
+    /// when the factorization loses positive definiteness under a
+    /// reduced map (0 disables recovery and propagates the breakdown).
+    pub retry_budget: usize,
+    /// Wall-clock watchdog for each evaluation's task graph: a run that
+    /// has not finished within the deadline aborts with a diagnostic
+    /// [`Error::DeadlineExceeded`] instead of hanging (None = no
+    /// watchdog).
+    pub deadline: Option<Duration>,
     /// Optimizer settings.
     pub optimizer: OptimizerConfig,
     /// Box bounds on (variance, range, smoothness).
@@ -87,6 +96,8 @@ impl Default for MleConfig {
             policy: SchedulingPolicy::default(),
             remap_every: 1,
             model_device: DeviceModel::v100(),
+            retry_budget: cholesky::DEFAULT_RETRY_BUDGET,
+            deadline: None,
             optimizer: OptimizerConfig::default(),
             lower: [0.01, 0.005, 0.1],
             upper: [50.0, 3.0, 3.0],
@@ -134,6 +145,11 @@ pub struct MleIterStat {
     /// Cross-covariance prediction tasks (0 on the likelihood path; the
     /// kriging/PMSE drivers report them).
     pub crosscov_tasks: usize,
+    /// Precision-escalation retries this evaluation needed (0 = first
+    /// attempt factored cleanly).
+    pub recovery_attempts: usize,
+    /// Tile assignments promoted one rung by those retries.
+    pub escalated_tiles: usize,
 }
 
 /// Per-evaluation precision trace of an MLE run (one entry per
@@ -159,6 +175,14 @@ impl MleTrace {
         self.iterations.iter().filter(|i| i.remapped).count()
     }
 }
+
+/// Finite objective value assigned to a theta whose covariance stayed
+/// non-positive-definite after the escalation ladder exhausted its
+/// retry budget.  Finite (unlike the `f64::INFINITY` used for hard
+/// failures) so the Nelder-Mead simplex can rank such points and
+/// contract away from the non-SPD region instead of collapsing; a fit
+/// whose best value is still this penalty errors out.
+pub const NON_SPD_PENALTY: f64 = 1.0e30;
 
 /// Cached realized map + evaluation counter behind the `remap_every`
 /// stride.
@@ -238,6 +262,7 @@ impl<'a> MleProblem<'a> {
         let scheduler = Scheduler::new(SchedulerConfig {
             num_workers: workers,
             policy: cfg.policy,
+            deadline: cfg.deadline,
             ..Default::default()
         });
         Ok(Self {
@@ -297,7 +322,7 @@ impl<'a> MleProblem<'a> {
             bufs.load_column(0, self.z);
         }
 
-        let (mut plan, resolver, remapped) = match self.cfg.variant {
+        let (mut plan, mut resolver, remapped) = match self.cfg.variant {
             Variant::Adaptive { tolerance } => {
                 let stride = self.cfg.remap_every.max(1);
                 let (cached, evals) = {
@@ -330,27 +355,71 @@ impl<'a> MleProblem<'a> {
             }
         };
 
-        let gen = GenContext {
-            locations: self.locations,
-            theta: *theta,
-            metric: self.cfg.metric,
-            nugget: self.cfg.nugget,
-        };
-        run_pipeline(
-            &mut plan,
-            &tiles,
-            &bufs,
-            resolver.as_ref(),
-            None,
-            Some(gen),
-            self.backend,
-            &self.scheduler,
-        )?;
+        // precision-escalation retry ladder: a breakdown under a reduced
+        // map promotes the implicated panel one rung (whole-map once the
+        // panel is exhausted) and re-runs the iteration from scratch —
+        // fresh tiles, fresh RHS, static plan on the escalated map — so
+        // a rescued evaluation is bit-identical to requesting that map
+        // directly.  Breakdown at full DP propagates: no amount of
+        // escalation makes a genuinely non-SPD Sigma(theta) factor.
+        let mut recovery_attempts = 0usize;
+        let mut escalated_tiles = 0usize;
+        loop {
+            let gen = GenContext {
+                locations: self.locations,
+                theta: *theta,
+                metric: self.cfg.metric,
+                nugget: self.cfg.nugget,
+            };
+            match run_pipeline(
+                &mut plan,
+                &tiles,
+                &bufs,
+                resolver.as_ref(),
+                None,
+                Some(gen),
+                self.backend,
+                &self.scheduler,
+            ) {
+                Ok(_) => break,
+                Err(Error::NotPositiveDefinite { pivot, index })
+                    if recovery_attempts < self.cfg.retry_budget =>
+                {
+                    let realized = plan.realized_map(&tiles);
+                    let panel = (index / nb).min(p - 1);
+                    let (next, changed) = cholesky::escalate_map(&realized, panel);
+                    let (next, changed) = if changed > 0 {
+                        (next, changed)
+                    } else {
+                        cholesky::escalate_map_all(&realized)
+                    };
+                    if changed == 0 {
+                        return Err(Error::NotPositiveDefinite { pivot, index });
+                    }
+                    recovery_attempts += 1;
+                    escalated_tiles += changed;
+                    tiles = TileMatrix::zeros(n, nb)?;
+                    bufs = PipelineBuffers::new(p, nb, opts.rhs_cols, 0);
+                    if opts.rhs_cols > 0 {
+                        bufs.load_column(0, self.z);
+                    }
+                    cholesky::prepare_tiles(&mut tiles, self.cfg.variant, &next);
+                    plan = PipelinePlan::build_static(p, nb, self.cfg.variant, next, opts);
+                    resolver = None;
+                }
+                Err(e) => return Err(e),
+            }
+        }
 
         // per-iteration bookkeeping on the *realized* map: churn vs the
         // previous successful evaluation, and the modeled transfer volume
         // of replaying the full iteration graph with per-tile pricing
         let realized = plan.realized_map(&tiles);
+        if plan.map.is_none() {
+            // dynamic adaptive plans priced every codelet at DP; the run
+            // has fixed the precisions, so re-bucket the compute
+            plan.reprice_flops(&realized);
+        }
         let churn = {
             let mut st = self.remap.borrow_mut();
             let churn = st.map.as_ref().map_or(0, |prev| prev.churn(&realized));
@@ -376,6 +445,8 @@ impl<'a> MleProblem<'a> {
             solve_tasks: plan.counts.solves(),
             logdet_tasks: plan.counts.logdet,
             crosscov_tasks: plan.counts.crosscov,
+            recovery_attempts,
+            escalated_tiles,
         });
         Ok((tiles, bufs))
     }
@@ -414,8 +485,12 @@ impl<'a> MleProblem<'a> {
                     });
                     -v
                 }
-                // non-PD covariance (or any numeric failure): reject the
-                // point and let the simplex move on
+                // non-PD covariance after exhausting the escalation
+                // ladder: a finite penalty the simplex can rank and
+                // route around (SSVIII.D.1's SP(100%) failure mode)
+                Err(Error::NotPositiveDefinite { .. }) => NON_SPD_PENALTY,
+                // any other failure (scheduler fault, injected error):
+                // reject the point outright
                 Err(_) => f64::INFINITY,
             }
         };
@@ -434,7 +509,7 @@ impl<'a> MleProblem<'a> {
             &self.cfg.upper,
             &self.cfg.optimizer,
         );
-        if !r.fx.is_finite() {
+        if !r.fx.is_finite() || r.fx >= NON_SPD_PENALTY {
             return Err(Error::Optimization(
                 "no positive-definite covariance found within bounds".into(),
             ));

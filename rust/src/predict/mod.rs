@@ -118,7 +118,8 @@ impl KrigingModel {
         let sched = Scheduler::new(SchedulerConfig {
             num_workers: workers,
             policy: cfg.policy,
-            trace: false,
+            deadline: cfg.deadline,
+            ..Default::default()
         });
         let (setup, mut plan) = build_setup(locations.len(), z, cfg, 0)?;
         let gen = GenContext { locations, theta, metric: cfg.metric, nugget: cfg.nugget };
@@ -283,7 +284,8 @@ pub fn kfold_pmse_with_backend(
     let sched = Scheduler::new(SchedulerConfig {
         num_workers: workers,
         policy: cfg.policy,
-        trace: false,
+        deadline: cfg.deadline,
+        ..Default::default()
     });
     let execs: Vec<TileExecutor<'_, dyn TileBackend>> = folds
         .iter()

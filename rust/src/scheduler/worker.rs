@@ -14,12 +14,13 @@
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::graph::{TaskGraph, TaskIdx};
 use super::trace::{ExecutionTrace, TaskSpan};
 use crate::error::{Error, Result};
+use crate::fault::{FaultPlan, WorkerFault};
 
 /// Ready-queue ordering policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -89,6 +90,16 @@ pub struct SchedulerConfig {
     pub policy: SchedulingPolicy,
     /// Collect per-task spans (adds two `Instant::now` per task).
     pub trace: bool,
+    /// Wall-clock watchdog: when set, a run that has not completed after
+    /// this long is aborted with [`Error::DeadlineExceeded`] naming the
+    /// stuck tasks and their unmet dependency counts, instead of wedging
+    /// forever.  `None` (the default) disables the watchdog.
+    pub deadline: Option<Duration>,
+    /// Explicit fault-injection plan for this scheduler.  `None` falls
+    /// back to the ambient `PALLAS_INJECT` plan; pass
+    /// `Some(FaultPlan::default().into())` to shield a run from the
+    /// environment.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl SchedulerConfig {
@@ -111,6 +122,8 @@ impl Default for SchedulerConfig {
             num_workers: SchedulerConfig::resolve_workers(0),
             policy: SchedulingPolicy::default(),
             trace: false,
+            deadline: None,
+            faults: None,
         }
     }
 }
@@ -226,6 +239,42 @@ impl RunState {
     }
 }
 
+/// Render a caught panic payload for [`Error::TaskPanicked`].
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Watchdog diagnostic: name stuck tasks (positive unmet-dependency
+/// counters) so a wedged run says *where* it wedged.
+fn stuck_task_diagnostic(pending: &[AtomicUsize]) -> String {
+    use std::fmt::Write as _;
+    let mut stuck = 0usize;
+    let mut detail = String::new();
+    for (i, p) in pending.iter().enumerate() {
+        let unmet = p.load(Ordering::Relaxed);
+        if unmet > 0 {
+            stuck += 1;
+            if stuck <= 8 {
+                let sep = if stuck > 1 { "; " } else { "stuck: " };
+                let _ = write!(detail, "{sep}task {i}: {unmet} unmet deps");
+            }
+        }
+    }
+    if stuck > 8 {
+        let _ = write!(detail, "; ... {} more", stuck - 8);
+    }
+    if detail.is_empty() {
+        detail.push_str("no stuck dependency counters (workers wedged mid-task)");
+    }
+    detail
+}
+
 /// Dataflow executor.  One instance may run many graphs.
 pub struct Scheduler {
     cfg: SchedulerConfig,
@@ -300,14 +349,51 @@ impl Scheduler {
 
         let t0 = Instant::now();
         let spans: Mutex<Vec<TaskSpan>> = Mutex::new(Vec::new());
+        // explicit plan wins over the ambient PALLAS_INJECT one, so tests
+        // can shield themselves with an empty plan
+        let faults = self.cfg.faults.clone().or_else(crate::fault::env_plan);
         let graph_ref: &TaskGraph<P> = graph;
         let exec_ref = &exec;
         let st_ref = &st;
         let pending_ref = &pending;
         let spans_ref = &spans;
+        let faults_ref = &faults;
         let trace_on = self.cfg.trace;
 
         std::thread::scope(|scope| {
+            if let Some(dl) = self.cfg.deadline {
+                // watchdog: waits out the deadline on the park Condvar
+                // (finish() wakes it early on normal completion), then
+                // converts a wedged graph into a diagnostic error
+                scope.spawn(move || {
+                    let mut guard = st_ref.park.lock().unwrap();
+                    while !st_ref.done.load(Ordering::Acquire) {
+                        let Some(remaining) = dl.checked_sub(t0.elapsed()) else { break };
+                        let (g, _) = st_ref
+                            .cv
+                            .wait_timeout(guard, remaining.min(Duration::from_millis(25)))
+                            .unwrap();
+                        guard = g;
+                    }
+                    drop(guard);
+                    if st_ref.done.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let e = Error::DeadlineExceeded {
+                        elapsed_ms: t0.elapsed().as_millis() as u64,
+                        finished: st_ref.finished.load(Ordering::Relaxed),
+                        total: n,
+                        detail: stuck_task_diagnostic(pending_ref),
+                    };
+                    let mut f = st_ref.failed.lock().unwrap();
+                    if f.is_none() {
+                        *f = Some(e);
+                    }
+                    drop(f);
+                    st_ref.abort.store(true, Ordering::Release);
+                    st_ref.finish();
+                });
+            }
             for worker_id in 0..workers {
                 scope.spawn(move || loop {
                     if st_ref.done.load(Ordering::Acquire) {
@@ -326,8 +412,40 @@ impl Scheduler {
                         continue;
                     }
 
+                    if let Some(fp) = faults_ref {
+                        if fp.on_worker_pop(worker_id) == WorkerFault::Kill {
+                            // injected worker death: the popped task is
+                            // charged as failed and this thread exits; the
+                            // surviving workers drain the abort (with one
+                            // worker, the scope simply joins — never a hang)
+                            let mut f = st_ref.failed.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(Error::FaultInjected(format!(
+                                    "worker {worker_id} killed before task {task}"
+                                )));
+                            }
+                            drop(f);
+                            st_ref.abort.store(true, Ordering::Release);
+                            st_ref.finished.fetch_add(1, Ordering::AcqRel);
+                            if st_ref.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                st_ref.finish();
+                            }
+                            return;
+                        }
+                    }
+
                     let start = t0.elapsed();
-                    let result = exec_ref(task, &graph_ref.task(task).payload);
+                    // a panicking codelet must become an abort of the
+                    // graph, not a dead worker + wedged Condvar
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        exec_ref(task, &graph_ref.task(task).payload)
+                    }))
+                    .unwrap_or_else(|payload| {
+                        Err(Error::TaskPanicked {
+                            task,
+                            message: panic_message(payload.as_ref()),
+                        })
+                    });
                     let end = t0.elapsed();
                     if trace_on {
                         spans_ref.lock().unwrap().push(TaskSpan {
@@ -339,6 +457,13 @@ impl Scheduler {
                     }
 
                     match result {
+                        Ok(())
+                            if faults_ref.as_ref().is_some_and(|fp| fp.loses_completion(task)) =>
+                        {
+                            // injected lost completion: successors are never
+                            // notified — a deterministic wedge for the
+                            // watchdog tests
+                        }
                         Ok(()) => {
                             for &succ in &graph_ref.task(task).successors {
                                 if pending_ref[succ].fetch_sub(1, Ordering::AcqRel) == 1
@@ -434,7 +559,7 @@ mod tests {
             let sched = Scheduler::new(SchedulerConfig {
                 num_workers: 4,
                 policy,
-                trace: false,
+                ..Default::default()
             });
             sched
                 .run(&mut g, |idx, _| {
@@ -459,6 +584,7 @@ mod tests {
             num_workers: 2,
             policy: SchedulingPolicy::Fifo,
             trace: true,
+            ..Default::default()
         });
         let trace = sched
             .run(&mut g, |_, _| {
@@ -488,6 +614,7 @@ mod tests {
             num_workers: 4,
             policy: SchedulingPolicy::CriticalPath,
             trace: true,
+            ..Default::default()
         });
         let trace = sched
             .run(&mut g, |_, &payload| {
@@ -584,7 +711,7 @@ mod tests {
             let stamp: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
             let runs = AtomicU64::new(0);
             let ctr = AtomicU64::new(1);
-            let sched = Scheduler::new(SchedulerConfig { num_workers: 8, policy, trace: true });
+            let sched = Scheduler::new(SchedulerConfig { num_workers: 8, policy, trace: true, ..Default::default() });
             let trace = sched
                 .run(&mut g, |idx, _| {
                     runs.fetch_add(1, Ordering::SeqCst);
@@ -628,6 +755,153 @@ mod tests {
         assert!(t0.elapsed().as_secs_f64() < 5.0, "drain hung: {:?}", t0.elapsed());
     }
 
+    /// A panicking codelet is caught (`catch_unwind`) and surfaces as
+    /// `Error::TaskPanicked` naming the task — never a wedged Condvar —
+    /// with the watchdog disabled and enabled.
+    #[test]
+    fn injected_panic_becomes_task_panicked() {
+        for deadline in [None, Some(Duration::from_secs(30))] {
+            let mut g: TaskGraph<usize> = TaskGraph::new();
+            for k in 0..50 {
+                g.submit(k, vec![(t(0, 0), Access::Write)]);
+            }
+            let sched = Scheduler::new(SchedulerConfig {
+                num_workers: 8,
+                deadline,
+                ..Default::default()
+            });
+            let err = sched
+                .run(&mut g, |_, &p| {
+                    if p == 7 {
+                        panic!("synthetic codelet panic");
+                    }
+                    Ok(())
+                })
+                .unwrap_err();
+            match err {
+                Error::TaskPanicked { task, message } => {
+                    assert_eq!(task, 7);
+                    assert!(message.contains("synthetic codelet panic"), "{message}");
+                }
+                other => panic!("expected TaskPanicked, got {other}"),
+            }
+        }
+    }
+
+    /// An injected worker kill aborts the run with `Error::FaultInjected`
+    /// (never a hang), under 8 workers, watchdog off and on.
+    #[test]
+    fn injected_worker_kill_aborts_with_err() {
+        use crate::fault::KillTarget;
+        for deadline in [None, Some(Duration::from_secs(30))] {
+            let mut g: TaskGraph<usize> = TaskGraph::new();
+            for k in 0..300 {
+                g.submit(k, vec![(t(k + 1, k + 1), Access::Write)]);
+            }
+            let plan = FaultPlan::default().with_kill(KillTarget::Any);
+            let sched = Scheduler::new(SchedulerConfig {
+                num_workers: 8,
+                deadline,
+                faults: Some(Arc::new(plan)),
+                ..Default::default()
+            });
+            let t0 = Instant::now();
+            let err = sched.run(&mut g, |_, _| Ok(())).unwrap_err();
+            assert!(matches!(err, Error::FaultInjected(_)), "got {err}");
+            assert!(t0.elapsed().as_secs_f64() < 10.0, "kill drain hung");
+        }
+    }
+
+    /// Killing the only worker must still terminate: the scope joins the
+    /// dead worker's thread and the stored error is returned.
+    #[test]
+    fn killing_sole_worker_still_returns_err() {
+        use crate::fault::KillTarget;
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        for k in 0..20 {
+            g.submit(k, vec![(t(0, 0), Access::Write)]);
+        }
+        let plan = FaultPlan::default().with_kill(KillTarget::Worker(0));
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: 1,
+            faults: Some(Arc::new(plan)),
+            ..Default::default()
+        });
+        let err = sched.run(&mut g, |_, _| Ok(())).unwrap_err();
+        assert!(matches!(err, Error::FaultInjected(_)), "got {err}");
+    }
+
+    /// A lost completion wedges the graph; the watchdog converts the
+    /// wedge into `DeadlineExceeded` naming stuck tasks and dep counts.
+    #[test]
+    fn watchdog_converts_wedged_graph_into_diagnostic() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        g.submit(0, vec![(t(0, 0), Access::Write)]);
+        g.submit(1, vec![(t(0, 0), Access::Write)]);
+        g.submit(2, vec![(t(0, 0), Access::Write)]);
+        let plan = FaultPlan::default().with_lose_task(0);
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: 2,
+            deadline: Some(Duration::from_millis(200)),
+            faults: Some(Arc::new(plan)),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        let err = sched.run(&mut g, |_, _| Ok(())).unwrap_err();
+        assert!(t0.elapsed().as_secs_f64() < 10.0, "watchdog never fired");
+        match err {
+            Error::DeadlineExceeded { finished, total, detail, .. } => {
+                assert_eq!(total, 3);
+                assert_eq!(finished, 1, "only the lost task ran");
+                assert!(detail.contains("task 1") && detail.contains("unmet deps"), "{detail}");
+            }
+            other => panic!("expected DeadlineExceeded, got {other}"),
+        }
+    }
+
+    /// The watchdog does not fire on runs that finish inside the
+    /// deadline, and adds no measurable completion latency.
+    #[test]
+    fn watchdog_quiet_on_healthy_run() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        for k in 0..100 {
+            g.submit(k, vec![(t(k, k), Access::Write)]);
+        }
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: 4,
+            deadline: Some(Duration::from_secs(60)),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        sched.run(&mut g, |_, _| Ok(())).unwrap();
+        // normal completion wakes the watchdog thread via finish();
+        // nowhere near the 60 s deadline
+        assert!(t0.elapsed().as_secs_f64() < 10.0);
+    }
+
+    /// A worker delay slows the run down but changes nothing else.
+    #[test]
+    fn injected_delay_preserves_results() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        for k in 0..10 {
+            g.submit(k, vec![(t(0, 0), Access::Write)]);
+        }
+        let log = Mutex::new(Vec::new());
+        let plan = FaultPlan::default().with_delay(0, 1);
+        let sched = Scheduler::new(SchedulerConfig {
+            num_workers: 2,
+            faults: Some(Arc::new(plan)),
+            ..Default::default()
+        });
+        sched
+            .run(&mut g, |_, &p| {
+                log.lock().unwrap().push(p);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
     /// PrecisionFrontier keys: height dominates; cheapness breaks ties.
     /// On one worker the pop order is exactly the key order, so a
     /// two-level fork (root -> {dp, sp, hp} -> sink) must run the cheap
@@ -660,7 +934,7 @@ mod tests {
         let sched = Scheduler::new(SchedulerConfig {
             num_workers: 1,
             policy: SchedulingPolicy::PrecisionFrontier,
-            trace: false,
+            ..Default::default()
         });
         sched
             .run(&mut g, |_, &p| {
