@@ -21,12 +21,14 @@
 //! plans' trailing updates as left-looking `GemmBatch` tasks instead of
 //! per-step gemms; adaptive pipelines always lower left-looking),
 //! `--ablation` (sweep the adaptive tolerance at the smallest tile size
-//! and record the four-tier accuracy/bytes frontier — realized
-//! dp/sp/f16/bf16 census, resident bytes, `||L L^T - A||_max` — into
-//! the JSON `ablation` array), `--json [PATH]` (default path
-//! `BENCH_cholesky.json`).  The JSON also records `simd_isa`, the
-//! micro-kernel dispatch tier the run selected (`scalar` under
-//! `PALLAS_FORCE_SCALAR=1`).
+//! and record the accuracy/bytes frontier — realized dp/sp/f16/bf16
+//! census, resident bytes, `||L L^T - A||_max` — into the JSON
+//! `ablation` array, with matching `tlr` rows per tolerance and the
+//! paper's `indblocks` baseline closing the sweep), `--json [PATH]`
+//! (default path `BENCH_cholesky.json`).  The JSON also records
+//! `simd_isa`, the micro-kernel dispatch tier the run selected
+//! (`scalar` under `PALLAS_FORCE_SCALAR=1`), and per-row `tlr_tiles` /
+//! `avg_rank` / `compressed_bytes` low-rank census columns.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -34,12 +36,14 @@ use std::time::Instant;
 
 use mpcholesky::bench::Table;
 use mpcholesky::cholesky::{
-    factorize_tiles_with_map, generate_covariance, GenContext, PipelineCounts, PlanOptions,
+    self, factorize_tiles_with_map, generate_covariance, CholeskyPlan, GenContext, PipelineCounts,
+    PlanOptions, TileExecutor, TlrSpec,
 };
 use mpcholesky::kernels::blas::active_isa;
 use mpcholesky::prelude::*;
 use mpcholesky::scheduler::datamove::{self, DeviceModel};
 use mpcholesky::scheduler::ExecutionTrace;
+use mpcholesky::tile::{DenseMatrix, Precision, TileId, TlrStats};
 
 struct CaseResult {
     key: String,
@@ -83,6 +87,10 @@ struct CaseResult {
     recovery_attempts: usize,
     /// Tile assignments promoted one rung by those retries.
     escalated_tiles: usize,
+    /// Low-rank census of the run (all zero outside TLR legs): how many
+    /// tiles ended resident compressed, their mean rank, and their
+    /// `U`/`V` factor bytes.
+    tlr: TlrStats,
 }
 
 /// One traced whole-iteration pipeline run; returns wall seconds, the
@@ -122,7 +130,7 @@ fn traced_run(
         ),
         v => {
             let map = v.precision_map(p, None)?;
-            if !matches!(v, Variant::Dst { .. }) {
+            if !matches!(v, Variant::Dst { .. } | Variant::IndependentBlocks) {
                 // precision-native storage: tiles take their assigned
                 // format up front, generation writes it directly
                 tiles.apply_precision_map(&map);
@@ -174,7 +182,7 @@ fn traced_run(
                 tiles = TileMatrix::zeros(n, nb)?;
                 bufs = PipelineBuffers::new(p, nb, 1, 0);
                 bufs.load_column(0, rhs);
-                if !matches!(variant, Variant::Dst { .. }) {
+                if !matches!(variant, Variant::Dst { .. } | Variant::IndependentBlocks) {
                     tiles.apply_precision_map(&next);
                 }
                 plan = PipelinePlan::build_static(p, nb, variant, next, popts);
@@ -256,24 +264,145 @@ fn bench_case(
         modeled_transfer_bytes: modeled,
         recovery_attempts: recovery.attempts,
         escalated_tiles: recovery.escalated_tiles,
+        tlr: TlrStats::default(),
     })
 }
 
-/// One tolerance point of the `--ablation` sweep: the realized census
-/// and footprint of the adaptive map at that tolerance, plus the
-/// factorization backward error `||L L^T - A||_max`.
+/// One TLR factorization leg: generation, norm-marker compression, and
+/// the decompress/update/recompress factorization traced as its own
+/// graph.  The whole-iteration pipeline does not lower compressed
+/// epilogues yet, so the solve/log-det counts of these rows are zero and
+/// `gen_fused` is false; the modeled transfer replays the graph with
+/// compressed tiles priced at their `2 * nb * rank` factor bytes.
+#[allow(clippy::too_many_arguments)]
+fn tlr_case(
+    key: &str,
+    variant: Variant,
+    locs: &[Location],
+    theta: MaternParams,
+    n: usize,
+    nb: usize,
+    workers: usize,
+    reps: usize,
+    policy: SchedulingPolicy,
+) -> Result<CaseResult> {
+    let Variant::Tlr { tolerance, max_rank } = variant else {
+        return Err(Error::InvalidArgument("tlr_case requires Variant::Tlr".into()));
+    };
+    let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true, ..Default::default() });
+    let p = n / nb;
+    let mut runs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let mut tiles = TileMatrix::zeros(n, nb)?;
+        let t0 = Instant::now();
+        generate_covariance(
+            &mut tiles,
+            locs,
+            theta,
+            Metric::Euclidean,
+            1e-8,
+            &NativeBackend,
+            &sched,
+        )?;
+        let marker = variant.precision_map(p, Some(&tiles))?;
+        cholesky::prepare_tiles(&mut tiles, variant, &marker);
+        // realized storage: over-budget tiles refused compression
+        let ranks = tiles.rank_map();
+        let realized = PrecisionMap::from_fn(p, |i, j| {
+            if ranks.get(i, j).is_some() {
+                Precision::F16
+            } else {
+                tiles.tile(TileId::new(i, j)).precision()
+            }
+        });
+        let mut plan = CholeskyPlan::build_tlr(p, nb, variant, realized);
+        let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+        let exec = TileExecutor::new(&tiles, &NativeBackend)
+            .with_tlr(TlrSpec { tolerance, max_rank });
+        let trace = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]))?;
+        let wall = t0.elapsed().as_secs_f64();
+        let decode_ns = exec.stats.decode_ns();
+        let stats = tiles.tlr_stats();
+        let resident = tiles.resident_bytes();
+        runs.push((wall, plan, trace, resident, ranks, stats, decode_ns));
+    }
+    runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (median_s, plan, trace, resident, ranks, stats, decode_ns) =
+        runs.swap_remove(runs.len() / 2);
+    let total_flops = plan.total_flops();
+    let conversions = plan.conversion_totals();
+    let modeled = datamove::simulate_pipeline_ranked(
+        &plan.graph,
+        &DeviceModel::v100(),
+        nb,
+        &plan.map,
+        &conversions,
+        1,
+        Some(&ranks),
+    )
+    .demand_bytes;
+    Ok(CaseResult {
+        key: key.to_string(),
+        label: variant.label(p),
+        nb,
+        tasks: plan.graph.len(),
+        total_flops,
+        median_s,
+        gflops: total_flops / median_s / 1e9,
+        resident_bytes: resident,
+        full_dp_bytes: p * (p + 1) / 2 * nb * nb * 8,
+        idle_s: trace.idle_ns(workers) as f64 / 1e9,
+        utilization: trace.utilization(workers),
+        gen_fused: false,
+        fused_gemm: true,
+        conversions,
+        counts: PipelineCounts::default(),
+        solve_ns: 0,
+        decode_ns,
+        bf16_unpacks: 0,
+        f16_tiles: 0,
+        modeled_transfer_bytes: modeled,
+        recovery_attempts: 0,
+        escalated_tiles: 0,
+        tlr: stats,
+    })
+}
+
+/// One point of the `--ablation` sweep: the realized census and
+/// footprint of the variant's map, plus the factorization backward
+/// error `||L L^T - A||_max`.  Adaptive points sweep the tolerance;
+/// `tlr` points run the same tolerances with compression; the single
+/// `indblocks` point is the paper's independent-block baseline, whose
+/// large error against TLR's bounded one is the accuracy-gap story.
 struct AblationRow {
+    variant: &'static str,
     tolerance: f64,
     label: String,
     census: PrecisionCensus,
     resident_bytes: usize,
     max_abs_err: f64,
+    tlr: TlrStats,
 }
 
-/// Sweep the adaptive tolerance over the four-tier ladder: each point
-/// generates the covariance, resolves the norm-based map, factors under
-/// it and measures the reconstruction error — the accuracy/bytes
-/// frontier the f16 tier sits on.
+/// Max lower-triangle deviation `||L L^T - A||_max` of the factored
+/// tiles against the pristine dense covariance.
+fn factor_backward_err(tiles: &TileMatrix, a: &DenseMatrix, n: usize) -> f64 {
+    let l = tiles.to_dense(true);
+    let llt = l.matmul_nt(&l);
+    let mut err = 0.0f64;
+    for j in 0..n {
+        for i in j..n {
+            err = err.max((llt.get(i, j) - a.get(i, j)).abs());
+        }
+    }
+    err
+}
+
+/// Sweep the adaptive tolerance over the four-tier ladder and the TLR
+/// compression at the same tolerances, closing with the
+/// independent-block baseline: each point generates the covariance,
+/// resolves its map, factors under it and measures the reconstruction
+/// error — the accuracy/bytes frontier the storage tiers sit on.
 fn tolerance_ablation(
     locs: &[Location],
     theta: MaternParams,
@@ -284,8 +413,8 @@ fn tolerance_ablation(
 ) -> Result<Vec<AblationRow>> {
     let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, ..Default::default() });
     let tols = [1e-2, 1e-3, 1e-4, 1e-6, 1e-8, 1e-10];
-    let mut rows = Vec::with_capacity(tols.len());
-    for &tol in &tols {
+    let mut rows = Vec::with_capacity(2 * tols.len() + 1);
+    let fresh = |sched: &Scheduler| -> Result<TileMatrix> {
         let mut tiles = TileMatrix::zeros(n, nb)?;
         generate_covariance(
             &mut tiles,
@@ -294,8 +423,12 @@ fn tolerance_ablation(
             Metric::Euclidean,
             1e-8,
             &NativeBackend,
-            &sched,
+            sched,
         )?;
+        Ok(tiles)
+    };
+    for &tol in &tols {
+        let mut tiles = fresh(&sched)?;
         let a = tiles.to_dense(true);
         let map = PrecisionMap::adaptive(&tiles, tol);
         let census = map.census();
@@ -307,20 +440,44 @@ fn tolerance_ablation(
             &NativeBackend,
             &sched,
         )?;
-        let l = tiles.to_dense(true);
-        let llt = l.matmul_nt(&l);
-        let mut err = 0.0f64;
-        for j in 0..n {
-            for i in j..n {
-                err = err.max((llt.get(i, j) - a.get(i, j)).abs());
-            }
-        }
         rows.push(AblationRow {
+            variant: "adaptive",
             tolerance: tol,
             label,
             census,
             resident_bytes: tiles.resident_bytes(),
-            max_abs_err: err,
+            max_abs_err: factor_backward_err(&tiles, &a, n),
+            tlr: TlrStats::default(),
+        });
+    }
+    for &tol in &tols {
+        let mut tiles = fresh(&sched)?;
+        let a = tiles.to_dense(true);
+        let variant = Variant::Tlr { tolerance: tol, max_rank: nb };
+        let plan = cholesky::factorize_tiles(&mut tiles, variant, &NativeBackend, &sched)?;
+        rows.push(AblationRow {
+            variant: "tlr",
+            tolerance: tol,
+            label: variant.label(n / nb),
+            census: plan.map.census(),
+            resident_bytes: tiles.resident_bytes(),
+            max_abs_err: factor_backward_err(&tiles, &a, n),
+            tlr: tiles.tlr_stats(),
+        });
+    }
+    {
+        let mut tiles = fresh(&sched)?;
+        let a = tiles.to_dense(true);
+        let variant = Variant::IndependentBlocks;
+        cholesky::factorize_tiles(&mut tiles, variant, &NativeBackend, &sched)?;
+        rows.push(AblationRow {
+            variant: "indblocks",
+            tolerance: 0.0,
+            label: variant.label(n / nb),
+            census: variant.precision_map(n / nb, None)?.census(),
+            resident_bytes: tiles.resident_bytes(),
+            max_abs_err: factor_backward_err(&tiles, &a, n),
+            tlr: TlrStats::default(),
         });
     }
     Ok(rows)
@@ -351,8 +508,11 @@ fn to_json(
         for (i, r) in ablation.iter().enumerate() {
             let _ = write!(
                 out,
-                "    {{\"tolerance\": {:e}, \"label\": \"{}\", \"dp\": {}, \"sp\": {}, \
-                 \"f16\": {}, \"hp\": {}, \"resident_bytes\": {}, \"max_abs_err\": {:.3e}}}",
+                "    {{\"variant\": \"{}\", \"tolerance\": {:e}, \"label\": \"{}\", \
+                 \"dp\": {}, \"sp\": {}, \"f16\": {}, \"hp\": {}, \"resident_bytes\": {}, \
+                 \"max_abs_err\": {:.3e}, \"tlr_tiles\": {}, \"avg_rank\": {:.2}, \
+                 \"compressed_bytes\": {}}}",
+                r.variant,
                 r.tolerance,
                 json_escape(&r.label),
                 r.census.dp,
@@ -360,7 +520,10 @@ fn to_json(
                 r.census.f16,
                 r.census.hp,
                 r.resident_bytes,
-                r.max_abs_err
+                r.max_abs_err,
+                r.tlr.tiles,
+                r.tlr.avg_rank(),
+                r.tlr.bytes
             );
             out.push_str(if i + 1 < ablation.len() { ",\n" } else { "\n" });
         }
@@ -379,7 +542,8 @@ fn to_json(
              \"crosscov_tasks\": {}, \"resolve_tasks\": {}, \"solve_ns\": {}, \
              \"decode_ns\": {}, \"bf16_unpacks\": {}, \"f16_tiles\": {}, \
              \"modeled_transfer_bytes\": {:.1}, \"recovery_attempts\": {}, \
-             \"escalated_tiles\": {}}}",
+             \"escalated_tiles\": {}, \"tlr_tiles\": {}, \"avg_rank\": {:.2}, \
+             \"compressed_bytes\": {}}}",
             json_escape(&r.key),
             json_escape(&r.label),
             r.nb,
@@ -407,7 +571,10 @@ fn to_json(
             r.f16_tiles,
             r.modeled_transfer_bytes,
             r.recovery_attempts,
-            r.escalated_tiles
+            r.escalated_tiles,
+            r.tlr.tiles,
+            r.tlr.avg_rank(),
+            r.tlr.bytes
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -478,12 +645,14 @@ fn run() -> Result<()> {
         .collect();
     mpcholesky::datagen::morton_sort(&mut locs);
 
-    let variants: [(&str, Variant); 5] = [
+    let variants: [(&str, Variant); 7] = [
         ("dp", Variant::FullDp),
         ("mp_t2", Variant::MixedPrecision { diag_thick: 2 }),
         ("3p_t2_4", Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 }),
         ("4p_t2_4_6", Variant::FourPrecision { dp_thick: 2, sp_thick: 4, f16_thick: 6 }),
         ("adaptive_1e-8", Variant::Adaptive { tolerance: 1e-8 }),
+        ("tlr_1e-6", Variant::Tlr { tolerance: 1e-6, max_rank: 64 }),
+        ("indblocks", Variant::IndependentBlocks),
     ];
 
     let mut rows = Vec::new();
@@ -497,7 +666,11 @@ fn run() -> Result<()> {
             continue;
         }
         for (key, variant) in &variants {
-            let r = bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy, opts)?;
+            let r = if matches!(variant, Variant::Tlr { .. }) {
+                tlr_case(key, *variant, &locs, theta, n, nb, workers, reps, policy)?
+            } else {
+                bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy, opts)?
+            };
             table.row(&[
                 r.key.clone(),
                 format!("{nb}"),
@@ -531,17 +704,20 @@ fn run() -> Result<()> {
         let nb_min = nb_list.iter().copied().filter(|nb| n % nb == 0).min();
         if let Some(nb) = nb_min {
             ablation = tolerance_ablation(&locs, theta, n, nb, workers, policy)?;
-            println!("# tolerance ablation (adaptive maps, nb = {nb}):");
+            println!("# tolerance ablation (adaptive / tlr / indblocks maps, nb = {nb}):");
             for r in &ablation {
                 println!(
-                    "#   tol {:>7.0e}  {:28}  dp {:>3} sp {:>3} f16 {:>3} hp {:>3}  \
-                     {:>8.2} MiB  err {:.3e}",
+                    "#   {:9} tol {:>7.0e}  {:28}  dp {:>3} sp {:>3} f16 {:>3} hp {:>3}  \
+                     lr {:>3} r~{:<5.1} {:>8.2} MiB  err {:.3e}",
+                    r.variant,
                     r.tolerance,
                     r.label,
                     r.census.dp,
                     r.census.sp,
                     r.census.f16,
                     r.census.hp,
+                    r.tlr.tiles,
+                    r.tlr.avg_rank(),
                     r.resident_bytes as f64 / (1024.0 * 1024.0),
                     r.max_abs_err
                 );

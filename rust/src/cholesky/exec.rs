@@ -34,7 +34,7 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::fault::FaultPlan;
-use crate::kernels::TileBackend;
+use crate::kernels::{lowrank, TileBackend};
 use crate::matern::{matern_block, Location, MaternParams, Metric};
 use crate::scheduler::graph::{Access, ResourceId};
 use crate::tile::{convert, Precision, TileBuf, TileId, TileMatrix, TileSlot};
@@ -114,6 +114,8 @@ pub struct ExecStats {
     decode_ns: AtomicU64,
     bf16_unpacks: AtomicU64,
     f16_unpacks: AtomicU64,
+    lr_decompresses: AtomicU64,
+    lr_compresses: AtomicU64,
 }
 
 impl ExecStats {
@@ -131,6 +133,28 @@ impl ExecStats {
     pub fn f16_unpacks(&self) -> u64 {
         self.f16_unpacks.load(Ordering::Relaxed)
     }
+
+    /// Number of low-rank tile decompressions (`lr2d` cache fills).
+    pub fn lr_decompresses(&self) -> u64 {
+        self.lr_decompresses.load(Ordering::Relaxed)
+    }
+
+    /// Number of low-rank recompressions (`d2lr` truncations).
+    pub fn lr_compresses(&self) -> u64 {
+        self.lr_compresses.load(Ordering::Relaxed)
+    }
+}
+
+/// TLR truncation parameters carried by the executor for `d2lr`
+/// recompression tasks (`KernelCall` stays `Copy + Eq`, so the f64
+/// tolerance cannot ride on the task payload itself).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TlrSpec {
+    /// Relative Frobenius truncation tolerance (`||A - UV^T||_F <=
+    /// tolerance * ||A||_F`).
+    pub tolerance: f64,
+    /// Rank budget; recompression past it falls back to dense f64.
+    pub max_rank: usize,
 }
 
 /// Time one bf16 unpack into the run-wide counters.
@@ -147,6 +171,14 @@ fn decode_timed_f16<F: FnOnce()>(stats: &ExecStats, f: F) {
     f();
     stats.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     stats.f16_unpacks.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Time one low-rank decompression into the run-wide counters.
+fn decode_timed_lr<F: FnOnce()>(stats: &ExecStats, f: F) {
+    let t0 = Instant::now();
+    f();
+    stats.decode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    stats.lr_decompresses.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Grow-and-slice helper for scratch buffers.
@@ -188,7 +220,7 @@ fn f32_view<'a>(
         }
         // reachable by running a plan against tiles prepared under a
         // different PrecisionMap, hence an error rather than a panic
-        TileBuf::F64(_) => slot.f32_scratch.as_deref().ok_or_else(|| {
+        TileBuf::F64(_) | TileBuf::LowRank { .. } => slot.f32_scratch.as_deref().ok_or_else(|| {
             Error::PlanMismatch(format!("{what}: f64 tile lacks its dconv2s view"))
         }),
     }
@@ -217,6 +249,17 @@ fn f64_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f64>, stats: &ExecSt
             decode_timed_f16(stats, || convert::unpack_f16_to_f64(bits, &mut scratch[..]));
             scratch
         }
+        TileBuf::LowRank { u, v, rank } => {
+            // prefer the step's lr2d dense view when the plan filled it;
+            // otherwise decompress into thread-local scratch
+            if let Some(cached) = slot.f64_scratch.as_deref() {
+                return cached;
+            }
+            let nb = u.len() / rank;
+            scratch.resize(nb * nb, 0.0);
+            decode_timed_lr(stats, || lowrank::decompress(u, v, *rank, nb, &mut scratch[..]));
+            scratch
+        }
     }
 }
 
@@ -237,6 +280,12 @@ fn f32_op_view<'a>(slot: &'a TileSlot, scratch: &'a mut Vec<f32>, stats: &ExecSt
         TileBuf::F16(bits) => {
             scratch.resize(bits.len(), 0.0);
             decode_timed_f16(stats, || convert::unpack_f16(bits, &mut scratch[..]));
+            scratch
+        }
+        TileBuf::LowRank { u, v, rank } => {
+            let nb = u.len() / rank;
+            scratch.resize(nb * nb, 0.0);
+            decode_timed_lr(stats, || lowrank::decompress_f32(u, v, *rank, nb, &mut scratch[..]));
             scratch
         }
     }
@@ -274,11 +323,61 @@ fn promote_view(slot: &mut TileSlot, nn: usize, stats: &ExecStats) -> Result<()>
         TileBuf::F16(bits) => {
             decode_timed_f16(stats, || convert::unpack_f16_to_f64(bits, &mut dst[..]))
         }
+        TileBuf::LowRank { u, v, rank } => {
+            let nb = u.len() / *rank;
+            decode_timed_lr(stats, || lowrank::decompress(u, v, *rank, nb, &mut dst[..]));
+        }
         TileBuf::F64(_) => {
             return Err(Error::PlanMismatch("sconv2d scheduled on an f64 tile".into()))
         }
     }
     Ok(())
+}
+
+/// TLR-aware `C <- C - A B^T` onto a dense f64 accumulator: dispatch on
+/// the operand storage classes, reading compressed operands in factored
+/// form (no `nb x nb` intermediate) and everything else through the
+/// inline-conversion views.
+#[allow(clippy::too_many_arguments)]
+fn gemm_f64_tlr<B: TileBackend + ?Sized>(
+    backend: &B,
+    cb: &mut [f64],
+    a: &TileSlot,
+    b: &TileSlot,
+    scr_a: &mut Vec<f64>,
+    scr_b: &mut Vec<f64>,
+    stats: &ExecStats,
+    nb: usize,
+) {
+    match (lr_factors(a), lr_factors(b)) {
+        (Some((ua, va, ra)), Some((ub, vb, rb))) => {
+            lowrank::gemm_lr_lr(cb, ua, va, ra, ub, vb, rb, nb)
+        }
+        (Some((u, v, r)), None) => {
+            let bv = f64_op_view(b, scr_b, stats);
+            lowrank::gemm_lr_d(cb, u, v, r, bv, nb);
+        }
+        (None, Some((u, v, r))) => {
+            let av = f64_op_view(a, scr_a, stats);
+            lowrank::gemm_d_lr(cb, av, u, v, r, nb);
+        }
+        (None, None) => {
+            let av = f64_op_view(a, scr_a, stats);
+            let bv = f64_op_view(b, scr_b, stats);
+            backend.gemm_f64(cb, av, bv, nb);
+        }
+    }
+}
+
+/// The tile's committed low-rank factors, if those are the live values.
+/// A compressed tile mid-step — between its `lr2d` fill and `d2lr`
+/// refactor — carries the truth in its dense scratch, so its (stale)
+/// factors must not be read; [`f64_op_view`] prefers the scratch then.
+fn lr_factors(slot: &TileSlot) -> Option<(&[f64], &[f64], usize)> {
+    match &slot.buf {
+        TileBuf::LowRank { u, v, rank } if slot.f64_scratch.is_none() => Some((u, v, *rank)),
+        _ => None,
+    }
 }
 
 /// Generated covariance values must be finite *before* any demotion —
@@ -308,6 +407,8 @@ pub struct TileExecutor<'a, B: TileBackend + ?Sized> {
     /// Fault-injection plan (ambient `PALLAS_INJECT` by default):
     /// codelet-level forced errors/panics and decode-time corruption.
     pub faults: Option<Arc<FaultPlan>>,
+    /// TLR truncation parameters for `d2lr` recompression tasks.
+    pub tlr: Option<TlrSpec>,
 }
 
 impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
@@ -319,7 +420,15 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
             pipe: None,
             stats: ExecStats::default(),
             faults: crate::fault::env_plan(),
+            tlr: None,
         }
+    }
+
+    /// Arm the executor with TLR truncation parameters (required by
+    /// plans that schedule `CompressLr` tasks).
+    pub fn with_tlr(mut self, spec: TlrSpec) -> Self {
+        self.tlr = Some(spec);
+        self
     }
 
     pub fn with_generation(mut self, gen: GenContext<'a>) -> Self {
@@ -445,6 +554,13 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 convert::demote(tmp, sp);
                                 convert::pack_f16(sp, bits);
                             }
+                            TileBuf::LowRank { .. } => {
+                                // compression runs on generated values
+                                // (prepare_tiles), never the other way
+                                return Err(Error::PlanMismatch(
+                                    "matern scheduled on a compressed tile".into(),
+                                ));
+                            }
                         }
                         Ok(())
                     }
@@ -469,6 +585,11 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 convert::pack_f16(&*a, bits);
                                 r
                             }
+                            // TLR pins diagonals dense f64; a compressed
+                            // pivot tile is a plan/storage mismatch
+                            TileBuf::LowRank { .. } => Err(Error::PlanMismatch(
+                                "dpotrf scheduled on a compressed tile".into(),
+                            )),
                         }
                     }
                     KernelCall::DemoteDiag { k } => {
@@ -512,6 +633,49 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                     }
                     KernelCall::DropScratch { i, k } => {
                         tm.tile_ptr(TileId::new(i, k)).drop_scratch();
+                        Ok(())
+                    }
+                    KernelCall::DecompressLr { i, k } => {
+                        // TLR decode-cache fill: materialize the dense
+                        // f64 view once per step; the step's GemmBatch
+                        // accumulates into it and CompressLr re-factors
+                        // and drops it (the DecodeBf16 lifetime rules)
+                        let slot = tm.tile_ptr(TileId::new(i, k));
+                        let TileSlot { buf, f64_scratch, .. } = slot;
+                        match buf {
+                            TileBuf::LowRank { u, v, rank } => {
+                                let dst = f64_scratch.get_or_insert_with(|| vec![0.0; nn]);
+                                decode_timed_lr(&self.stats, || {
+                                    lowrank::decompress(u, v, *rank, nb, dst)
+                                });
+                                Ok(())
+                            }
+                            other => Err(Error::PlanMismatch(format!(
+                                "lr2d scheduled on a {} tile",
+                                other.kind()
+                            ))),
+                        }
+                    }
+                    KernelCall::CompressLr { i, k } => {
+                        // truncate the updated dense view back to factors
+                        // (each recompression re-satisfies the per-step
+                        // bound ||A - UV^T||_F <= tol ||A||_F); ranks
+                        // over budget stay resident dense f64
+                        let spec = self.tlr.ok_or_else(|| {
+                            Error::PlanMismatch("d2lr task scheduled without TlrSpec".into())
+                        })?;
+                        let slot = tm.tile_ptr(TileId::new(i, k));
+                        let dense = slot.f64_scratch.take().ok_or_else(|| {
+                            Error::PlanMismatch("d2lr: tile lacks its lr2d dense view".into())
+                        })?;
+                        self.stats.lr_compresses.fetch_add(1, Ordering::Relaxed);
+                        match lowrank::compress(&dense, nb, spec.tolerance, spec.max_rank) {
+                            Some((u, v, rank)) => {
+                                slot.buf = TileBuf::LowRank { u, v, rank };
+                            }
+                            None => slot.buf = TileBuf::F64(dense),
+                        }
+                        slot.drop_scratch();
                         Ok(())
                     }
                     KernelCall::TrsmDp { i, k } => {
@@ -579,6 +743,12 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 self.backend.syrk_f32(cv, av, nb);
                                 convert::pack_f16(&*cv, bits);
                             }
+                            TileBuf::LowRank { .. } => {
+                                // TLR plans schedule SyrkNative instead
+                                return Err(Error::PlanMismatch(
+                                    "dsyrk scheduled on a compressed diagonal tile".into(),
+                                ));
+                            }
                         }
                         Ok(())
                     }
@@ -641,14 +811,47 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // converted inline — their step-scoped views are
                         // long freed by the time a batch runs.
                         let c = tm.tile_ptr(TileId::new(i, j));
-                        match &mut c.buf {
+                        let TileSlot { buf: cbuf, f64_scratch: cscratch, .. } = c;
+                        match cbuf {
                             TileBuf::F64(cb) => {
                                 for k in k0..k1 {
                                     let a = tm.tile_ptr(TileId::new(i, k));
                                     let b = tm.tile_ptr(TileId::new(j, k));
-                                    let av = f64_op_view(a, &mut scr.a64, &self.stats);
-                                    let bv = f64_op_view(b, &mut scr.b64, &self.stats);
-                                    self.backend.gemm_f64(cb, av, bv, nb);
+                                    gemm_f64_tlr(
+                                        self.backend,
+                                        cb,
+                                        a,
+                                        b,
+                                        &mut scr.a64,
+                                        &mut scr.b64,
+                                        &self.stats,
+                                        nb,
+                                    );
+                                }
+                            }
+                            TileBuf::LowRank { .. } => {
+                                // TLR target: accumulate into the dense
+                                // f64 view the step's lr2d task filled
+                                // (CompressLr re-factors it afterwards)
+                                let cb = cscratch.as_deref_mut().ok_or_else(|| {
+                                    Error::PlanMismatch(
+                                        "gemm batch on a compressed target lacks its lr2d view"
+                                            .into(),
+                                    )
+                                })?;
+                                for k in k0..k1 {
+                                    let a = tm.tile_ptr(TileId::new(i, k));
+                                    let b = tm.tile_ptr(TileId::new(j, k));
+                                    gemm_f64_tlr(
+                                        self.backend,
+                                        cb,
+                                        a,
+                                        b,
+                                        &mut scr.a64,
+                                        &mut scr.b64,
+                                        &self.stats,
+                                        nb,
+                                    );
                                 }
                             }
                             TileBuf::F32(cb) => {
@@ -714,7 +917,8 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         // operands converted inline (GemmBatch protocol)
                         let l = tm.tile_ptr(TileId::new(k, k));
                         let b = tm.tile_ptr(TileId::new(i, k));
-                        match &mut b.buf {
+                        let TileSlot { buf: bbuf, f64_scratch: bscratch, .. } = b;
+                        match bbuf {
                             TileBuf::F64(bb) => {
                                 let lv = f64_op_view(l, &mut scr.a64, &self.stats);
                                 self.backend.trsm_f64(lv, bb, nb);
@@ -739,6 +943,20 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 self.backend.trsm_f32(lv, bv, nb);
                                 convert::pack_f16(&*bv, bits);
                             }
+                            TileBuf::LowRank { v, rank, .. } => {
+                                let lv = f64_op_view(l, &mut scr.a64, &self.stats);
+                                if let Some(dense) = bscratch.as_deref_mut() {
+                                    // mid-step: the lr2d view holds the
+                                    // live values — solve there and let
+                                    // CompressLr re-factor afterwards
+                                    self.backend.trsm_f64(lv, dense, nb);
+                                } else {
+                                    // factors are live (first panel):
+                                    // B = U V^T L^{-T} solves in place on
+                                    // the V columns, rank unchanged
+                                    lowrank::trsm_lr(lv, v, *rank, nb);
+                                }
+                            }
                         }
                         Ok(())
                     }
@@ -748,8 +966,14 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let c = tm.tile_ptr(TileId::new(j, j));
                         match &mut c.buf {
                             TileBuf::F64(cb) => {
-                                let av = f64_op_view(a, &mut scr.a64, &self.stats);
-                                self.backend.syrk_f64(cb, av, nb);
+                                // compressed panel operand: factored-form
+                                // syrk (C -= U (V^T V) U^T, lower only)
+                                if let Some((u, v, r)) = lr_factors(a) {
+                                    lowrank::syrk_lr(cb, u, v, r, nb);
+                                } else {
+                                    let av = f64_op_view(a, &mut scr.a64, &self.stats);
+                                    self.backend.syrk_f64(cb, av, nb);
+                                }
                             }
                             TileBuf::F32(cb) => {
                                 let av = f32_op_view(a, &mut scr.a32, &self.stats);
@@ -770,6 +994,12 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                                 });
                                 self.backend.syrk_f32(cv, av, nb);
                                 convert::pack_f16(&*cv, bits);
+                            }
+                            TileBuf::LowRank { .. } => {
+                                // diagonals are pinned dense f64 in TLR
+                                return Err(Error::PlanMismatch(
+                                    "nsyrk scheduled on a compressed diagonal tile".into(),
+                                ));
                             }
                         }
                         Ok(())

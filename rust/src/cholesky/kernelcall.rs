@@ -50,6 +50,18 @@ pub enum KernelCall {
     /// Free tile (i, k)'s conversion scratch at the end of step k (keeps
     /// the transient footprint O(p) tiles).
     DropScratch { i: usize, k: usize },
+    /// TLR per-step decode: materialize the dense f64 view of low-rank
+    /// tile (i, k) into its conversion scratch once, for the step's
+    /// trailing-update readers *and* as the accumulation target of the
+    /// step's `GemmBatch` — the low-rank analogue of
+    /// [`KernelCall::DecodeBf16`], with the same dedup-and-drop lifetime.
+    DecompressLr { i: usize, k: usize },
+    /// TLR recompression: truncate tile (i, k)'s updated dense scratch
+    /// back to `LowRank` factors (dropping the scratch) after the panel
+    /// `trsm`; each recompression re-satisfies the per-step truncation
+    /// bound `||A - U V^T||_F <= tol ||A||_F`.  Falls back to resident
+    /// dense f64 when the tile's numerical rank exceeds `max_rank`.
+    CompressLr { i: usize, k: usize },
     /// Line 19: `dsyrk` on diagonal tile j with panel (j, k).
     SyrkDp { j: usize, k: usize },
     /// Line 25: `dgemm` on a native-f64 target (i, j).
@@ -132,7 +144,9 @@ impl KernelCall {
             | KernelCall::DemoteTile { .. }
             | KernelCall::PromoteTile { .. }
             | KernelCall::DecodeBf16 { .. }
-            | KernelCall::DecodeF16 { .. } => (nb * nb) as f64,
+            | KernelCall::DecodeF16 { .. }
+            | KernelCall::DecompressLr { .. }
+            | KernelCall::CompressLr { .. } => (nb * nb) as f64,
             KernelCall::DropScratch { .. } => 0.0,
             KernelCall::TrsmDp { .. }
             | KernelCall::TrsmSp { .. }
@@ -187,6 +201,8 @@ impl KernelCall {
             KernelCall::PromoteTile { .. } => "sconv2d",
             KernelCall::DecodeBf16 { .. } => "hconv2s",
             KernelCall::DecodeF16 { .. } => "fconv2s",
+            KernelCall::DecompressLr { .. } => "lr2d",
+            KernelCall::CompressLr { .. } => "d2lr",
             KernelCall::DropScratch { .. } => "free",
             KernelCall::SyrkDp { .. } => "dsyrk",
             KernelCall::GemmDp { .. } => "dgemm",
@@ -307,6 +323,19 @@ mod tests {
             KernelCall::GemmBatch { i: 5, j: 3, k0: 0, k1: 2, prec: Precision::F16 }.name(),
             "fgemmb"
         );
+    }
+
+    #[test]
+    fn tlr_calls_report_cost_and_names() {
+        let nb = 64;
+        let d = KernelCall::DecompressLr { i: 3, k: 1 };
+        assert_eq!(d.flops_at(nb), (nb * nb) as f64);
+        assert_eq!(d.name(), "lr2d");
+        assert_eq!(d.precision(), Precision::F64);
+        let c = KernelCall::CompressLr { i: 3, k: 1 };
+        assert_eq!(c.flops_at(nb), (nb * nb) as f64);
+        assert_eq!(c.name(), "d2lr");
+        assert_eq!(c.precision(), Precision::F64);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod solve;
 
-pub use exec::{CrossCovContext, ExecStats, GenContext, PipelineContext, TileExecutor};
+pub use exec::{CrossCovContext, ExecStats, GenContext, PipelineContext, TileExecutor, TlrSpec};
 pub use kernelcall::{KernelCall, SizedCall};
 pub use pipeline::{
     merge_graphs, run_pipeline, BatchCall, PanelResolver, PipelineBuffers, PipelineCounts,
@@ -65,6 +65,21 @@ pub enum Variant {
     /// is computed from the *generated* covariance, so planning happens
     /// after generation (see [`generate_and_factorize`]).
     Adaptive { tolerance: f64 },
+    /// Tile low-rank compression (HiCMA/ExaGeoStat-TLR line of work,
+    /// arXiv 1804.09137): tiles the adaptive norm rule would demote to a
+    /// packed format *compress* to truncated `U V^T` factors instead
+    /// (`||A_ij - U V^T||_F <= tolerance * ||A_ij||_F`, rank capped at
+    /// `max_rank` — over-budget tiles stay dense f64), near-diagonal
+    /// tiles stay dense f32, diagonals dense f64.  Like
+    /// [`Variant::Adaptive`] the assignment needs generated covariance
+    /// data, and the recovery ladder escalates a breakdown in a
+    /// compressed panel LowRank -> f32 -> f64.
+    Tlr { tolerance: f64, max_rank: usize },
+    /// The paper's independent-block approximation (SSV-B's cheapest
+    /// baseline): diagonal tiles factor in DP, every off-diagonal tile
+    /// is zeroed — [`Variant::Dst`] with `diag_thick = 1`, named so the
+    /// bench can reproduce the paper's accuracy comparison against TLR.
+    IndependentBlocks,
 }
 
 impl Variant {
@@ -105,8 +120,15 @@ impl Variant {
                     Bf16
                 }
             }
-            Variant::Adaptive { .. } => panic!(
-                "Variant::Adaptive has no static tile precision; compute a \
+            Variant::IndependentBlocks => {
+                if d == 0 {
+                    F64
+                } else {
+                    F32
+                }
+            }
+            Variant::Adaptive { .. } | Variant::Tlr { .. } => panic!(
+                "data-dependent variant has no static tile precision; compute a \
                  PrecisionMap from the generated tiles (Variant::precision_map)"
             ),
         }
@@ -135,6 +157,34 @@ impl Variant {
                     crate::invalid_arg!("precision_map: p={p} but tile matrix has p={}", t.p());
                 }
                 Ok(PrecisionMap::adaptive(t, tolerance))
+            }
+            Variant::Tlr { tolerance, max_rank } => {
+                if !(tolerance.is_finite() && tolerance >= 0.0) {
+                    crate::invalid_arg!("tlr tolerance must be finite and >= 0, got {tolerance}");
+                }
+                if max_rank == 0 {
+                    crate::invalid_arg!("tlr max_rank must be >= 1");
+                }
+                let t = tiles.ok_or_else(|| {
+                    crate::error::Error::InvalidArgument(
+                        "Variant::Tlr needs generated covariance tiles to compute \
+                         its precision map"
+                            .into(),
+                    )
+                })?;
+                if t.p() != p {
+                    crate::invalid_arg!("precision_map: p={p} but tile matrix has p={}", t.p());
+                }
+                // Same Frobenius-norm machinery as Adaptive; tiles the
+                // norm rule would demote below f32 become compression
+                // candidates, marked F16 (one marker class, so the
+                // recovery ladder's promote_one(F16) = F32 escalates a
+                // compressed tile straight to dense f32).
+                let base = PrecisionMap::adaptive(t, tolerance);
+                Ok(PrecisionMap::from_fn(p, |i, j| match base.get(i, j) {
+                    Precision::Bf16 | Precision::F16 => Precision::F16,
+                    x => x,
+                }))
             }
             _ => Ok(PrecisionMap::from_fn(p, |i, j| self.tile_precision(i, j))),
         }
@@ -177,9 +227,16 @@ impl Variant {
                 let f = frac(f16_thick) - d - s;
                 format!("DP({d}%)-SP({s}%)-F16({f}%)-HP({}%)", 100 - d - s - f)
             }
+            Variant::IndependentBlocks => {
+                let d = frac(1);
+                format!("IndBlk-DP({d}%)-Zero({}%)", 100 - d)
+            }
             // the realized split depends on the data; report the knob
             // (PrecisionMap::label gives the realized percentages)
             Variant::Adaptive { tolerance } => format!("Adaptive(tol={tolerance:.0e})"),
+            Variant::Tlr { tolerance, max_rank } => {
+                format!("TLR(tol={tolerance:.0e},r<={max_rank})")
+            }
         }
     }
 
@@ -204,11 +261,12 @@ impl Variant {
 /// tiles to their native reduced storage (Algorithm 1 lines 2-6, with
 /// bf16 packing for Bf16 tiles) or zero them (DST, which keeps all live
 /// tiles f64).  Shared with the pipeline drivers (MLE / kriging), whose
-/// static plans need the same storage prep before generation runs.
-pub(crate) fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
+/// static plans need the same storage prep before generation runs, and
+/// public for external tracers that stage a TLR run by hand.
+pub fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &PrecisionMap) {
     match variant {
         Variant::FullDp => {}
-        Variant::Dst { .. } => {
+        Variant::Dst { .. } | Variant::IndependentBlocks => {
             let p = tiles.p();
             for j in 0..p {
                 for i in j..p {
@@ -224,6 +282,26 @@ pub(crate) fn prepare_tiles(tiles: &mut TileMatrix, variant: Variant, map: &Prec
         | Variant::ThreePrecision { .. }
         | Variant::FourPrecision { .. }
         | Variant::Adaptive { .. } => tiles.apply_precision_map(map),
+        Variant::Tlr { tolerance, max_rank } => {
+            let p = tiles.p();
+            let nb = tiles.nb();
+            for j in 0..p {
+                for i in j..p {
+                    let prec = map.get(i, j);
+                    let slot = tiles.tile_mut(TileId::new(i, j));
+                    if i != j && matches!(prec, Precision::F16 | Precision::Bf16) {
+                        // Over-budget ranks refuse compression; the tile
+                        // then stays resident dense f64 and the realized
+                        // map (built off the tiles) schedules it densely.
+                        if !slot.compress_to_low_rank(nb, tolerance, max_rank) {
+                            slot.convert_to(Precision::F64);
+                        }
+                    } else {
+                        slot.convert_to(prec);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -276,6 +354,25 @@ pub fn factorize_tiles_with_opts(
         crate::invalid_arg!("precision map order {} != tile matrix order {}", map.p(), tiles.p());
     }
     prepare_tiles(tiles, variant, &map);
+    if let Variant::Tlr { tolerance, max_rank } = variant {
+        // Compression can refuse over-budget tiles, so rebuild the map
+        // from what storage actually landed: LowRank tiles keep the F16
+        // marker, everything else reports its resident precision.
+        let realized = PrecisionMap::from_fn(tiles.p(), |i, j| {
+            let slot = tiles.tile(TileId::new(i, j));
+            if slot.buf.rank().is_some() {
+                Precision::F16
+            } else {
+                slot.precision()
+            }
+        });
+        let mut plan = CholeskyPlan::build_tlr(tiles.p(), tiles.nb(), variant, realized);
+        let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+        let executor =
+            TileExecutor::new(tiles, backend).with_tlr(TlrSpec { tolerance, max_rank });
+        sched.run(&mut plan.graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
+        return Ok(plan);
+    }
     let mut plan = CholeskyPlan::build_with_opts(tiles.p(), tiles.nb(), variant, map, false, opts);
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let executor = TileExecutor::new(tiles, backend);
@@ -498,7 +595,7 @@ pub fn generate_and_factorize(
     }
     theta.validate()?;
 
-    if matches!(variant, Variant::Adaptive { .. }) {
+    if matches!(variant, Variant::Adaptive { .. } | Variant::Tlr { .. }) {
         generate_covariance(tiles, locations, theta, metric, nugget, backend, sched)?;
         return factorize_tiles(tiles, variant, backend, sched);
     }

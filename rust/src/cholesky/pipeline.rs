@@ -390,6 +390,8 @@ impl PipelineCounts {
                 | KernelCall::PromoteTile { .. }
                 | KernelCall::DecodeBf16 { .. }
                 | KernelCall::DecodeF16 { .. }
+                | KernelCall::DecompressLr { .. }
+                | KernelCall::CompressLr { .. }
                 | KernelCall::DropScratch { .. } => c.conversion += 1,
                 _ => c.factor += 1,
             }

@@ -196,7 +196,9 @@ impl CholeskyPlan {
         };
 
         let prec = |i: usize, j: usize| map.get(i, j);
-        let is_dst = matches!(variant, Variant::Dst { .. });
+        // IndependentBlocks is DST with thickness 1: off-diagonal tiles
+        // are zeroed and never touched, so the same pruning applies
+        let is_dst = matches!(variant, Variant::Dst { .. } | Variant::IndependentBlocks);
         // in DST, off-band tiles are zero and never touched
         let live = |i: usize, j: usize| !is_dst || map.is_dp(i, j);
 
@@ -483,6 +485,122 @@ impl CholeskyPlan {
         });
 
         Self { graph, p, nb, variant, map, options: opts, dp_flops, sp_flops, step_conversions }
+    }
+
+    /// Lower a TLR factorization: compressed tiles (the map's `F16`
+    /// marker — see `Variant::Tlr::precision_map`) ride a
+    /// decompress/update/recompress protocol with the decode cache's
+    /// dedup-and-drop lifetime, dense tiles the inline-conversion
+    /// native codelets.
+    ///
+    /// Per panel step `k`, each trailing target (i, k):
+    /// 1. `lr2d` (compressed tiles, k > 0): fill the dense f64 view.
+    /// 2. One left-looking `GemmBatch` (k > 0) applies panel updates
+    ///    0..k in ascending order — compressed *operands* are read in
+    ///    factored form (`gemm_lr_lr`/`gemm_d_lr`/`gemm_lr_d`),
+    ///    compressed *targets* accumulate into the `lr2d` view.
+    /// 3. `TrsmNative` solves against the (always dense-f64) diagonal —
+    ///    on the dense view when live, else in factored form (`trsm_lr`
+    ///    forward-substitutes the V columns; the k == 0 panel).
+    /// 4. `d2lr` (compressed tiles, k > 0): truncate the solved view
+    ///    back to factors, dropping the scratch; over-budget ranks stay
+    ///    resident dense f64.
+    /// 5. `SyrkNative` folds the panel tile into its diagonal —
+    ///    `syrk_lr` when the operand is compressed.
+    ///
+    /// The `map` must reflect *realized* storage (compression can fall
+    /// back to dense when a tile's numerical rank exceeds the budget),
+    /// so callers build it off the prepared tiles, not the variant rule.
+    pub fn build_tlr(p: usize, nb: usize, variant: Variant, map: PrecisionMap) -> Self {
+        assert_eq!(map.p(), p, "precision map order {} != plan order {p}", map.p());
+        let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
+        let mut dp_flops = 0.0;
+        let mut sp_flops = 0.0;
+        let mut step_conversions: Vec<ConversionCounts> = Vec::with_capacity(p);
+        let mut submit = |g: &mut TaskGraph<SizedCall>,
+                          call: KernelCall,
+                          acc: Vec<(TileId, Access)>| {
+            let sc = SizedCall { call, nb };
+            match call.precision() {
+                Precision::F64 => dp_flops += call.flops_at(nb),
+                Precision::F32 | Precision::F16 | Precision::Bf16 => {
+                    sp_flops += call.flops_at(nb)
+                }
+            }
+            g.submit(sc, acc)
+        };
+        // the compressed-tile marker (diagonals are never compressed)
+        let lr = |i: usize, j: usize| {
+            i != j && matches!(map.get(i, j), Precision::F16 | Precision::Bf16)
+        };
+
+        for k in 0..p {
+            let mut conv = ConversionCounts::default();
+            for i in (k + 1)..p {
+                if k == 0 {
+                    continue; // no trailing updates before the first panel
+                }
+                if lr(i, k) {
+                    conv.promotes += 1; // lr2d: an f64-view materialization
+                    submit(
+                        &mut graph,
+                        KernelCall::DecompressLr { i, k },
+                        vec![(TileId::new(i, k), Access::Write)],
+                    );
+                }
+                let mut acc = Vec::with_capacity(2 * k + 1);
+                for t in 0..k {
+                    acc.push((TileId::new(i, t), Access::Read));
+                    acc.push((TileId::new(k, t), Access::Read));
+                }
+                acc.push((TileId::new(i, k), Access::Write));
+                let prec = if lr(i, k) { Precision::F64 } else { map.get(i, k) };
+                submit(&mut graph, KernelCall::GemmBatch { i, j: k, k0: 0, k1: k, prec }, acc);
+            }
+
+            submit(&mut graph, KernelCall::PotrfDp { k }, vec![(TileId::new(k, k), Access::Write)]);
+
+            for i in (k + 1)..p {
+                submit(
+                    &mut graph,
+                    KernelCall::TrsmNative { i, k },
+                    vec![(TileId::new(k, k), Access::Read), (TileId::new(i, k), Access::Write)],
+                );
+                if lr(i, k) && k > 0 {
+                    conv.demotes += 1; // d2lr: a shrinking re-store
+                    submit(
+                        &mut graph,
+                        KernelCall::CompressLr { i, k },
+                        vec![(TileId::new(i, k), Access::Write)],
+                    );
+                }
+                submit(
+                    &mut graph,
+                    KernelCall::SyrkNative { j: i, k },
+                    vec![(TileId::new(i, k), Access::Read), (TileId::new(i, i), Access::Write)],
+                );
+            }
+            step_conversions.push(conv);
+        }
+
+        graph.compute_cheapness(|sc| match sc.call.precision() {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+            Precision::F16 => 2,
+            Precision::Bf16 => 3,
+        });
+
+        Self {
+            graph,
+            p,
+            nb,
+            variant,
+            map,
+            options: PlanOptions { fuse_gemm: true },
+            dp_flops,
+            sp_flops,
+            step_conversions,
+        }
     }
 
     /// Total useful flops in the plan.

@@ -111,6 +111,7 @@ impl RunConfig {
         let mut sp_thick: Option<usize> = None;
         let mut f16_thick: Option<usize> = None;
         let mut tolerance: Option<f64> = None;
+        let mut max_rank: Option<usize> = None;
 
         fn parse<T: std::str::FromStr>(k: &str, v: &str) -> Result<T> {
             v.parse().map_err(|_| {
@@ -165,6 +166,7 @@ impl RunConfig {
                 "sp_thick" => sp_thick = Some(parse(k, v)?),
                 "f16_thick" => f16_thick = Some(parse(k, v)?),
                 "tolerance" => tolerance = Some(parse(k, v)?),
+                "max_rank" => max_rank = Some(parse(k, v)?),
                 other => {
                     return Err(Error::InvalidArgument(format!(
                         "unknown config key {other:?}"
@@ -178,6 +180,7 @@ impl RunConfig {
             || sp_thick.is_some()
             || f16_thick.is_some()
             || tolerance.is_some()
+            || max_rank.is_some()
         {
             let name = variant_name.unwrap_or_else(|| {
                 match self.variant {
@@ -187,6 +190,8 @@ impl RunConfig {
                     Variant::ThreePrecision { .. } => "3p",
                     Variant::FourPrecision { .. } => "4p",
                     Variant::Adaptive { .. } => "adaptive",
+                    Variant::Tlr { .. } => "tlr",
+                    Variant::IndependentBlocks => "indblocks",
                 }
                 .to_string()
             });
@@ -222,12 +227,28 @@ impl RunConfig {
                     // other keys are overridden
                     tolerance: tolerance.unwrap_or(match self.variant {
                         Variant::Adaptive { tolerance } => tolerance,
+                        Variant::Tlr { tolerance, .. } => tolerance,
                         _ => 1e-8,
                     }),
                 },
+                "tlr" => Variant::Tlr {
+                    tolerance: tolerance.unwrap_or(match self.variant {
+                        Variant::Tlr { tolerance, .. } => tolerance,
+                        Variant::Adaptive { tolerance } => tolerance,
+                        _ => 1e-8,
+                    }),
+                    max_rank: max_rank.unwrap_or(match self.variant {
+                        Variant::Tlr { max_rank, .. } => max_rank,
+                        // half the default tile edge: generous for the
+                        // exponential-kernel maps while still strictly
+                        // cheaper than dense f32
+                        _ => 32,
+                    }),
+                },
+                "indblocks" => Variant::IndependentBlocks,
                 other => {
                     return Err(Error::InvalidArgument(format!(
-                        "variant must be dp|mp|dst|3p|4p|adaptive, got {other:?}"
+                        "variant must be dp|mp|dst|3p|4p|adaptive|tlr|indblocks, got {other:?}"
                     )))
                 }
             };
@@ -256,6 +277,14 @@ impl RunConfig {
         if let Variant::Adaptive { tolerance } = self.variant {
             if !(tolerance.is_finite() && tolerance >= 0.0) {
                 crate::invalid_arg!("adaptive tolerance must be finite and >= 0, got {tolerance}");
+            }
+        }
+        if let Variant::Tlr { tolerance, max_rank } = self.variant {
+            if !(tolerance.is_finite() && tolerance >= 0.0) {
+                crate::invalid_arg!("tlr tolerance must be finite and >= 0, got {tolerance}");
+            }
+            if max_rank == 0 {
+                crate::invalid_arg!("tlr max_rank must be >= 1");
             }
         }
         if !(self.theta.iter().all(|&x| x > 0.0)) {
@@ -358,6 +387,30 @@ mod tests {
         over.insert("tolerance".to_string(), "1e-4".to_string());
         c.apply(&over).unwrap();
         assert_eq!(c.variant, Variant::Adaptive { tolerance: 1e-4 });
+    }
+
+    #[test]
+    fn tlr_variant_parses_with_and_without_knobs() {
+        let c = RunConfig::parse("variant = tlr\ntolerance = 1e-6\nmax_rank = 16\n").unwrap();
+        assert_eq!(c.variant, Variant::Tlr { tolerance: 1e-6, max_rank: 16 });
+        // defaults
+        let d = RunConfig::parse("variant = tlr\n").unwrap();
+        assert_eq!(d.variant, Variant::Tlr { tolerance: 1e-8, max_rank: 32 });
+        // a lone max_rank override re-assembles the variant, keeping tol
+        let mut c = c;
+        let mut over = HashMap::new();
+        over.insert("max_rank".to_string(), "8".to_string());
+        c.apply(&over).unwrap();
+        assert_eq!(c.variant, Variant::Tlr { tolerance: 1e-6, max_rank: 8 });
+        // knob validation
+        assert!(RunConfig::parse("variant = tlr\nmax_rank = 0\n").is_err());
+        assert!(RunConfig::parse("variant = tlr\ntolerance = -1.0\n").is_err());
+    }
+
+    #[test]
+    fn indblocks_variant_parses() {
+        let c = RunConfig::parse("variant = indblocks\n").unwrap();
+        assert_eq!(c.variant, Variant::IndependentBlocks);
     }
 
     #[test]

@@ -1,0 +1,555 @@
+//! Rank-aware codelets for the tile low-rank (TLR) storage class.
+//!
+//! A compressed tile stores two column-major `nb x rank` f64 factors with
+//! `A ~= U V^T` — `2 * nb * rank` resident values instead of `nb * nb`
+//! (see `TileBuf::LowRank`).  This module owns both the truncation that
+//! produces the factors and the rank-aware update kernels the Cholesky
+//! executor dispatches on them.
+//!
+//! # Compression rule and error bound
+//!
+//! [`compress`] runs column-pivoted modified Gram–Schmidt (an ACA-style
+//! cross approximation with full column pivoting): at every step it peels
+//! off the remaining column of largest 2-norm, orthogonalizes, and stops
+//! as soon as the *squared* Frobenius norm of the residual drops to
+//! `tol^2 * ||A||_F^2`.  The documented bound every downstream test pins
+//! against is therefore
+//!
+//! ```text
+//! ||A - U V^T||_F  <=  tol * ||A||_F
+//! ```
+//!
+//! Pivot selection is deterministic (largest squared column norm, lowest
+//! index on ties) and the residual column norms are recomputed exactly
+//! after every elimination, so compression of the same bytes always
+//! yields the same factors — the property the cross-worker bit-identity
+//! pins in `rust/tests/tlr.rs` rely on.
+//!
+//! # Kernel algebra
+//!
+//! All kernels keep the dense codelet contracts (`gemm`: `C <- C - A B^T`,
+//! `syrk`: `C <- C - A A^T` lower triangle, `trsm`: `B <- B L^{-T}`) but
+//! exploit the factored form so no `nb x nb` intermediate is formed:
+//!
+//! * `gemm_lr_lr`:  `C -= Ua (Va^T Vb) Ub^T`   (rank_a x rank_b core)
+//! * `gemm_d_lr`:   `C -= (A Vb) Ub^T`
+//! * `gemm_lr_d`:   `C -= Ua (B Va)^T`
+//! * `syrk_lr`:     `C -= U (V^T V) U^T`        (lower triangle only)
+//! * `trsm_lr`:     `B = U V^T L^{-T}`  via  `V <- L^{-1} V` (U unchanged)
+//!
+//! Each is exact in the factors (plain reassociation of the dense
+//! product), so its backward error versus the dense oracle is bounded by
+//! the truncation error of its operands: `tol * ||operand||_F`
+//! amplified by the norms of the other factors — the bound
+//! `rust/tests/tlr.rs` checks kernel-by-kernel.
+
+/// Column-pivoted MGS truncation of a column-major `nb x nb` tile.
+///
+/// Returns `Some((u, v, rank))` with `a ~= u * v^T` (both factors
+/// column-major `nb x rank`) and `||a - u v^T||_F <= tolerance * ||a||_F`,
+/// or `None` when no rank `<= max_rank.min(nb)` representation meets the
+/// bound (the caller keeps the tile dense).  A `max_rank >= nb` budget
+/// always succeeds: the exact `U = A, V = I` splitting is returned when
+/// truncation fails to converge earlier.  The zero tile compresses to an
+/// explicit rank-1 zero factorization.
+pub fn compress(
+    a: &[f64],
+    nb: usize,
+    tolerance: f64,
+    max_rank: usize,
+) -> Option<(Vec<f64>, Vec<f64>, usize)> {
+    assert_eq!(a.len(), nb * nb, "compress expects a full nb x nb tile");
+    assert!(nb > 0 && max_rank > 0);
+    let mut colsq = vec![0.0f64; nb];
+    for c in 0..nb {
+        let col = &a[c * nb..(c + 1) * nb];
+        colsq[c] = col.iter().map(|x| x * x).sum();
+    }
+    let norm_sq: f64 = colsq.iter().sum();
+    let target = tolerance * tolerance * norm_sq;
+    if norm_sq == 0.0 || norm_sq <= target {
+        // Zero tile (or a tolerance so loose anything passes): explicit
+        // rank-1 zero factors keep the storage class uniform.
+        return Some((vec![0.0; nb], vec![0.0; nb], 1));
+    }
+
+    let budget = max_rank.min(nb);
+    let mut resid = a.to_vec();
+    let mut u = Vec::with_capacity(budget * nb);
+    let mut v = Vec::with_capacity(budget * nb);
+    let mut rank = 0usize;
+
+    while rank < budget {
+        // Deterministic pivot: largest residual column, lowest index wins.
+        let mut pivot = 0usize;
+        let mut best = -1.0f64;
+        for (c, &sq) in colsq.iter().enumerate() {
+            if sq > best {
+                best = sq;
+                pivot = c;
+            }
+        }
+        if best <= 0.0 {
+            break; // residual is exactly zero — done early
+        }
+        let pnorm = best.sqrt();
+        // q = normalized pivot column of the residual.
+        let q: Vec<f64> = resid[pivot * nb..(pivot + 1) * nb]
+            .iter()
+            .map(|x| x / pnorm)
+            .collect();
+        // v_col[c] = q^T resid[:, c]; then eliminate q from every column
+        // and recompute the column norms exactly (no downdating drift).
+        let mut vcol = vec![0.0f64; nb];
+        for c in 0..nb {
+            let col = &mut resid[c * nb..(c + 1) * nb];
+            let dot: f64 = q.iter().zip(col.iter()).map(|(qi, xi)| qi * xi).sum();
+            vcol[c] = dot;
+            let mut sq = 0.0f64;
+            for (x, qi) in col.iter_mut().zip(q.iter()) {
+                *x -= dot * qi;
+                sq += *x * *x;
+            }
+            colsq[c] = sq;
+        }
+        u.extend_from_slice(&q);
+        v.extend_from_slice(&vcol);
+        rank += 1;
+        let resid_sq: f64 = colsq.iter().sum();
+        if resid_sq <= target {
+            return Some((u, v, rank));
+        }
+    }
+
+    if max_rank >= nb {
+        // Full budget: fall back to the exact U = A, V = I splitting so a
+        // rank == nb roundtrip is bit-faithful rather than MGS-rounded.
+        let mut ident = vec![0.0f64; nb * nb];
+        for k in 0..nb {
+            ident[k + k * nb] = 1.0;
+        }
+        return Some((a.to_vec(), ident, nb));
+    }
+    None
+}
+
+/// Dense reconstruction `out = u * v^T` (column-major `nb x nb`).
+pub fn decompress(u: &[f64], v: &[f64], rank: usize, nb: usize, out: &mut [f64]) {
+    assert_eq!(u.len(), nb * rank);
+    assert_eq!(v.len(), nb * rank);
+    assert_eq!(out.len(), nb * nb);
+    out.fill(0.0);
+    for r in 0..rank {
+        let uc = &u[r * nb..(r + 1) * nb];
+        let vc = &v[r * nb..(r + 1) * nb];
+        for (c, &vrc) in vc.iter().enumerate() {
+            if vrc == 0.0 {
+                continue;
+            }
+            let col = &mut out[c * nb..(c + 1) * nb];
+            for (o, &ur) in col.iter_mut().zip(uc.iter()) {
+                *o += ur * vrc;
+            }
+        }
+    }
+}
+
+/// `decompress` into f32 storage: accumulate in f64, round once at the end
+/// (same single-rounding discipline as the dense demote path).
+pub fn decompress_f32(u: &[f64], v: &[f64], rank: usize, nb: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), nb * nb);
+    let mut tmp = vec![0.0f64; nb * nb];
+    decompress(u, v, rank, nb, &mut tmp);
+    for (o, t) in out.iter_mut().zip(tmp.iter()) {
+        *o = *t as f32;
+    }
+}
+
+/// Squared Frobenius norm of `u * v^T` without decompressing:
+/// `||U V^T||_F^2 = sum_{k,l} (U^T U)_{kl} (V^T V)_{kl}`.
+pub fn frobenius_sq(u: &[f64], v: &[f64], rank: usize) -> f64 {
+    assert_eq!(u.len() % rank, 0);
+    let nb = u.len() / rank;
+    assert_eq!(v.len(), nb * rank);
+    let mut acc = 0.0f64;
+    for k in 0..rank {
+        let uk = &u[k * nb..(k + 1) * nb];
+        let vk = &v[k * nb..(k + 1) * nb];
+        for l in 0..rank {
+            let ul = &u[l * nb..(l + 1) * nb];
+            let vl = &v[l * nb..(l + 1) * nb];
+            let gu: f64 = uk.iter().zip(ul.iter()).map(|(a, b)| a * b).sum();
+            let gv: f64 = vk.iter().zip(vl.iter()).map(|(a, b)| a * b).sum();
+            acc += gu * gv;
+        }
+    }
+    acc
+}
+
+/// `c -= t * u^T` where `t` and `u` are column-major `nb x rank`
+/// (full-tile update — the shared epilogue of the gemm kernels).
+fn sub_ab_t(c: &mut [f64], t: &[f64], u: &[f64], rank: usize, nb: usize) {
+    for r in 0..rank {
+        let tc = &t[r * nb..(r + 1) * nb];
+        let uc = &u[r * nb..(r + 1) * nb];
+        for (col, &urc) in uc.iter().enumerate() {
+            if urc == 0.0 {
+                continue;
+            }
+            let out = &mut c[col * nb..(col + 1) * nb];
+            for (o, &tr) in out.iter_mut().zip(tc.iter()) {
+                *o -= tr * urc;
+            }
+        }
+    }
+}
+
+/// `c -= t * u^T`, lower triangle only (matches the dense `syrk` contract,
+/// which never touches the strict upper triangle of a diagonal tile).
+fn sub_ab_t_lower(c: &mut [f64], t: &[f64], u: &[f64], rank: usize, nb: usize) {
+    for r in 0..rank {
+        let tc = &t[r * nb..(r + 1) * nb];
+        let uc = &u[r * nb..(r + 1) * nb];
+        for (col, &urc) in uc.iter().enumerate() {
+            if urc == 0.0 {
+                continue;
+            }
+            let out = &mut c[col * nb..(col + 1) * nb];
+            for (o, &tr) in out.iter_mut().zip(tc.iter()).skip(col) {
+                *o -= tr * urc;
+            }
+        }
+    }
+}
+
+/// `dgemm` with both operands compressed:
+/// `C <- C - (Ua Va^T)(Ub Vb^T)^T = C - Ua (Va^T Vb) Ub^T`.
+pub fn gemm_lr_lr(
+    c: &mut [f64],
+    ua: &[f64],
+    va: &[f64],
+    ra: usize,
+    ub: &[f64],
+    vb: &[f64],
+    rb: usize,
+    nb: usize,
+) {
+    // m = Va^T Vb  (ra x rb, column-major)
+    let mut m = vec![0.0f64; ra * rb];
+    for j in 0..rb {
+        let vbj = &vb[j * nb..(j + 1) * nb];
+        for i in 0..ra {
+            let vai = &va[i * nb..(i + 1) * nb];
+            m[i + j * ra] = vai.iter().zip(vbj.iter()).map(|(a, b)| a * b).sum();
+        }
+    }
+    // t = Ua * m  (nb x rb)
+    let mut t = vec![0.0f64; nb * rb];
+    for j in 0..rb {
+        let tj = &mut t[j * nb..(j + 1) * nb];
+        for i in 0..ra {
+            let coeff = m[i + j * ra];
+            if coeff == 0.0 {
+                continue;
+            }
+            let uai = &ua[i * nb..(i + 1) * nb];
+            for (o, &ur) in tj.iter_mut().zip(uai.iter()) {
+                *o += ur * coeff;
+            }
+        }
+    }
+    sub_ab_t(c, &t, ub, rb, nb);
+}
+
+/// `dgemm` with a dense left operand and a compressed right operand:
+/// `C <- C - A (Ub Vb^T)^T = C - (A Vb) Ub^T`.
+pub fn gemm_d_lr(c: &mut [f64], a: &[f64], ub: &[f64], vb: &[f64], rb: usize, nb: usize) {
+    // t = A * Vb  (nb x rb)
+    let mut t = vec![0.0f64; nb * rb];
+    for j in 0..rb {
+        let vbj = &vb[j * nb..(j + 1) * nb];
+        let tj = &mut t[j * nb..(j + 1) * nb];
+        for (k, &vk) in vbj.iter().enumerate() {
+            if vk == 0.0 {
+                continue;
+            }
+            let acol = &a[k * nb..(k + 1) * nb];
+            for (o, &ar) in tj.iter_mut().zip(acol.iter()) {
+                *o += ar * vk;
+            }
+        }
+    }
+    sub_ab_t(c, &t, ub, rb, nb);
+}
+
+/// `dgemm` with a compressed left operand and a dense right operand:
+/// `C <- C - (Ua Va^T) B^T = C - Ua (B Va)^T`.
+pub fn gemm_lr_d(c: &mut [f64], ua: &[f64], va: &[f64], ra: usize, b: &[f64], nb: usize) {
+    // t = B * Va  (nb x ra)
+    let mut t = vec![0.0f64; nb * ra];
+    for j in 0..ra {
+        let vaj = &va[j * nb..(j + 1) * nb];
+        let tj = &mut t[j * nb..(j + 1) * nb];
+        for (k, &vk) in vaj.iter().enumerate() {
+            if vk == 0.0 {
+                continue;
+            }
+            let bcol = &b[k * nb..(k + 1) * nb];
+            for (o, &br) in tj.iter_mut().zip(bcol.iter()) {
+                *o += br * vk;
+            }
+        }
+    }
+    sub_ab_t(c, ua, &t, ra, nb);
+}
+
+/// `dsyrk` with a compressed operand:
+/// `C <- C - (U V^T)(U V^T)^T = C - U (V^T V) U^T`, lower triangle only.
+pub fn syrk_lr(c: &mut [f64], u: &[f64], v: &[f64], rank: usize, nb: usize) {
+    // m = V^T V  (rank x rank, symmetric)
+    let mut m = vec![0.0f64; rank * rank];
+    for j in 0..rank {
+        let vj = &v[j * nb..(j + 1) * nb];
+        for i in 0..rank {
+            let vi = &v[i * nb..(i + 1) * nb];
+            m[i + j * rank] = vi.iter().zip(vj.iter()).map(|(a, b)| a * b).sum();
+        }
+    }
+    // t = U * m  (nb x rank)
+    let mut t = vec![0.0f64; nb * rank];
+    for j in 0..rank {
+        let tj = &mut t[j * nb..(j + 1) * nb];
+        for i in 0..rank {
+            let coeff = m[i + j * rank];
+            if coeff == 0.0 {
+                continue;
+            }
+            let ui = &u[i * nb..(i + 1) * nb];
+            for (o, &ur) in tj.iter_mut().zip(ui.iter()) {
+                *o += ur * coeff;
+            }
+        }
+    }
+    sub_ab_t_lower(c, &t, u, rank, nb);
+}
+
+/// `dtrsm` on a compressed tile: `B <- B L^{-T}` for `B = U V^T` becomes
+/// `V <- L^{-1} V` (forward substitution per column of `V`); `U` is
+/// untouched and the rank is unchanged.
+pub fn trsm_lr(l: &[f64], v: &mut [f64], rank: usize, nb: usize) {
+    assert_eq!(l.len(), nb * nb);
+    assert_eq!(v.len(), nb * rank);
+    for col in 0..rank {
+        let x = &mut v[col * nb..(col + 1) * nb];
+        for r in 0..nb {
+            let mut s = x[r];
+            for c in 0..r {
+                s -= l[r + c * nb] * x[c];
+            }
+            x[r] = s / l[r + r * nb];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::blas;
+
+    fn frob(a: &[f64]) -> f64 {
+        a.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Deterministic pseudo-random tile from a seed (no RNG dep).
+    fn tile(nb: usize, seed: u64) -> Vec<f64> {
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+        (0..nb * nb)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) - 0.5
+            })
+            .collect()
+    }
+
+    /// Exponential-kernel covariance block between two separated 1-D
+    /// clusters — numerically low rank.
+    fn smooth_tile(nb: usize) -> Vec<f64> {
+        let mut a = vec![0.0f64; nb * nb];
+        for c in 0..nb {
+            for r in 0..nb {
+                let x = r as f64 / nb as f64;
+                let y = 4.0 + c as f64 / nb as f64;
+                a[r + c * nb] = (-(x - y).abs()).exp();
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn compress_meets_documented_bound() {
+        let nb = 16;
+        let a = smooth_tile(nb);
+        for &tol in &[1e-2, 1e-6, 1e-10] {
+            let (u, v, rank) = compress(&a, nb, tol, nb).expect("full budget always succeeds");
+            let mut back = vec![0.0; nb * nb];
+            decompress(&u, &v, rank, nb, &mut back);
+            let diff: Vec<f64> = a.iter().zip(back.iter()).map(|(x, y)| x - y).collect();
+            let err = frob(&diff);
+            assert!(
+                err <= tol * frob(&a) + 1e-14,
+                "tol={tol}: err {err} > bound {}",
+                tol * frob(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn rank_monotone_in_tolerance() {
+        let nb = 16;
+        let a = smooth_tile(nb);
+        let mut prev = usize::MAX;
+        for &tol in &[1e-12, 1e-9, 1e-6, 1e-3, 1e-1] {
+            let (_, _, rank) = compress(&a, nb, tol, nb).unwrap();
+            assert!(rank <= prev, "rank must not grow as tolerance loosens");
+            prev = rank;
+        }
+    }
+
+    #[test]
+    fn full_rank_budget_is_exact_and_tight_budget_refuses() {
+        let nb = 8;
+        let a = tile(nb, 7); // generic tile: numerically full rank
+        let (u, v, rank) = compress(&a, nb, 1e-15, nb).unwrap();
+        assert_eq!(rank, nb);
+        let mut back = vec![0.0; nb * nb];
+        decompress(&u, &v, rank, nb, &mut back);
+        assert_eq!(a, back, "rank == nb roundtrip is exact, bit for bit");
+        assert!(compress(&a, nb, 1e-15, 2).is_none());
+    }
+
+    #[test]
+    fn zero_tile_compresses_to_rank_one_zero() {
+        let nb = 4;
+        let zero = vec![0.0; nb * nb];
+        let (u, v, rank) = compress(&zero, nb, 1e-8, nb).unwrap();
+        assert_eq!(rank, 1);
+        assert!(u.iter().chain(v.iter()).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn frobenius_matches_dense() {
+        let nb = 12;
+        let a = smooth_tile(nb);
+        let (u, v, rank) = compress(&a, nb, 1e-12, nb).unwrap();
+        let mut back = vec![0.0; nb * nb];
+        decompress(&u, &v, rank, nb, &mut back);
+        let direct = frob(&back);
+        let gram = frobenius_sq(&u, &v, rank).sqrt();
+        assert!((direct - gram).abs() < 1e-9 * direct.max(1.0));
+    }
+
+    #[test]
+    fn gemm_kernels_match_dense_oracle() {
+        let nb = 12;
+        let tol = 1e-12;
+        let da = smooth_tile(nb);
+        let mut db = smooth_tile(nb);
+        db.iter_mut().enumerate().for_each(|(i, x)| *x *= 1.0 + (i % 7) as f64 * 0.1);
+        let (ua, va, ra) = compress(&da, nb, tol, nb).unwrap();
+        let (ub, vb, rb) = compress(&db, nb, tol, nb).unwrap();
+        let c0 = tile(nb, 3);
+
+        let mut oracle = c0.clone();
+        blas::gemm(&mut oracle, &da, &db, nb);
+
+        let scale = frob(&da) * frob(&db);
+        let check = |got: &[f64], label: &str| {
+            let err = got
+                .iter()
+                .zip(oracle.iter())
+                .map(|(g, o)| (g - o) * (g - o))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err <= 4.0 * tol * scale + 1e-10, "{label}: err {err}");
+        };
+
+        let mut c = c0.clone();
+        gemm_lr_lr(&mut c, &ua, &va, ra, &ub, &vb, rb, nb);
+        check(&c, "lr x lr");
+        let mut c = c0.clone();
+        gemm_d_lr(&mut c, &da, &ub, &vb, rb, nb);
+        check(&c, "dense x lr");
+        let mut c = c0.clone();
+        gemm_lr_d(&mut c, &ua, &va, ra, &db, nb);
+        check(&c, "lr x dense");
+    }
+
+    #[test]
+    fn syrk_matches_dense_oracle_lower_only() {
+        let nb = 10;
+        let tol = 1e-12;
+        let a = smooth_tile(nb);
+        let (u, v, rank) = compress(&a, nb, tol, nb).unwrap();
+        let c0 = tile(nb, 11);
+        let mut oracle = c0.clone();
+        blas::syrk(&mut oracle, &a, nb);
+        let mut c = c0.clone();
+        syrk_lr(&mut c, &u, &v, rank, nb);
+        let scale = frob(&a) * frob(&a);
+        for col in 0..nb {
+            for row in 0..nb {
+                let i = row + col * nb;
+                if row >= col {
+                    assert!((c[i] - oracle[i]).abs() <= 4.0 * tol * scale + 1e-10);
+                } else {
+                    assert_eq!(c[i], c0[i], "syrk_lr must not touch the upper triangle");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_matches_dense_oracle() {
+        let nb = 10;
+        let tol = 1e-12;
+        // well-conditioned lower factor
+        let mut l = vec![0.0f64; nb * nb];
+        for c in 0..nb {
+            for r in c..nb {
+                let val = if r == c { 2.0 + c as f64 * 0.1 } else { 0.3 / (1 + r - c) as f64 };
+                l[r + c * nb] = val;
+            }
+        }
+        let b = smooth_tile(nb);
+        let (u, mut v, rank) = compress(&b, nb, tol, nb).unwrap();
+        let mut oracle = b.clone();
+        blas::trsm(&l, &mut oracle, nb);
+        trsm_lr(&l, &mut v, rank, nb);
+        let mut got = vec![0.0; nb * nb];
+        decompress(&u, &v, rank, nb, &mut got);
+        let err = got
+            .iter()
+            .zip(oracle.iter())
+            .map(|(g, o)| (g - o) * (g - o))
+            .sum::<f64>()
+            .sqrt();
+        // ||B - UV^T||_F <= tol ||B||_F amplified by ||L^{-1}||.
+        assert!(err <= 16.0 * tol * frob(&b) + 1e-10, "err {err}");
+    }
+
+    #[test]
+    fn decompress_f32_rounds_once() {
+        let nb = 6;
+        let a = smooth_tile(nb);
+        let (u, v, rank) = compress(&a, nb, 1e-12, nb).unwrap();
+        let mut dense = vec![0.0f64; nb * nb];
+        decompress(&u, &v, rank, nb, &mut dense);
+        let mut got = vec![0.0f32; nb * nb];
+        decompress_f32(&u, &v, rank, nb, &mut got);
+        for (g, d) in got.iter().zip(dense.iter()) {
+            assert_eq!(*g, *d as f32);
+        }
+    }
+}

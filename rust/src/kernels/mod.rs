@@ -14,6 +14,7 @@
 //! `rust/tests/backend_parity.rs`.
 
 pub mod blas;
+pub mod lowrank;
 
 pub use blas::{flops, Scalar};
 

@@ -11,10 +11,11 @@
 //! defaults — see `rust/src/config.rs` and `configs/*.conf`):
 //!   --config FILE    key = value run configuration
 //!   --n N            sites (default 1024)         --nb NB   tile (64)
-//!   --variant V      dp | mp | dst | 3p | 4p | adaptive (mp)
+//!   --variant V      dp | mp | dst | 3p | 4p | adaptive | tlr | indblocks (mp)
 //!   --thick T        band thickness (2)           --sp-thick T  3p/4p band
 //!   --f16-thick T    4p f16 band edge (sp+dp)
-//!   --tolerance T    adaptive precision tolerance (1e-8)
+//!   --tolerance T    adaptive/tlr precision tolerance (1e-8)
+//!   --max-rank R     tlr per-tile rank budget (32)
 //!   --backend B      native | pjrt (native)       --workers W (all)
 //!   --policy P       fifo | lifo | cp | pf scheduler ready-queue policy
 //!   --range R        theta2 of the generator (0.1) --seed S  (42)
@@ -69,6 +70,7 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("sp-thick", "sp_thick"),
         ("f16-thick", "f16_thick"),
         ("tolerance", "tolerance"),
+        ("max-rank", "max_rank"),
         ("max-evals", "max_evals"),
         ("retry-budget", "retry_budget"),
         ("deadline-ms", "deadline_ms"),
@@ -190,9 +192,9 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
 /// Re-run one factorization with tracing enabled and dump the per-task
 /// spans as CSV (`task,worker,start_ns,end_ns` — gantt-plottable).
 fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> {
-    use mpcholesky::cholesky::{self, CholeskyPlan, TileExecutor};
+    use mpcholesky::cholesky::{self, CholeskyPlan, TileExecutor, TlrSpec};
     use mpcholesky::scheduler::SchedulerConfig;
-    use mpcholesky::tile::TileMatrix;
+    use mpcholesky::tile::{Precision, PrecisionMap, TileId, TileMatrix};
 
     let workers = if rc.workers == 0 {
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
@@ -208,10 +210,10 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
     let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
     let p = rc.n / rc.nb;
     let mut tiles = TileMatrix::zeros(rc.n, rc.nb)?;
-    let adaptive = matches!(rc.variant, Variant::Adaptive { .. });
-    let mut plan = if adaptive {
-        // adaptive plans need the generated tile norms: generate first,
-        // resolve the map, then trace the factorization phase
+    // data-dependent variants need the generated tile norms: generate
+    // first, resolve the map, then trace the factorization phase
+    let adaptive = matches!(rc.variant, Variant::Adaptive { .. } | Variant::Tlr { .. });
+    if adaptive {
         cholesky::generate_covariance(
             &mut tiles,
             &field.locations,
@@ -221,13 +223,30 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
             &NativeBackend,
             &sched,
         )?;
+    }
+    let mut tlr_spec = None;
+    let mut plan = if let Variant::Tlr { tolerance, max_rank } = rc.variant {
+        let marker = rc.variant.precision_map(p, Some(&tiles))?;
+        cholesky::prepare_tiles(&mut tiles, rc.variant, &marker);
+        // realized storage: compression may have refused over-budget tiles
+        let ranks = tiles.rank_map();
+        let realized = PrecisionMap::from_fn(p, |i, j| {
+            if ranks.get(i, j).is_some() {
+                Precision::F16
+            } else {
+                tiles.tile(TileId::new(i, j)).precision()
+            }
+        });
+        tlr_spec = Some(TlrSpec { tolerance, max_rank });
+        CholeskyPlan::build_tlr(p, rc.nb, rc.variant, realized)
+    } else if adaptive {
         let map = rc.variant.precision_map(p, Some(&tiles))?;
         tiles.apply_precision_map(&map);
         CholeskyPlan::build_with_map(p, rc.nb, rc.variant, map, false)
     } else {
         CholeskyPlan::build(p, rc.nb, rc.variant, true)
     };
-    if !adaptive && !matches!(rc.variant, Variant::Dst { .. }) {
+    if !adaptive && !matches!(rc.variant, Variant::Dst { .. } | Variant::IndependentBlocks) {
         // precision-native storage: switch tiles to the map's formats up
         // front so the fused generation tasks write them directly (DST
         // keeps its live tiles f64 and never touches the off-band zeros)
@@ -235,6 +254,9 @@ fn dump_trace(field: &SyntheticField, rc: &RunConfig, path: &str) -> Result<()> 
     }
     let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
     let mut exec = TileExecutor::new(&tiles, &NativeBackend);
+    if let Some(spec) = tlr_spec {
+        exec = exec.with_tlr(spec);
+    }
     if !adaptive {
         exec = exec.with_generation(mpcholesky::cholesky::GenContext {
             locations: &field.locations,

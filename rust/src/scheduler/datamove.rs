@@ -18,7 +18,7 @@ use std::collections::HashMap;
 use super::graph::{Access, ResourceId, TaskGraph};
 use super::TaskCost;
 use crate::cholesky::ConversionCounts;
-use crate::tile::{Precision, PrecisionMap};
+use crate::tile::{Precision, PrecisionMap, TileRanks};
 
 /// Accelerator + interconnect description.
 #[derive(Clone, Debug)]
@@ -213,13 +213,34 @@ pub fn simulate_pipeline<P: TaskCost>(
     conversions: &ConversionCounts,
     rhs_cols: usize,
 ) -> DataMoveReport {
+    simulate_pipeline_ranked(graph, dev, nb, map, conversions, rhs_cols, None)
+}
+
+/// [`simulate_pipeline`] with a realized rank assignment: a tile stored
+/// low-rank moves its factors, not a dense block, so wherever `ranks`
+/// records `rank` the transfer charges `2 * nb * rank * 8` bytes (the
+/// `U` and `V` f64 panels) instead of the map's `nb^2` payload.  Dense
+/// tiles (`ranks.get == None`, or `ranks == None` entirely) fall back to
+/// the map-precision pricing.
+pub fn simulate_pipeline_ranked<P: TaskCost>(
+    graph: &TaskGraph<P>,
+    dev: &DeviceModel,
+    nb: usize,
+    map: &PrecisionMap,
+    conversions: &ConversionCounts,
+    rhs_cols: usize,
+    ranks: Option<&TileRanks>,
+) -> DataMoveReport {
     let mut cache = GpuCache::new(dev.gpu_mem_bytes);
     let mut rep = DataMoveReport::default();
     for t in graph.tasks() {
         let prec = t.payload.precision();
         for &(res, mode) in &t.accesses {
             let bytes = match res {
-                ResourceId::Tile(tile) => nb * nb * map.get(tile.i, tile.j).bytes(),
+                ResourceId::Tile(tile) => match ranks.and_then(|r| r.get(tile.i, tile.j)) {
+                    Some(rank) => 2 * nb * rank * 8,
+                    None => nb * nb * map.get(tile.i, tile.j).bytes(),
+                },
                 ResourceId::Rhs(_) => nb * rhs_cols.max(1) * 8,
                 // full-chunk upper bound: the pricer sees resources, not
                 // payloads, so a partial last block is charged the full
@@ -363,6 +384,23 @@ mod tests {
         assert_eq!(rep.moved_bytes, rep.demand_bytes, "overfetch 1.0");
         // the compute stream is untouched by conversion pricing
         assert_eq!(rep.compute_s, base.compute_s);
+    }
+
+    #[test]
+    fn ranked_pricing_charges_factor_bytes() {
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 0), Access::Read)]);
+        let mut dev = DeviceModel::v100();
+        dev.prefetch_overfetch = 1.0;
+        let nb = 128usize;
+        let map = PrecisionMap::uniform(2, Precision::F16);
+        let conv = ConversionCounts::default();
+        let ranks = TileRanks::from_fn(2, |i, j| if i != j { Some(3) } else { None });
+        let rep = simulate_pipeline_ranked(&g, &dev, nb, &map, &conv, 1, Some(&ranks));
+        assert_eq!(rep.demand_bytes, (2 * nb * 3 * 8) as f64, "2*nb*rank f64 values");
+        // without ranks the same tile prices at its dense map bytes
+        let dense = simulate_pipeline_ranked(&g, &dev, nb, &map, &conv, 1, None);
+        assert_eq!(dense.demand_bytes, (nb * nb * 2) as f64);
     }
 
     #[test]

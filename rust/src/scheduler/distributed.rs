@@ -22,7 +22,7 @@ use std::collections::HashMap;
 
 use super::graph::{Access, ResourceId, TaskGraph};
 use super::TaskCost;
-use crate::tile::{Precision, PrecisionMap, TileId};
+use crate::tile::{Precision, PrecisionMap, TileId, TileRanks};
 
 /// Cluster description (defaults match a Shaheen-II-like Cray XC40).
 #[derive(Clone, Debug)]
@@ -109,6 +109,21 @@ pub fn simulate<P: TaskCost>(
     nb: usize,
     map: &PrecisionMap,
 ) -> DistributedReport {
+    simulate_ranked(graph, cluster, nb, map, None)
+}
+
+/// [`simulate`] with a realized rank assignment: tiles `ranks` records
+/// as compressed cross the wire as their `U`/`V` factors —
+/// `2 * nb * rank * 8` bytes — instead of a dense `nb^2` payload; dense
+/// tiles keep the map-precision pricing.  Message counts are unchanged
+/// (ownership/DAG property), only priced bytes differ.
+pub fn simulate_ranked<P: TaskCost>(
+    graph: &TaskGraph<P>,
+    cluster: &ClusterModel,
+    nb: usize,
+    map: &PrecisionMap,
+    ranks: Option<&TileRanks>,
+) -> DistributedReport {
     let mut compute = vec![0.0f64; cluster.nodes];
     let mut comm = vec![0.0f64; cluster.nodes];
     let mut rep = DistributedReport::default();
@@ -153,7 +168,10 @@ pub fn simulate<P: TaskCost>(
                     // for a partial last block), scalars one f64
                     let res_bytes = match res {
                         ResourceId::Tile(tile) => {
-                            (nb * nb * map.get(tile.i, tile.j).bytes()) as f64
+                            match ranks.and_then(|r| r.get(tile.i, tile.j)) {
+                                Some(rank) => (2 * nb * rank * 8) as f64,
+                                None => (nb * nb * map.get(tile.i, tile.j).bytes()) as f64,
+                            }
                         }
                         ResourceId::Rhs(_) => (nb * 8) as f64,
                         ResourceId::Pred(_) => (crate::cholesky::PRED_BLOCK * 8) as f64,
@@ -294,6 +312,26 @@ mod tests {
         assert_eq!(sp.total_comm_bytes * 2.0, dp.total_comm_bytes);
         // message counts are a pure ownership/DAG property
         assert_eq!(dp.per_tile_messages, sp.per_tile_messages);
+    }
+
+    #[test]
+    fn compressed_tiles_cross_the_wire_as_factors() {
+        let c = ClusterModel::shaheen(4);
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 1), Access::Write)]);
+        g.submit(
+            Toy { flops: 1e6, prec: Precision::F64 },
+            vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
+        );
+        let nb = 128usize;
+        let map = PrecisionMap::uniform(2, Precision::F16);
+        let ranks = TileRanks::from_fn(2, |_, _| Some(5));
+        let lr = simulate_ranked(&g, &c, nb, &map, Some(&ranks));
+        assert_eq!(lr.total_comm_bytes, (2 * nb * 5 * 8) as f64);
+        let dense = simulate_ranked(&g, &c, nb, &map, None);
+        assert_eq!(dense.total_comm_bytes, (nb * nb * 2) as f64);
+        // message counts never depend on pricing
+        assert_eq!(lr.messages, dense.messages);
     }
 
     #[test]

@@ -287,26 +287,52 @@ pub enum TileBuf {
     F32(Vec<f32>),
     F16(Vec<u16>),
     Bf16(Vec<u16>),
+    /// Tile low-rank (TLR) compression: the tile is stored as the
+    /// truncated factorization `U V^T` with `u`/`v` column-major
+    /// `nb x rank` f64 factors, so `2 * nb * rank` values replace
+    /// `nb * nb`.  Arithmetic on the factors stays f64; the compression
+    /// error is bounded by the truncation tolerance at compress time
+    /// (see [`crate::kernels::lowrank::compress`]).
+    LowRank { u: Vec<f64>, v: Vec<f64>, rank: usize },
 }
 
 impl TileBuf {
-    /// Storage precision of this buffer.
+    /// Storage precision of this buffer.  `LowRank` reports `F64` — its
+    /// factor values *are* f64; the byte saving comes from storing fewer
+    /// of them, which [`Self::resident_bytes`] accounts for.
     pub fn precision(&self) -> Precision {
         match self {
-            TileBuf::F64(_) => Precision::F64,
+            TileBuf::F64(_) | TileBuf::LowRank { .. } => Precision::F64,
             TileBuf::F32(_) => Precision::F32,
             TileBuf::F16(_) => Precision::F16,
             TileBuf::Bf16(_) => Precision::Bf16,
         }
     }
 
-    /// Element count.
+    /// Variant name for diagnostics (distinguishes `LowRank` from the
+    /// dense F64 its [`Self::precision`] reports).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TileBuf::F64(_) => "F64",
+            TileBuf::F32(_) => "F32",
+            TileBuf::F16(_) => "F16",
+            TileBuf::Bf16(_) => "Bf16",
+            TileBuf::LowRank { .. } => "LowRank",
+        }
+    }
+
+    /// Element count of the *represented* tile (`nb * nb` for a
+    /// compressed tile, not the stored factor length).
     pub fn len(&self) -> usize {
         match self {
             TileBuf::F64(v) => v.len(),
             TileBuf::F32(v) => v.len(),
             TileBuf::F16(v) => v.len(),
             TileBuf::Bf16(v) => v.len(),
+            TileBuf::LowRank { u, rank, .. } => {
+                let nb = u.len() / rank;
+                nb * nb
+            }
         }
     }
 
@@ -317,23 +343,35 @@ impl TileBuf {
 
     /// Bytes this buffer occupies.
     pub fn resident_bytes(&self) -> usize {
-        self.len() * self.precision().bytes()
-    }
-
-    /// Native f64 slice.  Panics unless the tile is F64 — callers that
-    /// can see reduced tiles go through [`TileSlot::f64_values`].
-    pub fn as_f64(&self) -> &[f64] {
         match self {
-            TileBuf::F64(v) => v,
-            other => panic!("expected F64 tile, found {:?}", other.precision()),
+            TileBuf::LowRank { u, v, .. } => (u.len() + v.len()) * 8,
+            _ => self.len() * self.precision().bytes(),
         }
     }
 
-    /// Native mutable f64 slice (panics unless F64).
+    /// Rank of a compressed tile (`None` for dense buffers).
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            TileBuf::LowRank { rank, .. } => Some(*rank),
+            _ => None,
+        }
+    }
+
+    /// Native f64 slice.  Panics unless the tile is dense F64 — callers
+    /// that can see reduced/compressed tiles go through
+    /// [`TileSlot::f64_values`].
+    pub fn as_f64(&self) -> &[f64] {
+        match self {
+            TileBuf::F64(v) => v,
+            other => panic!("expected F64 tile, found {}", other.kind()),
+        }
+    }
+
+    /// Native mutable f64 slice (panics unless dense F64).
     pub fn as_f64_mut(&mut self) -> &mut [f64] {
         match self {
             TileBuf::F64(v) => v,
-            other => panic!("expected F64 tile, found {:?}", other.precision()),
+            other => panic!("expected F64 tile, found {}", other.kind()),
         }
     }
 
@@ -341,7 +379,7 @@ impl TileBuf {
     pub fn as_f32(&self) -> &[f32] {
         match self {
             TileBuf::F32(v) => v,
-            other => panic!("expected F32 tile, found {:?}", other.precision()),
+            other => panic!("expected F32 tile, found {}", other.kind()),
         }
     }
 
@@ -349,7 +387,7 @@ impl TileBuf {
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match self {
             TileBuf::F32(v) => v,
-            other => panic!("expected F32 tile, found {:?}", other.precision()),
+            other => panic!("expected F32 tile, found {}", other.kind()),
         }
     }
 
@@ -357,7 +395,7 @@ impl TileBuf {
     pub fn as_bf16(&self) -> &[u16] {
         match self {
             TileBuf::Bf16(v) => v,
-            other => panic!("expected Bf16 tile, found {:?}", other.precision()),
+            other => panic!("expected Bf16 tile, found {}", other.kind()),
         }
     }
 
@@ -365,7 +403,7 @@ impl TileBuf {
     pub fn as_bf16_mut(&mut self) -> &mut [u16] {
         match self {
             TileBuf::Bf16(v) => v,
-            other => panic!("expected Bf16 tile, found {:?}", other.precision()),
+            other => panic!("expected Bf16 tile, found {}", other.kind()),
         }
     }
 
@@ -373,7 +411,7 @@ impl TileBuf {
     pub fn as_f16(&self) -> &[u16] {
         match self {
             TileBuf::F16(v) => v,
-            other => panic!("expected F16 tile, found {:?}", other.precision()),
+            other => panic!("expected F16 tile, found {}", other.kind()),
         }
     }
 
@@ -381,7 +419,7 @@ impl TileBuf {
     pub fn as_f16_mut(&mut self) -> &mut [u16] {
         match self {
             TileBuf::F16(v) => v,
-            other => panic!("expected F16 tile, found {:?}", other.precision()),
+            other => panic!("expected F16 tile, found {}", other.kind()),
         }
     }
 }
@@ -440,15 +478,30 @@ impl TileSlot {
                 convert::unpack_bf16_to_f64(bits, scratch);
                 scratch
             }
+            TileBuf::LowRank { u, v, rank } => {
+                let nb = u.len() / rank;
+                scratch.resize(nb * nb, 0.0);
+                crate::kernels::lowrank::decompress(u, v, *rank, nb, scratch);
+                scratch
+            }
         }
     }
 
     /// Convert the native buffer to `prec` in place, preserving values
     /// through the format's storage rounding (demotions round, promotions
-    /// are exact).  Stale conversion scratch is dropped.
+    /// are exact).  Stale conversion scratch is dropped.  A `LowRank`
+    /// buffer first decompresses to dense f64 (its `precision()` reports
+    /// F64, so this must happen *before* the same-precision early
+    /// return); a further demotion then falls through to the dense arms.
     pub fn convert_to(&mut self, prec: Precision) {
         self.f32_scratch = None;
         self.f64_scratch = None;
+        if let TileBuf::LowRank { u, v, rank } = &self.buf {
+            let nb = u.len() / rank;
+            let mut out = vec![0.0f64; nb * nb];
+            crate::kernels::lowrank::decompress(u, v, *rank, nb, &mut out);
+            self.buf = TileBuf::F64(out);
+        }
         if self.precision() == prec {
             return;
         }
@@ -526,6 +579,25 @@ impl TileSlot {
             _ => unreachable!("conversion to the current precision"),
         };
         self.buf = new;
+    }
+
+    /// Replace the buffer with the truncated `U V^T` factorization when
+    /// [`crate::kernels::lowrank::compress`] finds one meeting
+    /// `tolerance` (relative Frobenius error) within `max_rank` columns;
+    /// keeps the current storage (and returns `false`) otherwise.
+    /// Conversion scratch is dropped either way.
+    pub fn compress_to_low_rank(&mut self, nb: usize, tolerance: f64, max_rank: usize) -> bool {
+        let mut scratch = Vec::new();
+        let dense = self.f64_values(&mut scratch).to_vec();
+        let compressed = crate::kernels::lowrank::compress(&dense, nb, tolerance, max_rank);
+        self.drop_scratch();
+        match compressed {
+            Some((u, v, rank)) => {
+                self.buf = TileBuf::LowRank { u, v, rank };
+                true
+            }
+            None => false,
+        }
     }
 
     /// Free any conversion scratch (end of a panel step).
@@ -748,6 +820,9 @@ impl TileMatrix {
                     d * d
                 })
                 .sum::<f64>(),
+            // ||U V^T||_F^2 via the rank x rank Gram matrices — no
+            // decompression
+            TileBuf::LowRank { u, v, rank } => crate::kernels::lowrank::frobenius_sq(u, v, *rank),
         };
         sq.sqrt()
     }
@@ -849,6 +924,104 @@ impl TileMatrix {
                 _ => 0,
             })
             .sum()
+    }
+
+    /// Bytes held in low-rank compressed storage (the `U`/`V` factors).
+    pub fn lr_bytes(&self) -> usize {
+        self.tile_ids()
+            .map(|t| match &self.tile(t).buf {
+                TileBuf::LowRank { u, v, .. } => (u.len() + v.len()) * 8,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Census of compressed tiles — the bench's `tlr_tiles` /
+    /// `avg_rank` / `compressed_bytes` columns read off the slots.
+    pub fn tlr_stats(&self) -> TlrStats {
+        let mut s = TlrStats::default();
+        for t in self.tile_ids() {
+            if let TileBuf::LowRank { u, v, rank } = &self.tile(t).buf {
+                s.tiles += 1;
+                s.total_rank += rank;
+                s.bytes += (u.len() + v.len()) * 8;
+            }
+        }
+        s
+    }
+
+    /// Realized per-tile ranks (`None` = dense storage), the input the
+    /// transfer pricers use to charge compressed tiles `2 * nb * rank`
+    /// f64 values instead of `nb^2` map-precision values.
+    pub fn rank_map(&self) -> TileRanks {
+        let mut ranks = Vec::with_capacity(self.p * (self.p + 1) / 2);
+        for i in 0..self.p {
+            for j in 0..=i {
+                ranks.push(self.tile(TileId::new(i, j)).buf.rank());
+            }
+        }
+        TileRanks { p: self.p, ranks }
+    }
+}
+
+/// Aggregate census of the `LowRank` tiles in a [`TileMatrix`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TlrStats {
+    /// Number of compressed tiles.
+    pub tiles: usize,
+    /// Sum of their ranks.
+    pub total_rank: usize,
+    /// Bytes held by their `U`/`V` factors.
+    pub bytes: usize,
+}
+
+impl TlrStats {
+    /// Mean rank across compressed tiles (0.0 when none).
+    pub fn avg_rank(&self) -> f64 {
+        if self.tiles == 0 {
+            0.0
+        } else {
+            self.total_rank as f64 / self.tiles as f64
+        }
+    }
+}
+
+/// Realized per-tile compression ranks over the lower triangle
+/// (`None` = dense), read off a [`TileMatrix`] via
+/// [`TileMatrix::rank_map`].  Symmetric-consistent like
+/// [`PrecisionMap::get`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileRanks {
+    p: usize,
+    /// Lower-triangle ranks, index = i*(i+1)/2 + j.
+    ranks: Vec<Option<usize>>,
+}
+
+impl TileRanks {
+    /// Tiles per side.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Rank of tile (i, j), `None` when stored dense.  Indices may come
+    /// in either order and resolve to the lower-triangle entry.
+    pub fn get(&self, i: usize, j: usize) -> Option<usize> {
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        assert!(i < self.p, "tile ({i},{j}) out of range for p={}", self.p);
+        self.ranks[i * (i + 1) / 2 + j]
+    }
+
+    /// Build a rank assignment from a rule — the pricers' test harnesses
+    /// and the distributed model use this to describe hypothetical
+    /// compressed layouts without materializing a [`TileMatrix`].
+    pub fn from_fn(p: usize, mut f: impl FnMut(usize, usize) -> Option<usize>) -> Self {
+        let mut ranks = Vec::with_capacity(p * (p + 1) / 2);
+        for i in 0..p {
+            for j in 0..=i {
+                ranks.push(f(i, j));
+            }
+        }
+        Self { p, ranks }
     }
 }
 
@@ -1174,6 +1347,75 @@ mod tests {
         assert_eq!(tm.tile_frobenius(TileId::new(1, 0)), want);
         tm.tile_mut(TileId::new(1, 0)).convert_to(Precision::Bf16);
         assert_eq!(tm.tile_frobenius(TileId::new(1, 0)), want);
+    }
+
+    #[test]
+    fn low_rank_slot_roundtrip_and_accounting() {
+        let nb = 8;
+        let mut tm = TileMatrix::zeros(nb * 2, nb).unwrap();
+        let t = TileId::new(1, 0);
+        // rank-1 content: a[r, c] = x[r] * y[c]
+        {
+            let buf = tm.tile_mut(t).buf.as_f64_mut();
+            for c in 0..nb {
+                for r in 0..nb {
+                    buf[r + c * nb] = (r as f64 + 1.0) * 0.5f64.powi(c as i32);
+                }
+            }
+        }
+        let mut scratch = Vec::new();
+        let want = tm.tile(t).f64_values(&mut scratch).to_vec();
+        let norm = tm.tile_frobenius(t);
+        assert!(tm.tile_mut(t).compress_to_low_rank(nb, 1e-12, nb), "rank-1 tile must compress");
+        let slot = tm.tile(t);
+        assert_eq!(slot.buf.rank(), Some(1));
+        assert_eq!(slot.buf.kind(), "LowRank");
+        assert_eq!(slot.precision(), Precision::F64, "LowRank reports f64 arithmetic");
+        assert_eq!(slot.buf.len(), nb * nb);
+        assert_eq!(slot.resident_bytes(), 2 * nb * 8);
+        assert_eq!(tm.lr_bytes(), 2 * nb * 8);
+        let stats = tm.tlr_stats();
+        assert_eq!((stats.tiles, stats.total_rank, stats.bytes), (1, 1, 2 * nb * 8));
+        assert_eq!(stats.avg_rank(), 1.0);
+        assert_eq!(tm.rank_map().get(1, 0), Some(1));
+        assert_eq!(tm.rank_map().get(0, 1), Some(1), "rank lookup is symmetric");
+        assert_eq!(tm.rank_map().get(0, 0), None);
+        // native-norm read agrees with the dense norm (rank-1 is exact
+        // up to roundoff)
+        assert!((tm.tile_frobenius(t) - norm).abs() < 1e-9 * norm.max(1.0));
+        // lazy f64 read decompresses
+        let mut s2 = Vec::new();
+        let got = tm.tile(t).f64_values(&mut s2);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+        }
+        // convert_to(F64) decompresses in place despite the shared
+        // precision() answer
+        tm.tile_mut(t).convert_to(Precision::F64);
+        assert_eq!(tm.tile(t).buf.kind(), "F64");
+        assert_eq!(tm.lr_bytes(), 0);
+        for (g, w) in tm.tile(t).buf.as_f64().iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_rank_tile_refuses_compression_within_budget() {
+        let nb = 8;
+        let mut tm = TileMatrix::zeros(nb, nb).unwrap();
+        let t = TileId::new(0, 0);
+        // identity is exactly rank nb: no rank < nb representation exists
+        {
+            let buf = tm.tile_mut(t).buf.as_f64_mut();
+            for k in 0..nb {
+                buf[k + k * nb] = 1.0;
+            }
+        }
+        assert!(!tm.tile_mut(t).compress_to_low_rank(nb, 1e-10, nb / 2));
+        assert_eq!(tm.tile(t).buf.kind(), "F64", "failed compression keeps dense storage");
+        // with the budget at nb the exact representation is accepted
+        assert!(tm.tile_mut(t).compress_to_low_rank(nb, 1e-10, nb));
+        assert_eq!(tm.tile(t).buf.rank(), Some(nb));
     }
 
     #[test]

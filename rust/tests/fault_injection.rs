@@ -7,6 +7,12 @@
 //! The `env_leg_*` tests are the CI fault-matrix entry points: each is a
 //! no-op unless `PALLAS_INJECT` selects its fault kind, so one process
 //! run per leg exercises exactly one ambient injection.
+//!
+//! The clean-failure cases at the bottom (typed mid-run errors, abort
+//! drains on wide graphs, optimizer recovery from rejected regions,
+//! artifact-corruption errors) were merged in from the former
+//! `tests/failure_injection.rs` so every failure-path pin lives in one
+//! suite.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -15,6 +21,7 @@ use std::time::{Duration, Instant};
 use mpcholesky::cholesky::{factorize_tiles, CholeskyPlan, TileExecutor};
 use mpcholesky::fault::{env_plan, FaultPlan, KillTarget, ENV_VAR};
 use mpcholesky::kernels::TileBackend;
+use mpcholesky::matern::matern_matrix;
 use mpcholesky::predict::kfold_pmse_with_backend;
 use mpcholesky::prelude::*;
 use mpcholesky::tile::DenseMatrix;
@@ -236,18 +243,19 @@ fn injected_worker_kill_surfaces_as_err() {
     }
 }
 
-/// Backend wrapper failing the first DP potrf — a numeric fault deep
-/// inside one fold of the merged k-fold graph.
+/// Backend wrapper failing the Nth DP potrf with a chosen sentinel pivot
+/// — a numeric fault deep inside a scheduled run.
 struct BrokenPotrf {
     inner: NativeBackend,
     fail_at: usize,
+    pivot: f64,
     count: AtomicUsize,
 }
 
 impl TileBackend for BrokenPotrf {
     fn potrf_f64(&self, a: &mut [f64], nb: usize, row0: usize) -> Result<()> {
         if self.count.fetch_add(1, Ordering::SeqCst) == self.fail_at {
-            return Err(Error::NotPositiveDefinite { pivot: -2.0, index: row0 });
+            return Err(Error::NotPositiveDefinite { pivot: self.pivot, index: row0 });
         }
         self.inner.potrf_f64(a, nb, row0)
     }
@@ -293,7 +301,12 @@ fn kfold_abort_drains_cleanly_across_worker_counts() {
             variant: Variant::MixedPrecision { diag_thick: 2 },
             ..Default::default()
         };
-        let be = BrokenPotrf { inner: NativeBackend, fail_at: 0, count: AtomicUsize::new(0) };
+        let be = BrokenPotrf {
+            inner: NativeBackend,
+            fail_at: 0,
+            pivot: -2.0,
+            count: AtomicUsize::new(0),
+        };
         let t0 = Instant::now();
         match kfold_pmse_with_backend(&f.locations, &f.values, theta, 2, &cfg, 7, &be) {
             Err(Error::NotPositiveDefinite { pivot, .. }) => assert_eq!(pivot, -2.0),
@@ -315,6 +328,136 @@ fn kfold_abort_drains_cleanly_across_worker_counts() {
                 assert_eq!(want, &bits, "workers={workers}: k-fold result must be deterministic")
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Clean-failure cases (merged from the former tests/failure_injection.rs):
+// the system must fail *cleanly* — typed errors, no partial-state
+// corruption, optimizer recovery — under the error modes the paper's
+// SSVIII.D discusses and a few it doesn't.
+// ---------------------------------------------------------------------------
+
+fn matern_tiles(n: usize, nb: usize, seed: u64) -> TileMatrix {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut locs: Vec<Location> = (0..n)
+        .map(|_| Location::new(r.uniform_open(0.0, 1.0), r.uniform_open(0.0, 1.0)))
+        .collect();
+    mpcholesky::datagen::morton_sort(&mut locs);
+    let a = DenseMatrix::from_vec(
+        n,
+        matern_matrix(&locs, &MaternParams::new(1.0, 0.05, 0.5), Metric::Euclidean, 1e-8),
+    )
+    .unwrap();
+    TileMatrix::from_dense(&a, nb).unwrap()
+}
+
+#[test]
+fn mid_run_kernel_failure_propagates_typed_error() {
+    for fail_at in [0, 1, 3] {
+        let be = BrokenPotrf {
+            inner: NativeBackend,
+            fail_at,
+            pivot: -1.0,
+            count: AtomicUsize::new(0),
+        };
+        let mut tiles = matern_tiles(256, 64, 1);
+        let sched = Scheduler::with_workers(2);
+        match factorize_tiles(&mut tiles, Variant::FullDp, &be, &sched) {
+            Err(Error::NotPositiveDefinite { pivot, index }) => {
+                assert_eq!(pivot, -1.0);
+                assert_eq!(index, fail_at * 64, "failure reports the right tile");
+            }
+            other => panic!("fail_at={fail_at}: expected typed failure, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn failure_does_not_hang_wide_graphs() {
+    // failure at the very first potrf of a large graph: every dependent
+    // task must be drained without deadlock, quickly
+    let be = BrokenPotrf {
+        inner: NativeBackend,
+        fail_at: 0,
+        pivot: -1.0,
+        count: AtomicUsize::new(0),
+    };
+    let mut tiles = matern_tiles(1024, 64, 2);
+    let sched = Scheduler::with_workers(4);
+    let t0 = Instant::now();
+    assert!(factorize_tiles(&mut tiles, Variant::MixedPrecision { diag_thick: 2 }, &be, &sched)
+        .err()
+        .is_some());
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "drain took {:?}", t0.elapsed());
+}
+
+#[test]
+fn optimizer_recovers_from_rejected_regions() {
+    // Bounds that include a region where the DST covariance loses PD:
+    // the fit must still converge to a finite answer by rejecting those
+    // evaluations (the paper's SP(100%)/DST failure handling).
+    let f = SyntheticField::generate(&FieldConfig {
+        n: 256,
+        theta: MaternParams::new(1.0, 0.05, 0.5),
+        seed: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let cfg = MleConfig {
+        nb: 64,
+        variant: Variant::Dst { diag_thick: 2 },
+        // wide range bound: large ranges make the banded matrix non-PD
+        lower: [0.1, 0.005, 0.3],
+        upper: [10.0, 1.0, 1.0],
+        start: Some([1.0, 0.02, 0.5]),
+        optimizer: mpcholesky::mle::OptimizerConfig { max_evals: 60, ..Default::default() },
+        ..Default::default()
+    };
+    let fit = MleProblem::new(&f.locations, &f.values, cfg).unwrap().fit().unwrap();
+    assert!(fit.loglik.is_finite());
+    assert!(fit.theta.range < 0.5, "optimizer should stay in the PD region: {:?}", fit.theta);
+}
+
+#[test]
+fn sp100_equivalent_fails_as_paper_describes() {
+    // The paper excludes SP(100%) because "the covariance matrix may lose
+    // the numerical property of positive definiteness".  Our analog: a
+    // strongly correlated matrix squeezed through bf16 far bands with a
+    // *zero-width* DP band is at risk; with diag_thick >= 1 the potrf
+    // chain stays DP and must succeed even when far bands are bf16.
+    let mut tiles = matern_tiles(320, 64, 4);
+    let sched = Scheduler::with_workers(2);
+    let r = factorize_tiles(
+        &mut tiles,
+        Variant::ThreePrecision { dp_thick: 1, sp_thick: 2 },
+        &NativeBackend,
+        &sched,
+    );
+    assert!(
+        r.is_ok(),
+        "DP diagonal band must keep the factorization alive: {:?}",
+        r.err().map(|e| e.to_string())
+    );
+}
+
+#[test]
+fn corrupted_artifacts_dir_reports_artifact_error() {
+    let r = mpcholesky::runtime::PjrtBackend::load("/nonexistent/path");
+    match r {
+        Err(Error::Artifact(msg)) => assert!(msg.contains("manifest")),
+        other => panic!("expected Artifact error, got {:?}", other.err().map(|e| e.to_string())),
+    }
+}
+
+#[test]
+fn truncated_manifest_rejected() {
+    let dir = std::env::temp_dir().join("mpchol_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "# nb=64\ngemm_f64\tbroken").unwrap();
+    match mpcholesky::runtime::Manifest::load(&dir) {
+        Err(Error::Artifact(_)) => {}
+        other => panic!("expected Artifact error, got {other:?}"),
     }
 }
 
