@@ -1,0 +1,196 @@
+//! `bench_serve` — machine-readable serving-layer benchmark.
+//!
+//! Drives the admission controller with a deterministic mixed request
+//! stream (kriging predicts over shifted site blocks, periodic MLE fits
+//! and 2-fold cross-validations), drains it, and reports throughput and
+//! resilience counters; with `--json` the results land in
+//! `BENCH_serve.json` so CI can pin the schema and track the serving
+//! trajectory.
+//!
+//! ```bash
+//! cargo run --release --bin bench_serve -- --json
+//! cargo run --release --bin bench_serve -- --requests 1000 --workers 4 --json
+//! ```
+//!
+//! Flags: `--n N` (default 256), `--nb NB` (default 64), `--requests R`
+//! (default 1000), `--workers W` (default: all cores), `--budget-mb M`
+//! (default 256), `--queue-depth D` (default 512), `--deadline-ms M`
+//! (default 0 = none), `--fits` (include MLE fit requests; off by
+//! default because one fit dominates the wall clock), `--json [PATH]`
+//! (default path `BENCH_serve.json`).  Ambient `PALLAS_INJECT` request
+//! faults (`request:drop|delay|burst`) apply, so fault legs can reuse
+//! this binary unchanged.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use mpcholesky::prelude::*;
+use mpcholesky::serve::Request;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                m.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+            }
+        }
+        i += 1;
+    }
+    m
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&argv);
+    let n: usize = get(&flags, "n", 256);
+    let nb: usize = get(&flags, "nb", 64);
+    let requests: usize = get(&flags, "requests", 1000);
+    let workers: usize = get(&flags, "workers", 0);
+    let budget_mb: usize = get(&flags, "budget-mb", 256);
+    let queue_depth: usize = get(&flags, "queue-depth", 512);
+    let deadline_ms: u64 = get(&flags, "deadline-ms", 0);
+    let with_fits = flags.contains_key("fits");
+    let seed: u64 = get(&flags, "seed", 42);
+
+    let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+    let field = SyntheticField::generate(&FieldConfig {
+        n,
+        theta: theta0,
+        seed,
+        gen_nb: nb,
+        num_workers: workers,
+        ..Default::default()
+    })
+    .expect("field generation");
+
+    let cfg = ServeConfig {
+        mle: MleConfig {
+            nb,
+            variant: Variant::MixedPrecision { diag_thick: 2 },
+            num_workers: workers,
+            optimizer: OptimizerConfig { max_evals: 40, ..Default::default() },
+            ..Default::default()
+        },
+        budget_bytes: budget_mb << 20,
+        queue_depth,
+        deadline: (deadline_ms > 0).then_some(Duration::from_millis(deadline_ms)),
+        ..Default::default()
+    };
+    let resolved_workers = SchedulerConfig::resolve_workers(workers);
+    let mut srv = Server::new(cfg);
+
+    eprintln!(
+        "bench_serve: n={n} nb={nb} requests={requests} workers={resolved_workers} \
+         budget={budget_mb} MiB queue_depth={queue_depth} deadline_ms={deadline_ms}"
+    );
+    let m = nb.min(n);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        if with_fits && i % 97 == 13 {
+            srv.submit(Request::Fit {
+                locations: field.locations.clone(),
+                z: field.values.clone(),
+            });
+        } else if i % 11 == 5 && n % (2 * nb) == 0 {
+            srv.submit(Request::Kfold {
+                locations: field.locations.clone(),
+                z: field.values.clone(),
+                theta: theta0,
+                k: 2,
+                seed: seed + i as u64,
+            });
+        } else {
+            let start = (i * 7) % (n - m + 1);
+            srv.submit(Request::Predict {
+                train: field.locations.clone(),
+                z: field.values.clone(),
+                theta: theta0,
+                sites: field.locations[start..start + m].to_vec(),
+            });
+        }
+    }
+    let responses = srv.drain();
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let s = srv.stats();
+    let rps = responses.len() as f64 / secs;
+
+    // every submitted copy is accounted: answered or deliberately dropped
+    let answered = responses.len() as u64;
+    assert_eq!(
+        answered + s.dropped,
+        s.submitted,
+        "lost requests: {answered} answered + {} dropped != {} submitted",
+        s.dropped,
+        s.submitted
+    );
+    assert!(
+        s.peak_resident_bytes <= s.budget_bytes,
+        "governor breached: peak {} > budget {}",
+        s.peak_resident_bytes,
+        s.budget_bytes
+    );
+
+    println!(
+        "answered {answered} of {} submitted in {:.1} ms ({rps:.1} rps)",
+        s.submitted,
+        secs * 1e3
+    );
+    println!(
+        "completed={} shed={} deadline_miss={} failed={} dropped={}",
+        s.completed, s.shed, s.deadline_miss, s.failed, s.dropped
+    );
+    println!(
+        "cache_hits={} demotions={} retries={} merged_runs={} merged_members={} \
+         decode_cache_hits={}",
+        s.cache_hits, s.demotions, s.retries, s.merged_runs, s.merged_members, s.decode_cache_hits
+    );
+    println!(
+        "peak_resident_bytes={} budget_bytes={}",
+        s.peak_resident_bytes, s.budget_bytes
+    );
+
+    if flags.contains_key("json") {
+        let path = match flags.get("json").map(String::as_str) {
+            Some("true") | None => "BENCH_serve.json",
+            Some(p) => p,
+        };
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"bench\": \"serve\",");
+        let _ = writeln!(out, "  \"n\": {n},");
+        let _ = writeln!(out, "  \"nb\": {nb},");
+        let _ = writeln!(out, "  \"workers\": {resolved_workers},");
+        let _ = writeln!(out, "  \"requests\": {requests},");
+        let _ = writeln!(out, "  \"submitted\": {},", s.submitted);
+        let _ = writeln!(out, "  \"completed\": {},", s.completed);
+        let _ = writeln!(out, "  \"failed\": {},", s.failed);
+        let _ = writeln!(out, "  \"dropped\": {},", s.dropped);
+        let _ = writeln!(out, "  \"rps\": {rps:.3},");
+        let _ = writeln!(out, "  \"shed\": {},", s.shed);
+        let _ = writeln!(out, "  \"deadline_miss\": {},", s.deadline_miss);
+        let _ = writeln!(out, "  \"cache_hits\": {},", s.cache_hits);
+        let _ = writeln!(out, "  \"demotions\": {},", s.demotions);
+        let _ = writeln!(out, "  \"retries\": {},", s.retries);
+        let _ = writeln!(out, "  \"merged_runs\": {},", s.merged_runs);
+        let _ = writeln!(out, "  \"merged_members\": {},", s.merged_members);
+        let _ = writeln!(out, "  \"decode_cache_hits\": {},", s.decode_cache_hits);
+        let _ = writeln!(out, "  \"decode_cache_evictions\": {},", s.decode_cache_evictions);
+        let _ = writeln!(out, "  \"peak_resident_bytes\": {},", s.peak_resident_bytes);
+        let _ = writeln!(out, "  \"budget_bytes\": {}", s.budget_bytes);
+        out.push_str("}\n");
+        std::fs::write(path, out).expect("write json");
+        eprintln!("wrote {path}");
+    }
+}

@@ -28,8 +28,9 @@
 //! reader/writer guards.
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
@@ -116,6 +117,8 @@ pub struct ExecStats {
     f16_unpacks: AtomicU64,
     lr_decompresses: AtomicU64,
     lr_compresses: AtomicU64,
+    decode_cache_hits: AtomicU64,
+    decode_cache_evictions: AtomicU64,
 }
 
 impl ExecStats {
@@ -142,6 +145,140 @@ impl ExecStats {
     /// Number of low-rank recompressions (`d2lr` truncations).
     pub fn lr_compresses(&self) -> u64 {
         self.lr_compresses.load(Ordering::Relaxed)
+    }
+
+    /// Decode-cache hits: `DecodeBf16`/`DecodeF16` fills served from a
+    /// persistent [`DecodeCache`] copy instead of a fresh unpack.
+    pub fn decode_cache_hits(&self) -> u64 {
+        self.decode_cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Entries the [`DecodeCache`] LRU evicted to admit this run's fills.
+    pub fn decode_cache_evictions(&self) -> u64 {
+        self.decode_cache_evictions.load(Ordering::Relaxed)
+    }
+}
+
+/// Persistent LRU cache of decoded packed tiles, shared across runs (the
+/// serving layer keeps one for the whole server lifetime; the PR 4
+/// per-step decode cache only amortizes *within* one panel step).
+///
+/// Entries are **content-keyed**: the key is an FNV-1a hash of the tile's
+/// packed bits (salted with the storage tier so identical bit patterns in
+/// bf16 and f16 tiles cannot alias), so a tile mutated by factorization
+/// simply stops matching its stale entry — there is no invalidation
+/// protocol, and a hit is bit-identical to re-running the unpack by
+/// construction.  The cache owns its decoded buffers behind one `Mutex`
+/// (fills are rare relative to compute; the lock is never held across a
+/// kernel) and bounds them by a byte budget with stamp-based LRU
+/// eviction — the budget is how the serving layer's memory governor
+/// accounts for it.
+#[derive(Debug)]
+pub struct DecodeCache {
+    inner: Mutex<DecodeCacheInner>,
+    budget_bytes: usize,
+}
+
+#[derive(Debug, Default)]
+struct DecodeCacheInner {
+    map: HashMap<u64, DecodeEntry>,
+    bytes: usize,
+    stamp: u64,
+}
+
+#[derive(Debug)]
+struct DecodeEntry {
+    data: Vec<f32>,
+    stamp: u64,
+}
+
+impl DecodeCache {
+    /// An empty cache bounded by `budget_bytes` of decoded f32 data.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self { inner: Mutex::new(DecodeCacheInner::default()), budget_bytes }
+    }
+
+    /// Content key of a packed tile: FNV-1a over the packed bits, salted
+    /// with the storage tier.
+    pub fn content_key(bits: &[u16], tier: u8) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        mix(tier);
+        for &w in bits {
+            mix(w as u8);
+            mix((w >> 8) as u8);
+        }
+        h
+    }
+
+    /// Copy the cached decode for `key` into `dst` and return `true`, or
+    /// return `false` on a miss (wrong length entries count as misses —
+    /// only possible through a key collision, and never served).
+    pub fn lookup(&self, key: u64, dst: &mut [f32]) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stamp += 1;
+        let stamp = inner.stamp;
+        match inner.map.get_mut(&key) {
+            Some(e) if e.data.len() == dst.len() => {
+                e.stamp = stamp;
+                dst.copy_from_slice(&e.data);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Insert a freshly decoded tile, evicting least-recently-used
+    /// entries until it fits the byte budget.  Returns how many entries
+    /// were evicted.  Tiles larger than the whole budget are not cached.
+    pub fn insert(&self, key: u64, data: &[f32]) -> usize {
+        let bytes = data.len() * 4;
+        if bytes > self.budget_bytes {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.stamp += 1;
+        let stamp = inner.stamp;
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.data.len() * 4;
+        }
+        let mut evicted = 0;
+        while inner.bytes + bytes > self.budget_bytes {
+            let lru = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k)
+                .expect("non-empty map while over budget");
+            let old = inner.map.remove(&lru).unwrap();
+            inner.bytes -= old.data.len() * 4;
+            evicted += 1;
+        }
+        inner.bytes += bytes;
+        inner.map.insert(key, DecodeEntry { data: data.to_vec(), stamp });
+        evicted
+    }
+
+    /// Decoded bytes currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 }
 
@@ -409,6 +546,10 @@ pub struct TileExecutor<'a, B: TileBackend + ?Sized> {
     pub faults: Option<Arc<FaultPlan>>,
     /// TLR truncation parameters for `d2lr` recompression tasks.
     pub tlr: Option<TlrSpec>,
+    /// Persistent cross-run decode cache consulted by the
+    /// `DecodeBf16`/`DecodeF16` cache-fill tasks (None = every fill
+    /// unpacks; hits and evictions land in [`ExecStats`]).
+    pub decode_cache: Option<Arc<DecodeCache>>,
 }
 
 impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
@@ -421,7 +562,17 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
             stats: ExecStats::default(),
             faults: crate::fault::env_plan(),
             tlr: None,
+            decode_cache: None,
         }
+    }
+
+    /// Attach a persistent [`DecodeCache`]: packed-tile decode fills
+    /// whose content is already cached are served by memcpy instead of a
+    /// fresh unpack (bit-identical by construction — the cache stores
+    /// the exact unpack output, keyed on the packed bits).
+    pub fn with_decode_cache(mut self, cache: Arc<DecodeCache>) -> Self {
+        self.decode_cache = Some(cache);
+        self
     }
 
     /// Arm the executor with TLR truncation parameters (required by
@@ -476,6 +627,33 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
         self.pipe.as_ref().ok_or_else(|| {
             Error::PlanMismatch("pipeline task scheduled without PipelineContext".into())
         })
+    }
+
+    /// Fill `dst` with the decoded values of a packed tile: a persistent
+    /// [`DecodeCache`] hit when one is attached and the content matches,
+    /// else a counted unpack (f16 when `f16`, bf16 otherwise) followed
+    /// by a cache insert.
+    fn fill_decoded(&self, bits: &[u16], tier: u8, dst: &mut [f32], f16: bool) {
+        let unpack = |stats: &ExecStats, dst: &mut [f32]| {
+            if f16 {
+                decode_timed_f16(stats, || convert::unpack_f16(bits, &mut dst[..]));
+            } else {
+                decode_timed(stats, || convert::unpack_bf16(bits, &mut dst[..]));
+            }
+        };
+        match &self.decode_cache {
+            Some(cache) => {
+                let key = DecodeCache::content_key(bits, tier);
+                if cache.lookup(key, dst) {
+                    self.stats.decode_cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                unpack(&self.stats, dst);
+                let evicted = cache.insert(key, dst) as u64;
+                self.stats.decode_cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+            }
+            None => unpack(&self.stats, dst),
+        }
     }
 
     fn execute_inner(&self, sc: &SizedCall) -> Result<()> {
@@ -607,12 +785,15 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                     KernelCall::DecodeBf16 { i, k } => {
                         // per-step decode cache fill: one unpack serves
                         // every reduced-precision reader of the tile
-                        // this step (freed by the step's DropScratch)
+                        // this step (freed by the step's DropScratch).
+                        // With a persistent DecodeCache attached, a
+                        // content-keyed hit replaces the unpack with a
+                        // memcpy of the identical decoded values.
                         let slot = tm.tile_ptr(TileId::new(i, k));
                         let TileSlot { buf, f32_scratch, .. } = slot;
                         let bits = buf.as_bf16();
                         let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
-                        decode_timed(&self.stats, || convert::unpack_bf16(bits, &mut dst[..]));
+                        self.fill_decoded(bits, 0, dst, false);
                         if let Some(fp) = &self.faults {
                             fp.corrupt_decoded(i, k, dst);
                         }
@@ -625,7 +806,7 @@ impl<'a, B: TileBackend + ?Sized> TileExecutor<'a, B> {
                         let TileSlot { buf, f32_scratch, .. } = slot;
                         let bits = buf.as_f16();
                         let dst = f32_scratch.get_or_insert_with(|| vec![0.0; nn]);
-                        decode_timed_f16(&self.stats, || convert::unpack_f16(bits, &mut dst[..]));
+                        self.fill_decoded(bits, 1, dst, true);
                         if let Some(fp) = &self.faults {
                             fp.corrupt_decoded(i, k, dst);
                         }

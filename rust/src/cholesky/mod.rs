@@ -24,7 +24,9 @@ pub mod pipeline;
 pub mod plan;
 pub mod solve;
 
-pub use exec::{CrossCovContext, ExecStats, GenContext, PipelineContext, TileExecutor, TlrSpec};
+pub use exec::{
+    CrossCovContext, DecodeCache, ExecStats, GenContext, PipelineContext, TileExecutor, TlrSpec,
+};
 pub use kernelcall::{KernelCall, SizedCall};
 pub use pipeline::{
     merge_graphs, run_pipeline, BatchCall, PanelResolver, PipelineBuffers, PipelineCounts,

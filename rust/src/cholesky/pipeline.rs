@@ -45,7 +45,7 @@
 
 use std::cell::UnsafeCell;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kernels::TileBackend;
 use crate::scheduler::{Access, ExecutionTrace, ResourceId, Scheduler, TaskCost, TaskGraph};
 use crate::tile::{Precision, PrecisionMap, TileId, TileMatrix};
@@ -782,9 +782,17 @@ impl TaskCost for BatchCall {
 /// and a single `Scheduler::run` work-steals across all of them.
 /// Returns the merged graph plus each task's *member-local* access list
 /// (what the member's executor needs for its guard protocol).
+///
+/// Every member's accesses must stay inside its own namespace window
+/// (tiles within the member's declared `p`, slots within the common slot
+/// stride).  A plan whose graph references resources beyond its declared
+/// shape would, after shifting, claim another member's namespace — the
+/// scheduler would then serialize (or worse, interleave) two unrelated
+/// members through a phantom dependency.  That is a typed
+/// [`Error::PlanMismatch`], never silent aliasing.
 pub fn merge_graphs(
     plans: &[PipelinePlan],
-) -> (TaskGraph<BatchCall>, Vec<Vec<(ResourceId, Access)>>) {
+) -> Result<(TaskGraph<BatchCall>, Vec<Vec<(ResourceId, Access)>>)> {
     let tile_off = plans.iter().map(|pl| pl.p).max().unwrap_or(0);
     let slot_off = plans
         .iter()
@@ -795,22 +803,50 @@ pub fn merge_graphs(
     let mut local: Vec<Vec<(ResourceId, Access)>> = Vec::new();
     for (m, pl) in plans.iter().enumerate() {
         for t in pl.graph.tasks() {
-            let global: Vec<(ResourceId, Access)> = t
-                .accesses
-                .iter()
-                .map(|&(res, mode)| {
-                    let shifted = match res {
-                        ResourceId::Tile(tl) => ResourceId::Tile(TileId::new(
-                            tl.i + m * tile_off,
-                            tl.j + m * tile_off,
-                        )),
-                        ResourceId::Rhs(b) => ResourceId::Rhs(b + m * slot_off),
-                        ResourceId::Pred(b) => ResourceId::Pred(b + m * slot_off),
-                        ResourceId::Scalar(s) => ResourceId::Scalar(s + m * slot_off),
-                    };
-                    (shifted, mode)
-                })
-                .collect();
+            let mut global: Vec<(ResourceId, Access)> = Vec::with_capacity(t.accesses.len());
+            for &(res, mode) in &t.accesses {
+                let shifted = match res {
+                    ResourceId::Tile(tl) => {
+                        if tl.i >= pl.p || tl.j >= pl.p {
+                            return Err(Error::PlanMismatch(format!(
+                                "merge_graphs: member {m} claims tile ({}, {}) outside its \
+                                 declared order p={} — the shifted id would alias another \
+                                 member's namespace",
+                                tl.i, tl.j, pl.p
+                            )));
+                        }
+                        ResourceId::Tile(TileId::new(tl.i + m * tile_off, tl.j + m * tile_off))
+                    }
+                    ResourceId::Rhs(b) => {
+                        if b >= slot_off {
+                            return Err(Error::PlanMismatch(format!(
+                                "merge_graphs: member {m} claims RHS slot {b} outside its \
+                                 namespace window {slot_off}"
+                            )));
+                        }
+                        ResourceId::Rhs(b + m * slot_off)
+                    }
+                    ResourceId::Pred(b) => {
+                        if b >= slot_off {
+                            return Err(Error::PlanMismatch(format!(
+                                "merge_graphs: member {m} claims prediction slot {b} outside \
+                                 its namespace window {slot_off}"
+                            )));
+                        }
+                        ResourceId::Pred(b + m * slot_off)
+                    }
+                    ResourceId::Scalar(s) => {
+                        if s >= slot_off {
+                            return Err(Error::PlanMismatch(format!(
+                                "merge_graphs: member {m} claims scalar slot {s} outside its \
+                                 namespace window {slot_off}"
+                            )));
+                        }
+                        ResourceId::Scalar(s + m * slot_off)
+                    }
+                };
+                global.push((shifted, mode));
+            }
             g.submit(BatchCall { member: m, call: t.payload }, global);
             local.push(t.accesses.clone());
         }
@@ -821,7 +857,7 @@ pub fn merge_graphs(
         Precision::F16 => 2,
         Precision::Bf16 => 3,
     });
-    (g, local)
+    Ok((g, local))
 }
 
 #[cfg(test)]
@@ -941,7 +977,7 @@ mod tests {
         };
         let plans = vec![mk(), mk()];
         let total: usize = plans.iter().map(|pl| pl.graph.len()).sum();
-        let (g, local) = merge_graphs(&plans);
+        let (g, local) = merge_graphs(&plans).unwrap();
         assert_eq!(g.len(), total);
         assert_eq!(local.len(), total);
         // no edge crosses members: merged dependencies are exactly the
@@ -956,6 +992,42 @@ mod tests {
             }
         }
         g.assert_forward_edges();
+    }
+
+    #[test]
+    fn merge_rejects_namespace_claims_outside_declared_shape() {
+        // A plan whose graph touches a tile beyond its declared order
+        // would, after the member shift, alias the next member's
+        // namespace: that must be a typed PlanMismatch, not a silent
+        // phantom dependency.
+        let p = 2;
+        let opts = PipelineOptions { rhs_cols: 1, ..Default::default() };
+        let mut hostile = PipelinePlan::build_static(
+            p,
+            8,
+            Variant::FullDp,
+            PrecisionMap::uniform(p, Precision::F64),
+            opts,
+        );
+        // claim a tile in what would be member 1's window
+        hostile.graph.submit(
+            SizedCall { call: KernelCall::Generate { i: p, j: p }, nb: 8 },
+            vec![(ResourceId::Tile(TileId::new(p, p)), Access::Write)],
+        );
+        let clean = PipelinePlan::build_static(
+            p,
+            8,
+            Variant::FullDp,
+            PrecisionMap::uniform(p, Precision::F64),
+            PipelineOptions { rhs_cols: 1, ..Default::default() },
+        );
+        match merge_graphs(&[hostile, clean]) {
+            Err(Error::PlanMismatch(msg)) => {
+                assert!(msg.contains("member 0") && msg.contains("alias"), "{msg}");
+            }
+            Err(e) => panic!("expected PlanMismatch, got {e}"),
+            Ok(_) => panic!("aliasing namespace claim must be rejected"),
+        }
     }
 
     #[test]

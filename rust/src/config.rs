@@ -50,6 +50,10 @@ pub struct RunConfig {
     /// Fault-injection spec (the `PALLAS_INJECT` grammar, e.g.
     /// `nan:rate=0.5:seed=7,kill:worker=any`); empty = no injection.
     pub inject: String,
+    /// Serving-layer memory-governor budget in MiB (`serve` subcommand).
+    pub budget_mb: usize,
+    /// Serving-layer admission queue bound (`serve` subcommand).
+    pub queue_depth: usize,
 }
 
 impl Default for RunConfig {
@@ -70,6 +74,8 @@ impl Default for RunConfig {
             retry_budget: crate::cholesky::DEFAULT_RETRY_BUDGET,
             deadline_ms: 0,
             inject: String::new(),
+            budget_mb: 256,
+            queue_depth: 64,
         }
     }
 }
@@ -142,6 +148,8 @@ impl RunConfig {
                 "retry_budget" => self.retry_budget = parse(k, v)?,
                 "deadline_ms" => self.deadline_ms = parse(k, v)?,
                 "inject" => self.inject = v.clone(),
+                "budget_mb" => self.budget_mb = parse(k, v)?,
+                "queue_depth" => self.queue_depth = parse(k, v)?,
                 "backend" => match v.as_str() {
                     "native" | "pjrt" => self.backend = v.clone(),
                     other => {
@@ -293,6 +301,12 @@ impl RunConfig {
         if !self.inject.is_empty() {
             // fail at config time, not mid-run
             crate::fault::FaultPlan::parse(&self.inject)?;
+        }
+        if self.budget_mb == 0 {
+            crate::invalid_arg!("budget_mb must be >= 1");
+        }
+        if self.queue_depth == 0 {
+            crate::invalid_arg!("queue_depth must be >= 1");
         }
         Ok(())
     }
@@ -500,5 +514,20 @@ mod tests {
         // malformed injection specs fail at config time
         assert!(RunConfig::parse("inject = nonsense\n").is_err());
         assert!(RunConfig::parse("inject = kill:worker=soon\n").is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_validate() {
+        let c = RunConfig::parse("budget_mb = 64\nqueue_depth = 8\n").unwrap();
+        assert_eq!(c.budget_mb, 64);
+        assert_eq!(c.queue_depth, 8);
+        let d = RunConfig::default();
+        assert_eq!(d.budget_mb, 256);
+        assert_eq!(d.queue_depth, 64);
+        // the request-level injection grammar parses at config time
+        let r = RunConfig::parse("inject = request:burst:n=3:rate=0.5:seed=9\n").unwrap();
+        assert!(!r.inject.is_empty());
+        assert!(RunConfig::parse("budget_mb = 0\n").is_err());
+        assert!(RunConfig::parse("queue_depth = 0\n").is_err());
     }
 }

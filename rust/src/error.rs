@@ -43,12 +43,29 @@ pub enum Error {
     DeadlineExceeded {
         /// Wall-clock milliseconds elapsed when the watchdog fired.
         elapsed_ms: u64,
+        /// The configured deadline budget in milliseconds — logged next to
+        /// `elapsed_ms` so a miss is diagnosable without the run config.
+        budget_ms: u64,
         /// Tasks that had finished at that point.
         finished: usize,
         /// Total tasks in the graph.
         total: usize,
         /// Stuck-task diagnostic (task indices + unmet dependency counts).
         detail: String,
+    },
+
+    /// The serving layer's admission controller shed this request: the
+    /// memory governor's resident-bytes budget (or the backpressure
+    /// queue) was exhausted and every rung of the degradation ladder
+    /// (cache hit, precision demotion, queueing) had been walked.
+    /// Carries a retry-after hint so callers can back off instead of
+    /// hammering an overloaded server.
+    Overloaded {
+        /// Suggested client back-off before retrying, in milliseconds.
+        retry_after_ms: u64,
+        /// Which resource ran out (e.g. "memory governor budget",
+        /// "admission queue full").
+        reason: String,
     },
 
     /// A deliberately injected failure from the `fault` module
@@ -85,10 +102,14 @@ impl fmt::Display for Error {
             Error::TaskPanicked { task, message } => {
                 write!(f, "task {task} panicked: {message}")
             }
-            Error::DeadlineExceeded { elapsed_ms, finished, total, detail } => write!(
+            Error::DeadlineExceeded { elapsed_ms, budget_ms, finished, total, detail } => write!(
                 f,
-                "scheduler deadline exceeded after {elapsed_ms} ms \
-                 ({finished}/{total} tasks finished; {detail})"
+                "scheduler deadline exceeded after {elapsed_ms} ms (budget {budget_ms} ms; \
+                 {finished}/{total} tasks finished; {detail})"
+            ),
+            Error::Overloaded { retry_after_ms, reason } => write!(
+                f,
+                "server overloaded: {reason}; retry after {retry_after_ms} ms"
             ),
             Error::FaultInjected(s) => write!(f, "injected fault: {s}"),
             Error::PlanMismatch(s) => write!(f, "plan/storage mismatch: {s}"),
@@ -149,12 +170,20 @@ mod tests {
         assert!(e.to_string().contains("task 7") && e.to_string().contains("index out of"));
         let e = Error::DeadlineExceeded {
             elapsed_ms: 250,
+            budget_ms: 200,
             finished: 3,
             total: 10,
             detail: "task 4: 2 unmet deps".into(),
         };
         let s = e.to_string();
         assert!(s.contains("250 ms") && s.contains("3/10") && s.contains("task 4"));
+        assert!(s.contains("budget 200 ms"), "deadline budget missing from: {s}");
+        let e = Error::Overloaded {
+            retry_after_ms: 40,
+            reason: "memory governor budget exhausted".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("overloaded") && s.contains("40 ms"), "{s}");
         let e = Error::FaultInjected("worker 1 killed".into());
         assert!(e.to_string().contains("injected fault"));
         let e = Error::PlanMismatch("f64 tile lacks its dconv2s view".into());

@@ -28,6 +28,12 @@
 //! delay:worker=W:ms=M        worker W sleeps M ms before every task
 //! lose:task=T                task T's completion is dropped (wedges the
 //!                            graph — watchdog test hook)
+//! request:drop[:rate=R][:seed=S]      serving layer: the client vanishes
+//!                                     w.p. R per request (seeded per id)
+//! request:delay[:ms=M][:rate=R][:seed=S]  request is delayed M ms before
+//!                                     admission w.p. R
+//! request:burst[:n=K][:rate=R][:seed=S]   request arrives as K duplicate
+//!                                     copies w.p. R (load spike)
 //! ```
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -72,6 +78,27 @@ pub enum WorkerFault {
     Kill,
 }
 
+/// What a `request:` clause does to a request the sampler selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestFault {
+    /// The client vanished: the server must clean the request up
+    /// without wedging (it is counted, never answered).
+    Drop,
+    /// The request is delayed this many milliseconds before admission.
+    Delay(u64),
+    /// The request arrives as this many duplicate copies at once — a
+    /// load spike the admission controller must absorb or shed.
+    Burst(usize),
+}
+
+/// Seeded per-request sampler for one `request:` clause.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct RequestSpec {
+    fault: RequestFault,
+    rate: f64,
+    seed: u64,
+}
+
 #[derive(Debug)]
 struct CallTrigger {
     call: String,
@@ -97,6 +124,7 @@ pub struct FaultPlan {
     kill: Option<KillTarget>,
     delay: Option<(usize, u64)>,
     lose_task: Option<usize>,
+    request: Option<RequestSpec>,
     killed: AtomicBool,
 }
 
@@ -145,20 +173,36 @@ impl FaultPlan {
         self
     }
 
+    /// Serving-layer request fault: each request id draws `fault` with
+    /// probability `rate` from a stream keyed on `(seed, id)`, so a
+    /// given request's disposition replays exactly.
+    pub fn with_request(mut self, fault: RequestFault, rate: f64, seed: u64) -> Self {
+        self.request = Some(RequestSpec { fault, rate, seed });
+        self
+    }
+
     /// Parse the `PALLAS_INJECT` spec grammar (module docs).
     pub fn parse(spec: &str) -> Result<Self> {
         let mut plan = FaultPlan::default();
         for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
             let mut fields = clause.split(':').map(str::trim);
             let kind = fields.next().unwrap_or("");
+            // `request` carries a bare mode token (drop|delay|burst)
+            // before its key=value fields
+            let mut mode: Option<&str> = None;
             let mut kv = std::collections::HashMap::new();
             for field in fields {
-                let (k, v) = field.split_once('=').ok_or_else(|| {
-                    Error::InvalidArgument(format!(
-                        "{ENV_VAR} clause {clause:?}: expected key=value, got {field:?}"
-                    ))
-                })?;
-                kv.insert(k, v);
+                match field.split_once('=') {
+                    Some((k, v)) => {
+                        kv.insert(k, v);
+                    }
+                    None if kind == "request" && mode.is_none() => mode = Some(field),
+                    None => {
+                        return Err(Error::InvalidArgument(format!(
+                            "{ENV_VAR} clause {clause:?}: expected key=value, got {field:?}"
+                        )))
+                    }
+                }
             }
             let num = |key: &str, default: Option<u64>| -> Result<u64> {
                 match kv.get(key) {
@@ -218,10 +262,28 @@ impl FaultPlan {
                     plan.delay = Some((num("worker", None)? as usize, num("ms", Some(1))?));
                 }
                 "lose" => plan.lose_task = Some(num("task", None)? as usize),
+                "request" => {
+                    let fault = match mode {
+                        Some("drop") => RequestFault::Drop,
+                        Some("delay") => RequestFault::Delay(num("ms", Some(1))?),
+                        Some("burst") => RequestFault::Burst(num("n", Some(4))? as usize),
+                        other => {
+                            return Err(Error::InvalidArgument(format!(
+                                "{ENV_VAR} clause {clause:?}: request mode must be \
+                                 drop|delay|burst, got {other:?}"
+                            )))
+                        }
+                    };
+                    plan.request = Some(RequestSpec {
+                        fault,
+                        rate: rate(&kv)?,
+                        seed: num("seed", Some(0))?,
+                    });
+                }
                 other => {
                     return Err(Error::InvalidArgument(format!(
                         "{ENV_VAR}: unknown fault kind {other:?} \
-                         (expected nan|flip|error|panic|kill|delay|lose)"
+                         (expected nan|flip|error|panic|kill|delay|lose|request)"
                     )))
                 }
             }
@@ -298,6 +360,21 @@ impl FaultPlan {
         self.lose_task == Some(task)
     }
 
+    /// Serving-layer hook: the disposition of request `id` under the
+    /// `request:` clause, or `None` for a clean request.  Deterministic
+    /// per `(seed, id)` so soak tests replay their shed/deadline counts
+    /// exactly.
+    pub fn on_request(&self, id: u64) -> Option<RequestFault> {
+        let spec = self.request?;
+        let key = spec.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256pp::seed_from_u64(key);
+        if rng.uniform() < spec.rate {
+            Some(spec.fault)
+        } else {
+            None
+        }
+    }
+
     /// True when the plan injects nothing (the shielding plan).
     pub fn is_empty(&self) -> bool {
         self.nan.is_none()
@@ -307,6 +384,7 @@ impl FaultPlan {
             && self.kill.is_none()
             && self.delay.is_none()
             && self.lose_task.is_none()
+            && self.request.is_none()
     }
 }
 
@@ -363,6 +441,46 @@ mod tests {
         assert!(FaultPlan::parse("nan:rate=lots").is_err());
         assert!(FaultPlan::parse("delay:worker").is_err()); // not key=value
         assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("request").is_err()); // missing mode
+        assert!(FaultPlan::parse("request:teleport").is_err()); // bad mode
+        assert!(FaultPlan::parse("request:drop:rate=lots").is_err());
+    }
+
+    #[test]
+    fn parses_request_clauses() {
+        let p = FaultPlan::parse("request:drop:rate=0.25:seed=11").unwrap();
+        assert_eq!(
+            p.request,
+            Some(RequestSpec { fault: RequestFault::Drop, rate: 0.25, seed: 11 })
+        );
+        assert!(!p.is_empty());
+        let p = FaultPlan::parse("request:delay:ms=7").unwrap();
+        assert_eq!(p.request.map(|r| r.fault), Some(RequestFault::Delay(7)));
+        let p = FaultPlan::parse("request:burst:n=3:rate=0.5").unwrap();
+        assert_eq!(p.request.map(|r| r.fault), Some(RequestFault::Burst(3)));
+        // defaults: delay ms=1, burst n=4, rate=1.0, seed=0
+        let p = FaultPlan::parse("request:burst").unwrap();
+        assert_eq!(
+            p.request,
+            Some(RequestSpec { fault: RequestFault::Burst(4), rate: 1.0, seed: 0 })
+        );
+    }
+
+    #[test]
+    fn request_sampling_is_deterministic_and_rate_bounded() {
+        let p = FaultPlan::default().with_request(RequestFault::Drop, 0.3, 42);
+        let first: Vec<Option<RequestFault>> = (0..256).map(|id| p.on_request(id)).collect();
+        let again: Vec<Option<RequestFault>> = (0..256).map(|id| p.on_request(id)).collect();
+        assert_eq!(first, again, "per-id disposition must replay exactly");
+        let hits = first.iter().filter(|d| d.is_some()).count();
+        assert!(hits > 0 && hits < 256, "rate 0.3 over 256 ids: got {hits} hits");
+        // rate 0 never fires; rate 1 always fires
+        let never = FaultPlan::default().with_request(RequestFault::Drop, 0.0, 42);
+        assert!((0..64).all(|id| never.on_request(id).is_none()));
+        let always = FaultPlan::default().with_request(RequestFault::Delay(2), 1.0, 42);
+        assert!((0..64).all(|id| always.on_request(id) == Some(RequestFault::Delay(2))));
+        // no clause -> clean
+        assert_eq!(FaultPlan::default().on_request(5), None);
     }
 
     #[test]

@@ -94,6 +94,7 @@ pub mod predict;
 pub mod rng;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod tile;
 
 /// Convenience re-exports covering the public API surface used by the
@@ -117,5 +118,8 @@ pub mod prelude {
     pub use crate::rng::Xoshiro256pp;
     pub use crate::runtime::PjrtBackend;
     pub use crate::scheduler::{Scheduler, SchedulerConfig, SchedulingPolicy};
+    pub use crate::serve::{
+        MemoryGovernor, Outcome, Request, Response, ServeConfig, Server, ServerStats,
+    };
     pub use crate::tile::{Precision, PrecisionCensus, PrecisionMap, TileMatrix};
 }

@@ -5,6 +5,8 @@
 //!   demo                         quick end-to-end pipeline
 //!   fit      [opts]              MLE on a synthetic field
 //!   loglik   [opts]              one likelihood evaluation (timing)
+//!   serve    [opts]              self-driving serving-layer demo
+//!                                (admission control + memory governor)
 //!   artifacts-info               dump the AOT artifact manifest
 //!
 //! Common options (flags override `--config FILE`, which overrides
@@ -20,8 +22,11 @@
 //!   --policy P       fifo | lifo | cp | pf scheduler ready-queue policy
 //!   --range R        theta2 of the generator (0.1) --seed S  (42)
 //!   --retry-budget N precision-escalation retries on breakdown (4)
-//!   --deadline-ms M  scheduler watchdog in ms (0 = off)
+//!   --deadline-ms M  scheduler watchdog / per-request deadline (0 = off)
 //!   --inject SPEC    fault injection (PALLAS_INJECT grammar)
+//!   --budget-mb M    serve: memory-governor budget in MiB (256)
+//!   --queue-depth D  serve: admission queue bound (64)
+//!   --requests R     serve: synthetic requests to submit (32)
 //!
 //! (Hand-rolled parsing: clap is unavailable in the offline crate set.)
 
@@ -75,6 +80,8 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("retry-budget", "retry_budget"),
         ("deadline-ms", "deadline_ms"),
         ("inject", "inject"),
+        ("budget-mb", "budget_mb"),
+        ("queue-depth", "queue_depth"),
     ] {
         if let Some(v) = flags.get(flag) {
             over.insert(key.to_string(), v.clone());
@@ -97,6 +104,7 @@ fn main() {
 fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
     match cmd {
         "demo" | "fit" | "loglik" => {}
+        "serve" => return serve_cmd(flags),
         "artifacts-info" => return artifacts_info(),
         other => {
             eprintln!("unknown command {other:?}; see `mpchol` source header for usage");
@@ -186,6 +194,110 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// Self-driving serving-layer demo: generate a synthetic field, submit
+/// a deterministic mixed request stream (kriging predicts over shifted
+/// site blocks plus periodic 2-fold cross-validations) through the
+/// admission controller, and report the serving counters.
+fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    use mpcholesky::serve::{Request, ServeConfig, Server};
+
+    let rc = resolve_config(flags)?;
+    if !rc.inject.is_empty() {
+        std::env::set_var(mpcholesky::fault::ENV_VAR, &rc.inject);
+        eprintln!("fault injection armed: {}", rc.inject);
+    }
+    let requests: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let theta0 = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
+    eprintln!(
+        "serve: n={} nb={} requests={requests} budget={} MiB queue_depth={}",
+        rc.n, rc.nb, rc.budget_mb, rc.queue_depth
+    );
+    let field = SyntheticField::generate(&FieldConfig {
+        n: rc.n,
+        theta: theta0,
+        seed: rc.seed,
+        gen_nb: rc.nb,
+        num_workers: rc.workers,
+        ..Default::default()
+    })?;
+
+    let mle = MleConfig {
+        nb: rc.nb,
+        variant: rc.variant,
+        num_workers: rc.workers,
+        policy: rc.policy,
+        metric: rc.metric,
+        nugget: rc.nugget,
+        retry_budget: rc.retry_budget,
+        optimizer: mpcholesky::mle::OptimizerConfig {
+            max_evals: rc.max_evals,
+            ftol: rc.ftol,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let cfg = ServeConfig {
+        mle,
+        budget_bytes: rc.budget_mb << 20,
+        queue_depth: rc.queue_depth,
+        deadline: (rc.deadline_ms > 0)
+            .then_some(std::time::Duration::from_millis(rc.deadline_ms)),
+        ..Default::default()
+    };
+    let mut srv = Server::new(cfg);
+
+    let m = rc.nb.min(field.locations.len());
+    for i in 0..requests {
+        if i % 8 == 3 && rc.n % (2 * rc.nb) == 0 {
+            srv.submit(Request::Kfold {
+                locations: field.locations.clone(),
+                z: field.values.clone(),
+                theta: theta0,
+                k: 2,
+                seed: rc.seed + i as u64,
+            });
+        } else {
+            let start = (i * 7) % (field.locations.len() - m + 1);
+            srv.submit(Request::Predict {
+                train: field.locations.clone(),
+                z: field.values.clone(),
+                theta: theta0,
+                sites: field.locations[start..start + m].to_vec(),
+            });
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let out = srv.drain();
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let s = srv.stats();
+    println!(
+        "served {} responses in {:.1} ms ({:.1} rps)",
+        out.len(),
+        secs * 1e3,
+        out.len() as f64 / secs
+    );
+    println!(
+        "completed={} shed={} deadline_miss={} failed={} dropped={}",
+        s.completed, s.shed, s.deadline_miss, s.failed, s.dropped
+    );
+    println!(
+        "cache_hits={} demotions={} retries={} merged_runs={} merged_members={}",
+        s.cache_hits, s.demotions, s.retries, s.merged_runs, s.merged_members
+    );
+    println!(
+        "decode_cache: hits={} evictions={}",
+        s.decode_cache_hits, s.decode_cache_evictions
+    );
+    println!(
+        "peak_resident_bytes={} budget_bytes={}",
+        s.peak_resident_bytes, s.budget_bytes
+    );
     Ok(())
 }
 

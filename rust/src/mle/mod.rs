@@ -23,14 +23,14 @@
 
 pub mod optimizer;
 
-pub use optimizer::{minimize_positive, OptimResult, OptimizerConfig};
+pub use optimizer::{minimize_positive, minimize_positive_batch, OptimResult, OptimizerConfig};
 
 use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
 use crate::cholesky::{
-    self, run_pipeline, GenContext, PanelResolver, PipelineBuffers, PipelineOptions, PipelinePlan,
-    Variant,
+    self, merge_graphs, run_pipeline, GenContext, PanelResolver, PipelineBuffers, PipelineContext,
+    PipelineOptions, PipelinePlan, TileExecutor, Variant,
 };
 use crate::error::{Error, Result};
 use crate::kernels::{NativeBackend, TileBackend};
@@ -494,14 +494,7 @@ impl<'a> MleProblem<'a> {
                 Err(_) => f64::INFINITY,
             }
         };
-        let start = self.cfg.start.unwrap_or_else(|| {
-            let mid = |lo: f64, hi: f64| ((lo.ln() + hi.ln()) / 2.0).exp();
-            [
-                mid(self.cfg.lower[0], self.cfg.upper[0]),
-                mid(self.cfg.lower[1], self.cfg.upper[1]),
-                mid(self.cfg.lower[2], self.cfg.upper[2]),
-            ]
-        });
+        let start = self.start_point();
         let r = minimize_positive(
             objective,
             &start,
@@ -509,6 +502,175 @@ impl<'a> MleProblem<'a> {
             &self.cfg.upper,
             &self.cfg.optimizer,
         );
+        self.finish_fit(r, evals.into_inner())
+    }
+
+    /// [`Self::fit`] with the simplex's independent candidate evaluations
+    /// batched: every Nelder-Mead step that proposes several thetas at
+    /// once (the initial simplex, every shrink) submits them as ONE
+    /// merged task graph (`merge_graphs`), so a single `Scheduler::run`
+    /// work-steals across the candidates — the serving layer's fit path.
+    ///
+    /// The optimizer trajectory is bit-identical to [`Self::fit`]:
+    /// merged members reproduce their solo pipelines bit-for-bit, and
+    /// any merged-run failure (a non-SPD candidate, an injected fault)
+    /// falls back to evaluating that batch serially through the
+    /// recovery-laddered [`Self::loglik`] path.  Data-dependent variants
+    /// ([`Variant::Adaptive`], [`Variant::Tlr`]) always take the serial
+    /// path — their per-theta remap bookkeeping is inherently
+    /// sequential.
+    pub fn fit_batched(&self) -> Result<MleFit> {
+        *self.remap.borrow_mut() = RemapState::default();
+        *self.trace.borrow_mut() = MleTrace::default();
+        let evals: RefCell<Vec<EvalRecord>> = RefCell::new(Vec::new());
+        let eval_serial = |theta: &MaternParams| -> f64 {
+            let t0 = Instant::now();
+            match self.loglik(theta) {
+                Ok(v) => {
+                    evals.borrow_mut().push(EvalRecord {
+                        theta: *theta,
+                        loglik: v,
+                        seconds: t0.elapsed().as_secs_f64(),
+                    });
+                    -v
+                }
+                Err(Error::NotPositiveDefinite { .. }) => NON_SPD_PENALTY,
+                Err(_) => f64::INFINITY,
+            }
+        };
+        let batch = |pts: &[Vec<f64>]| -> Vec<f64> {
+            let thetas: Vec<MaternParams> =
+                pts.iter().map(|x| MaternParams::new(x[0], x[1], x[2])).collect();
+            if thetas.len() > 1 {
+                if let Some(ys) = self.merged_logliks(&thetas, &evals) {
+                    return ys;
+                }
+            }
+            thetas.iter().map(|t| eval_serial(t)).collect()
+        };
+        let start = self.start_point();
+        let r = minimize_positive_batch(
+            batch,
+            &start,
+            &self.cfg.lower,
+            &self.cfg.upper,
+            &self.cfg.optimizer,
+        );
+        self.finish_fit(r, evals.into_inner())
+    }
+
+    /// Evaluate several candidate thetas as one merged pipeline graph.
+    /// Returns `None` whenever the batch cannot be served merged — a
+    /// data-dependent variant, an invalid theta, or any run failure —
+    /// and the caller re-evaluates serially (recovery ladder included),
+    /// so a poisoned candidate never poisons its batch-mates.
+    fn merged_logliks(
+        &self,
+        thetas: &[MaternParams],
+        evals: &RefCell<Vec<EvalRecord>>,
+    ) -> Option<Vec<f64>> {
+        if matches!(self.cfg.variant, Variant::Adaptive { .. } | Variant::Tlr { .. }) {
+            return None;
+        }
+        if thetas.iter().any(|t| t.validate().is_err()) {
+            return None;
+        }
+        let n = self.n();
+        let nb = self.cfg.nb;
+        let p = n / nb;
+        let opts = PipelineOptions { rhs_cols: 1, logdet: true, ..Default::default() };
+        let map = self.cfg.variant.precision_map(p, None).ok()?;
+        let t0 = Instant::now();
+        let mut members: Vec<(TileMatrix, PipelineBuffers)> = Vec::with_capacity(thetas.len());
+        let mut plans: Vec<PipelinePlan> = Vec::with_capacity(thetas.len());
+        for _ in thetas {
+            let mut tiles = TileMatrix::zeros(n, nb).ok()?;
+            let mut bufs = PipelineBuffers::new(p, nb, 1, 0);
+            bufs.load_column(0, self.z);
+            cholesky::prepare_tiles(&mut tiles, self.cfg.variant, &map);
+            plans.push(PipelinePlan::build_static(p, nb, self.cfg.variant, map.clone(), opts));
+            members.push((tiles, bufs));
+        }
+        let (mut graph, local) = merge_graphs(&plans).ok()?;
+        let execs: Vec<TileExecutor<'_, dyn TileBackend>> = thetas
+            .iter()
+            .zip(members.iter())
+            .map(|(t, (tiles, bufs))| {
+                TileExecutor::new(tiles, self.backend)
+                    .with_generation(GenContext {
+                        locations: self.locations,
+                        theta: *t,
+                        metric: self.cfg.metric,
+                        nugget: self.cfg.nugget,
+                    })
+                    .with_pipeline(PipelineContext { bufs, resolver: None, crosscov: None })
+            })
+            .collect();
+        self.scheduler
+            .run(&mut graph, |task, bc| execs[bc.member].execute(&bc.call, &local[task]))
+            .ok()?;
+        let seconds = t0.elapsed().as_secs_f64() / thetas.len() as f64;
+        let mut ys = Vec::with_capacity(thetas.len());
+        for (m, (t, (_tiles, bufs))) in thetas.iter().zip(members.iter()).enumerate() {
+            let logdet = bufs.logdet();
+            let u = bufs.column(0);
+            let quad: f64 = u.iter().map(|x| x * x).sum();
+            let v =
+                -0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln() - 0.5 * logdet - 0.5 * quad;
+            evals.borrow_mut().push(EvalRecord { theta: *t, loglik: v, seconds });
+            ys.push(-v);
+            // per-evaluation bookkeeping mirrors run_iteration: band maps
+            // are data-free, so the realized map IS the static map
+            let (churn, first) = {
+                let mut st = self.remap.borrow_mut();
+                let churn = st.map.as_ref().map_or(0, |prev| prev.churn(&map));
+                let first = st.evals == 0;
+                st.map = Some(map.clone());
+                st.evals += 1;
+                (churn, first)
+            };
+            let plan = &plans[m];
+            let rep = datamove::simulate_pipeline(
+                &plan.graph,
+                &self.cfg.model_device,
+                nb,
+                &map,
+                &plan.conversions,
+                plan.r.max(1),
+            );
+            self.trace.borrow_mut().iterations.push(MleIterStat {
+                census: map.census(),
+                map_churn: churn,
+                remapped: first,
+                diagonal_dp: map.diagonal_is_dp(),
+                modeled_transfer_bytes: rep.demand_bytes,
+                pipeline_tasks: plan.graph.len(),
+                solve_tasks: plan.counts.solves(),
+                logdet_tasks: plan.counts.logdet,
+                crosscov_tasks: plan.counts.crosscov,
+                recovery_attempts: 0,
+                escalated_tiles: 0,
+            });
+        }
+        Some(ys)
+    }
+
+    /// The optimizer start point: configured, or the geometric midpoint
+    /// of the box bounds.
+    fn start_point(&self) -> [f64; 3] {
+        self.cfg.start.unwrap_or_else(|| {
+            let mid = |lo: f64, hi: f64| ((lo.ln() + hi.ln()) / 2.0).exp();
+            [
+                mid(self.cfg.lower[0], self.cfg.upper[0]),
+                mid(self.cfg.lower[1], self.cfg.upper[1]),
+                mid(self.cfg.lower[2], self.cfg.upper[2]),
+            ]
+        })
+    }
+
+    /// Shared [`Self::fit`]/[`Self::fit_batched`] tail: reject runs that
+    /// never found a positive-definite covariance, package the rest.
+    fn finish_fit(&self, r: OptimResult, evals: Vec<EvalRecord>) -> Result<MleFit> {
         if !r.fx.is_finite() || r.fx >= NON_SPD_PENALTY {
             return Err(Error::Optimization(
                 "no positive-definite covariance found within bounds".into(),
@@ -519,7 +681,7 @@ impl<'a> MleProblem<'a> {
             loglik: -r.fx,
             iterations: r.evals,
             converged: r.converged,
-            evals: evals.into_inner(),
+            evals,
             trace: self.trace.borrow().clone(),
         })
     }
@@ -603,6 +765,40 @@ mod tests {
         // loose sanity: the estimate is the right order of magnitude
         assert!(fit.theta.range > 0.02 && fit.theta.range < 0.5, "{:?}", fit.theta);
         assert!(fit.theta.variance > 0.2 && fit.theta.variance < 5.0, "{:?}", fit.theta);
+    }
+
+    #[test]
+    fn batched_fit_matches_serial_fit_bitwise() {
+        // the serving layer's fit path: simplex candidates merged into
+        // one graph per optimizer step must walk the exact serial
+        // trajectory (merged members are bit-identical to solo runs)
+        let theta0 = MaternParams::new(1.0, 0.1, 0.5);
+        let f = small_field(theta0, 3);
+        let cfg = MleConfig {
+            nb: 64,
+            variant: Variant::MixedPrecision { diag_thick: 2 },
+            num_workers: 4,
+            optimizer: OptimizerConfig { max_evals: 60, ftol: 1e-4, ..Default::default() },
+            lower: [0.05, 0.01, 0.25],
+            upper: [10.0, 1.0, 1.5],
+            start: Some([0.5, 0.05, 0.8]),
+            ..Default::default()
+        };
+        let serial =
+            MleProblem::new(&f.locations, &f.values, cfg.clone()).unwrap().fit().unwrap();
+        let batched =
+            MleProblem::new(&f.locations, &f.values, cfg).unwrap().fit_batched().unwrap();
+        assert_eq!(serial.iterations, batched.iterations, "evaluation counts diverged");
+        assert_eq!(serial.loglik.to_bits(), batched.loglik.to_bits());
+        assert_eq!(serial.theta.variance.to_bits(), batched.theta.variance.to_bits());
+        assert_eq!(serial.theta.range.to_bits(), batched.theta.range.to_bits());
+        assert_eq!(serial.theta.smoothness.to_bits(), batched.theta.smoothness.to_bits());
+        assert_eq!(serial.evals.len(), batched.evals.len());
+        for (a, b) in serial.evals.iter().zip(batched.evals.iter()) {
+            assert_eq!(a.loglik.to_bits(), b.loglik.to_bits());
+        }
+        // both drivers record the same per-evaluation precision trace
+        assert_eq!(serial.trace.iterations.len(), batched.trace.iterations.len());
     }
 
     #[test]

@@ -53,20 +53,43 @@ pub fn minimize_positive<F: FnMut(&[f64]) -> f64>(
     hi: &[f64],
     cfg: &OptimizerConfig,
 ) -> OptimResult {
+    minimize_positive_batch(|pts| pts.iter().map(|x| f(x)).collect(), x0, lo, hi, cfg)
+}
+
+/// [`minimize_positive`] driven by a **batch** evaluator: every set of
+/// data-independent candidate points in one Nelder–Mead step — the
+/// `dim + 1` initial-simplex corners and the `dim` shrink points — is
+/// handed to `fb` as one slice, so a caller can merge the candidates'
+/// pipeline graphs into a single scheduler run (`merge_graphs`) instead
+/// of evaluating them serially.  Reflection/expansion/contraction points
+/// are sequentially dependent and arrive as singleton batches.
+///
+/// `fb` must return one objective value per input point, in order.  When
+/// it does, the iterate sequence is identical to [`minimize_positive`]
+/// over the same objective.
+pub fn minimize_positive_batch<F: FnMut(&[Vec<f64>]) -> Vec<f64>>(
+    mut fb: F,
+    x0: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    cfg: &OptimizerConfig,
+) -> OptimResult {
     let dim = x0.len();
     assert!(dim > 0 && lo.len() == dim && hi.len() == dim);
     let clamp_log = |v: f64, i: usize| v.clamp(lo[i].ln(), hi[i].ln());
     let to_x = |y: &[f64]| -> Vec<f64> { y.iter().map(|v| v.exp()).collect() };
 
     let mut evals = 0usize;
-    let eval = |y: &[f64], f: &mut F, evals: &mut usize| -> f64 {
-        *evals += 1;
-        let v = f(&to_x(y));
-        if v.is_nan() {
-            f64::INFINITY
-        } else {
-            v
-        }
+    // batch of log-space points -> batch of sanitized objective values
+    let eval_batch = |ys: &[Vec<f64>], fb: &mut F, evals: &mut usize| -> Vec<f64> {
+        *evals += ys.len();
+        let xs: Vec<Vec<f64>> = ys.iter().map(|y| to_x(y)).collect();
+        let vs = fb(&xs);
+        assert_eq!(vs.len(), ys.len(), "batch evaluator returned wrong arity");
+        vs.into_iter().map(|v| if v.is_nan() { f64::INFINITY } else { v }).collect()
+    };
+    let eval1 = |y: &[f64], fb: &mut F, evals: &mut usize| -> f64 {
+        eval_batch(std::slice::from_ref(&y.to_vec()), fb, evals)[0]
     };
 
     // initial simplex in log-space
@@ -84,7 +107,8 @@ pub fn minimize_positive<F: FnMut(&[f64]) -> f64>(
         }
         simplex.push(y);
     }
-    let mut fv: Vec<f64> = simplex.iter().map(|y| eval(y, &mut f, &mut evals)).collect();
+    // the dim + 1 corners are data-independent: one batch
+    let mut fv: Vec<f64> = eval_batch(&simplex, &mut fb, &mut evals);
 
     let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
     let mut converged = false;
@@ -130,11 +154,11 @@ pub fn minimize_positive<F: FnMut(&[f64]) -> f64>(
 
         // reflection
         let yr = mk(alpha);
-        let fr = eval(&yr, &mut f, &mut evals);
+        let fr = eval1(&yr, &mut fb, &mut evals);
         if fr < fv[0] {
             // expansion
             let ye = mk(gamma);
-            let fe = eval(&ye, &mut f, &mut evals);
+            let fe = eval1(&ye, &mut fb, &mut evals);
             if fe < fr {
                 simplex[dim] = ye;
                 fv[dim] = fe;
@@ -148,20 +172,23 @@ pub fn minimize_positive<F: FnMut(&[f64]) -> f64>(
         } else {
             // contraction (outside if fr < worst, inside otherwise)
             let yc = if fr < fv[dim] { mk(rho) } else { mk(-rho) };
-            let fc = eval(&yc, &mut f, &mut evals);
+            let fc = eval1(&yc, &mut fb, &mut evals);
             if fc < fv[dim].min(fr) {
                 simplex[dim] = yc;
                 fv[dim] = fc;
             } else {
-                // shrink toward best
+                // shrink toward best: the dim shrunk points are
+                // data-independent — one batch
+                let base = simplex[0].clone();
                 for k in 1..=dim {
-                    let base = simplex[0].clone();
                     for i in 0..dim {
                         simplex[k][i] =
                             clamp_log(base[i] + sigma * (simplex[k][i] - base[i]), i);
                     }
-                    fv[k] = eval(&simplex[k].clone(), &mut f, &mut evals);
                 }
+                let shrunk: Vec<Vec<f64>> = simplex[1..=dim].to_vec();
+                let fs = eval_batch(&shrunk, &mut fb, &mut evals);
+                fv[1..=dim].copy_from_slice(&fs);
             }
         }
     }
@@ -245,6 +272,66 @@ mod tests {
         );
         assert!(r.fx.is_finite());
         assert!((r.x[0] - 1.0).abs() < 0.1, "{:?}", r);
+    }
+
+    #[test]
+    fn batch_path_matches_serial_bit_for_bit() {
+        // same objective through both drivers: identical iterates, so
+        // identical minimizer, value and eval count
+        let obj = |x: &[f64]| {
+            (x[0].ln() - 2.0f64.ln()).powi(2) + (x[1].ln() + 1.0f64.ln()).powi(2)
+        };
+        let cfg = OptimizerConfig { max_evals: 300, ftol: 1e-12, xtol: 1e-10, ..Default::default() };
+        let serial = minimize_positive(obj, &[0.5, 0.5], &[1e-3, 1e-3], &[1e3, 1e3], &cfg);
+        let mut batch_sizes = Vec::new();
+        let batched = minimize_positive_batch(
+            |pts| {
+                batch_sizes.push(pts.len());
+                pts.iter().map(|x| obj(x)).collect()
+            },
+            &[0.5, 0.5],
+            &[1e-3, 1e-3],
+            &[1e3, 1e3],
+            &cfg,
+        );
+        assert_eq!(serial.evals, batched.evals);
+        assert_eq!(serial.fx.to_bits(), batched.fx.to_bits());
+        for (a, b) in serial.x.iter().zip(batched.x.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the initial simplex (dim + 1 = 3 points) arrived as one batch
+        assert_eq!(batch_sizes[0], 3, "initial simplex must be batched: {batch_sizes:?}");
+    }
+
+    #[test]
+    fn shrink_points_arrive_as_one_batch() {
+        // an objective hostile enough to force shrink steps: reject
+        // every point except the exact start — reflection, expansion and
+        // contraction all fail, so every iteration must shrink
+        let obj = |x: &[f64]| {
+            let d = (x[0] - 1.0).abs() + (x[1] - 1.0).abs();
+            if d == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        };
+        let mut batch_sizes = Vec::new();
+        let _ = minimize_positive_batch(
+            |pts| {
+                batch_sizes.push(pts.len());
+                pts.iter().map(|x| obj(x)).collect()
+            },
+            &[1.0, 1.0],
+            &[1e-2, 1e-2],
+            &[1e2, 1e2],
+            &OptimizerConfig { max_evals: 200, ftol: 0.0, xtol: 1e-9, ..Default::default() },
+        );
+        // at least one shrink (dim = 2 points in one call) must appear
+        assert!(
+            batch_sizes.iter().skip(1).any(|&s| s == 2),
+            "no shrink batch observed: {batch_sizes:?}"
+        );
     }
 
     #[test]

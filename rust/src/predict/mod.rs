@@ -37,18 +37,20 @@ pub struct KrigingModel {
 }
 
 /// One pipeline problem's run state: tiles + shared buffers
-/// (+ resolver for adaptive variants).  Built per fit / per fold; the
-/// lowered plan travels separately so fold plans can be merged.
-struct PipelineSetup {
-    tiles: TileMatrix,
-    bufs: PipelineBuffers,
-    resolver: Option<PanelResolver>,
+/// (+ resolver for adaptive variants).  Built per fit / per fold /
+/// per admitted serve request; the lowered plan travels separately so
+/// member plans can be merged.
+pub(crate) struct PipelineSetup {
+    pub(crate) tiles: TileMatrix,
+    pub(crate) bufs: PipelineBuffers,
+    pub(crate) resolver: Option<PanelResolver>,
 }
 
 /// Lower one kriging problem (n training sites, weight solve, optional
 /// `pred_len` in-graph predictions) into a pipeline plan with prepared
-/// storage and a loaded RHS.
-fn build_setup(
+/// storage and a loaded RHS.  Shared with the serving layer's admission
+/// controller, which merges many of these per scheduler run.
+pub(crate) fn build_setup(
     n: usize,
     z: &[f64],
     cfg: &MleConfig,
@@ -168,6 +170,24 @@ impl KrigingModel {
     pub fn theta(&self) -> &MaternParams {
         &self.theta
     }
+
+    /// Rehydrate a model from cached parts (the serving layer's
+    /// factorization cache stores weights keyed on `(theta, locations)`;
+    /// a cache hit skips generation/factorization entirely and serves
+    /// the epilogue through the same serial predictor as a cold fit).
+    pub(crate) fn from_parts(
+        train_locs: Vec<Location>,
+        weights: Vec<f64>,
+        theta: MaternParams,
+        metric: Metric,
+    ) -> Self {
+        Self { train_locs, weights, theta, metric }
+    }
+
+    /// The kriging weights `w = Sigma(theta)^{-1} z`.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
 }
 
 /// Prediction mean squared error.
@@ -278,7 +298,7 @@ pub fn kfold_pmse_with_backend(
         setups.push(setup);
         plans.push(plan);
     }
-    let (mut graph, local) = merge_graphs(&plans);
+    let (mut graph, local) = merge_graphs(&plans)?;
 
     let workers = SchedulerConfig::resolve_workers(cfg.num_workers);
     let sched = Scheduler::new(SchedulerConfig {

@@ -381,6 +381,7 @@ impl Scheduler {
                     }
                     let e = Error::DeadlineExceeded {
                         elapsed_ms: t0.elapsed().as_millis() as u64,
+                        budget_ms: dl.as_millis() as u64,
                         finished: st_ref.finished.load(Ordering::Relaxed),
                         total: n,
                         detail: stuck_task_diagnostic(pending_ref),
@@ -850,9 +851,10 @@ mod tests {
         let err = sched.run(&mut g, |_, _| Ok(())).unwrap_err();
         assert!(t0.elapsed().as_secs_f64() < 10.0, "watchdog never fired");
         match err {
-            Error::DeadlineExceeded { finished, total, detail, .. } => {
+            Error::DeadlineExceeded { budget_ms, finished, total, detail, .. } => {
                 assert_eq!(total, 3);
                 assert_eq!(finished, 1, "only the lost task ran");
+                assert_eq!(budget_ms, 200, "watchdog must report the configured budget");
                 assert!(detail.contains("task 1") && detail.contains("unmet deps"), "{detail}");
             }
             other => panic!("expected DeadlineExceeded, got {other}"),

@@ -1,0 +1,1312 @@
+//! Resilient serving layer (`pallas-serve`): admission control, a
+//! global memory governor, request deadlines, and graceful precision
+//! degradation under load.
+//!
+//! Concurrent fit / predict / k-fold requests enter an admission
+//! controller that batches compatible pending kriging problems into ONE
+//! merged task graph per scheduler run (the k-fold pattern generalized
+//! to arbitrary request mixes).  Before a request is admitted it walks a
+//! degradation ladder:
+//!
+//! 1. **Factorization cache** — a hit on `(theta, locations, data)`
+//!    skips generation/factorization entirely and serves the kriging
+//!    epilogue from cached weights (bit-identical to a cold fit: the
+//!    serial predictor and the in-graph `CrossCov` tasks are pinned
+//!    equal by the k-fold tests).
+//! 2. **Precision demotion** — a request whose predicted resident
+//!    footprint can never fit the governor budget is demoted one
+//!    precision rung at a time ([`demote_variant`]) while that strictly
+//!    shrinks the footprint.
+//! 3. **Backpressure queueing** — a request that fits the budget but
+//!    not the *current* headroom waits for in-flight reservations to
+//!    release (the governor's resident count returns to zero at every
+//!    round boundary, so waiting always makes progress).
+//! 4. **Load shedding** — a request that exceeds the whole budget even
+//!    fully demoted, or that arrives on a full admission queue, is shed
+//!    with a typed [`Error::Overloaded`] carrying a retry-after hint —
+//!    never a panic, never a hang.
+//!
+//! Per-request deadlines ride [`SchedulerConfig::deadline`]: the watchdog
+//! drains workers cleanly and the miss surfaces as a diagnostic
+//! [`Error::DeadlineExceeded`].  Transient injected faults
+//! (`PALLAS_INJECT=request:drop|delay|burst` plus the codelet-level
+//! grammar) are retried with exponential backoff up to
+//! [`ServeConfig::max_retries`]; a dropped request (client vanished) is
+//! counted and cleaned up without ever wedging the server.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cholesky::{
+    merge_graphs, CrossCovContext, DecodeCache, GenContext, PipelineContext, TileExecutor, Variant,
+};
+use crate::error::{Error, Result};
+use crate::fault::{env_plan, FaultPlan, RequestFault};
+use crate::kernels::{NativeBackend, TileBackend};
+use crate::matern::{Location, MaternParams, Metric};
+use crate::mle::{MleConfig, MleProblem};
+use crate::predict::{build_setup, kfold_pmse, KrigingModel};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+
+static NATIVE: NativeBackend = NativeBackend;
+
+/// Independent simplex candidates a batched MLE step holds resident at
+/// once (dim + 1 for the 3-parameter Matern field) — the multiplier the
+/// governor charges a `Fit` request.
+pub const SIMPLEX_BATCH: usize = 4;
+
+/// Serving-layer configuration.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Per-request pipeline configuration (tile size, variant, metric,
+    /// nugget, workers, optimizer, ...).  `mle.variant` is the admission
+    /// precision every request starts from before any demotion.
+    pub mle: MleConfig,
+    /// Memory-governor budget: the sum of admitted requests' predicted
+    /// resident bytes never exceeds this.
+    pub budget_bytes: usize,
+    /// Admission queue bound; submissions beyond it shed immediately.
+    pub queue_depth: usize,
+    /// Most requests admitted into one merged scheduler run.
+    pub max_batch: usize,
+    /// Default per-request deadline (None = no watchdog).
+    pub deadline: Option<Duration>,
+    /// Retries for transient (injected) faults before the error is
+    /// returned to the caller.
+    pub max_retries: usize,
+    /// Base of the exponential retry backoff, in milliseconds.
+    pub backoff_base_ms: u64,
+    /// Byte budget of the factorization (kriging-weight) cache.
+    pub cache_bytes: usize,
+    /// Byte budget of the persistent packed-tile [`DecodeCache`].
+    pub decode_cache_bytes: usize,
+    /// Explicit fault plan; `None` resolves the ambient `PALLAS_INJECT`
+    /// plan once at construction (pass `Some(FaultPlan::default().into())`
+    /// to shield the server from the environment).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            mle: MleConfig::default(),
+            budget_bytes: 256 << 20,
+            queue_depth: 64,
+            max_batch: 8,
+            deadline: None,
+            max_retries: 3,
+            backoff_base_ms: 1,
+            cache_bytes: 32 << 20,
+            decode_cache_bytes: 8 << 20,
+            faults: None,
+        }
+    }
+}
+
+/// One client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Krige `sites` from (`train`, `z`) at fixed `theta`.
+    Predict {
+        train: Vec<Location>,
+        z: Vec<f64>,
+        theta: MaternParams,
+        sites: Vec<Location>,
+    },
+    /// Maximum-likelihood fit of theta over the observations.
+    Fit { locations: Vec<Location>, z: Vec<f64> },
+    /// k-fold cross-validated PMSE at fixed `theta`.
+    Kfold {
+        locations: Vec<Location>,
+        z: Vec<f64>,
+        theta: MaternParams,
+        k: usize,
+        seed: u64,
+    },
+}
+
+impl Request {
+    /// Training-problem size (what the factorization covers).
+    pub fn n(&self) -> usize {
+        match self {
+            Request::Predict { train, .. } => train.len(),
+            Request::Fit { locations, .. } | Request::Kfold { locations, .. } => locations.len(),
+        }
+    }
+
+    fn validate(&self, cfg: &MleConfig) -> Result<()> {
+        match self {
+            Request::Predict { train, z, theta, .. } => {
+                if train.is_empty() || train.len() % cfg.nb != 0 {
+                    crate::invalid_arg!(
+                        "predict: n = {} must be a nonzero multiple of nb = {}",
+                        train.len(),
+                        cfg.nb
+                    );
+                }
+                if train.len() != z.len() {
+                    crate::invalid_arg!("predict: {} locations vs {} values", train.len(), z.len());
+                }
+                theta.validate()
+            }
+            Request::Fit { locations, z } => {
+                if locations.is_empty() || locations.len() % cfg.nb != 0 {
+                    crate::invalid_arg!(
+                        "fit: n = {} must be a nonzero multiple of nb = {}",
+                        locations.len(),
+                        cfg.nb
+                    );
+                }
+                if locations.len() != z.len() {
+                    crate::invalid_arg!("fit: {} locations vs {} values", locations.len(), z.len());
+                }
+                Ok(())
+            }
+            Request::Kfold { locations, z, theta, k, .. } => {
+                if *k < 2 || locations.len() % (k * cfg.nb) != 0 {
+                    crate::invalid_arg!(
+                        "kfold: needs n % (k * nb) == 0 (n={}, k={k}, nb={})",
+                        locations.len(),
+                        cfg.nb
+                    );
+                }
+                if locations.len() != z.len() {
+                    let (nl, nz) = (locations.len(), z.len());
+                    crate::invalid_arg!("kfold: {nl} locations vs {nz} values");
+                }
+                theta.validate()
+            }
+        }
+    }
+}
+
+/// A successful request's payload.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Predictions(Vec<f64>),
+    Fitted { theta: MaternParams, loglik: f64, iterations: usize },
+    Pmse { fold_pmse: Vec<f64>, mean_pmse: f64 },
+}
+
+/// One request's terminal answer (every admitted copy gets exactly one,
+/// except injected `request:drop` copies, which are counted in
+/// [`ServerStats::dropped`] and never answered — the client vanished).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Outcome>,
+    /// Served from the factorization cache (no graph was run).
+    pub cache_hit: bool,
+    /// Precision rungs the admission controller walked down.
+    pub demoted: u32,
+    /// Transient-fault retries spent on this request.
+    pub retries: u32,
+}
+
+/// Serving counters; every submitted copy lands in exactly one of
+/// `completed` / `failed` / `shed` / `deadline_miss` / `dropped`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub deadline_miss: u64,
+    pub dropped: u64,
+    pub cache_hits: u64,
+    pub factor_cache_evictions: u64,
+    pub demotions: u64,
+    pub retries: u64,
+    pub queued_rounds: u64,
+    pub merged_runs: u64,
+    pub merged_members: u64,
+    pub decode_cache_hits: u64,
+    pub decode_cache_evictions: u64,
+    pub peak_resident_bytes: u64,
+    pub budget_bytes: u64,
+}
+
+/// Resident-bytes accounting that gates admission: reservations are
+/// charged on admission and released when the request's answer is
+/// emitted, so `resident` returns to zero at every round boundary —
+/// which is the liveness argument for the backpressure rung (a queued
+/// request that fits the budget always eventually reserves).
+pub struct MemoryGovernor {
+    budget: usize,
+    resident: usize,
+    peak: usize,
+}
+
+impl MemoryGovernor {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, resident: 0, peak: 0 }
+    }
+
+    /// Charge `bytes` if the budget holds them; `false` leaves the
+    /// accounting untouched.
+    pub fn try_reserve(&mut self, bytes: usize) -> bool {
+        if self.resident.saturating_add(bytes) > self.budget {
+            return false;
+        }
+        self.resident += bytes;
+        self.peak = self.peak.max(self.resident);
+        true
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        self.resident = self.resident.saturating_sub(bytes);
+    }
+
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+}
+
+struct CacheEntry {
+    weights: Vec<f64>,
+    stamp: u64,
+}
+
+/// Byte-budgeted LRU cache of kriging weight vectors keyed on
+/// `(nb, variant, metric, nugget, theta, locations, data)` — demoted
+/// variants hash to distinct keys, so a degraded answer never pollutes a
+/// full-precision entry.
+pub struct FactorCache {
+    map: HashMap<u64, CacheEntry>,
+    bytes: usize,
+    budget: usize,
+    stamp: u64,
+    evictions: u64,
+}
+
+impl FactorCache {
+    pub fn new(budget: usize) -> Self {
+        Self { map: HashMap::new(), bytes: 0, budget, stamp: 0, evictions: 0 }
+    }
+
+    pub fn lookup(&mut self, key: u64) -> Option<Vec<f64>> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        let e = self.map.get_mut(&key)?;
+        e.stamp = stamp;
+        Some(e.weights.clone())
+    }
+
+    /// Insert, evicting least-recently-used entries until the budget
+    /// holds the new one; returns evictions performed.  Entries larger
+    /// than the whole budget are not cached.
+    pub fn insert(&mut self, key: u64, weights: &[f64]) -> usize {
+        let sz = std::mem::size_of_val(weights);
+        if sz > self.budget {
+            return 0;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes -= std::mem::size_of_val(&old.weights[..]);
+        }
+        let mut evicted = 0;
+        while self.bytes + sz > self.budget {
+            let oldest = self.map.iter().min_by_key(|(_, e)| e.stamp).map(|(&k, _)| k);
+            match oldest {
+                Some(k) => {
+                    let e = self.map.remove(&k).unwrap();
+                    self.bytes -= std::mem::size_of_val(&e.weights[..]);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        self.stamp += 1;
+        self.map.insert(key, CacheEntry { weights: weights.to_vec(), stamp: self.stamp });
+        self.bytes += sz;
+        self.evictions += evicted as u64;
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// FNV-1a accumulator for the factorization-cache key.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        for &b in s.as_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
+
+fn cache_key(
+    nb: usize,
+    variant: Variant,
+    metric: Metric,
+    nugget: f64,
+    theta: &MaternParams,
+    train: &[Location],
+    z: &[f64],
+) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(nb as u64);
+    h.str(&format!("{variant:?}"));
+    h.str(&format!("{metric:?}"));
+    h.u64(nugget.to_bits());
+    h.u64(theta.variance.to_bits());
+    h.u64(theta.range.to_bits());
+    h.u64(theta.smoothness.to_bits());
+    for l in train {
+        h.u64(l.x.to_bits());
+        h.u64(l.y.to_bits());
+    }
+    for v in z {
+        h.u64(v.to_bits());
+    }
+    h.0
+}
+
+/// One precision rung down (the degradation ladder), ordered by
+/// *storage footprint*: dense DP drops to the dp+bf16 band layout, the
+/// three/four-precision band layouts collapse their f32/f16 bands to
+/// bf16, and a dp+bf16 map halves its DP band until only the diagonal
+/// remains.  Returns `None` at the bottom of the ladder and for
+/// variants whose storage is data-dependent or already minimal.
+pub fn demote_variant(v: Variant) -> Option<Variant> {
+    match v {
+        Variant::FullDp => Some(Variant::MixedPrecision { diag_thick: 2 }),
+        Variant::MixedPrecision { diag_thick } if diag_thick > 1 => {
+            Some(Variant::MixedPrecision { diag_thick: diag_thick / 2 })
+        }
+        // Collapse the f32 band to bf16 first (sp_thick -> dp_thick),
+        // then halve the remaining f64 band; floor is 3p{1,1} (f64
+        // diagonal, bf16 everywhere else).  NOT MixedPrecision: that
+        // would *promote* the outer bf16 band to f32 and grow storage.
+        Variant::ThreePrecision { dp_thick, sp_thick } if sp_thick > dp_thick => {
+            Some(Variant::ThreePrecision { dp_thick, sp_thick: dp_thick })
+        }
+        Variant::ThreePrecision { dp_thick, .. } if dp_thick > 1 => {
+            let t = dp_thick / 2;
+            Some(Variant::ThreePrecision { dp_thick: t, sp_thick: t })
+        }
+        // f16 and bf16 tiles cost the same modeled bytes, so the four-
+        // tier layout degrades into the three-tier chain above.
+        Variant::FourPrecision { dp_thick, .. } => {
+            Some(Variant::ThreePrecision { dp_thick, sp_thick: dp_thick })
+        }
+        _ => None,
+    }
+}
+
+/// Predicted resident bytes of one pipeline problem: per-tile packed
+/// storage plus an f32 decode-scratch allowance, plus the RHS / scalar /
+/// prediction buffers.  Data-dependent variants (whose map needs
+/// generated tiles) are priced at the dense-f64-plus-scratch worst case.
+pub fn unit_bytes(n: usize, nb: usize, variant: Variant, pred_len: usize) -> usize {
+    let p = (n / nb).max(1);
+    let nn = nb * nb;
+    let tiles = match variant.precision_map(p, None) {
+        Ok(map) => {
+            let mut b = 0usize;
+            for i in 0..p {
+                for j in 0..=i {
+                    b += nn * (map.get(i, j).bytes() + 4);
+                }
+            }
+            b
+        }
+        Err(_) => p * (p + 1) / 2 * nn * 12,
+    };
+    tiles + (p * nb + p + pred_len) * 8
+}
+
+/// What the governor charges a request on admission.
+pub fn predicted_request_bytes(req: &Request, nb: usize, variant: Variant) -> usize {
+    match req {
+        Request::Predict { train, sites, .. } => unit_bytes(train.len(), nb, variant, sites.len()),
+        Request::Fit { locations, .. } => {
+            let batch = match variant {
+                Variant::Adaptive { .. } | Variant::Tlr { .. } => 1,
+                _ => SIMPLEX_BATCH,
+            };
+            batch * unit_bytes(locations.len(), nb, variant, 0)
+        }
+        Request::Kfold { locations, k, .. } => {
+            let k = (*k).max(2);
+            let n = locations.len();
+            k * unit_bytes(n - n / k, nb, variant, n / k)
+        }
+    }
+}
+
+enum DeadlineState {
+    Unbounded,
+    Left(Duration),
+    Missed { elapsed_ms: u64, budget_ms: u64 },
+}
+
+struct Pending {
+    id: u64,
+    req: Request,
+    submitted: Instant,
+    deadline: Option<Duration>,
+    /// Injected admission delay (`request:delay`), charged against the
+    /// deadline budget virtually — no wall-clock sleep — so fault legs
+    /// stay deterministic.
+    delay_ms: u64,
+    /// Injected `request:drop`: clean up without answering.
+    drop_it: bool,
+    variant: Variant,
+    demoted: u32,
+    retries: u32,
+    reserved: usize,
+}
+
+/// The serving loop: single-threaded admission over a multi-threaded
+/// execution core (each admitted batch runs one merged task graph on the
+/// work-stealing scheduler).
+pub struct Server {
+    cfg: ServeConfig,
+    governor: MemoryGovernor,
+    cache: FactorCache,
+    decode_cache: Arc<DecodeCache>,
+    faults: Option<Arc<FaultPlan>>,
+    queue: VecDeque<Pending>,
+    next_id: u64,
+    stats: ServerStats,
+    ready: Vec<Response>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let faults = cfg.faults.clone().or_else(env_plan);
+        let stats =
+            ServerStats { budget_bytes: cfg.budget_bytes as u64, ..ServerStats::default() };
+        Self {
+            governor: MemoryGovernor::new(cfg.budget_bytes),
+            cache: FactorCache::new(cfg.cache_bytes),
+            decode_cache: Arc::new(DecodeCache::new(cfg.decode_cache_bytes)),
+            faults,
+            queue: VecDeque::new(),
+            next_id: 1,
+            stats,
+            ready: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Enqueue a request under the server's default deadline; returns
+    /// the id of its first admitted copy.
+    pub fn submit(&mut self, req: Request) -> u64 {
+        let deadline = self.cfg.deadline;
+        self.submit_with_deadline(req, deadline)
+    }
+
+    /// Enqueue a request with an explicit deadline override.  Injected
+    /// request faults are sampled here, once per submission: `burst`
+    /// enqueues duplicate copies, `delay` charges a virtual admission
+    /// delay, `drop` marks the copy as vanished.  Copies beyond the
+    /// queue bound shed immediately with a typed [`Error::Overloaded`].
+    pub fn submit_with_deadline(&mut self, req: Request, deadline: Option<Duration>) -> u64 {
+        let fault = self.faults.as_ref().and_then(|f| f.on_request(self.next_id));
+        let (copies, delay_ms, drop_it) = match fault {
+            Some(RequestFault::Burst(k)) => (k.max(1), 0, false),
+            Some(RequestFault::Delay(ms)) => (1, ms, false),
+            Some(RequestFault::Drop) => (1, 0, true),
+            None => (1, 0, false),
+        };
+        let first = self.next_id;
+        for _ in 0..copies {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.stats.submitted += 1;
+            if self.queue.len() >= self.cfg.queue_depth {
+                let hint = self.retry_hint();
+                let resp = Response {
+                    id,
+                    result: Err(Error::Overloaded {
+                        retry_after_ms: hint,
+                        reason: "admission queue full".into(),
+                    }),
+                    cache_hit: false,
+                    demoted: 0,
+                    retries: 0,
+                };
+                Self::classify(&mut self.stats, &resp.result);
+                self.ready.push(resp);
+                continue;
+            }
+            self.queue.push_back(Pending {
+                id,
+                req: req.clone(),
+                submitted: Instant::now(),
+                deadline,
+                delay_ms,
+                drop_it,
+                variant: self.cfg.mle.variant,
+                demoted: 0,
+                retries: 0,
+                reserved: 0,
+            });
+        }
+        first
+    }
+
+    /// Run admission rounds until the queue is empty and every pending
+    /// request has its answer.  Never wedges: each round either answers,
+    /// drops, sheds, or admits at least one request (the governor is
+    /// empty at round start, so the first admission cannot stall).
+    pub fn drain(&mut self) -> Vec<Response> {
+        let mut out = std::mem::take(&mut self.ready);
+        while !self.queue.is_empty() {
+            self.round(&mut out);
+        }
+        self.stats.peak_resident_bytes =
+            self.stats.peak_resident_bytes.max(self.governor.peak() as u64);
+        out
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let mut s = self.stats;
+        s.peak_resident_bytes = s.peak_resident_bytes.max(self.governor.peak() as u64);
+        s
+    }
+
+    pub fn governor(&self) -> &MemoryGovernor {
+        &self.governor
+    }
+
+    pub fn decode_cache(&self) -> &Arc<DecodeCache> {
+        &self.decode_cache
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn retry_hint(&self) -> u64 {
+        self.cfg.backoff_base_ms.max(1) * (self.queue.len() as u64 + 1)
+    }
+
+    fn classify(stats: &mut ServerStats, r: &Result<Outcome>) {
+        match r {
+            Ok(_) => stats.completed += 1,
+            Err(Error::Overloaded { .. }) => stats.shed += 1,
+            Err(Error::DeadlineExceeded { .. }) => stats.deadline_miss += 1,
+            Err(_) => stats.failed += 1,
+        }
+    }
+
+    fn emit(&mut self, out: &mut Vec<Response>, resp: Response) {
+        Self::classify(&mut self.stats, &resp.result);
+        out.push(resp);
+    }
+
+    fn deadline_state(&self, p: &Pending) -> DeadlineState {
+        let Some(budget) = p.deadline else {
+            return DeadlineState::Unbounded;
+        };
+        let elapsed = p.submitted.elapsed() + Duration::from_millis(p.delay_ms);
+        if elapsed >= budget {
+            DeadlineState::Missed {
+                elapsed_ms: elapsed.as_millis() as u64,
+                budget_ms: budget.as_millis() as u64,
+            }
+        } else {
+            DeadlineState::Left(budget - elapsed)
+        }
+    }
+
+    fn remaining(&self, p: &Pending) -> Option<Duration> {
+        match self.deadline_state(p) {
+            DeadlineState::Unbounded => self.cfg.mle.deadline,
+            DeadlineState::Left(d) => Some(d),
+            DeadlineState::Missed { .. } => Some(Duration::from_millis(0)),
+        }
+    }
+
+    fn member_cfg(&self, p: &Pending) -> MleConfig {
+        MleConfig { variant: p.variant, deadline: self.remaining(p), ..self.cfg.mle.clone() }
+    }
+
+    fn scheduler(&self, deadline: Option<Duration>) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            num_workers: SchedulerConfig::resolve_workers(self.cfg.mle.num_workers),
+            policy: self.cfg.mle.policy,
+            trace: false,
+            deadline,
+            faults: self.faults.clone(),
+        })
+    }
+
+    /// One admission round: walk the ladder for up to `max_batch`
+    /// requests, then execute the admitted batch (predicts merged into
+    /// one graph when possible) and release every reservation.
+    fn round(&mut self, out: &mut Vec<Response>) {
+        let mut batch: Vec<Pending> = Vec::new();
+        while batch.len() < self.cfg.max_batch {
+            let Some(mut p) = self.queue.pop_front() else { break };
+            if p.drop_it {
+                self.stats.dropped += 1;
+                continue;
+            }
+            if let DeadlineState::Missed { elapsed_ms, budget_ms } = self.deadline_state(&p) {
+                let resp = Response {
+                    id: p.id,
+                    result: Err(Error::DeadlineExceeded {
+                        elapsed_ms,
+                        budget_ms,
+                        finished: 0,
+                        total: 0,
+                        detail: format!(
+                            "request deadline elapsed before admission \
+                             (injected delay {} ms)",
+                            p.delay_ms
+                        ),
+                    }),
+                    cache_hit: false,
+                    demoted: p.demoted,
+                    retries: p.retries,
+                };
+                self.emit(out, resp);
+                continue;
+            }
+            if let Err(e) = p.req.validate(&self.cfg.mle) {
+                let resp = Response {
+                    id: p.id,
+                    result: Err(e),
+                    cache_hit: false,
+                    demoted: p.demoted,
+                    retries: p.retries,
+                };
+                self.emit(out, resp);
+                continue;
+            }
+            if let Some(resp) = self.try_cache_hit(&p) {
+                self.stats.cache_hits += 1;
+                self.emit(out, resp);
+                continue;
+            }
+            let nb = self.cfg.mle.nb;
+            let mut bytes = predicted_request_bytes(&p.req, nb, p.variant);
+            while bytes > self.governor.budget() {
+                let Some(v) = demote_variant(p.variant) else { break };
+                let demoted_bytes = predicted_request_bytes(&p.req, nb, v);
+                if demoted_bytes >= bytes {
+                    break;
+                }
+                p.variant = v;
+                p.demoted += 1;
+                self.stats.demotions += 1;
+                bytes = demoted_bytes;
+            }
+            if bytes > self.governor.budget() {
+                let hint = self.retry_hint();
+                let resp = Response {
+                    id: p.id,
+                    result: Err(Error::Overloaded {
+                        retry_after_ms: hint,
+                        reason: "memory governor budget".into(),
+                    }),
+                    cache_hit: false,
+                    demoted: p.demoted,
+                    retries: p.retries,
+                };
+                self.emit(out, resp);
+                continue;
+            }
+            if self.governor.try_reserve(bytes) {
+                p.reserved = bytes;
+                batch.push(p);
+            } else {
+                // fits the budget but not the current headroom: wait for
+                // the in-flight batch's reservations to release
+                self.queue.push_front(p);
+                self.stats.queued_rounds += 1;
+                break;
+            }
+        }
+        let (predicts, others): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|p| matches!(p.req, Request::Predict { .. }));
+        self.run_predict_batch(predicts, out);
+        for p in others {
+            self.run_one(p, out);
+        }
+    }
+
+    fn run_predict_batch(&mut self, batch: Vec<Pending>, out: &mut Vec<Response>) {
+        if batch.len() >= 2 {
+            if let Some(results) = self.merged_predicts(&batch) {
+                self.stats.merged_runs += 1;
+                self.stats.merged_members += batch.len() as u64;
+                for (p, (preds, weights)) in batch.into_iter().zip(results) {
+                    self.cache_insert(&p, &weights);
+                    self.governor.release(p.reserved);
+                    let resp = Response {
+                        id: p.id,
+                        result: Ok(Outcome::Predictions(preds)),
+                        cache_hit: false,
+                        demoted: p.demoted,
+                        retries: p.retries,
+                    };
+                    self.emit(out, resp);
+                }
+                return;
+            }
+        }
+        for p in batch {
+            self.run_one(p, out);
+        }
+    }
+
+    /// All admitted predicts as ONE merged task graph (the k-fold
+    /// batching pattern): per-member generation, factorization, weight
+    /// solves and in-graph `CrossCov` predictions, one `Scheduler::run`.
+    /// Any failure returns `None` and the members fall back to the
+    /// serial per-request path with its retry ladder, so one poisoned
+    /// member never poisons its batch-mates.
+    fn merged_predicts(&mut self, batch: &[Pending]) -> Option<Vec<(Vec<f64>, Vec<f64>)>> {
+        let mut setups = Vec::with_capacity(batch.len());
+        let mut plans = Vec::with_capacity(batch.len());
+        let mut deadline: Option<Duration> = None;
+        for p in batch {
+            let Request::Predict { train, z, sites, .. } = &p.req else { return None };
+            match self.deadline_state(p) {
+                // let the serial path emit the per-member miss
+                DeadlineState::Missed { .. } => return None,
+                DeadlineState::Left(d) => deadline = Some(deadline.map_or(d, |c| c.min(d))),
+                DeadlineState::Unbounded => {}
+            }
+            let cfg = self.member_cfg(p);
+            let (setup, plan) = build_setup(train.len(), z, &cfg, sites.len()).ok()?;
+            setups.push(setup);
+            plans.push(plan);
+        }
+        let (mut graph, local) = merge_graphs(&plans).ok()?;
+        let sched = self.scheduler(deadline.or(self.cfg.mle.deadline));
+        let backend: &dyn TileBackend = &NATIVE;
+        let metric = self.cfg.mle.metric;
+        let nugget = self.cfg.mle.nugget;
+        let execs: Vec<TileExecutor<'_, dyn TileBackend>> = batch
+            .iter()
+            .zip(setups.iter())
+            .map(|(p, s)| {
+                let Request::Predict { train, theta, sites, .. } = &p.req else {
+                    unreachable!()
+                };
+                TileExecutor::new(&s.tiles, backend)
+                    .with_generation(GenContext { locations: train, theta: *theta, metric, nugget })
+                    .with_pipeline(PipelineContext {
+                        bufs: &s.bufs,
+                        resolver: s.resolver.as_ref(),
+                        crosscov: Some(CrossCovContext {
+                            sites,
+                            train,
+                            theta: *theta,
+                            metric,
+                            wcol: 0,
+                        }),
+                    })
+                    .with_faults(self.faults.clone())
+                    .with_decode_cache(self.decode_cache.clone())
+            })
+            .collect();
+        let run =
+            sched.run(&mut graph, |task, bc| execs[bc.member].execute(&bc.call, &local[task]));
+        let (mut hits, mut evs) = (0, 0);
+        for e in &execs {
+            hits += e.stats.decode_cache_hits();
+            evs += e.stats.decode_cache_evictions();
+        }
+        drop(execs);
+        self.stats.decode_cache_hits += hits;
+        self.stats.decode_cache_evictions += evs;
+        run.ok()?;
+        Some(setups.iter().map(|s| (s.bufs.predictions(), s.bufs.column(0))).collect())
+    }
+
+    fn run_one(&mut self, mut p: Pending, out: &mut Vec<Response>) {
+        let result = self.execute_with_retries(&mut p);
+        self.governor.release(p.reserved);
+        p.reserved = 0;
+        let resp = Response {
+            id: p.id,
+            result,
+            cache_hit: false,
+            demoted: p.demoted,
+            retries: p.retries,
+        };
+        self.emit(out, resp);
+    }
+
+    /// Exponential-backoff retry ladder for transient (injected)
+    /// faults; organic errors and deadline misses return immediately.
+    fn execute_with_retries(&mut self, p: &mut Pending) -> Result<Outcome> {
+        loop {
+            if let DeadlineState::Missed { elapsed_ms, budget_ms } = self.deadline_state(p) {
+                return Err(Error::DeadlineExceeded {
+                    elapsed_ms,
+                    budget_ms,
+                    finished: 0,
+                    total: 0,
+                    detail: "request deadline elapsed before execution".into(),
+                });
+            }
+            match self.execute_once(p) {
+                Err(Error::FaultInjected(_) | Error::TaskPanicked { .. })
+                    if (p.retries as usize) < self.cfg.max_retries =>
+                {
+                    p.retries += 1;
+                    self.stats.retries += 1;
+                    let backoff = self
+                        .cfg
+                        .backoff_base_ms
+                        .saturating_mul(1 << (p.retries - 1).min(6));
+                    std::thread::sleep(Duration::from_millis(backoff.min(50)));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn execute_once(&mut self, p: &Pending) -> Result<Outcome> {
+        match &p.req {
+            Request::Predict { .. } => self.run_predict_serial(p),
+            Request::Fit { .. } => self.run_fit(p),
+            Request::Kfold { .. } => self.run_kfold(p),
+        }
+    }
+
+    fn run_predict_serial(&mut self, p: &Pending) -> Result<Outcome> {
+        let Request::Predict { train, z, theta, sites } = &p.req else { unreachable!() };
+        let cfg = self.member_cfg(p);
+        let (setup, mut plan) = build_setup(train.len(), z, &cfg, sites.len())?;
+        let sched = self.scheduler(cfg.deadline);
+        let backend: &dyn TileBackend = &NATIVE;
+        let accesses: Vec<_> = plan.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+        let exec = TileExecutor::new(&setup.tiles, backend)
+            .with_generation(GenContext {
+                locations: train,
+                theta: *theta,
+                metric: cfg.metric,
+                nugget: cfg.nugget,
+            })
+            .with_pipeline(PipelineContext {
+                bufs: &setup.bufs,
+                resolver: setup.resolver.as_ref(),
+                crosscov: Some(CrossCovContext {
+                    sites,
+                    train,
+                    theta: *theta,
+                    metric: cfg.metric,
+                    wcol: 0,
+                }),
+            })
+            .with_faults(self.faults.clone())
+            .with_decode_cache(self.decode_cache.clone());
+        let run = sched.run(&mut plan.graph, |idx, sc| exec.execute(sc, &accesses[idx]));
+        let hits = exec.stats.decode_cache_hits();
+        let evs = exec.stats.decode_cache_evictions();
+        drop(exec);
+        self.stats.decode_cache_hits += hits;
+        self.stats.decode_cache_evictions += evs;
+        run?;
+        let weights = setup.bufs.column(0);
+        let preds = setup.bufs.predictions();
+        self.cache_insert(p, &weights);
+        Ok(Outcome::Predictions(preds))
+    }
+
+    fn run_fit(&self, p: &Pending) -> Result<Outcome> {
+        let Request::Fit { locations, z } = &p.req else { unreachable!() };
+        let cfg = self.member_cfg(p);
+        let prob = MleProblem::new(locations, z, cfg)?;
+        let fit = prob.fit_batched()?;
+        Ok(Outcome::Fitted { theta: fit.theta, loglik: fit.loglik, iterations: fit.iterations })
+    }
+
+    fn run_kfold(&self, p: &Pending) -> Result<Outcome> {
+        let Request::Kfold { locations, z, theta, k, seed } = &p.req else { unreachable!() };
+        let cfg = self.member_cfg(p);
+        let rep = kfold_pmse(locations, z, *theta, *k, &cfg, *seed)?;
+        Ok(Outcome::Pmse { fold_pmse: rep.fold_pmse, mean_pmse: rep.mean_pmse })
+    }
+
+    fn try_cache_hit(&mut self, p: &Pending) -> Option<Response> {
+        let Request::Predict { train, z, theta, sites } = &p.req else { return None };
+        let key = cache_key(
+            self.cfg.mle.nb,
+            p.variant,
+            self.cfg.mle.metric,
+            self.cfg.mle.nugget,
+            theta,
+            train,
+            z,
+        );
+        let weights = self.cache.lookup(key)?;
+        let model =
+            KrigingModel::from_parts(train.clone(), weights, *theta, self.cfg.mle.metric);
+        let preds = model.predict(sites);
+        Some(Response {
+            id: p.id,
+            result: Ok(Outcome::Predictions(preds)),
+            cache_hit: true,
+            demoted: p.demoted,
+            retries: p.retries,
+        })
+    }
+
+    fn cache_insert(&mut self, p: &Pending, weights: &[f64]) {
+        let Request::Predict { train, z, theta, .. } = &p.req else { return };
+        let key = cache_key(
+            self.cfg.mle.nb,
+            p.variant,
+            self.cfg.mle.metric,
+            self.cfg.mle.nugget,
+            theta,
+            train,
+            z,
+        );
+        let ev = self.cache.insert(key, weights);
+        self.stats.factor_cache_evictions += ev as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{FieldConfig, SyntheticField};
+
+    fn field(n: usize, seed: u64) -> SyntheticField {
+        SyntheticField::generate(&FieldConfig {
+            n,
+            theta: MaternParams::medium(),
+            seed,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn serve_cfg(nb: usize) -> ServeConfig {
+        ServeConfig {
+            mle: MleConfig { nb, num_workers: 2, ..Default::default() },
+            // shield unit tests from ambient PALLAS_INJECT
+            faults: Some(Arc::new(FaultPlan::default())),
+            ..Default::default()
+        }
+    }
+
+    fn predict_req(f: &SyntheticField, m: usize) -> Request {
+        Request::Predict {
+            train: f.locations.clone(),
+            z: f.values.clone(),
+            theta: f.theta,
+            sites: f.locations[..m].to_vec(),
+        }
+    }
+
+    #[test]
+    fn governor_reserve_release_peak() {
+        let mut g = MemoryGovernor::new(100);
+        assert!(g.try_reserve(60));
+        assert!(!g.try_reserve(50));
+        assert!(g.try_reserve(40));
+        assert_eq!(g.resident(), 100);
+        assert_eq!(g.peak(), 100);
+        g.release(60);
+        assert_eq!(g.resident(), 40);
+        g.release(1000); // saturating
+        assert_eq!(g.resident(), 0);
+        assert_eq!(g.peak(), 100);
+    }
+
+    #[test]
+    fn factor_cache_lru_evicts_oldest() {
+        // budget holds two 4-weight entries (2 * 32 bytes)
+        let mut c = FactorCache::new(64);
+        assert_eq!(c.insert(1, &[1.0; 4]), 0);
+        assert_eq!(c.insert(2, &[2.0; 4]), 0);
+        assert!(c.lookup(1).is_some()); // touch 1: now 2 is LRU
+        assert_eq!(c.insert(3, &[3.0; 4]), 1);
+        assert!(c.lookup(2).is_none());
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(3).is_some());
+        assert_eq!(c.len(), 2);
+        assert!(c.resident_bytes() <= 64);
+        // an entry bigger than the whole budget is not cached
+        assert_eq!(c.insert(4, &[0.0; 100]), 0);
+        assert!(c.lookup(4).is_none());
+    }
+
+    #[test]
+    fn demotion_ladder_is_monotone_and_terminates() {
+        let (n, nb) = (512, 64); // p = 8: every band layout is realized
+        let starts = [
+            (Variant::FullDp, 2),
+            (Variant::ThreePrecision { dp_thick: 2, sp_thick: 4 }, 2),
+            (Variant::FourPrecision { dp_thick: 2, sp_thick: 4, f16_thick: 6 }, 2),
+        ];
+        for (start, min_rungs) in starts {
+            let mut v = start;
+            let mut bytes = unit_bytes(n, nb, v, 0);
+            let mut rungs = 0;
+            while let Some(next) = demote_variant(v) {
+                let nbytes = unit_bytes(n, nb, next, 0);
+                assert!(nbytes < bytes, "{start:?} rung {rungs}: {nbytes} !< {bytes}");
+                v = next;
+                bytes = nbytes;
+                rungs += 1;
+                assert!(rungs <= 4, "ladder from {start:?} must terminate");
+            }
+            assert!(rungs >= min_rungs, "{start:?}: only {rungs} strictly-shrinking rungs");
+        }
+        assert!(demote_variant(Variant::MixedPrecision { diag_thick: 1 }).is_none());
+        assert!(demote_variant(Variant::ThreePrecision { dp_thick: 1, sp_thick: 1 }).is_none());
+        assert!(demote_variant(Variant::Adaptive { tolerance: 1e-6 }).is_none());
+        assert!(demote_variant(Variant::IndependentBlocks).is_none());
+    }
+
+    #[test]
+    fn queue_full_sheds_typed_overloaded() {
+        let f = field(128, 7);
+        let mut cfg = serve_cfg(64);
+        cfg.queue_depth = 1;
+        let mut srv = Server::new(cfg);
+        srv.submit(predict_req(&f, 8));
+        srv.submit(predict_req(&f, 8));
+        srv.submit(predict_req(&f, 8));
+        let out = srv.drain();
+        assert_eq!(out.len(), 3);
+        let shed: Vec<_> = out
+            .iter()
+            .filter(|r| matches!(r.result, Err(Error::Overloaded { .. })))
+            .collect();
+        assert_eq!(shed.len(), 2);
+        for r in &shed {
+            let Err(Error::Overloaded { retry_after_ms, ref reason }) = r.result else {
+                unreachable!()
+            };
+            assert!(retry_after_ms > 0);
+            assert_eq!(reason, "admission queue full");
+        }
+        let s = srv.stats();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.completed, 1);
+    }
+
+    #[test]
+    fn oversized_request_demotes_then_sheds() {
+        let f = field(256, 3);
+        let mut cfg = serve_cfg(64);
+        cfg.budget_bytes = 1_000; // nothing fits, even fully demoted
+        let mut srv = Server::new(cfg);
+        srv.submit(predict_req(&f, 8));
+        let out = srv.drain();
+        assert_eq!(out.len(), 1);
+        let Err(Error::Overloaded { ref reason, .. }) = out[0].result else {
+            panic!("expected Overloaded, got {:?}", out[0].result);
+        };
+        assert_eq!(reason, "memory governor budget");
+        assert!(out[0].demoted >= 1, "ladder must have been walked");
+        assert!(srv.stats().demotions >= 1);
+        assert_eq!(srv.stats().peak_resident_bytes, 0);
+    }
+
+    #[test]
+    fn demotion_admits_when_a_lower_rung_fits() {
+        let f = field(256, 5);
+        let full = predicted_request_bytes(&predict_req(&f, 8), 64, Variant::FullDp);
+        let rung = demote_variant(Variant::FullDp).unwrap();
+        let mixed = predicted_request_bytes(&predict_req(&f, 8), 64, rung);
+        assert!(mixed < full);
+        let mut cfg = serve_cfg(64);
+        cfg.budget_bytes = (mixed + full) / 2; // FullDp cannot fit, one rung down can
+        let mut srv = Server::new(cfg);
+        srv.submit(predict_req(&f, 8));
+        let out = srv.drain();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].result.is_ok(), "demoted request must complete: {:?}", out[0].result);
+        assert_eq!(out[0].demoted, 1);
+        let s = srv.stats();
+        assert_eq!(s.demotions, 1);
+        assert!(s.peak_resident_bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn cache_hit_predictions_bit_identical_to_cold() {
+        let f = field(128, 11);
+        let mut srv = Server::new(serve_cfg(64));
+        srv.submit(predict_req(&f, 16));
+        let cold = srv.drain();
+        assert_eq!(cold.len(), 1);
+        let Ok(Outcome::Predictions(ref cold_p)) = cold[0].result else {
+            panic!("cold predict failed: {:?}", cold[0].result);
+        };
+        assert!(!cold[0].cache_hit);
+        srv.submit(predict_req(&f, 16));
+        let warm = srv.drain();
+        assert!(warm[0].cache_hit);
+        let Ok(Outcome::Predictions(ref warm_p)) = warm[0].result else {
+            panic!("warm predict failed: {:?}", warm[0].result);
+        };
+        assert_eq!(cold_p.len(), warm_p.len());
+        for (c, w) in cold_p.iter().zip(warm_p.iter()) {
+            assert_eq!(c.to_bits(), w.to_bits());
+        }
+        assert_eq!(srv.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn merged_batch_matches_serial_predicts_bitwise() {
+        let fa = field(128, 21);
+        let fb = field(128, 22);
+        let mut srv = Server::new(serve_cfg(64));
+        srv.submit(predict_req(&fa, 16));
+        srv.submit(predict_req(&fb, 16));
+        let out = srv.drain();
+        assert_eq!(out.len(), 2);
+        assert_eq!(srv.stats().merged_runs, 1);
+        assert_eq!(srv.stats().merged_members, 2);
+        // oracle: fit + predict each serially through the public API
+        for (f, r) in [(&fa, &out[0]), (&fb, &out[1])] {
+            let Ok(Outcome::Predictions(ref got)) = r.result else {
+                panic!("merged member failed: {:?}", r.result);
+            };
+            let m = KrigingModel::fit(
+                &f.locations,
+                &f.values,
+                f.theta,
+                &MleConfig { nb: 64, num_workers: 2, ..Default::default() },
+            )
+            .unwrap();
+            let want = m.predict(&f.locations[..16]);
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn injected_delay_forces_deterministic_deadline_miss() {
+        let f = field(128, 13);
+        let mut cfg = serve_cfg(64);
+        cfg.deadline = Some(Duration::from_secs(30));
+        cfg.faults = Some(Arc::new(
+            FaultPlan::default().with_request(RequestFault::Delay(3_600_000), 1.0, 0),
+        ));
+        let mut srv = Server::new(cfg);
+        srv.submit(predict_req(&f, 8));
+        let out = srv.drain();
+        assert_eq!(out.len(), 1);
+        let Err(Error::DeadlineExceeded { budget_ms, .. }) = out[0].result else {
+            panic!("expected DeadlineExceeded, got {:?}", out[0].result);
+        };
+        assert_eq!(budget_ms, 30_000);
+        assert_eq!(srv.stats().deadline_miss, 1);
+    }
+
+    #[test]
+    fn dropped_request_is_counted_never_answered() {
+        let f = field(128, 17);
+        let mut cfg = serve_cfg(64);
+        cfg.faults =
+            Some(Arc::new(FaultPlan::default().with_request(RequestFault::Drop, 1.0, 0)));
+        let mut srv = Server::new(cfg);
+        srv.submit(predict_req(&f, 8));
+        let out = srv.drain();
+        assert!(out.is_empty());
+        let s = srv.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.completed + s.failed + s.shed + s.deadline_miss, 0);
+    }
+
+    #[test]
+    fn burst_fault_duplicates_and_backpressures() {
+        let f = field(128, 19);
+        let mut cfg = serve_cfg(64);
+        cfg.queue_depth = 2;
+        cfg.faults =
+            Some(Arc::new(FaultPlan::default().with_request(RequestFault::Burst(3), 1.0, 0)));
+        let mut srv = Server::new(cfg);
+        srv.submit(predict_req(&f, 8));
+        let out = srv.drain();
+        // 3 copies: 2 admitted + answered, 1 shed at the queue bound
+        assert_eq!(out.len(), 3);
+        let s = srv.stats();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.shed, 1);
+    }
+
+    #[test]
+    fn fit_and_kfold_requests_complete() {
+        let f = field(128, 23);
+        let mut cfg = serve_cfg(64);
+        cfg.mle.variant = Variant::MixedPrecision { diag_thick: 1 };
+        cfg.mle.optimizer.max_evals = 20;
+        let mut srv = Server::new(cfg);
+        srv.submit(Request::Fit { locations: f.locations.clone(), z: f.values.clone() });
+        srv.submit(Request::Kfold {
+            locations: f.locations.clone(),
+            z: f.values.clone(),
+            theta: f.theta,
+            k: 2,
+            seed: 1,
+        });
+        let out = srv.drain();
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0].result, Ok(Outcome::Fitted { .. })), "{:?}", out[0].result);
+        assert!(matches!(out[1].result, Ok(Outcome::Pmse { .. })), "{:?}", out[1].result);
+        assert_eq!(srv.stats().completed, 2);
+    }
+
+    #[test]
+    fn governor_backpressure_defers_but_completes_everything() {
+        let f = field(128, 29);
+        let one = predicted_request_bytes(&predict_req(&f, 8), 64, Variant::FullDp);
+        let mut cfg = serve_cfg(64);
+        cfg.budget_bytes = one + one / 2; // holds 1 admitted request, not 2
+        let mut srv = Server::new(cfg);
+        for _ in 0..4 {
+            srv.submit(predict_req(&f, 8));
+        }
+        let out = srv.drain();
+        assert_eq!(out.len(), 4);
+        // first response is cold; the rest ride the factorization cache
+        assert!(out.iter().all(|r| r.result.is_ok()));
+        let s = srv.stats();
+        assert_eq!(s.completed, 4);
+        assert!(s.peak_resident_bytes <= s.budget_bytes);
+        assert!(s.cache_hits >= 1);
+    }
+}

@@ -1,0 +1,370 @@
+//! Serving-layer soak suite: a deterministic mixed request stream
+//! (kriging predicts at rotating thetas, periodic MLE fits and 2-fold
+//! cross-validations) pushed through the admission controller across
+//! worker counts, plus `PALLAS_INJECT=request:...` fault legs that
+//! no-op unless CI arms them.
+//!
+//! Invariants pinned here:
+//! * zero wedged or lost requests — every submitted copy is either
+//!   answered exactly once or counted in `dropped`;
+//! * the memory governor's budget is never breached;
+//! * every shed is a typed `Error::Overloaded` with a retry hint;
+//! * shed / deadline-miss / drop counts are deterministic (identical
+//!   across reruns and worker counts);
+//! * responses are bit-identical across worker counts, and cache-hit
+//!   kriging answers are bit-identical to cold ones.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpcholesky::fault::{env_plan, FaultPlan, ENV_VAR};
+use mpcholesky::prelude::*;
+use mpcholesky::serve::Request;
+
+fn field(n: usize, seed: u64) -> SyntheticField {
+    SyntheticField::generate(&FieldConfig {
+        n,
+        theta: MaternParams::new(1.0, 0.1, 0.5),
+        seed,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Server shielded from ambient `PALLAS_INJECT` (the clean-leg tests
+/// must not change behavior when CI arms a fault environment).
+fn shielded(nb: usize, workers: usize) -> ServeConfig {
+    ServeConfig {
+        mle: MleConfig {
+            nb,
+            variant: Variant::MixedPrecision { diag_thick: 1 },
+            num_workers: workers,
+            optimizer: OptimizerConfig { max_evals: 30, ..Default::default() },
+            ..Default::default()
+        },
+        faults: Some(Arc::new(FaultPlan::default())),
+        ..Default::default()
+    }
+}
+
+/// The deterministic mixed stream: predicts over shifted site blocks at
+/// four rotating thetas (so the factorization cache gets both cold and
+/// warm traffic), a 2-fold cross-validation every 101st request, an MLE
+/// fit every 211th.
+fn submit_stream(srv: &mut Server, f: &SyntheticField, count: usize) {
+    let thetas = [
+        MaternParams::new(1.0, 0.1, 0.5),
+        MaternParams::new(1.2, 0.08, 0.6),
+        MaternParams::new(0.8, 0.12, 0.7),
+        MaternParams::new(1.5, 0.15, 0.5),
+    ];
+    let n = f.locations.len();
+    let m = 64.min(n);
+    for i in 0..count {
+        if i % 211 == 17 {
+            srv.submit(Request::Fit { locations: f.locations.clone(), z: f.values.clone() });
+        } else if i % 101 == 13 {
+            srv.submit(Request::Kfold {
+                locations: f.locations.clone(),
+                z: f.values.clone(),
+                theta: thetas[i % thetas.len()],
+                k: 2,
+                seed: 7,
+            });
+        } else {
+            let start = (i * 7) % (n - m + 1);
+            srv.submit(Request::Predict {
+                train: f.locations.clone(),
+                z: f.values.clone(),
+                theta: thetas[i % thetas.len()],
+                sites: f.locations[start..start + m].to_vec(),
+            });
+        }
+    }
+}
+
+/// Fold a response stream into an order-sensitive digest of its result
+/// bits (predictions, fitted thetas, PMSEs) for cross-run comparison.
+fn digest(responses: &[Response]) -> u64 {
+    let mut d: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        d = d.rotate_left(7) ^ v.wrapping_mul(0x100_0000_01b3);
+    };
+    for r in responses {
+        mix(r.id);
+        match &r.result {
+            Ok(Outcome::Predictions(p)) => p.iter().for_each(|x| mix(x.to_bits())),
+            Ok(Outcome::Fitted { theta, loglik, .. }) => {
+                mix(theta.variance.to_bits());
+                mix(theta.range.to_bits());
+                mix(theta.smoothness.to_bits());
+                mix(loglik.to_bits());
+            }
+            Ok(Outcome::Pmse { mean_pmse, .. }) => mix(mean_pmse.to_bits()),
+            Err(_) => mix(u64::MAX),
+        }
+    }
+    d
+}
+
+#[test]
+fn soak_1k_mixed_requests_across_worker_counts() {
+    let f = field(128, 42);
+    let mut digests = Vec::new();
+    let mut control = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let mut cfg = shielded(64, workers);
+        cfg.queue_depth = 2048;
+        cfg.budget_bytes = 64 << 20;
+        let mut srv = Server::new(cfg);
+        submit_stream(&mut srv, &f, 1050);
+        let out = srv.drain();
+        let s = srv.stats();
+        // zero wedged or lost requests
+        assert_eq!(s.submitted, 1050);
+        assert_eq!(out.len() as u64 + s.dropped, s.submitted, "workers={workers}");
+        assert_eq!(s.dropped, 0);
+        for r in &out {
+            assert!(r.result.is_ok(), "workers={workers} id={}: {:?}", r.id, r.result);
+        }
+        // governor held
+        assert!(
+            s.peak_resident_bytes <= s.budget_bytes,
+            "workers={workers}: peak {} > budget {}",
+            s.peak_resident_bytes,
+            s.budget_bytes
+        );
+        // the cache took the bulk of the repeat traffic, and the packed
+        // bf16 decode cache saw content-keyed hits
+        assert!(s.cache_hits > 900, "workers={workers}: cache_hits={}", s.cache_hits);
+        assert!(s.decode_cache_hits > 0, "workers={workers}");
+        assert!(s.merged_runs >= 1, "workers={workers}");
+        digests.push(digest(&out));
+        control.push((s.shed, s.deadline_miss, s.dropped, s.failed, s.completed));
+    }
+    // deterministic control decisions AND bit-identical payloads across
+    // worker counts
+    assert_eq!(control[0], control[1]);
+    assert_eq!(control[1], control[2]);
+    assert_eq!(digests[0], digests[1], "payloads differ between 1 and 4 workers");
+    assert_eq!(digests[1], digests[2], "payloads differ between 4 and 8 workers");
+}
+
+#[test]
+fn shed_counts_deterministic_and_typed() {
+    let f = field(128, 5);
+    let run = || {
+        let mut cfg = shielded(64, 4);
+        cfg.queue_depth = 4;
+        let mut srv = Server::new(cfg);
+        for i in 0..20 {
+            let start = (i * 3) % 64;
+            srv.submit(Request::Predict {
+                train: f.locations.clone(),
+                z: f.values.clone(),
+                theta: MaternParams::new(1.0, 0.1, 0.5),
+                sites: f.locations[start..start + 8].to_vec(),
+            });
+        }
+        let out = srv.drain();
+        let s = srv.stats();
+        assert_eq!(out.len(), 20);
+        for r in &out {
+            match &r.result {
+                Ok(_) => {}
+                Err(Error::Overloaded { retry_after_ms, reason }) => {
+                    assert!(*retry_after_ms > 0);
+                    assert_eq!(reason, "admission queue full");
+                }
+                Err(e) => panic!("unexpected error class: {e}"),
+            }
+        }
+        (s.shed, s.completed)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, (16, 4), "queue bound 4 must shed exactly 16 of 20");
+    assert_eq!(a, b, "shed counts must be deterministic across reruns");
+}
+
+#[test]
+fn cache_hit_kriging_bit_identical_to_cold() {
+    let f = field(128, 9);
+    let mut srv = Server::new(shielded(64, 4));
+    let req = Request::Predict {
+        train: f.locations.clone(),
+        z: f.values.clone(),
+        theta: MaternParams::new(1.1, 0.09, 0.55),
+        sites: f.locations[..32].to_vec(),
+    };
+    srv.submit(req.clone());
+    let cold = srv.drain();
+    srv.submit(req);
+    let warm = srv.drain();
+    assert!(!cold[0].cache_hit);
+    assert!(warm[0].cache_hit);
+    let (Ok(Outcome::Predictions(c)), Ok(Outcome::Predictions(w))) =
+        (&cold[0].result, &warm[0].result)
+    else {
+        panic!("predicts failed: {:?} / {:?}", cold[0].result, warm[0].result);
+    };
+    assert_eq!(c.len(), w.len());
+    for (a, b) in c.iter().zip(w.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cache hit must be bit-identical");
+    }
+}
+
+#[test]
+fn tight_budget_backpressure_completes_everything() {
+    let f = field(128, 31);
+    let mut cfg = shielded(64, 4);
+    let variant = Variant::MixedPrecision { diag_thick: 1 };
+    let one = mpcholesky::serve::predicted_request_bytes(
+        &Request::Predict {
+            train: f.locations.clone(),
+            z: f.values.clone(),
+            theta: MaternParams::new(1.0, 0.1, 0.5),
+            sites: f.locations[..64].to_vec(),
+        },
+        64,
+        variant,
+    );
+    let fit = mpcholesky::serve::predicted_request_bytes(
+        &Request::Fit { locations: f.locations.clone(), z: f.values.clone() },
+        64,
+        variant,
+    );
+    // headroom for the stream's largest request (the batched fit) plus
+    // half a predict: a full admission batch can never fit at once
+    cfg.budget_bytes = fit + one / 2;
+    cfg.queue_depth = 256;
+    let mut srv = Server::new(cfg);
+    submit_stream(&mut srv, &f, 120);
+    let out = srv.drain();
+    let s = srv.stats();
+    assert_eq!(out.len() as u64 + s.dropped, s.submitted);
+    assert!(s.peak_resident_bytes <= s.budget_bytes);
+    assert!(s.queued_rounds > 0, "the tight budget must have exercised backpressure");
+    for r in &out {
+        assert!(r.result.is_ok(), "id={}: {:?}", r.id, r.result);
+    }
+}
+
+// ---------------------------------------------------------------------
+// PALLAS_INJECT fault legs: no-ops unless CI arms the environment.
+// ---------------------------------------------------------------------
+
+fn env_spec() -> Option<String> {
+    std::env::var(ENV_VAR).ok().filter(|s| !s.trim().is_empty())
+}
+
+/// Server riding the AMBIENT fault plan (cfg.faults = None resolves
+/// `PALLAS_INJECT` at construction).
+fn ambient_cfg(nb: usize) -> ServeConfig {
+    ServeConfig {
+        mle: MleConfig {
+            nb,
+            variant: Variant::MixedPrecision { diag_thick: 1 },
+            num_workers: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn predict_only_stream(srv: &mut Server, f: &SyntheticField, count: usize) {
+    for i in 0..count {
+        let start = (i * 7) % 64;
+        srv.submit(Request::Predict {
+            train: f.locations.clone(),
+            z: f.values.clone(),
+            theta: MaternParams::new(1.0, 0.1, 0.5),
+            sites: f.locations[start..start + 16].to_vec(),
+        });
+    }
+}
+
+#[test]
+fn env_leg_request_drop() {
+    let Some(spec) = env_spec() else { return };
+    if !spec.starts_with("request:drop") {
+        return;
+    }
+    assert!(env_plan().is_some(), "spec {spec:?} failed to parse — fix the CI leg");
+    let f = field(128, 3);
+    let run = || {
+        let mut srv = Server::new(ambient_cfg(64));
+        predict_only_stream(&mut srv, &f, 200);
+        let out = srv.drain();
+        let s = srv.stats();
+        // dropped copies are counted, never answered; everything else
+        // is answered exactly once — the server never wedges
+        assert_eq!(out.len() as u64 + s.dropped, s.submitted);
+        assert!(s.dropped > 0, "rate>0 drop leg must drop something");
+        for r in &out {
+            assert!(r.result.is_ok(), "id={}: {:?}", r.id, r.result);
+        }
+        (s.dropped, out.len())
+    };
+    assert_eq!(run(), run(), "seeded drop decisions must be deterministic");
+}
+
+#[test]
+fn env_leg_request_burst() {
+    let Some(spec) = env_spec() else { return };
+    if !spec.starts_with("request:burst") {
+        return;
+    }
+    assert!(env_plan().is_some(), "spec {spec:?} failed to parse — fix the CI leg");
+    let f = field(128, 3);
+    let run = || {
+        let mut cfg = ambient_cfg(64);
+        cfg.queue_depth = 64;
+        let mut srv = Server::new(cfg);
+        predict_only_stream(&mut srv, &f, 100);
+        let out = srv.drain();
+        let s = srv.stats();
+        assert!(s.submitted > 100, "burst leg must amplify submissions");
+        assert_eq!(out.len() as u64 + s.dropped, s.submitted);
+        for r in &out {
+            match &r.result {
+                Ok(_) => {}
+                Err(Error::Overloaded { retry_after_ms, .. }) => assert!(*retry_after_ms > 0),
+                Err(e) => panic!("burst leg: unexpected error class {e}"),
+            }
+        }
+        (s.submitted, s.shed, out.len())
+    };
+    assert_eq!(run(), run(), "seeded burst decisions must be deterministic");
+}
+
+#[test]
+fn env_leg_request_delay_deadline_miss() {
+    let Some(spec) = env_spec() else { return };
+    if !spec.starts_with("request:delay") {
+        return;
+    }
+    assert!(env_plan().is_some(), "spec {spec:?} failed to parse — fix the CI leg");
+    let f = field(128, 3);
+    let run = || {
+        let mut cfg = ambient_cfg(64);
+        // generous real-time deadline: only the injected virtual delay
+        // (CI arms ms >> this budget) can force a miss, deterministically
+        cfg.deadline = Some(Duration::from_secs(60));
+        let mut srv = Server::new(cfg);
+        predict_only_stream(&mut srv, &f, 50);
+        let out = srv.drain();
+        let s = srv.stats();
+        assert_eq!(out.len() as u64 + s.dropped, s.submitted);
+        assert!(s.deadline_miss > 0, "delay leg must miss deadlines");
+        for r in &out {
+            match &r.result {
+                Ok(_) => {}
+                Err(Error::DeadlineExceeded { budget_ms, .. }) => assert_eq!(*budget_ms, 60_000),
+                Err(e) => panic!("delay leg: unexpected error class {e}"),
+            }
+        }
+        (s.deadline_miss, out.len())
+    };
+    assert_eq!(run(), run(), "seeded delay decisions must be deterministic");
+}
