@@ -17,9 +17,12 @@
 //! `128`), `--reps R` (default 3), `--workers W` (default: all cores),
 //! `--policy fifo|lifo|cp|pf` (default `pf` = precision-frontier, the
 //! promoted default policy, which orders ready tasks by critical-path
-//! height then cheapest storage precision), `--fused` (lower static
-//! plans' trailing updates as left-looking `GemmBatch` tasks instead of
-//! per-step gemms; adaptive pipelines always lower left-looking),
+//! height then cheapest storage precision), `--no-fused` (lower static
+//! plans' trailing updates as per-step gemms instead of the default
+//! left-looking `GemmBatch` tasks; adaptive pipelines always lower
+//! left-looking), `--ranks R` (model the run on an `R`-rank 2D
+//! block-cyclic cluster and record the stored-precision wire volume
+//! in the `wire_msgs`/`wire_bytes` columns),
 //! `--ablation` (sweep the adaptive tolerance at the smallest tile size
 //! and record the accuracy/bytes frontier — realized dp/sp/f16/bf16
 //! census, resident bytes, `||L L^T - A||_max` — into the JSON
@@ -42,6 +45,7 @@ use mpcholesky::cholesky::{
 use mpcholesky::kernels::blas::active_isa;
 use mpcholesky::prelude::*;
 use mpcholesky::scheduler::datamove::{self, DeviceModel};
+use mpcholesky::scheduler::distributed::{simulate_ranked, ClusterModel};
 use mpcholesky::scheduler::ExecutionTrace;
 use mpcholesky::tile::{DenseMatrix, Precision, TileId, TlrStats};
 
@@ -91,6 +95,13 @@ struct CaseResult {
     /// tiles ended resident compressed, their mean rank, and their
     /// `U`/`V` factor bytes.
     tlr: TlrStats,
+    /// Cluster size the wire columns are modeled on (1 = no wire).
+    ranks: usize,
+    /// Modeled inter-rank tile messages on the `ranks`-node 2D
+    /// block-cyclic layout (0 when `ranks` = 1).
+    wire_msgs: u64,
+    /// Modeled inter-rank bytes at the realized stored precisions.
+    wire_bytes: u64,
 }
 
 /// One traced whole-iteration pipeline run; returns wall seconds, the
@@ -205,6 +216,7 @@ fn bench_case(
     reps: usize,
     policy: SchedulingPolicy,
     opts: PlanOptions,
+    ranks: usize,
 ) -> Result<CaseResult> {
     let sched = Scheduler::new(SchedulerConfig { num_workers: workers, policy, trace: true, ..Default::default() });
     // deterministic per-instance RHS so the solve stage solves the same
@@ -241,6 +253,15 @@ fn bench_case(
         .filter(|s| plan.graph.task(s.task).payload.call.is_epilogue())
         .map(|s| s.end_ns - s.start_ns)
         .sum();
+    // stored-precision wire volume on an R-rank 2D block-cyclic layout
+    // (same analytic model the dist runtime's census is checked against)
+    let (wire_msgs, wire_bytes) = if ranks > 1 {
+        let rep =
+            simulate_ranked(&plan.graph, &ClusterModel::shaheen(ranks), nb, &realized, None);
+        (rep.messages as u64, rep.total_comm_bytes as u64)
+    } else {
+        (0, 0)
+    };
     Ok(CaseResult {
         key: key.to_string(),
         label: realized.label(),
@@ -265,6 +286,9 @@ fn bench_case(
         recovery_attempts: recovery.attempts,
         escalated_tiles: recovery.escalated_tiles,
         tlr: TlrStats::default(),
+        ranks,
+        wire_msgs,
+        wire_bytes,
     })
 }
 
@@ -285,6 +309,7 @@ fn tlr_case(
     workers: usize,
     reps: usize,
     policy: SchedulingPolicy,
+    cluster_ranks: usize,
 ) -> Result<CaseResult> {
     let Variant::Tlr { tolerance, max_rank } = variant else {
         return Err(Error::InvalidArgument("tlr_case requires Variant::Tlr".into()));
@@ -341,6 +366,19 @@ fn tlr_case(
         Some(&ranks),
     )
     .demand_bytes;
+    // rank-aware wire pricing: compressed tiles cross at factor bytes
+    let (wire_msgs, wire_bytes) = if cluster_ranks > 1 {
+        let rep = simulate_ranked(
+            &plan.graph,
+            &ClusterModel::shaheen(cluster_ranks),
+            nb,
+            &plan.map,
+            Some(&ranks),
+        );
+        (rep.messages as u64, rep.total_comm_bytes as u64)
+    } else {
+        (0, 0)
+    };
     Ok(CaseResult {
         key: key.to_string(),
         label: variant.label(p),
@@ -365,6 +403,9 @@ fn tlr_case(
         recovery_attempts: 0,
         escalated_tiles: 0,
         tlr: stats,
+        ranks: cluster_ranks,
+        wire_msgs,
+        wire_bytes,
     })
 }
 
@@ -543,7 +584,8 @@ fn to_json(
              \"decode_ns\": {}, \"bf16_unpacks\": {}, \"f16_tiles\": {}, \
              \"modeled_transfer_bytes\": {:.1}, \"recovery_attempts\": {}, \
              \"escalated_tiles\": {}, \"tlr_tiles\": {}, \"avg_rank\": {:.2}, \
-             \"compressed_bytes\": {}}}",
+             \"compressed_bytes\": {}, \"ranks\": {}, \"wire_msgs\": {}, \
+             \"wire_bytes\": {}}}",
             json_escape(&r.key),
             json_escape(&r.label),
             r.nb,
@@ -574,7 +616,10 @@ fn to_json(
             r.escalated_tiles,
             r.tlr.tiles,
             r.tlr.avg_rank(),
-            r.tlr.bytes
+            r.tlr.bytes,
+            r.ranks,
+            r.wire_msgs,
+            r.wire_bytes
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -625,7 +670,17 @@ fn run() -> Result<()> {
         })?,
         None => SchedulingPolicy::default(),
     };
-    let opts = PlanOptions { fuse_gemm: flags.contains_key("fused") };
+    // fused trailing updates are the default; --no-fused is the escape
+    // hatch (--fused stays accepted as a no-op for old invocations)
+    let opts = PlanOptions { fuse_gemm: !flags.contains_key("no-fused") };
+    let ranks: usize = match flags.get("ranks") {
+        Some(v) => v
+            .parse()
+            .ok()
+            .filter(|&r| r >= 1)
+            .ok_or_else(|| Error::InvalidArgument("--ranks expects a positive integer".into()))?,
+        None => 1,
+    };
     let nb_list: Vec<usize> = flags
         .get("nb")
         .map(String::as_str)
@@ -667,9 +722,9 @@ fn run() -> Result<()> {
         }
         for (key, variant) in &variants {
             let r = if matches!(variant, Variant::Tlr { .. }) {
-                tlr_case(key, *variant, &locs, theta, n, nb, workers, reps, policy)?
+                tlr_case(key, *variant, &locs, theta, n, nb, workers, reps, policy, ranks)?
             } else {
-                bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy, opts)?
+                bench_case(key, *variant, &locs, theta, n, nb, workers, reps, policy, opts, ranks)?
             };
             table.row(&[
                 r.key.clone(),

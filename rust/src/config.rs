@@ -54,6 +54,16 @@ pub struct RunConfig {
     pub budget_mb: usize,
     /// Serving-layer admission queue bound (`serve` subcommand).
     pub queue_depth: usize,
+    /// Distributed world size: 1 (default) runs single-process; N > 1
+    /// makes rank 0 spawn N-1 local worker processes and factorize over
+    /// the loopback tile wire (`dist` subcommand / `--ranks`).
+    pub ranks: usize,
+    /// Set only on spawned worker processes: this process's rank id.
+    /// `None` means "I am the root (or a single-process run)".
+    pub rank_id: Option<usize>,
+    /// Root rendezvous address (`host:port`) a spawned worker dials.
+    /// Empty on the root.
+    pub peers: String,
 }
 
 impl Default for RunConfig {
@@ -76,6 +86,9 @@ impl Default for RunConfig {
             inject: String::new(),
             budget_mb: 256,
             queue_depth: 64,
+            ranks: 1,
+            rank_id: None,
+            peers: String::new(),
         }
     }
 }
@@ -150,6 +163,9 @@ impl RunConfig {
                 "inject" => self.inject = v.clone(),
                 "budget_mb" => self.budget_mb = parse(k, v)?,
                 "queue_depth" => self.queue_depth = parse(k, v)?,
+                "ranks" => self.ranks = parse(k, v)?,
+                "rank_id" => self.rank_id = Some(parse(k, v)?),
+                "peers" => self.peers = v.clone(),
                 "backend" => match v.as_str() {
                     "native" | "pjrt" => self.backend = v.clone(),
                     other => {
@@ -307,6 +323,17 @@ impl RunConfig {
         }
         if self.queue_depth == 0 {
             crate::invalid_arg!("queue_depth must be >= 1");
+        }
+        if self.ranks == 0 {
+            crate::invalid_arg!("ranks must be >= 1");
+        }
+        if let Some(id) = self.rank_id {
+            if id >= self.ranks {
+                crate::invalid_arg!("rank_id = {id} out of range for ranks = {}", self.ranks);
+            }
+            if id > 0 && self.peers.is_empty() {
+                crate::invalid_arg!("spawned worker rank {id} needs --peers <root_addr>");
+            }
         }
         Ok(())
     }
@@ -514,6 +541,24 @@ mod tests {
         // malformed injection specs fail at config time
         assert!(RunConfig::parse("inject = nonsense\n").is_err());
         assert!(RunConfig::parse("inject = kill:worker=soon\n").is_err());
+    }
+
+    #[test]
+    fn rank_topology_keys_parse_and_validate() {
+        let c = RunConfig::parse("ranks = 4\n").unwrap();
+        assert_eq!(c.ranks, 4);
+        assert_eq!(c.rank_id, None);
+        let d = RunConfig::default();
+        assert_eq!(d.ranks, 1);
+        assert!(d.peers.is_empty());
+        // a spawned worker carries its id and the root address
+        let w = RunConfig::parse("ranks = 4\nrank_id = 2\npeers = 127.0.0.1:5000\n").unwrap();
+        assert_eq!(w.rank_id, Some(2));
+        assert_eq!(w.peers, "127.0.0.1:5000");
+        // structural validation
+        assert!(RunConfig::parse("ranks = 0\n").is_err());
+        assert!(RunConfig::parse("ranks = 2\nrank_id = 2\n").is_err());
+        assert!(RunConfig::parse("ranks = 2\nrank_id = 1\n").is_err(), "worker needs peers");
     }
 
     #[test]

@@ -81,6 +81,20 @@ impl SyntheticField {
     }
 }
 
+/// The deterministic site prefix of [`SyntheticField::generate`]:
+/// uniform open-unit-square sites from `seed`, Morton-sorted — and
+/// nothing else (no factorization, no measurement draw).  Every
+/// distributed rank calls this with the same `(n, seed)` and derives a
+/// bitwise-identical site list without touching the wire.
+pub fn sample_locations(n: usize, seed: u64) -> Vec<Location> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut locations: Vec<Location> = (0..n)
+        .map(|_| Location::new(rng.uniform_open(0.0, 1.0), rng.uniform_open(0.0, 1.0)))
+        .collect();
+    morton_sort(&mut locations);
+    locations
+}
+
 /// Sample one GRF realization at fixed (already ordered) locations.
 pub fn sample_at(
     locations: &[Location],
@@ -183,6 +197,21 @@ mod tests {
             .locations
             .iter()
             .all(|l| l.x > 0.0 && l.x < 1.0 && l.y > 0.0 && l.y < 1.0));
+    }
+
+    #[test]
+    fn sample_locations_is_the_site_prefix_of_generate() {
+        // the generator draws all n sites before any measurement noise,
+        // so the standalone sampler must reproduce them bit-for-bit
+        let cfg = FieldConfig { n: 128, seed: 7, ..Default::default() };
+        let f = SyntheticField::generate(&cfg).unwrap();
+        let sites = sample_locations(128, 7);
+        assert_eq!(sites.len(), f.locations.len());
+        for (a, b) in sites.iter().zip(&f.locations) {
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+        }
+        assert_ne!(sample_locations(128, 8)[0].x.to_bits(), sites[0].x.to_bits());
     }
 
     #[test]

@@ -1,0 +1,837 @@
+//! Real multi-process distributed runtime: 2D block-cyclic tiles over a
+//! stored-precision wire.
+//!
+//! `mpchol dist --ranks N` factorizes one covariance matrix across `N`
+//! OS processes connected by the loopback TCP mesh of
+//! [`crate::scheduler::net`]:
+//!
+//! * every rank derives the **same global plan** deterministically
+//!   (sites from [`crate::datagen::sample_locations`], precision map
+//!   from the variant — Adaptive all-gathers owned tile norms first)
+//!   and keeps its 2D block-cyclic share via
+//!   [`crate::scheduler::partition::partition_plan`];
+//! * tiles cross the wire **at stored precision** (f64/f32/f16/packed
+//!   bf16 — [`crate::tile::wire`]), so the paper's bandwidth savings
+//!   are real bytes on a real socket, not a simulator estimate;
+//! * the work-stealing pool is the *intra-rank* tier of a two-level
+//!   scheduler: a progress engine thread drives the mesh and releases
+//!   `Recv` tasks through [`ExternalHandle`] as frames land
+//!   ([`Scheduler::run_external`]);
+//! * rank 0 folds per-tile FNV-1a digests of the factor in global
+//!   column-major order, so an `N`-rank run is checkably **bitwise
+//!   identical** to the single-process factorization of the same
+//!   realized map, and compares the observed wire census against both
+//!   the partition census and the analytic simulator
+//!   ([`crate::scheduler::distributed::simulate_ranked`]).
+//!
+//! A vanished peer surfaces as [`Error::PeerLost`] on every surviving
+//! rank (the progress engine fails the run, the watchdog is never
+//! needed) — no wedge, no partial factor presented as complete.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::cholesky::{
+    self, CholeskyPlan, GenContext, KernelCall, PlanOptions, SizedCall, TileExecutor, Variant,
+};
+use crate::config::RunConfig;
+use crate::datagen::sample_locations;
+use crate::error::{Error, Result};
+use crate::kernels::NativeBackend;
+use crate::matern::{MaternParams, Metric};
+use crate::scheduler::distributed::{simulate_ranked, ClusterModel};
+use crate::scheduler::net::{self, FrameKind, Mesh, NetEvent};
+use crate::scheduler::partition::{partition_plan, DistCall, LocalPlan};
+use crate::scheduler::{
+    Access, ExternalHandle, Scheduler, SchedulerConfig, SchedulingPolicy, TaskGraph, TaskIdx,
+};
+use crate::tile::{wire, PrecisionMap, TileId, TileMatrix};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// 64-bit FNV-1a folded over `bytes`, continuing from `h`.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// What a distributed (or single-process baseline) run observed —
+/// everything the `DIST` summary lines print and the smoke tests parse.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub ranks: usize,
+    pub p: usize,
+    pub nb: usize,
+    /// Variant label (no spaces — the summary lines are `key=value`).
+    pub label: String,
+    /// Global factor digest: per-tile FNV-1a of the wire encoding,
+    /// folded in column-major tile order.  Rank-count independent.
+    pub digest: u64,
+    /// Frames actually shipped, summed over all ranks.
+    pub wire_msgs: u64,
+    /// Bytes actually shipped (frame headers included).
+    pub wire_bytes: u64,
+    /// What the same census would cost if every tile crossed as dense
+    /// f64 — the bandwidth baseline the stored-precision wire beats.
+    pub f64_wire_bytes: u64,
+    /// Observed per-tile frame counts == partition census == analytic
+    /// simulator census.
+    pub census_match: bool,
+    /// Largest per-rank native tile footprint after the run.
+    pub max_resident: u64,
+    /// Single-process native footprint of the same realized map.
+    pub single_resident: u64,
+}
+
+/// One rank's observations, handed from [`run_rank`] to the digest /
+/// stats protocol.
+struct RankRun {
+    mesh: Option<Mesh>,
+    map: PrecisionMap,
+    label: String,
+    /// Partition wire census (identical on every rank).
+    census: HashMap<TileId, usize>,
+    /// Analytic simulator census (computed on rank 0 only).
+    sim_census: HashMap<TileId, usize>,
+    /// Owned tiles' factor digests, column-major.
+    digests: Vec<(TileId, u64)>,
+    /// Frames this rank shipped, per tile.
+    sent: HashMap<TileId, u64>,
+    wire_msgs: u64,
+    wire_bytes: u64,
+    /// Native tile bytes resident on this rank after the run.
+    resident: u64,
+}
+
+/// Entry point for the `dist` subcommand (and `--ranks N` runs): on the
+/// root it spawns the workers, runs rank 0, aggregates, and prints the
+/// `DIST` summary; on a spawned worker (`--rank-id`) it joins the mesh
+/// and runs its share silently.
+pub fn run(rc: &RunConfig) -> Result<()> {
+    if matches!(rc.variant, Variant::Tlr { .. }) {
+        // reject before any process is spawned or socket bound
+        return Err(Error::InvalidArgument(
+            "the distributed runtime does not support tlr plans yet".into(),
+        ));
+    }
+    if let Some(id) = rc.rank_id {
+        return run_worker(rc, id);
+    }
+    let report = if rc.ranks == 1 { run_single(rc)? } else { run_root(rc)? };
+    print_report(&report);
+    Ok(())
+}
+
+fn print_report(r: &DistReport) {
+    println!(
+        "DIST ranks={} p={} nb={} variant={} digest={:#018x}",
+        r.ranks, r.p, r.nb, r.label, r.digest
+    );
+    println!(
+        "DIST wire_msgs={} wire_bytes={} f64_wire_bytes={} census_match={} \
+         max_resident={} single_resident={}",
+        r.wire_msgs, r.wire_bytes, r.f64_wire_bytes, r.census_match,
+        r.max_resident, r.single_resident
+    );
+}
+
+/// Single-process baseline through the *same* code path (owned-tile
+/// storage, two-phase generation, partitioned plan — just with a
+/// one-node cluster and no wire), printing the same digest.
+fn run_single(rc: &RunConfig) -> Result<DistReport> {
+    let run = run_rank(rc, None)?;
+    let digests: HashMap<TileId, u64> = run.digests.iter().copied().collect();
+    let p = rc.n / rc.nb;
+    Ok(DistReport {
+        ranks: 1,
+        p,
+        nb: rc.nb,
+        label: run.label,
+        digest: fold_digests(p, &digests)?,
+        wire_msgs: 0,
+        wire_bytes: 0,
+        f64_wire_bytes: 0,
+        census_match: true,
+        max_resident: run.resident,
+        single_resident: run.map.storage_bytes(rc.nb) as u64,
+    })
+}
+
+/// Root: bind the rendezvous listener, spawn `ranks - 1` worker
+/// processes of the current executable, run rank 0, aggregate.
+fn run_root(rc: &RunConfig) -> Result<DistReport> {
+    let (listener, addr) = net::bind_root()?;
+    let exe = std::env::current_exe()?;
+    let mut children: Vec<(usize, Child)> = Vec::new();
+    for r in 1..rc.ranks {
+        match spawn_worker(&exe, rc, r, addr) {
+            Ok(c) => children.push((r, c)),
+            Err(e) => {
+                for (_, mut c) in children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(e.into());
+            }
+        }
+    }
+    let result = Mesh::root(listener, rc.ranks).and_then(|mesh| root_aggregate(rc, mesh));
+    let failed = result.is_err();
+    for (r, mut c) in children {
+        if failed {
+            let _ = c.kill();
+        }
+        let status = c.wait();
+        if !failed {
+            match status {
+                Ok(st) if st.success() => {}
+                Ok(st) => {
+                    return Err(Error::PeerLost {
+                        rank: r,
+                        detail: format!("worker exited with {st}"),
+                    })
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    result
+}
+
+fn spawn_worker(
+    exe: &Path,
+    rc: &RunConfig,
+    rank: usize,
+    addr: SocketAddr,
+) -> std::io::Result<Child> {
+    let mut cmd = Command::new(exe);
+    cmd.arg("dist")
+        .arg("--ranks")
+        .arg(rc.ranks.to_string())
+        .arg("--rank-id")
+        .arg(rank.to_string())
+        .arg("--peers")
+        .arg(addr.to_string())
+        .arg("--n")
+        .arg(rc.n.to_string())
+        .arg("--nb")
+        .arg(rc.nb.to_string())
+        .arg("--seed")
+        .arg(rc.seed.to_string())
+        .arg("--variance")
+        .arg(rc.theta[0].to_string())
+        .arg("--range")
+        .arg(rc.theta[1].to_string())
+        .arg("--smoothness")
+        .arg(rc.theta[2].to_string())
+        .arg("--nugget")
+        .arg(rc.nugget.to_string())
+        .arg("--metric")
+        .arg(match rc.metric {
+            Metric::Euclidean => "euclidean",
+            Metric::Haversine => "haversine",
+        })
+        .arg("--workers")
+        .arg(rc.workers.to_string())
+        .arg("--policy")
+        .arg(match rc.policy {
+            SchedulingPolicy::Fifo => "fifo",
+            SchedulingPolicy::Lifo => "lifo",
+            SchedulingPolicy::CriticalPath => "cp",
+            SchedulingPolicy::PrecisionFrontier => "pf",
+        })
+        .arg("--deadline-ms")
+        .arg(rc.deadline_ms.to_string());
+    for (flag, value) in variant_flags(rc.variant) {
+        cmd.arg(flag).arg(value);
+    }
+    cmd.stdin(Stdio::null()).stdout(Stdio::null()).stderr(Stdio::inherit());
+    cmd.spawn()
+}
+
+/// CLI flags reconstructing `v` on a spawned worker (f64 knobs print
+/// with Rust's shortest-roundtrip formatting, so they re-parse to the
+/// same bits).
+fn variant_flags(v: Variant) -> Vec<(&'static str, String)> {
+    match v {
+        Variant::FullDp => vec![("--variant", "dp".into())],
+        Variant::MixedPrecision { diag_thick } => {
+            vec![("--variant", "mp".into()), ("--thick", diag_thick.to_string())]
+        }
+        Variant::Dst { diag_thick } => {
+            vec![("--variant", "dst".into()), ("--thick", diag_thick.to_string())]
+        }
+        Variant::ThreePrecision { dp_thick, sp_thick } => vec![
+            ("--variant", "3p".into()),
+            ("--thick", dp_thick.to_string()),
+            ("--sp-thick", sp_thick.to_string()),
+        ],
+        Variant::FourPrecision { dp_thick, sp_thick, f16_thick } => vec![
+            ("--variant", "4p".into()),
+            ("--thick", dp_thick.to_string()),
+            ("--sp-thick", sp_thick.to_string()),
+            ("--f16-thick", f16_thick.to_string()),
+        ],
+        Variant::Adaptive { tolerance } => {
+            vec![("--variant", "adaptive".into()), ("--tolerance", tolerance.to_string())]
+        }
+        Variant::Tlr { tolerance, max_rank } => vec![
+            ("--variant", "tlr".into()),
+            ("--tolerance", tolerance.to_string()),
+            ("--max-rank", max_rank.to_string()),
+        ],
+        Variant::IndependentBlocks => vec![("--variant", "indblocks".into())],
+    }
+}
+
+/// Spawned worker process: join the mesh, run the local share, report.
+fn run_worker(rc: &RunConfig, id: usize) -> Result<()> {
+    let addr: SocketAddr = rc.peers.parse().map_err(|_| {
+        Error::InvalidArgument(format!("cannot parse --peers address {:?}", rc.peers))
+    })?;
+    let mesh = Mesh::join(id, rc.ranks, addr)?;
+    worker_protocol(rc, mesh)
+}
+
+/// Worker side of the post-run protocol: ship owned digests and wire
+/// stats to rank 0, wait for its `Bye`, tear down.
+fn worker_protocol(rc: &RunConfig, mesh: Mesh) -> Result<()> {
+    let mut run = run_rank(rc, Some(mesh))?;
+    let mut mesh = run.mesh.take().expect("worker run keeps its mesh");
+    mesh.send(0, FrameKind::Digest, &encode_digests(&run.digests))?;
+    let mut sent: Vec<(TileId, u64)> = run.sent.iter().map(|(&t, &c)| (t, c)).collect();
+    sent.sort_unstable_by_key(|&(t, _)| (t.j, t.i));
+    mesh.send(
+        0,
+        FrameKind::Stats,
+        &encode_stats(run.wire_bytes, run.wire_msgs, run.resident, &sent),
+    )?;
+    mesh.expect_from(0, FrameKind::Bye)?;
+    mesh.shutdown();
+    Ok(())
+}
+
+/// Root side of the post-run protocol: run rank 0, collect every
+/// worker's digests and stats, verify, fold the global digest.
+fn root_aggregate(rc: &RunConfig, mesh: Mesh) -> Result<DistReport> {
+    let mut run = run_rank(rc, Some(mesh))?;
+    let mut mesh = run.mesh.take().expect("root run keeps its mesh");
+    let mut digests: HashMap<TileId, u64> = run.digests.iter().copied().collect();
+    let mut sent = run.sent.clone();
+    let (mut wire_bytes, mut wire_msgs) = (run.wire_bytes, run.wire_msgs);
+    let mut max_resident = run.resident;
+    for r in 1..rc.ranks {
+        let payload = mesh.expect_from(r, FrameKind::Digest)?;
+        for (t, d) in decode_digests(&payload)? {
+            if digests.insert(t, d).is_some() {
+                return Err(Error::Wire(format!(
+                    "rank {r} re-reported a digest for tile ({}, {})",
+                    t.i, t.j
+                )));
+            }
+        }
+        let payload = mesh.expect_from(r, FrameKind::Stats)?;
+        let (wb, wm, resident, tiles_sent) = decode_stats(&payload)?;
+        wire_bytes += wb;
+        wire_msgs += wm;
+        max_resident = max_resident.max(resident);
+        for (t, c) in tiles_sent {
+            *sent.entry(t).or_insert(0) += c;
+        }
+    }
+    mesh.shutdown();
+    let p = rc.n / rc.nb;
+    let observed: HashMap<TileId, usize> =
+        sent.iter().filter(|&(_, &c)| c > 0).map(|(&t, &c)| (t, c as usize)).collect();
+    let census_match = observed == run.census && observed == run.sim_census;
+    let total_msgs: u64 = run.census.values().map(|&c| c as u64).sum();
+    // an all-f64 wire ships, per frame: 5 byte frame header, 8 byte tile
+    // coordinates, 5 byte tile header, nb*nb f64 values
+    let f64_wire_bytes = total_msgs * (18 + (rc.nb * rc.nb * 8) as u64);
+    Ok(DistReport {
+        ranks: rc.ranks,
+        p,
+        nb: rc.nb,
+        label: run.label,
+        digest: fold_digests(p, &digests)?,
+        wire_msgs,
+        wire_bytes,
+        f64_wire_bytes,
+        census_match,
+        max_resident,
+        single_resident: run.map.storage_bytes(rc.nb) as u64,
+    })
+}
+
+/// Fold per-tile digests into the global factor digest, in the same
+/// column-major order [`TileMatrix::tile_ids`] walks — independent of
+/// which rank computed which tile.
+fn fold_digests(p: usize, digests: &HashMap<TileId, u64>) -> Result<u64> {
+    if digests.len() != p * (p + 1) / 2 {
+        return Err(Error::Wire(format!(
+            "digest covers {} tiles, want {}",
+            digests.len(),
+            p * (p + 1) / 2
+        )));
+    }
+    let mut h = FNV_OFFSET;
+    for j in 0..p {
+        for i in j..p {
+            let d = digests.get(&TileId::new(i, j)).ok_or_else(|| {
+                Error::Wire(format!("factor digest is missing tile ({i}, {j})"))
+            })?;
+            h = fnv1a(h, &d.to_le_bytes());
+        }
+    }
+    Ok(h)
+}
+
+fn encode_digests(digests: &[(TileId, u64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(digests.len() * 16);
+    for (t, d) in digests {
+        out.extend_from_slice(&(t.i as u32).to_le_bytes());
+        out.extend_from_slice(&(t.j as u32).to_le_bytes());
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    out
+}
+
+fn decode_digests(payload: &[u8]) -> Result<Vec<(TileId, u64)>> {
+    if payload.len() % 16 != 0 {
+        return Err(Error::Wire(format!("digest frame has odd length {}", payload.len())));
+    }
+    let mut out = Vec::with_capacity(payload.len() / 16);
+    for rec in payload.chunks_exact(16) {
+        let i = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+        let j = u32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]) as usize;
+        if j > i {
+            return Err(Error::Wire(format!("digest names upper-triangle tile ({i}, {j})")));
+        }
+        let d = u64::from_le_bytes(rec[8..16].try_into().expect("16-byte record"));
+        out.push((TileId::new(i, j), d));
+    }
+    Ok(out)
+}
+
+fn encode_stats(wire_bytes: u64, wire_msgs: u64, resident: u64, sent: &[(TileId, u64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + sent.len() * 12);
+    out.extend_from_slice(&wire_bytes.to_le_bytes());
+    out.extend_from_slice(&wire_msgs.to_le_bytes());
+    out.extend_from_slice(&resident.to_le_bytes());
+    for (t, c) in sent {
+        out.extend_from_slice(&(t.i as u32).to_le_bytes());
+        out.extend_from_slice(&(t.j as u32).to_le_bytes());
+        out.extend_from_slice(&(*c as u32).to_le_bytes());
+    }
+    out
+}
+
+#[allow(clippy::type_complexity)]
+fn decode_stats(payload: &[u8]) -> Result<(u64, u64, u64, Vec<(TileId, u64)>)> {
+    if payload.len() < 24 || (payload.len() - 24) % 12 != 0 {
+        return Err(Error::Wire(format!("stats frame has bad length {}", payload.len())));
+    }
+    let wire_bytes = u64::from_le_bytes(payload[0..8].try_into().expect("8 bytes"));
+    let wire_msgs = u64::from_le_bytes(payload[8..16].try_into().expect("8 bytes"));
+    let resident = u64::from_le_bytes(payload[16..24].try_into().expect("8 bytes"));
+    let mut sent = Vec::with_capacity((payload.len() - 24) / 12);
+    for rec in payload[24..].chunks_exact(12) {
+        let i = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+        let j = u32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]) as usize;
+        if j > i {
+            return Err(Error::Wire(format!("stats name upper-triangle tile ({i}, {j})")));
+        }
+        let c = u64::from(u32::from_le_bytes([rec[8], rec[9], rec[10], rec[11]]));
+        sent.push((TileId::new(i, j), c));
+    }
+    Ok((wire_bytes, wire_msgs, resident, sent))
+}
+
+/// Frobenius norms of every lower-triangle tile, all-gathered across
+/// the mesh (each rank computes its owned tiles and broadcasts).  With
+/// no mesh (single process) the local sweep already covers everything.
+fn gather_norms(
+    tiles: &TileMatrix,
+    cluster: &ClusterModel,
+    me: usize,
+    mesh: Option<&mut Mesh>,
+) -> Result<Vec<f64>> {
+    let p = tiles.p();
+    let want = p * (p + 1) / 2;
+    let mut norms = vec![0.0f64; want];
+    let mut mine: Vec<(usize, f64)> = Vec::new();
+    for t in tiles.tile_ids() {
+        if cluster.owner(t) == me {
+            let tri = t.i * (t.i + 1) / 2 + t.j;
+            let norm = tiles.tile_frobenius(t);
+            norms[tri] = norm;
+            mine.push((tri, norm));
+        }
+    }
+    let Some(mesh) = mesh else { return Ok(norms) };
+    let mut payload = Vec::with_capacity(mine.len() * 12);
+    for &(tri, norm) in &mine {
+        payload.extend_from_slice(&(tri as u32).to_le_bytes());
+        payload.extend_from_slice(&norm.to_bits().to_le_bytes());
+    }
+    mesh.broadcast(FrameKind::Norms, &payload)?;
+    let mut have = mine.len();
+    for r in 0..mesh.ranks {
+        if r == mesh.rank {
+            continue;
+        }
+        let payload = mesh.expect_from(r, FrameKind::Norms)?;
+        if payload.len() % 12 != 0 {
+            return Err(Error::Wire(format!("norms frame has odd length {}", payload.len())));
+        }
+        for rec in payload.chunks_exact(12) {
+            let tri = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+            if tri >= want {
+                return Err(Error::Wire(format!("norms name tile index {tri} out of {want}")));
+            }
+            let bits = u64::from_le_bytes(rec[4..12].try_into().expect("12-byte record"));
+            norms[tri] = f64::from_bits(bits);
+            have += 1;
+        }
+    }
+    if have != want {
+        return Err(Error::Wire(format!("norm all-gather covered {have} of {want} tiles")));
+    }
+    Ok(norms)
+}
+
+/// One rank's full run: owned-tile generation, map resolution, global
+/// plan, partition, two-level-scheduled execution, post-run accounting.
+/// `mesh: None` is the genuine single-process baseline over the same
+/// code path.
+fn run_rank(rc: &RunConfig, mut mesh: Option<Mesh>) -> Result<RankRun> {
+    if matches!(rc.variant, Variant::Tlr { .. }) {
+        return Err(Error::InvalidArgument(
+            "the distributed runtime does not support tlr plans yet".into(),
+        ));
+    }
+    let (me, ranks) = mesh.as_ref().map_or((0, 1), |m| (m.rank, m.ranks));
+    let p = rc.n / rc.nb;
+    let nb = rc.nb;
+    let cluster = ClusterModel::shaheen(ranks);
+    let sched = Scheduler::new(SchedulerConfig {
+        num_workers: SchedulerConfig::resolve_workers(rc.workers),
+        policy: rc.policy,
+        deadline: (rc.deadline_ms > 0).then(|| Duration::from_millis(rc.deadline_ms)),
+        ..Default::default()
+    });
+
+    // identical on every rank: same seed, same Morton order
+    let locations = sample_locations(rc.n, rc.seed);
+    let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
+    theta.validate()?;
+    let mut tiles = TileMatrix::zeros_where(rc.n, nb, |t| cluster.owner(t) == me)?;
+
+    // phase 1: generate owned covariance tiles (embarrassingly parallel)
+    {
+        let mut graph: TaskGraph<SizedCall> = TaskGraph::new();
+        for j in 0..p {
+            for i in j..p {
+                let t = TileId::new(i, j);
+                if cluster.owner(t) == me {
+                    graph.submit(
+                        SizedCall { call: KernelCall::Generate { i, j }, nb },
+                        vec![(t, Access::Write)],
+                    );
+                }
+            }
+        }
+        let accesses: Vec<_> = graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+        let gen = GenContext {
+            locations: &locations,
+            theta,
+            metric: rc.metric,
+            nugget: rc.nugget,
+        };
+        let executor = TileExecutor::new(&tiles, &NativeBackend).with_generation(gen);
+        sched.run(&mut graph, |idx, sc| executor.execute(sc, &accesses[idx]))?;
+    }
+
+    // phase 2: resolve the precision map every rank agrees on
+    let map = match rc.variant {
+        Variant::Adaptive { tolerance } => {
+            let norms = gather_norms(&tiles, &cluster, me, mesh.as_mut())?;
+            PrecisionMap::adaptive_from_norms(p, &norms, tolerance)
+        }
+        v => v.precision_map(p, None)?,
+    };
+
+    // phase 3: native storage prep, global plan, owner partition
+    cholesky::prepare_tiles(&mut tiles, rc.variant, &map);
+    let plan = CholeskyPlan::build_with_opts(p, nb, rc.variant, map, false, PlanOptions::default());
+    let local = partition_plan(&plan.graph, &cluster, me)?;
+    let sim_census = if me == 0 {
+        simulate_ranked(&plan.graph, &cluster, nb, &plan.map, None).per_tile_messages
+    } else {
+        HashMap::new()
+    };
+    let pending = local.network_pending();
+    let accesses: Vec<_> = local.graph.tasks().iter().map(|t| t.accesses.clone()).collect();
+    let LocalPlan { graph: mut lgraph, recvs, recv_task, census, .. } = local;
+    let slot_of: HashMap<TileId, usize> =
+        recvs.iter().enumerate().map(|(s, &(t, _))| (t, s)).collect();
+    let stash: Vec<Mutex<Option<Vec<u8>>>> = recvs.iter().map(|_| Mutex::new(None)).collect();
+
+    // phase 4: execute on the two-level scheduler
+    let executor = TileExecutor::new(&tiles, &NativeBackend);
+    let wire_bytes = AtomicU64::new(0);
+    let wire_msgs = AtomicU64::new(0);
+    let sent: Mutex<HashMap<TileId, u64>> = Mutex::new(HashMap::new());
+    let mesh = match mesh {
+        Some(m) => {
+            let mesh_cell = Mutex::new(m);
+            let exec = |idx: TaskIdx, dc: &DistCall| -> Result<()> {
+                match *dc {
+                    DistCall::Kernel(sc) => executor.execute(&sc, &accesses[idx]),
+                    DistCall::Send { tile, to } => {
+                        tiles.guard_acquire(tile, false);
+                        let bytes = wire::encode_tile(&tiles.tile(tile).buf);
+                        tiles.guard_release(tile, false);
+                        let payload = net::encode_data(tile, &bytes);
+                        wire_bytes.fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
+                        wire_msgs.fetch_add(1, Ordering::Relaxed);
+                        *sent.lock().unwrap().entry(tile).or_insert(0) += 1;
+                        mesh_cell.lock().unwrap().send(to, FrameKind::Data, &payload)
+                    }
+                    DistCall::Recv { tile, slot, from } => {
+                        let bytes = stash[slot].lock().unwrap().take().ok_or_else(|| {
+                            Error::PlanMismatch(format!(
+                                "recv of tile ({}, {}) from rank {from} ran without a frame",
+                                tile.i, tile.j
+                            ))
+                        })?;
+                        let buf = wire::decode_tile(&bytes)?;
+                        tiles.guard_acquire(tile, true);
+                        {
+                            // SAFETY: the Recv task carries the Write
+                            // access; the DAG serializes it against every
+                            // other access to this tile
+                            let slot = unsafe { tiles.tile_ptr(tile) };
+                            slot.buf = buf;
+                            slot.f32_scratch = None;
+                            slot.f64_scratch = None;
+                        }
+                        tiles.guard_release(tile, true);
+                        Ok(())
+                    }
+                }
+            };
+            // the inter-rank scheduler tier: landed frames release their
+            // Recv task; a lost peer fails the run instead of wedging it
+            let progress = |h: &ExternalHandle<'_>| {
+                let mut held: Vec<NetEvent> = Vec::new();
+                while !h.finished() {
+                    let ev = mesh_cell.lock().unwrap().try_recv();
+                    match ev {
+                        Some(NetEvent::Frame { kind: FrameKind::Data, payload, from }) => {
+                            match net::decode_data(&payload) {
+                                Ok((t, bytes)) => {
+                                    match (slot_of.get(&t), recv_task.get(&t)) {
+                                        (Some(&s), Some(&ridx)) => {
+                                            *stash[s].lock().unwrap() = Some(bytes.to_vec());
+                                            h.release(ridx);
+                                        }
+                                        _ => h.fail(Error::PlanMismatch(format!(
+                                            "rank {from} shipped unexpected tile ({}, {})",
+                                            t.i, t.j
+                                        ))),
+                                    }
+                                }
+                                Err(e) => h.fail(e),
+                            }
+                        }
+                        Some(NetEvent::Lost { rank, detail }) => {
+                            h.fail(Error::PeerLost { rank, detail });
+                        }
+                        Some(other) => held.push(other),
+                        None => std::thread::sleep(Duration::from_micros(200)),
+                    }
+                }
+                let mut m = mesh_cell.lock().unwrap();
+                for ev in held {
+                    m.requeue(ev);
+                }
+            };
+            sched.run_external(&mut lgraph, &pending, exec, progress)?;
+            Some(mesh_cell.into_inner().expect("mesh lock poisoned"))
+        }
+        None => {
+            let exec = |idx: TaskIdx, dc: &DistCall| -> Result<()> {
+                match *dc {
+                    DistCall::Kernel(sc) => executor.execute(&sc, &accesses[idx]),
+                    _ => Err(Error::PlanMismatch(
+                        "single-rank partition scheduled wire tasks".into(),
+                    )),
+                }
+            };
+            sched.run(&mut lgraph, exec)?;
+            None
+        }
+    };
+
+    // phase 5: post-run accounting — factor digests of owned tiles and
+    // the rank's native resident footprint
+    let mut digests: Vec<(TileId, u64)> = Vec::new();
+    let mut resident = 0u64;
+    for t in tiles.tile_ids() {
+        let slot = tiles.tile(t);
+        if cluster.owner(t) == me {
+            digests.push((t, fnv1a(FNV_OFFSET, &wire::encode_tile(&slot.buf))));
+        }
+        resident += slot.buf.resident_bytes() as u64;
+    }
+    Ok(RankRun {
+        mesh,
+        label: plan.variant.label(p),
+        map: plan.map,
+        census,
+        sim_census,
+        digests,
+        sent: sent.into_inner().expect("send counter lock poisoned"),
+        wire_msgs: wire_msgs.load(Ordering::Relaxed),
+        wire_bytes: wire_bytes.load(Ordering::Relaxed),
+        resident,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config(n: usize, nb: usize, variant: Variant) -> RunConfig {
+        RunConfig { n, nb, variant, workers: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        assert_eq!(fnv1a(FNV_OFFSET, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn digest_and_stats_payloads_roundtrip() {
+        let digests = vec![(TileId::new(2, 1), 0xdead_beef_u64), (TileId::new(3, 3), 7)];
+        assert_eq!(decode_digests(&encode_digests(&digests)).unwrap(), digests);
+        let sent = vec![(TileId::new(1, 0), 3u64), (TileId::new(2, 2), 1)];
+        let payload = encode_stats(1234, 4, 99, &sent);
+        assert_eq!(decode_stats(&payload).unwrap(), (1234, 4, 99, sent));
+        // corrupt inputs are wire errors, not panics
+        assert!(decode_digests(&[0u8; 15]).is_err());
+        assert!(decode_stats(&[0u8; 23]).is_err());
+        assert!(decode_stats(&[0u8; 29]).is_err());
+    }
+
+    #[test]
+    fn variant_flags_cover_every_variant() {
+        for v in [
+            Variant::FullDp,
+            Variant::MixedPrecision { diag_thick: 3 },
+            Variant::Dst { diag_thick: 2 },
+            Variant::ThreePrecision { dp_thick: 1, sp_thick: 2 },
+            Variant::FourPrecision { dp_thick: 1, sp_thick: 2, f16_thick: 3 },
+            Variant::Adaptive { tolerance: 1e-4 },
+            Variant::Tlr { tolerance: 1e-4, max_rank: 8 },
+            Variant::IndependentBlocks,
+        ] {
+            let flags = variant_flags(v);
+            assert!(flags.iter().any(|(f, _)| *f == "--variant"), "{v:?}");
+        }
+        let flags = variant_flags(Variant::MixedPrecision { diag_thick: 3 });
+        assert!(flags.contains(&("--thick", "3".to_string())));
+    }
+
+    #[test]
+    fn single_rank_run_is_deterministic_and_matches_direct_factorization() {
+        let rc = config(128, 32, Variant::MixedPrecision { diag_thick: 1 });
+        let a = run_single(&rc).unwrap();
+        let b = run_single(&rc).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.max_resident, a.single_resident, "one rank holds the whole triangle");
+
+        // the same factor through the ordinary single-process entry
+        // points must fold to the same digest
+        let locations = sample_locations(rc.n, rc.seed);
+        let theta = MaternParams::new(rc.theta[0], rc.theta[1], rc.theta[2]);
+        let sched = Scheduler::with_workers(2);
+        let mut tiles = TileMatrix::zeros(rc.n, rc.nb).unwrap();
+        cholesky::generate_covariance(
+            &mut tiles,
+            &locations,
+            theta,
+            rc.metric,
+            rc.nugget,
+            &NativeBackend,
+            &sched,
+        )
+        .unwrap();
+        let map = rc.variant.precision_map(rc.n / rc.nb, None).unwrap();
+        cholesky::factorize_tiles_with_map(&mut tiles, rc.variant, map, &NativeBackend, &sched)
+            .unwrap();
+        let mut digests = HashMap::new();
+        for t in tiles.tile_ids() {
+            digests.insert(t, fnv1a(FNV_OFFSET, &wire::encode_tile(&tiles.tile(t).buf)));
+        }
+        let direct = fold_digests(rc.n / rc.nb, &digests).unwrap();
+        assert_eq!(a.digest, direct);
+    }
+
+    /// The tentpole acceptance check, in-process: a 2-rank loopback run
+    /// produces the bitwise-identical factor digest, its observed wire
+    /// census matches the partition and the analytic simulator, the
+    /// stored-precision wire beats the all-f64 wire, and each rank's
+    /// resident footprint stays strictly below the single-process one.
+    #[test]
+    fn two_rank_loopback_matches_single_process_bitwise() {
+        for variant in [
+            Variant::MixedPrecision { diag_thick: 1 },
+            Variant::Adaptive { tolerance: 1e-3 },
+        ] {
+            let rc = config(128, 32, variant);
+            let single = run_single(&rc).unwrap();
+
+            let mut rc2 = rc.clone();
+            rc2.ranks = 2;
+            let (listener, addr) = net::bind_root().unwrap();
+            let worker_rc = rc2.clone();
+            let worker = std::thread::spawn(move || {
+                let mesh = Mesh::join(1, 2, addr).expect("worker joins");
+                worker_protocol(&worker_rc, mesh)
+            });
+            let mesh = Mesh::root(listener, 2).unwrap();
+            let report = root_aggregate(&rc2, mesh).unwrap();
+            worker.join().expect("worker thread").unwrap();
+
+            assert_eq!(report.digest, single.digest, "{variant:?}");
+            assert!(report.census_match, "{variant:?}");
+            assert!(report.wire_msgs > 0, "{variant:?}");
+            assert!(
+                report.wire_bytes < report.f64_wire_bytes,
+                "{variant:?}: stored-precision wire must beat dense f64"
+            );
+            assert!(
+                report.max_resident < report.single_resident,
+                "{variant:?}: per-rank memory must stay below the single-process footprint"
+            );
+        }
+    }
+
+    #[test]
+    fn tlr_runs_are_rejected_up_front() {
+        let rc = config(128, 32, Variant::Tlr { tolerance: 1e-4, max_rank: 8 });
+        assert!(matches!(run_rank(&rc, None), Err(Error::InvalidArgument(_))));
+    }
+}

@@ -88,6 +88,24 @@ pub enum Error {
 
     /// Filesystem-level failure (artifact files, trace dumps, CSV output).
     Io(std::io::Error),
+
+    /// A malformed frame on the rank-to-rank wire: truncated payload,
+    /// unknown tile-class tag, or a length field that disagrees with the
+    /// bytes that follow.  Distinct from [`Error::Io`] so receivers can
+    /// tell a corrupt peer from a dead socket.
+    Wire(String),
+
+    /// A peer rank disappeared mid-run (socket error or EOF before its
+    /// `Bye`).  The distributed progress engine converts this into an
+    /// abort of the local task graph — the run fails with this typed
+    /// error instead of wedging on dependency counters that will never
+    /// be released.
+    PeerLost {
+        /// Rank id of the lost peer.
+        rank: usize,
+        /// Underlying transport diagnostic.
+        detail: String,
+    },
 }
 
 impl fmt::Display for Error {
@@ -116,6 +134,10 @@ impl fmt::Display for Error {
             Error::Artifact(s) => write!(f, "runtime artifact error: {s}"),
             Error::Xla(s) => write!(f, "xla error: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Wire(s) => write!(f, "wire protocol error: {s}"),
+            Error::PeerLost { rank, detail } => {
+                write!(f, "peer rank {rank} lost: {detail}")
+            }
         }
     }
 }
@@ -188,6 +210,16 @@ mod tests {
         assert!(e.to_string().contains("injected fault"));
         let e = Error::PlanMismatch("f64 tile lacks its dconv2s view".into());
         assert!(e.to_string().contains("plan/storage mismatch"));
+    }
+
+    #[test]
+    fn distributed_variants_display_is_informative() {
+        let e = Error::Wire("tile frame truncated: want 512 bytes, got 12".into());
+        let s = e.to_string();
+        assert!(s.contains("wire protocol error") && s.contains("truncated"), "{s}");
+        let e = Error::PeerLost { rank: 3, detail: "connection reset by peer".into() };
+        let s = e.to_string();
+        assert!(s.contains("peer rank 3") && s.contains("connection reset"), "{s}");
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub mod bench;
 pub mod cholesky;
 pub mod config;
 pub mod datagen;
+pub mod dist;
 pub mod error;
 pub mod fault;
 pub mod kernels;

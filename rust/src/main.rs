@@ -7,6 +7,8 @@
 //!   loglik   [opts]              one likelihood evaluation (timing)
 //!   serve    [opts]              self-driving serving-layer demo
 //!                                (admission control + memory governor)
+//!   dist     [opts]              multi-process distributed factorization
+//!                                over the loopback stored-precision wire
 //!   artifacts-info               dump the AOT artifact manifest
 //!
 //! Common options (flags override `--config FILE`, which overrides
@@ -27,6 +29,10 @@
 //!   --budget-mb M    serve: memory-governor budget in MiB (256)
 //!   --queue-depth D  serve: admission queue bound (64)
 //!   --requests R     serve: synthetic requests to submit (32)
+//!   --nugget G       diagonal nugget (1e-8)       --metric M  euclidean | haversine
+//!   --ranks N        dist: processes in the run (1)
+//!   --rank-id R      dist (internal): join as worker rank R
+//!   --peers ADDR     dist (internal): root rendezvous address
 //!
 //! (Hand-rolled parsing: clap is unavailable in the offline crate set.)
 
@@ -82,6 +88,11 @@ fn resolve_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         ("inject", "inject"),
         ("budget-mb", "budget_mb"),
         ("queue-depth", "queue_depth"),
+        ("nugget", "nugget"),
+        ("metric", "metric"),
+        ("ranks", "ranks"),
+        ("rank-id", "rank_id"),
+        ("peers", "peers"),
     ] {
         if let Some(v) = flags.get(flag) {
             over.insert(key.to_string(), v.clone());
@@ -105,6 +116,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
     match cmd {
         "demo" | "fit" | "loglik" => {}
         "serve" => return serve_cmd(flags),
+        "dist" => return dist_cmd(flags),
         "artifacts-info" => return artifacts_info(),
         other => {
             eprintln!("unknown command {other:?}; see `mpchol` source header for usage");
@@ -113,6 +125,10 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
     }
 
     let rc = resolve_config(flags)?;
+    if rc.ranks > 1 {
+        eprintln!("--ranks {} is a distributed run; use the `dist` subcommand", rc.ranks);
+        std::process::exit(2);
+    }
     if !rc.inject.is_empty() {
         // the executor and scheduler pick this up through fault::env_plan
         std::env::set_var(mpcholesky::fault::ENV_VAR, &rc.inject);
@@ -195,6 +211,20 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Multi-process distributed factorization: the root spawns `--ranks`
+/// processes of this executable (workers re-enter here with
+/// `--rank-id`/`--peers`), each owning a 2D block-cyclic tile share,
+/// and ships tiles at stored precision over loopback TCP.  Spawned
+/// workers inherit the fault-injection environment from the root.
+fn dist_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let rc = resolve_config(flags)?;
+    if !rc.inject.is_empty() {
+        std::env::set_var(mpcholesky::fault::ENV_VAR, &rc.inject);
+        eprintln!("fault injection armed: {}", rc.inject);
+    }
+    mpcholesky::dist::run(&rc)
 }
 
 /// Self-driving serving-layer demo: generate a synthetic field, submit

@@ -12,7 +12,9 @@
 //! * compute: each node runs its tasks at `node_gflops` (DP) or
 //!   `node_gflops * sp_speedup` (SP), perfectly overlapped across nodes;
 //! * communication: a task executing on the owner of its output tile
-//!   receives every remote input tile once per (producing task), at
+//!   receives each *version* of a remote input tile once — repeat reads
+//!   of an already-delivered version are local, matching the real
+//!   runtime's one-frame-per-(tile, consumer-rank) wire protocol — at
 //!   alpha-beta cost `alpha + bytes/beta`.
 //!
 //! Makespan = max(max-node compute+recv time, critical-path time): the
@@ -59,7 +61,11 @@ impl ClusterModel {
         (pr, self.nodes / pr)
     }
 
-    fn owner(&self, t: TileId) -> usize {
+    /// 2D block-cyclic owner of tile `(i, j)` — the single ownership
+    /// authority shared by this analytic model and the real partitioned
+    /// runtime (`scheduler::partition`), so the two can never disagree
+    /// about placement.
+    pub fn owner(&self, t: TileId) -> usize {
         let (pr, pc) = self.grid();
         (t.i % pr) * pc + (t.j % pc)
     }
@@ -130,6 +136,13 @@ pub fn simulate_ranked<P: TaskCost>(
     // last writer of each resource, to attribute producer->consumer
     // transfers
     let mut producer_node: HashMap<ResourceId, usize> = HashMap::new();
+    // version counter per resource (bumped on every write) and the
+    // version each consumer node last received: a node pays for a given
+    // version of a resource exactly once, matching the real runtime's
+    // one-frame-per-(tile, consumer-rank) wire protocol — repeat reads
+    // of an already-delivered version are local
+    let mut version: HashMap<ResourceId, usize> = HashMap::new();
+    let mut delivered: HashMap<(ResourceId, usize), usize> = HashMap::new();
     // critical path: completion time per task under infinite parallelism
     let mut finish = vec![0.0f64; graph.len()];
     // predecessor lists, inverted from the forward successor edges
@@ -159,7 +172,9 @@ pub fn simulate_ranked<P: TaskCost>(
         for &(res, mode) in &t.accesses {
             if mode == Access::Read {
                 let src = *producer_node.get(&res).unwrap_or(&cluster.owner_res(res));
-                if src != node {
+                let ver = version.get(&res).copied().unwrap_or(0);
+                if src != node && delivered.get(&(res, node)) != Some(&ver) {
+                    delivered.insert((res, node), ver);
                     // the wire carries the resource's stored
                     // representation: tiles at their map precision, RHS
                     // block rows as f64 (single-column assumption — the
@@ -195,10 +210,12 @@ pub fn simulate_ranked<P: TaskCost>(
         let pred_max = preds[idx].iter().map(|&p| finish[p]).fold(0.0, f64::max);
         finish[idx] = pred_max + ready + exec_s;
 
-        // record who produced each written resource (for consumers)
+        // record who produced each written resource (for consumers) and
+        // bump its version so the next remote read pays again
         for &(res, mode) in &t.accesses {
             if mode == Access::Write {
                 producer_node.insert(res, node);
+                *version.entry(res).or_insert(0) += 1;
             }
         }
     }
@@ -332,6 +349,42 @@ mod tests {
         assert_eq!(dense.total_comm_bytes, (nb * nb * 2) as f64);
         // message counts never depend on pricing
         assert_eq!(lr.messages, dense.messages);
+    }
+
+    #[test]
+    fn repeat_reads_of_one_version_ship_once() {
+        // two consumers on the same node read the same produced tile:
+        // the wire carries ONE frame (the real runtime ships one frame
+        // per (tile, consumer-rank), not one per reading task)
+        let c = ClusterModel::shaheen(4);
+        let map = PrecisionMap::uniform(4, Precision::F64);
+        let mut g: TaskGraph<Toy> = TaskGraph::new();
+        g.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 1), Access::Write)]);
+        for _ in 0..3 {
+            g.submit(
+                Toy { flops: 1e6, prec: Precision::F64 },
+                vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
+            );
+        }
+        let rep = simulate(&g, &c, 128, &map);
+        assert_eq!(rep.messages, 1, "one frame per (tile, consumer rank)");
+        assert_eq!(rep.per_tile_messages.get(&tid(1, 1)), Some(&1));
+
+        // ... but a NEW version written after the first delivery ships again
+        let mut g2: TaskGraph<Toy> = TaskGraph::new();
+        g2.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 1), Access::Write)]);
+        g2.submit(
+            Toy { flops: 1e6, prec: Precision::F64 },
+            vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
+        );
+        g2.submit(Toy { flops: 1e6, prec: Precision::F64 }, vec![(tid(1, 1), Access::Write)]);
+        g2.submit(
+            Toy { flops: 1e6, prec: Precision::F64 },
+            vec![(tid(1, 1), Access::Read), (tid(0, 0), Access::Write)],
+        );
+        let rep2 = simulate(&g2, &c, 128, &map);
+        assert_eq!(rep2.messages, 2, "a rewritten tile crosses the wire again");
+        assert_eq!(rep2.per_tile_messages.get(&tid(1, 1)), Some(&2));
     }
 
     #[test]

@@ -7,17 +7,23 @@
 //!   (Fig. 5 substrate).
 //! * [`distributed`] — 2D block-cyclic multi-node model (Fig. 6
 //!   substrate).
+//! * [`net`] — rank-to-rank TCP wire (length-prefixed frames, tiles
+//!   serialized at stored precision) for the real multi-process runtime.
+//! * [`partition`] — splits a global plan into per-rank local graphs
+//!   with Send/Recv pseudo-tasks at ownership boundaries.
 //! * [`trace`] — execution spans and utilization metrics.
 
 pub mod datamove;
 pub mod distributed;
 pub mod graph;
+pub mod net;
+pub mod partition;
 pub mod trace;
 pub mod worker;
 
 pub use graph::{Access, ResourceId, TaskGraph, TaskIdx, TaskNode};
 pub use trace::{ExecutionTrace, TaskSpan};
-pub use worker::{Scheduler, SchedulerConfig, SchedulingPolicy};
+pub use worker::{ExternalHandle, Scheduler, SchedulerConfig, SchedulingPolicy};
 
 use crate::tile::Precision;
 

@@ -1,0 +1,634 @@
+//! Rank-to-rank TCP message layer for the real multi-process runtime.
+//!
+//! Zero-dependency (`std::net` only).  Every link carries length-prefixed
+//! frames:
+//!
+//! ```text
+//! [u32 le payload_len][u8 kind][payload_len bytes]
+//! ```
+//!
+//! Tile payloads (`Data` frames) are the output of
+//! [`crate::tile::wire::encode_tile`] — i.e. a tile crosses the wire at
+//! its *stored* precision (f64/f32/f16/packed-bf16/low-rank factors),
+//! never inflated back to f64.
+//!
+//! ## Bootstrap
+//!
+//! Rank 0 binds a loopback listener and spawns (or is joined by) the
+//! other ranks, which each bind their own listener and dial rank 0,
+//! announcing `Hello { rank, listen_port }`.  Once all peers have
+//! checked in, rank 0 broadcasts the full address table (`Peers`), and
+//! every pair of non-root ranks completes the mesh directly: rank `i`
+//! dials every rank `j < i` (other than 0, which it already holds) and
+//! accepts connections from ranks `> i`.  The rendezvous connections to
+//! rank 0 double as the mesh links to rank 0.
+//!
+//! ## Runtime
+//!
+//! One reader thread per peer drains its socket and forwards
+//! [`NetEvent`]s into a single mpsc channel the progress engine polls.
+//! Writes go directly through a per-peer `Mutex<TcpStream>` — safe
+//! against deadlock because every peer's reader thread always drains.
+//! A transport error or an EOF before the peer's `Bye` surfaces as
+//! [`NetEvent::Lost`], which the progress engine converts into
+//! [`Error::PeerLost`] instead of wedging on dependency counters.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Ipv4Addr, SocketAddr, SocketAddrV4, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::tile::TileId;
+
+/// Frame kinds on the wire.  `u8` on the wire; unknown kinds are a
+/// [`Error::Wire`] at the receiver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Joiner → root during rendezvous: `{ u32 rank, u16 listen_port }`.
+    Hello,
+    /// Root → joiners: full address table, `count × { u32 rank, u32 ip, u16 port }`.
+    Peers,
+    /// A tile at stored precision: `{ u32 i, u32 j, wire-encoded tile }`.
+    Data,
+    /// Owned Frobenius norms for the adaptive-map all-gather:
+    /// `count × { u32 tri_idx, u64 f64_bits }`.
+    Norms,
+    /// Post-run per-tile factor digests:
+    /// `count × { u32 i, u32 j, u64 fnv }`.
+    Digest,
+    /// Post-run counters: `{ u64 wire_bytes, u64 wire_msgs, u64 resident,
+    /// count × { u32 i, u32 j, u32 msgs } }`.
+    Stats,
+    /// Orderly shutdown; EOF after `Bye` is not a peer loss.
+    Bye,
+}
+
+impl FrameKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Peers => 2,
+            FrameKind::Data => 3,
+            FrameKind::Norms => 4,
+            FrameKind::Digest => 5,
+            FrameKind::Stats => 6,
+            FrameKind::Bye => 7,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        Ok(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Peers,
+            3 => FrameKind::Data,
+            4 => FrameKind::Norms,
+            5 => FrameKind::Digest,
+            6 => FrameKind::Stats,
+            7 => FrameKind::Bye,
+            other => return Err(Error::Wire(format!("unknown frame kind {other}"))),
+        })
+    }
+}
+
+/// What the progress engine sees from the mesh.
+#[derive(Debug)]
+pub enum NetEvent {
+    /// A complete frame from `from`.
+    Frame {
+        /// Sending rank.
+        from: usize,
+        /// Frame kind byte, decoded.
+        kind: FrameKind,
+        /// Raw payload (after the kind byte).
+        payload: Vec<u8>,
+    },
+    /// The link to `rank` died before its `Bye`.
+    Lost {
+        /// The vanished peer.
+        rank: usize,
+        /// Transport diagnostic (io error or "eof before bye").
+        detail: String,
+    },
+}
+
+/// Hard ceiling on a single frame's payload so a corrupt length prefix
+/// cannot drive an unbounded allocation.  Largest legitimate payload is
+/// a full-rank LowRank tile (`2 * nb * nb * 8` + framing) — 256 MiB
+/// leaves orders of magnitude of headroom over any nb this crate runs.
+const MAX_FRAME: usize = 256 << 20;
+
+fn write_frame(s: &mut TcpStream, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    let mut hdr = [0u8; 5];
+    hdr[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[4] = kind.to_u8();
+    s.write_all(&hdr)?;
+    s.write_all(payload)?;
+    Ok(())
+}
+
+/// Reads one frame.  `Ok(None)` means clean EOF at a frame boundary.
+fn read_frame(s: &mut TcpStream) -> Result<Option<(FrameKind, Vec<u8>)>> {
+    let mut hdr = [0u8; 5];
+    match s.read_exact(&mut hdr) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Wire(format!("frame length {len} exceeds cap {MAX_FRAME}")));
+    }
+    let kind = FrameKind::from_u8(hdr[4])?;
+    let mut payload = vec![0u8; len];
+    s.read_exact(&mut payload)?;
+    Ok(Some((kind, payload)))
+}
+
+/// Encodes a `Data` frame payload: tile coordinates plus the tile at
+/// stored precision.
+pub fn encode_data(t: TileId, tile_bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + tile_bytes.len());
+    out.extend_from_slice(&(t.i as u32).to_le_bytes());
+    out.extend_from_slice(&(t.j as u32).to_le_bytes());
+    out.extend_from_slice(tile_bytes);
+    out
+}
+
+/// Splits a `Data` payload into tile coordinates and the encoded tile.
+pub fn decode_data(payload: &[u8]) -> Result<(TileId, &[u8])> {
+    if payload.len() < 8 {
+        return Err(Error::Wire(format!(
+            "data frame too short for tile header: {} bytes",
+            payload.len()
+        )));
+    }
+    let i = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let j = u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]) as usize;
+    Ok((TileId::new(i, j), &payload[8..]))
+}
+
+struct Peer {
+    /// Write half; readers run on their own threads.  `None` for self.
+    stream: Option<Mutex<TcpStream>>,
+}
+
+/// A fully connected rank mesh.
+pub struct Mesh {
+    /// This process's rank id.
+    pub rank: usize,
+    /// World size.
+    pub ranks: usize,
+    peers: Vec<Peer>,
+    events: Receiver<NetEvent>,
+    /// Keeps the sender side alive for requeueing; reader threads hold
+    /// clones.
+    tx: Sender<NetEvent>,
+    /// Events popped but not consumed by the current phase (e.g. a fast
+    /// peer's `Digest` landing while the local run is still executing).
+    stash: VecDeque<NetEvent>,
+    /// Transport diagnostics of peers whose `Lost` event has already
+    /// passed through [`Mesh::recv`] — so a later `expect_from` on a
+    /// dead peer fails fast instead of blocking forever.
+    lost: Vec<Option<String>>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+fn reader_loop(mut s: TcpStream, from: usize, tx: Sender<NetEvent>) {
+    let mut saw_bye = false;
+    loop {
+        match read_frame(&mut s) {
+            Ok(Some((FrameKind::Bye, payload))) => {
+                saw_bye = true;
+                let _ = tx.send(NetEvent::Frame { from, kind: FrameKind::Bye, payload });
+            }
+            Ok(Some((kind, payload))) => {
+                if tx.send(NetEvent::Frame { from, kind, payload }).is_err() {
+                    return; // mesh dropped; nobody is listening
+                }
+            }
+            Ok(None) => {
+                if !saw_bye {
+                    let _ = tx.send(NetEvent::Lost {
+                        rank: from,
+                        detail: "eof before bye".into(),
+                    });
+                }
+                return;
+            }
+            Err(e) => {
+                if !saw_bye {
+                    let _ = tx.send(NetEvent::Lost { rank: from, detail: e.to_string() });
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn loopback(port: u16) -> SocketAddr {
+    SocketAddr::V4(SocketAddrV4::new(Ipv4Addr::LOCALHOST, port))
+}
+
+fn hello_payload(rank: usize, listen_port: u16) -> Vec<u8> {
+    let mut p = Vec::with_capacity(6);
+    p.extend_from_slice(&(rank as u32).to_le_bytes());
+    p.extend_from_slice(&listen_port.to_le_bytes());
+    p
+}
+
+fn parse_hello(payload: &[u8]) -> Result<(usize, u16)> {
+    if payload.len() != 6 {
+        return Err(Error::Wire(format!("hello frame has {} bytes, want 6", payload.len())));
+    }
+    let rank = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let port = u16::from_le_bytes([payload[4], payload[5]]);
+    Ok((rank, port))
+}
+
+impl Mesh {
+    /// Rank 0 side of the rendezvous: accept `ranks - 1` joiners on
+    /// `listener`, collect their listen ports, broadcast the address
+    /// table, and keep the rendezvous connections as mesh links.
+    pub fn root(listener: TcpListener, ranks: usize) -> Result<Self> {
+        let (tx, events) = channel();
+        let mut streams: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        let mut ports: Vec<u16> = vec![0; ranks];
+        for _ in 1..ranks {
+            let (mut s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let (kind, payload) = read_frame(&mut s)?
+                .ok_or_else(|| Error::Wire("joiner hung up before hello".into()))?;
+            if kind != FrameKind::Hello {
+                return Err(Error::Wire(format!("expected hello from joiner, got {kind:?}")));
+            }
+            let (rank, port) = parse_hello(&payload)?;
+            if rank == 0 || rank >= ranks || streams[rank].is_some() {
+                return Err(Error::Wire(format!("bad or duplicate joiner rank {rank}")));
+            }
+            ports[rank] = port;
+            streams[rank] = Some(s);
+        }
+        // Broadcast the table: count × { u32 rank, u32 ip(loopback), u16 port }.
+        let mut table = Vec::new();
+        for (r, port) in ports.iter().enumerate().skip(1) {
+            table.extend_from_slice(&(r as u32).to_le_bytes());
+            table.extend_from_slice(&u32::from(Ipv4Addr::LOCALHOST).to_le_bytes());
+            table.extend_from_slice(&port.to_le_bytes());
+        }
+        for s in streams.iter_mut().flatten() {
+            write_frame(s, FrameKind::Peers, &table)?;
+        }
+        Self::assemble(0, ranks, streams, tx, events)
+    }
+
+    /// Joiner side: bind an own listener, dial the root, send `Hello`,
+    /// receive the address table, then complete the mesh (dial lower
+    /// ranks, accept higher ones).
+    pub fn join(rank: usize, ranks: usize, root: SocketAddr) -> Result<Self> {
+        assert!(rank > 0 && rank < ranks, "join is for non-root ranks");
+        let (tx, events) = channel();
+        let listener = TcpListener::bind(loopback(0))?;
+        let my_port = listener.local_addr()?.port();
+        let mut to_root = TcpStream::connect(root)?;
+        to_root.set_nodelay(true)?;
+        write_frame(&mut to_root, FrameKind::Hello, &hello_payload(rank, my_port))?;
+        let (kind, table) = read_frame(&mut to_root)?
+            .ok_or_else(|| Error::Wire("root hung up before peers table".into()))?;
+        if kind != FrameKind::Peers {
+            return Err(Error::Wire(format!("expected peers table from root, got {kind:?}")));
+        }
+        if table.len() % 10 != 0 {
+            return Err(Error::Wire(format!("peers table has odd length {}", table.len())));
+        }
+        let mut addrs: Vec<Option<SocketAddr>> = (0..ranks).map(|_| None).collect();
+        for rec in table.chunks_exact(10) {
+            let r = u32::from_le_bytes([rec[0], rec[1], rec[2], rec[3]]) as usize;
+            let ip = Ipv4Addr::from(u32::from_le_bytes([rec[4], rec[5], rec[6], rec[7]]));
+            let port = u16::from_le_bytes([rec[8], rec[9]]);
+            if r == 0 || r >= ranks {
+                return Err(Error::Wire(format!("peers table names bad rank {r}")));
+            }
+            addrs[r] = Some(SocketAddr::V4(SocketAddrV4::new(ip, port)));
+        }
+        let mut streams: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        streams[0] = Some(to_root);
+        // Dial every lower non-root rank; they are already listening.
+        for r in 1..rank {
+            let addr = addrs[r]
+                .ok_or_else(|| Error::Wire(format!("peers table missing rank {r}")))?;
+            let mut s = TcpStream::connect(addr)?;
+            s.set_nodelay(true)?;
+            write_frame(&mut s, FrameKind::Hello, &hello_payload(rank, my_port))?;
+            streams[r] = Some(s);
+        }
+        // Accept every higher rank (identified by its Hello).
+        for _ in rank + 1..ranks {
+            let (mut s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let (kind, payload) = read_frame(&mut s)?
+                .ok_or_else(|| Error::Wire("peer hung up before hello".into()))?;
+            if kind != FrameKind::Hello {
+                return Err(Error::Wire(format!("expected hello from peer, got {kind:?}")));
+            }
+            let (r, _port) = parse_hello(&payload)?;
+            if r <= rank || r >= ranks || streams[r].is_some() {
+                return Err(Error::Wire(format!("bad or duplicate peer rank {r}")));
+            }
+            streams[r] = Some(s);
+        }
+        Self::assemble(rank, ranks, streams, tx, events)
+    }
+
+    fn assemble(
+        rank: usize,
+        ranks: usize,
+        streams: Vec<Option<TcpStream>>,
+        tx: Sender<NetEvent>,
+        events: Receiver<NetEvent>,
+    ) -> Result<Self> {
+        let mut peers = Vec::with_capacity(ranks);
+        let mut readers = Vec::new();
+        for (r, s) in streams.into_iter().enumerate() {
+            match s {
+                Some(s) if r != rank => {
+                    let reader = s.try_clone()?;
+                    let txc = tx.clone();
+                    readers.push(std::thread::spawn(move || reader_loop(reader, r, txc)));
+                    peers.push(Peer { stream: Some(Mutex::new(s)) });
+                }
+                _ => peers.push(Peer { stream: None }),
+            }
+        }
+        Ok(Mesh {
+            rank,
+            ranks,
+            peers,
+            events,
+            tx,
+            stash: VecDeque::new(),
+            lost: vec![None; ranks],
+            readers,
+        })
+    }
+
+    /// Sends one frame to `to`.  Callable from any thread holding
+    /// `&Mesh` (writes serialize on the per-peer mutex).
+    pub fn send(&self, to: usize, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        let peer = self.peers.get(to).and_then(|p| p.stream.as_ref()).ok_or_else(|| {
+            Error::Wire(format!("rank {} has no link to rank {to}", self.rank))
+        })?;
+        let mut s = peer.lock().expect("peer write lock poisoned");
+        write_frame(&mut s, kind, payload).map_err(|e| Error::PeerLost {
+            rank: to,
+            detail: format!("send failed: {e}"),
+        })
+    }
+
+    /// Broadcasts one frame to every other rank.
+    pub fn broadcast(&self, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        for r in 0..self.ranks {
+            if r != self.rank {
+                self.send(r, kind, payload)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Next event, blocking.  Drains the requeue stash first.  `Err`
+    /// only if every reader thread is gone *and* the stash is empty —
+    /// which cannot happen before all peers said `Bye` or were
+    /// reported `Lost`, so callers treat it as a protocol bug.
+    pub fn recv(&mut self) -> Result<NetEvent> {
+        if let Some(ev) = self.stash.pop_front() {
+            return Ok(self.note_loss(ev));
+        }
+        self.events
+            .recv()
+            .map(|ev| self.note_loss(ev))
+            .map_err(|_| Error::Wire("mesh event channel closed with frames outstanding".into()))
+    }
+
+    /// Non-blocking poll; `None` when nothing is pending.
+    pub fn try_recv(&mut self) -> Option<NetEvent> {
+        if let Some(ev) = self.stash.pop_front() {
+            return Some(self.note_loss(ev));
+        }
+        self.events.try_recv().ok().map(|ev| self.note_loss(ev))
+    }
+
+    fn note_loss(&mut self, ev: NetEvent) -> NetEvent {
+        if let NetEvent::Lost { rank, detail } = &ev {
+            self.lost[*rank].get_or_insert_with(|| detail.clone());
+        }
+        ev
+    }
+
+    /// Puts an event back for a later phase (e.g. a `Digest` that
+    /// arrived while the factorization run was still in flight).
+    pub fn requeue(&mut self, ev: NetEvent) {
+        self.stash.push_back(ev);
+    }
+
+    /// Blocks until a frame of `want` arrives from `from`, requeueing
+    /// everything else.  `Lost { from }` aborts with
+    /// [`Error::PeerLost`]; losses of other peers are requeued so the
+    /// caller's main loop still sees them.
+    pub fn expect_from(&mut self, from: usize, want: FrameKind) -> Result<Vec<u8>> {
+        if let Some(detail) = &self.lost[from] {
+            return Err(Error::PeerLost { rank: from, detail: detail.clone() });
+        }
+        let mut skipped = Vec::new();
+        let out = loop {
+            match self.recv()? {
+                NetEvent::Frame { from: f, kind, payload } if f == from && kind == want => {
+                    break payload;
+                }
+                NetEvent::Lost { rank, detail } if rank == from => {
+                    for ev in skipped {
+                        self.requeue(ev);
+                    }
+                    return Err(Error::PeerLost { rank, detail });
+                }
+                other => skipped.push(other),
+            }
+        };
+        for ev in skipped {
+            self.requeue(ev);
+        }
+        Ok(out)
+    }
+
+    /// Orderly shutdown: `Bye` to all peers, then tear the sockets down
+    /// and join reader threads.  Shutting both directions (not just
+    /// write) matters: a reader blocked on a peer that has not yet said
+    /// its own `Bye` would otherwise keep this call from returning.
+    /// `Bye` was already written and flushed, so the peer still
+    /// receives it ahead of the FIN.
+    pub fn shutdown(mut self) {
+        for r in 0..self.ranks {
+            if r != self.rank {
+                let _ = self.send(r, FrameKind::Bye, &[]);
+            }
+        }
+        for p in &mut self.peers {
+            if let Some(m) = p.stream.take() {
+                let s = m.into_inner().expect("peer write lock poisoned");
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        drop(self.tx);
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawns a root mesh on an ephemeral loopback port and returns it plus
+/// the address joiners must dial.  The listener is bound *before*
+/// children are spawned so no joiner can race the accept loop.
+pub fn bind_root() -> Result<(TcpListener, SocketAddr)> {
+    let listener = TcpListener::bind(loopback(0))?;
+    let addr = listener.local_addr()?;
+    Ok((listener, addr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_mesh(ranks: usize) -> Vec<Mesh> {
+        let (listener, addr) = bind_root().unwrap();
+        let joiners: Vec<_> = (1..ranks)
+            .map(|r| std::thread::spawn(move || Mesh::join(r, ranks, addr).unwrap()))
+            .collect();
+        let root = Mesh::root(listener, ranks).unwrap();
+        let mut meshes = vec![root];
+        for j in joiners {
+            meshes.push(j.join().unwrap());
+        }
+        meshes.sort_by_key(|m| m.rank);
+        meshes
+    }
+
+    #[test]
+    fn rendezvous_builds_a_full_mesh_and_frames_roundtrip() {
+        let mut meshes = full_mesh(4);
+        // every ordered pair exchanges a tagged Data frame
+        for from in 0..4usize {
+            for to in 0..4usize {
+                if from != to {
+                    let payload = encode_data(TileId::new(from, to), &[from as u8, to as u8]);
+                    meshes[from].send(to, FrameKind::Data, &payload).unwrap();
+                }
+            }
+        }
+        for to in 0..4usize {
+            let mut seen = vec![false; 4];
+            for _ in 0..3 {
+                match meshes[to].recv().unwrap() {
+                    NetEvent::Frame { from, kind, payload } => {
+                        assert_eq!(kind, FrameKind::Data);
+                        let (t, bytes) = decode_data(&payload).unwrap();
+                        assert_eq!((t.i, t.j), (from, to));
+                        assert_eq!(bytes, [from as u8, to as u8]);
+                        seen[from] = true;
+                    }
+                    other => panic!("unexpected event at rank {to}: {other:?}"),
+                }
+            }
+            assert!(seen.iter().enumerate().all(|(r, s)| *s || r == to));
+        }
+        for m in meshes {
+            m.shutdown();
+        }
+    }
+
+    #[test]
+    fn requeue_preserves_out_of_phase_frames() {
+        let mut meshes = full_mesh(2);
+        meshes[1].send(0, FrameKind::Digest, &7u64.to_le_bytes()).unwrap();
+        meshes[1].send(0, FrameKind::Stats, &[1, 2, 3]).unwrap();
+        // root is "still in the run": it wants Stats but Digest arrives first
+        let stats = meshes[0].expect_from(1, FrameKind::Stats).unwrap();
+        assert_eq!(stats, [1, 2, 3]);
+        // the digest was requeued, not dropped
+        match meshes[0].recv().unwrap() {
+            NetEvent::Frame { from: 1, kind: FrameKind::Digest, payload } => {
+                assert_eq!(payload, 7u64.to_le_bytes());
+            }
+            other => panic!("digest lost: {other:?}"),
+        }
+        let root = meshes.remove(0);
+        root.shutdown();
+        meshes.remove(0).shutdown();
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_lost_not_a_wedge() {
+        let mut meshes = full_mesh(2);
+        let dead = meshes.remove(1);
+        // drop rank 1 without a Bye: raw socket teardown
+        for p in &dead.peers {
+            if let Some(m) = p.stream.as_ref() {
+                let s = m.lock().unwrap();
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        match meshes[0].recv().unwrap() {
+            NetEvent::Lost { rank: 1, .. } => {}
+            other => panic!("expected Lost {{ rank: 1 }}, got {other:?}"),
+        }
+        let err = meshes[0].expect_from(1, FrameKind::Digest).unwrap_err();
+        assert!(matches!(err, Error::PeerLost { rank: 1, .. }), "{err}");
+    }
+
+    #[test]
+    fn orderly_bye_is_not_a_loss() {
+        let mut meshes = full_mesh(2);
+        let peer = meshes.remove(1);
+        peer.shutdown();
+        match meshes[0].recv().unwrap() {
+            NetEvent::Frame { from: 1, kind: FrameKind::Bye, .. } => {}
+            other => panic!("expected Bye from rank 1, got {other:?}"),
+        }
+        assert!(meshes[0].try_recv().is_none(), "no spurious Lost after Bye");
+    }
+
+    #[test]
+    fn corrupt_frame_kind_is_a_wire_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // valid length, bogus kind byte 99
+            s.write_all(&[0, 0, 0, 0, 99]).unwrap();
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        client.join().unwrap();
+        let err = read_frame(&mut server).unwrap_err();
+        assert!(matches!(err, Error::Wire(_)), "{err}");
+
+        // absurd length prefix is rejected before allocating
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&[0xff, 0xff, 0xff, 0xff, 3]).unwrap();
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        client.join().unwrap();
+        let err = read_frame(&mut server).unwrap_err();
+        assert!(matches!(err, Error::Wire(_)), "{err}");
+    }
+
+    #[test]
+    fn dead_peer_test_shutdown_is_clean() {
+        // regression guard: dropping a Mesh without shutdown() must not
+        // hang the process (reader threads are detached by drop)
+        let meshes = full_mesh(2);
+        drop(meshes);
+    }
+}

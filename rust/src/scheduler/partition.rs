@@ -1,0 +1,443 @@
+//! Owner partitioning of a global factorization plan — the distributed
+//! runtime's graph layer.
+//!
+//! Every rank walks the *same* deterministic global task graph in
+//! program order and keeps the subsequence it executes: a task runs at
+//! the owner of the tile it writes (2D block-cyclic ownership, the
+//! [`ClusterModel::owner`] map).  Two pseudo-tasks splice the wire into
+//! the STF dependency inference:
+//!
+//! * a **Send** (`Access::Read` on the tile) at the owner, placed
+//!   immediately after the tile's last native write — exactly one per
+//!   (tile, consumer-rank) pair, so the Send list *is* the wire message
+//!   census;
+//! * a **Recv** (`Access::Write` on the tile) at each remote consumer,
+//!   placed at the same program position — local STF inference then
+//!   derives the RAW edges to the consumers and the WAR edges that keep
+//!   a frame install from racing any earlier local reader, with no
+//!   special cases in the scheduler.
+//!
+//! Conversion/decode *view* tasks (scratch materialization at precision
+//! boundaries) replicate at every receiving rank: scratch never crosses
+//! the wire — only native storage does — so each rank rebuilds the
+//! views it needs from the received native bytes.
+//!
+//! This layer relies on (and verifies) the **final-version property**
+//! of the dense factorization plans: every cross-rank read sees the
+//! tile's final native version (panel tiles are read remotely only
+//! after their trsm, diagonals after their potrf; the read-modify-write
+//! trailing updates all stay at the owner).  Each tile therefore ships
+//! at most one frame per consumer rank.  A plan violating the property
+//! is rejected with [`Error::PlanMismatch`] instead of silently
+//! shipping a stale version.
+
+use std::collections::HashMap;
+
+use super::distributed::ClusterModel;
+use super::graph::{Access, ResourceId, TaskGraph, TaskIdx};
+use crate::cholesky::{KernelCall, SizedCall};
+use crate::error::{Error, Result};
+use crate::tile::{Precision, TileId};
+
+/// Payload of a rank-local distributed task graph.
+#[derive(Clone, Copy, Debug)]
+pub enum DistCall {
+    /// A factorization codelet from the global plan.
+    Kernel(SizedCall),
+    /// Serialize the tile's native buffer and ship it to rank `to`.
+    Send { tile: TileId, to: usize },
+    /// Install the frame received from rank `from` into the tile slot.
+    /// `slot` indexes the run's frame stash ([`LocalPlan::recvs`]).
+    Recv { tile: TileId, from: usize, slot: usize },
+}
+
+/// One rank's executable share of a global plan.
+pub struct LocalPlan {
+    /// This rank.
+    pub rank: usize,
+    /// Total ranks in the run.
+    pub ranks: usize,
+    /// The rank-local task graph (kernels + sends + recvs).
+    pub graph: TaskGraph<DistCall>,
+    /// Incoming frames by stash slot: `(tile, producing rank)`.
+    pub recvs: Vec<(TileId, usize)>,
+    /// Tile -> local Recv task index (the progress engine's release
+    /// table: a landed frame releases this task's network predecessor).
+    pub recv_task: HashMap<TileId, TaskIdx>,
+    /// Outgoing `(tile, consumer rank)` pairs in program order.
+    pub sends: Vec<(TileId, usize)>,
+    /// Global wire census: frames shipped per tile across *all* ranks
+    /// (identical on every rank — it is a pure ownership/DAG property).
+    pub census: HashMap<TileId, usize>,
+    /// Local kernel task count (diagnostics / memory reports).
+    pub kernels: usize,
+}
+
+impl LocalPlan {
+    /// Sparse `(task, extra predecessors)` list for
+    /// `Scheduler::run_external`: every Recv waits on one network
+    /// predecessor released when its frame lands.
+    pub fn network_pending(&self) -> Vec<(TaskIdx, usize)> {
+        let mut v: Vec<(TaskIdx, usize)> = self.recv_task.values().map(|&t| (t, 1)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Total frames in the global census.
+    pub fn total_messages(&self) -> usize {
+        self.census.values().sum()
+    }
+}
+
+/// Scratch-view tasks: they materialize conversion scratch for an
+/// already-written native tile and carry a `Write` access only for STF
+/// ordering.  They replicate at receiving ranks instead of shipping
+/// scratch over the wire.
+fn is_view(call: &KernelCall) -> bool {
+    matches!(
+        call,
+        KernelCall::DemoteDiag { .. }
+            | KernelCall::DemoteTile { .. }
+            | KernelCall::PromoteTile { .. }
+            | KernelCall::DecodeBf16 { .. }
+            | KernelCall::DecodeF16 { .. }
+            | KernelCall::DropScratch { .. }
+    )
+}
+
+fn tile_of(res: ResourceId) -> Result<TileId> {
+    match res {
+        ResourceId::Tile(t) => Ok(t),
+        other => Err(Error::PlanMismatch(format!(
+            "distributed partitioning handles tile resources only, found {other:?} \
+             (pipeline epilogues are not distributed yet)"
+        ))),
+    }
+}
+
+/// Executing rank of a task: owner of its first written tile (the same
+/// placement rule the analytic simulator uses), falling back to the
+/// first access for read-only tasks.
+fn exec_rank(
+    accesses: &[(ResourceId, Access)],
+    cluster: &ClusterModel,
+) -> Result<usize> {
+    let res = accesses
+        .iter()
+        .find(|(_, m)| *m == Access::Write)
+        .map(|(r, _)| *r)
+        .unwrap_or(accesses[0].0);
+    Ok(cluster.owner(tile_of(res)?))
+}
+
+/// Partition the global `graph` for `me`, verifying the final-version
+/// shipping property along the way.  Deterministic: every rank derives
+/// the same global schedule and keeps its own slice.
+pub fn partition_plan(
+    graph: &TaskGraph<SizedCall>,
+    cluster: &ClusterModel,
+    me: usize,
+) -> Result<LocalPlan> {
+    let ranks = cluster.nodes;
+    if me >= ranks {
+        return Err(Error::InvalidArgument(format!(
+            "rank {me} out of range for {ranks} ranks"
+        )));
+    }
+    let n = graph.len();
+
+    // pass 1: executing rank and last native write per tile
+    let mut xr = Vec::with_capacity(n);
+    let mut last_native_write: HashMap<TileId, usize> = HashMap::new();
+    for idx in 0..n {
+        let task = graph.task(idx);
+        match task.payload.call {
+            KernelCall::DecompressLr { .. }
+            | KernelCall::CompressLr { .. }
+            | KernelCall::ResolvePanel { .. } => {
+                return Err(Error::PlanMismatch(format!(
+                    "distributed partitioning does not support {:?} plans yet",
+                    task.payload.call.name()
+                )));
+            }
+            _ => {}
+        }
+        let r = exec_rank(&task.accesses, cluster)?;
+        xr.push(r);
+        if !is_view(&task.payload.call) {
+            for &(res, mode) in &task.accesses {
+                if mode == Access::Write {
+                    last_native_write.insert(tile_of(res)?, idx);
+                }
+            }
+        }
+    }
+
+    // pass 2: remote reader ranks per tile, with the final-version check
+    let mut remote_readers: HashMap<TileId, Vec<usize>> = HashMap::new();
+    for idx in 0..n {
+        let task = graph.task(idx);
+        for &(res, mode) in &task.accesses {
+            if mode != Access::Read {
+                continue;
+            }
+            let t = tile_of(res)?;
+            let owner = cluster.owner(t);
+            if xr[idx] == owner {
+                continue;
+            }
+            let Some(&lw) = last_native_write.get(&t) else {
+                return Err(Error::PlanMismatch(format!(
+                    "tile ({}, {}) is read remotely but never written in this plan",
+                    t.i, t.j
+                )));
+            };
+            if idx <= lw {
+                return Err(Error::PlanMismatch(format!(
+                    "task {idx} reads tile ({}, {}) remotely before its last native \
+                     write (task {lw}): the plan violates final-version shipping",
+                    t.i, t.j
+                )));
+            }
+            let readers = remote_readers.entry(t).or_default();
+            if !readers.contains(&xr[idx]) {
+                readers.push(xr[idx]);
+            }
+        }
+    }
+
+    // deterministic shipping schedule: frames are emitted right after
+    // the tile's last native write, consumers in ascending rank order
+    let mut ship_after: HashMap<usize, Vec<(TileId, usize, Vec<usize>)>> = HashMap::new();
+    let mut census: HashMap<TileId, usize> = HashMap::new();
+    for (&t, readers) in &remote_readers {
+        let mut to = readers.clone();
+        to.sort_unstable();
+        census.insert(t, to.len());
+        let lw = last_native_write[&t];
+        ship_after.entry(lw).or_default().push((t, cluster.owner(t), to));
+    }
+    for ships in ship_after.values_mut() {
+        ships.sort_unstable_by_key(|(t, _, _)| (t.j, t.i));
+    }
+
+    // pass 3: emit the rank-local graph in global program order
+    let mut local = TaskGraph::new();
+    let mut recvs: Vec<(TileId, usize)> = Vec::new();
+    let mut recv_task: HashMap<TileId, TaskIdx> = HashMap::new();
+    let mut sends: Vec<(TileId, usize)> = Vec::new();
+    let mut kernels = 0usize;
+    for idx in 0..n {
+        let task = graph.task(idx);
+        let call = &task.payload.call;
+        let runs_here = if xr[idx] == me {
+            true
+        } else if is_view(call) {
+            // replicate scratch-view tasks at ranks that received the
+            // underlying tile; their single Write access names it
+            debug_assert!(
+                task.accesses.len() == 1 && task.accesses[0].1 == Access::Write,
+                "view task {idx} must carry exactly one Write access"
+            );
+            let t = tile_of(task.accesses[0].0)?;
+            remote_readers.get(&t).is_some_and(|r| r.contains(&me))
+                && last_native_write.get(&t).is_some_and(|&lw| idx > lw)
+        } else {
+            false
+        };
+        if runs_here {
+            local.submit(DistCall::Kernel(task.payload), task.accesses.clone());
+            kernels += 1;
+        }
+        if let Some(ships) = ship_after.get(&idx) {
+            for (t, owner, to_ranks) in ships {
+                if *owner == me {
+                    for &to in to_ranks {
+                        local.submit(
+                            DistCall::Send { tile: *t, to },
+                            vec![(*t, Access::Read)],
+                        );
+                        sends.push((*t, to));
+                    }
+                } else if to_ranks.contains(&me) {
+                    let slot = recvs.len();
+                    let tidx = local.submit(
+                        DistCall::Recv { tile: *t, from: *owner, slot },
+                        vec![(*t, Access::Write)],
+                    );
+                    recvs.push((*t, *owner));
+                    recv_task.insert(*t, tidx);
+                }
+            }
+        }
+    }
+
+    // PrecisionFrontier cheapness: kernels rank by stored precision as
+    // in the single-process plan; wire tasks take the cheapest rank so
+    // ties at equal height favor moving bytes (remote ranks are waiting)
+    local.compute_cheapness(|dc| match dc {
+        DistCall::Kernel(sc) => match sc.call.precision() {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+            Precision::F16 => 2,
+            Precision::Bf16 => 3,
+        },
+        DistCall::Send { .. } | DistCall::Recv { .. } => 3,
+    });
+
+    Ok(LocalPlan {
+        rank: me,
+        ranks,
+        graph: local,
+        recvs,
+        recv_task,
+        sends,
+        census,
+        kernels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cholesky::{CholeskyPlan, Variant};
+    use crate::scheduler::distributed::simulate_ranked;
+    use crate::tile::PrecisionMap;
+
+    fn plan(p: usize, variant: Variant, fused: bool) -> CholeskyPlan {
+        let opts = crate::cholesky::PlanOptions { fuse_gemm: fused };
+        let map = variant.precision_map(p, None).unwrap();
+        CholeskyPlan::build_with_opts(p, 32, variant, map, false, opts)
+    }
+
+    fn partition_all(
+        g: &TaskGraph<SizedCall>,
+        cluster: &ClusterModel,
+    ) -> Vec<LocalPlan> {
+        (0..cluster.nodes).map(|r| partition_plan(g, cluster, r).unwrap()).collect()
+    }
+
+    #[test]
+    fn every_kernel_task_runs_exactly_once() {
+        for ranks in [2, 4] {
+            let cp = plan(6, Variant::MixedPrecision { diag_thick: 2 }, false);
+            let cluster = ClusterModel::shaheen(ranks);
+            let parts = partition_all(&cp.graph, &cluster);
+            // views replicate, so count only non-view kernels
+            let native_total = cp
+                .graph
+                .tasks()
+                .iter()
+                .filter(|t| !is_view(&t.payload.call))
+                .count();
+            let mut native_local = 0usize;
+            for part in &parts {
+                for t in part.graph.tasks() {
+                    if let DistCall::Kernel(sc) = &t.payload {
+                        if !is_view(&sc.call) {
+                            native_local += 1;
+                        }
+                    }
+                }
+            }
+            assert_eq!(native_local, native_total, "ranks={ranks}");
+        }
+    }
+
+    #[test]
+    fn sends_and_recvs_pair_up_across_ranks() {
+        let cp = plan(5, Variant::ThreePrecision { dp_thick: 1, sp_thick: 2 }, false);
+        let cluster = ClusterModel::shaheen(4);
+        let parts = partition_all(&cp.graph, &cluster);
+        let mut sent: Vec<(TileId, usize, usize)> = Vec::new(); // (tile, from, to)
+        let mut received: Vec<(TileId, usize, usize)> = Vec::new();
+        for part in &parts {
+            for &(t, to) in &part.sends {
+                sent.push((t, part.rank, to));
+            }
+            for &(t, from) in &part.recvs {
+                received.push((t, from, part.rank));
+            }
+        }
+        sent.sort_unstable_by_key(|&(t, f, to)| (t.i, t.j, f, to));
+        received.sort_unstable_by_key(|&(t, f, to)| (t.i, t.j, f, to));
+        assert_eq!(sent, received);
+        assert!(!sent.is_empty(), "a 4-rank partition of p=5 must communicate");
+        // census is identical on every rank and equals the send multiset
+        for part in &parts {
+            assert_eq!(part.census, parts[0].census);
+        }
+        let census_total: usize = parts[0].census.values().sum();
+        assert_eq!(census_total, sent.len());
+    }
+
+    /// The satellite check: the partition's deterministic wire census
+    /// must equal the analytic simulator's per-tile message census on
+    /// the same graph and grid, for both unfused and fused plans.
+    #[test]
+    fn census_matches_analytic_simulator() {
+        for ranks in [2, 4] {
+            for fused in [false, true] {
+                for variant in [
+                    Variant::FullDp,
+                    Variant::MixedPrecision { diag_thick: 2 },
+                    Variant::FourPrecision { dp_thick: 1, sp_thick: 2, f16_thick: 3 },
+                ] {
+                    let cp = plan(6, variant, fused);
+                    let cluster = ClusterModel::shaheen(ranks);
+                    let part = partition_plan(&cp.graph, &cluster, 0).unwrap();
+                    let rep = simulate_ranked(&cp.graph, &cluster, 32, &cp.map, None);
+                    assert_eq!(
+                        part.census, rep.per_tile_messages,
+                        "ranks={ranks} fused={fused} variant={variant:?}"
+                    );
+                    assert_eq!(part.total_messages(), rep.messages);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recv_tasks_are_write_roots_gated_by_network_pending() {
+        let cp = plan(4, Variant::MixedPrecision { diag_thick: 1 }, false);
+        let cluster = ClusterModel::shaheen(2);
+        for part in partition_all(&cp.graph, &cluster) {
+            let gating = part.network_pending();
+            assert_eq!(gating.len(), part.recvs.len());
+            for (idx, extra) in gating {
+                assert_eq!(extra, 1);
+                assert!(matches!(part.graph.task(idx).payload, DistCall::Recv { .. }));
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_partition_is_the_whole_plan_with_no_wire() {
+        let cp = plan(4, Variant::MixedPrecision { diag_thick: 2 }, false);
+        let cluster = ClusterModel::shaheen(1);
+        let part = partition_plan(&cp.graph, &cluster, 0).unwrap();
+        assert_eq!(part.graph.len(), cp.graph.len());
+        assert!(part.sends.is_empty() && part.recvs.is_empty());
+        assert!(part.census.is_empty());
+    }
+
+    #[test]
+    fn tlr_plans_are_rejected() {
+        let p = 4;
+        let variant = Variant::Tlr { tolerance: 1e-4, max_rank: 8 };
+        // TLR convention: F16 marks compressed tiles, so this map forces
+        // Decompress/Compress tasks into the plan
+        let map = PrecisionMap::from_fn(
+            p,
+            |i, j| if i == j { Precision::F64 } else { Precision::F16 },
+        );
+        let cp = CholeskyPlan::build_tlr(p, 32, variant, map);
+        let cluster = ClusterModel::shaheen(2);
+        match partition_plan(&cp.graph, &cluster, 0) {
+            Err(Error::PlanMismatch(msg)) => {
+                assert!(msg.contains("not support"), "{msg}")
+            }
+            other => panic!("expected PlanMismatch, got {:?}", other.map(|p| p.graph.len())),
+        }
+    }
+}

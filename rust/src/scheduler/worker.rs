@@ -275,6 +275,100 @@ fn stuck_task_diagnostic(pending: &[AtomicUsize]) -> String {
     detail
 }
 
+/// Per-run priority oracle shared by the worker hot path and
+/// [`ExternalHandle::release`].  CP/PF keys depend only on the graph, so
+/// they are precomputed once; Fifo/Lifo keys consume the run's global
+/// enqueue counter at release time.
+struct KeyState {
+    policy: SchedulingPolicy,
+    /// Precomputed CriticalPath/PrecisionFrontier keys (empty otherwise).
+    static_keys: Vec<i64>,
+}
+
+impl KeyState {
+    fn new<P>(policy: SchedulingPolicy, g: &TaskGraph<P>) -> Self {
+        let static_keys = match policy {
+            SchedulingPolicy::CriticalPath => {
+                (0..g.len()).map(|i| g.task(i).height as i64).collect()
+            }
+            // lexicographic (height, cheapness): cheapness < 4 always,
+            // so height strictly dominates
+            SchedulingPolicy::PrecisionFrontier => (0..g.len())
+                .map(|i| {
+                    let t = g.task(i);
+                    (t.height as i64) * 4 + (t.cheapness.min(3)) as i64
+                })
+                .collect(),
+            SchedulingPolicy::Fifo | SchedulingPolicy::Lifo => Vec::new(),
+        };
+        Self { policy, static_keys }
+    }
+
+    fn key(&self, st: &RunState, idx: TaskIdx) -> i64 {
+        match self.policy {
+            SchedulingPolicy::Fifo => -st.seq.fetch_add(1, Ordering::Relaxed),
+            SchedulingPolicy::Lifo => st.seq.fetch_add(1, Ordering::Relaxed),
+            _ => self.static_keys[idx],
+        }
+    }
+}
+
+/// Control surface handed to [`Scheduler::run_external`]'s progress
+/// closure — the inter-rank tier of the two-level scheduler.  The
+/// closure runs on its own thread next to the worker pool and uses this
+/// handle to release externally-gated tasks (e.g. a `Recv` whose frame
+/// just landed), fail the run on a transport loss, and detect
+/// completion.  Deliberately non-generic over the task payload so
+/// network drivers need not name the graph type.
+pub struct ExternalHandle<'a> {
+    st: &'a RunState,
+    pending: &'a [AtomicUsize],
+    keys: &'a KeyState,
+    workers: usize,
+    /// Round-robin target so released tasks spread over the pool.
+    rr: AtomicUsize,
+}
+
+impl ExternalHandle<'_> {
+    /// Drops one external dependency of `idx`; when the last one (and
+    /// every graph edge) is satisfied, the task enters a worker queue.
+    /// No-op after an abort — the drain discards queued work anyway.
+    pub fn release(&self, idx: TaskIdx) {
+        if self.st.abort.load(Ordering::Acquire) {
+            return;
+        }
+        if self.pending[idx].fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.st.outstanding.fetch_add(1, Ordering::AcqRel);
+            let key = self.keys.key(self.st, idx);
+            let w = self.rr.fetch_add(1, Ordering::Relaxed) % self.workers;
+            self.st.push(w, ReadyTask { key, idx });
+        }
+    }
+
+    /// Aborts the run with `e` (first error wins).  Wakes the pool even
+    /// when no task is in flight, so a run blocked entirely on external
+    /// releases terminates instead of wedging.
+    pub fn fail(&self, e: Error) {
+        let mut f = self.st.failed.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e);
+        }
+        drop(f);
+        self.st.abort.store(true, Ordering::SeqCst);
+        if self.st.outstanding.load(Ordering::SeqCst) == 0 {
+            // nothing in flight: no worker will run the finish check
+            self.st.finish();
+        }
+    }
+
+    /// True once the run has terminated (success or abort).  The
+    /// progress closure must return shortly after this flips — the
+    /// scoped pool joins it.
+    pub fn finished(&self) -> bool {
+        self.st.done.load(Ordering::Acquire)
+    }
+}
+
 /// Dataflow executor.  One instance may run many graphs.
 pub struct Scheduler {
     cfg: SchedulerConfig,
@@ -294,20 +388,6 @@ impl Scheduler {
         &self.cfg
     }
 
-    fn key_for<P>(&self, g: &TaskGraph<P>, idx: TaskIdx, seq: i64) -> i64 {
-        match self.cfg.policy {
-            SchedulingPolicy::Fifo => -seq,
-            SchedulingPolicy::Lifo => seq,
-            SchedulingPolicy::CriticalPath => g.task(idx).height as i64,
-            // lexicographic (height, cheapness): cheapness < 4 always,
-            // so height strictly dominates
-            SchedulingPolicy::PrecisionFrontier => {
-                let t = g.task(idx);
-                (t.height as i64) * 4 + (t.cheapness.min(3)) as i64
-            }
-        }
-    }
-
     /// Execute every task in `graph` respecting dependencies.
     ///
     /// `exec(idx, payload)` runs on worker threads; the first error stops
@@ -318,6 +398,44 @@ impl Scheduler {
     where
         P: Send + Sync,
         F: Fn(TaskIdx, &P) -> Result<()> + Send + Sync,
+    {
+        self.run_inner(graph, &[], exec, None::<fn(&ExternalHandle<'_>)>)
+    }
+
+    /// [`Scheduler::run`] with external dependencies: each
+    /// `(task, count)` in `extra_pending` adds `count` dependencies that
+    /// no graph edge will ever satisfy — only the `progress` closure
+    /// can, via [`ExternalHandle::release`].  `progress` runs on its own
+    /// thread beside the worker pool for the whole run (the inter-rank
+    /// tier of the distributed runtime's two-level scheduler: it drives
+    /// the network and releases `Recv` tasks as frames land) and must
+    /// return promptly once [`ExternalHandle::finished`] flips.
+    pub fn run_external<P, F, G>(
+        &self,
+        graph: &mut TaskGraph<P>,
+        extra_pending: &[(TaskIdx, usize)],
+        exec: F,
+        progress: G,
+    ) -> Result<ExecutionTrace>
+    where
+        P: Send + Sync,
+        F: Fn(TaskIdx, &P) -> Result<()> + Send + Sync,
+        G: FnOnce(&ExternalHandle<'_>) + Send,
+    {
+        self.run_inner(graph, extra_pending, exec, Some(progress))
+    }
+
+    fn run_inner<P, F, G>(
+        &self,
+        graph: &mut TaskGraph<P>,
+        extra_pending: &[(TaskIdx, usize)],
+        exec: F,
+        progress: Option<G>,
+    ) -> Result<ExecutionTrace>
+    where
+        P: Send + Sync,
+        F: Fn(TaskIdx, &P) -> Result<()> + Send + Sync,
+        G: FnOnce(&ExternalHandle<'_>) + Send,
     {
         if graph.is_empty() {
             return Ok(ExecutionTrace::default());
@@ -333,15 +451,22 @@ impl Scheduler {
         let pending: Vec<AtomicUsize> = (0..n)
             .map(|i| AtomicUsize::new(graph.task(i).num_predecessors))
             .collect();
+        for &(idx, count) in extra_pending {
+            pending[idx].fetch_add(count, Ordering::Relaxed);
+        }
+        let keys = KeyState::new(self.cfg.policy, graph);
 
         let st = RunState::new(workers);
         {
-            // seed roots round-robin so independent work starts spread out
-            let roots = graph.roots();
+            // seed roots round-robin so independent work starts spread
+            // out — recomputed from the merged counters, NOT
+            // graph.roots(): an externally-gated task with no graph
+            // predecessors is not ready until its frames land
+            let roots: Vec<TaskIdx> =
+                (0..n).filter(|&i| pending[i].load(Ordering::Relaxed) == 0).collect();
             st.outstanding.store(roots.len(), Ordering::Relaxed);
             for (r, idx) in roots.into_iter().enumerate() {
-                let seq = st.seq.fetch_add(1, Ordering::Relaxed);
-                let key = self.key_for(graph, idx, seq);
+                let key = keys.key(&st, idx);
                 st.queues[r % workers].lock().unwrap().push(ReadyTask { key, idx });
                 st.ready_count.fetch_add(1, Ordering::Relaxed);
             }
@@ -358,9 +483,22 @@ impl Scheduler {
         let pending_ref = &pending;
         let spans_ref = &spans;
         let faults_ref = &faults;
+        let keys_ref = &keys;
         let trace_on = self.cfg.trace;
 
         std::thread::scope(|scope| {
+            if let Some(progress) = progress {
+                // inter-rank tier: runs beside the pool for the whole
+                // run; ExternalHandle::finished tells it when to exit
+                let handle = ExternalHandle {
+                    st: st_ref,
+                    pending: pending_ref,
+                    keys: keys_ref,
+                    workers,
+                    rr: AtomicUsize::new(0),
+                };
+                scope.spawn(move || progress(&handle));
+            }
             if let Some(dl) = self.cfg.deadline {
                 // watchdog: waits out the deadline on the park Condvar
                 // (finish() wakes it early on normal completion), then
@@ -474,8 +612,7 @@ impl Scheduler {
                                     // locally (the tile this worker just
                                     // wrote is hot in its cache)
                                     st_ref.outstanding.fetch_add(1, Ordering::AcqRel);
-                                    let seq = st_ref.seq.fetch_add(1, Ordering::Relaxed);
-                                    let key = self.key_for(graph_ref, succ, seq);
+                                    let key = keys_ref.key(st_ref, succ);
                                     st_ref.push(worker_id, ReadyTask { key, idx: succ });
                                 }
                             }
@@ -961,6 +1098,114 @@ mod tests {
         assert_eq!(SchedulingPolicy::parse("pf"), Some(SchedulingPolicy::PrecisionFrontier));
         assert_eq!(SchedulingPolicy::parse("cp"), Some(SchedulingPolicy::CriticalPath));
         assert_eq!(SchedulingPolicy::parse("bogus"), None);
+    }
+
+    /// run_external: tasks gated on external dependencies wait for the
+    /// progress closure's releases, then the run completes with every
+    /// task executed — the distributed Recv pattern in miniature.
+    #[test]
+    fn external_release_chain_completes() {
+        for policy in [
+            SchedulingPolicy::Fifo,
+            SchedulingPolicy::Lifo,
+            SchedulingPolicy::CriticalPath,
+            SchedulingPolicy::PrecisionFrontier,
+        ] {
+            let mut g: TaskGraph<usize> = TaskGraph::new();
+            // "recv" root (externally gated twice), then a local chain on it
+            g.submit(0, vec![(t(0, 0), Access::Write)]);
+            g.submit(1, vec![(t(0, 0), Access::Read), (t(1, 1), Access::Write)]);
+            g.submit(2, vec![(t(1, 1), Access::Read), (t(2, 2), Access::Write)]);
+            // an independent local task that must run without any release
+            g.submit(3, vec![(t(3, 3), Access::Write)]);
+            let order = Mutex::new(Vec::new());
+            let sched = Scheduler::new(SchedulerConfig {
+                num_workers: 2,
+                policy,
+                ..Default::default()
+            });
+            sched
+                .run_external(
+                    &mut g,
+                    &[(0, 2)],
+                    |idx, _| {
+                        order.lock().unwrap().push(idx);
+                        Ok(())
+                    },
+                    |h| {
+                        // the ungated task must be able to finish while
+                        // task 0 is still held back by its frame count
+                        h.release(0); // 1 of 2 frames landed
+                        std::thread::sleep(Duration::from_millis(5));
+                        assert!(!h.finished(), "{policy:?}: run ended before last release");
+                        h.release(0); // final frame
+                        while !h.finished() {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                    },
+                )
+                .unwrap();
+            let order = order.into_inner().unwrap();
+            assert_eq!(order.len(), 4, "{policy:?}: {order:?}");
+            let pos =
+                |x: usize| order.iter().position(|&o| o == x).unwrap();
+            assert!(pos(0) < pos(1) && pos(1) < pos(2), "{policy:?}: {order:?}");
+        }
+    }
+
+    /// run_external: a transport failure reported through
+    /// `ExternalHandle::fail` aborts the run with the typed error even
+    /// when every remaining task is blocked on releases that will never
+    /// come — no wedge, no watchdog needed.
+    #[test]
+    fn external_fail_propagates_without_wedge() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        g.submit(0, vec![(t(0, 0), Access::Write)]); // gated, never released
+        g.submit(1, vec![(t(0, 0), Access::Read), (t(1, 1), Access::Write)]);
+        let sched = Scheduler::with_workers(2);
+        let t0 = Instant::now();
+        let err = sched
+            .run_external(
+                &mut g,
+                &[(0, 1)],
+                |_, _| Ok(()),
+                |h| {
+                    h.fail(Error::PeerLost { rank: 1, detail: "connection reset".into() });
+                    while !h.finished() {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::PeerLost { rank: 1, .. }), "got {err}");
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "fail wedged: {:?}", t0.elapsed());
+    }
+
+    /// run_external with no extra pending behaves exactly like run.
+    #[test]
+    fn external_with_no_gates_matches_run() {
+        let mut g: TaskGraph<usize> = TaskGraph::new();
+        for k in 0..20 {
+            g.submit(k, vec![(t(0, 0), Access::Write)]);
+        }
+        let log = Mutex::new(Vec::new());
+        let sched = Scheduler::with_workers(4);
+        sched
+            .run_external(
+                &mut g,
+                &[],
+                |_, &p| {
+                    log.lock().unwrap().push(p);
+                    Ok(())
+                },
+                |h| {
+                    while !h.finished() {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                },
+            )
+            .unwrap();
+        assert_eq!(*log.lock().unwrap(), (0..20).collect::<Vec<_>>());
     }
 
     /// Empty graph is a no-op.

@@ -30,6 +30,7 @@ pub mod bf16;
 pub mod convert;
 pub mod dense;
 pub mod f16;
+pub mod wire;
 
 pub use bf16::{quantize_bf16, quantize_bf16_slice, BF16_EPS};
 pub use convert::{
@@ -149,6 +150,23 @@ impl PrecisionMap {
     /// stay `F64`: the potrf pivots live there.  `tolerance = 0` demotes
     /// nothing and reproduces the full-DP map.
     pub fn adaptive(tiles: &TileMatrix, tolerance: f64) -> Self {
+        let p = tiles.p();
+        let mut norms = vec![0.0; p * (p + 1) / 2];
+        for t in tiles.tile_ids() {
+            norms[t.i * (t.i + 1) / 2 + t.j] = tiles.tile_frobenius(t);
+        }
+        Self::adaptive_from_norms(p, &norms, tolerance)
+    }
+
+    /// The adaptive rule applied to an already-gathered per-tile norm
+    /// vector (lower triangle, index `i*(i+1)/2 + j`).  This is the
+    /// authority [`PrecisionMap::adaptive`] delegates to, split out so
+    /// the distributed runtime can all-gather owned-tile norms across
+    /// ranks and have every rank derive a bit-identical map: the global
+    /// `||A||_F` fold runs in column-major tile order on all paths, so
+    /// the floating-point sum is the same regardless of who computed
+    /// each norm.
+    pub fn adaptive_from_norms(p: usize, norms: &[f64], tolerance: f64) -> Self {
         // a NaN/negative tolerance would silently disable every demotion
         // comparison; fail loudly at the decision authority itself (the
         // user-facing paths validate earlier and return typed errors)
@@ -156,16 +174,21 @@ impl PrecisionMap {
             tolerance.is_finite() && tolerance >= 0.0,
             "adaptive tolerance must be finite and >= 0, got {tolerance}"
         );
-        let p = tiles.p();
+        assert_eq!(
+            norms.len(),
+            p * (p + 1) / 2,
+            "norm vector does not cover the lower triangle"
+        );
         // Frobenius norm of the full symmetric matrix: strictly-lower
-        // tiles appear twice.
+        // tiles appear twice.  Column-major fold order matches
+        // `TileMatrix::tile_ids` bit-for-bit.
         let mut total_sq = 0.0;
-        let mut norms = vec![0.0; p * (p + 1) / 2];
-        for t in tiles.tile_ids() {
-            let norm = tiles.tile_frobenius(t);
-            let sq = norm * norm;
-            norms[t.i * (t.i + 1) / 2 + t.j] = norm;
-            total_sq += if t.is_diagonal() { sq } else { 2.0 * sq };
+        for j in 0..p {
+            for i in j..p {
+                let norm = norms[i * (i + 1) / 2 + j];
+                let sq = norm * norm;
+                total_sq += if i == j { sq } else { 2.0 * sq };
+            }
         }
         let global = total_sq.sqrt();
         let scalar = p as f64;
@@ -658,6 +681,30 @@ impl TileMatrix {
         let p = n / nb;
         let count = p * (p + 1) / 2;
         let slots = (0..count).map(|_| UnsafeCell::new(TileSlot::new_f64(nb * nb))).collect();
+        let guards = (0..count).map(|_| Guard(AtomicI32::new(0))).collect();
+        Ok(Self { n, nb, p, slots, guards })
+    }
+
+    /// Allocate a tile matrix that only materializes tiles selected by
+    /// `live` — the distributed runtime's owned-tile constructor.  Every
+    /// slot exists (ids, guards, precision conversion all work), but
+    /// non-live slots hold zero-length f64 buffers: a rank pays resident
+    /// bytes only for tiles it owns, and halo tiles arrive later by
+    /// installing a received buffer into the empty slot.  `n` must be
+    /// divisible by `nb`.
+    pub fn zeros_where(n: usize, nb: usize, mut live: impl FnMut(TileId) -> bool) -> Result<Self> {
+        if n == 0 || nb == 0 || n % nb != 0 {
+            crate::invalid_arg!("n={n} must be a positive multiple of nb={nb}");
+        }
+        let p = n / nb;
+        let count = p * (p + 1) / 2;
+        let mut slots = Vec::with_capacity(count);
+        for i in 0..p {
+            for j in 0..=i {
+                let len = if live(TileId::new(i, j)) { nb * nb } else { 0 };
+                slots.push(UnsafeCell::new(TileSlot::new_f64(len)));
+            }
+        }
         let guards = (0..count).map(|_| Guard(AtomicI32::new(0))).collect();
         Ok(Self { n, nb, p, slots, guards })
     }

@@ -1,0 +1,97 @@
+//! End-to-end multi-process distributed runtime tests: real `mpchol
+//! dist` invocations, real spawned worker processes, real loopback TCP
+//! between them.  The in-crate unit tests cover the same protocol
+//! in-process; these pin the full binary path — CLI flag round-trip,
+//! worker re-invocation via `current_exe`, and the printed `DIST`
+//! summary the CI smoke job parses.
+
+use std::collections::HashMap;
+use std::process::Command;
+
+/// Run `mpchol dist <args>`, assert success, and parse the `DIST`
+/// `key=value` summary lines.
+fn run_dist(args: &[&str]) -> HashMap<String, String> {
+    let out = Command::new(env!("CARGO_BIN_EXE_mpchol"))
+        .arg("dist")
+        .args(args)
+        .output()
+        .expect("spawn mpchol");
+    assert!(
+        out.status.success(),
+        "mpchol dist {args:?} failed ({}):\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let mut kv = HashMap::new();
+    for line in stdout.lines() {
+        if let Some(rest) = line.strip_prefix("DIST ") {
+            for tok in rest.split_whitespace() {
+                if let Some((k, v)) = tok.split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                }
+            }
+        }
+    }
+    assert!(!kv.is_empty(), "no DIST summary lines in output:\n{stdout}");
+    kv
+}
+
+fn int(kv: &HashMap<String, String>, key: &str) -> u64 {
+    kv[key].parse().unwrap_or_else(|_| panic!("{key}={:?} is not an integer", kv[key]))
+}
+
+/// `mpchol dist` argument list for a small instance: `--ranks <ranks>`
+/// plus the variant-specific `extra` flags.
+fn dist_args<'a>(ranks: &'a str, extra: &[&'a str]) -> Vec<&'a str> {
+    let mut args = vec!["--ranks", ranks, "--n", "128", "--nb", "32", "--workers", "2"];
+    args.extend_from_slice(extra);
+    args
+}
+
+#[test]
+fn multi_process_factorization_is_bitwise_identical_to_single() {
+    let mp = ["--variant", "mp", "--thick", "2"];
+    let single = run_dist(&dist_args("1", &mp));
+    assert_eq!(int(&single, "wire_msgs"), 0);
+    assert_eq!(single["max_resident"], single["single_resident"]);
+
+    for ranks in ["2", "4"] {
+        let kv = run_dist(&dist_args(ranks, &mp));
+        // the tentpole acceptance criterion: same realized map, same
+        // bits, no matter how many processes computed the factor
+        assert_eq!(kv["digest"], single["digest"], "ranks={ranks}");
+        // observed frames == partition census == analytic simulator
+        assert_eq!(kv["census_match"], "true", "ranks={ranks}");
+        assert!(int(&kv, "wire_msgs") > 0, "ranks={ranks}");
+        // tiles crossed at stored precision, beating the all-f64 wire
+        assert!(int(&kv, "wire_bytes") < int(&kv, "f64_wire_bytes"), "ranks={ranks}: {kv:?}");
+        // every rank held strictly less than the whole triangle
+        assert!(int(&kv, "max_resident") < int(&kv, "single_resident"), "ranks={ranks}: {kv:?}");
+    }
+}
+
+#[test]
+fn adaptive_map_resolves_identically_across_the_mesh() {
+    // the data-dependent variant exercises the pre-factorization norm
+    // all-gather: every rank must realize the same map, hence the same
+    // factor bits, from only its owned tiles plus the gathered norms
+    let adaptive = ["--variant", "adaptive", "--tolerance", "1e-3"];
+    let single = run_dist(&dist_args("1", &adaptive));
+    let dist = run_dist(&dist_args("2", &adaptive));
+    assert_eq!(dist["digest"], single["digest"]);
+    assert_eq!(dist["variant"], single["variant"], "realized adaptive labels must agree");
+    assert_eq!(dist["census_match"], "true");
+    assert!(int(&dist, "wire_bytes") < int(&dist, "f64_wire_bytes"));
+}
+
+#[test]
+fn tlr_distributed_runs_are_rejected_with_a_typed_error() {
+    let out = Command::new(env!("CARGO_BIN_EXE_mpchol"))
+        .args(["dist", "--ranks", "2", "--n", "128", "--nb", "32", "--variant", "tlr"])
+        .output()
+        .expect("spawn mpchol");
+    assert!(!out.status.success(), "tlr dist run must fail up front");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("tlr"), "unexpected error output: {stderr}");
+}
